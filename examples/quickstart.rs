@@ -1,0 +1,56 @@
+//! Quickstart: one SPMD process, one VGPU, one kernel.
+//!
+//! Launches the GVM in-process, connects a client, runs the VecAdd
+//! artifact through the full REQ/SND/STR/STP/RCV/RLS cycle, and checks
+//! the numerics.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use vgpu::gvm::{Gvm, GvmConfig};
+use vgpu::runtime::TensorValue;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Launch the GVM: it owns the single device context (PJRT CPU
+    //    here; the paper's daemon owns the CUDA context).
+    let mut cfg = GvmConfig::default();
+    cfg.daemon.barrier = Some(1); // single process: no SPMD barrier
+    cfg.preload = vec!["vecadd".into()];
+    let gvm = Gvm::launch(cfg)?;
+    println!("GVM up (artifacts preloaded)");
+
+    // 2. REQ: get a VGPU.
+    let mut vgpu = gvm.connect("rank0")?;
+
+    // 3. SND: stage inputs into the virtual shared-memory segment.
+    //    The vecadd artifact wants two f32[262144] vectors.
+    let n = 262_144;
+    let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.001).collect();
+    let b: Vec<f32> = (0..n).map(|i| (n - i) as f32 * 0.001).collect();
+    vgpu.snd(0, TensorValue::F32(vec![n], a.clone()))?;
+    vgpu.snd(1, TensorValue::F32(vec![n], b.clone()))?;
+
+    // 4. STR + STP: start the kernel, await completion.
+    vgpu.str_("vecadd")?;
+    let done = vgpu.stp()?;
+    println!("kernel done: device time {:.2}ms", done.gpu_ms);
+
+    // 5. RCV: fetch the result.
+    let out = vgpu.rcv(0)?;
+    let got = out.as_f64_vec();
+    for i in [0usize, 1, n / 2, n - 1] {
+        let want = (a[i] + b[i]) as f64;
+        assert!(
+            (got[i] - want).abs() < 1e-4,
+            "mismatch at {i}: {} vs {want}",
+            got[i]
+        );
+    }
+    println!("numerics verified: c[i] == a[i] + b[i] (checked 4 probes)");
+
+    // 6. RLS: release the VGPU.
+    vgpu.rls()?;
+    println!("released — quickstart OK");
+    Ok(())
+}

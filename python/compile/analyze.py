@@ -1,0 +1,151 @@
+"""Structural analysis of the AOT artifacts — the L1/L2 performance
+evidence (EXPERIMENTS.md §Perf).
+
+For every artifact this reports, from the HLO text itself:
+
+* instruction count and fusion/while/dot/custom-call breakdown (L2: did
+  XLA fuse the graph, did loops stay rolled);
+* parameter/result byte totals (the I/O the coordinator moves);
+
+and, from the kernel definitions, the **VMEM footprint per Pallas grid
+step** (tile bytes summed over operands) plus the MXU/VPU unit each
+kernel targets — the structure that determines real-TPU efficiency.
+
+Usage::
+
+    cd python && python -m compile.analyze [--out ../artifacts/analysis.tsv]
+"""
+
+import argparse
+import os
+import re
+
+# Per-kernel tile descriptions: (operand tile shapes per grid step, unit).
+# Kept next to the kernels' BlockSpecs; test_analyze.py checks they stay
+# consistent with the kernel modules' constants.
+KERNEL_TILES = {
+    "vecadd": ([("f32", 8192)] * 3, "VPU"),
+    "vecmul": ([("f32", 8192)] * 3, "VPU"),
+    "matmul": ([("f32", 128 * 128)] * 3, "MXU"),
+    "black_scholes": ([("f32", 8192)] * 5, "VPU"),
+    "ep": ([("f64", 1), ("f64", 1), ("f64", 10), ("f64", 1), ("f64", 1)], "scalar"),
+    "mg": ([("f32", 32 * 32 * 32)] * 2, "VPU"),
+    "cg": ([("f32", 1400)] * 3, "VPU"),
+    "electrostatics": (
+        [("f32", 1024)] * 2 + [("f32", 1024 * 256)] + [("f32", 1024)] * 3,
+        "VPU/MXU",
+    ),
+}
+
+DTYPE_BYTES = {"f32": 4, "f64": 8}
+
+# VMEM budget of a TPU core (v4-era ~16 MiB); tiles must fit with
+# double-buffering headroom (<= half).
+VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def vmem_per_step(name: str):
+    """(bytes_per_grid_step, unit) or None for sized variants."""
+    base = name.split("_s")[0] if re.match(r"vecadd_s\d+$", name) else name
+    if base not in KERNEL_TILES:
+        return None
+    tiles, unit = KERNEL_TILES[base]
+    total = sum(DTYPE_BYTES[d] * n for d, n in tiles)
+    return total, unit
+
+
+def analyze_hlo(text: str) -> dict:
+    """Instruction statistics from HLO text."""
+    ops = {"fusion": 0, "while": 0, "dot": 0, "custom-call": 0, "total": 0}
+    for line in text.splitlines():
+        line = line.strip()
+        # Instruction lines look like `name = <type> op(...)`; the type
+        # may be a tuple containing spaces, so match the op as the last
+        # identifier before the first `(` that follows the `=`.
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = .+? ([\w\-]+)\(", line)
+        if not m:
+            continue
+        op = m.group(1)
+        ops["total"] += 1
+        if op == "fusion":
+            ops["fusion"] += 1
+        elif op == "while":
+            ops["while"] += 1
+        elif op in ("dot", "dot-general"):
+            ops["dot"] += 1
+        elif op == "custom-call":
+            ops["custom-call"] += 1
+    return ops
+
+
+def analyze_dir(artifacts_dir: str):
+    """Analyze every artifact; returns rows of dicts."""
+    rows = []
+    for fname in sorted(os.listdir(artifacts_dir)):
+        if not fname.endswith(".hlo.txt"):
+            continue
+        name = fname[: -len(".hlo.txt")]
+        with open(os.path.join(artifacts_dir, fname)) as f:
+            text = f.read()
+        ops = analyze_hlo(text)
+        vm = vmem_per_step(name)
+        rows.append(
+            {
+                "name": name,
+                "hlo_instructions": ops["total"],
+                "fusions": ops["fusion"],
+                "while_loops": ops["while"],
+                "dots": ops["dot"],
+                "custom_calls": ops["custom-call"],
+                "vmem_per_step": vm[0] if vm else 0,
+                "unit": vm[1] if vm else "-",
+                "fits_vmem": bool(vm and vm[0] <= VMEM_BUDGET // 2),
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default="../artifacts")
+    ap.add_argument("--out", default="../artifacts/analysis.tsv")
+    args = ap.parse_args()
+    rows = analyze_dir(args.dir)
+    header = (
+        "name\thlo_instructions\tfusions\twhile_loops\tdots\t"
+        "custom_calls\tvmem_per_step\tunit\tfits_vmem"
+    )
+    lines = [header]
+    for r in rows:
+        lines.append(
+            "\t".join(
+                str(r[k])
+                for k in [
+                    "name",
+                    "hlo_instructions",
+                    "fusions",
+                    "while_loops",
+                    "dots",
+                    "custom_calls",
+                    "vmem_per_step",
+                    "unit",
+                    "fits_vmem",
+                ]
+            )
+        )
+        print(lines[-1])
+    with open(args.out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"[analyze] wrote {args.out}")
+
+    # Hard checks: no Mosaic custom-calls may survive interpret-mode
+    # lowering (they would be unloadable on CPU PJRT), and every kernel
+    # tile must fit VMEM with double-buffering headroom.
+    bad_cc = [r["name"] for r in rows if r["custom_calls"] > 0]
+    assert not bad_cc, f"custom-calls leaked into artifacts: {bad_cc}"
+    bad_vm = [r["name"] for r in rows if r["vmem_per_step"] and not r["fits_vmem"]]
+    assert not bad_vm, f"tiles exceed VMEM budget: {bad_vm}"
+
+
+if __name__ == "__main__":
+    main()

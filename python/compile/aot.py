@@ -1,0 +1,141 @@
+"""AOT lowering: every benchmark -> artifacts/<name>.hlo.txt (+ manifest).
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the rust ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Also emits ``artifacts/manifest.tsv`` describing each artifact's I/O
+signature so the rust runtime can type-check literals at load time, and
+``artifacts/profiles.tsv`` with wall-clock stage timings measured on this
+host's PJRT CPU (used by the simulator's cost calibration).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts [--bench name]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # EP needs f64 (46-bit LCG)
+
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import BENCHMARKS
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    return {"float32": "f32", "float64": "f64", "int32": "i32"}[str(dt)]
+
+
+def lower_benchmark(bench):
+    """Lower one benchmark; returns (hlo_text, manifest_row)."""
+    lowered = jax.jit(bench.fn).lower(*bench.input_specs)
+    text = to_hlo_text(lowered)
+    ins = ";".join(
+        f"{_dtype_tag(s.dtype)}:{','.join(map(str, s.shape))}"
+        for s in bench.input_specs
+    )
+    out_shapes = jax.eval_shape(bench.fn, *bench.input_specs)
+    outs = ";".join(
+        f"{_dtype_tag(o.dtype)}:{','.join(map(str, o.shape))}"
+        for o in jax.tree_util.tree_leaves(out_shapes)
+    )
+    row = (
+        f"{bench.name}\t{bench.name}.hlo.txt\t{ins}\t{outs}\t"
+        f"{bench.paper_class}\t{bench.paper_grid}\t{bench.artifact_grid}"
+    )
+    return text, row
+
+
+def profile_benchmark(bench, repeats: int = 3) -> dict:
+    """Measure jit wall-clock of the artifact-sized problem on this host.
+
+    These host timings calibrate the simulator's per-block compute cost;
+    the I/O stage costs come from the PCIe bandwidth model in rust (a CPU
+    host has no device bus to measure).
+    """
+    fn = jax.jit(bench.fn)
+    args = bench.make_inputs()
+    out = fn(*args)
+    jax.block_until_ready(out)  # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    in_bytes = sum(np.asarray(a).nbytes for a in args)
+    out_bytes = sum(np.asarray(o).nbytes for o in jax.tree_util.tree_leaves(out))
+    return {
+        "name": bench.name,
+        "comp_ms": best * 1e3,
+        "in_bytes": in_bytes,
+        "out_bytes": out_bytes,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--bench", default=None, help="only this benchmark")
+    ap.add_argument("--skip-profile", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [args.bench] if args.bench else list(BENCHMARKS)
+    manifest_rows = []
+    profiles = []
+    for name in names:
+        bench = BENCHMARKS[name]
+        t0 = time.perf_counter()
+        text, row = lower_benchmark(bench)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_rows.append(row)
+        print(
+            f"[aot] {name:15s} -> {path} "
+            f"({len(text)} chars, {time.perf_counter()-t0:.1f}s)"
+        )
+        if not args.skip_profile:
+            prof = profile_benchmark(bench)
+            profiles.append(prof)
+            print(
+                f"[aot] {name:15s} profile: comp={prof['comp_ms']:.2f}ms "
+                f"in={prof['in_bytes']}B out={prof['out_bytes']}B"
+            )
+
+    if not args.bench:
+        with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+            f.write("# name\tfile\tinputs\toutputs\tclass\tpaper_grid\tartifact_grid\n")
+            f.write("\n".join(manifest_rows) + "\n")
+        if profiles:
+            with open(os.path.join(args.out_dir, "profiles.tsv"), "w") as f:
+                f.write("# name\tcomp_ms\tin_bytes\tout_bytes\n")
+                for p in profiles:
+                    f.write(
+                        f"{p['name']}\t{p['comp_ms']:.4f}\t"
+                        f"{p['in_bytes']}\t{p['out_bytes']}\n"
+                    )
+        print(f"[aot] wrote manifest + profiles to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Layer-1 Pallas kernels for the vgpu benchmark suite (Table 3 of the paper).
+
+Every kernel here is the TPU-adapted analogue of a CUDA benchmark kernel
+from the paper's evaluation:
+
+=============  =============================  =====================
+paper kernel   module                         class (paper Table 3)
+=============  =============================  =====================
+NPB EP         :mod:`.ep`                     Compute-Intensive
+VecAdd         :mod:`.vecadd`                 I/O-Intensive
+VecMul         :mod:`.vecmul`                 I/O-Intensive
+MatMul (MM)    :mod:`.matmul`                 Intermediate
+NPB MG         :mod:`.mg`                     Compute-Intensive
+BlackScholes   :mod:`.black_scholes`          I/O-Intensive
+NPB CG         :mod:`.cg`                     Compute-Intensive
+Electrostatics :mod:`.electrostatics`         Compute-Intensive
+=============  =============================  =====================
+
+Hardware adaptation (CUDA -> Pallas/TPU): a CUDA thread block becomes one
+Pallas grid step whose tile lives in VMEM via ``BlockSpec``; warp-level
+SIMD becomes VPU lanes; MM/ES inner products are shaped for the MXU
+(``jnp.dot`` on 128-aligned tiles).  All kernels are authored with
+``interpret=True`` so they lower to plain HLO and run on any PJRT backend
+(the rust coordinator runs them on the CPU client); on a real TPU the same
+source lowers to Mosaic.
+
+Correctness oracles live in :mod:`.ref` and are enforced by
+``python/tests`` (pytest + hypothesis shape/dtype sweeps).
+"""
+
+from . import black_scholes  # noqa: F401
+from . import cg  # noqa: F401
+from . import electrostatics  # noqa: F401
+from . import ep  # noqa: F401
+from . import matmul  # noqa: F401
+from . import mg  # noqa: F401
+from . import ref  # noqa: F401
+from . import vecadd  # noqa: F401
+from . import vecmul  # noqa: F401
+
+ALL_KERNELS = [
+    "vecadd",
+    "vecmul",
+    "matmul",
+    "black_scholes",
+    "ep",
+    "mg",
+    "cg",
+    "electrostatics",
+]

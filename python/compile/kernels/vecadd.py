@@ -1,0 +1,48 @@
+"""VecAdd — the paper's I/O-Intensive extreme benchmark (50M floats).
+
+CUDA original: one thread per element, ``c[i] = a[i] + b[i]``; grid size
+50K blocks.  TPU adaptation: one Pallas grid step processes a
+``BLOCK``-element tile resident in VMEM; the element-wise add runs on the
+VPU.  I/O (HBM<->VMEM and host<->device) dominates compute, which is what
+makes the kernel I/O-Intensive in the paper's taxonomy
+(``T_data_in > T_comp`` and ``T_data_out > T_comp``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One CUDA thread block <-> one Pallas grid step over a VMEM tile.
+# 8192 f32 = 32 KiB per operand tile; 3 operands -> 96 KiB of VMEM,
+# comfortably under a ~16 MiB VMEM budget and lane-aligned (8192 = 64*128).
+BLOCK = 8192
+
+
+def _vecadd_kernel(a_ref, b_ref, o_ref):
+    """One tile: elementwise add on the VPU."""
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def vecadd(a: jax.Array, b: jax.Array, *, block: int = BLOCK) -> jax.Array:
+    """``a + b`` for 1-D f32 arrays whose length is a multiple of ``block``."""
+    n = a.shape[0]
+    grid = n // block
+    return pl.pallas_call(
+        _vecadd_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(a, b)
+
+
+def grid_size(n: int, block: int = BLOCK) -> int:
+    """Number of Pallas grid steps (CUDA-analogue: thread blocks)."""
+    return (n + block - 1) // block

@@ -1,0 +1,294 @@
+"""Layer-2 JAX compute graphs for every benchmark in the suite.
+
+Each entry wires a Layer-1 Pallas kernel into the jit-able function that
+becomes one AOT artifact (``artifacts/<name>.hlo.txt``).  The rust
+coordinator (Layer 3) loads the artifact via PJRT and executes it on the
+request path — python never runs at serve time.
+
+Artifact shapes are the *CPU-scaled* problem sizes (interpret-mode Pallas
+is orders of magnitude slower than a real device, so the paper's 50M-float
+vectors would take minutes per request).  The GPU simulator scales stage
+costs to the paper's sizes via the calibrated cost model in
+``rust/src/profile`` — see DESIGN.md §2.
+"""
+
+import dataclasses
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import black_scholes as k_bs
+from .kernels import cg as k_cg
+from .kernels import electrostatics as k_es
+from .kernels import matmul as k_mm
+from .kernels import mg as k_mg
+from .kernels import vecadd as k_va
+from .kernels import vecmul as k_vm
+
+
+@dataclasses.dataclass(frozen=True)
+class Benchmark:
+    """One AOT-able benchmark: fn + example input specs + metadata.
+
+    Attributes:
+      name: artifact stem, e.g. ``vecadd`` -> ``artifacts/vecadd.hlo.txt``.
+      fn: the jit-able function (always returns a tuple).
+      input_specs: ShapeDtypeStructs to lower against.
+      paper_class: Table 3 class ("ci" / "ioi" / "intermediate").
+      paper_grid: Table 3 grid size (CUDA blocks) at paper problem size.
+      artifact_grid: Pallas grid steps at the artifact's (scaled) size.
+      make_inputs: host-side input generator (used by tests/profiling).
+    """
+
+    name: str
+    fn: Callable
+    input_specs: Sequence[jax.ShapeDtypeStruct]
+    paper_class: str
+    paper_grid: int
+    artifact_grid: int
+    make_inputs: Callable[[], Tuple]
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _f64(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+# ---------------------------------------------------------------- vecadd
+N_VECADD = 262_144  # paper: 50M
+
+
+def vecadd_fn(a, b):
+    return (k_va.vecadd(a, b),)
+
+
+# ---------------------------------------------------------------- vecmul
+N_VECMUL = 131_072  # paper: 16M
+VECMUL_ITERS = 15  # paper value
+
+
+def vecmul_fn(a, b):
+    return (k_vm.vecmul(a, b, iters=VECMUL_ITERS),)
+
+
+# ---------------------------------------------------------------- matmul
+N_MM = 256  # paper: 2048
+
+
+def matmul_fn(a, b):
+    return (k_mm.matmul(a, b),)
+
+
+# ---------------------------------------------------------- black-scholes
+N_BS = 65_536  # paper: 1M calls
+BS_ITERS = 4  # paper: 512 — scaled for interpret mode
+
+
+def black_scholes_fn(s, x, t):
+    call, put = k_bs.black_scholes(s, x, t, iters=BS_ITERS)
+    return (call, put)
+
+
+# -------------------------------------------------------------------- ep
+EP_M = 16  # paper: M=30 (extreme) / M=24 (validation)
+EP_BLOCKS = 4  # paper Table 3: grid 4 for EP(M30)
+
+
+def ep_fn(seeds):
+    sx, sy, q, cnt = k_ep_blocks(seeds)
+    return (sx, sy, q, cnt)
+
+
+def k_ep_blocks(seeds):
+    from .kernels import ep as k_ep
+
+    chunk = (1 << EP_M) // EP_BLOCKS
+    sx, sy, q, cnt = k_ep._ep_blocks(seeds, n_blocks=EP_BLOCKS, chunk=chunk)
+    return sx.sum(), sy.sum(), q.sum(axis=0), cnt.sum()
+
+
+def ep_inputs():
+    from .kernels import ep as k_ep
+
+    chunk = (1 << EP_M) // EP_BLOCKS
+    return (k_ep._block_seeds(EP_BLOCKS, chunk),)
+
+
+# -------------------------------------------------------------------- mg
+N_MG = 32  # paper: 32^3 class S
+MG_ITERS = 4
+
+
+def mg_fn(v):
+    return (k_mg.mg(v, iters=MG_ITERS),)
+
+
+# -------------------------------------------------------------------- cg
+N_CG = 1400  # paper: NA=1400 class S
+CG_ITERS = 15
+
+
+def cg_fn(b):
+    x, rnorm = k_cg.cg(b, iters=CG_ITERS)
+    return (x, rnorm)
+
+
+# ---------------------------------------------------------- electrostatics
+ES_POINTS = 4096  # paper: potential map slice
+ES_ATOMS = 1024  # paper: 100K atoms
+ES_ITERS = 1  # paper: 25 — scaled
+
+
+def electrostatics_fn(px, py, ax, ay, q):
+    return (k_es.electrostatics(px, py, ax, ay, q, iters=ES_ITERS),)
+
+
+def _rng(seed):
+    return jax.random.PRNGKey(seed)
+
+
+def _sized_vecadd(mb: int) -> Benchmark:
+    """VecAdd with ``mb`` MiB of total input data (Fig. 18 overhead sweep).
+
+    Total input = two f32 vectors = 8N bytes -> N = mb * 2^20 / 8.
+    """
+    n = mb * (1 << 20) // 8
+    # Fixed 16-step grid: interpret-mode pallas costs O(N * grid_steps)
+    # (each step round-trips the output through dynamic_update_slice), so
+    # large sweeps keep a constant step count instead of a constant block.
+    block = n // 16
+
+    def make_inputs(n=n):
+        # Deterministic ramps (jax.random at 50M elements is slow).
+        a = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+        b = jnp.linspace(1.0, 2.0, n, dtype=jnp.float32)
+        return (a, b)
+
+    def fn(a, b, block=block):
+        return (k_va.vecadd(a, b, block=block),)
+
+    return Benchmark(
+        name=f"vecadd_s{mb}",
+        fn=fn,
+        input_specs=[_f32(n), _f32(n)],
+        paper_class="ioi",
+        paper_grid=(mb * 50_000) // 400,
+        artifact_grid=16,
+        make_inputs=make_inputs,
+    )
+
+
+# Fig. 18 sweep sizes (paper: 5..400 MB of kernel input data).
+FIG18_SIZES_MB = [5, 10, 25, 50, 100, 200, 400]
+
+BENCHMARKS = {
+    "vecadd": Benchmark(
+        name="vecadd",
+        fn=vecadd_fn,
+        input_specs=[_f32(N_VECADD), _f32(N_VECADD)],
+        paper_class="ioi",
+        paper_grid=50_000,
+        artifact_grid=N_VECADD // k_va.BLOCK,
+        make_inputs=lambda: (
+            jax.random.uniform(_rng(0), (N_VECADD,), jnp.float32),
+            jax.random.uniform(_rng(1), (N_VECADD,), jnp.float32),
+        ),
+    ),
+    "vecmul": Benchmark(
+        name="vecmul",
+        fn=vecmul_fn,
+        input_specs=[_f32(N_VECMUL), _f32(N_VECMUL)],
+        paper_class="ioi",
+        paper_grid=16_000,
+        artifact_grid=N_VECMUL // k_vm.BLOCK,
+        make_inputs=lambda: (
+            jax.random.uniform(_rng(2), (N_VECMUL,), jnp.float32),
+            jax.random.uniform(_rng(3), (N_VECMUL,), jnp.float32, 0.9, 1.1),
+        ),
+    ),
+    "matmul": Benchmark(
+        name="matmul",
+        fn=matmul_fn,
+        input_specs=[_f32(N_MM, N_MM), _f32(N_MM, N_MM)],
+        paper_class="intermediate",
+        paper_grid=4096,
+        artifact_grid=(N_MM // k_mm.TILE) ** 2,
+        make_inputs=lambda: (
+            jax.random.normal(_rng(4), (N_MM, N_MM), jnp.float32),
+            jax.random.normal(_rng(5), (N_MM, N_MM), jnp.float32),
+        ),
+    ),
+    "black_scholes": Benchmark(
+        name="black_scholes",
+        fn=black_scholes_fn,
+        input_specs=[_f32(N_BS), _f32(N_BS), _f32(N_BS)],
+        paper_class="ioi",
+        paper_grid=480,
+        artifact_grid=N_BS // k_bs.BLOCK,
+        make_inputs=lambda: (
+            jax.random.uniform(_rng(6), (N_BS,), jnp.float32, 5.0, 30.0),
+            jax.random.uniform(_rng(7), (N_BS,), jnp.float32, 1.0, 100.0),
+            jax.random.uniform(_rng(8), (N_BS,), jnp.float32, 0.25, 10.0),
+        ),
+    ),
+    "ep": Benchmark(
+        name="ep",
+        fn=ep_fn,
+        input_specs=[_f64(EP_BLOCKS)],
+        paper_class="ci",
+        paper_grid=4,
+        artifact_grid=EP_BLOCKS,
+        make_inputs=ep_inputs,
+    ),
+    "mg": Benchmark(
+        name="mg",
+        fn=mg_fn,
+        input_specs=[_f32(N_MG, N_MG, N_MG)],
+        paper_class="ci",
+        paper_grid=64,
+        artifact_grid=1,
+        make_inputs=lambda: (
+            jax.random.normal(_rng(9), (N_MG, N_MG, N_MG), jnp.float32),
+        ),
+    ),
+    "cg": Benchmark(
+        name="cg",
+        fn=cg_fn,
+        input_specs=[_f32(N_CG)],
+        paper_class="ci",
+        paper_grid=8,
+        artifact_grid=1,
+        make_inputs=lambda: (
+            jax.random.normal(_rng(10), (N_CG,), jnp.float32),
+        ),
+    ),
+    "electrostatics": Benchmark(
+        name="electrostatics",
+        fn=electrostatics_fn,
+        input_specs=[
+            _f32(ES_POINTS),
+            _f32(ES_POINTS),
+            _f32(ES_ATOMS),
+            _f32(ES_ATOMS),
+            _f32(ES_ATOMS),
+        ],
+        paper_class="ci",
+        paper_grid=288,
+        artifact_grid=ES_POINTS // k_es.POINTS_BLOCK,
+        make_inputs=lambda: (
+            jax.random.uniform(_rng(11), (ES_POINTS,), jnp.float32, 0.0, 64.0),
+            jax.random.uniform(_rng(12), (ES_POINTS,), jnp.float32, 0.0, 64.0),
+            jax.random.uniform(_rng(13), (ES_ATOMS,), jnp.float32, 0.0, 64.0),
+            jax.random.uniform(_rng(14), (ES_ATOMS,), jnp.float32, 0.0, 64.0),
+            jax.random.uniform(_rng(15), (ES_ATOMS,), jnp.float32, -1.0, 1.0),
+        ),
+    ),
+}
+
+for _mb in FIG18_SIZES_MB:
+    _b = _sized_vecadd(_mb)
+    BENCHMARKS[_b.name] = _b

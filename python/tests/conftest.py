@@ -1,0 +1,5 @@
+"""Shared test config: enable x64 (NAS EP needs the 46-bit LCG in f64)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,82 @@
+"""Tests for the artifact analyzer (compile/analyze.py)."""
+
+import os
+
+import pytest
+
+from compile import analyze
+from compile.kernels import black_scholes as k_bs
+from compile.kernels import electrostatics as k_es
+from compile.kernels import matmul as k_mm
+from compile.kernels import vecadd as k_va
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestTileTable:
+    def test_tile_constants_match_kernels(self):
+        # The analyzer's tile table must track the kernels' BlockSpecs.
+        tiles, unit = analyze.KERNEL_TILES["vecadd"]
+        assert tiles[0][1] == k_va.BLOCK
+        assert unit == "VPU"
+        tiles, unit = analyze.KERNEL_TILES["matmul"]
+        assert tiles[0][1] == k_mm.TILE * k_mm.TILE
+        assert unit == "MXU"
+        tiles, _ = analyze.KERNEL_TILES["black_scholes"]
+        assert tiles[0][1] == k_bs.BLOCK
+        assert len(tiles) == 5  # s, x, t in; call, put out
+        tiles, _ = analyze.KERNEL_TILES["electrostatics"]
+        assert tiles[2][1] == k_es.POINTS_BLOCK * k_es.ATOM_TILE
+
+    def test_every_kernel_fits_vmem_budget(self):
+        for name in analyze.KERNEL_TILES:
+            bytes_, _ = analyze.vmem_per_step(name)
+            assert bytes_ <= analyze.VMEM_BUDGET // 2, name
+
+    def test_sized_variants_resolve_to_vecadd(self):
+        assert analyze.vmem_per_step("vecadd_s50") == analyze.vmem_per_step(
+            "vecadd"
+        )
+        assert analyze.vmem_per_step("unknown_kernel") is None
+
+
+class TestHloAnalysis:
+    def test_counts_ops(self):
+        hlo = """
+HloModule m
+ENTRY %main (p0: f32[8]) -> (f32[8]) {
+  %p0 = f32[8] parameter(0)
+  %f = f32[8] fusion(%p0), kind=kLoop
+  %w = (s32[], f32[8]) while(%t), condition=%c, body=%b
+  %d = f32[8,8] dot(%a, %b), lhs_contracting_dims={1}
+  ROOT %r = (f32[8]) tuple(%f)
+}
+"""
+        ops = analyze.analyze_hlo(hlo)
+        assert ops["fusion"] == 1
+        assert ops["while"] == 1
+        assert ops["dot"] == 1
+        assert ops["custom-call"] == 0
+        assert ops["total"] >= 4
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(ARTIFACTS, "manifest.tsv")),
+        reason="artifacts not built",
+    )
+    def test_real_artifacts_have_no_custom_calls(self):
+        rows = analyze.analyze_dir(ARTIFACTS)
+        assert len(rows) >= 8
+        for r in rows:
+            # Mosaic custom-calls would be unloadable on CPU PJRT.
+            assert r["custom_calls"] == 0, r["name"]
+            assert r["hlo_instructions"] > 0, r["name"]
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(ARTIFACTS, "manifest.tsv")),
+        reason="artifacts not built",
+    )
+    def test_iterated_kernels_stay_rolled(self):
+        # BS/CG/VecMul iterate via fori_loop -> while in HLO, not unrolled.
+        rows = {r["name"]: r for r in analyze.analyze_dir(ARTIFACTS)}
+        for name in ["black_scholes", "cg", "vecmul"]:
+            assert rows[name]["while_loops"] >= 1, name

@@ -1,0 +1,71 @@
+"""Tests for the AOT lowering pipeline (python/compile/aot.py)."""
+
+import jax
+import pytest
+
+from compile import aot
+from compile.model import BENCHMARKS, FIG18_SIZES_MB
+
+
+class TestLowering:
+    def test_all_benchmarks_lower_to_hlo_text(self):
+        # Lowering must succeed for every benchmark; spot-check that the
+        # emitted text is parseable HLO (ENTRY marker, tuple root).
+        for name in ["vecadd", "cg", "ep"]:
+            text, row = aot.lower_benchmark(BENCHMARKS[name])
+            assert "ENTRY" in text, f"{name}: not HLO text"
+            assert "tuple" in text.lower(), f"{name}: missing tuple root"
+            fields = row.split("\t")
+            assert len(fields) == 7, f"{name}: manifest row arity"
+            assert fields[0] == name
+
+    def test_manifest_row_shapes_match_specs(self):
+        bench = BENCHMARKS["matmul"]
+        _, row = aot.lower_benchmark(bench)
+        fields = row.split("\t")
+        ins = fields[2].split(";")
+        assert len(ins) == len(bench.input_specs)
+        assert ins[0] == "f32:256,256"
+
+    def test_ep_artifact_is_f64(self):
+        _, row = aot.lower_benchmark(BENCHMARKS["ep"])
+        assert "f64" in row.split("\t")[2]
+
+    def test_fig18_variants_registered(self):
+        for mb in FIG18_SIZES_MB:
+            assert f"vecadd_s{mb}" in BENCHMARKS
+
+    def test_sized_vecadd_specs_scale(self):
+        b5 = BENCHMARKS["vecadd_s5"]
+        b400 = BENCHMARKS["vecadd_s400"]
+        assert b400.input_specs[0].shape[0] == 80 * b5.input_specs[0].shape[0]
+
+
+class TestBenchmarkMetadata:
+    def test_table3_grid_sizes(self):
+        # Table 3's published grid sizes.
+        assert BENCHMARKS["vecadd"].paper_grid == 50_000
+        assert BENCHMARKS["matmul"].paper_grid == 4096
+        assert BENCHMARKS["black_scholes"].paper_grid == 480
+        assert BENCHMARKS["ep"].paper_grid == 4
+
+    def test_classes_match_table3(self):
+        assert BENCHMARKS["vecadd"].paper_class == "ioi"
+        assert BENCHMARKS["ep"].paper_class == "ci"
+        assert BENCHMARKS["matmul"].paper_class == "intermediate"
+
+    def test_make_inputs_match_specs(self):
+        for name in ["vecadd", "matmul", "black_scholes", "cg", "mg"]:
+            b = BENCHMARKS[name]
+            inputs = b.make_inputs()
+            assert len(inputs) == len(b.input_specs)
+            for got, spec in zip(inputs, b.input_specs):
+                assert got.shape == spec.shape, f"{name}: shape mismatch"
+                assert got.dtype == spec.dtype, f"{name}: dtype mismatch"
+
+    def test_eval_shape_has_no_side_effects(self):
+        # eval_shape must not execute kernels (cheap manifest generation).
+        b = BENCHMARKS["mg"]
+        out = jax.eval_shape(b.fn, *b.input_specs)
+        leaves = jax.tree_util.tree_leaves(out)
+        assert leaves[0].shape == (32, 32, 32)

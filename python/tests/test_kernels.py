@@ -1,0 +1,237 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal of the L1 layer.
+
+Every Pallas kernel is checked against its independently-formulated
+pure-jnp/numpy oracle in ``compile.kernels.ref`` at fixed sizes here;
+``test_kernels_prop.py`` adds hypothesis sweeps over shapes/values.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import black_scholes as k_bs
+from compile.kernels import cg as k_cg
+from compile.kernels import electrostatics as k_es
+from compile.kernels import ep as k_ep
+from compile.kernels import matmul as k_mm
+from compile.kernels import mg as k_mg
+from compile.kernels import ref
+from compile.kernels import vecadd as k_va
+from compile.kernels import vecmul as k_vm
+
+
+def key(i):
+    return jax.random.PRNGKey(i)
+
+
+class TestVecAdd:
+    def test_matches_ref(self):
+        n = 4 * k_va.BLOCK
+        a = jax.random.uniform(key(0), (n,), jnp.float32)
+        b = jax.random.uniform(key(1), (n,), jnp.float32)
+        np.testing.assert_allclose(k_va.vecadd(a, b), ref.vecadd(a, b), rtol=0)
+
+    def test_single_block(self):
+        a = jnp.arange(k_va.BLOCK, dtype=jnp.float32)
+        b = jnp.ones(k_va.BLOCK, jnp.float32)
+        np.testing.assert_allclose(k_va.vecadd(a, b), a + 1.0, rtol=0)
+
+    def test_custom_block(self):
+        n = 512
+        a = jax.random.uniform(key(2), (n,), jnp.float32)
+        b = jax.random.uniform(key(3), (n,), jnp.float32)
+        np.testing.assert_allclose(
+            k_va.vecadd(a, b, block=128), ref.vecadd(a, b), rtol=0
+        )
+
+    def test_grid_size(self):
+        assert k_va.grid_size(50_000_000, 1000) == 50_000
+        assert k_va.grid_size(k_va.BLOCK) == 1
+        assert k_va.grid_size(k_va.BLOCK + 1) == 2
+
+
+class TestVecMul:
+    def test_matches_ref(self):
+        n = 2 * k_vm.BLOCK
+        a = jax.random.uniform(key(0), (n,), jnp.float32)
+        b = jax.random.uniform(key(1), (n,), jnp.float32, 0.9, 1.1)
+        np.testing.assert_allclose(
+            k_vm.vecmul(a, b, iters=15), ref.vecmul(a, b, 15), rtol=1e-5
+        )
+
+    def test_zero_iters_identity(self):
+        a = jax.random.uniform(key(2), (k_vm.BLOCK,), jnp.float32)
+        b = jax.random.uniform(key(3), (k_vm.BLOCK,), jnp.float32)
+        np.testing.assert_allclose(k_vm.vecmul(a, b, iters=0), a, rtol=0)
+
+    def test_one_iter_is_product(self):
+        a = jax.random.uniform(key(4), (k_vm.BLOCK,), jnp.float32)
+        b = jax.random.uniform(key(5), (k_vm.BLOCK,), jnp.float32)
+        np.testing.assert_allclose(k_vm.vecmul(a, b, iters=1), a * b, rtol=1e-6)
+
+
+class TestMatMul:
+    def test_matches_ref(self):
+        m, k, n = 256, 384, 128
+        a = jax.random.normal(key(0), (m, k), jnp.float32)
+        b = jax.random.normal(key(1), (k, n), jnp.float32)
+        np.testing.assert_allclose(
+            k_mm.matmul(a, b), ref.matmul(a, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_identity(self):
+        a = jnp.eye(128, dtype=jnp.float32)
+        b = jax.random.normal(key(2), (128, 128), jnp.float32)
+        np.testing.assert_allclose(k_mm.matmul(a, b), b, rtol=1e-6)
+
+    def test_small_tile(self):
+        a = jax.random.normal(key(3), (64, 64), jnp.float32)
+        b = jax.random.normal(key(4), (64, 64), jnp.float32)
+        np.testing.assert_allclose(
+            k_mm.matmul(a, b, tile=32), ref.matmul(a, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_grid_size_matches_paper(self):
+        # Paper Table 3: 2048x2048 MM with 32x32 CUDA tiles -> 4K blocks.
+        assert k_mm.grid_size(2048, 2048, 32) == 4096
+
+
+class TestBlackScholes:
+    def test_matches_erf_ref(self):
+        n = 2 * k_bs.BLOCK
+        s = jax.random.uniform(key(0), (n,), jnp.float32, 5.0, 30.0)
+        x = jax.random.uniform(key(1), (n,), jnp.float32, 1.0, 100.0)
+        t = jax.random.uniform(key(2), (n,), jnp.float32, 0.25, 10.0)
+        call, put = k_bs.black_scholes(s, x, t, iters=1)
+        rcall, rput = ref.black_scholes(s, x, t)
+        np.testing.assert_allclose(call, rcall, rtol=1e-4, atol=2e-5)
+        np.testing.assert_allclose(put, rput, rtol=1e-4, atol=2e-5)
+
+    def test_iters_idempotent(self):
+        n = k_bs.BLOCK
+        s = jax.random.uniform(key(3), (n,), jnp.float32, 5.0, 30.0)
+        x = jax.random.uniform(key(4), (n,), jnp.float32, 1.0, 100.0)
+        t = jax.random.uniform(key(5), (n,), jnp.float32, 0.25, 10.0)
+        c1, p1 = k_bs.black_scholes(s, x, t, iters=1)
+        c4, p4 = k_bs.black_scholes(s, x, t, iters=4)
+        np.testing.assert_allclose(c1, c4, rtol=0)
+        np.testing.assert_allclose(p1, p4, rtol=0)
+
+    def test_put_call_parity(self):
+        n = k_bs.BLOCK
+        s = jax.random.uniform(key(6), (n,), jnp.float32, 5.0, 30.0)
+        x = jax.random.uniform(key(7), (n,), jnp.float32, 1.0, 100.0)
+        t = jax.random.uniform(key(8), (n,), jnp.float32, 0.25, 10.0)
+        call, put = k_bs.black_scholes(s, x, t, iters=1)
+        # C - P = S - X e^{-rT}
+        np.testing.assert_allclose(
+            call - put, s - x * jnp.exp(-0.02 * t), rtol=1e-3, atol=1e-3
+        )
+
+
+class TestEP:
+    @pytest.mark.parametrize("m,blocks", [(10, 1), (10, 2), (12, 4)])
+    def test_matches_ref(self, m, blocks):
+        sx, sy, q, cnt = k_ep.ep(m, n_blocks=blocks)
+        rsx, rsy, rq, rcnt = ref.ep(m)
+        assert float(cnt) == rcnt
+        np.testing.assert_allclose(float(sx), rsx, rtol=1e-10)
+        np.testing.assert_allclose(float(sy), rsy, rtol=1e-10)
+        np.testing.assert_allclose(np.asarray(q), rq, rtol=0)
+
+    def test_blocking_invariant(self):
+        # Different grid decompositions must produce identical sums: the
+        # per-block LCG jump must tile the sequential stream exactly.
+        r1 = k_ep.ep(12, n_blocks=1)
+        r4 = k_ep.ep(12, n_blocks=4)
+        np.testing.assert_allclose(float(r1[0]), float(r4[0]), rtol=1e-12)
+        np.testing.assert_allclose(float(r1[3]), float(r4[3]), rtol=0)
+
+    def test_acceptance_ratio_sane(self):
+        # pi/4 ~ 0.785 of pairs should land in the unit disk.
+        _, _, _, cnt = k_ep.ep(14, n_blocks=2)
+        ratio = float(cnt) / (1 << 14)
+        assert 0.75 < ratio < 0.82
+
+
+class TestMG:
+    def test_matches_ref(self):
+        v = jax.random.normal(key(0), (16, 16, 16), jnp.float32)
+        np.testing.assert_allclose(
+            k_mg.mg(v, iters=2), ref.mg(v, 2), rtol=1e-4, atol=1e-5
+        )
+
+    def test_reduces_residual(self):
+        v = jax.random.normal(key(1), (16, 16, 16), jnp.float32)
+        u1 = k_mg.mg(v, iters=1)
+        u4 = k_mg.mg(v, iters=4)
+        a = (-8.0 / 3.0, 0.0, 1.0 / 6.0, 1.0 / 12.0)
+        r1 = float(jnp.linalg.norm(v - ref._stencil27(u1, a)))
+        r4 = float(jnp.linalg.norm(v - ref._stencil27(u4, a)))
+        assert r4 < r1
+
+    def test_zero_input(self):
+        v = jnp.zeros((8, 8, 8), jnp.float32)
+        np.testing.assert_allclose(k_mg.mg(v, iters=3), v, rtol=0)
+
+
+class TestCG:
+    def test_matches_ref(self):
+        b = jax.random.normal(key(0), (512,), jnp.float32)
+        x, rnorm = k_cg.cg(b, iters=10)
+        rx, rrnorm = ref.cg(b, iters=10)
+        np.testing.assert_allclose(x, rx, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(float(rnorm[0]), rrnorm, rtol=1e-2)
+
+    def test_converges(self):
+        b = jax.random.normal(key(1), (512,), jnp.float32)
+        _, r5 = k_cg.cg(b, iters=5)
+        _, r25 = k_cg.cg(b, iters=25)
+        assert float(r25[0]) < float(r5[0])
+
+    def test_solution_satisfies_system(self):
+        b = jax.random.normal(key(2), (512,), jnp.float32)
+        x, _ = k_cg.cg(b, iters=60)
+        np.testing.assert_allclose(
+            k_cg.matvec_ref(x), b, rtol=1e-3, atol=1e-3
+        )
+
+
+class TestElectrostatics:
+    def test_matches_ref(self):
+        pts, atoms = 2048, 512
+        px = jax.random.uniform(key(0), (pts,), jnp.float32, 0.0, 64.0)
+        py = jax.random.uniform(key(1), (pts,), jnp.float32, 0.0, 64.0)
+        ax = jax.random.uniform(key(2), (atoms,), jnp.float32, 0.0, 64.0)
+        ay = jax.random.uniform(key(3), (atoms,), jnp.float32, 0.0, 64.0)
+        q = jax.random.uniform(key(4), (atoms,), jnp.float32, -1.0, 1.0)
+        out = k_es.electrostatics(px, py, ax, ay, q)
+        np.testing.assert_allclose(
+            out, ref.electrostatics(px, py, ax, ay, q), rtol=1e-3, atol=1e-3
+        )
+
+    def test_superposition(self):
+        # Potential is linear in charge: V(q1+q2) = V(q1) + V(q2).
+        pts, atoms = 1024, 256
+        px = jax.random.uniform(key(5), (pts,), jnp.float32, 0.0, 10.0)
+        py = jax.random.uniform(key(6), (pts,), jnp.float32, 0.0, 10.0)
+        ax = jax.random.uniform(key(7), (atoms,), jnp.float32, 0.0, 10.0)
+        ay = jax.random.uniform(key(8), (atoms,), jnp.float32, 0.0, 10.0)
+        q1 = jax.random.uniform(key(9), (atoms,), jnp.float32, -1.0, 1.0)
+        q2 = jax.random.uniform(key(10), (atoms,), jnp.float32, -1.0, 1.0)
+        v12 = k_es.electrostatics(px, py, ax, ay, q1 + q2)
+        v1 = k_es.electrostatics(px, py, ax, ay, q1)
+        v2 = k_es.electrostatics(px, py, ax, ay, q2)
+        np.testing.assert_allclose(v12, v1 + v2, rtol=1e-3, atol=1e-3)
+
+    def test_iters_idempotent(self):
+        pts, atoms = 1024, 256
+        px = jax.random.uniform(key(11), (pts,), jnp.float32, 0.0, 10.0)
+        py = jax.random.uniform(key(12), (pts,), jnp.float32, 0.0, 10.0)
+        ax = jax.random.uniform(key(13), (atoms,), jnp.float32, 0.0, 10.0)
+        ay = jax.random.uniform(key(14), (atoms,), jnp.float32, 0.0, 10.0)
+        q = jax.random.uniform(key(15), (atoms,), jnp.float32, -1.0, 1.0)
+        v1 = k_es.electrostatics(px, py, ax, ay, q, iters=1)
+        v3 = k_es.electrostatics(px, py, ax, ay, q, iters=3)
+        np.testing.assert_allclose(v1, v3, rtol=0)

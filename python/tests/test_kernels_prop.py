@@ -1,0 +1,200 @@
+"""Hypothesis property sweeps over the Pallas kernels.
+
+Complements the fixed-size oracle checks in ``test_kernels.py`` with
+randomized shapes, block sizes and value ranges, plus algebraic
+properties (linearity, symmetry) that hold independently of the oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import black_scholes as k_bs
+from compile.kernels import cg as k_cg
+from compile.kernels import electrostatics as k_es
+from compile.kernels import matmul as k_mm
+from compile.kernels import mg as k_mg
+from compile.kernels import ref
+from compile.kernels import vecadd as k_va
+from compile.kernels import vecmul as k_vm
+
+# Interpret-mode Pallas re-traces per shape; keep example counts modest.
+FAST = settings(max_examples=12, deadline=None)
+
+
+def arr(key, n, lo=-10.0, hi=10.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), (n,), jnp.float32, lo, hi)
+
+
+class TestVecAddProps:
+    @FAST
+    @given(
+        blocks=st.integers(1, 8),
+        block=st.sampled_from([64, 128, 512]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_shape_sweep(self, blocks, block, seed):
+        n = blocks * block
+        a, b = arr(seed, n), arr(seed + 1, n)
+        np.testing.assert_allclose(
+            k_va.vecadd(a, b, block=block), ref.vecadd(a, b), rtol=0
+        )
+
+    @FAST
+    @given(seed=st.integers(0, 2**31))
+    def test_commutative(self, seed):
+        n = 512
+        a, b = arr(seed, n), arr(seed + 1, n)
+        np.testing.assert_allclose(
+            k_va.vecadd(a, b, block=128),
+            k_va.vecadd(b, a, block=128),
+            rtol=0,
+        )
+
+
+class TestVecMulProps:
+    @FAST
+    @given(
+        iters=st.integers(0, 8),
+        seed=st.integers(0, 2**31),
+    )
+    def test_iteration_sweep(self, iters, seed):
+        n = 512
+        a = arr(seed, n, 0.5, 2.0)
+        b = arr(seed + 1, n, 0.9, 1.1)
+        np.testing.assert_allclose(
+            k_vm.vecmul(a, b, iters=iters, block=128),
+            ref.vecmul(a, b, iters),
+            rtol=1e-4,
+        )
+
+
+class TestMatMulProps:
+    @FAST
+    @given(
+        m=st.sampled_from([32, 64, 96]),
+        k=st.sampled_from([32, 64]),
+        n=st.sampled_from([32, 64]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_shape_sweep(self, m, k, n, seed):
+        a = jax.random.normal(jax.random.PRNGKey(seed), (m, k), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, n), jnp.float32)
+        np.testing.assert_allclose(
+            k_mm.matmul(a, b, tile=32), ref.matmul(a, b), rtol=1e-3, atol=1e-3
+        )
+
+    @FAST
+    @given(seed=st.integers(0, 2**31))
+    def test_linearity(self, seed):
+        # (alpha A) @ B == alpha (A @ B)
+        a = jax.random.normal(jax.random.PRNGKey(seed), (64, 64), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(seed + 1), (64, 64), jnp.float32)
+        lhs = k_mm.matmul(2.5 * a, b, tile=32)
+        rhs = 2.5 * k_mm.matmul(a, b, tile=32)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-3)
+
+
+class TestBlackScholesProps:
+    @FAST
+    @given(seed=st.integers(0, 2**31))
+    def test_value_sweep(self, seed):
+        n = 256
+        s = arr(seed, n, 1.0, 50.0)
+        x = arr(seed + 1, n, 1.0, 120.0)
+        t = arr(seed + 2, n, 0.1, 10.0)
+        call, put = k_bs.black_scholes(s, x, t, iters=1, block=128)
+        rcall, rput = ref.black_scholes(s, x, t)
+        np.testing.assert_allclose(call, rcall, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(put, rput, rtol=1e-3, atol=1e-4)
+
+    @FAST
+    @given(seed=st.integers(0, 2**31))
+    def test_call_monotone_in_spot(self, seed):
+        # Higher spot -> call worth no less (fixed strike/expiry).
+        n = 128
+        s = arr(seed, n, 5.0, 30.0)
+        x = jnp.full((n,), 20.0, jnp.float32)
+        t = jnp.full((n,), 1.0, jnp.float32)
+        c1, _ = k_bs.black_scholes(s, x, t, iters=1, block=128)
+        c2, _ = k_bs.black_scholes(s + 1.0, x, t, iters=1, block=128)
+        assert bool(jnp.all(c2 >= c1 - 1e-5))
+
+
+class TestMGProps:
+    @FAST
+    @given(
+        n=st.sampled_from([8, 16]),
+        iters=st.integers(1, 3),
+        seed=st.integers(0, 2**31),
+    )
+    def test_shape_sweep(self, n, iters, seed):
+        v = jax.random.normal(jax.random.PRNGKey(seed), (n, n, n), jnp.float32)
+        np.testing.assert_allclose(
+            k_mg.mg(v, iters=iters), ref.mg(v, iters), rtol=1e-3, atol=1e-4
+        )
+
+    @FAST
+    @given(seed=st.integers(0, 2**31))
+    def test_linearity(self, seed):
+        # The smoother is linear in v: mg(a v) = a mg(v).
+        v = jax.random.normal(jax.random.PRNGKey(seed), (8, 8, 8), jnp.float32)
+        np.testing.assert_allclose(
+            k_mg.mg(3.0 * v, iters=2),
+            3.0 * k_mg.mg(v, iters=2),
+            rtol=1e-3,
+            atol=1e-4,
+        )
+
+
+class TestCGProps:
+    @FAST
+    @given(
+        n=st.sampled_from([128, 256, 700]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_shape_sweep(self, n, seed):
+        b = jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+        x, rnorm = k_cg.cg(b, iters=8)
+        rx, _ = ref.cg(b, iters=8)
+        np.testing.assert_allclose(x, rx, rtol=1e-2, atol=1e-3)
+
+    @FAST
+    @given(seed=st.integers(0, 2**31))
+    def test_residual_decreases(self, seed):
+        b = jax.random.normal(jax.random.PRNGKey(seed), (256,), jnp.float32)
+        _, r2 = k_cg.cg(b, iters=2)
+        _, r12 = k_cg.cg(b, iters=12)
+        assert float(r12[0]) <= float(r2[0]) + 1e-6
+
+
+class TestElectrostaticsProps:
+    @FAST
+    @given(seed=st.integers(0, 2**31))
+    def test_shape_sweep(self, seed):
+        pts, atoms = 512, 256
+        px = arr(seed, pts, 0.0, 32.0)
+        py = arr(seed + 1, pts, 0.0, 32.0)
+        ax = arr(seed + 2, atoms, 0.0, 32.0)
+        ay = arr(seed + 3, atoms, 0.0, 32.0)
+        q = arr(seed + 4, atoms, -1.0, 1.0)
+        out = k_es.electrostatics(
+            px, py, ax, ay, q, points_block=256, atom_tile=128
+        )
+        np.testing.assert_allclose(
+            out, ref.electrostatics(px, py, ax, ay, q), rtol=1e-3, atol=1e-3
+        )
+
+    @FAST
+    @given(seed=st.integers(0, 2**31))
+    def test_charge_antisymmetry(self, seed):
+        pts, atoms = 256, 128
+        px = arr(seed, pts, 0.0, 16.0)
+        py = arr(seed + 1, pts, 0.0, 16.0)
+        ax = arr(seed + 2, atoms, 0.0, 16.0)
+        ay = arr(seed + 3, atoms, 0.0, 16.0)
+        q = arr(seed + 4, atoms, -1.0, 1.0)
+        vp = k_es.electrostatics(px, py, ax, ay, q, points_block=256, atom_tile=128)
+        vn = k_es.electrostatics(px, py, ax, ay, -q, points_block=256, atom_tile=128)
+        np.testing.assert_allclose(vp, -vn, rtol=1e-4, atol=1e-4)

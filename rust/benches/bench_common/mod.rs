@@ -1,0 +1,43 @@
+//! Shared mini-bench harness (the offline environment has no criterion).
+//!
+//! Each bench binary (`harness = false`) calls [`bench`] per case:
+//! warmup, then timed batches until ~0.5 s elapsed, reporting ns/op and
+//! ops/s in a criterion-like one-liner.  `cargo bench` runs them all.
+
+use std::time::{Duration, Instant};
+
+/// Run one benchmark case and print its report line.
+pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> f64 {
+    // Warmup.
+    for _ in 0..3 {
+        std::hint::black_box(f());
+    }
+    // Calibrate batch size to ~10ms.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let per = t0.elapsed().max(Duration::from_nanos(50));
+    let batch = ((Duration::from_millis(10).as_nanos() / per.as_nanos()).max(1)) as usize;
+
+    let mut total_ops = 0usize;
+    let mut elapsed = Duration::ZERO;
+    while elapsed < Duration::from_millis(400) {
+        let t = Instant::now();
+        for _ in 0..batch {
+            std::hint::black_box(f());
+        }
+        elapsed += t.elapsed();
+        total_ops += batch;
+    }
+    let ns_per_op = elapsed.as_nanos() as f64 / total_ops as f64;
+    println!(
+        "{name:48} {:>12.1} ns/op {:>14.0} ops/s",
+        ns_per_op,
+        1e9 / ns_per_op
+    );
+    ns_per_op
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n== {title} ==");
+}

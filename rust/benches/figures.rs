@@ -1,0 +1,19 @@
+//! End-to-end figure regeneration benches — one per paper table/figure
+//! (the simulator-backed set; fig18 needs artifacts and a live GVM, so
+//! it is exercised by `vgpu exp fig18` / the integration tests instead).
+
+mod bench_common;
+use bench_common::{bench, section};
+
+fn main() {
+    section("harness: per-figure regeneration cost");
+    for id in [
+        "tab1", "tab3", "fig14", "fig15", "fig16", "fig17", "fig19", "fig20",
+        "fig21", "fig22", "fig23", "fig24", "ablation-style",
+        "ablation-depcheck", "ablation-ctx", "ablation-barrier",
+    ] {
+        bench(&format!("exp_{id}"), || {
+            vgpu::harness::run(id).unwrap().table.len()
+        });
+    }
+}

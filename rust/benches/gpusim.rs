@@ -1,0 +1,47 @@
+//! Simulator throughput benches: events/sec on workloads shaped like the
+//! paper's figures.  L3 perf target (DESIGN.md §9): the sim engine must
+//! never be the harness bottleneck (>= ~1M sim-ops/s).
+
+mod bench_common;
+use bench_common::{bench, section};
+
+use vgpu::config::DeviceConfig;
+use vgpu::gpusim::{GpuSim, OpKind};
+
+fn run_batch(n_streams: usize, ops_per_stream: usize, blocks: u32) -> f64 {
+    let mut sim = GpuSim::new(DeviceConfig::tesla_c2070());
+    let ctx = sim.create_context_preinitialized();
+    let streams: Vec<_> = (0..n_streams).map(|_| sim.stream(ctx)).collect();
+    for &s in &streams {
+        for _ in 0..ops_per_stream {
+            sim.enqueue(s, OpKind::H2d { bytes: 1 << 20 });
+            sim.enqueue(
+                s,
+                OpKind::Kernel {
+                    blocks,
+                    t_comp_ms: 1.0,
+                },
+            );
+            sim.enqueue(s, OpKind::D2h { bytes: 1 << 19 });
+        }
+    }
+    sim.run().unwrap().total_ms
+}
+
+fn main() {
+    section("gpusim: discrete-event engine");
+    bench("ps2_8streams_x1  (24 ops)", || run_batch(8, 1, 4));
+    bench("ps2_8streams_x16 (384 ops)", || run_batch(8, 16, 4));
+    bench("ps2_64streams_x16 (3072 ops)", || run_batch(64, 16, 4));
+    bench("big_kernels_50k_blocks", || run_batch(8, 1, 50_000));
+
+    // Events/sec at harness scale.
+    let t0 = std::time::Instant::now();
+    let mut ops = 0usize;
+    for _ in 0..50 {
+        run_batch(64, 16, 14);
+        ops += 64 * 16 * 3;
+    }
+    let rate = ops as f64 / t0.elapsed().as_secs_f64();
+    println!("sustained sim-op rate: {rate:.0} ops/s (target >= 1e6)");
+}

@@ -1,0 +1,57 @@
+//! IPC benches: wire encode/decode and framed socket round-trips — the
+//! virtualization-layer overhead of Fig. 18, microscoped.
+
+mod bench_common;
+use bench_common::{bench, section};
+
+use vgpu::ipc::{ClientMsg, Framed, ServerMsg};
+use vgpu::runtime::TensorValue;
+
+fn main() {
+    section("ipc: wire codec");
+    let small = ClientMsg::Snd {
+        slot: 0,
+        tensor: TensorValue::F32(vec![256], vec![1.0; 256]),
+    };
+    let big = ClientMsg::Snd {
+        slot: 0,
+        tensor: TensorValue::F32(vec![1 << 20], vec![1.0; 1 << 20]),
+    };
+    bench("encode_snd_1KiB", || small.encode());
+    let enc_small = small.encode();
+    bench("decode_snd_1KiB", || ClientMsg::decode(&enc_small).unwrap());
+    bench("encode_snd_4MiB", || big.encode());
+    let enc_big = big.encode();
+    bench("decode_snd_4MiB", || ClientMsg::decode(&enc_big).unwrap());
+
+    section("ipc: unix socket round-trip (echo server)");
+    let (client, server) = std::os::unix::net::UnixStream::pair().unwrap();
+    std::thread::spawn(move || {
+        let mut f = Framed::new(server);
+        while let Ok(Some(frame)) = f.recv() {
+            let _ = ClientMsg::decode(&frame);
+            if f.send(&ServerMsg::Ack.encode()).is_err() {
+                break;
+            }
+        }
+    });
+    let mut f = Framed::new(client);
+    bench("roundtrip_req", || {
+        f.send(
+            &ClientMsg::Req {
+                name: "bench".into(),
+            }
+            .encode(),
+        )
+        .unwrap();
+        ServerMsg::decode(&f.recv().unwrap().unwrap()).unwrap()
+    });
+    bench("roundtrip_snd_1KiB", || {
+        f.send(&enc_small).unwrap();
+        ServerMsg::decode(&f.recv().unwrap().unwrap()).unwrap()
+    });
+    bench("roundtrip_snd_4MiB", || {
+        f.send(&enc_big).unwrap();
+        ServerMsg::decode(&f.recv().unwrap().unwrap()).unwrap()
+    });
+}

@@ -1,0 +1,38 @@
+//! Scheduler/plan benches: classification + emission cost per batch.
+//! The GVM flush path must be negligible next to device time.
+
+mod bench_common;
+use bench_common::{bench, section};
+
+use vgpu::gvm::scheduler::{classify_batch, plan_batch, spmd_jobs, Policy};
+use vgpu::model::StageTimes;
+
+fn jobs(n: usize) -> Vec<vgpu::gvm::Job> {
+    spmd_jobs(
+        "bench",
+        StageTimes {
+            t_in: 1.0,
+            t_comp: 10.0,
+            t_out: 1.0,
+        },
+        1 << 20,
+        1 << 19,
+        14,
+        n,
+    )
+}
+
+fn main() {
+    section("gvm scheduler: batch planning");
+    let j8 = jobs(8);
+    let j64 = jobs(64);
+    let policy = Policy::default();
+    bench("classify_batch_8", || classify_batch(&j8));
+    bench("classify_batch_64", || classify_batch(&j64));
+    bench("plan_batch_8", || plan_batch(j8.clone(), &policy));
+    bench("plan_batch_64", || plan_batch(j64.clone(), &policy));
+    bench("plan_validate_64", || {
+        let p = plan_batch(j64.clone(), &policy);
+        (p.is_complete(), p.is_sequentially_consistent())
+    });
+}

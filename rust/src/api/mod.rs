@@ -1,0 +1,221 @@
+//! Client-side VGPU API — the paper's user-process layer (Fig. 12/13).
+//!
+//! Programmers see a private virtual GPU and drive it with six verbs:
+//!
+//! | paper routine | method        | effect                             |
+//! |---------------|---------------|------------------------------------|
+//! | `REQ()`       | (connect)     | allocate a VGPU                    |
+//! | `SND()`       | [`VgpuClient::snd`]  | stage input into the segment |
+//! | `STR()`       | [`VgpuClient::str_`] | start kernel execution       |
+//! | `STP()`       | [`VgpuClient::stp`]  | await completion (ACK)       |
+//! | `RCV()`       | [`VgpuClient::rcv`]  | fetch an output tensor       |
+//! | `RLS()`       | [`VgpuClient::rls`]  | release the VGPU             |
+//!
+//! Porting an existing GPU program is intentionally mechanical — exactly
+//! the paper's claim ("very little effort to port existing GPU
+//! programs").
+
+use std::sync::mpsc;
+
+use crate::gvm::Command;
+use crate::ipc::transport::{Transport, UnixTransport};
+use crate::ipc::{ClientMsg, ServerMsg};
+use crate::runtime::TensorValue;
+use crate::{Error, Result};
+
+/// Node statistics snapshot (see [`VgpuClient::stats`]).
+#[derive(Debug, Clone, Copy)]
+pub struct NodeStatsView {
+    /// Batches flushed since GVM launch.
+    pub batches: u64,
+    /// Jobs completed.
+    pub jobs_ok: u64,
+    /// Jobs failed.
+    pub jobs_failed: u64,
+    /// Bytes staged through segments.
+    pub bytes_staged: u64,
+    /// Cumulative device execution time (ms).
+    pub device_ms: f64,
+    /// Registered clients right now.
+    pub clients: u32,
+}
+
+/// Completion info returned by `STP`.
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    /// Device wall time inside the GVM (the paper's "pure GPU time").
+    pub gpu_ms: f64,
+    /// Number of output slots available for `RCV`.
+    pub n_outputs: u32,
+}
+
+enum Conn {
+    /// In-process: direct command-channel access to the daemon.
+    InProc {
+        id: u64,
+        tx: mpsc::Sender<Command>,
+    },
+    /// Real process: unix socket to a served GVM.
+    Socket(Box<dyn Transport>),
+}
+
+/// A client handle to one VGPU.
+pub struct VgpuClient {
+    conn: Conn,
+    released: bool,
+}
+
+impl VgpuClient {
+    pub(crate) fn new_inproc(id: u64, tx: mpsc::Sender<Command>) -> Self {
+        Self {
+            conn: Conn::InProc { id, tx },
+            released: false,
+        }
+    }
+
+    /// Connect over a unix socket and perform `REQ`.
+    pub fn connect_unix(
+        path: impl AsRef<std::path::Path>,
+        name: &str,
+    ) -> Result<Self> {
+        let mut t = UnixTransport::connect(path)?;
+        match t.call(ClientMsg::Req {
+            name: name.to_string(),
+        })? {
+            ServerMsg::Ack => {}
+            ServerMsg::Err { msg } => return Err(Error::Protocol(msg)),
+            other => return Err(Error::Ipc(format!("bad REQ reply: {other:?}"))),
+        }
+        Ok(Self {
+            conn: Conn::Socket(Box::new(t)),
+            released: false,
+        })
+    }
+
+    fn call(&mut self, msg: ClientMsg) -> Result<ServerMsg> {
+        match &mut self.conn {
+            Conn::InProc { id, tx } => {
+                let (reply_tx, reply_rx) = mpsc::channel();
+                tx.send(Command {
+                    client: *id,
+                    msg,
+                    reply: reply_tx,
+                })
+                .map_err(|_| Error::Ipc("GVM daemon is down".into()))?;
+                reply_rx
+                    .recv()
+                    .map_err(|_| Error::Ipc("GVM dropped the reply".into()))
+            }
+            Conn::Socket(t) => t.call(msg),
+        }
+    }
+
+    fn expect_ack(&mut self, msg: ClientMsg) -> Result<()> {
+        match self.call(msg)? {
+            ServerMsg::Ack => Ok(()),
+            ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
+            other => Err(Error::Ipc(format!("expected Ack, got {other:?}"))),
+        }
+    }
+
+    /// `SND()`: stage one input tensor into segment `slot`.
+    pub fn snd(&mut self, slot: u32, tensor: TensorValue) -> Result<()> {
+        self.expect_ack(ClientMsg::Snd { slot, tensor })
+    }
+
+    /// `STR()`: start execution of `workload`; returns the queue ticket.
+    /// (Named `str_` because `str` is reserved.)
+    pub fn str_(&mut self, workload: &str) -> Result<u64> {
+        match self.call(ClientMsg::Str {
+            workload: workload.to_string(),
+        })? {
+            ServerMsg::Queued { ticket } => Ok(ticket),
+            ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
+            other => Err(Error::Ipc(format!("expected Queued, got {other:?}"))),
+        }
+    }
+
+    /// `STP()`: block until the kernel finishes; returns completion info.
+    pub fn stp(&mut self) -> Result<Completion> {
+        match self.call(ClientMsg::Stp)? {
+            ServerMsg::Done { gpu_ms, n_outputs } => Ok(Completion {
+                gpu_ms,
+                n_outputs,
+            }),
+            ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
+            other => Err(Error::Ipc(format!("expected Done, got {other:?}"))),
+        }
+    }
+
+    /// `RCV()`: fetch output tensor `slot`.
+    pub fn rcv(&mut self, slot: u32) -> Result<TensorValue> {
+        match self.call(ClientMsg::Rcv { slot })? {
+            ServerMsg::Data { tensor } => Ok(tensor),
+            ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
+            other => Err(Error::Ipc(format!("expected Data, got {other:?}"))),
+        }
+    }
+
+    /// `RLS()`: release the VGPU. Idempotent; also called on drop.
+    pub fn rls(&mut self) -> Result<()> {
+        if self.released {
+            return Ok(());
+        }
+        self.expect_ack(ClientMsg::Rls)?;
+        self.released = true;
+        Ok(())
+    }
+
+    /// Alias matching the quickstart prose.
+    pub fn release(&mut self) -> Result<()> {
+        self.rls()
+    }
+
+    /// Query node statistics (observability extension; not in the
+    /// paper's API but required for production monitoring).
+    pub fn stats(&mut self) -> Result<NodeStatsView> {
+        match self.call(ClientMsg::Stats)? {
+            ServerMsg::Stats {
+                batches,
+                jobs_ok,
+                jobs_failed,
+                bytes_staged,
+                device_ms,
+                clients,
+            } => Ok(NodeStatsView {
+                batches,
+                jobs_ok,
+                jobs_failed,
+                bytes_staged,
+                device_ms,
+                clients,
+            }),
+            ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
+            other => Err(Error::Ipc(format!("expected Stats, got {other:?}"))),
+        }
+    }
+
+    /// Convenience: one full request cycle (SND*, STR, STP, RCV*).
+    pub fn run(
+        &mut self,
+        workload: &str,
+        inputs: &[TensorValue],
+    ) -> Result<(Vec<TensorValue>, Completion)> {
+        for (i, t) in inputs.iter().enumerate() {
+            self.snd(i as u32, t.clone())?;
+        }
+        self.str_(workload)?;
+        let done = self.stp()?;
+        let mut outs = Vec::with_capacity(done.n_outputs as usize);
+        for i in 0..done.n_outputs {
+            outs.push(self.rcv(i)?);
+        }
+        Ok((outs, done))
+    }
+}
+
+impl Drop for VgpuClient {
+    fn drop(&mut self) {
+        let _ = self.rls();
+    }
+}

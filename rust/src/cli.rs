@@ -1,0 +1,310 @@
+//! Hand-rolled CLI (the offline environment has no `clap`).
+//!
+//! ```text
+//! vgpu exp <id>|all [--results DIR]        regenerate paper experiments
+//! vgpu serve --socket PATH [--barrier N]   run the GVM daemon for real
+//!                                          multi-process SPMD clients
+//! vgpu run <workload> [-n N] [--reps R]    in-proc SPMD run (real PJRT)
+//! vgpu list                                list workloads + artifacts
+//! vgpu profile                             show calibration derivation
+//! ```
+
+use std::collections::VecDeque;
+
+use crate::{Error, Result};
+
+/// Parsed invocation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Cmd {
+    /// Regenerate experiments (`all` = every id).
+    Exp {
+        /// Experiment id or `all`.
+        id: String,
+        /// TSV output directory.
+        results_dir: String,
+    },
+    /// Serve the GVM over a unix socket.
+    Serve {
+        /// Socket path.
+        socket: String,
+        /// SPMD barrier size (None = all registered clients).
+        barrier: Option<usize>,
+        /// Optional config file (see config::file docs).
+        config: Option<String>,
+    },
+    /// Run an SPMD workload in-process against the real runtime.
+    Run {
+        /// Workload name.
+        workload: String,
+        /// Number of emulated SPMD processes.
+        n: usize,
+        /// Repetitions per process.
+        reps: usize,
+    },
+    /// Export a chrome-trace timeline for a simulated SPMD batch.
+    Trace {
+        /// Workload name.
+        workload: String,
+        /// SPMD process count.
+        n: usize,
+        /// Output JSON path.
+        out: String,
+        /// Trace the no-virt baseline instead of the virtualized batch.
+        baseline: bool,
+    },
+    /// ASCII-plot a regenerated figure from results/<id>.tsv.
+    Plot {
+        /// Experiment id (reads results/<id>.tsv; regenerates if absent).
+        id: String,
+        /// Results directory.
+        results_dir: String,
+    },
+    /// List workloads and artifacts.
+    List,
+    /// Show the cost-calibration derivation.
+    Profile,
+    /// Print usage.
+    Help,
+}
+
+/// Parse argv (without argv[0]).
+pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Cmd> {
+    let mut args: VecDeque<String> = args.into_iter().collect();
+    let sub = match args.pop_front() {
+        Some(s) => s,
+        None => return Ok(Cmd::Help),
+    };
+    match sub.as_str() {
+        "exp" => {
+            let id = args
+                .pop_front()
+                .ok_or_else(|| Error::Config("exp: missing experiment id".into()))?;
+            let mut results_dir = "results".to_string();
+            while let Some(flag) = args.pop_front() {
+                match flag.as_str() {
+                    "--results" => {
+                        results_dir = args.pop_front().ok_or_else(|| {
+                            Error::Config("--results needs a value".into())
+                        })?;
+                    }
+                    f => return Err(Error::Config(format!("exp: unknown flag {f}"))),
+                }
+            }
+            Ok(Cmd::Exp { id, results_dir })
+        }
+        "serve" => {
+            let mut socket = None;
+            let mut barrier = None;
+            let mut config = None;
+            while let Some(flag) = args.pop_front() {
+                match flag.as_str() {
+                    "--socket" => {
+                        socket = Some(args.pop_front().ok_or_else(|| {
+                            Error::Config("--socket needs a value".into())
+                        })?)
+                    }
+                    "--config" => {
+                        config = Some(args.pop_front().ok_or_else(|| {
+                            Error::Config("--config needs a value".into())
+                        })?)
+                    }
+                    "--barrier" => {
+                        barrier = Some(
+                            args.pop_front()
+                                .ok_or_else(|| {
+                                    Error::Config("--barrier needs a value".into())
+                                })?
+                                .parse()
+                                .map_err(|e| {
+                                    Error::Config(format!("bad --barrier: {e}"))
+                                })?,
+                        )
+                    }
+                    f => {
+                        return Err(Error::Config(format!("serve: unknown flag {f}")))
+                    }
+                }
+            }
+            Ok(Cmd::Serve {
+                socket: socket
+                    .ok_or_else(|| Error::Config("serve: --socket required".into()))?,
+                barrier,
+                config,
+            })
+        }
+        "run" => {
+            let workload = args
+                .pop_front()
+                .ok_or_else(|| Error::Config("run: missing workload".into()))?;
+            let mut n = 8usize;
+            let mut reps = 1usize;
+            while let Some(flag) = args.pop_front() {
+                match flag.as_str() {
+                    "-n" | "--processes" => {
+                        n = args
+                            .pop_front()
+                            .ok_or_else(|| Error::Config("-n needs a value".into()))?
+                            .parse()
+                            .map_err(|e| Error::Config(format!("bad -n: {e}")))?;
+                    }
+                    "--reps" => {
+                        reps = args
+                            .pop_front()
+                            .ok_or_else(|| {
+                                Error::Config("--reps needs a value".into())
+                            })?
+                            .parse()
+                            .map_err(|e| Error::Config(format!("bad --reps: {e}")))?;
+                    }
+                    f => return Err(Error::Config(format!("run: unknown flag {f}"))),
+                }
+            }
+            if n == 0 || reps == 0 {
+                return Err(Error::Config("run: -n and --reps must be >= 1".into()));
+            }
+            Ok(Cmd::Run { workload, n, reps })
+        }
+        "trace" => {
+            let workload = args
+                .pop_front()
+                .ok_or_else(|| Error::Config("trace: missing workload".into()))?;
+            let mut n = 8usize;
+            let mut out = "trace.json".to_string();
+            let mut baseline = false;
+            while let Some(flag) = args.pop_front() {
+                match flag.as_str() {
+                    "-n" | "--processes" => {
+                        n = args
+                            .pop_front()
+                            .ok_or_else(|| Error::Config("-n needs a value".into()))?
+                            .parse()
+                            .map_err(|e| Error::Config(format!("bad -n: {e}")))?;
+                    }
+                    "--out" => {
+                        out = args.pop_front().ok_or_else(|| {
+                            Error::Config("--out needs a value".into())
+                        })?;
+                    }
+                    "--baseline" => baseline = true,
+                    f => {
+                        return Err(Error::Config(format!("trace: unknown flag {f}")))
+                    }
+                }
+            }
+            Ok(Cmd::Trace {
+                workload,
+                n,
+                out,
+                baseline,
+            })
+        }
+        "plot" => {
+            let id = args
+                .pop_front()
+                .ok_or_else(|| Error::Config("plot: missing experiment id".into()))?;
+            let mut results_dir = "results".to_string();
+            while let Some(flag) = args.pop_front() {
+                match flag.as_str() {
+                    "--results" => {
+                        results_dir = args.pop_front().ok_or_else(|| {
+                            Error::Config("--results needs a value".into())
+                        })?;
+                    }
+                    f => return Err(Error::Config(format!("plot: unknown flag {f}"))),
+                }
+            }
+            Ok(Cmd::Plot { id, results_dir })
+        }
+        "list" => Ok(Cmd::List),
+        "profile" => Ok(Cmd::Profile),
+        "help" | "--help" | "-h" => Ok(Cmd::Help),
+        other => Err(Error::Config(format!("unknown subcommand {other:?}"))),
+    }
+}
+
+/// Usage text.
+pub const USAGE: &str = "\
+vgpu — GPU virtualization for SPMD resource sharing (Li et al., 2015)
+
+USAGE:
+  vgpu exp <id>|all [--results DIR]   regenerate a paper table/figure
+  vgpu serve --socket PATH [--barrier N] [--config FILE]
+                                      serve the GVM to real OS processes
+  vgpu run <workload> [-n N] [--reps R]
+                                      emulated SPMD run on the real runtime
+  vgpu trace <workload> [-n N] [--out F.json] [--baseline]
+                                      export a chrome://tracing timeline
+  vgpu plot <id> [--results DIR]      ASCII-chart a regenerated figure
+  vgpu list                           list workloads and artifacts
+  vgpu profile                        show cost-calibration details
+  vgpu help                           this text
+
+EXPERIMENTS: tab1 tab3 fig14 fig15 fig16 fig17 fig18 fig19 fig20 fig21
+             fig22 fig23 fig24 ablation-style ablation-depcheck
+             ablation-ctx ablation-barrier ablation-policy ext-multigpu
+             ext-cluster ext-fig18-socket
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Result<Cmd> {
+        parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn parses_exp() {
+        assert_eq!(
+            p("exp fig14").unwrap(),
+            Cmd::Exp {
+                id: "fig14".into(),
+                results_dir: "results".into()
+            }
+        );
+        assert_eq!(
+            p("exp all --results /tmp/r").unwrap(),
+            Cmd::Exp {
+                id: "all".into(),
+                results_dir: "/tmp/r".into()
+            }
+        );
+    }
+
+    #[test]
+    fn parses_serve() {
+        assert_eq!(
+            p("serve --socket /tmp/v.sock --barrier 4").unwrap(),
+            Cmd::Serve {
+                socket: "/tmp/v.sock".into(),
+                barrier: Some(4),
+                config: None
+            }
+        );
+        assert!(p("serve").is_err());
+    }
+
+    #[test]
+    fn parses_run() {
+        assert_eq!(
+            p("run vecadd -n 4 --reps 3").unwrap(),
+            Cmd::Run {
+                workload: "vecadd".into(),
+                n: 4,
+                reps: 3
+            }
+        );
+        assert!(p("run vecadd -n 0").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(p("frobnicate").is_err());
+        assert!(p("exp fig14 --bogus x").is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        assert_eq!(p("").unwrap(), Cmd::Help);
+    }
+}

@@ -1,0 +1,192 @@
+//! Cluster-level SPMD modeling — the paper's Fig. 11 deployment.
+//!
+//! The paper's system picture is a cluster of heterogeneous nodes joined
+//! by an interconnect, with the GVM deployed *per node*.  This module
+//! composes the single-node device model into that picture: an SPMD
+//! program of `n_nodes x n_procs` ranks where every iteration is
+//!
+//! 1. a local GPU phase on each node (virtualized or native sharing,
+//!    simulated by [`crate::gpusim`] through the GVM planner), then
+//! 2. a cluster-wide exchange (ring-allreduce α–β cost model over the
+//!    interconnect), as MPI-style SPMD codes do between kernel offloads.
+//!
+//! The node phases proceed in parallel across nodes; the exchange
+//! synchronizes them, so iteration time = max(node GPU time) + comm.
+//! This is what lets the harness answer the paper's closing claim — that
+//! the approach "can be deployed to any heterogeneous GPU clusters with
+//! imbalanced CPU/GPU resources" — with numbers (`vgpu exp ext-cluster`).
+
+use crate::config::NodeConfig;
+use crate::gvm::sim_backend::simulate_spmd;
+use crate::workloads::Workload;
+use crate::Result;
+
+/// Interconnect α–β model (latency + inverse bandwidth).
+#[derive(Debug, Clone)]
+pub struct Interconnect {
+    /// Per-message latency (ms): α.
+    pub latency_ms: f64,
+    /// Bandwidth in bytes/ms: 1/β.
+    pub bytes_per_ms: f64,
+}
+
+impl Interconnect {
+    /// QDR InfiniBand-era fabric (the paper's contemporaries): ~2 µs
+    /// latency, ~4 GB/s effective.
+    pub fn qdr_infiniband() -> Self {
+        Self {
+            latency_ms: 0.002,
+            bytes_per_ms: 4.0e6,
+        }
+    }
+
+    /// Ring allreduce of `bytes` over `ranks` participants.
+    /// Cost: 2(R-1) steps of (α + (bytes/R)/BW).
+    pub fn allreduce_ms(&self, ranks: usize, bytes: u64) -> f64 {
+        if ranks <= 1 {
+            return 0.0;
+        }
+        let r = ranks as f64;
+        2.0 * (r - 1.0) * (self.latency_ms + (bytes as f64 / r) / self.bytes_per_ms)
+    }
+}
+
+/// A homogeneous cluster of GVM-managed nodes.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of compute nodes.
+    pub n_nodes: usize,
+    /// Per-node topology (processors + device).
+    pub node: NodeConfig,
+    /// Inter-node fabric.
+    pub interconnect: Interconnect,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            n_nodes: 4,
+            node: NodeConfig::default(),
+            interconnect: Interconnect::qdr_infiniband(),
+        }
+    }
+}
+
+/// Result of a cluster SPMD run estimate.
+#[derive(Debug, Clone)]
+pub struct ClusterEstimate {
+    /// Per-iteration time with per-node GVM virtualization (ms).
+    pub virt_iter_ms: f64,
+    /// Per-iteration time with native per-process sharing (ms).
+    pub no_virt_iter_ms: f64,
+    /// Communication share of the virtualized iteration.
+    pub comm_ms: f64,
+    /// Total ranks.
+    pub ranks: usize,
+}
+
+impl ClusterEstimate {
+    /// Cluster-level speedup from virtualization.
+    pub fn speedup(&self) -> f64 {
+        self.no_virt_iter_ms / self.virt_iter_ms
+    }
+}
+
+/// Estimate one SPMD iteration (GPU phase + allreduce of `reduce_bytes`)
+/// for `cfg.n_nodes` nodes each running `cfg.node.n_processors` ranks of
+/// `workload`.
+pub fn estimate_iteration(
+    cfg: &ClusterConfig,
+    workload: &Workload,
+    reduce_bytes: u64,
+) -> Result<ClusterEstimate> {
+    let per_node = cfg.node.n_processors;
+    let ranks = cfg.n_nodes * per_node;
+    // Homogeneous nodes -> every node's GPU phase costs the same; the
+    // barrier is the slowest node (== any node).
+    let (virt, base) = simulate_spmd(workload, per_node, &cfg.node.device)?;
+    let comm = cfg.interconnect.allreduce_ms(ranks, reduce_bytes);
+    Ok(ClusterEstimate {
+        virt_iter_ms: virt.total_ms + comm,
+        no_virt_iter_ms: base.total_ms + comm,
+        comm_ms: comm,
+        ranks,
+    })
+}
+
+/// Weak-scaling sweep: nodes in `node_counts`, fixed per-rank problem.
+pub fn weak_scaling(
+    base_cfg: &ClusterConfig,
+    workload: &Workload,
+    reduce_bytes: u64,
+    node_counts: &[usize],
+) -> Result<Vec<(usize, ClusterEstimate)>> {
+    node_counts
+        .iter()
+        .map(|&n| {
+            let mut cfg = base_cfg.clone();
+            cfg.n_nodes = n;
+            Ok((n, estimate_iteration(&cfg, workload, reduce_bytes)?))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Suite;
+
+    #[test]
+    fn allreduce_cost_model() {
+        let ic = Interconnect {
+            latency_ms: 1.0,
+            bytes_per_ms: 1000.0,
+        };
+        assert_eq!(ic.allreduce_ms(1, 1000), 0.0);
+        // 2 ranks: 2 steps of (1 + 500/1000) = 3.0
+        assert!((ic.allreduce_ms(2, 1000) - 3.0).abs() < 1e-12);
+        // More ranks -> more steps.
+        assert!(ic.allreduce_ms(8, 1000) > ic.allreduce_ms(2, 1000));
+    }
+
+    #[test]
+    fn virtualization_gain_survives_the_cluster() {
+        let suite = Suite::paper_defaults();
+        let w = suite.get("mg").unwrap();
+        let cfg = ClusterConfig::default();
+        let est = estimate_iteration(&cfg, w, 1 << 20).unwrap();
+        assert!(est.speedup() > 2.0, "speedup {}", est.speedup());
+        assert_eq!(est.ranks, 32);
+        assert!(est.comm_ms > 0.0);
+    }
+
+    #[test]
+    fn comm_dilutes_speedup_as_nodes_grow() {
+        // With a fixed workload, more nodes -> more allreduce cost ->
+        // virtualization speedup monotonically diluted.
+        let suite = Suite::paper_defaults();
+        let w = suite.get("cg").unwrap();
+        let cfg = ClusterConfig::default();
+        let sweep = weak_scaling(&cfg, w, 64 << 20, &[1, 2, 4, 8, 16]).unwrap();
+        let speedups: Vec<f64> = sweep.iter().map(|(_, e)| e.speedup()).collect();
+        for pair in speedups.windows(2) {
+            assert!(
+                pair[1] <= pair[0] + 1e-9,
+                "speedup should dilute: {speedups:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_comm_matches_single_node() {
+        let suite = Suite::paper_defaults();
+        let w = suite.get("vecadd").unwrap();
+        let mut cfg = ClusterConfig::default();
+        cfg.interconnect.latency_ms = 0.0;
+        cfg.interconnect.bytes_per_ms = f64::INFINITY;
+        let est = estimate_iteration(&cfg, w, 1 << 30).unwrap();
+        let (virt, _) =
+            simulate_spmd(w, cfg.node.n_processors, &cfg.node.device).unwrap();
+        assert!((est.virt_iter_ms - virt.total_ms).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,248 @@
+//! Config-file loading: a minimal INI/TOML-lite dialect (the offline
+//! environment has no serde/toml), covering every tunable a deployment
+//! needs.  Example (`vgpu serve --config node.conf`):
+//!
+//! ```text
+//! # Tesla C2070 node, 8 SPMD ranks
+//! [device]
+//! n_sms = 14
+//! blocks_per_sm = 8
+//! max_concurrent_kernels = 16
+//! h2d_gbps = 6.0
+//! d2h_gbps = 6.0
+//! t_init_ms = 25.0
+//! t_ctx_switch_ms = 10.0
+//! depcheck = completed        # or: started
+//!
+//! [node]
+//! n_processors = 8
+//!
+//! [gvm]
+//! barrier = 8                 # omit for "all registered clients"
+//! barrier_timeout_ms = 50
+//! mem_budget_mb = 6144
+//! max_clients = 64
+//! policy = paper              # or: model-optimal
+//! artifacts_dir = artifacts
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::{DepcheckSemantics, DeviceConfig, NodeConfig};
+use crate::gvm::{DaemonConfig, GvmConfig, StyleRule};
+use crate::{Error, Result};
+
+/// Parsed sections: `section -> key -> value`.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigFile {
+    sections: HashMap<String, HashMap<String, String>>,
+}
+
+impl ConfigFile {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut sections: HashMap<String, HashMap<String, String>> = HashMap::new();
+        let mut current = String::from("");
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or_else(|| {
+                    Error::Config(format!("line {}: unterminated section", lineno + 1))
+                })?;
+                current = name.trim().to_lowercase();
+                sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            sections
+                .entry(current.clone())
+                .or_default()
+                .insert(k.trim().to_lowercase(), v.trim().to_string());
+        }
+        Ok(Self { sections })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            Error::Config(format!("reading {}: {e}", path.as_ref().display()))
+        })?;
+        Self::parse(&text)
+    }
+
+    fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(String::as_str)
+    }
+
+    fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>> {
+        self.get(section, key)
+            .map(|v| {
+                v.parse().map_err(|e| {
+                    Error::Config(format!("[{section}] {key} = {v:?}: {e}"))
+                })
+            })
+            .transpose()
+    }
+
+    fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>> {
+        self.get(section, key)
+            .map(|v| {
+                v.parse().map_err(|e| {
+                    Error::Config(format!("[{section}] {key} = {v:?}: {e}"))
+                })
+            })
+            .transpose()
+    }
+
+    /// Build a device config (defaults = C2070 for anything omitted).
+    pub fn device(&self) -> Result<DeviceConfig> {
+        let mut d = DeviceConfig::tesla_c2070();
+        if let Some(v) = self.get_usize("device", "n_sms")? {
+            d.n_sms = v;
+        }
+        if let Some(v) = self.get_usize("device", "blocks_per_sm")? {
+            d.blocks_per_sm = v;
+        }
+        if let Some(v) = self.get_usize("device", "max_concurrent_kernels")? {
+            d.max_concurrent_kernels = v;
+        }
+        if let Some(v) = self.get_f64("device", "h2d_gbps")? {
+            d.h2d_bytes_per_ms = v * 1.0e6;
+        }
+        if let Some(v) = self.get_f64("device", "d2h_gbps")? {
+            d.d2h_bytes_per_ms = v * 1.0e6;
+        }
+        if let Some(v) = self.get_f64("device", "t_init_ms")? {
+            d.t_init_ms = v;
+        }
+        if let Some(v) = self.get_f64("device", "t_ctx_switch_ms")? {
+            d.t_ctx_switch_ms = v;
+        }
+        if let Some(v) = self.get("device", "depcheck") {
+            d.depcheck = match v.to_lowercase().as_str() {
+                "completed" => DepcheckSemantics::Completed,
+                "started" => DepcheckSemantics::Started,
+                other => {
+                    return Err(Error::Config(format!(
+                        "[device] depcheck = {other:?} (want completed|started)"
+                    )))
+                }
+            };
+        }
+        Ok(d)
+    }
+
+    /// Build a node config.
+    pub fn node(&self) -> Result<NodeConfig> {
+        let mut n = NodeConfig {
+            device: self.device()?,
+            ..NodeConfig::default()
+        };
+        if let Some(v) = self.get_usize("node", "n_processors")? {
+            n.n_processors = v;
+        }
+        Ok(n)
+    }
+
+    /// Build a GVM config.
+    pub fn gvm(&self) -> Result<GvmConfig> {
+        let mut daemon = DaemonConfig::default();
+        daemon.barrier = self.get_usize("gvm", "barrier")?;
+        if let Some(ms) = self.get_f64("gvm", "barrier_timeout_ms")? {
+            daemon.barrier_timeout = std::time::Duration::from_micros((ms * 1e3) as u64);
+        }
+        if let Some(mb) = self.get_usize("gvm", "mem_budget_mb")? {
+            daemon.mem_budget = (mb as u64) << 20;
+        }
+        if let Some(v) = self.get_usize("gvm", "max_clients")? {
+            daemon.max_clients = v;
+        }
+        if let Some(v) = self.get("gvm", "policy") {
+            daemon.policy.rule = match v.to_lowercase().as_str() {
+                "paper" => StyleRule::PaperClass,
+                "model-optimal" => StyleRule::ModelOptimal,
+                other => {
+                    return Err(Error::Config(format!(
+                        "[gvm] policy = {other:?} (want paper|model-optimal)"
+                    )))
+                }
+            };
+        }
+        let artifacts_dir = self
+            .get("gvm", "artifacts_dir")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(crate::runtime::default_artifacts_dir);
+        Ok(GvmConfig {
+            artifacts_dir,
+            daemon,
+            preload: Vec::new(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "
+# sample
+[device]
+n_sms = 16
+t_init_ms = 12.5
+depcheck = started
+
+[node]
+n_processors = 4
+
+[gvm]
+barrier = 4
+mem_budget_mb = 1024
+policy = model-optimal
+";
+
+    #[test]
+    fn parses_sections_and_values() {
+        let c = ConfigFile::parse(SAMPLE).unwrap();
+        let d = c.device().unwrap();
+        assert_eq!(d.n_sms, 16);
+        assert_eq!(d.blocks_per_sm, 8); // default preserved
+        assert!((d.t_init_ms - 12.5).abs() < 1e-12);
+        assert_eq!(d.depcheck, DepcheckSemantics::Started);
+        let n = c.node().unwrap();
+        assert_eq!(n.n_processors, 4);
+        let g = c.gvm().unwrap();
+        assert_eq!(g.daemon.barrier, Some(4));
+        assert_eq!(g.daemon.mem_budget, 1 << 30);
+        assert_eq!(g.daemon.policy.rule, StyleRule::ModelOptimal);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let c = ConfigFile::parse("# only comments\n\n  \n").unwrap();
+        assert_eq!(c.device().unwrap().n_sms, 14);
+    }
+
+    #[test]
+    fn bad_values_rejected_with_context() {
+        let c = ConfigFile::parse("[device]\nn_sms = many\n").unwrap();
+        let err = c.device().unwrap_err().to_string();
+        assert!(err.contains("n_sms"), "{err}");
+        assert!(ConfigFile::parse("[broken\n").is_err());
+        assert!(ConfigFile::parse("keyvalue\n").is_err());
+        let c = ConfigFile::parse("[gvm]\npolicy = magic\n").unwrap();
+        assert!(c.gvm().is_err());
+    }
+
+    #[test]
+    fn defaults_when_file_empty() {
+        let c = ConfigFile::parse("").unwrap();
+        assert_eq!(c.gvm().unwrap().daemon.barrier, None);
+        assert_eq!(c.node().unwrap().n_processors, 8);
+    }
+}

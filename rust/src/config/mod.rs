@@ -1,0 +1,130 @@
+//! Configuration: device model, node topology, GVM tunables, and the
+//! config-file loader ([`file`]).
+//!
+//! The device defaults mirror the paper's testbed — an NVIDIA Tesla C2070
+//! (Fermi): 14 SMs at 1.15 GHz, 6 GB device memory, up to 16 concurrent
+//! kernels, 8 resident blocks per SM, PCIe 2.0 x16 host link.  Overhead
+//! constants (`t_init_ms`, `t_ctx_switch_ms`) are calibrated to the
+//! paper-era CUDA driver behaviour (see EXPERIMENTS.md §Calibration).
+
+pub mod file;
+
+pub use file::ConfigFile;
+
+/// Fermi-class device model parameters.
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    /// Number of streaming multiprocessors (C2070: 14).
+    pub n_sms: usize,
+    /// Max resident blocks per SM (Fermi: 8).
+    pub blocks_per_sm: usize,
+    /// Max concurrently-executing kernels (Fermi: 16).
+    pub max_concurrent_kernels: usize,
+    /// Host->device bandwidth, bytes/ms (PCIe 2.0 x16 pinned: ~6 GB/s).
+    pub h2d_bytes_per_ms: f64,
+    /// Device->host bandwidth, bytes/ms.
+    pub d2h_bytes_per_ms: f64,
+    /// Per-process GPU init (context create + module load), ms.
+    pub t_init_ms: f64,
+    /// Average inter-process context-switch cost, ms.
+    pub t_ctx_switch_ms: f64,
+    /// Device memory capacity in bytes (C2070: 6 GB).
+    pub mem_bytes: u64,
+    /// `Started`: dep-check waits for prior kernel *launches*;
+    /// `Completed`: waits for prior kernel *completions* (the semantics
+    /// the paper's Eqs. 2/4 algebra actually encodes — see DESIGN.md §7).
+    pub depcheck: DepcheckSemantics,
+}
+
+/// Which event satisfies a Fermi implicit-sync dependency check for
+/// kernels that were enqueued before the checking op (§4.2.1 rule 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepcheckSemantics {
+    /// Prior kernel launches must have *started* (paper's prose).
+    Started,
+    /// Prior kernel launches must have *completed* (paper's equations;
+    /// matches Figs. 7/9 where `Rtrv 1` begins after `Comp N` ends).
+    Completed,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        Self::tesla_c2070()
+    }
+}
+
+impl DeviceConfig {
+    /// The paper's testbed device.
+    pub fn tesla_c2070() -> Self {
+        Self {
+            n_sms: 14,
+            blocks_per_sm: 8,
+            max_concurrent_kernels: 16,
+            // ~6 GB/s pinned host<->device on PCIe 2.0 x16.
+            h2d_bytes_per_ms: 6.0e6,
+            d2h_bytes_per_ms: 6.0e6,
+            // CUDA 5.0-era context create + module load. Calibrated to
+            // reproduce the paper's Fig. 24 speedup band (see
+            // EXPERIMENTS.md §Calibration).
+            t_init_ms: 25.0,
+            // Inter-process GPU context switch: ~10 ms.
+            t_ctx_switch_ms: 10.0,
+            mem_bytes: 6 * 1024 * 1024 * 1024,
+            depcheck: DepcheckSemantics::Completed,
+        }
+    }
+
+    /// Total simultaneously-resident block capacity.
+    pub fn block_capacity(&self) -> usize {
+        self.n_sms * self.blocks_per_sm
+    }
+
+    /// An idealized device with effectively unlimited concurrency — used
+    /// by tests that validate the simulator against the analytical model
+    /// (which assumes "GPU resource is large enough for N kernels").
+    pub fn idealized() -> Self {
+        Self {
+            n_sms: 4096,
+            blocks_per_sm: 8,
+            max_concurrent_kernels: usize::MAX,
+            ..Self::tesla_c2070()
+        }
+    }
+}
+
+/// Node topology: processors sharing one device (paper: dual X5570 = 8).
+#[derive(Debug, Clone)]
+pub struct NodeConfig {
+    /// CPU cores per node (= max SPMD processes = VGPU count).
+    pub n_processors: usize,
+    /// The device shared by all of them.
+    pub device: DeviceConfig,
+}
+
+impl Default for NodeConfig {
+    fn default() -> Self {
+        Self {
+            n_processors: 8,
+            device: DeviceConfig::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c2070_capacity() {
+        let d = DeviceConfig::tesla_c2070();
+        assert_eq!(d.block_capacity(), 112);
+        assert_eq!(d.max_concurrent_kernels, 16);
+    }
+
+    #[test]
+    fn node_defaults_match_paper_testbed() {
+        let n = NodeConfig::default();
+        assert_eq!(n.n_processors, 8); // dual quad-core X5570
+        assert_eq!(n.device.n_sms, 14);
+    }
+}

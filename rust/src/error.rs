@@ -1,0 +1,55 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every vgpu subsystem.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Artifact missing / malformed, or manifest mismatch.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA failure surfaced by the runtime layer.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Wire-protocol violation or transport failure.
+    #[error("ipc error: {0}")]
+    Ipc(String),
+
+    /// Client drove the REQ/SND/STR/STP/RCV/RLS protocol out of order.
+    #[error("protocol error: {0}")]
+    Protocol(String),
+
+    /// GVM resource exhaustion (VGPU table full, shmem budget exceeded).
+    #[error("resource error: {0}")]
+    Resource(String),
+
+    /// Simulator misuse (unknown stream, op after drain, ...).
+    #[error("gpusim error: {0}")]
+    Sim(String),
+
+    /// Unknown benchmark / bad experiment id / bad CLI usage.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Underlying I/O failure.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Helper: protocol error with context.
+    pub fn protocol(msg: impl Into<String>) -> Self {
+        Error::Protocol(msg.into())
+    }
+}

@@ -1,0 +1,65 @@
+//! Discrete-event simulator of a Fermi-class GPU — the testbed substitute.
+//!
+//! The paper's experiments ran on a Tesla C2070; this environment has no
+//! GPU, so the coordinator's *timing* experiments run against this
+//! simulator instead (real numerics run through [`crate::runtime`] on the
+//! PJRT CPU client).  The simulator reproduces exactly the architectural
+//! mechanisms the paper's analysis depends on (§3.3, §4.2.1):
+//!
+//! * a **single hardware work queue** for kernels with in-order,
+//!   head-of-line-blocking dispatch;
+//! * **concurrent kernel execution**: blocks from up to 16 resident
+//!   kernels share the SM pool (14 SMs × 8 blocks each);
+//! * **one H2D and one D2H copy engine** — same-direction transfers
+//!   serialize, opposite directions overlap;
+//! * **Fermi implicit-sync rules** for dependent ops: (1) an op that
+//!   dependency-checks a kernel cannot start until all previously
+//!   enqueued kernel launches resolve, and (2) it blocks all
+//!   later-enqueued kernel launches until its check completes;
+//! * **context serialization**: kernels from different GPU contexts never
+//!   overlap; context switches cost `t_ctx_switch_ms` and first use of a
+//!   non-preinitialized context costs `t_init_ms` (the no-virtualization
+//!   baseline of Eq. 1).
+//!
+//! Kernels are modeled at *block* granularity: a kernel with `blocks`
+//! blocks and standalone duration `t_comp_ms` is decomposed into waves of
+//! uniform-duration blocks, so partial-device kernels (MG, CG, EP)
+//! overlap freely while full-device kernels (BlackScholes, ES) serialize
+//! — the effect that differentiates Figs. 19–23.
+
+mod sim;
+mod trace;
+
+pub use sim::{GpuSim, SimReport};
+pub use trace::{OpTrace, Trace};
+
+/// Stream handle (a CUDA stream within one context).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StreamId(pub usize);
+
+/// Context handle (a CUDA context; one per process without virtualization,
+/// exactly one — the GVM's — with it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CtxId(pub usize);
+
+/// Operation handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OpId(pub usize);
+
+/// One asynchronous GPU operation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OpKind {
+    /// Host-to-device transfer of `bytes`.
+    H2d { bytes: u64 },
+    /// Kernel launch: `blocks` thread blocks, `t_comp_ms` standalone time.
+    Kernel { blocks: u32, t_comp_ms: f64 },
+    /// Device-to-host transfer of `bytes`.
+    D2h { bytes: u64 },
+}
+
+impl OpKind {
+    /// True for kernel launches.
+    pub fn is_kernel(&self) -> bool {
+        matches!(self, OpKind::Kernel { .. })
+    }
+}

@@ -1,0 +1,818 @@
+//! The discrete-event engine. See module docs in `mod.rs` for semantics.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use super::trace::{OpTrace, Trace};
+use super::{CtxId, OpId, OpKind, StreamId};
+use crate::config::{DepcheckSemantics, DeviceConfig};
+use crate::{Error, Result};
+
+/// Simulation clock time in milliseconds.
+type Ms = f64;
+
+#[derive(Debug, Clone)]
+struct Ctx {
+    preinitialized: bool,
+    /// Ops not yet completed (for context retirement).
+    remaining_ops: usize,
+    /// Time from which this context may issue work (set at activation).
+    active_from: Option<Ms>,
+}
+
+#[derive(Debug, Clone)]
+struct Stream {
+    ctx: CtxId,
+    /// Last op enqueued on this stream (the implicit dependency).
+    last_op: Option<OpId>,
+}
+
+#[derive(Debug, Clone)]
+struct Op {
+    kind: OpKind,
+    stream: StreamId,
+    ctx: CtxId,
+    /// Same-stream predecessor; must complete before this op starts.
+    pred: Option<OpId>,
+    /// Global enqueue index — the hardware work queue position.
+    enq_idx: usize,
+    start: Option<Ms>,
+    end: Option<Ms>,
+    // Kernel-only bookkeeping.
+    blocks_to_dispatch: u32,
+    blocks_outstanding: u32,
+    launched: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Event {
+    /// H2D copy finished.
+    H2dDone(OpId),
+    /// D2H copy finished.
+    D2hDone(OpId),
+    /// A wave of `count` blocks of kernel `op` finished.
+    BlocksDone(OpId, u32),
+    /// Context became active (init, if any, already accounted).
+    CtxReady(CtxId),
+}
+
+/// Heap entry ordered by time (min-heap via `Reverse`); `seq` breaks ties
+/// deterministically in insertion order.
+#[derive(Debug, Clone, Copy)]
+struct Scheduled {
+    time: Ms,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .partial_cmp(&other.time)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Result of draining a simulation.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Makespan: completion time of the last op (ms).
+    pub total_ms: f64,
+    /// Per-op timings, indexed by `OpId`.
+    pub trace: Trace,
+}
+
+/// The simulator. Build, enqueue, [`GpuSim::run`].
+#[derive(Debug)]
+pub struct GpuSim {
+    cfg: DeviceConfig,
+    ctxs: Vec<Ctx>,
+    streams: Vec<Stream>,
+    ops: Vec<Op>,
+    /// Enqueue order of context first-use (contexts execute in this order).
+    ctx_order: Vec<CtxId>,
+}
+
+impl GpuSim {
+    /// New simulator over the given device model.
+    pub fn new(cfg: DeviceConfig) -> Self {
+        Self {
+            cfg,
+            ctxs: Vec::new(),
+            streams: Vec::new(),
+            ops: Vec::new(),
+            ctx_order: Vec::new(),
+        }
+    }
+
+    /// Device configuration in use.
+    pub fn config(&self) -> &DeviceConfig {
+        &self.cfg
+    }
+
+    /// Create a context that will pay `t_init_ms` on first activation —
+    /// the per-process context of the no-virtualization baseline.
+    pub fn create_context(&mut self) -> CtxId {
+        self.push_ctx(false)
+    }
+
+    /// Create a context whose initialization cost is already sunk — the
+    /// GVM daemon's long-lived context (T_init hidden, §4.2.3).
+    pub fn create_context_preinitialized(&mut self) -> CtxId {
+        self.push_ctx(true)
+    }
+
+    fn push_ctx(&mut self, preinitialized: bool) -> CtxId {
+        let id = CtxId(self.ctxs.len());
+        self.ctxs.push(Ctx {
+            preinitialized,
+            remaining_ops: 0,
+            active_from: None,
+        });
+        id
+    }
+
+    /// Create a stream within a context (a CUDA stream).
+    pub fn stream(&mut self, ctx: CtxId) -> StreamId {
+        assert!(ctx.0 < self.ctxs.len(), "unknown context");
+        let id = StreamId(self.streams.len());
+        self.streams.push(Stream {
+            ctx,
+            last_op: None,
+        });
+        id
+    }
+
+    /// Enqueue an async op on a stream; returns its handle.  Enqueue order
+    /// across all streams defines the hardware work-queue order.
+    pub fn enqueue(&mut self, stream: StreamId, kind: OpKind) -> OpId {
+        let s = &self.streams[stream.0];
+        let ctx = s.ctx;
+        let pred = s.last_op;
+        let enq_idx = self.ops.len();
+        let id = OpId(enq_idx);
+        let (btd, _) = match kind {
+            OpKind::Kernel { blocks, .. } => (blocks.max(1), 0),
+            _ => (0, 0),
+        };
+        self.ops.push(Op {
+            kind,
+            stream,
+            ctx,
+            pred,
+            enq_idx,
+            start: None,
+            end: None,
+            blocks_to_dispatch: btd,
+            blocks_outstanding: 0,
+            launched: false,
+        });
+        self.streams[stream.0].last_op = Some(id);
+        self.ctxs[ctx.0].remaining_ops += 1;
+        if !self.ctx_order.contains(&ctx) {
+            self.ctx_order.push(ctx);
+        }
+        id
+    }
+
+    /// Drain all enqueued work; returns the makespan and per-op trace.
+    ///
+    /// Consumes the enqueued workload: the simulator can be reused by
+    /// enqueuing again after `run` (state is reset).
+    pub fn run(&mut self) -> Result<SimReport> {
+        if self.ops.is_empty() {
+            return Ok(SimReport {
+                total_ms: 0.0,
+                trace: Trace::default(),
+            });
+        }
+        let report = Engine::new(self)?.drain()?;
+        // Reset for reuse.
+        for op in &mut self.ops {
+            op.start = None;
+            op.end = None;
+        }
+        Ok(report)
+    }
+}
+
+/// Per-run mutable engine state, borrowed from the sim definition.
+struct Engine<'a> {
+    cfg: DeviceConfig,
+    ops: Vec<Op>,
+    ctxs: Vec<Ctx>,
+    ctx_order: Vec<CtxId>,
+    active_ctx_pos: usize,
+    now: Ms,
+    seq: u64,
+    heap: BinaryHeap<Reverse<Scheduled>>,
+    h2d_fifo: VecDeque<OpId>,
+    d2h_fifo: VecDeque<OpId>,
+    kernel_fifo: VecDeque<OpId>,
+    h2d_busy: bool,
+    d2h_busy: bool,
+    free_slots: usize,
+    resident_kernels: usize,
+    /// Enqueue indices of dep-check ops whose check has not completed,
+    /// ascending (they are pushed in enqueue order).
+    pending_checks: VecDeque<usize>,
+    /// Kernels not yet started (for `DepcheckSemantics::Started`), asc.
+    unstarted_kernels: VecDeque<usize>,
+    /// Kernels not yet completed (for `Completed`), ascending enq idx.
+    uncompleted_kernels: Vec<usize>,
+    makespan: Ms,
+    _marker: std::marker::PhantomData<&'a ()>,
+}
+
+impl<'a> Engine<'a> {
+    fn new(sim: &'a mut GpuSim) -> Result<Self> {
+        let cfg = sim.cfg.clone();
+        let ops = sim.ops.clone();
+        let ctxs = sim.ctxs.clone();
+        let ctx_order = sim.ctx_order.clone();
+
+        let mut h2d_fifo = VecDeque::new();
+        let mut d2h_fifo = VecDeque::new();
+        let mut kernel_fifo = VecDeque::new();
+        let mut pending_checks = VecDeque::new();
+        let mut unstarted = VecDeque::new();
+        let mut uncompleted = Vec::new();
+        for (i, op) in ops.iter().enumerate() {
+            match op.kind {
+                OpKind::H2d { .. } => h2d_fifo.push_back(OpId(i)),
+                OpKind::D2h { .. } => d2h_fifo.push_back(OpId(i)),
+                OpKind::Kernel { .. } => {
+                    kernel_fifo.push_back(OpId(i));
+                    unstarted.push_back(i);
+                    uncompleted.push(i);
+                }
+            }
+            // A dep-check op: its stream predecessor is a kernel (§4.2.1).
+            if let Some(pred) = op.pred {
+                if ops[pred.0].kind.is_kernel() && !op.kind.is_kernel() {
+                    pending_checks.push_back(i);
+                }
+            }
+        }
+
+        let free_slots = cfg.block_capacity();
+        let mut eng = Self {
+            cfg,
+            ops,
+            ctxs,
+            ctx_order,
+            active_ctx_pos: 0,
+            now: 0.0,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            h2d_fifo,
+            d2h_fifo,
+            kernel_fifo,
+            h2d_busy: false,
+            d2h_busy: false,
+            free_slots,
+            resident_kernels: 0,
+            pending_checks,
+            unstarted_kernels: unstarted,
+            uncompleted_kernels: uncompleted,
+            makespan: 0.0,
+            _marker: std::marker::PhantomData,
+        };
+        eng.activate_ctx(0, 0.0)?;
+        Ok(eng)
+    }
+
+    fn push_event(&mut self, time: Ms, event: Event) {
+        self.seq += 1;
+        self.heap.push(Reverse(Scheduled {
+            time,
+            seq: self.seq,
+            event,
+        }));
+    }
+
+    /// Schedule activation of the `pos`-th context at `from` (plus init).
+    fn activate_ctx(&mut self, pos: usize, from: Ms) -> Result<()> {
+        if pos >= self.ctx_order.len() {
+            return Ok(());
+        }
+        let ctx = self.ctx_order[pos];
+        let init = if self.ctxs[ctx.0].preinitialized {
+            0.0
+        } else {
+            self.cfg.t_init_ms
+        };
+        let at = from + init;
+        self.ctxs[ctx.0].active_from = Some(at);
+        self.push_event(at, Event::CtxReady(ctx));
+        Ok(())
+    }
+
+    fn ctx_active(&self, ctx: CtxId) -> bool {
+        self.active_ctx_pos < self.ctx_order.len()
+            && self.ctx_order[self.active_ctx_pos] == ctx
+            && self.ctxs[ctx.0]
+                .active_from
+                .map(|t| t <= self.now + 1e-12)
+                .unwrap_or(false)
+    }
+
+    fn pred_done(&self, op: &Op) -> bool {
+        op.pred.map(|p| self.ops[p.0].end.is_some()).unwrap_or(true)
+    }
+
+    /// Fermi rule 1: may this dep-check op start, w.r.t. earlier kernels?
+    fn rule1_ok(&self, op: &Op) -> bool {
+        let gate = match self.cfg.depcheck {
+            DepcheckSemantics::Started => self.unstarted_kernels.front(),
+            DepcheckSemantics::Completed => self.uncompleted_kernels.first(),
+        };
+        match gate {
+            Some(&idx) => idx > op.enq_idx,
+            None => true,
+        }
+    }
+
+    /// Fermi rule 2: may this kernel launch, w.r.t. earlier dep-checks?
+    fn rule2_ok(&self, op: &Op) -> bool {
+        match self.pending_checks.front() {
+            Some(&idx) => idx > op.enq_idx,
+            None => true,
+        }
+    }
+
+    /// A dep-check completes when the checked kernel (its stream
+    /// predecessor) has completed.
+    fn check_complete(&self, check_idx: usize) -> bool {
+        let op = &self.ops[check_idx];
+        self.pred_done(op)
+    }
+
+    fn retire_completed_checks(&mut self) {
+        while let Some(&idx) = self.pending_checks.front() {
+            if self.check_complete(idx) {
+                self.pending_checks.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Try to start work on every engine. Called after each event.
+    fn dispatch(&mut self) -> Result<()> {
+        self.retire_completed_checks();
+        self.dispatch_h2d();
+        self.dispatch_d2h();
+        self.dispatch_compute();
+        Ok(())
+    }
+
+    fn dispatch_h2d(&mut self) {
+        if self.h2d_busy {
+            return;
+        }
+        let Some(&id) = self.h2d_fifo.front() else {
+            return;
+        };
+        let op = &self.ops[id.0];
+        if !self.ctx_active(op.ctx) || !self.pred_done(op) {
+            return;
+        }
+        let dur = match op.kind {
+            OpKind::H2d { bytes } => bytes as f64 / self.cfg.h2d_bytes_per_ms,
+            _ => unreachable!(),
+        };
+        self.h2d_fifo.pop_front();
+        self.ops[id.0].start = Some(self.now);
+        self.h2d_busy = true;
+        self.push_event(self.now + dur, Event::H2dDone(id));
+    }
+
+    fn dispatch_d2h(&mut self) {
+        if self.d2h_busy {
+            return;
+        }
+        let Some(&id) = self.d2h_fifo.front() else {
+            return;
+        };
+        let op = &self.ops[id.0];
+        if !self.ctx_active(op.ctx) || !self.pred_done(op) || !self.rule1_ok(op) {
+            return;
+        }
+        let dur = match op.kind {
+            OpKind::D2h { bytes } => bytes as f64 / self.cfg.d2h_bytes_per_ms,
+            _ => unreachable!(),
+        };
+        self.d2h_fifo.pop_front();
+        self.ops[id.0].start = Some(self.now);
+        self.d2h_busy = true;
+        self.push_event(self.now + dur, Event::D2hDone(id));
+    }
+
+    fn dispatch_compute(&mut self) {
+        // The single hardware work queue: head-of-line, in-order dispatch.
+        loop {
+            let Some(&id) = self.kernel_fifo.front() else {
+                return;
+            };
+            let (ctx, launched) = (self.ops[id.0].ctx, self.ops[id.0].launched);
+            if !self.ctx_active(ctx)
+                || !self.pred_done(&self.ops[id.0])
+                || !self.rule2_ok(&self.ops[id.0])
+            {
+                return;
+            }
+            if !launched && self.resident_kernels >= self.cfg.max_concurrent_kernels {
+                return;
+            }
+            if self.free_slots == 0 {
+                return;
+            }
+            // Dispatch as many blocks of the head kernel as fit, as one
+            // wave event (uniform block duration).
+            let t_block = {
+                let op = &self.ops[id.0];
+                match op.kind {
+                    OpKind::Kernel { blocks, t_comp_ms } => {
+                        let cap = self.cfg.block_capacity() as u32;
+                        let waves = blocks.max(1).div_ceil(cap).max(1);
+                        t_comp_ms / waves as f64
+                    }
+                    _ => unreachable!(),
+                }
+            };
+            let op = &mut self.ops[id.0];
+            let n = op.blocks_to_dispatch.min(self.free_slots as u32);
+            debug_assert!(n > 0);
+            op.blocks_to_dispatch -= n;
+            op.blocks_outstanding += n;
+            if !op.launched {
+                op.launched = true;
+                op.start = Some(self.now);
+                self.resident_kernels += 1;
+                // Kernel has started: retire from unstarted list.
+                if let Some(pos) = self
+                    .unstarted_kernels
+                    .iter()
+                    .position(|&k| k == op.enq_idx)
+                {
+                    self.unstarted_kernels.remove(pos);
+                }
+            }
+            self.free_slots -= n as usize;
+            let fully_dispatched = op.blocks_to_dispatch == 0;
+            self.push_event(self.now + t_block, Event::BlocksDone(id, n));
+            if fully_dispatched {
+                self.kernel_fifo.pop_front();
+                // Try the next kernel in the queue with remaining slots.
+                continue;
+            }
+            return; // out of slots for this kernel
+        }
+    }
+
+    fn complete_op(&mut self, id: OpId) -> Result<()> {
+        self.ops[id.0].end = Some(self.now);
+        self.makespan = self.makespan.max(self.now);
+        let ctx = self.ops[id.0].ctx;
+        let c = &mut self.ctxs[ctx.0];
+        c.remaining_ops -= 1;
+        if c.remaining_ops == 0 {
+            // Context retired: switch to the next one.
+            self.active_ctx_pos += 1;
+            if self.active_ctx_pos < self.ctx_order.len() {
+                let from = self.now + self.cfg.t_ctx_switch_ms;
+                self.activate_ctx(self.active_ctx_pos, from)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn drain(mut self) -> Result<SimReport> {
+        self.dispatch()?;
+        while let Some(Reverse(sch)) = self.heap.pop() {
+            self.now = sch.time.max(self.now);
+            match sch.event {
+                Event::H2dDone(id) => {
+                    self.h2d_busy = false;
+                    self.complete_op(id)?;
+                }
+                Event::D2hDone(id) => {
+                    self.d2h_busy = false;
+                    self.complete_op(id)?;
+                }
+                Event::BlocksDone(id, n) => {
+                    self.free_slots += n as usize;
+                    let op = &mut self.ops[id.0];
+                    op.blocks_outstanding -= n;
+                    if op.blocks_outstanding == 0 && op.blocks_to_dispatch == 0 {
+                        self.resident_kernels -= 1;
+                        // Kernel completed: retire from uncompleted list.
+                        if let Some(pos) = self
+                            .uncompleted_kernels
+                            .iter()
+                            .position(|&k| k == op.enq_idx)
+                        {
+                            self.uncompleted_kernels.remove(pos);
+                        }
+                        self.complete_op(id)?;
+                    }
+                }
+                Event::CtxReady(_) => {}
+            }
+            self.dispatch()?;
+        }
+        // All ops must have completed; otherwise the workload deadlocked.
+        if let Some((i, _)) = self
+            .ops
+            .iter()
+            .enumerate()
+            .find(|(_, o)| o.end.is_none())
+        {
+            return Err(Error::Sim(format!(
+                "deadlock: op {i} never completed (enqueue bug or \
+                 inconsistent dependency graph)"
+            )));
+        }
+        let trace = Trace {
+            ops: self
+                .ops
+                .iter()
+                .map(|o| OpTrace {
+                    kind: o.kind,
+                    stream: o.stream,
+                    ctx: o.ctx,
+                    enq_idx: o.enq_idx,
+                    start_ms: o.start.unwrap(),
+                    end_ms: o.end.unwrap(),
+                })
+                .collect(),
+        };
+        Ok(SimReport {
+            total_ms: self.makespan,
+            trace,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceConfig;
+
+    fn dev() -> DeviceConfig {
+        DeviceConfig {
+            h2d_bytes_per_ms: 1000.0, // 1 byte = 1 us
+            d2h_bytes_per_ms: 1000.0,
+            t_init_ms: 5.0,
+            t_ctx_switch_ms: 2.0,
+            ..DeviceConfig::idealized()
+        }
+    }
+
+    #[test]
+    fn empty_run_is_zero() {
+        let mut sim = GpuSim::new(dev());
+        let r = sim.run().unwrap();
+        assert_eq!(r.total_ms, 0.0);
+    }
+
+    #[test]
+    fn single_stream_sequence() {
+        let mut sim = GpuSim::new(dev());
+        let ctx = sim.create_context_preinitialized();
+        let s = sim.stream(ctx);
+        sim.enqueue(s, OpKind::H2d { bytes: 1000 }); // 1 ms
+        sim.enqueue(
+            s,
+            OpKind::Kernel {
+                blocks: 1,
+                t_comp_ms: 3.0,
+            },
+        );
+        sim.enqueue(s, OpKind::D2h { bytes: 2000 }); // 2 ms
+        let r = sim.run().unwrap();
+        assert!((r.total_ms - 6.0).abs() < 1e-9, "total={}", r.total_ms);
+    }
+
+    #[test]
+    fn init_cost_charged_for_plain_context() {
+        let mut sim = GpuSim::new(dev());
+        let ctx = sim.create_context();
+        let s = sim.stream(ctx);
+        sim.enqueue(s, OpKind::H2d { bytes: 1000 });
+        let r = sim.run().unwrap();
+        assert!((r.total_ms - 6.0).abs() < 1e-9); // 5 init + 1 copy
+    }
+
+    #[test]
+    fn h2d_copies_serialize() {
+        let mut sim = GpuSim::new(dev());
+        let ctx = sim.create_context_preinitialized();
+        let s1 = sim.stream(ctx);
+        let s2 = sim.stream(ctx);
+        sim.enqueue(s1, OpKind::H2d { bytes: 1000 });
+        sim.enqueue(s2, OpKind::H2d { bytes: 1000 });
+        let r = sim.run().unwrap();
+        assert!((r.total_ms - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn h2d_d2h_overlap() {
+        // Opposite-direction transfers on different streams overlap.
+        let mut sim = GpuSim::new(dev());
+        let ctx = sim.create_context_preinitialized();
+        let s1 = sim.stream(ctx);
+        let s2 = sim.stream(ctx);
+        sim.enqueue(s1, OpKind::H2d { bytes: 4000 });
+        sim.enqueue(s2, OpKind::D2h { bytes: 4000 });
+        let r = sim.run().unwrap();
+        assert!((r.total_ms - 4.0).abs() < 1e-9, "total={}", r.total_ms);
+    }
+
+    #[test]
+    fn small_kernels_run_concurrently() {
+        let mut sim = GpuSim::new(dev());
+        let ctx = sim.create_context_preinitialized();
+        for _ in 0..8 {
+            let s = sim.stream(ctx);
+            sim.enqueue(
+                s,
+                OpKind::Kernel {
+                    blocks: 4,
+                    t_comp_ms: 10.0,
+                },
+            );
+        }
+        let r = sim.run().unwrap();
+        assert!((r.total_ms - 10.0).abs() < 1e-9, "total={}", r.total_ms);
+    }
+
+    #[test]
+    fn full_device_kernels_serialize() {
+        let mut cfg = dev();
+        cfg.n_sms = 14;
+        cfg.blocks_per_sm = 8;
+        let cap = cfg.block_capacity() as u32;
+        let mut sim = GpuSim::new(cfg);
+        let ctx = sim.create_context_preinitialized();
+        for _ in 0..2 {
+            let s = sim.stream(ctx);
+            sim.enqueue(
+                s,
+                OpKind::Kernel {
+                    blocks: cap,
+                    t_comp_ms: 10.0,
+                },
+            );
+        }
+        let r = sim.run().unwrap();
+        assert!((r.total_ms - 20.0).abs() < 1e-9, "total={}", r.total_ms);
+    }
+
+    #[test]
+    fn contexts_serialize_with_switch_cost() {
+        let mut sim = GpuSim::new(dev());
+        let c1 = sim.create_context();
+        let c2 = sim.create_context();
+        let s1 = sim.stream(c1);
+        let s2 = sim.stream(c2);
+        sim.enqueue(
+            s1,
+            OpKind::Kernel {
+                blocks: 1,
+                t_comp_ms: 3.0,
+            },
+        );
+        sim.enqueue(
+            s2,
+            OpKind::Kernel {
+                blocks: 1,
+                t_comp_ms: 3.0,
+            },
+        );
+        let r = sim.run().unwrap();
+        // 5 init + 3 comp + 2 switch + 5 init + 3 comp = 18
+        assert!((r.total_ms - 18.0).abs() < 1e-9, "total={}", r.total_ms);
+    }
+
+    #[test]
+    fn started_semantics_lets_d2h_overlap_tail_kernels() {
+        // PS-1 shape: S1 S2 K1 K2 R1. Under `Completed`, R1 waits for K2
+        // to finish; under `Started` it only waits for K2 to start.
+        let build = |depcheck| {
+            let mut cfg = dev();
+            cfg.depcheck = depcheck;
+            let mut sim = GpuSim::new(cfg);
+            let ctx = sim.create_context_preinitialized();
+            let s1 = sim.stream(ctx);
+            let s2 = sim.stream(ctx);
+            sim.enqueue(s1, OpKind::H2d { bytes: 1000 }); // 1ms
+            sim.enqueue(s2, OpKind::H2d { bytes: 1000 }); // 1ms
+            sim.enqueue(
+                s1,
+                OpKind::Kernel {
+                    blocks: 1,
+                    t_comp_ms: 4.0,
+                },
+            );
+            sim.enqueue(
+                s2,
+                OpKind::Kernel {
+                    blocks: 1,
+                    t_comp_ms: 10.0,
+                },
+            );
+            sim.enqueue(s1, OpKind::D2h { bytes: 1000 }); // 1ms
+            sim.run().unwrap().total_ms
+        };
+        // Completed: R1 at max(K1 end=6, K2 end=12) = 12 -> total 13.
+        let completed =
+            build(crate::config::DepcheckSemantics::Completed);
+        assert!((completed - 13.0).abs() < 1e-9, "completed={completed}");
+        // Started: R1 at max(K1 end=6, K2 start=2) = 6 -> K2 ends at 12.
+        let started = build(crate::config::DepcheckSemantics::Started);
+        assert!((started - 12.0).abs() < 1e-9, "started={started}");
+    }
+
+    #[test]
+    fn concurrent_kernel_cap_enforced() {
+        let mut cfg = dev();
+        cfg.max_concurrent_kernels = 2;
+        let mut sim = GpuSim::new(cfg);
+        let ctx = sim.create_context_preinitialized();
+        for _ in 0..4 {
+            let s = sim.stream(ctx);
+            sim.enqueue(
+                s,
+                OpKind::Kernel {
+                    blocks: 1,
+                    t_comp_ms: 10.0,
+                },
+            );
+        }
+        // 4 kernels, 2 at a time -> 2 waves of 10ms.
+        let r = sim.run().unwrap();
+        assert!((r.total_ms - 20.0).abs() < 1e-9, "total={}", r.total_ms);
+    }
+
+    #[test]
+    fn multiple_streams_share_one_baseline_context() {
+        // Two streams in the SAME context serialize against a second
+        // context, not against each other.
+        let mut sim = GpuSim::new(dev());
+        let c1 = sim.create_context();
+        let s1a = sim.stream(c1);
+        let s1b = sim.stream(c1);
+        sim.enqueue(
+            s1a,
+            OpKind::Kernel {
+                blocks: 1,
+                t_comp_ms: 4.0,
+            },
+        );
+        sim.enqueue(
+            s1b,
+            OpKind::Kernel {
+                blocks: 1,
+                t_comp_ms: 4.0,
+            },
+        );
+        let c2 = sim.create_context();
+        let s2 = sim.stream(c2);
+        sim.enqueue(
+            s2,
+            OpKind::Kernel {
+                blocks: 1,
+                t_comp_ms: 4.0,
+            },
+        );
+        let r = sim.run().unwrap();
+        // ctx1: init 5 + 4 (both kernels concurrent) = 9;
+        // switch 2; ctx2: init 5 + 4 -> total 20.
+        assert!((r.total_ms - 20.0).abs() < 1e-9, "total={}", r.total_ms);
+    }
+
+    #[test]
+    fn deadlock_free_reuse() {
+        let mut sim = GpuSim::new(dev());
+        let ctx = sim.create_context_preinitialized();
+        let s = sim.stream(ctx);
+        sim.enqueue(s, OpKind::H2d { bytes: 500 });
+        let r1 = sim.run().unwrap();
+        let r2 = sim.run().unwrap();
+        assert_eq!(r1.total_ms, r2.total_ms);
+    }
+}

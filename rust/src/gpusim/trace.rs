@@ -1,0 +1,194 @@
+//! Per-op timing traces emitted by the simulator — consumed by tests
+//! (invariant checking), the harness (figure series), and debugging.
+
+use super::{CtxId, OpKind, StreamId};
+
+/// Timing record for one completed op.
+#[derive(Debug, Clone)]
+pub struct OpTrace {
+    /// What ran.
+    pub kind: OpKind,
+    /// Stream it ran on.
+    pub stream: StreamId,
+    /// Context it belonged to.
+    pub ctx: CtxId,
+    /// Hardware work-queue position.
+    pub enq_idx: usize,
+    /// Dispatch time (ms since sim start).
+    pub start_ms: f64,
+    /// Completion time.
+    pub end_ms: f64,
+}
+
+impl OpTrace {
+    /// Op duration.
+    pub fn dur_ms(&self) -> f64 {
+        self.end_ms - self.start_ms
+    }
+}
+
+/// All op traces of one simulation run, in enqueue order.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// Op records, indexed by `OpId`.
+    pub ops: Vec<OpTrace>,
+}
+
+impl Trace {
+    /// Completion time of the last op on `stream` (the per-process
+    /// turnaround contribution inside the device).
+    pub fn stream_end_ms(&self, stream: StreamId) -> f64 {
+        self.ops
+            .iter()
+            .filter(|o| o.stream == stream)
+            .map(|o| o.end_ms)
+            .fold(0.0, f64::max)
+    }
+
+    /// Total bytes moved host->device.
+    pub fn h2d_bytes(&self) -> u64 {
+        self.ops
+            .iter()
+            .filter_map(|o| match o.kind {
+                OpKind::H2d { bytes } => Some(bytes),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Total bytes moved device->host.
+    pub fn d2h_bytes(&self) -> u64 {
+        self.ops
+            .iter()
+            .filter_map(|o| match o.kind {
+                OpKind::D2h { bytes } => Some(bytes),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Busy time of the compute engine (union of kernel intervals).
+    pub fn compute_busy_ms(&self) -> f64 {
+        let mut ivals: Vec<(f64, f64)> = self
+            .ops
+            .iter()
+            .filter(|o| o.kind.is_kernel())
+            .map(|o| (o.start_ms, o.end_ms))
+            .collect();
+        ivals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut busy = 0.0;
+        let mut cur: Option<(f64, f64)> = None;
+        for (s, e) in ivals {
+            match cur {
+                None => cur = Some((s, e)),
+                Some((cs, ce)) => {
+                    if s <= ce {
+                        cur = Some((cs, ce.max(e)));
+                    } else {
+                        busy += ce - cs;
+                        cur = Some((s, e));
+                    }
+                }
+            }
+        }
+        if let Some((cs, ce)) = cur {
+            busy += ce - cs;
+        }
+        busy
+    }
+
+    /// Export as Chrome trace-event JSON (load in `chrome://tracing` or
+    /// Perfetto).  Rows (tids): one per engine-ish lane — H2D, D2H, and
+    /// one per stream for kernels; pid = context.
+    pub fn to_chrome_trace_json(&self) -> String {
+        let mut out = String::from("[\n");
+        let mut first = true;
+        for o in &self.ops {
+            let (name, tid) = match o.kind {
+                OpKind::H2d { bytes } => (format!("H2D {bytes}B"), 0u64),
+                OpKind::D2h { bytes } => (format!("D2H {bytes}B"), 1u64),
+                OpKind::Kernel { blocks, .. } => {
+                    (format!("kernel[{blocks}blk]"), 10 + o.stream.0 as u64)
+                }
+            };
+            if !first {
+                out.push_str(",\n");
+            }
+            first = false;
+            // ts/dur are microseconds in the trace-event format.
+            out.push_str(&format!(
+                "  {{\"name\": \"{name}\", \"ph\": \"X\", \
+                 \"ts\": {:.3}, \"dur\": {:.3}, \
+                 \"pid\": {}, \"tid\": {tid}, \
+                 \"args\": {{\"stream\": {}, \"enq_idx\": {}}}}}",
+                o.start_ms * 1e3,
+                o.dur_ms() * 1e3,
+                o.ctx.0,
+                o.stream.0,
+                o.enq_idx
+            ));
+        }
+        out.push_str("\n]\n");
+        out
+    }
+
+    /// Render a compact timeline for debugging.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (i, o) in self.ops.iter().enumerate() {
+            let kind = match o.kind {
+                OpKind::H2d { bytes } => format!("H2D({bytes}B)"),
+                OpKind::D2h { bytes } => format!("D2H({bytes}B)"),
+                OpKind::Kernel { blocks, .. } => format!("K({blocks}blk)"),
+            };
+            out.push_str(&format!(
+                "op{i:<4} s{:<3} ctx{:<3} {kind:<16} [{:10.3} .. {:10.3}]\n",
+                o.stream.0, o.ctx.0, o.start_ms, o.end_ms
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(kind: OpKind, stream: usize, s: f64, e: f64) -> OpTrace {
+        OpTrace {
+            kind,
+            stream: StreamId(stream),
+            ctx: CtxId(0),
+            enq_idx: 0,
+            start_ms: s,
+            end_ms: e,
+        }
+    }
+
+    #[test]
+    fn busy_union_merges_overlaps() {
+        let tr = Trace {
+            ops: vec![
+                t(OpKind::Kernel { blocks: 1, t_comp_ms: 1.0 }, 0, 0.0, 5.0),
+                t(OpKind::Kernel { blocks: 1, t_comp_ms: 1.0 }, 1, 3.0, 8.0),
+                t(OpKind::Kernel { blocks: 1, t_comp_ms: 1.0 }, 2, 10.0, 11.0),
+            ],
+        };
+        assert!((tr.compute_busy_ms() - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stream_end() {
+        let tr = Trace {
+            ops: vec![
+                t(OpKind::H2d { bytes: 8 }, 0, 0.0, 1.0),
+                t(OpKind::D2h { bytes: 8 }, 0, 2.0, 3.0),
+                t(OpKind::H2d { bytes: 8 }, 1, 0.0, 9.0),
+            ],
+        };
+        assert_eq!(tr.stream_end_ms(StreamId(0)), 3.0);
+        assert_eq!(tr.stream_end_ms(StreamId(1)), 9.0);
+        assert_eq!(tr.h2d_bytes(), 16);
+        assert_eq!(tr.d2h_bytes(), 8);
+    }
+}

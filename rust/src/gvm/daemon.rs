@@ -1,0 +1,377 @@
+//! The GVM daemon loop: request queue, SPMD barrier, batch execution.
+//!
+//! One thread owns the VGPU table and drives the lifecycle of Fig. 13:
+//! clients' messages arrive through an mpsc command queue (the POSIX
+//! message-queue analogue); data rides in the messages into per-client
+//! segments (the POSIX shared-memory analogue); the daemon flushes a
+//! *batch* of queued jobs when the SPMD barrier fills — all registered
+//! clients have issued `STR` — or the barrier window times out, then
+//! plans the batch (PS-1/PS-2 per §4.2.3) and executes it through the
+//! PJRT device thread.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::plan::Job;
+use super::scheduler::{plan_batch, Policy};
+use super::vgpu::{ClientId, VgpuState, VgpuTable};
+use crate::ipc::{ClientMsg, ServerMsg};
+use crate::runtime::ExecHandle;
+use crate::workloads::Suite;
+use crate::{Error, Result};
+
+/// A client command routed to the daemon.
+pub struct Command {
+    /// Sender's id (0 = unregistered; must be a `Req`).
+    pub client: ClientId,
+    /// The message.
+    pub msg: ClientMsg,
+    /// Where the reply goes.
+    pub reply: mpsc::Sender<ServerMsg>,
+}
+
+/// Daemon tunables.
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// SPMD barrier size: flush when this many jobs queue (`None` = all
+    /// currently registered clients).
+    pub barrier: Option<usize>,
+    /// Barrier window: flush a partial batch after this long.
+    pub barrier_timeout: Duration,
+    /// Scheduling policy.
+    pub policy: Policy,
+    /// Per-segment memory budget (sum over clients).
+    pub mem_budget: u64,
+    /// Max registered clients (the VGPU count; paper: `N_processor`).
+    pub max_clients: usize,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        Self {
+            barrier: None,
+            barrier_timeout: Duration::from_millis(50),
+            policy: Policy::default(),
+            mem_budget: 6 * 1024 * 1024 * 1024, // the C2070's 6 GB
+            max_clients: 64,
+        }
+    }
+}
+
+/// Runs the daemon loop until the command channel closes.
+pub struct Daemon {
+    table: VgpuTable,
+    cfg: DaemonConfig,
+    exec: ExecHandle,
+    suite: Suite,
+    /// Clients blocked in STP waiting for their result.
+    waiters: Vec<(ClientId, mpsc::Sender<ServerMsg>)>,
+    /// When the oldest queued-but-unflushed job arrived.
+    barrier_open_since: Option<Instant>,
+    /// Cached artifact names (avoids a device-thread round-trip per STR).
+    artifact_names: Vec<String>,
+    /// Observability counters (served by `ClientMsg::Stats`).
+    stats: NodeStats,
+}
+
+/// Node-level counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NodeStats {
+    /// Batches flushed.
+    pub batches: u64,
+    /// Jobs completed successfully.
+    pub jobs_ok: u64,
+    /// Jobs failed.
+    pub jobs_failed: u64,
+    /// Bytes staged through SND.
+    pub bytes_staged: u64,
+    /// Cumulative device execution time (ms).
+    pub device_ms: f64,
+}
+
+impl Daemon {
+    /// Build a daemon over an executor handle.
+    pub fn new(cfg: DaemonConfig, exec: ExecHandle) -> Self {
+        let artifact_names = exec.names().unwrap_or_default();
+        Self {
+            table: VgpuTable::new(cfg.mem_budget, cfg.max_clients),
+            cfg: cfg.clone(),
+            exec,
+            suite: Suite::paper_defaults(),
+            waiters: Vec::new(),
+            barrier_open_since: None,
+            artifact_names,
+            stats: NodeStats::default(),
+        }
+    }
+
+    /// Serve commands until all senders hang up.
+    pub fn run(mut self, rx: mpsc::Receiver<Command>) {
+        loop {
+            let timeout = self.next_deadline();
+            match rx.recv_timeout(timeout) {
+                Ok(cmd) => {
+                    let reply_tx = cmd.reply.clone();
+                    if let Err(e) = self.handle(cmd) {
+                        let _ = reply_tx.send(ServerMsg::Err { msg: e.to_string() });
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // Barrier window expired: flush what we have.
+                    if let Err(e) = self.flush_batch() {
+                        log::error!("batch flush failed: {e}");
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            // Flush when the barrier fills.
+            if self.barrier_full() {
+                if let Err(e) = self.flush_batch() {
+                    log::error!("batch flush failed: {e}");
+                }
+            }
+        }
+    }
+
+    fn next_deadline(&self) -> Duration {
+        match self.barrier_open_since {
+            Some(t0) => self
+                .cfg
+                .barrier_timeout
+                .checked_sub(t0.elapsed())
+                .unwrap_or(Duration::from_millis(0)),
+            None => Duration::from_secs(3600),
+        }
+    }
+
+    fn barrier_full(&self) -> bool {
+        let queued = self.table.queued_clients().len();
+        if queued == 0 {
+            return false;
+        }
+        let want = self
+            .cfg
+            .barrier
+            .unwrap_or_else(|| self.table.len())
+            .max(1);
+        queued >= want
+    }
+
+    /// Handle one command; `client==0` means pre-registration.
+    fn handle(&mut self, cmd: Command) -> Result<()> {
+        match cmd.msg {
+            ClientMsg::Req { name } => {
+                let id = self.table.register(&name)?;
+                // The id travels back out-of-band via Queued.ticket: the
+                // in-proc/socket adapters assign ids at connect time, so
+                // here we just ACK with the id as a ticket.
+                cmd.reply
+                    .send(ServerMsg::Queued { ticket: id })
+                    .map_err(|_| Error::Ipc("client gone".into()))?;
+            }
+            ClientMsg::Snd { slot, tensor } => {
+                // A SND after Done starts the client's next request
+                // cycle: recycle the VGPU back to Idle first.
+                if matches!(
+                    self.table.get(cmd.client)?.state,
+                    VgpuState::Done { .. } | VgpuState::Failed { .. }
+                ) {
+                    self.table.recycle(cmd.client)?;
+                }
+                self.stats.bytes_staged += tensor.bytes() as u64;
+                self.table.stage(cmd.client, slot, tensor)?;
+                self.ack(&cmd.reply)?;
+            }
+            ClientMsg::Str { workload } => {
+                // Validate eagerly so the client hears about a bad name
+                // at STR time, not at flush time.
+                if self.suite.get(&workload).is_none()
+                    && self.artifact_names.iter().all(|n| n != &workload)
+                {
+                    return Err(Error::Config(format!(
+                        "unknown workload {workload:?}"
+                    )));
+                }
+                let ticket = self.table.queue(cmd.client, &workload)?;
+                if self.barrier_open_since.is_none() {
+                    self.barrier_open_since = Some(Instant::now());
+                }
+                cmd.reply
+                    .send(ServerMsg::Queued { ticket })
+                    .map_err(|_| Error::Ipc("client gone".into()))?;
+            }
+            ClientMsg::Stp => {
+                let v = self.table.get(cmd.client)?;
+                match &v.state {
+                    VgpuState::Done { gpu_ms } => {
+                        let msg = ServerMsg::Done {
+                            gpu_ms: *gpu_ms,
+                            n_outputs: v.out_slots.len() as u32,
+                        };
+                        cmd.reply
+                            .send(msg)
+                            .map_err(|_| Error::Ipc("client gone".into()))?;
+                    }
+                    VgpuState::Queued { .. } => {
+                        // Park until the batch completes.
+                        self.waiters.push((cmd.client, cmd.reply));
+                    }
+                    VgpuState::Failed { msg } => {
+                        let msg = msg.clone();
+                        cmd.reply
+                            .send(ServerMsg::Err { msg })
+                            .map_err(|_| Error::Ipc("client gone".into()))?;
+                    }
+                    VgpuState::Idle => {
+                        return Err(Error::protocol("STP with no job started"));
+                    }
+                }
+            }
+            ClientMsg::Rcv { slot } => {
+                let tensor = self.table.fetch(cmd.client, slot)?;
+                cmd.reply
+                    .send(ServerMsg::Data { tensor })
+                    .map_err(|_| Error::Ipc("client gone".into()))?;
+            }
+            ClientMsg::Rls => {
+                self.table.release(cmd.client)?;
+                self.ack(&cmd.reply)?;
+            }
+            ClientMsg::Stats => {
+                cmd.reply
+                    .send(ServerMsg::Stats {
+                        batches: self.stats.batches,
+                        jobs_ok: self.stats.jobs_ok,
+                        jobs_failed: self.stats.jobs_failed,
+                        bytes_staged: self.stats.bytes_staged,
+                        device_ms: self.stats.device_ms,
+                        clients: self.table.len() as u32,
+                    })
+                    .map_err(|_| Error::Ipc("client gone".into()))?;
+            }
+        }
+        Ok(())
+    }
+
+    fn ack(&self, reply: &mpsc::Sender<ServerMsg>) -> Result<()> {
+        reply
+            .send(ServerMsg::Ack)
+            .map_err(|_| Error::Ipc("client gone".into()))
+    }
+
+    /// Flush the queued batch: plan per §4.2.3 and execute in plan order.
+    fn flush_batch(&mut self) -> Result<()> {
+        self.barrier_open_since = None;
+        let queued = self.table.queued_clients();
+        if queued.is_empty() {
+            return Ok(());
+        }
+
+        // Build jobs: stage profiles come from the suite when known
+        // (paper benchmarks), else a neutral profile from byte counts.
+        let mut jobs = Vec::with_capacity(queued.len());
+        for (idx, (client, workload)) in queued.iter().enumerate() {
+            let (stages, grid) = match self.suite.get(workload) {
+                Some(w) => (w.stages, w.grid),
+                None => {
+                    let v = self.table.get(*client)?;
+                    let in_b: usize = v
+                        .in_slots
+                        .iter()
+                        .flatten()
+                        .map(|t| t.bytes())
+                        .sum();
+                    (
+                        crate::model::StageTimes {
+                            t_in: in_b as f64 / crate::workloads::PCIE_BYTES_PER_MS,
+                            t_comp: 1.0,
+                            t_out: 0.5,
+                        },
+                        64,
+                    )
+                }
+            };
+            let v = self.table.get(*client)?;
+            let in_bytes: u64 = v.in_slots.iter().flatten().map(|t| t.bytes() as u64).sum();
+            jobs.push(Job {
+                idx,
+                workload: workload.clone(),
+                stages,
+                in_bytes,
+                out_bytes: 0,
+                grid,
+            });
+        }
+
+        let plan = plan_batch(jobs, &self.cfg.policy);
+
+        // Execute computes in plan order through the single device
+        // context.  (On the CPU PJRT substrate, SendData/RtrvData are
+        // subsumed by execute(): literals move host<->device inside it.)
+        let order: Vec<usize> = plan
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                super::plan::PlanOp::Compute(j) => Some(*j),
+                _ => None,
+            })
+            .collect();
+        for j in order {
+            let (client, workload) = &queued[j];
+            let artifact = self
+                .suite
+                .get(workload)
+                .and_then(|w| w.artifact)
+                .map(str::to_string)
+                .unwrap_or_else(|| workload.clone());
+            // Per-job failure isolation: a bad job fails alone; the rest
+            // of the SPMD batch still completes.  Inputs are *moved* out
+            // of the segment (not cloned) — the launch consumes them,
+            // halving memory traffic on the large-transfer path (Fig. 18).
+            let result = self
+                .table
+                .take_staged_inputs(*client)
+                .and_then(|inputs| {
+                    let t0 = Instant::now();
+                    let outputs = self.exec.execute(&artifact, inputs)?;
+                    Ok((outputs, t0.elapsed().as_secs_f64() * 1e3))
+                });
+            match result {
+                Ok((outputs, gpu_ms)) => {
+                    self.stats.jobs_ok += 1;
+                    self.stats.device_ms += gpu_ms;
+                    self.table.complete(*client, outputs, gpu_ms)?;
+                }
+                Err(e) => {
+                    log::warn!("job for client {client} failed: {e}");
+                    self.stats.jobs_failed += 1;
+                    self.table.fail(*client, e.to_string())?;
+                }
+            }
+        }
+        self.stats.batches += 1;
+
+        // Wake every parked STP whose job finished.
+        let mut still_waiting = Vec::new();
+        for (client, reply) in self.waiters.drain(..) {
+            match self.table.get(client) {
+                Ok(v) => match &v.state {
+                    VgpuState::Done { gpu_ms } => {
+                        let _ = reply.send(ServerMsg::Done {
+                            gpu_ms: *gpu_ms,
+                            n_outputs: v.out_slots.len() as u32,
+                        });
+                    }
+                    VgpuState::Failed { msg } => {
+                        let _ = reply.send(ServerMsg::Err { msg: msg.clone() });
+                    }
+                    _ => still_waiting.push((client, reply)),
+                },
+                Err(_) => {} // released meanwhile
+            }
+        }
+        self.waiters = still_waiting;
+        Ok(())
+    }
+}
+

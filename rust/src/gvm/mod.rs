@@ -1,0 +1,215 @@
+//! The GPU Virtualization Manager — the paper's core contribution.
+//!
+//! The GVM is a long-lived daemon owning the *single* device context.  It
+//! exposes one **VGPU** per SPMD process, restoring the 1:1
+//! processor/accelerator ratio SPMD needs (§5).  Internally it queues
+//! process requests, applies the SPMD barrier, classifies each batch and
+//! emits it in the model-optimal stream style — PS-1 for
+//! Compute-Intensive, PS-2 for I/O-Intensive (§4.2.3) — then executes on
+//! the device (PJRT for numerics; [`sim_backend`] replays the same plans
+//! on the C2070 simulator for paper-scale timing).
+
+pub mod daemon;
+pub mod plan;
+pub mod scheduler;
+pub mod sim_backend;
+pub mod vgpu;
+
+pub use daemon::{Command, Daemon, DaemonConfig};
+pub use plan::{CtxMode, Job, Plan, PlanOp};
+pub use scheduler::{plan_batch, Policy, StyleRule};
+pub use sim_backend::{simulate, simulate_spmd, BatchTiming};
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::ipc::{ClientMsg, ServerMsg};
+use crate::runtime::{DeviceThread, TensorValue};
+use crate::{Error, Result};
+
+/// Top-level GVM configuration.
+#[derive(Debug, Clone)]
+pub struct GvmConfig {
+    /// Where the AOT artifacts live.
+    pub artifacts_dir: PathBuf,
+    /// Daemon tunables (barrier, policy, budgets).
+    pub daemon: DaemonConfig,
+    /// Artifacts to compile at init (the paper's GVM "prepares the
+    /// kernels to be executed when initialized").
+    pub preload: Vec<String>,
+}
+
+impl Default for GvmConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            daemon: DaemonConfig::default(),
+            preload: Vec::new(),
+        }
+    }
+}
+
+/// A running GVM: device thread + daemon thread.
+pub struct Gvm {
+    cmd_tx: mpsc::Sender<Command>,
+    // Kept alive for the daemon's lifetime.
+    _device: DeviceThread,
+    daemon_join: Option<JoinHandle<()>>,
+    /// Serializes connect() id assignment.
+    _connect_lock: Arc<Mutex<()>>,
+}
+
+impl Gvm {
+    /// Launch the GVM: spin up the PJRT device thread, preload kernels,
+    /// start the daemon loop.
+    pub fn launch(cfg: GvmConfig) -> Result<Self> {
+        let device = DeviceThread::spawn(cfg.artifacts_dir.clone())?;
+        let exec = device.handle();
+        for name in &cfg.preload {
+            exec.preload(name)?;
+        }
+        let (cmd_tx, cmd_rx) = mpsc::channel::<Command>();
+        let daemon = Daemon::new(cfg.daemon.clone(), exec);
+        let daemon_join = std::thread::Builder::new()
+            .name("vgpu-gvm".into())
+            .spawn(move || daemon.run(cmd_rx))?;
+        Ok(Self {
+            cmd_tx,
+            _device: device,
+            daemon_join: Some(daemon_join),
+            _connect_lock: Arc::new(Mutex::new(())),
+        })
+    }
+
+    /// Connect an in-process client (one per emulated SPMD process).
+    /// Performs the `REQ` handshake and returns the VGPU handle.
+    pub fn connect(&self, name: &str) -> Result<crate::api::VgpuClient> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.cmd_tx
+            .send(Command {
+                client: 0,
+                msg: ClientMsg::Req {
+                    name: name.to_string(),
+                },
+                reply: reply_tx,
+            })
+            .map_err(|_| Error::Ipc("GVM daemon is down".into()))?;
+        let id = match reply_rx
+            .recv()
+            .map_err(|_| Error::Ipc("GVM dropped REQ reply".into()))?
+        {
+            ServerMsg::Queued { ticket } => ticket,
+            ServerMsg::Err { msg } => return Err(Error::Protocol(msg)),
+            other => {
+                return Err(Error::Ipc(format!("bad REQ reply: {other:?}")))
+            }
+        };
+        Ok(crate::api::VgpuClient::new_inproc(
+            id,
+            self.cmd_tx.clone(),
+        ))
+    }
+
+    /// Raw command sender (used by the socket server adapter).
+    pub(crate) fn sender(&self) -> mpsc::Sender<Command> {
+        self.cmd_tx.clone()
+    }
+}
+
+impl Drop for Gvm {
+    fn drop(&mut self) {
+        // Closing the command channel ends the daemon loop.
+        let (dead_tx, _) = mpsc::channel();
+        let _ = std::mem::replace(&mut self.cmd_tx, dead_tx);
+        if let Some(j) = self.daemon_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Serve the GVM over a unix socket so *real OS processes* can connect
+/// (the `spmd_node` example).  Blocks the calling thread; each accepted
+/// connection gets a forwarding thread.
+pub fn serve_unix(gvm: &Gvm, socket_path: &std::path::Path) -> Result<()> {
+    use crate::ipc::Framed;
+    let _ = std::fs::remove_file(socket_path);
+    let listener = std::os::unix::net::UnixListener::bind(socket_path)?;
+    log::info!("GVM listening on {}", socket_path.display());
+    for conn in listener.incoming() {
+        let stream = conn?;
+        let cmd_tx = gvm.sender();
+        std::thread::spawn(move || {
+            let mut framed = Framed::new(stream);
+            let mut client_id: u64 = 0;
+            loop {
+                let frame = match framed.recv() {
+                    Ok(Some(f)) => f,
+                    Ok(None) => break,
+                    Err(e) => {
+                        log::warn!("client read error: {e}");
+                        break;
+                    }
+                };
+                let msg = match ClientMsg::decode(&frame) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        log::warn!("client frame decode error: {e}");
+                        break;
+                    }
+                };
+                let is_req = matches!(msg, ClientMsg::Req { .. });
+                let (reply_tx, reply_rx) = mpsc::channel();
+                if cmd_tx
+                    .send(Command {
+                        client: client_id,
+                        msg,
+                        reply: reply_tx,
+                    })
+                    .is_err()
+                {
+                    break;
+                }
+                let reply = match reply_rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => break,
+                };
+                if is_req {
+                    if let ServerMsg::Queued { ticket } = &reply {
+                        client_id = *ticket;
+                    }
+                    // The REQ reply is surfaced to the client as Ack —
+                    // the id stays a server-side detail.
+                    if framed.send(&ServerMsg::Ack.encode()).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+                if framed.send(&reply.encode()).is_err() {
+                    break;
+                }
+            }
+        });
+    }
+    Ok(())
+}
+
+/// Convenience used throughout the harness and examples: run one
+/// request cycle (SND inputs, STR, STP, RCV all outputs) on a client.
+pub fn run_cycle(
+    client: &mut crate::api::VgpuClient,
+    workload: &str,
+    inputs: &[TensorValue],
+) -> Result<(Vec<TensorValue>, f64)> {
+    for (i, t) in inputs.iter().enumerate() {
+        client.snd(i as u32, t.clone())?;
+    }
+    client.str_(workload)?;
+    let done = client.stp()?;
+    let mut outs = Vec::with_capacity(done.n_outputs as usize);
+    for i in 0..done.n_outputs {
+        outs.push(client.rcv(i)?);
+    }
+    Ok((outs, done.gpu_ms))
+}

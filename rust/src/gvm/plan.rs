@@ -1,0 +1,244 @@
+//! Execution plans: the ordered op sequences the GVM emits to the device.
+//!
+//! A [`Plan`] is the materialization of §4.2's stream programming styles:
+//! given one job per SPMD process, PS-1 emits phase-batched ops (all
+//! `Send Data`, then all `Compute`, then all `Rtrv Data` — Listing 1)
+//! while PS-2 emits per-stream sequences (Listing 2).  The no-virt
+//! baseline emits per-process context sessions instead.
+//!
+//! Plans are pure data: the simulator backend replays them against
+//! [`crate::gpusim`] for paper-scale timing, and the real backend replays
+//! them against PJRT for actual numerics.  Plan-shape invariants are
+//! property-tested in `rust/tests/prop_scheduler.rs`.
+
+use crate::model::StageTimes;
+
+/// Identifies one SPMD process's job within a batch (dense 0..N).
+pub type JobIdx = usize;
+
+/// One GPU work item owned by one process.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// Dense index within the batch; maps to a dedicated stream.
+    pub idx: JobIdx,
+    /// Workload name (artifact / profile key).
+    pub workload: String,
+    /// Paper-scale stage costs for the simulator.
+    pub stages: StageTimes,
+    /// H2D bytes (paper scale).
+    pub in_bytes: u64,
+    /// D2H bytes (paper scale).
+    pub out_bytes: u64,
+    /// Kernel grid size in blocks (paper scale).
+    pub grid: u32,
+}
+
+/// One planned device op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanOp {
+    /// Stage input of job (H2D).
+    SendData(JobIdx),
+    /// Launch kernel of job.
+    Compute(JobIdx),
+    /// Retrieve output of job (D2H).
+    RtrvData(JobIdx),
+}
+
+impl PlanOp {
+    /// The job this op belongs to.
+    pub fn job(&self) -> JobIdx {
+        match *self {
+            PlanOp::SendData(j) | PlanOp::Compute(j) | PlanOp::RtrvData(j) => j,
+        }
+    }
+}
+
+/// How jobs are mapped onto device contexts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CtxMode {
+    /// One shared (GVM) context, pre-initialized; jobs get streams.
+    SharedVirtualized,
+    /// One context per job (the no-virtualization baseline, Eq. 1).
+    PerProcess,
+}
+
+/// An ordered op emission plus context mapping: what the GVM enqueues.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Emission order = hardware work-queue order.
+    pub ops: Vec<PlanOp>,
+    /// Context mapping.
+    pub ctx_mode: CtxMode,
+    /// The jobs the plan covers (indexed by `JobIdx`).
+    pub jobs: Vec<Job>,
+}
+
+impl Plan {
+    /// PS-1 (Listing 1): batched phases, kernel-concurrency-first.
+    pub fn ps1(jobs: Vec<Job>) -> Self {
+        let n = jobs.len();
+        let mut ops = Vec::with_capacity(3 * n);
+        ops.extend((0..n).map(PlanOp::SendData));
+        ops.extend((0..n).map(PlanOp::Compute));
+        ops.extend((0..n).map(PlanOp::RtrvData));
+        Self {
+            ops,
+            ctx_mode: CtxMode::SharedVirtualized,
+            jobs,
+        }
+    }
+
+    /// PS-2 (Listing 2): per-stream sequences, I/O-overlap-first.
+    pub fn ps2(jobs: Vec<Job>) -> Self {
+        let n = jobs.len();
+        let mut ops = Vec::with_capacity(3 * n);
+        for j in 0..n {
+            ops.push(PlanOp::SendData(j));
+            ops.push(PlanOp::Compute(j));
+            ops.push(PlanOp::RtrvData(j));
+        }
+        Self {
+            ops,
+            ctx_mode: CtxMode::SharedVirtualized,
+            jobs,
+        }
+    }
+
+    /// No-virtualization baseline: per-process contexts, serialized by
+    /// the device (Fig. 3 / Eq. 1).  Op order is the same as PS-2 but the
+    /// context mapping forces full serialization plus init/switch costs.
+    pub fn no_virt(jobs: Vec<Job>) -> Self {
+        let mut p = Self::ps2(jobs);
+        p.ctx_mode = CtxMode::PerProcess;
+        p
+    }
+
+    /// Number of jobs.
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Check per-job sequential consistency: SendData before Compute
+    /// before RtrvData for every job. (Always true for built-ins; the
+    /// property tests also run this over randomized custom plans.)
+    pub fn is_sequentially_consistent(&self) -> bool {
+        let n = self.jobs.len();
+        let mut seen_send = vec![false; n];
+        let mut seen_comp = vec![false; n];
+        for op in &self.ops {
+            match *op {
+                PlanOp::SendData(j) => {
+                    if seen_comp[j] || seen_send[j] {
+                        return false;
+                    }
+                    seen_send[j] = true;
+                }
+                PlanOp::Compute(j) => {
+                    if !seen_send[j] || seen_comp[j] {
+                        return false;
+                    }
+                    seen_comp[j] = true;
+                }
+                PlanOp::RtrvData(j) => {
+                    if !seen_comp[j] {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Every job appears exactly once per stage.
+    pub fn is_complete(&self) -> bool {
+        let n = self.jobs.len();
+        let mut counts = vec![[0usize; 3]; n];
+        for op in &self.ops {
+            match *op {
+                PlanOp::SendData(j) => counts[j][0] += 1,
+                PlanOp::Compute(j) => counts[j][1] += 1,
+                PlanOp::RtrvData(j) => counts[j][2] += 1,
+            }
+        }
+        counts.iter().all(|c| *c == [1, 1, 1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jobs(n: usize) -> Vec<Job> {
+        (0..n)
+            .map(|idx| Job {
+                idx,
+                workload: "w".into(),
+                stages: StageTimes {
+                    t_in: 1.0,
+                    t_comp: 2.0,
+                    t_out: 1.0,
+                },
+                in_bytes: 100,
+                out_bytes: 50,
+                grid: 4,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ps1_is_phase_batched() {
+        let p = Plan::ps1(jobs(3));
+        let expect = vec![
+            PlanOp::SendData(0),
+            PlanOp::SendData(1),
+            PlanOp::SendData(2),
+            PlanOp::Compute(0),
+            PlanOp::Compute(1),
+            PlanOp::Compute(2),
+            PlanOp::RtrvData(0),
+            PlanOp::RtrvData(1),
+            PlanOp::RtrvData(2),
+        ];
+        assert_eq!(p.ops, expect);
+        assert!(p.is_sequentially_consistent());
+        assert!(p.is_complete());
+    }
+
+    #[test]
+    fn ps2_is_interleaved() {
+        let p = Plan::ps2(jobs(2));
+        let expect = vec![
+            PlanOp::SendData(0),
+            PlanOp::Compute(0),
+            PlanOp::RtrvData(0),
+            PlanOp::SendData(1),
+            PlanOp::Compute(1),
+            PlanOp::RtrvData(1),
+        ];
+        assert_eq!(p.ops, expect);
+        assert!(p.is_sequentially_consistent());
+        assert!(p.is_complete());
+    }
+
+    #[test]
+    fn no_virt_uses_per_process_ctx() {
+        let p = Plan::no_virt(jobs(2));
+        assert_eq!(p.ctx_mode, CtxMode::PerProcess);
+        assert!(p.is_sequentially_consistent());
+    }
+
+    #[test]
+    fn consistency_detects_violation() {
+        let mut p = Plan::ps1(jobs(2));
+        p.ops.swap(0, 2); // Compute(0) before SendData(0)
+        assert!(!p.is_sequentially_consistent());
+    }
+
+    #[test]
+    fn empty_plan_ok() {
+        let p = Plan::ps1(vec![]);
+        assert!(p.is_complete());
+        assert!(p.is_sequentially_consistent());
+        assert_eq!(p.n_jobs(), 0);
+    }
+}

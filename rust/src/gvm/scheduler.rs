@@ -1,0 +1,236 @@
+//! Style selection and batch planning — §4.2.3's scheduling policy.
+//!
+//! The GVM classifies each batch by its kernels' stage profile and picks
+//! the stream programming style the paper's model proves optimal:
+//! **PS-1 for Compute-Intensive** (maximize kernel concurrency, Eq. 2 <
+//! Eq. 3) and **PS-2 for I/O-Intensive** (maximize I/O overlap, Eq. 7 <
+//! Eq. 4).  Intermediate kernels default to PS-1 (MM's partial benefit in
+//! the paper's Fig. 19 analysis).
+
+use super::plan::{Job, Plan};
+use crate::model::{classify, KernelClass, StageTimes, Style};
+
+/// Scheduling policy knobs.
+#[derive(Debug, Clone, Default)]
+pub struct Policy {
+    /// Override style selection (ablation experiments); `None` = use
+    /// `rule`.
+    pub force_style: Option<Style>,
+    /// How the style is chosen when not forced.
+    pub rule: StyleRule,
+}
+
+/// Style-selection rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StyleRule {
+    /// The paper's §4.2.3 policy: classify (C-I / IO-I / Intermediate),
+    /// then PS-1 for C-I & Intermediate, PS-2 for IO-I.
+    #[default]
+    PaperClass,
+    /// This repo's extension (EXPERIMENTS.md §Findings 1): pick by the
+    /// *true* optimality criterion derived from Eqs. (2)/(3):
+    /// PS-1 iff `T_in + T_out <= T_comp`.  Strictly dominates the paper
+    /// policy on borderline C-I kernels.
+    ModelOptimal,
+}
+
+/// Pick the style for a kernel class per the paper's conclusion.
+pub fn style_for_class(class: KernelClass) -> Style {
+    match class {
+        KernelClass::ComputeIntensive | KernelClass::Intermediate => Style::Ps1,
+        KernelClass::IoIntensive => Style::Ps2,
+    }
+}
+
+/// Classify a batch: the dominant class of its jobs (SPMD batches are
+/// homogeneous — same program — so this is normally unanimous; mixed
+/// batches fall back to the class of the largest total compute share).
+pub fn classify_batch(jobs: &[Job]) -> KernelClass {
+    debug_assert!(!jobs.is_empty());
+    let mut weights: [(KernelClass, f64); 3] = [
+        (KernelClass::ComputeIntensive, 0.0),
+        (KernelClass::IoIntensive, 0.0),
+        (KernelClass::Intermediate, 0.0),
+    ];
+    for j in jobs {
+        let c = classify(j.stages);
+        let w = j.stages.t_in + j.stages.t_comp + j.stages.t_out;
+        for slot in weights.iter_mut() {
+            if slot.0 == c {
+                slot.1 += w;
+            }
+        }
+    }
+    weights
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+        .0
+}
+
+/// Style by the model-optimal criterion (see [`StyleRule::ModelOptimal`]).
+pub fn style_model_optimal(st: StageTimes) -> Style {
+    if st.t_in + st.t_out <= st.t_comp {
+        Style::Ps1
+    } else {
+        Style::Ps2
+    }
+}
+
+/// Batch-aggregate stage profile (mean over jobs — SPMD batches are
+/// homogeneous, so this is a no-op there).
+fn batch_stages(jobs: &[Job]) -> StageTimes {
+    let n = jobs.len() as f64;
+    let mut acc = StageTimes {
+        t_in: 0.0,
+        t_comp: 0.0,
+        t_out: 0.0,
+    };
+    for j in jobs {
+        acc.t_in += j.stages.t_in;
+        acc.t_comp += j.stages.t_comp;
+        acc.t_out += j.stages.t_out;
+    }
+    StageTimes {
+        t_in: acc.t_in / n,
+        t_comp: acc.t_comp / n,
+        t_out: acc.t_out / n,
+    }
+}
+
+/// Plan a virtualized batch under the policy.
+pub fn plan_batch(jobs: Vec<Job>, policy: &Policy) -> Plan {
+    if jobs.is_empty() {
+        return Plan::ps1(jobs);
+    }
+    let style = policy.force_style.unwrap_or_else(|| match policy.rule {
+        StyleRule::PaperClass => style_for_class(classify_batch(&jobs)),
+        StyleRule::ModelOptimal => style_model_optimal(batch_stages(&jobs)),
+    });
+    match style {
+        Style::Ps1 => Plan::ps1(jobs),
+        Style::Ps2 => Plan::ps2(jobs),
+    }
+}
+
+/// Build a batch of `n` identical SPMD jobs from one stage profile.
+pub fn spmd_jobs(
+    workload: &str,
+    stages: StageTimes,
+    in_bytes: u64,
+    out_bytes: u64,
+    grid: u32,
+    n: usize,
+) -> Vec<Job> {
+    (0..n)
+        .map(|idx| Job {
+            idx,
+            workload: workload.to_string(),
+            stages,
+            in_bytes,
+            out_bytes,
+            grid,
+        })
+        .collect()
+}
+
+/// Build SPMD jobs directly from a suite workload.
+pub fn jobs_for_workload(w: &crate::workloads::Workload, n: usize) -> Vec<Job> {
+    // The sim's kernel footprint is the *effective* occupancy, not the
+    // raw grid (latency-bound Class-S kernels hold fewer slots).
+    spmd_jobs(w.name, w.stages, w.in_bytes, w.out_bytes, w.occupancy_blocks, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gvm::plan::PlanOp;
+
+    fn st(t_in: f64, t_comp: f64, t_out: f64) -> StageTimes {
+        StageTimes {
+            t_in,
+            t_comp,
+            t_out,
+        }
+    }
+
+    #[test]
+    fn ci_gets_ps1() {
+        let jobs = spmd_jobs("ep", st(0.1, 10.0, 0.1), 8, 8, 1, 4);
+        let p = plan_batch(jobs, &Policy::default());
+        // Phase-batched: first 4 ops are all SendData.
+        assert!(p.ops[..4]
+            .iter()
+            .all(|o| matches!(o, PlanOp::SendData(_))));
+    }
+
+    #[test]
+    fn ioi_gets_ps2() {
+        let jobs = spmd_jobs("vecadd", st(10.0, 1.0, 8.0), 1000, 500, 64, 4);
+        let p = plan_batch(jobs, &Policy::default());
+        assert_eq!(p.ops[0], PlanOp::SendData(0));
+        assert_eq!(p.ops[1], PlanOp::Compute(0));
+        assert_eq!(p.ops[2], PlanOp::RtrvData(0));
+    }
+
+    #[test]
+    fn force_style_overrides() {
+        let jobs = spmd_jobs("vecadd", st(10.0, 1.0, 8.0), 1000, 500, 64, 2);
+        let p = plan_batch(
+            jobs,
+            &Policy {
+                force_style: Some(Style::Ps1),
+                ..Policy::default()
+            },
+        );
+        assert!(matches!(p.ops[1], PlanOp::SendData(1)));
+    }
+
+    #[test]
+    fn mixed_batch_majority_by_weight() {
+        let mut jobs = spmd_jobs("a", st(0.1, 100.0, 0.1), 8, 8, 1, 1);
+        jobs.extend(spmd_jobs("b", st(5.0, 1.0, 5.0), 8, 8, 1, 2));
+        for (i, j) in jobs.iter_mut().enumerate() {
+            j.idx = i;
+        }
+        // C-I weight 100.2 vs IO-I weight 22 -> C-I wins.
+        assert_eq!(classify_batch(&jobs), KernelClass::ComputeIntensive);
+    }
+
+    #[test]
+    fn intermediate_maps_to_ps1() {
+        assert_eq!(style_for_class(KernelClass::Intermediate), Style::Ps1);
+    }
+
+    #[test]
+    fn model_optimal_fixes_borderline_ci() {
+        // Borderline C-I: each transfer below T_comp, sum above it.
+        let st = st(6.0, 10.0, 7.0);
+        assert_eq!(classify(st), KernelClass::ComputeIntensive);
+        assert_eq!(style_for_class(classify(st)), Style::Ps1);
+        assert_eq!(style_model_optimal(st), Style::Ps2);
+        // Strong C-I: both rules agree on PS-1.
+        let strong = st_fn(2.0, 10.0, 3.0);
+        assert_eq!(style_model_optimal(strong), Style::Ps1);
+    }
+
+    fn st_fn(t_in: f64, t_comp: f64, t_out: f64) -> StageTimes {
+        st(t_in, t_comp, t_out)
+    }
+
+    #[test]
+    fn model_optimal_rule_in_plan_batch() {
+        let jobs = spmd_jobs("x", st(6.0, 10.0, 7.0), 100, 50, 4, 3);
+        let p = plan_batch(
+            jobs,
+            &Policy {
+                force_style: None,
+                rule: StyleRule::ModelOptimal,
+            },
+        );
+        // PS-2 shape: first three ops belong to job 0.
+        assert_eq!(p.ops[0].job(), 0);
+        assert_eq!(p.ops[1].job(), 0);
+        assert_eq!(p.ops[2].job(), 0);
+    }
+}

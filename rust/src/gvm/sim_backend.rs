@@ -1,0 +1,337 @@
+//! Replay an execution [`Plan`] against the discrete-event GPU simulator
+//! to obtain paper-scale timing: the bridge between the coordinator's
+//! scheduling decisions and the C2070 device model.
+
+use super::plan::{CtxMode, Plan, PlanOp};
+use crate::config::DeviceConfig;
+use crate::gpusim::{GpuSim, OpKind, StreamId};
+use crate::Result;
+
+/// Timing outcome of one simulated batch.
+#[derive(Debug, Clone)]
+pub struct BatchTiming {
+    /// Makespan of the whole batch on the device (ms) — the paper's
+    /// "time all kernels spend sharing the GPU inside the GVM"
+    /// measurement used for model validation (Figs. 16/17).
+    pub total_ms: f64,
+    /// Per-job completion times (ms since batch start), by job index.
+    pub job_end_ms: Vec<f64>,
+    /// Compute-engine busy time (device utilization numerator).
+    pub compute_busy_ms: f64,
+}
+
+impl BatchTiming {
+    /// Process turnaround time: every SPMD process finishes when its own
+    /// job completes; the batch turnaround (paper's metric: time for ALL
+    /// processes to finish) is the max.
+    pub fn turnaround_ms(&self) -> f64 {
+        self.total_ms
+    }
+
+    /// Device compute utilization over the batch span.
+    pub fn utilization(&self) -> f64 {
+        if self.total_ms <= 0.0 {
+            0.0
+        } else {
+            self.compute_busy_ms / self.total_ms
+        }
+    }
+}
+
+/// Simulate a plan on a device model.
+pub fn simulate(plan: &Plan, device: &DeviceConfig) -> Result<BatchTiming> {
+    simulate_traced(plan, device).map(|(t, _)| t)
+}
+
+/// Like [`simulate`], but also returns the per-op trace (for the
+/// chrome-trace exporter and invariant checks).
+pub fn simulate_traced(
+    plan: &Plan,
+    device: &DeviceConfig,
+) -> Result<(BatchTiming, crate::gpusim::Trace)> {
+    let mut sim = GpuSim::new(device.clone());
+    let n = plan.n_jobs();
+    if n == 0 {
+        return Ok((
+            BatchTiming {
+                total_ms: 0.0,
+                job_end_ms: vec![],
+                compute_busy_ms: 0.0,
+            },
+            crate::gpusim::Trace::default(),
+        ));
+    }
+
+    // Map each job to a stream; context mapping per plan mode.
+    let mut streams: Vec<StreamId> = Vec::with_capacity(n);
+    match plan.ctx_mode {
+        CtxMode::SharedVirtualized => {
+            // The GVM's single long-lived context: T_init hidden.
+            let ctx = sim.create_context_preinitialized();
+            for _ in 0..n {
+                streams.push(sim.stream(ctx));
+            }
+        }
+        CtxMode::PerProcess => {
+            // No-virt baseline: a fresh context per process, each paying
+            // T_init, serialized with T_ctx_switch by the device.
+            for _ in 0..n {
+                let ctx = sim.create_context();
+                streams.push(sim.stream(ctx));
+            }
+        }
+    }
+
+    for op in &plan.ops {
+        let j = &plan.jobs[op.job()];
+        let s = streams[op.job()];
+        match op {
+            PlanOp::SendData(_) => {
+                sim.enqueue(s, OpKind::H2d { bytes: j.in_bytes });
+            }
+            PlanOp::Compute(_) => {
+                sim.enqueue(
+                    s,
+                    OpKind::Kernel {
+                        blocks: j.grid,
+                        t_comp_ms: j.stages.t_comp,
+                    },
+                );
+            }
+            PlanOp::RtrvData(_) => {
+                sim.enqueue(s, OpKind::D2h { bytes: j.out_bytes });
+            }
+        }
+    }
+
+    let report = sim.run()?;
+    let job_end_ms = streams
+        .iter()
+        .map(|&s| report.trace.stream_end_ms(s))
+        .collect();
+    Ok((
+        BatchTiming {
+            total_ms: report.total_ms,
+            job_end_ms,
+            compute_busy_ms: report.trace.compute_busy_ms(),
+        },
+        report.trace,
+    ))
+}
+
+/// Convenience: simulate `n` SPMD instances of a workload, virtualized
+/// (paper policy) and baseline, returning `(virt, no_virt)` timings.
+pub fn simulate_spmd(
+    w: &crate::workloads::Workload,
+    n: usize,
+    device: &DeviceConfig,
+) -> Result<(BatchTiming, BatchTiming)> {
+    use super::scheduler::{jobs_for_workload, plan_batch, Policy};
+    let virt_plan = plan_batch(jobs_for_workload(w, n), &Policy::default());
+    let base_plan = super::plan::Plan::no_virt(jobs_for_workload(w, n));
+    Ok((
+        simulate(&virt_plan, device)?,
+        simulate(&base_plan, device)?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gvm::plan::Plan;
+    use crate::gvm::scheduler::spmd_jobs;
+    use crate::model::StageTimes;
+
+    fn io_dev() -> DeviceConfig {
+        DeviceConfig {
+            h2d_bytes_per_ms: 1000.0,
+            d2h_bytes_per_ms: 1000.0,
+            t_init_ms: 5.0,
+            t_ctx_switch_ms: 2.0,
+            ..DeviceConfig::idealized()
+        }
+    }
+
+    fn ci_jobs(n: usize) -> Vec<crate::gvm::plan::Job> {
+        // t_in = 1ms (1000B), t_comp = 10, t_out = 2ms (2000B).
+        spmd_jobs(
+            "ci",
+            StageTimes {
+                t_in: 1.0,
+                t_comp: 10.0,
+                t_out: 2.0,
+            },
+            1000,
+            2000,
+            1,
+            n,
+        )
+    }
+
+    fn ioi_jobs(n: usize) -> Vec<crate::gvm::plan::Job> {
+        // t_in = 10ms, t_comp = 1, t_out = 8ms.
+        spmd_jobs(
+            "ioi",
+            StageTimes {
+                t_in: 10.0,
+                t_comp: 1.0,
+                t_out: 8.0,
+            },
+            10_000,
+            8_000,
+            1,
+            n,
+        )
+    }
+
+    /// The simulator must reproduce Eq. (2) exactly for C-I under PS-1
+    /// on an idealized device.
+    #[test]
+    fn sim_matches_eq2() {
+        for n in 1..=8 {
+            let t = simulate(&Plan::ps1(ci_jobs(n)), &io_dev()).unwrap();
+            let model = crate::model::t_total_ci_ps1(
+                n,
+                StageTimes {
+                    t_in: 1.0,
+                    t_comp: 10.0,
+                    t_out: 2.0,
+                },
+            );
+            assert!(
+                (t.total_ms - model).abs() < 1e-6,
+                "n={n}: sim {} vs Eq.2 {}",
+                t.total_ms,
+                model
+            );
+        }
+    }
+
+    /// Eq. (3): C-I under PS-2.
+    #[test]
+    fn sim_matches_eq3() {
+        for n in 1..=8 {
+            let t = simulate(&Plan::ps2(ci_jobs(n)), &io_dev()).unwrap();
+            let model = crate::model::t_total_ci_ps2(
+                n,
+                StageTimes {
+                    t_in: 1.0,
+                    t_comp: 10.0,
+                    t_out: 2.0,
+                },
+            );
+            assert!(
+                (t.total_ms - model).abs() < 1e-6,
+                "n={n}: sim {} vs Eq.3 {}",
+                t.total_ms,
+                model
+            );
+        }
+    }
+
+    /// Eq. (4): IO-I under PS-1.
+    #[test]
+    fn sim_matches_eq4() {
+        for n in 1..=8 {
+            let t = simulate(&Plan::ps1(ioi_jobs(n)), &io_dev()).unwrap();
+            let model = crate::model::t_total_ioi_ps1(
+                n,
+                StageTimes {
+                    t_in: 10.0,
+                    t_comp: 1.0,
+                    t_out: 8.0,
+                },
+            );
+            assert!(
+                (t.total_ms - model).abs() < 1e-6,
+                "n={n}: sim {} vs Eq.4 {}",
+                t.total_ms,
+                model
+            );
+        }
+    }
+
+    /// Eq. (7): IO-I under PS-2, both branches (Eqs. 5 and 6).
+    #[test]
+    fn sim_matches_eq7() {
+        for (t_in, t_out) in [(10.0, 8.0), (8.0, 10.0)] {
+            for n in 1..=8 {
+                let jobs = spmd_jobs(
+                    "ioi",
+                    StageTimes {
+                        t_in,
+                        t_comp: 1.0,
+                        t_out,
+                    },
+                    (t_in * 1000.0) as u64,
+                    (t_out * 1000.0) as u64,
+                    1,
+                    n,
+                );
+                let t = simulate(&Plan::ps2(jobs), &io_dev()).unwrap();
+                let model = crate::model::t_total_ioi_ps2(
+                    n,
+                    StageTimes {
+                        t_in,
+                        t_comp: 1.0,
+                        t_out,
+                    },
+                );
+                assert!(
+                    (t.total_ms - model).abs() < 1e-6,
+                    "n={n} in={t_in} out={t_out}: sim {} vs Eq.7 {}",
+                    t.total_ms,
+                    model
+                );
+            }
+        }
+    }
+
+    /// Eq. (1): the no-virt baseline.
+    #[test]
+    fn sim_matches_eq1() {
+        for n in 1..=8 {
+            let t = simulate(&Plan::no_virt(ci_jobs(n)), &io_dev()).unwrap();
+            let model = crate::model::t_total_no_vt(
+                n,
+                StageTimes {
+                    t_in: 1.0,
+                    t_comp: 10.0,
+                    t_out: 2.0,
+                },
+                crate::model::Overheads {
+                    t_init: 5.0,
+                    t_ctx_switch: 2.0,
+                },
+            );
+            assert!(
+                (t.total_ms - model).abs() < 1e-6,
+                "n={n}: sim {} vs Eq.1 {}",
+                t.total_ms,
+                model
+            );
+        }
+    }
+
+    #[test]
+    fn virtualization_always_wins() {
+        let suite = crate::workloads::Suite::paper_defaults();
+        let dev = DeviceConfig::tesla_c2070();
+        for w in suite.all() {
+            let (v, b) = simulate_spmd(w, 8, &dev).unwrap();
+            assert!(
+                v.total_ms < b.total_ms,
+                "{}: virt {} >= baseline {}",
+                w.name,
+                v.total_ms,
+                b.total_ms
+            );
+        }
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let t = simulate(&Plan::ps1(ci_jobs(4)), &io_dev()).unwrap();
+        assert!(t.utilization() > 0.0 && t.utilization() <= 1.0);
+    }
+}

@@ -1,0 +1,400 @@
+//! The VGPU table: per-client virtualized device state inside the GVM.
+//!
+//! Each registered SPMD process owns a **VGPU** — the virtual device the
+//! paper exposes so every processor "sees its own GPU".  A VGPU bundles:
+//! a virtual shared-memory segment (input/output slots, the POSIX-shm
+//! analogue), the per-process CUDA-stream binding, and the job lifecycle
+//! state driven by the REQ/SND/STR/STP/RCV/RLS protocol.
+
+use std::collections::HashMap;
+
+use crate::runtime::TensorValue;
+use crate::{Error, Result};
+
+/// Client identity assigned at connection time.
+pub type ClientId = u64;
+
+/// Lifecycle of one VGPU.
+#[derive(Debug, Clone, PartialEq)]
+pub enum VgpuState {
+    /// Registered, no job staged.
+    Idle,
+    /// STR received, waiting behind the SPMD barrier.
+    Queued {
+        /// Workload requested.
+        workload: String,
+        /// Ticket returned to the client.
+        ticket: u64,
+    },
+    /// Batch executed; results available in the output slots.
+    Done {
+        /// Device wall time of this job inside the GVM (ms).
+        gpu_ms: f64,
+    },
+    /// The job failed (bad inputs, runtime error); STP surfaces the
+    /// message and the next SND recycles the VGPU.
+    Failed {
+        /// Failure cause.
+        msg: String,
+    },
+}
+
+/// Per-client virtual device state.
+#[derive(Debug)]
+pub struct Vgpu {
+    /// Display name (rank label).
+    pub name: String,
+    /// Input slots — the client's virtual shared memory segment.
+    pub in_slots: Vec<Option<TensorValue>>,
+    /// Output slots, filled after batch execution.
+    pub out_slots: Vec<TensorValue>,
+    /// Lifecycle state.
+    pub state: VgpuState,
+    /// Bytes currently held by this segment (for the memory budget).
+    pub seg_bytes: u64,
+}
+
+impl Vgpu {
+    fn new(name: String) -> Self {
+        Self {
+            name,
+            in_slots: Vec::new(),
+            out_slots: Vec::new(),
+            state: VgpuState::Idle,
+            seg_bytes: 0,
+        }
+    }
+
+    /// Gather staged inputs in slot order; errors on gaps.
+    pub fn staged_inputs(&self) -> Result<Vec<TensorValue>> {
+        let mut out = Vec::with_capacity(self.in_slots.len());
+        for (i, s) in self.in_slots.iter().enumerate() {
+            match s {
+                Some(t) => out.push(t.clone()),
+                None => {
+                    return Err(Error::protocol(format!(
+                        "input slot {i} was never SND-ed"
+                    )))
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl VgpuTable {
+    /// Move staged inputs out of a client's segment (zero-copy handoff
+    /// for execution — the segment is consumed by the launch, as the
+    /// paper's data-flow does; the next cycle re-SNDs).  Errors on gaps
+    /// without disturbing the slots.
+    pub fn take_staged_inputs(&mut self, id: ClientId) -> Result<Vec<TensorValue>> {
+        // Validate first so failures leave the segment intact.
+        let v = self.get(id)?;
+        for (i, s) in v.in_slots.iter().enumerate() {
+            if s.is_none() {
+                return Err(Error::protocol(format!(
+                    "input slot {i} was never SND-ed"
+                )));
+            }
+        }
+        let freed: u64;
+        let out: Vec<TensorValue>;
+        {
+            let v = self.get_mut(id)?;
+            out = v.in_slots.drain(..).map(|t| t.unwrap()).collect();
+            freed = out.iter().map(|t| t.bytes() as u64).sum();
+            v.seg_bytes -= freed;
+        }
+        self.mem_used -= freed;
+        Ok(out)
+    }
+}
+
+/// The GVM's table of VGPUs with a shared segment-memory budget
+/// (the paper: "shared memory size is user-customizable to ensure the
+/// total size does not exceed the GPU memory size").
+#[derive(Debug)]
+pub struct VgpuTable {
+    vgpus: HashMap<ClientId, Vgpu>,
+    next_id: ClientId,
+    next_ticket: u64,
+    mem_budget: u64,
+    mem_used: u64,
+    max_clients: usize,
+}
+
+impl VgpuTable {
+    /// New table bounded by segment budget and client capacity.
+    pub fn new(mem_budget: u64, max_clients: usize) -> Self {
+        Self {
+            vgpus: HashMap::new(),
+            next_id: 1,
+            next_ticket: 1,
+            mem_budget,
+            mem_used: 0,
+            max_clients,
+        }
+    }
+
+    /// REQ: register a client; allocates its VGPU.
+    pub fn register(&mut self, name: &str) -> Result<ClientId> {
+        if self.vgpus.len() >= self.max_clients {
+            return Err(Error::Resource(format!(
+                "VGPU table full ({} clients)",
+                self.max_clients
+            )));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.vgpus.insert(id, Vgpu::new(name.to_string()));
+        Ok(id)
+    }
+
+    /// SND: stage a tensor into an input slot.
+    pub fn stage(&mut self, id: ClientId, slot: u32, tensor: TensorValue) -> Result<()> {
+        let bytes = tensor.bytes() as u64;
+        if self.mem_used + bytes > self.mem_budget {
+            return Err(Error::Resource(format!(
+                "segment budget exceeded: {} + {} > {}",
+                self.mem_used, bytes, self.mem_budget
+            )));
+        }
+        let mut freed: u64 = 0;
+        {
+            let v = self.get_mut(id)?;
+            if !matches!(v.state, VgpuState::Idle) {
+                return Err(Error::protocol("SND while a job is in flight"));
+            }
+            let slot = slot as usize;
+            if slot >= 64 {
+                return Err(Error::protocol(format!("slot {slot} out of range")));
+            }
+            if v.in_slots.len() <= slot {
+                v.in_slots.resize(slot + 1, None);
+            }
+            if let Some(old) = v.in_slots[slot].take() {
+                freed = old.bytes() as u64;
+                v.seg_bytes -= freed;
+            }
+            v.in_slots[slot] = Some(tensor);
+            v.seg_bytes += bytes;
+        }
+        self.mem_used -= freed;
+        self.mem_used += bytes;
+        Ok(())
+    }
+
+    /// STR: mark the client's job queued; returns the ticket.
+    pub fn queue(&mut self, id: ClientId, workload: &str) -> Result<u64> {
+        let ticket = self.next_ticket;
+        let v = self.get_mut(id)?;
+        if !matches!(v.state, VgpuState::Idle) {
+            return Err(Error::protocol("STR while a job is in flight"));
+        }
+        v.state = VgpuState::Queued {
+            workload: workload.to_string(),
+            ticket,
+        };
+        self.next_ticket += 1;
+        Ok(ticket)
+    }
+
+    /// Mark a client's job failed (per-job failure isolation: other
+    /// jobs in the batch proceed).
+    pub fn fail(&mut self, id: ClientId, msg: String) -> Result<()> {
+        let v = self.get_mut(id)?;
+        v.out_slots.clear();
+        v.state = VgpuState::Failed { msg };
+        Ok(())
+    }
+
+    /// Complete a client's job: store results, transition to Done.
+    pub fn complete(
+        &mut self,
+        id: ClientId,
+        outputs: Vec<TensorValue>,
+        gpu_ms: f64,
+    ) -> Result<()> {
+        let v = self.get_mut(id)?;
+        v.out_slots = outputs;
+        v.state = VgpuState::Done { gpu_ms };
+        Ok(())
+    }
+
+    /// RCV: fetch an output slot.
+    pub fn fetch(&self, id: ClientId, slot: u32) -> Result<TensorValue> {
+        let v = self.get(id)?;
+        match &v.state {
+            VgpuState::Done { .. } => v
+                .out_slots
+                .get(slot as usize)
+                .cloned()
+                .ok_or_else(|| {
+                    Error::protocol(format!("no output slot {slot}"))
+                }),
+            _ => Err(Error::protocol("RCV before the job finished")),
+        }
+    }
+
+    /// RLS: free the VGPU and its segments.
+    pub fn release(&mut self, id: ClientId) -> Result<()> {
+        let v = self
+            .vgpus
+            .remove(&id)
+            .ok_or_else(|| Error::protocol("RLS from unregistered client"))?;
+        self.mem_used -= v.seg_bytes;
+        Ok(())
+    }
+
+    /// Reset a VGPU to Idle for its next request cycle (keeps segments).
+    pub fn recycle(&mut self, id: ClientId) -> Result<()> {
+        let freed: u64;
+        {
+            let v = self.get_mut(id)?;
+            freed = v
+                .in_slots
+                .drain(..)
+                .flatten()
+                .map(|t| t.bytes() as u64)
+                .sum();
+            v.seg_bytes -= freed;
+            v.out_slots.clear();
+            v.state = VgpuState::Idle;
+        }
+        self.mem_used -= freed;
+        Ok(())
+    }
+
+    /// All clients currently queued behind the barrier.
+    pub fn queued_clients(&self) -> Vec<(ClientId, String)> {
+        let mut q: Vec<(ClientId, u64, String)> = self
+            .vgpus
+            .iter()
+            .filter_map(|(id, v)| match &v.state {
+                VgpuState::Queued { workload, ticket } => {
+                    Some((*id, *ticket, workload.clone()))
+                }
+                _ => None,
+            })
+            .collect();
+        q.sort_by_key(|(_, ticket, _)| *ticket);
+        q.into_iter().map(|(id, _, w)| (id, w)).collect()
+    }
+
+    /// Registered client count.
+    pub fn len(&self) -> usize {
+        self.vgpus.len()
+    }
+
+    /// True if no clients registered.
+    pub fn is_empty(&self) -> bool {
+        self.vgpus.is_empty()
+    }
+
+    /// Segment memory in use.
+    pub fn mem_used(&self) -> u64 {
+        self.mem_used
+    }
+
+    /// Access a VGPU.
+    pub fn get(&self, id: ClientId) -> Result<&Vgpu> {
+        self.vgpus
+            .get(&id)
+            .ok_or_else(|| Error::protocol("unknown client (missing REQ?)"))
+    }
+
+    fn get_mut(&mut self, id: ClientId) -> Result<&mut Vgpu> {
+        self.vgpus
+            .get_mut(&id)
+            .ok_or_else(|| Error::protocol("unknown client (missing REQ?)"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(n: usize) -> TensorValue {
+        TensorValue::F32(vec![n], vec![0.0; n])
+    }
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let mut tbl = VgpuTable::new(1 << 20, 8);
+        let id = tbl.register("rank0").unwrap();
+        tbl.stage(id, 0, t(4)).unwrap();
+        tbl.stage(id, 1, t(4)).unwrap();
+        let ticket = tbl.queue(id, "vecadd").unwrap();
+        assert_eq!(ticket, 1);
+        assert_eq!(tbl.queued_clients().len(), 1);
+        tbl.complete(id, vec![t(4)], 1.5).unwrap();
+        let out = tbl.fetch(id, 0).unwrap();
+        assert_eq!(out.elems(), 4);
+        tbl.recycle(id).unwrap();
+        assert_eq!(tbl.mem_used(), 0);
+        tbl.release(id).unwrap();
+        assert!(tbl.is_empty());
+    }
+
+    #[test]
+    fn memory_budget_enforced() {
+        let mut tbl = VgpuTable::new(32, 8);
+        let id = tbl.register("r").unwrap();
+        tbl.stage(id, 0, t(8)).unwrap(); // 32 bytes: fits exactly
+        let err = tbl.stage(id, 1, t(1)).unwrap_err();
+        assert!(matches!(err, Error::Resource(_)));
+    }
+
+    #[test]
+    fn restaging_a_slot_releases_old_bytes() {
+        let mut tbl = VgpuTable::new(64, 8);
+        let id = tbl.register("r").unwrap();
+        tbl.stage(id, 0, t(8)).unwrap();
+        tbl.stage(id, 0, t(8)).unwrap(); // replace, not accumulate
+        assert_eq!(tbl.mem_used(), 32);
+    }
+
+    #[test]
+    fn client_capacity_enforced() {
+        let mut tbl = VgpuTable::new(1 << 20, 2);
+        tbl.register("a").unwrap();
+        tbl.register("b").unwrap();
+        assert!(matches!(
+            tbl.register("c").unwrap_err(),
+            Error::Resource(_)
+        ));
+    }
+
+    #[test]
+    fn protocol_violations_rejected() {
+        let mut tbl = VgpuTable::new(1 << 20, 8);
+        let id = tbl.register("r").unwrap();
+        assert!(tbl.fetch(id, 0).is_err()); // RCV before STR
+        tbl.stage(id, 0, t(1)).unwrap();
+        tbl.queue(id, "w").unwrap();
+        assert!(tbl.queue(id, "w").is_err()); // double STR
+        assert!(tbl.stage(id, 1, t(1)).is_err()); // SND while queued
+        assert!(tbl.fetch(99, 0).is_err()); // unknown client
+    }
+
+    #[test]
+    fn staged_inputs_detects_gaps() {
+        let mut tbl = VgpuTable::new(1 << 20, 8);
+        let id = tbl.register("r").unwrap();
+        tbl.stage(id, 1, t(1)).unwrap(); // slot 0 missing
+        assert!(tbl.get(id).unwrap().staged_inputs().is_err());
+    }
+
+    #[test]
+    fn queued_clients_in_ticket_order() {
+        let mut tbl = VgpuTable::new(1 << 20, 8);
+        let a = tbl.register("a").unwrap();
+        let b = tbl.register("b").unwrap();
+        let c = tbl.register("c").unwrap();
+        tbl.queue(b, "w").unwrap();
+        tbl.queue(a, "w").unwrap();
+        tbl.queue(c, "w").unwrap();
+        let q: Vec<ClientId> = tbl.queued_clients().iter().map(|(i, _)| *i).collect();
+        assert_eq!(q, vec![b, a, c]);
+    }
+}

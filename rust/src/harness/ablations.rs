@@ -1,0 +1,444 @@
+//! Ablation experiments for the design choices DESIGN.md §10 calls out.
+
+use super::ExpOutput;
+use crate::config::{DepcheckSemantics, DeviceConfig};
+use crate::gvm::scheduler::{jobs_for_workload, spmd_jobs};
+use crate::gvm::{simulate, Plan};
+use crate::model::{self, StageTimes, Style};
+use crate::util::table::{f2, f3, Table};
+use crate::workloads::Suite;
+use crate::Result;
+
+const N: usize = 8;
+
+/// PS-1 vs PS-2 for both kernel classes — the paper's central scheduling
+/// claim (§4.2.3): each class has a distinct optimal style.
+pub fn style_matrix() -> Result<ExpOutput> {
+    let suite = Suite::paper_defaults();
+    let dev = DeviceConfig::tesla_c2070();
+    let mut table = Table::new(&["workload", "class", "ps1_ms", "ps2_ms", "best"]);
+    let mut notes = Vec::new();
+    for name in ["ep_m24", "mg", "cg", "vecadd", "vecmul", "black_scholes"] {
+        let w = suite.get(name).unwrap();
+        let ps1 = simulate(&Plan::ps1(jobs_for_workload(w, N)), &dev)?;
+        let ps2 = simulate(&Plan::ps2(jobs_for_workload(w, N)), &dev)?;
+        let best = if ps1.total_ms <= ps2.total_ms { "PS-1" } else { "PS-2" };
+        let expected = match crate::gvm::scheduler::style_for_class(w.paper_class) {
+            Style::Ps1 => "PS-1",
+            Style::Ps2 => "PS-2",
+        };
+        if best != expected {
+            notes.push(format!(
+                "NOTE {name}: simulated best {best} differs from policy {expected}"
+            ));
+        }
+        table.row(vec![
+            name.to_string(),
+            w.paper_class.to_string(),
+            f2(ps1.total_ms),
+            f2(ps2.total_ms),
+            best.to_string(),
+        ]);
+    }
+    if notes.is_empty() {
+        notes.push(
+            "simulated optimum matches the paper's policy (PS-1 for C-I, \
+             PS-2 for IO-I) on every workload"
+                .into(),
+        );
+    }
+    Ok(ExpOutput {
+        id: "ablation-style".into(),
+        title: "Stream programming style ablation (N=8)".into(),
+        table,
+        notes,
+    })
+}
+
+/// Fermi implicit-sync semantics: the paper's *prose* says dependent ops
+/// wait for prior kernel launches to have **started**; its *equations*
+/// require **completed**.  Quantify the difference.
+pub fn depcheck_semantics() -> Result<ExpOutput> {
+    let suite = Suite::paper_defaults();
+    let mut table = Table::new(&[
+        "workload",
+        "style",
+        "completed_ms",
+        "started_ms",
+        "model_ms",
+    ]);
+    for name in ["ep_m24", "vecmul", "vecadd"] {
+        let w = suite.get(name).unwrap();
+        for (style, plan) in [
+            ("PS-1", Plan::ps1(jobs_for_workload(w, N))),
+            ("PS-2", Plan::ps2(jobs_for_workload(w, N))),
+        ] {
+            let mut dev_c = DeviceConfig::tesla_c2070();
+            dev_c.depcheck = DepcheckSemantics::Completed;
+            let mut dev_s = dev_c.clone();
+            dev_s.depcheck = DepcheckSemantics::Started;
+            let tc = simulate(&plan, &dev_c)?;
+            let ts = simulate(&plan, &dev_s)?;
+            let model_ms = model::t_total_for(
+                if style == "PS-1" { Style::Ps1 } else { Style::Ps2 },
+                model::classify(w.stages),
+                N,
+                w.stages,
+            );
+            table.row(vec![
+                name.to_string(),
+                style.to_string(),
+                f2(tc.total_ms),
+                f2(ts.total_ms),
+                f2(model_ms),
+            ]);
+        }
+    }
+    Ok(ExpOutput {
+        id: "ablation-depcheck".into(),
+        title: "Fermi dep-check semantics: Completed (paper's algebra) vs \
+                Started (paper's prose)"
+            .into(),
+        table,
+        notes: vec![
+            "`Completed` reproduces Eqs. 2/4 exactly; `Started` lets the \
+             first D2H overlap the tail kernels, an optimistic bound"
+                .into(),
+        ],
+    })
+}
+
+/// Context-switch cost sensitivity: how much of the virtualization win
+/// comes from eliminating T_ctx_switch (+T_init) vs from overlap.
+pub fn ctx_switch_sweep() -> Result<ExpOutput> {
+    let suite = Suite::paper_defaults();
+    let w = suite.get("mg").unwrap();
+    let mut table = Table::new(&[
+        "t_ctx_switch_ms",
+        "t_init_ms",
+        "no_virt_ms",
+        "virt_ms",
+        "speedup",
+    ]);
+    for (ctx, init) in [
+        (0.0, 0.0),
+        (0.0, 80.0),
+        (5.0, 80.0),
+        (10.0, 80.0),
+        (20.0, 80.0),
+        (50.0, 80.0),
+    ] {
+        let mut dev = DeviceConfig::tesla_c2070();
+        dev.t_ctx_switch_ms = ctx;
+        dev.t_init_ms = init;
+        let (virt, base) = crate::gvm::sim_backend::simulate_spmd(w, N, &dev)?;
+        table.row(vec![
+            f2(ctx),
+            f2(init),
+            f2(base.total_ms),
+            f2(virt.total_ms),
+            f3(base.total_ms / virt.total_ms),
+        ]);
+    }
+    Ok(ExpOutput {
+        id: "ablation-ctx".into(),
+        title: "Overhead-elimination share of the speedup (MG, N=8)".into(),
+        table,
+        notes: vec![
+            "the (0,0) row isolates pure overlap gains; growing rows show \
+             the share contributed by hidden T_init and removed T_ctx_switch"
+                .into(),
+        ],
+    })
+}
+
+/// The GVM's SPMD request barrier vs immediate per-request flushing:
+/// without the barrier each job runs as its own batch (still one shared
+/// context, but zero cross-process concurrency).
+pub fn barrier_vs_immediate() -> Result<ExpOutput> {
+    let suite = Suite::paper_defaults();
+    let dev = DeviceConfig::tesla_c2070();
+    let mut table = Table::new(&[
+        "workload",
+        "barrier_batch_ms",
+        "immediate_ms",
+        "barrier_gain_x",
+    ]);
+    for name in ["ep_m24", "mg", "cg", "vecadd"] {
+        let w = suite.get(name).unwrap();
+        let batched = simulate(
+            &crate::gvm::scheduler::plan_batch(
+                jobs_for_workload(w, N),
+                &Default::default(),
+            ),
+            &dev,
+        )?;
+        // Immediate flushing: N single-job batches back-to-back.
+        let single = simulate(
+            &crate::gvm::scheduler::plan_batch(
+                jobs_for_workload(w, 1),
+                &Default::default(),
+            ),
+            &dev,
+        )?;
+        let immediate_ms = single.total_ms * N as f64;
+        table.row(vec![
+            name.to_string(),
+            f2(batched.total_ms),
+            f2(immediate_ms),
+            f3(immediate_ms / batched.total_ms),
+        ]);
+    }
+    Ok(ExpOutput {
+        id: "ablation-barrier".into(),
+        title: "SPMD barrier batching vs immediate flushing (N=8)".into(),
+        table,
+        notes: vec![
+            "the barrier is what converts process-level parallelism into \
+             device-level concurrency; immediate flushing still avoids \
+             T_init/T_ctx_switch but forfeits overlap"
+                .into(),
+        ],
+    })
+}
+
+/// Extension (EXPERIMENTS.md §Findings 1): the paper's class-based style
+/// policy vs this repo's model-optimal rule (`PS-1 iff T_in+T_out <=
+/// T_comp`), swept across the borderline-C-I region where they differ.
+pub fn policy_rule_comparison() -> Result<ExpOutput> {
+    use crate::gvm::scheduler::{plan_batch, Policy, StyleRule};
+    use crate::gvm::scheduler::spmd_jobs;
+    let dev = DeviceConfig::idealized();
+    let mut table = Table::new(&[
+        "t_in",
+        "t_comp",
+        "t_out",
+        "class",
+        "paper_policy_ms",
+        "model_optimal_ms",
+        "gain_pct",
+    ]);
+    // Sweep T_comp across the borderline band: each transfer is 6/7 ms,
+    // so the paper calls everything with T_comp >= 7 "C-I", but PS-1
+    // only wins once T_comp >= 13.
+    for t_comp in [8.0, 10.0, 12.0, 13.0, 16.0, 24.0] {
+        let st = StageTimes {
+            t_in: 6.0,
+            t_comp,
+            t_out: 7.0,
+        };
+        let jobs = spmd_jobs(
+            "sweep",
+            st,
+            (st.t_in * 6.0e6) as u64,
+            (st.t_out * 6.0e6) as u64,
+            1,
+            N,
+        );
+        let paper = simulate(
+            &plan_batch(jobs.clone(), &Policy::default()),
+            &dev,
+        )?;
+        let optimal = simulate(
+            &plan_batch(
+                jobs,
+                &Policy {
+                    force_style: None,
+                    rule: StyleRule::ModelOptimal,
+                },
+            ),
+            &dev,
+        )?;
+        let gain = (paper.total_ms - optimal.total_ms) / paper.total_ms * 100.0;
+        table.row(vec![
+            f2(st.t_in),
+            f2(st.t_comp),
+            f2(st.t_out),
+            model::classify(st).to_string(),
+            f2(paper.total_ms),
+            f2(optimal.total_ms),
+            f2(gain),
+        ]);
+    }
+    Ok(ExpOutput {
+        id: "ablation-policy".into(),
+        title: "Paper class-based policy vs model-optimal style rule \
+                (borderline C-I sweep, N=8)"
+            .into(),
+        table,
+        notes: vec![
+            "the paper's C-I predicate under-determines PS-1 optimality: \
+             for T_in+T_out > T_comp the model-optimal rule recovers up to \
+             (N-1)(T_in+T_out-T_comp); the two agree everywhere else"
+                .into(),
+        ],
+    })
+}
+
+/// Extension (paper §7's deployment claim): a node with `g` GPUs and 8
+/// processes.  The GVM assigns VGPUs to physical devices round-robin and
+/// runs one batch per device; node turnaround = max over devices.
+/// Sweeps g = 1, 2, 4, 8 for a C-I and an IO-I workload.
+pub fn multi_gpu_scaling() -> Result<ExpOutput> {
+    let suite = Suite::paper_defaults();
+    let dev = DeviceConfig::tesla_c2070();
+    let mut table = Table::new(&[
+        "workload",
+        "n_gpus",
+        "no_virt_ms",
+        "virt_ms",
+        "speedup",
+        "virt_scaling_vs_1gpu",
+    ]);
+    for name in ["electrostatics", "vecadd"] {
+        let w = suite.get(name).unwrap();
+        let mut virt_1gpu = 0.0;
+        for g in [1usize, 2, 4, 8] {
+            // Round-robin: device d serves ceil-ish share of 8 processes.
+            let mut virt_worst: f64 = 0.0;
+            let mut base_worst: f64 = 0.0;
+            for d in 0..g {
+                let share = (N + g - 1 - d) / g; // balanced split of 8
+                if share == 0 {
+                    continue;
+                }
+                let (virt, base) =
+                    crate::gvm::sim_backend::simulate_spmd(w, share, &dev)?;
+                virt_worst = virt_worst.max(virt.total_ms);
+                base_worst = base_worst.max(base.total_ms);
+            }
+            if g == 1 {
+                virt_1gpu = virt_worst;
+            }
+            table.row(vec![
+                name.to_string(),
+                g.to_string(),
+                f2(base_worst),
+                f2(virt_worst),
+                f3(base_worst / virt_worst),
+                f3(virt_1gpu / virt_worst),
+            ]);
+        }
+    }
+    Ok(ExpOutput {
+        id: "ext-multigpu".into(),
+        title: "Extension: multi-GPU node scaling (8 SPMD processes)".into(),
+        table,
+        notes: vec![
+            "virtualization composes with more devices: adding GPUs keeps \
+             shrinking turnaround for device-bound kernels (ES) while \
+             IO-bound kernels (VecAdd) saturate on the per-device PCIe \
+             link — CPU:GPU ratio, not device count, is the binding \
+             asymmetry, as the paper's Table 1 argument implies"
+                .into(),
+        ],
+    })
+}
+
+/// Extension: cluster weak-scaling (paper Fig. 11).  8 ranks/node, MG
+/// workload, 64 MiB allreduce per iteration; sweep node counts and show
+/// that the per-node GVM speedup survives cluster synchronization.
+pub fn cluster_scaling() -> Result<ExpOutput> {
+    use crate::cluster::{weak_scaling, ClusterConfig};
+    let suite = Suite::paper_defaults();
+    let mut table = Table::new(&[
+        "workload",
+        "n_nodes",
+        "ranks",
+        "virt_iter_ms",
+        "no_virt_iter_ms",
+        "comm_ms",
+        "speedup",
+    ]);
+    for name in ["mg", "vecadd"] {
+        let w = suite.get(name).unwrap();
+        let cfg = ClusterConfig::default();
+        for (n, est) in weak_scaling(&cfg, w, 64 << 20, &[1, 2, 4, 8, 16])? {
+            table.row(vec![
+                name.to_string(),
+                n.to_string(),
+                est.ranks.to_string(),
+                f2(est.virt_iter_ms),
+                f2(est.no_virt_iter_ms),
+                f2(est.comm_ms),
+                f3(est.speedup()),
+            ]);
+        }
+    }
+    Ok(ExpOutput {
+        id: "ext-cluster".into(),
+        title: "Extension: cluster weak scaling with per-node GVMs                 (Fig. 11 deployment)"
+            .into(),
+        table,
+        notes: vec![
+            "per-node virtualization gains survive the allreduce barrier;              they dilute as communication grows with rank count — the              Amdahl term the paper's single-node evaluation leaves out"
+                .into(),
+        ],
+    })
+}
+
+/// Quiet helper for ad-hoc exploration from the CLI: sweep a custom
+/// stage profile across N.
+pub fn custom_profile_sweep(t_in: f64, t_comp: f64, t_out: f64) -> Result<ExpOutput> {
+    let dev = DeviceConfig::tesla_c2070();
+    let stages = StageTimes {
+        t_in,
+        t_comp,
+        t_out,
+    };
+    let mut table = Table::new(&["n", "no_virt_ms", "virt_ms", "speedup"]);
+    for n in 1..=8usize {
+        let jobs = spmd_jobs("custom", stages, (t_in * 6.0e6) as u64, (t_out * 6.0e6) as u64, 14, n);
+        let virt = simulate(
+            &crate::gvm::scheduler::plan_batch(jobs.clone(), &Default::default()),
+            &dev,
+        )?;
+        let base = simulate(&Plan::no_virt(jobs), &dev)?;
+        table.row(vec![
+            n.to_string(),
+            f2(base.total_ms),
+            f2(virt.total_ms),
+            f3(base.total_ms / virt.total_ms),
+        ]);
+    }
+    Ok(ExpOutput {
+        id: "custom".into(),
+        title: format!("Custom profile sweep (t_in={t_in}, t_comp={t_comp}, t_out={t_out})"),
+        table,
+        notes: vec![],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn style_matrix_confirms_paper_policy() {
+        let out = style_matrix().unwrap();
+        // The note must confirm agreement (no NOTE rows).
+        assert!(
+            out.notes.iter().all(|n| !n.starts_with("NOTE")),
+            "{:?}",
+            out.notes
+        );
+    }
+
+    #[test]
+    fn barrier_always_helps_ci() {
+        let out = barrier_vs_immediate().unwrap();
+        assert!(out.table.len() == 4);
+    }
+
+    #[test]
+    fn ctx_sweep_speedup_monotone() {
+        let out = ctx_switch_sweep().unwrap();
+        assert_eq!(out.table.len(), 6);
+    }
+
+    #[test]
+    fn custom_sweep_runs() {
+        let out = custom_profile_sweep(1.0, 10.0, 1.0).unwrap();
+        assert_eq!(out.table.len(), 8);
+    }
+}

@@ -1,0 +1,129 @@
+//! Experiment harness: one driver per table/figure of the paper's
+//! evaluation (§6), plus the ablations called out in DESIGN.md §10.
+//!
+//! Every driver returns an [`ExpOutput`] whose table holds exactly the
+//! series the paper plots; `vgpu exp <id>` prints it as markdown and
+//! writes TSV to `results/` for plotting.
+//!
+//! | id      | reproduces                  |
+//! |---------|-----------------------------|
+//! | tab1    | Table 1 (CPU:GPU ratios)    |
+//! | tab3    | Table 3 (benchmark profiles)|
+//! | fig14   | VecAdd turnaround vs N      |
+//! | fig15   | EP(M30) turnaround vs N     |
+//! | fig16   | C-I model validation        |
+//! | fig17   | IO-I model validation       |
+//! | fig18   | virtualization overhead     |
+//! | fig19   | MM turnaround               |
+//! | fig20   | MG turnaround               |
+//! | fig21   | BS turnaround               |
+//! | fig22   | CG turnaround               |
+//! | fig23   | ES turnaround               |
+//! | fig24   | speedup summary @ N=8       |
+//! | ablation-style | PS-1/PS-2 x class    |
+//! | ablation-depcheck | Fermi sync semantics |
+//! | ablation-ctx | ctx-switch sensitivity |
+//! | ablation-barrier | barrier vs immediate flush |
+//! | ablation-policy | paper policy vs model-optimal rule |
+//! | ext-multigpu | extension: multi-GPU node scaling |
+//! | ext-cluster | extension: cluster weak scaling (Fig. 11) |
+//! | ext-fig18-socket | extension: Fig. 18 over the socket transport |
+
+pub mod ablations;
+pub mod figures;
+pub mod tables;
+
+use crate::util::table::Table;
+use crate::{Error, Result};
+
+/// One experiment's regenerated output.
+pub struct ExpOutput {
+    /// Experiment id (`fig14`, `tab3`, ...).
+    pub id: String,
+    /// Paper caption analogue.
+    pub title: String,
+    /// The regenerated rows/series.
+    pub table: Table,
+    /// Free-form commentary (shape checks, deviations).
+    pub notes: Vec<String>,
+}
+
+impl ExpOutput {
+    /// Render for the terminal.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "## {} — {}\n\n{}",
+            self.id,
+            self.title,
+            self.table.to_markdown()
+        );
+        for n in &self.notes {
+            s.push_str(&format!("\n> {n}\n"));
+        }
+        s
+    }
+
+    /// Persist the TSV under `results/`.
+    pub fn save(&self, dir: &std::path::Path) -> Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.tsv", self.id));
+        std::fs::write(&path, self.table.to_tsv())?;
+        Ok(path)
+    }
+}
+
+/// All known experiment ids, in paper order.
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "tab1",
+    "tab3",
+    "fig14",
+    "fig15",
+    "fig16",
+    "fig17",
+    "fig18",
+    "fig19",
+    "fig20",
+    "fig21",
+    "fig22",
+    "fig23",
+    "fig24",
+    "ablation-style",
+    "ablation-depcheck",
+    "ablation-ctx",
+    "ablation-barrier",
+    "ablation-policy",
+    "ext-multigpu",
+    "ext-cluster",
+    "ext-fig18-socket",
+];
+
+/// Dispatch an experiment by id. `fig18` touches the real GVM and needs
+/// artifacts; everything else runs on the simulator.
+pub fn run(id: &str) -> Result<ExpOutput> {
+    match id {
+        "tab1" => tables::tab1(),
+        "tab3" => tables::tab3(),
+        "fig14" => figures::turnaround_figure("fig14", "vecadd"),
+        "fig15" => figures::turnaround_figure("fig15", "ep_m30"),
+        "fig16" => figures::model_validation("fig16", "ep_m24"),
+        "fig17" => figures::model_validation("fig17", "vecmul"),
+        "fig18" => figures::overhead_figure(),
+        "fig19" => figures::turnaround_figure("fig19", "matmul"),
+        "fig20" => figures::turnaround_figure("fig20", "mg"),
+        "fig21" => figures::turnaround_figure("fig21", "black_scholes"),
+        "fig22" => figures::turnaround_figure("fig22", "cg"),
+        "fig23" => figures::turnaround_figure("fig23", "electrostatics"),
+        "fig24" => figures::speedup_summary(),
+        "ablation-style" => ablations::style_matrix(),
+        "ablation-depcheck" => ablations::depcheck_semantics(),
+        "ablation-ctx" => ablations::ctx_switch_sweep(),
+        "ablation-barrier" => ablations::barrier_vs_immediate(),
+        "ablation-policy" => ablations::policy_rule_comparison(),
+        "ext-multigpu" => ablations::multi_gpu_scaling(),
+        "ext-cluster" => ablations::cluster_scaling(),
+        "ext-fig18-socket" => figures::overhead_socket_figure(),
+        other => Err(Error::Config(format!(
+            "unknown experiment {other:?}; known: {ALL_EXPERIMENTS:?}"
+        ))),
+    }
+}

@@ -1,0 +1,21 @@
+//! Inter-process communication between SPMD clients and the GVM.
+//!
+//! The paper implements this with POSIX shared memory (data) and POSIX
+//! message queues (requests + handshakes).  We provide the same
+//! architecture with two transports:
+//!
+//! * [`transport`] — a unix-domain-socket transport for *real* separate
+//!   OS processes (the `spmd_node` example re-execs itself into N client
+//!   processes), and length-prefixed framing shared by both sides;
+//! * in-process channels (used by [`crate::gvm::Gvm::connect`]) for
+//!   threads emulating processes — zero-copy, the lower bound on
+//!   virtualization-layer overhead.
+//!
+//! [`wire`] defines the message set, mirroring the paper's API verbs:
+//! `REQ`, `SND`, `STR`, `STP`, `RCV`, `RLS` (Fig. 13).
+
+pub mod transport;
+pub mod wire;
+
+pub use transport::{Framed, Transport};
+pub use wire::{ClientMsg, ServerMsg};

@@ -1,0 +1,135 @@
+//! Framing + transports.
+//!
+//! Frames are `len:u32le` + payload over any `Read + Write` stream (unix
+//! sockets for real multi-process runs).  The [`Transport`] trait also
+//! has an in-process implementation in [`crate::gvm`] built on channels.
+
+use std::io::{Read, Write};
+
+use crate::{Error, Result};
+
+/// Maximum frame size (guards against corrupt length prefixes).
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// Length-prefixed framing over a byte stream.
+pub struct Framed<S> {
+    stream: S,
+}
+
+impl<S: Read + Write> Framed<S> {
+    /// Wrap a stream.
+    pub fn new(stream: S) -> Self {
+        Self { stream }
+    }
+
+    /// Write one frame.
+    pub fn send(&mut self, payload: &[u8]) -> Result<()> {
+        let len = payload.len() as u32;
+        if len > MAX_FRAME {
+            return Err(Error::Ipc(format!("frame too large: {len}")));
+        }
+        self.stream.write_all(&len.to_le_bytes())?;
+        self.stream.write_all(payload)?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    /// Read one frame (blocking). `Ok(None)` on clean EOF.
+    pub fn recv(&mut self) -> Result<Option<Vec<u8>>> {
+        let mut len_buf = [0u8; 4];
+        match self.stream.read_exact(&mut len_buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                return Ok(None);
+            }
+            Err(e) => return Err(e.into()),
+        }
+        let len = u32::from_le_bytes(len_buf);
+        if len > MAX_FRAME {
+            return Err(Error::Ipc(format!("corrupt frame length {len}")));
+        }
+        let mut buf = vec![0u8; len as usize];
+        self.stream.read_exact(&mut buf)?;
+        Ok(Some(buf))
+    }
+
+    /// Access the inner stream (e.g. to clone a unix socket).
+    pub fn get_ref(&self) -> &S {
+        &self.stream
+    }
+}
+
+/// A bidirectional client transport: send a request, await the response.
+pub trait Transport: Send {
+    /// Send one client message and receive the GVM's reply.
+    fn call(
+        &mut self,
+        msg: crate::ipc::ClientMsg,
+    ) -> Result<crate::ipc::ServerMsg>;
+}
+
+/// Unix-domain-socket client transport (real multi-process mode).
+pub struct UnixTransport {
+    framed: Framed<std::os::unix::net::UnixStream>,
+}
+
+impl UnixTransport {
+    /// Connect to a GVM socket.
+    pub fn connect(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let stream = std::os::unix::net::UnixStream::connect(path)?;
+        Ok(Self {
+            framed: Framed::new(stream),
+        })
+    }
+}
+
+impl Transport for UnixTransport {
+    fn call(
+        &mut self,
+        msg: crate::ipc::ClientMsg,
+    ) -> Result<crate::ipc::ServerMsg> {
+        self.framed.send(&msg.encode())?;
+        let frame = self
+            .framed
+            .recv()?
+            .ok_or_else(|| Error::Ipc("GVM closed the connection".into()))?;
+        crate::ipc::ServerMsg::decode(&frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_over_pipe() {
+        // In-memory duplex via unix socketpair.
+        let (a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        let mut fa = Framed::new(a);
+        let mut fb = Framed::new(b);
+        fa.send(b"hello").unwrap();
+        fa.send(b"").unwrap();
+        assert_eq!(fb.recv().unwrap().unwrap(), b"hello");
+        assert_eq!(fb.recv().unwrap().unwrap(), b"");
+    }
+
+    #[test]
+    fn eof_is_none() {
+        let (a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        drop(a);
+        let mut fb = Framed::new(b);
+        assert!(fb.recv().unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_length_rejected() {
+        let (a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        let mut fb = Framed::new(b);
+        {
+            use std::io::Write;
+            let mut a = a;
+            a.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        }
+        assert!(fb.recv().is_err());
+    }
+}

@@ -1,0 +1,306 @@
+//! Wire message set + hand-rolled binary encoding (offline build: no
+//! serde).  Every message is encoded as `tag:u8` + fields; frames add a
+//! u32 length prefix (see [`super::transport`]).
+
+use crate::runtime::TensorValue;
+use crate::runtime::values::{read_arr, read_u64};
+use crate::{Error, Result};
+
+/// Client -> GVM messages (the paper's API verbs, Fig. 13).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientMsg {
+    /// `REQ()`: request a VGPU; registers the client.
+    Req {
+        /// Client display name (rank label).
+        name: String,
+    },
+    /// `SND()`: place one input tensor into the client's virtual shared
+    /// memory segment at `slot`.
+    Snd {
+        /// Segment slot index.
+        slot: u32,
+        /// Payload.
+        tensor: TensorValue,
+    },
+    /// `STR()`: start execution of `workload` over the staged slots.
+    Str {
+        /// Workload / artifact name.
+        workload: String,
+    },
+    /// `STP()`: block until the result is ready.
+    Stp,
+    /// `RCV()`: fetch one output tensor from segment `slot`.
+    Rcv {
+        /// Output slot index.
+        slot: u32,
+    },
+    /// `RLS()`: release the VGPU and all segment resources.
+    Rls,
+    /// Query GVM node statistics (observability extension).
+    Stats,
+}
+
+/// GVM -> client responses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServerMsg {
+    /// Generic acknowledgement (REQ/SND/RLS handshake).
+    Ack,
+    /// STR accepted; the job is queued behind the SPMD barrier.
+    Queued {
+        /// Ticket for correlation/debugging.
+        ticket: u64,
+    },
+    /// STP response: execution finished.
+    Done {
+        /// Wall-clock the job spent executing on the device inside the
+        /// GVM (the paper's "pure GPU time" for Fig. 18).
+        gpu_ms: f64,
+        /// Number of output slots available for `RCV`.
+        n_outputs: u32,
+    },
+    /// RCV response carrying an output tensor.
+    Data {
+        /// Payload.
+        tensor: TensorValue,
+    },
+    /// Any failure.
+    Err {
+        /// Human-readable cause.
+        msg: String,
+    },
+    /// Node statistics snapshot.
+    Stats {
+        /// Batches flushed since launch.
+        batches: u64,
+        /// Jobs completed.
+        jobs_ok: u64,
+        /// Jobs failed.
+        jobs_failed: u64,
+        /// Bytes staged through segments.
+        bytes_staged: u64,
+        /// Cumulative device execution time (ms).
+        device_ms: f64,
+        /// Currently registered clients.
+        clients: u32,
+    },
+}
+
+fn put_str(s: &str, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(s.len() as u64).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(buf: &[u8], pos: &mut usize) -> Result<String> {
+    let n = read_u64(buf, pos)? as usize;
+    if n > 1 << 20 {
+        return Err(Error::Ipc(format!("implausible string len {n}")));
+    }
+    let end = *pos + n;
+    let bytes = buf
+        .get(*pos..end)
+        .ok_or_else(|| Error::Ipc("truncated string".into()))?;
+    *pos = end;
+    String::from_utf8(bytes.to_vec()).map_err(|e| Error::Ipc(format!("bad utf8: {e}")))
+}
+
+impl ClientMsg {
+    /// Encode to bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            ClientMsg::Req { name } => {
+                out.push(0);
+                put_str(name, &mut out);
+            }
+            ClientMsg::Snd { slot, tensor } => {
+                out.push(1);
+                out.extend_from_slice(&slot.to_le_bytes());
+                tensor.encode(&mut out);
+            }
+            ClientMsg::Str { workload } => {
+                out.push(2);
+                put_str(workload, &mut out);
+            }
+            ClientMsg::Stp => out.push(3),
+            ClientMsg::Rcv { slot } => {
+                out.push(4);
+                out.extend_from_slice(&slot.to_le_bytes());
+            }
+            ClientMsg::Rls => out.push(5),
+            ClientMsg::Stats => out.push(6),
+        }
+        out
+    }
+
+    /// Decode from bytes.
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let tag = *buf
+            .first()
+            .ok_or_else(|| Error::Ipc("empty client message".into()))?;
+        pos += 1;
+        let msg = match tag {
+            0 => ClientMsg::Req {
+                name: get_str(buf, &mut pos)?,
+            },
+            1 => {
+                let slot = u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
+                let tensor = TensorValue::decode(buf, &mut pos)?;
+                ClientMsg::Snd { slot, tensor }
+            }
+            2 => ClientMsg::Str {
+                workload: get_str(buf, &mut pos)?,
+            },
+            3 => ClientMsg::Stp,
+            4 => ClientMsg::Rcv {
+                slot: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
+            },
+            5 => ClientMsg::Rls,
+            6 => ClientMsg::Stats,
+            t => return Err(Error::Ipc(format!("bad client tag {t}"))),
+        };
+        Ok(msg)
+    }
+}
+
+impl ServerMsg {
+    /// Encode to bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            ServerMsg::Ack => out.push(0),
+            ServerMsg::Queued { ticket } => {
+                out.push(1);
+                out.extend_from_slice(&ticket.to_le_bytes());
+            }
+            ServerMsg::Done { gpu_ms, n_outputs } => {
+                out.push(2);
+                out.extend_from_slice(&gpu_ms.to_le_bytes());
+                out.extend_from_slice(&n_outputs.to_le_bytes());
+            }
+            ServerMsg::Data { tensor } => {
+                out.push(3);
+                tensor.encode(&mut out);
+            }
+            ServerMsg::Err { msg } => {
+                out.push(4);
+                put_str(msg, &mut out);
+            }
+            ServerMsg::Stats {
+                batches,
+                jobs_ok,
+                jobs_failed,
+                bytes_staged,
+                device_ms,
+                clients,
+            } => {
+                out.push(5);
+                out.extend_from_slice(&batches.to_le_bytes());
+                out.extend_from_slice(&jobs_ok.to_le_bytes());
+                out.extend_from_slice(&jobs_failed.to_le_bytes());
+                out.extend_from_slice(&bytes_staged.to_le_bytes());
+                out.extend_from_slice(&device_ms.to_le_bytes());
+                out.extend_from_slice(&clients.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Decode from bytes.
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let tag = *buf
+            .first()
+            .ok_or_else(|| Error::Ipc("empty server message".into()))?;
+        pos += 1;
+        let msg = match tag {
+            0 => ServerMsg::Ack,
+            1 => ServerMsg::Queued {
+                ticket: read_u64(buf, &mut pos)?,
+            },
+            2 => {
+                let gpu_ms = f64::from_le_bytes(read_arr::<8>(buf, &mut pos)?);
+                let n_outputs = u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
+                ServerMsg::Done { gpu_ms, n_outputs }
+            }
+            3 => ServerMsg::Data {
+                tensor: TensorValue::decode(buf, &mut pos)?,
+            },
+            4 => ServerMsg::Err {
+                msg: get_str(buf, &mut pos)?,
+            },
+            5 => ServerMsg::Stats {
+                batches: read_u64(buf, &mut pos)?,
+                jobs_ok: read_u64(buf, &mut pos)?,
+                jobs_failed: read_u64(buf, &mut pos)?,
+                bytes_staged: read_u64(buf, &mut pos)?,
+                device_ms: f64::from_le_bytes(read_arr::<8>(buf, &mut pos)?),
+                clients: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
+            },
+            t => return Err(Error::Ipc(format!("bad server tag {t}"))),
+        };
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_c(m: ClientMsg) {
+        assert_eq!(ClientMsg::decode(&m.encode()).unwrap(), m);
+    }
+
+    fn roundtrip_s(m: ServerMsg) {
+        assert_eq!(ServerMsg::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn client_roundtrips() {
+        roundtrip_c(ClientMsg::Req {
+            name: "rank7".into(),
+        });
+        roundtrip_c(ClientMsg::Snd {
+            slot: 3,
+            tensor: TensorValue::F32(vec![2], vec![1.0, -2.0]),
+        });
+        roundtrip_c(ClientMsg::Str {
+            workload: "vecadd".into(),
+        });
+        roundtrip_c(ClientMsg::Stp);
+        roundtrip_c(ClientMsg::Rcv { slot: 1 });
+        roundtrip_c(ClientMsg::Rls);
+        roundtrip_c(ClientMsg::Stats);
+    }
+
+    #[test]
+    fn server_roundtrips() {
+        roundtrip_s(ServerMsg::Ack);
+        roundtrip_s(ServerMsg::Queued { ticket: 99 });
+        roundtrip_s(ServerMsg::Done {
+            gpu_ms: 12.5,
+            n_outputs: 2,
+        });
+        roundtrip_s(ServerMsg::Data {
+            tensor: TensorValue::F64(vec![], vec![3.125]),
+        });
+        roundtrip_s(ServerMsg::Err {
+            msg: "nope".into(),
+        });
+        roundtrip_s(ServerMsg::Stats {
+            batches: 3,
+            jobs_ok: 24,
+            jobs_failed: 1,
+            bytes_staged: 1 << 30,
+            device_ms: 123.5,
+            clients: 8,
+        });
+    }
+
+    #[test]
+    fn decode_rejects_bad_tags() {
+        assert!(ClientMsg::decode(&[77]).is_err());
+        assert!(ServerMsg::decode(&[77]).is_err());
+        assert!(ClientMsg::decode(&[]).is_err());
+    }
+}

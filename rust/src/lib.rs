@@ -1,0 +1,64 @@
+//! # vgpu — GPU virtualization for SPMD resource sharing
+//!
+//! Production-grade reproduction of *"Efficient Resource Sharing Through
+//! GPU Virtualization on Accelerated High Performance Computing Systems"*
+//! (Li, Narayana, El-Ghazawi, 2015).
+//!
+//! HPC nodes pair many CPU cores with few GPUs; under SPMD every process
+//! needs its own accelerator.  This crate virtualizes one physical device
+//! into `N` **VGPU**s through a user-space daemon — the **GPU
+//! Virtualization Manager (GVM)** — that owns the single device context
+//! and multiplexes per-process work onto concurrent streams:
+//!
+//! * [`gvm`] — the coordinator: VGPU registry, request queues, SPMD
+//!   barriers, the PS-1/PS-2 stream scheduler, and the no-virtualization
+//!   baseline executor.
+//! * [`api`] — the client-side VGPU handle implementing the paper's
+//!   `REQ/SND/STR/STP/RCV/RLS` protocol.
+//! * [`ipc`] — wire protocol + transports (unix socket, in-process).
+//! * [`gpusim`] — a discrete-event Fermi-class GPU simulator (SM pool,
+//!   single hardware work queue, dual copy engines, context switching);
+//!   the substitute for the paper's Tesla C2070 testbed.
+//! * [`runtime`] — PJRT CPU runtime executing the AOT-compiled JAX/Pallas
+//!   kernels from `artifacts/*.hlo.txt` for real numerics.
+//! * [`model`] — the paper's analytical execution model (Eqs. 1–11).
+//! * [`workloads`] — the Table 3 benchmark suite and its cost profiles.
+//! * [`harness`] — drivers regenerating every figure/table of the paper.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use vgpu::gvm::{Gvm, GvmConfig};
+//! use vgpu::runtime::TensorValue;
+//!
+//! let gvm = Gvm::launch(GvmConfig::default()).unwrap();
+//! let mut v = gvm.connect("rank0").unwrap();               // REQ
+//! let n = 262_144;
+//! v.snd(0, TensorValue::F32(vec![n], vec![1.0; n])).unwrap(); // SND
+//! v.snd(1, TensorValue::F32(vec![n], vec![2.0; n])).unwrap();
+//! v.str_("vecadd").unwrap();                               // STR
+//! let done = v.stp().unwrap();                             // STP
+//! let out = v.rcv(0).unwrap();                             // RCV
+//! v.rls().unwrap();                                        // RLS
+//! assert_eq!(out.elems(), n);
+//! # drop(done);
+//! ```
+
+pub mod api;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod error;
+pub mod gpusim;
+pub mod gvm;
+pub mod harness;
+pub mod ipc;
+pub mod metrics;
+pub mod model;
+pub mod profile;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+pub mod workloads;
+
+pub use error::{Error, Result};

@@ -1,0 +1,302 @@
+//! `vgpu` — leader binary: experiments, the GVM daemon, SPMD runs.
+
+use std::time::Instant;
+
+use vgpu::cli::{parse, Cmd, USAGE};
+use vgpu::harness;
+use vgpu::runtime::TensorValue;
+use vgpu::util::rng::SplitMix64;
+use vgpu::{Error, Result};
+
+fn main() {
+    init_logging();
+    let cmd = match parse(std::env::args().skip(1)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(cmd) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn init_logging() {
+    struct StderrLog;
+    impl log::Log for StderrLog {
+        fn enabled(&self, meta: &log::Metadata) -> bool {
+            meta.level() <= log::Level::Info
+        }
+        fn log(&self, rec: &log::Record) {
+            if self.enabled(rec.metadata()) {
+                eprintln!("[{}] {}", rec.level(), rec.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: StderrLog = StderrLog;
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(log::LevelFilter::Info);
+}
+
+fn dispatch(cmd: Cmd) -> Result<()> {
+    match cmd {
+        Cmd::Help => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Cmd::Exp { id, results_dir } => cmd_exp(&id, &results_dir),
+        Cmd::List => cmd_list(),
+        Cmd::Plot { id, results_dir } => cmd_plot(&id, &results_dir),
+        Cmd::Trace {
+            workload,
+            n,
+            out,
+            baseline,
+        } => cmd_trace(&workload, n, &out, baseline),
+        Cmd::Profile => cmd_profile(),
+        Cmd::Run { workload, n, reps } => cmd_run(&workload, n, reps),
+        Cmd::Serve {
+            socket,
+            barrier,
+            config,
+        } => cmd_serve(&socket, barrier, config.as_deref()),
+    }
+}
+
+fn cmd_exp(id: &str, results_dir: &str) -> Result<()> {
+    let ids: Vec<&str> = if id == "all" {
+        harness::ALL_EXPERIMENTS.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        let t0 = Instant::now();
+        let out = harness::run(id)?;
+        println!("{}", out.render());
+        let path = out.save(std::path::Path::new(results_dir))?;
+        println!(
+            "[saved {} in {:.1}s]\n",
+            path.display(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}
+
+/// ASCII-plot a figure from its TSV (regenerating it if needed).
+fn cmd_plot(id: &str, results_dir: &str) -> Result<()> {
+    let path = std::path::Path::new(results_dir).join(format!("{id}.tsv"));
+    if !path.exists() {
+        let out = harness::run(id)?;
+        out.save(std::path::Path::new(results_dir))?;
+    }
+    let tsv = std::fs::read_to_string(&path)?;
+    let series = vgpu::util::plot::series_from_tsv(&tsv);
+    if series.is_empty() {
+        return Err(Error::Config(format!(
+            "{id}: no plottable numeric series in {}",
+            path.display()
+        )));
+    }
+    println!("{id} ({}):
+", path.display());
+    println!("{}", vgpu::util::plot::render(&series, 64, 18));
+    Ok(())
+}
+
+/// Export a chrome-trace timeline of one simulated batch.
+fn cmd_trace(workload: &str, n: usize, out: &str, baseline: bool) -> Result<()> {
+    use vgpu::gvm::scheduler::{jobs_for_workload, plan_batch};
+    use vgpu::gvm::sim_backend::simulate_traced;
+    let suite = vgpu::workloads::Suite::paper_defaults();
+    let w = suite
+        .get(workload)
+        .ok_or_else(|| Error::Config(format!("unknown workload {workload}")))?;
+    let dev = vgpu::config::DeviceConfig::tesla_c2070();
+    let plan = if baseline {
+        vgpu::gvm::Plan::no_virt(jobs_for_workload(w, n))
+    } else {
+        plan_batch(jobs_for_workload(w, n), &Default::default())
+    };
+    let (timing, trace) = simulate_traced(&plan, &dev)?;
+    std::fs::write(out, trace.to_chrome_trace_json())?;
+    println!(
+        "{workload} x{n} ({}): {:.2}ms, {} ops -> {out} (open in chrome://tracing)",
+        if baseline { "no-virt" } else { "virtualized" },
+        timing.total_ms,
+        trace.ops.len()
+    );
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let suite = vgpu::workloads::Suite::paper_defaults();
+    println!("workloads (paper Table 3):");
+    for w in suite.all() {
+        println!(
+            "  {:16} {:18} grid {:>6}  {}",
+            w.name,
+            w.paper_class.to_string(),
+            w.grid,
+            w.problem
+        );
+    }
+    match vgpu::profile::Manifest::load(&vgpu::runtime::default_artifacts_dir()) {
+        Ok(m) => {
+            let mut names: Vec<&String> = m.artifacts.keys().collect();
+            names.sort();
+            println!("\nartifacts ({}):", names.len());
+            for n in names {
+                let a = &m.artifacts[n];
+                println!(
+                    "  {:16} {} inputs, {} outputs",
+                    n,
+                    a.inputs.len(),
+                    a.outputs.len()
+                );
+            }
+        }
+        Err(_) => println!("\nartifacts: not built (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn cmd_profile() -> Result<()> {
+    let suite = vgpu::workloads::Suite::paper_defaults();
+    let out = harness::tables::tab3()?;
+    println!("{}", out.render());
+    println!("calibration: t_in/t_out = bytes / {} bytes-per-ms (PCIe 2.0 x16 pinned)",
+        vgpu::workloads::PCIE_BYTES_PER_MS);
+    let dev = vgpu::config::DeviceConfig::tesla_c2070();
+    println!(
+        "device model: {} SMs x {} blocks, <= {} concurrent kernels, \
+         T_init {}ms, T_ctx_switch {}ms",
+        dev.n_sms,
+        dev.blocks_per_sm,
+        dev.max_concurrent_kernels,
+        dev.t_init_ms,
+        dev.t_ctx_switch_ms
+    );
+    for w in suite.all() {
+        let bound_ci = vgpu::model::max_speedup_ci(
+            w.stages,
+            vgpu::model::Overheads {
+                t_init: dev.t_init_ms,
+                t_ctx_switch: dev.t_ctx_switch_ms,
+            },
+        );
+        println!("  {:16} Eq.10 speedup bound {:8.2}x", w.name, bound_ci);
+    }
+    Ok(())
+}
+
+/// Emulated SPMD run on the real runtime: N in-proc clients, one barrier
+/// batch per rep; reports turnaround + throughput.
+fn cmd_run(workload: &str, n: usize, reps: usize) -> Result<()> {
+    use vgpu::gvm::{Gvm, GvmConfig};
+    let suite = vgpu::workloads::Suite::paper_defaults();
+    let artifact = match suite.get(workload) {
+        Some(w) => w
+            .artifact
+            .ok_or_else(|| {
+                Error::Config(format!("{workload} has no runnable artifact"))
+            })?
+            .to_string(),
+        None => workload.to_string(),
+    };
+
+    let mut cfg = GvmConfig::default();
+    cfg.daemon.barrier = Some(n);
+    cfg.preload = vec![artifact.clone()];
+    let gvm = Gvm::launch(cfg)?;
+    println!("GVM up; artifact {artifact:?}; {n} SPMD processes x {reps} reps");
+
+    let inputs = example_inputs(&artifact)?;
+    let total = Instant::now();
+    let mut all_ms: Vec<f64> = Vec::new();
+    for rep in 0..reps {
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let mut client = gvm.connect(&format!("rank{rank}"))?;
+                let inputs = inputs.clone();
+                Ok(std::thread::spawn(move || -> Result<f64> {
+                    let t = Instant::now();
+                    let (_outs, _done) = client.run(&artifact_name(&inputs), &inputs.1)?;
+                    client.rls()?;
+                    Ok(t.elapsed().as_secs_f64() * 1e3)
+                }))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut worst: f64 = 0.0;
+        for h in handles {
+            let ms = h
+                .join()
+                .map_err(|_| Error::Runtime("client thread panicked".into()))??;
+            worst = worst.max(ms);
+        }
+        all_ms.push(worst);
+        println!("rep {rep}: turnaround {:.2}ms", t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let total_ms = total.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "done: {} requests in {:.1}ms -> {:.1} req/s; worst-rank turnaround mean {:.2}ms",
+        n * reps,
+        total_ms,
+        vgpu::metrics::req_per_sec(n * reps, total_ms),
+        vgpu::util::mean(&all_ms),
+    );
+    Ok(())
+}
+
+/// Deterministic example inputs per artifact (shape-correct).
+fn example_inputs(artifact: &str) -> Result<(String, Vec<TensorValue>)> {
+    let manifest = vgpu::profile::Manifest::load(&vgpu::runtime::default_artifacts_dir())?;
+    let meta = manifest.get(artifact)?;
+    let mut rng = SplitMix64::new(0xBEEF);
+    let mut inputs = Vec::new();
+    for spec in &meta.inputs {
+        let n = spec.elems();
+        match spec.dtype {
+            vgpu::profile::DType::F32 => {
+                inputs.push(TensorValue::F32(
+                    spec.dims.clone(),
+                    rng.vec_f32(n, 0.5, 1.5),
+                ));
+            }
+            vgpu::profile::DType::F64 => {
+                // EP seeds: must be valid NAS LCG states; use the default
+                // seed replicated (exercises the kernel deterministically).
+                inputs.push(TensorValue::F64(
+                    spec.dims.clone(),
+                    vec![271828183.0; n],
+                ));
+            }
+            vgpu::profile::DType::I32 => {
+                return Err(Error::Runtime("i32 inputs unsupported".into()))
+            }
+        }
+    }
+    Ok((artifact.to_string(), inputs))
+}
+
+fn artifact_name(inputs: &(String, Vec<TensorValue>)) -> String {
+    inputs.0.clone()
+}
+
+fn cmd_serve(socket: &str, barrier: Option<usize>, config: Option<&str>) -> Result<()> {
+    use vgpu::gvm::{serve_unix, Gvm, GvmConfig};
+    let mut cfg = match config {
+        Some(path) => vgpu::config::ConfigFile::load(path)?.gvm()?,
+        None => GvmConfig::default(),
+    };
+    if barrier.is_some() {
+        cfg.daemon.barrier = barrier;
+    }
+    let gvm = Gvm::launch(cfg)?;
+    println!("GVM serving on {socket} (barrier: {barrier:?}); ctrl-c to stop");
+    serve_unix(&gvm, std::path::Path::new(socket))
+}

@@ -1,0 +1,127 @@
+//! Timing metrics: stopwatches, run statistics, speedup summaries.
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch (ms).
+#[derive(Debug)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    /// Start now.
+    pub fn start() -> Self {
+        Self { t0: Instant::now() }
+    }
+
+    /// Elapsed milliseconds.
+    pub fn ms(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Restart and return the lap time.
+    pub fn lap(&mut self) -> f64 {
+        let ms = self.ms();
+        self.t0 = Instant::now();
+        ms
+    }
+}
+
+/// Aggregate statistics over repeated measurements.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    samples: Vec<f64>,
+}
+
+impl RunStats {
+    /// New empty accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample (ms).
+    pub fn push(&mut self, ms: f64) {
+        self.samples.push(ms);
+    }
+
+    /// Sample count.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Mean (ms).
+    pub fn mean(&self) -> f64 {
+        crate::util::mean(&self.samples)
+    }
+
+    /// Minimum (ms) — the preferred benchmark statistic.
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Population standard deviation.
+    pub fn stddev(&self) -> f64 {
+        crate::util::stddev(&self.samples)
+    }
+
+    /// p-th percentile.
+    pub fn percentile(&self, p: f64) -> f64 {
+        crate::util::percentile(&self.samples, p)
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} min={} mean={} p95={} sd={}",
+            self.len(),
+            crate::util::fmt_ms(self.min()),
+            crate::util::fmt_ms(self.mean()),
+            crate::util::fmt_ms(self.percentile(95.0)),
+            crate::util::fmt_ms(self.stddev()),
+        )
+    }
+}
+
+/// Throughput helper: requests per second from count + elapsed ms.
+pub fn req_per_sec(count: usize, elapsed_ms: f64) -> f64 {
+    if elapsed_ms <= 0.0 {
+        0.0
+    } else {
+        count as f64 / (elapsed_ms / 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = RunStats::new();
+        for x in [1.0, 2.0, 3.0] {
+            s.push(x);
+        }
+        assert_eq!(s.len(), 3);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert!((s.min() - 1.0).abs() < 1e-12);
+        assert!(!s.summary().is_empty());
+    }
+
+    #[test]
+    fn throughput() {
+        assert!((req_per_sec(100, 1000.0) - 100.0).abs() < 1e-12);
+        assert_eq!(req_per_sec(100, 0.0), 0.0);
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let w = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(w.ms() >= 1.0);
+    }
+}

@@ -1,0 +1,254 @@
+//! The paper's analytical execution model — Equations (1)–(11) of §4.
+//!
+//! Inputs are the per-stage timings of one kernel instance
+//! ([`StageTimes`]) plus the node overheads; outputs are predicted total
+//! times for `N_process` SPMD instances under each execution scheme, and
+//! the derived speedups/bounds.  The harness validates the simulator
+//! against these equations (Figs. 16/17), and tests require exact
+//! agreement under the model's idealized assumptions.
+
+/// Per-stage timings for one kernel instance (Fig. 2's execution cycle).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageTimes {
+    /// Input transfer time `T_data_in` (ms).
+    pub t_in: f64,
+    /// Kernel compute time `T_comp` (ms).
+    pub t_comp: f64,
+    /// Output transfer time `T_data_out` (ms).
+    pub t_out: f64,
+}
+
+/// Node overheads appearing in Eq. (1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Overheads {
+    /// Per-process GPU/context initialization `T_init` (ms).
+    pub t_init: f64,
+    /// Inter-process context switch `T_ctx_switch` (ms).
+    pub t_ctx_switch: f64,
+}
+
+/// Kernel class per the paper's simplified taxonomy (§4.2.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelClass {
+    /// `T_in <= T_comp && T_out <= T_comp`.
+    ComputeIntensive,
+    /// `T_in > T_comp && T_out > T_comp`.
+    IoIntensive,
+    /// Everything in between (MM in Table 3).
+    Intermediate,
+}
+
+impl std::fmt::Display for KernelClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KernelClass::ComputeIntensive => write!(f, "Compute-Intensive"),
+            KernelClass::IoIntensive => write!(f, "I/O-Intensive"),
+            KernelClass::Intermediate => write!(f, "Intermediate"),
+        }
+    }
+}
+
+/// Classify stage timings per the paper's predicate.
+pub fn classify(st: StageTimes) -> KernelClass {
+    if st.t_in <= st.t_comp && st.t_out <= st.t_comp {
+        KernelClass::ComputeIntensive
+    } else if st.t_in > st.t_comp && st.t_out > st.t_comp {
+        KernelClass::IoIntensive
+    } else {
+        KernelClass::Intermediate
+    }
+}
+
+/// Stream programming style (§4.2.1, Listings 1 & 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Style {
+    /// Batched phases — kernel-concurrency-first (Listing 1).
+    Ps1,
+    /// Per-stream sequences — I/O-overlap-first (Listing 2).
+    Ps2,
+}
+
+/// Eq. (1): total time without virtualization (sequential contexts).
+pub fn t_total_no_vt(n: usize, st: StageTimes, ov: Overheads) -> f64 {
+    let n_f = n as f64;
+    n_f * (ov.t_init + st.t_in + st.t_comp + st.t_out)
+        + (n_f - 1.0).max(0.0) * ov.t_ctx_switch
+}
+
+/// Eq. (2): C-I kernels under PS-1 (kernels fully concurrent).
+pub fn t_total_ci_ps1(n: usize, st: StageTimes) -> f64 {
+    n as f64 * (st.t_in + st.t_out) + st.t_comp
+}
+
+/// Eq. (3): C-I kernels under PS-2 (computes serialized by dep-checks).
+pub fn t_total_ci_ps2(n: usize, st: StageTimes) -> f64 {
+    st.t_in + n as f64 * st.t_comp + st.t_out
+}
+
+/// Eq. (4): IO-I kernels under PS-1 (same algebra as Eq. 2).
+pub fn t_total_ioi_ps1(n: usize, st: StageTimes) -> f64 {
+    t_total_ci_ps1(n, st)
+}
+
+/// Eq. (7) (combining Eqs. 5 & 6): IO-I kernels under PS-2.
+pub fn t_total_ioi_ps2(n: usize, st: StageTimes) -> f64 {
+    n as f64 * st.t_in.max(st.t_out) + st.t_comp + st.t_in.min(st.t_out)
+}
+
+/// Predicted virtualized total for a class, using the style the GVM
+/// selects for it (PS-1 for C-I, PS-2 for IO-I; intermediate kernels use
+/// PS-1, which the paper's MM analysis corresponds to).
+pub fn t_total_virtualized(n: usize, st: StageTimes) -> f64 {
+    match classify(st) {
+        KernelClass::ComputeIntensive | KernelClass::Intermediate => {
+            t_total_ci_ps1(n, st)
+        }
+        KernelClass::IoIntensive => t_total_ioi_ps2(n, st),
+    }
+}
+
+/// Predicted total for an explicit (class, style) combination.
+pub fn t_total_for(style: Style, class: KernelClass, n: usize, st: StageTimes) -> f64 {
+    match (style, class) {
+        (Style::Ps1, KernelClass::IoIntensive) => t_total_ioi_ps1(n, st),
+        (Style::Ps1, _) => t_total_ci_ps1(n, st),
+        (Style::Ps2, KernelClass::IoIntensive) => t_total_ioi_ps2(n, st),
+        (Style::Ps2, _) => t_total_ci_ps2(n, st),
+    }
+}
+
+/// Eq. (8): speedup for C-I kernels (PS-1 vs no-virt).
+pub fn speedup_ci(n: usize, st: StageTimes, ov: Overheads) -> f64 {
+    t_total_no_vt(n, st, ov) / t_total_ci_ps1(n, st)
+}
+
+/// Eq. (9): speedup for IO-I kernels (PS-2 vs no-virt).
+pub fn speedup_ioi(n: usize, st: StageTimes, ov: Overheads) -> f64 {
+    t_total_no_vt(n, st, ov) / t_total_ioi_ps2(n, st)
+}
+
+/// Eq. (10): asymptotic C-I speedup bound as `N -> inf`.
+pub fn max_speedup_ci(st: StageTimes, ov: Overheads) -> f64 {
+    (ov.t_init + st.t_in + st.t_comp + st.t_out + ov.t_ctx_switch)
+        / (st.t_in + st.t_out)
+}
+
+/// Eq. (11): asymptotic IO-I speedup bound as `N -> inf`.
+pub fn max_speedup_ioi(st: StageTimes, ov: Overheads) -> f64 {
+    (ov.t_init + st.t_in + st.t_comp + st.t_out + ov.t_ctx_switch)
+        / st.t_in.max(st.t_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CI: StageTimes = StageTimes {
+        t_in: 1.0,
+        t_comp: 10.0,
+        t_out: 2.0,
+    };
+    const IOI: StageTimes = StageTimes {
+        t_in: 10.0,
+        t_comp: 1.0,
+        t_out: 8.0,
+    };
+    const OV: Overheads = Overheads {
+        t_init: 5.0,
+        t_ctx_switch: 2.0,
+    };
+
+    #[test]
+    fn classification() {
+        assert_eq!(classify(CI), KernelClass::ComputeIntensive);
+        assert_eq!(classify(IOI), KernelClass::IoIntensive);
+        let mid = StageTimes {
+            t_in: 5.0,
+            t_comp: 4.0,
+            t_out: 1.0,
+        };
+        assert_eq!(classify(mid), KernelClass::Intermediate);
+    }
+
+    #[test]
+    fn eq1_matches_hand_calc() {
+        // 4*(5+1+10+2) + 3*2 = 72 + 6 = 78
+        assert!((t_total_no_vt(4, CI, OV) - 78.0).abs() < 1e-12);
+        // N=1: no context switch term.
+        assert!((t_total_no_vt(1, CI, OV) - 18.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq2_eq3_ps1_beats_ps2_for_ci() {
+        let n = 8;
+        let ps1 = t_total_ci_ps1(n, CI); // 8*3 + 10 = 34
+        let ps2 = t_total_ci_ps2(n, CI); // 1 + 80 + 2 = 83
+        assert!((ps1 - 34.0).abs() < 1e-12);
+        assert!((ps2 - 83.0).abs() < 1e-12);
+        assert!(ps1 < ps2, "paper's §4.2.3 conclusion for C-I");
+    }
+
+    #[test]
+    fn eq4_eq7_ps2_beats_ps1_for_ioi() {
+        let n = 8;
+        let ps1 = t_total_ioi_ps1(n, IOI); // 8*18 + 1 = 145
+        let ps2 = t_total_ioi_ps2(n, IOI); // 8*10 + 1 + 8 = 89
+        assert!((ps1 - 145.0).abs() < 1e-12);
+        assert!((ps2 - 89.0).abs() < 1e-12);
+        assert!(ps2 < ps1, "paper's §4.2.3 conclusion for IO-I");
+    }
+
+    #[test]
+    fn eq7_symmetric_cases() {
+        // T_out >= T_in branch (Eq. 6).
+        let st = StageTimes {
+            t_in: 3.0,
+            t_comp: 1.0,
+            t_out: 7.0,
+        };
+        // 4*7 + 1 + 3 = 32
+        assert!((t_total_ioi_ps2(4, st) - 32.0).abs() < 1e-12);
+        // T_out < T_in branch (Eq. 5).
+        let st2 = StageTimes {
+            t_in: 7.0,
+            t_comp: 1.0,
+            t_out: 3.0,
+        };
+        assert!((t_total_ioi_ps2(4, st2) - 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_monotone_in_n() {
+        let mut last = 0.0;
+        for n in 1..=16 {
+            let s = speedup_ci(n, CI, OV);
+            assert!(s > last, "speedup should grow with N");
+            last = s;
+        }
+        // ... and approach the Eq. (10) bound from below.
+        let bound = max_speedup_ci(CI, OV);
+        assert!(last < bound);
+        let s_huge = speedup_ci(100_000, CI, OV);
+        assert!((s_huge - bound).abs() / bound < 1e-3);
+    }
+
+    #[test]
+    fn eq10_eq11_limits() {
+        // (5+1+10+2+2)/(1+2) = 20/3
+        assert!((max_speedup_ci(CI, OV) - 20.0 / 3.0).abs() < 1e-12);
+        // (5+10+1+8+2)/max(10,8) = 26/10
+        assert!((max_speedup_ioi(IOI, OV) - 2.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn virtualized_picks_best_style() {
+        assert_eq!(
+            t_total_virtualized(8, CI),
+            t_total_ci_ps1(8, CI),
+        );
+        assert_eq!(
+            t_total_virtualized(8, IOI),
+            t_total_ioi_ps2(8, IOI),
+        );
+    }
+}

@@ -1,0 +1,249 @@
+//! Artifact metadata: the manifest and host-measured profiles emitted by
+//! `python/compile/aot.py`, plus the cost-scaling bridge between
+//! artifact-scale host measurements and paper-scale simulator profiles.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::{Error, Result};
+
+/// Element type of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    /// 32-bit float.
+    F32,
+    /// 64-bit float.
+    F64,
+    /// 32-bit signed int.
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "f64" => Ok(DType::F64),
+            "i32" => Ok(DType::I32),
+            other => Err(Error::Artifact(format!("unknown dtype tag {other:?}"))),
+        }
+    }
+
+    /// Bytes per element.
+    pub fn size(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F64 => 8,
+        }
+    }
+}
+
+/// Shape + dtype of one artifact operand.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Element type.
+    pub dtype: DType,
+    /// Dimensions (empty = scalar).
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    fn parse(s: &str) -> Result<Self> {
+        let (d, rest) = s
+            .split_once(':')
+            .ok_or_else(|| Error::Artifact(format!("bad tensor spec {s:?}")))?;
+        let dims = if rest.is_empty() {
+            vec![]
+        } else {
+            rest.split(',')
+                .map(|x| {
+                    x.parse::<usize>()
+                        .map_err(|e| Error::Artifact(format!("bad dim {x:?}: {e}")))
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec {
+            dtype: DType::parse(d)?,
+            dims,
+        })
+    }
+
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    /// Total byte size.
+    pub fn bytes(&self) -> usize {
+        self.elems() * self.dtype.size()
+    }
+}
+
+/// One row of `artifacts/manifest.tsv`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Benchmark name (artifact stem).
+    pub name: String,
+    /// HLO file name relative to the artifacts dir.
+    pub file: String,
+    /// Input operand specs, in call order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output leaf specs, in tuple order.
+    pub outputs: Vec<TensorSpec>,
+    /// Table 3 class tag from the python side ("ci"/"ioi"/"intermediate").
+    pub class_tag: String,
+    /// Grid size at paper scale.
+    pub paper_grid: u32,
+    /// Pallas grid steps at artifact scale.
+    pub artifact_grid: u32,
+}
+
+/// One row of `artifacts/profiles.tsv` — host-measured cost.
+#[derive(Debug, Clone, Copy)]
+pub struct HostProfile {
+    /// Best-of-N wall clock of the jitted artifact-sized problem, ms.
+    pub comp_ms: f64,
+    /// Input bytes at artifact scale.
+    pub in_bytes: u64,
+    /// Output bytes at artifact scale.
+    pub out_bytes: u64,
+}
+
+/// Parsed artifact directory metadata.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// Artifact rows keyed by name.
+    pub artifacts: HashMap<String, ArtifactMeta>,
+    /// Host profiles keyed by name (may be absent if `--skip-profile`).
+    pub profiles: HashMap<String, HostProfile>,
+}
+
+impl Manifest {
+    /// Load `manifest.tsv` (+ `profiles.tsv` if present) from a dir.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let mpath = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&mpath).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                mpath.display()
+            ))
+        })?;
+        let mut artifacts = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 7 {
+                return Err(Error::Artifact(format!(
+                    "manifest row has {} fields, want 7: {line:?}",
+                    f.len()
+                )));
+            }
+            let meta = ArtifactMeta {
+                name: f[0].to_string(),
+                file: f[1].to_string(),
+                inputs: f[2]
+                    .split(';')
+                    .map(TensorSpec::parse)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: f[3]
+                    .split(';')
+                    .map(TensorSpec::parse)
+                    .collect::<Result<Vec<_>>>()?,
+                class_tag: f[4].to_string(),
+                paper_grid: f[5]
+                    .parse()
+                    .map_err(|e| Error::Artifact(format!("bad grid: {e}")))?,
+                artifact_grid: f[6]
+                    .parse()
+                    .map_err(|e| Error::Artifact(format!("bad grid: {e}")))?,
+            };
+            artifacts.insert(meta.name.clone(), meta);
+        }
+
+        let mut profiles = HashMap::new();
+        if let Ok(text) = std::fs::read_to_string(dir.join("profiles.tsv")) {
+            for line in text.lines() {
+                let line = line.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                let f: Vec<&str> = line.split('\t').collect();
+                if f.len() != 4 {
+                    return Err(Error::Artifact(format!(
+                        "profile row has {} fields, want 4: {line:?}",
+                        f.len()
+                    )));
+                }
+                profiles.insert(
+                    f[0].to_string(),
+                    HostProfile {
+                        comp_ms: f[1]
+                            .parse()
+                            .map_err(|e| Error::Artifact(format!("bad ms: {e}")))?,
+                        in_bytes: f[2]
+                            .parse()
+                            .map_err(|e| Error::Artifact(format!("bad bytes: {e}")))?,
+                        out_bytes: f[3]
+                            .parse()
+                            .map_err(|e| Error::Artifact(format!("bad bytes: {e}")))?,
+                    },
+                );
+            }
+        }
+        Ok(Self {
+            artifacts,
+            profiles,
+        })
+    }
+
+    /// Artifact metadata by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts.get(name).ok_or_else(|| {
+            Error::Artifact(format!(
+                "no artifact {name:?} in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_roundtrip() {
+        let t = TensorSpec::parse("f32:128,64").unwrap();
+        assert_eq!(t.dtype, DType::F32);
+        assert_eq!(t.dims, vec![128, 64]);
+        assert_eq!(t.elems(), 8192);
+        assert_eq!(t.bytes(), 32768);
+        let s = TensorSpec::parse("f64:").unwrap();
+        assert_eq!(s.elems(), 1);
+        assert_eq!(s.bytes(), 8);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(TensorSpec::parse("x99:2").is_err());
+        assert!(TensorSpec::parse("f32").is_err());
+        assert!(TensorSpec::parse("f32:a,b").is_err());
+    }
+
+    #[test]
+    fn load_real_manifest_if_present() {
+        // Integration check against the actual artifacts dir when built.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.tsv").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() >= 8);
+        let va = m.get("vecadd").unwrap();
+        assert_eq!(va.inputs.len(), 2);
+        assert_eq!(va.outputs.len(), 1);
+        assert_eq!(va.inputs[0].dtype, DType::F32);
+    }
+}

@@ -1,0 +1,179 @@
+//! A `Send`-able facade over the non-`Send` PJRT runtime.
+//!
+//! PJRT wrapper types hold raw pointers, so the whole [`super::Runtime`]
+//! lives on one dedicated OS thread; callers talk to it through an mpsc
+//! request channel.  This mirrors the paper's daemon design: one process
+//! (here: one thread) owns the only device context, all SPMD processes
+//! enqueue work to it.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use super::{Runtime, TensorValue};
+use crate::{Error, Result};
+
+enum Req {
+    Execute {
+        name: String,
+        inputs: Vec<TensorValue>,
+        reply: mpsc::Sender<Result<Vec<TensorValue>>>,
+    },
+    Preload {
+        name: String,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    Names {
+        reply: mpsc::Sender<Vec<String>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the device thread; cheap to clone, `Send + Sync`.
+#[derive(Clone)]
+pub struct ExecHandle {
+    tx: mpsc::Sender<Req>,
+}
+
+impl ExecHandle {
+    /// Execute an artifact synchronously (blocks until the result).
+    pub fn execute(&self, name: &str, inputs: Vec<TensorValue>) -> Result<Vec<TensorValue>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Execute {
+                name: name.to_string(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| Error::Runtime("device thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("device thread dropped reply".into()))?
+    }
+
+    /// Compile an artifact ahead of time (the GVM does this at init, the
+    /// paper's "prepares the kernels to be executed when initialized").
+    pub fn preload(&self, name: &str) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Preload {
+                name: name.to_string(),
+                reply,
+            })
+            .map_err(|_| Error::Runtime("device thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("device thread dropped reply".into()))?
+    }
+
+    /// List loadable artifact names.
+    pub fn names(&self) -> Result<Vec<String>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Names { reply })
+            .map_err(|_| Error::Runtime("device thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("device thread dropped reply".into()))
+    }
+}
+
+impl ExecHandle {
+    /// A device-less executor for tests and simulation-only deployments:
+    /// `f(name, inputs)` produces the outputs on a background thread.
+    pub fn mock<F>(names: Vec<String>, f: F) -> Self
+    where
+        F: Fn(&str, Vec<TensorValue>) -> Result<Vec<TensorValue>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Req>();
+        std::thread::Builder::new()
+            .name("vgpu-mock-device".into())
+            .spawn(move || {
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Execute {
+                            name,
+                            inputs,
+                            reply,
+                        } => {
+                            let _ = reply.send(f(&name, inputs));
+                        }
+                        Req::Preload { reply, .. } => {
+                            let _ = reply.send(Ok(()));
+                        }
+                        Req::Names { reply } => {
+                            let _ = reply.send(names.clone());
+                        }
+                        Req::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn mock device");
+        Self { tx }
+    }
+}
+
+/// Owns the device thread; dropping shuts it down.
+pub struct DeviceThread {
+    handle: ExecHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl DeviceThread {
+    /// Spawn the device thread over an artifacts dir. Fails fast if the
+    /// runtime cannot initialize (bad dir, missing PJRT).
+    pub fn spawn(artifacts_dir: PathBuf) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("vgpu-device".into())
+            .spawn(move || {
+                let mut rt = match Runtime::new(&artifacts_dir) {
+                    Ok(rt) => {
+                        let _ = init_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Execute {
+                            name,
+                            inputs,
+                            reply,
+                        } => {
+                            let _ = reply.send(rt.execute(&name, &inputs));
+                        }
+                        Req::Preload { name, reply } => {
+                            let _ = reply.send(rt.load(&name));
+                        }
+                        Req::Names { reply } => {
+                            let _ = reply.send(rt.names());
+                        }
+                        Req::Shutdown => break,
+                    }
+                }
+            })?;
+        init_rx
+            .recv()
+            .map_err(|_| Error::Runtime("device thread died during init".into()))??;
+        Ok(Self {
+            handle: ExecHandle { tx },
+            join: Some(join),
+        })
+    }
+
+    /// Get a cloneable execution handle.
+    pub fn handle(&self) -> ExecHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for DeviceThread {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Req::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

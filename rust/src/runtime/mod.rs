@@ -1,0 +1,128 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`), compile them
+//! on the CPU PJRT client, and execute them with concrete inputs.
+//!
+//! This is the *real numerics* half of the testbed substitution: every
+//! kernel result served by the GVM comes from an actual execution of the
+//! JAX/Pallas-authored HLO, not from the simulator (which provides
+//! timing).  HLO **text** is the interchange format — see
+//! `python/compile/aot.py` for why serialized protos are rejected.
+//!
+//! PJRT handles are not `Send` (raw pointers into xla_extension), so the
+//! [`DeviceThread`] wrapper confines the client to one dedicated thread —
+//! which is also exactly the paper's architecture: the daemon owns the
+//! single device context and everyone else queues requests to it.
+
+mod device_thread;
+pub(crate) mod values;
+
+pub use device_thread::{DeviceThread, ExecHandle};
+pub use values::TensorValue;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::profile::{ArtifactMeta, Manifest};
+use crate::{Error, Result};
+
+/// An executable artifact registry bound to one PJRT client.
+///
+/// Not `Send`: construct and use inside a single thread (the GVM device
+/// thread does this via [`DeviceThread`]).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            executables: HashMap::new(),
+        })
+    }
+
+    /// PJRT platform name (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact metadata.
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.manifest.get(name)
+    }
+
+    /// Names of all loadable artifacts.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Compile (and cache) the executable for `name`.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.manifest.get(name)?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+            Error::Artifact(format!("loading {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with the given inputs; returns the output
+    /// tuple leaves in order.  Inputs are validated against the manifest.
+    pub fn execute(&mut self, name: &str, inputs: &[TensorValue]) -> Result<Vec<TensorValue>> {
+        self.load(name)?;
+        let meta = self.manifest.get(name)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: got {} inputs, artifact wants {}",
+                inputs.len(),
+                meta.inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (v, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            let lit = v.to_literal(spec).map_err(|e| {
+                Error::Runtime(format!("{name}: input {i}: {e}"))
+            })?;
+            literals.push(lit);
+        }
+        let exe = self.executables.get(name).expect("loaded above");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unconditionally a tuple.
+        let leaves = result.to_tuple()?;
+        if leaves.len() != meta.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: artifact returned {} outputs, manifest says {}",
+                leaves.len(),
+                meta.outputs.len()
+            )));
+        }
+        leaves
+            .into_iter()
+            .zip(&meta.outputs)
+            .map(|(lit, spec)| TensorValue::from_literal(&lit, spec))
+            .collect()
+    }
+}
+
+/// Resolve the artifacts directory: `$VGPU_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("VGPU_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

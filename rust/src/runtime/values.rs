@@ -1,0 +1,310 @@
+//! Host tensor values crossing the IPC and runtime boundaries.
+
+use crate::profile::{DType, TensorSpec};
+use crate::{Error, Result};
+
+/// A host-side tensor: dtype-tagged flat data plus dims.
+///
+/// This is the value type clients place in their virtual shared-memory
+/// segments and the runtime converts to/from PJRT literals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorValue {
+    /// f32 tensor (dims, row-major data).
+    F32(Vec<usize>, Vec<f32>),
+    /// f64 tensor.
+    F64(Vec<usize>, Vec<f64>),
+}
+
+impl TensorValue {
+    /// Dimensions.
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            TensorValue::F32(d, _) | TensorValue::F64(d, _) => d,
+        }
+    }
+
+    /// Element count.
+    pub fn elems(&self) -> usize {
+        match self {
+            TensorValue::F32(_, v) => v.len(),
+            TensorValue::F64(_, v) => v.len(),
+        }
+    }
+
+    /// Byte size of the payload.
+    pub fn bytes(&self) -> usize {
+        match self {
+            TensorValue::F32(_, v) => v.len() * 4,
+            TensorValue::F64(_, v) => v.len() * 8,
+        }
+    }
+
+    /// Dtype tag.
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorValue::F32(..) => DType::F32,
+            TensorValue::F64(..) => DType::F64,
+        }
+    }
+
+    /// Validate against a spec and convert to an XLA literal.
+    pub fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        if self.dtype() != spec.dtype {
+            return Err(Error::Runtime(format!(
+                "dtype mismatch: value {:?} vs spec {:?}",
+                self.dtype(),
+                spec.dtype
+            )));
+        }
+        if self.elems() != spec.elems() {
+            return Err(Error::Runtime(format!(
+                "element count mismatch: value {} vs spec {} {:?}",
+                self.elems(),
+                spec.elems(),
+                spec.dims
+            )));
+        }
+        let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            TensorValue::F32(_, v) => xla::Literal::vec1(v),
+            TensorValue::F64(_, v) => xla::Literal::vec1(v),
+        };
+        if dims.is_empty() || dims.len() == 1 {
+            Ok(lit)
+        } else {
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    /// Convert an XLA literal back into a host tensor, checked by spec.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
+        match spec.dtype {
+            DType::F32 => Ok(TensorValue::F32(spec.dims.clone(), lit.to_vec::<f32>()?)),
+            DType::F64 => Ok(TensorValue::F64(spec.dims.clone(), lit.to_vec::<f64>()?)),
+            DType::I32 => Err(Error::Runtime("i32 outputs unsupported".into())),
+        }
+    }
+
+    /// Flatten to f64 for checking/printing regardless of dtype.
+    pub fn as_f64_vec(&self) -> Vec<f64> {
+        match self {
+            TensorValue::F32(_, v) => v.iter().map(|&x| x as f64).collect(),
+            TensorValue::F64(_, v) => v.clone(),
+        }
+    }
+
+    // ---- wire encoding (hand-rolled; offline env has no serde) ----
+    //
+    // Payloads are little-endian.  On little-endian targets (every
+    // platform we ship on) the float arrays are copied as one bulk
+    // memcpy — this is the virtualization layer's segment-copy hot path
+    // (Fig. 18), measured in rust/benches/ipc.rs.  A portable
+    // per-element path covers big-endian targets.
+
+    /// Serialize into a byte buffer (little-endian).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            TensorValue::F32(dims, data) => {
+                out.push(0u8);
+                encode_dims(dims, out);
+                out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+                extend_bulk(out, data);
+            }
+            TensorValue::F64(dims, data) => {
+                out.push(1u8);
+                encode_dims(dims, out);
+                out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+                extend_bulk(out, data);
+            }
+        }
+    }
+
+    /// Deserialize from a byte buffer; advances `pos`.
+    pub fn decode(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        let tag = *buf
+            .get(*pos)
+            .ok_or_else(|| Error::Ipc("truncated tensor tag".into()))?;
+        *pos += 1;
+        let dims = decode_dims(buf, pos)?;
+        let n = read_u64(buf, pos)? as usize;
+        match tag {
+            0 => Ok(TensorValue::F32(dims, decode_bulk::<f32, 4>(buf, pos, n)?)),
+            1 => Ok(TensorValue::F64(dims, decode_bulk::<f64, 8>(buf, pos, n)?)),
+            t => Err(Error::Ipc(format!("bad tensor tag {t}"))),
+        }
+    }
+}
+
+/// Marker for plain-old-data float scalars with a fixed LE byte width.
+///
+/// Safety contract: `Self` must be valid for any bit pattern and have
+/// size exactly `N` (enforced by the impls below + debug asserts).
+pub(crate) trait LeScalar<const N: usize>: Copy {
+    /// From little-endian bytes.
+    fn from_le(bytes: [u8; N]) -> Self;
+}
+
+impl LeScalar<4> for f32 {
+    fn from_le(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+}
+impl LeScalar<8> for f64 {
+    fn from_le(b: [u8; 8]) -> Self {
+        f64::from_le_bytes(b)
+    }
+}
+
+/// Append a float slice to `out` as little-endian bytes (bulk on LE).
+fn extend_bulk<T: Copy>(out: &mut Vec<u8>, data: &[T]) {
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: T is f32/f64 (POD); reinterpreting the slice as bytes
+        // is always valid, and LE layout == wire layout.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(
+                data.as_ptr() as *const u8,
+                std::mem::size_of_val(data),
+            )
+        };
+        out.extend_from_slice(bytes);
+    }
+    #[cfg(target_endian = "big")]
+    {
+        // Portable fallback; unreachable on our targets.
+        for x in data {
+            let p = x as *const T as *const u8;
+            let sz = std::mem::size_of::<T>();
+            let mut b = unsafe { std::slice::from_raw_parts(p, sz) }.to_vec();
+            b.reverse();
+            out.extend_from_slice(&b);
+        }
+    }
+}
+
+/// Read `n` floats from `buf` (bulk memcpy on LE).
+fn decode_bulk<T: LeScalar<N>, const N: usize>(
+    buf: &[u8],
+    pos: &mut usize,
+    n: usize,
+) -> Result<Vec<T>> {
+    let byte_len = n
+        .checked_mul(N)
+        .ok_or_else(|| Error::Ipc("tensor length overflow".into()))?;
+    let end = pos
+        .checked_add(byte_len)
+        .ok_or_else(|| Error::Ipc("tensor length overflow".into()))?;
+    let src = buf
+        .get(*pos..end)
+        .ok_or_else(|| Error::Ipc("truncated buffer".into()))?;
+    let mut v: Vec<T> = Vec::with_capacity(n);
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: src has exactly n*N bytes; T is POD of size N; the
+        // wire format is little-endian, matching the target.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                src.as_ptr(),
+                v.as_mut_ptr() as *mut u8,
+                byte_len,
+            );
+            v.set_len(n);
+        }
+    }
+    #[cfg(target_endian = "big")]
+    {
+        for chunk in src.chunks_exact(N) {
+            v.push(T::from_le(chunk.try_into().unwrap()));
+        }
+    }
+    *pos = end;
+    Ok(v)
+}
+
+fn encode_dims(dims: &[usize], out: &mut Vec<u8>) {
+    out.extend_from_slice(&(dims.len() as u64).to_le_bytes());
+    for d in dims {
+        out.extend_from_slice(&(*d as u64).to_le_bytes());
+    }
+}
+
+fn decode_dims(buf: &[u8], pos: &mut usize) -> Result<Vec<usize>> {
+    let n = read_u64(buf, pos)? as usize;
+    if n > 16 {
+        return Err(Error::Ipc(format!("implausible rank {n}")));
+    }
+    (0..n).map(|_| Ok(read_u64(buf, pos)? as usize)).collect()
+}
+
+pub(crate) fn read_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    Ok(u64::from_le_bytes(read_arr::<8>(buf, pos)?))
+}
+
+pub(crate) fn read_arr<const N: usize>(buf: &[u8], pos: &mut usize) -> Result<[u8; N]> {
+    let end = *pos + N;
+    let slice = buf
+        .get(*pos..end)
+        .ok_or_else(|| Error::Ipc("truncated buffer".into()))?;
+    *pos = end;
+    Ok(slice.try_into().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip_f32() {
+        let t = TensorValue::F32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mut buf = Vec::new();
+        t.encode(&mut buf);
+        let mut pos = 0;
+        let back = TensorValue::decode(&buf, &mut pos).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_f64() {
+        let t = TensorValue::F64(vec![4], vec![1.5, -2.5, 0.0, 1e300]);
+        let mut buf = Vec::new();
+        t.encode(&mut buf);
+        let mut pos = 0;
+        assert_eq!(TensorValue::decode(&buf, &mut pos).unwrap(), t);
+    }
+
+    #[test]
+    fn decode_rejects_truncation() {
+        let t = TensorValue::F32(vec![2], vec![1.0, 2.0]);
+        let mut buf = Vec::new();
+        t.encode(&mut buf);
+        buf.truncate(buf.len() - 1);
+        let mut pos = 0;
+        assert!(TensorValue::decode(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn spec_mismatch_rejected() {
+        use crate::profile::TensorSpec;
+        let t = TensorValue::F32(vec![4], vec![0.0; 4]);
+        let bad = TensorSpec {
+            dtype: DType::F32,
+            dims: vec![5],
+        };
+        assert!(t.to_literal(&bad).is_err());
+        let badt = TensorSpec {
+            dtype: DType::F64,
+            dims: vec![4],
+        };
+        assert!(t.to_literal(&badt).is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        let t = TensorValue::F32(vec![2, 2], vec![0.0; 4]);
+        assert_eq!(t.bytes(), 16);
+        assert_eq!(t.elems(), 4);
+        assert_eq!(t.dims(), &[2, 2]);
+        assert_eq!(t.as_f64_vec().len(), 4);
+    }
+}

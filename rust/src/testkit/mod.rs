@@ -1,0 +1,95 @@
+//! A dependency-free property-testing mini-framework.
+//!
+//! The offline build environment has no `proptest`, so this provides the
+//! subset the invariant tests need: seeded random case generation with
+//! failure reporting (seed + case index + debug dump), enough to make
+//! every failure reproducible.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries don't inherit the xla rpath flags)
+//! use vgpu::testkit::forall;
+//! use vgpu::util::rng::SplitMix64;
+//! forall("addition commutes", 100, |r| (r.below(100), r.below(100)),
+//!        |&(a, b)| a + b == b + a);
+//! ```
+
+use crate::util::rng::SplitMix64;
+
+/// Fixed base seed; override with `VGPU_PROP_SEED` for exploration.
+fn base_seed() -> u64 {
+    std::env::var("VGPU_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Number of cases; override with `VGPU_PROP_CASES`.
+pub fn default_cases() -> usize {
+    std::env::var("VGPU_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256)
+}
+
+/// Run `prop` over `cases` random inputs from `gen`; panics on the first
+/// counterexample with full reproduction info.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    gen: impl Fn(&mut SplitMix64) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut rng = SplitMix64::new(seed ^ (case as u64).wrapping_mul(0x9E3779B9));
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases} \
+                 (VGPU_PROP_SEED={seed}):\n{input:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` for a
+/// diagnostic message on failure.
+pub fn forall_check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    gen: impl Fn(&mut SplitMix64) -> T,
+    prop: impl Fn(&T) -> std::result::Result<(), String>,
+) {
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut rng = SplitMix64::new(seed ^ (case as u64).wrapping_mul(0x9E3779B9));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases} \
+                 (VGPU_PROP_SEED={seed}): {msg}\n{input:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("xor-self-is-zero", 64, |r| r.next_u64(), |&x| x ^ x == 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "always-false")]
+    fn failing_property_panics_with_case() {
+        forall("always-false", 8, |r| r.below(10), |_| false);
+    }
+
+    #[test]
+    fn check_variant_reports_message() {
+        forall_check("ok", 8, |r| r.below(4), |_| Ok(()));
+    }
+}

@@ -1,0 +1,168 @@
+//! ASCII chart rendering for the regenerated figures (`vgpu plot <id>`):
+//! turns a results TSV (x column + numeric series) into a terminal line
+//! chart, close enough to the paper's plots to eyeball crossovers.
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    /// Legend label.
+    pub name: String,
+    /// Points (x ascending not required; rendered by x order given).
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render series as an ASCII chart of the given size.
+pub fn render(series: &[Series], width: usize, height: usize) -> String {
+    let markers = ['*', '+', 'o', 'x', '#', '@', '%', '&'];
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.clone()).collect();
+    if all.is_empty() {
+        return "(no data)\n".into();
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (0.0f64, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let m = markers[si % markers.len()];
+        // Plot points and linear interpolation between consecutive ones.
+        let proj = |x: f64, y: f64| -> (usize, usize) {
+            let cx = ((x - xmin) / (xmax - xmin) * (width as f64 - 1.0)).round();
+            let cy = ((y - ymin) / (ymax - ymin) * (height as f64 - 1.0)).round();
+            (
+                (cx as usize).min(width - 1),
+                height - 1 - (cy as usize).min(height - 1),
+            )
+        };
+        for pair in s.points.windows(2) {
+            let (x0, y0) = pair[0];
+            let (x1, y1) = pair[1];
+            let steps = (width * 2).max(2);
+            for k in 0..=steps {
+                let t = k as f64 / steps as f64;
+                let (cx, cy) = proj(x0 + (x1 - x0) * t, y0 + (y1 - y0) * t);
+                if grid[cy][cx] == ' ' {
+                    grid[cy][cx] = '.';
+                }
+            }
+        }
+        for &(x, y) in &s.points {
+            let (cx, cy) = proj(x, y);
+            grid[cy][cx] = m;
+        }
+    }
+
+    let mut out = String::new();
+    for (row, line) in grid.iter().enumerate() {
+        let yval = ymax - (ymax - ymin) * row as f64 / (height as f64 - 1.0);
+        out.push_str(&format!("{yval:>10.1} |"));
+        out.extend(line.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>10} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!(
+        "{:>10}  {:<width$.1}{:>10.1}\n",
+        "",
+        xmin,
+        xmax,
+        width = width - 8
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "{:>12} {} = {}\n",
+            "",
+            markers[si % markers.len()],
+            s.name
+        ));
+    }
+    out
+}
+
+/// Parse a harness TSV (`results/<id>.tsv`): first column = x (numeric
+/// rows only), remaining numeric columns become series.  Non-numeric
+/// label columns are skipped; non-numeric x rows are dropped.
+pub fn series_from_tsv(tsv: &str) -> Vec<Series> {
+    let mut lines = tsv.lines();
+    let Some(header) = lines.next() else {
+        return vec![];
+    };
+    let cols: Vec<&str> = header.split('\t').collect();
+    if cols.len() < 2 {
+        return vec![];
+    }
+    let rows: Vec<Vec<&str>> = lines.map(|l| l.split('\t').collect()).collect();
+    let mut series: Vec<Series> = Vec::new();
+    for (ci, name) in cols.iter().enumerate().skip(1) {
+        let mut points = Vec::new();
+        for row in &rows {
+            if row.len() != cols.len() {
+                continue;
+            }
+            let (Ok(x), Ok(y)) = (row[0].parse::<f64>(), row[ci].parse::<f64>())
+            else {
+                continue;
+            };
+            points.push((x, y));
+        }
+        if points.len() >= 2 {
+            series.push(Series {
+                name: name.to_string(),
+                points,
+            });
+        }
+    }
+    series
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_single_series() {
+        let s = Series {
+            name: "line".into(),
+            points: (0..8).map(|i| (i as f64, i as f64 * 2.0)).collect(),
+        };
+        let chart = render(&[s], 40, 10);
+        assert!(chart.contains('*'));
+        assert!(chart.contains("line"));
+        assert!(chart.lines().count() > 10);
+    }
+
+    #[test]
+    fn parses_harness_tsv() {
+        let tsv = "n\ta_ms\tb_ms\n1\t10.0\t20.0\n2\t15.0\t40.0\n3\t20.0\t60.0\n";
+        let s = series_from_tsv(tsv);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].name, "a_ms");
+        assert_eq!(s[0].points.len(), 3);
+        assert_eq!(s[1].points[2], (3.0, 60.0));
+    }
+
+    #[test]
+    fn skips_label_columns_and_bad_rows() {
+        let tsv = "n\tlabel\tv\n1\tfoo\t5.0\nX\tbar\t6.0\n2\tbaz\t7.0\n";
+        let s = series_from_tsv(tsv);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].name, "v");
+        assert_eq!(s[0].points.len(), 2); // the X row is dropped
+    }
+
+    #[test]
+    fn empty_input_safe() {
+        assert!(series_from_tsv("").is_empty());
+        assert_eq!(render(&[], 20, 5), "(no data)\n");
+    }
+}

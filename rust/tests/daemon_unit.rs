@@ -1,0 +1,247 @@
+//! Daemon unit tests against a mock executor — no artifacts required.
+//!
+//! Covers the barrier state machine, waiter wakeup, failure isolation and
+//! the protocol edge cases that the artifact-backed integration tests
+//! can't exercise deterministically.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use vgpu::gvm::{Command, Daemon, DaemonConfig};
+use vgpu::ipc::{ClientMsg, ServerMsg};
+use vgpu::runtime::{ExecHandle, TensorValue};
+use vgpu::Error;
+
+/// Spin up a daemon over a mock executor that doubles its first input.
+fn daemon_with(
+    barrier: Option<usize>,
+    timeout_ms: u64,
+) -> (mpsc::Sender<Command>, Arc<AtomicUsize>) {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let calls2 = calls.clone();
+    let exec = ExecHandle::mock(vec!["double".into(), "fail".into()], move |name, inputs| {
+        calls2.fetch_add(1, Ordering::SeqCst);
+        if name == "fail" {
+            return Err(Error::Runtime("injected failure".into()));
+        }
+        let out = match &inputs[0] {
+            TensorValue::F32(d, v) => {
+                TensorValue::F32(d.clone(), v.iter().map(|x| x * 2.0).collect())
+            }
+            TensorValue::F64(d, v) => {
+                TensorValue::F64(d.clone(), v.iter().map(|x| x * 2.0).collect())
+            }
+        };
+        Ok(vec![out])
+    });
+    let cfg = DaemonConfig {
+        barrier,
+        barrier_timeout: Duration::from_millis(timeout_ms),
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::new(cfg, exec);
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+    (tx, calls)
+}
+
+fn call(tx: &mpsc::Sender<Command>, client: u64, msg: ClientMsg) -> ServerMsg {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Command {
+        client,
+        msg,
+        reply: rtx,
+    })
+    .unwrap();
+    rrx.recv().unwrap()
+}
+
+fn register(tx: &mpsc::Sender<Command>, name: &str) -> u64 {
+    match call(
+        tx,
+        0,
+        ClientMsg::Req {
+            name: name.into(),
+        },
+    ) {
+        ServerMsg::Queued { ticket } => ticket,
+        other => panic!("bad REQ reply {other:?}"),
+    }
+}
+
+fn t4() -> TensorValue {
+    TensorValue::F32(vec![4], vec![1.0, 2.0, 3.0, 4.0])
+}
+
+#[test]
+fn single_client_cycle_with_mock_executor() {
+    let (tx, calls) = daemon_with(Some(1), 50);
+    let id = register(&tx, "a");
+    assert!(matches!(
+        call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() }),
+        ServerMsg::Ack
+    ));
+    assert!(matches!(
+        call(&tx, id, ClientMsg::Str { workload: "double".into() }),
+        ServerMsg::Queued { .. }
+    ));
+    match call(&tx, id, ClientMsg::Stp) {
+        ServerMsg::Done { n_outputs, .. } => assert_eq!(n_outputs, 1),
+        other => panic!("{other:?}"),
+    }
+    match call(&tx, id, ClientMsg::Rcv { slot: 0 }) {
+        ServerMsg::Data { tensor } => {
+            assert_eq!(tensor.as_f64_vec(), vec![2.0, 4.0, 6.0, 8.0]);
+        }
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(calls.load(Ordering::SeqCst), 1);
+    assert!(matches!(call(&tx, id, ClientMsg::Rls), ServerMsg::Ack));
+}
+
+#[test]
+fn barrier_holds_until_all_clients_str() {
+    let (tx, calls) = daemon_with(Some(2), 5_000);
+    let a = register(&tx, "a");
+    let b = register(&tx, "b");
+    for id in [a, b] {
+        call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+    }
+    // First STR alone must not trigger execution.
+    call(&tx, a, ClientMsg::Str { workload: "double".into() });
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(calls.load(Ordering::SeqCst), 0, "barrier leaked");
+    // Second STR fills the barrier; both jobs run.
+    call(&tx, b, ClientMsg::Str { workload: "double".into() });
+    for id in [a, b] {
+        assert!(matches!(call(&tx, id, ClientMsg::Stp), ServerMsg::Done { .. }));
+    }
+    assert_eq!(calls.load(Ordering::SeqCst), 2);
+}
+
+#[test]
+fn barrier_timeout_flushes_partial_batch() {
+    let (tx, calls) = daemon_with(Some(8), 80);
+    let a = register(&tx, "a");
+    call(&tx, a, ClientMsg::Snd { slot: 0, tensor: t4() });
+    call(&tx, a, ClientMsg::Str { workload: "double".into() });
+    // Barrier of 8 never fills, but the window expires.
+    assert!(matches!(call(&tx, a, ClientMsg::Stp), ServerMsg::Done { .. }));
+    assert_eq!(calls.load(Ordering::SeqCst), 1);
+}
+
+#[test]
+fn parked_stp_wakes_on_flush() {
+    let (tx, _) = daemon_with(Some(2), 5_000);
+    let a = register(&tx, "a");
+    let b = register(&tx, "b");
+    for id in [a, b] {
+        call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+    }
+    call(&tx, a, ClientMsg::Str { workload: "double".into() });
+    // Park a's STP before the batch can flush.
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Command {
+        client: a,
+        msg: ClientMsg::Stp,
+        reply: rtx,
+    })
+    .unwrap();
+    assert!(
+        rrx.recv_timeout(Duration::from_millis(50)).is_err(),
+        "STP answered before the barrier filled"
+    );
+    call(&tx, b, ClientMsg::Str { workload: "double".into() });
+    match rrx.recv_timeout(Duration::from_secs(2)).unwrap() {
+        ServerMsg::Done { .. } => {}
+        other => panic!("parked STP got {other:?}"),
+    }
+}
+
+#[test]
+fn failure_isolated_to_one_job_in_batch() {
+    let (tx, _) = daemon_with(Some(2), 5_000);
+    let good = register(&tx, "good");
+    let bad = register(&tx, "bad");
+    call(&tx, good, ClientMsg::Snd { slot: 0, tensor: t4() });
+    call(&tx, bad, ClientMsg::Snd { slot: 0, tensor: t4() });
+    call(&tx, good, ClientMsg::Str { workload: "double".into() });
+    call(&tx, bad, ClientMsg::Str { workload: "fail".into() });
+    match call(&tx, bad, ClientMsg::Stp) {
+        ServerMsg::Err { msg } => assert!(msg.contains("injected"), "{msg}"),
+        other => panic!("{other:?}"),
+    }
+    // The good job still completed.
+    assert!(matches!(call(&tx, good, ClientMsg::Stp), ServerMsg::Done { .. }));
+}
+
+#[test]
+fn default_barrier_waits_for_all_registered_clients() {
+    // barrier = None -> flush when every registered client has STR'd.
+    let (tx, calls) = daemon_with(None, 5_000);
+    let a = register(&tx, "a");
+    let b = register(&tx, "b");
+    let c = register(&tx, "c");
+    for id in [a, b, c] {
+        call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+    }
+    call(&tx, a, ClientMsg::Str { workload: "double".into() });
+    call(&tx, b, ClientMsg::Str { workload: "double".into() });
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(calls.load(Ordering::SeqCst), 0, "flushed before rank c");
+    call(&tx, c, ClientMsg::Str { workload: "double".into() });
+    for id in [a, b, c] {
+        assert!(matches!(call(&tx, id, ClientMsg::Stp), ServerMsg::Done { .. }));
+    }
+    assert_eq!(calls.load(Ordering::SeqCst), 3);
+}
+
+#[test]
+fn stats_counters_track_activity() {
+    let (tx, _) = daemon_with(Some(1), 50);
+    let id = register(&tx, "a");
+    call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+    call(&tx, id, ClientMsg::Str { workload: "double".into() });
+    assert!(matches!(call(&tx, id, ClientMsg::Stp), ServerMsg::Done { .. }));
+    match call(&tx, id, ClientMsg::Stats) {
+        ServerMsg::Stats {
+            batches,
+            jobs_ok,
+            jobs_failed,
+            bytes_staged,
+            clients,
+            ..
+        } => {
+            assert_eq!(batches, 1);
+            assert_eq!(jobs_ok, 1);
+            assert_eq!(jobs_failed, 0);
+            assert_eq!(bytes_staged, 16); // 4 x f32
+            assert_eq!(clients, 1);
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn unknown_client_id_rejected() {
+    let (tx, _) = daemon_with(Some(1), 50);
+    match call(&tx, 999, ClientMsg::Stp) {
+        ServerMsg::Err { msg } => assert!(msg.contains("unknown client"), "{msg}"),
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn failed_client_recycles_on_next_snd() {
+    let (tx, _) = daemon_with(Some(1), 50);
+    let id = register(&tx, "a");
+    call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+    call(&tx, id, ClientMsg::Str { workload: "fail".into() });
+    assert!(matches!(call(&tx, id, ClientMsg::Stp), ServerMsg::Err { .. }));
+    // A fresh cycle succeeds.
+    call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+    call(&tx, id, ClientMsg::Str { workload: "double".into() });
+    assert!(matches!(call(&tx, id, ClientMsg::Stp), ServerMsg::Done { .. }));
+}

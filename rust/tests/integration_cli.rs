@@ -1,0 +1,118 @@
+//! CLI end-to-end tests: run the actual `vgpu` binary as a subprocess
+//! and check each subcommand's observable behaviour.
+
+use std::process::Command;
+
+fn vgpu() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_vgpu"))
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = vgpu()
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn vgpu");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn help_prints_usage() {
+    let (ok, stdout, _) = run(&["help"]);
+    assert!(ok);
+    assert!(stdout.contains("USAGE"));
+    assert!(stdout.contains("fig24"));
+}
+
+#[test]
+fn exp_tab1_prints_ratios() {
+    let tmp = std::env::temp_dir().join("vgpu-cli-test-results");
+    let (ok, stdout, stderr) = run(&["exp", "tab1", "--results", tmp.to_str().unwrap()]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("Titan"));
+    assert!(stdout.contains("16.00"));
+    assert!(tmp.join("tab1.tsv").exists());
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn exp_fig16_reports_low_deviation() {
+    let tmp = std::env::temp_dir().join("vgpu-cli-test-fig16");
+    let (ok, stdout, stderr) =
+        run(&["exp", "fig16", "--results", tmp.to_str().unwrap()]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("deviation"));
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn unknown_experiment_fails_cleanly() {
+    let (ok, _, stderr) = run(&["exp", "fig99"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown experiment"), "{stderr}");
+}
+
+#[test]
+fn unknown_subcommand_shows_usage() {
+    let (ok, _, stderr) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("USAGE"), "{stderr}");
+}
+
+#[test]
+fn list_shows_workloads() {
+    let (ok, stdout, _) = run(&["list"]);
+    assert!(ok);
+    assert!(stdout.contains("vecadd"));
+    assert!(stdout.contains("electrostatics"));
+}
+
+#[test]
+fn profile_shows_calibration() {
+    let (ok, stdout, _) = run(&["profile"]);
+    assert!(ok);
+    assert!(stdout.contains("PCIe") || stdout.contains("bytes-per-ms"));
+    assert!(stdout.contains("Eq.10"));
+}
+
+#[test]
+fn trace_writes_valid_chrome_json() {
+    let tmp = std::env::temp_dir().join("vgpu-cli-trace.json");
+    let (ok, stdout, stderr) = run(&[
+        "trace",
+        "cg",
+        "-n",
+        "4",
+        "--out",
+        tmp.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("virtualized"));
+    let text = std::fs::read_to_string(&tmp).unwrap();
+    assert!(text.trim_start().starts_with('['));
+    assert!(text.contains("\"ph\": \"X\""));
+    assert_eq!(text.matches("kernel").count(), 4);
+    let _ = std::fs::remove_file(&tmp);
+}
+
+#[test]
+fn plot_renders_ascii_chart() {
+    let tmp = std::env::temp_dir().join("vgpu-cli-plot-results");
+    let (ok, stdout, stderr) =
+        run(&["plot", "fig15", "--results", tmp.to_str().unwrap()]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("no_virt_ms"));
+    assert!(stdout.contains('|'));
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn serve_requires_socket_flag() {
+    let (ok, _, stderr) = run(&["serve"]);
+    assert!(!ok);
+    assert!(stderr.contains("--socket"), "{stderr}");
+}

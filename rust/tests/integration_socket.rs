@@ -1,0 +1,125 @@
+//! Integration tests for the unix-socket transport: real client
+//! connections against a served GVM (the multi-process path of the
+//! `spmd_node` example, exercised in-process with threads).
+
+use std::path::PathBuf;
+
+use vgpu::api::VgpuClient;
+use vgpu::gvm::{serve_unix, Gvm, GvmConfig};
+use vgpu::runtime::TensorValue;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.tsv").exists().then_some(dir)
+}
+
+fn serve(socket: &str, barrier: usize) -> Option<()> {
+    let dir = artifacts_dir()?;
+    let mut cfg = GvmConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.daemon.barrier = Some(barrier);
+    cfg.daemon.barrier_timeout = std::time::Duration::from_millis(300);
+    let gvm = Gvm::launch(cfg).expect("GVM must launch");
+    let path = socket.to_string();
+    std::thread::spawn(move || {
+        // Leaks the GVM for the test process lifetime — fine for tests.
+        let gvm = Box::leak(Box::new(gvm));
+        let _ = serve_unix(gvm, std::path::Path::new(&path));
+    });
+    for _ in 0..200 {
+        if std::path::Path::new(socket).exists() {
+            return Some(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    panic!("socket never appeared");
+}
+
+#[test]
+fn two_clients_roundtrip_over_socket() {
+    let sock = "/tmp/vgpu-test-two-clients.sock";
+    if serve(sock, 2).is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let handles: Vec<_> = (0..2)
+        .map(|rank| {
+            std::thread::spawn(move || {
+                let mut c =
+                    VgpuClient::connect_unix(sock, &format!("r{rank}")).unwrap();
+                let n = 262_144;
+                let a = vec![rank as f32; n];
+                let b = vec![10.0f32; n];
+                let (outs, done) = c
+                    .run(
+                        "vecadd",
+                        &[
+                            TensorValue::F32(vec![n], a),
+                            TensorValue::F32(vec![n], b),
+                        ],
+                    )
+                    .unwrap();
+                assert!(done.gpu_ms >= 0.0);
+                let got = outs[0].as_f64_vec();
+                assert!((got[0] - (rank as f64 + 10.0)).abs() < 1e-6);
+                c.rls().unwrap();
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let _ = std::fs::remove_file(sock);
+}
+
+#[test]
+fn protocol_error_travels_over_socket() {
+    let sock = "/tmp/vgpu-test-proto-err.sock";
+    if serve(sock, 1).is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut c = VgpuClient::connect_unix(sock, "bad").unwrap();
+    let err = c.str_("definitely_not_a_kernel").unwrap_err();
+    assert!(err.to_string().contains("unknown workload"), "{err}");
+    // The connection survives the error: a valid request still works.
+    let n = 262_144;
+    let (outs, _) = c
+        .run(
+            "vecadd",
+            &[
+                TensorValue::F32(vec![n], vec![1.0; n]),
+                TensorValue::F32(vec![n], vec![2.0; n]),
+            ],
+        )
+        .unwrap();
+    assert!((outs[0].as_f64_vec()[0] - 3.0).abs() < 1e-6);
+    let _ = std::fs::remove_file(sock);
+}
+
+#[test]
+fn disconnect_mid_protocol_does_not_kill_server() {
+    let sock = "/tmp/vgpu-test-disconnect.sock";
+    if serve(sock, 1).is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    {
+        // Connect, register, drop without RLS.
+        let _c = VgpuClient::connect_unix(sock, "ghost").unwrap();
+    }
+    // Server must still accept and serve new clients.
+    let mut c = VgpuClient::connect_unix(sock, "alive").unwrap();
+    let n = 262_144;
+    let (outs, _) = c
+        .run(
+            "vecadd",
+            &[
+                TensorValue::F32(vec![n], vec![5.0; n]),
+                TensorValue::F32(vec![n], vec![6.0; n]),
+            ],
+        )
+        .unwrap();
+    assert!((outs[0].as_f64_vec()[0] - 11.0).abs() < 1e-6);
+    let _ = std::fs::remove_file(sock);
+}

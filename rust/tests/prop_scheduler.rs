@@ -1,0 +1,217 @@
+//! Property tests over the GVM planner and VGPU table state machine.
+
+use vgpu::gvm::scheduler::{classify_batch, plan_batch, spmd_jobs, Policy};
+use vgpu::gvm::vgpu::VgpuTable;
+use vgpu::gvm::Plan;
+use vgpu::model::{classify, StageTimes, Style};
+use vgpu::runtime::TensorValue;
+use vgpu::testkit::{default_cases, forall_check};
+use vgpu::util::rng::SplitMix64;
+
+#[derive(Debug)]
+struct BatchCase {
+    stages: StageTimes,
+    n: usize,
+    force: Option<Style>,
+}
+
+fn gen_batch(r: &mut SplitMix64) -> BatchCase {
+    BatchCase {
+        stages: StageTimes {
+            t_in: r.next_f64() * 30.0 + 0.01,
+            t_comp: r.next_f64() * 60.0 + 0.01,
+            t_out: r.next_f64() * 30.0 + 0.01,
+        },
+        n: r.below(32),
+        force: match r.below(3) {
+            0 => Some(Style::Ps1),
+            1 => Some(Style::Ps2),
+            _ => None,
+        },
+    }
+}
+
+#[test]
+fn prop_plans_are_complete_and_consistent() {
+    forall_check("plan validity", default_cases(), gen_batch, |c| {
+        let jobs = spmd_jobs("w", c.stages, 100, 50, 4, c.n);
+        for plan in [
+            plan_batch(
+                jobs.clone(),
+                &Policy {
+                    force_style: c.force,
+                    ..Policy::default()
+                },
+            ),
+            Plan::no_virt(jobs.clone()),
+            Plan::ps1(jobs.clone()),
+            Plan::ps2(jobs),
+        ] {
+            if !plan.is_complete() {
+                return Err("plan not complete".into());
+            }
+            if !plan.is_sequentially_consistent() {
+                return Err("plan violates per-job ordering".into());
+            }
+            if plan.ops.len() != 3 * c.n {
+                return Err(format!(
+                    "plan has {} ops for {} jobs",
+                    plan.ops.len(),
+                    c.n
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_homogeneous_batch_class_matches_job_class() {
+    forall_check("classify unanimity", default_cases(), gen_batch, |c| {
+        if c.n == 0 {
+            return Ok(());
+        }
+        let jobs = spmd_jobs("w", c.stages, 100, 50, 4, c.n);
+        if classify_batch(&jobs) != classify(c.stages) {
+            return Err("homogeneous batch classified differently".into());
+        }
+        Ok(())
+    });
+}
+
+/// Randomized protocol fuzz over the VGPU table: any sequence of verbs
+/// either succeeds or returns a protocol/resource error — never panics —
+/// and the memory accounting never goes negative or exceeds the budget.
+#[derive(Debug)]
+struct FuzzCase {
+    seed: u64,
+    steps: usize,
+}
+
+fn gen_fuzz(r: &mut SplitMix64) -> FuzzCase {
+    FuzzCase {
+        seed: r.next_u64(),
+        steps: 1 + r.below(200),
+    }
+}
+
+#[test]
+fn prop_vgpu_table_fuzz() {
+    forall_check("vgpu table never corrupts", 128, gen_fuzz, |c| {
+        let mut r = SplitMix64::new(c.seed);
+        let budget = 10_000u64;
+        let mut tbl = VgpuTable::new(budget, 4);
+        let mut ids: Vec<u64> = Vec::new();
+        for _ in 0..c.steps {
+            match r.below(6) {
+                0 => {
+                    if let Ok(id) = tbl.register("fuzz") {
+                        ids.push(id);
+                    }
+                }
+                1 => {
+                    if let Some(&id) = ids.first() {
+                        let n = 1 + r.below(512);
+                        let _ = tbl.stage(
+                            id,
+                            r.below(70) as u32,
+                            TensorValue::F32(vec![n], vec![0.0; n]),
+                        );
+                    }
+                }
+                2 => {
+                    if let Some(&id) = ids.first() {
+                        let _ = tbl.queue(id, "w");
+                    }
+                }
+                3 => {
+                    if let Some(&id) = ids.first() {
+                        let _ = tbl.complete(id, vec![], 1.0);
+                    }
+                }
+                4 => {
+                    if let Some(&id) = ids.first() {
+                        let _ = tbl.recycle(id);
+                    }
+                }
+                _ => {
+                    if !ids.is_empty() {
+                        let id = ids.remove(0);
+                        let _ = tbl.release(id);
+                    }
+                }
+            }
+            if tbl.mem_used() > budget {
+                return Err(format!(
+                    "budget exceeded: {} > {budget}",
+                    tbl.mem_used()
+                ));
+            }
+        }
+        // Release everything; accounting must return to zero.
+        for id in ids {
+            let _ = tbl.release(id);
+        }
+        if tbl.mem_used() != 0 {
+            return Err(format!("leak: {} bytes after release", tbl.mem_used()));
+        }
+        Ok(())
+    });
+}
+
+/// Wire-protocol fuzz: random bytes never panic the decoders, and every
+/// encoded message round-trips.
+#[derive(Debug)]
+struct WireCase {
+    bytes: Vec<u8>,
+}
+
+fn gen_wire(r: &mut SplitMix64) -> WireCase {
+    let n = r.below(64);
+    WireCase {
+        bytes: (0..n).map(|_| (r.next_u64() & 0xFF) as u8).collect(),
+    }
+}
+
+#[test]
+fn prop_wire_decode_never_panics() {
+    use vgpu::ipc::{ClientMsg, ServerMsg};
+    forall_check("decode is total", default_cases(), gen_wire, |c| {
+        let _ = ClientMsg::decode(&c.bytes); // must not panic
+        let _ = ServerMsg::decode(&c.bytes);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tensor_roundtrip() {
+    forall_check(
+        "tensor encode/decode roundtrip",
+        default_cases(),
+        |r| {
+            let n = r.below(256);
+            if r.chance(0.5) {
+                TensorValue::F32(vec![n], r.vec_f32(n, -1e6, 1e6))
+            } else {
+                TensorValue::F64(
+                    vec![n],
+                    (0..n).map(|_| r.next_f64() * 1e12 - 5e11).collect(),
+                )
+            }
+        },
+        |t| {
+            let mut buf = Vec::new();
+            t.encode(&mut buf);
+            let mut pos = 0;
+            let back = TensorValue::decode(&buf, &mut pos)
+                .map_err(|e| format!("decode failed: {e}"))?;
+            if &back != t {
+                return Err("roundtrip mismatch".into());
+            }
+            if pos != buf.len() {
+                return Err("trailing bytes".into());
+            }
+            Ok(())
+        },
+    );
+}
