@@ -1,0 +1,76 @@
+//! Device-pool benches: placement-policy decision cost and per-device
+//! batch-queue throughput at 1/2/4/8 devices.  Placement sits on the
+//! REQ path and the pool split sits on every harness sweep cell, so both
+//! must stay negligible next to device time.
+
+mod bench_common;
+use bench_common::{bench, section};
+
+use vgpu::config::DeviceConfig;
+use vgpu::gvm::devices::{DevicePool, PlacementPolicy};
+use vgpu::gvm::scheduler::Policy;
+use vgpu::gvm::sim_backend::simulate_pool;
+use vgpu::workloads::Suite;
+
+/// 64 REQ placements + load notes (one SPMD wave on a big node).
+fn place_wave(g: usize, policy: PlacementPolicy) -> usize {
+    let mut pool =
+        DevicePool::from_specs(vec![DeviceConfig::tesla_c2070(); g], policy)
+            .unwrap();
+    for i in 0..64u64 {
+        let d = pool.place(i, &format!("r{i}"), 1 << 20).unwrap();
+        pool.reserve_mem(d, 1 << 20);
+        pool.note_queued(d, 10.0);
+    }
+    pool.len()
+}
+
+fn main() {
+    section("device pool: placement decision cost (64 clients)");
+    for g in [1usize, 2, 4, 8] {
+        for policy in PlacementPolicy::ALL {
+            bench(&format!("place64_{g}dev_{}", policy.name()), || {
+                place_wave(g, policy)
+            });
+        }
+    }
+
+    section("device pool: per-device batch queue throughput (ES x16)");
+    let suite = Suite::paper_defaults();
+    let w = suite.get("electrostatics").unwrap().clone();
+    for g in [1usize, 2, 4, 8] {
+        let specs = vec![DeviceConfig::tesla_c2070(); g];
+        bench(&format!("simulate_pool_{g}dev_16procs"), || {
+            simulate_pool(
+                &w,
+                16,
+                &specs,
+                PlacementPolicy::LeastLoaded,
+                &Policy::default(),
+            )
+            .unwrap()
+            .total_ms
+        });
+    }
+
+    section("device pool: sticky re-placement (affinity, 8 devices)");
+    let mut pool = DevicePool::from_specs(
+        vec![DeviceConfig::tesla_c2070(); 8],
+        PlacementPolicy::Affinity,
+    )
+    .unwrap();
+    for i in 0..64u64 {
+        pool.place(i, &format!("r{i}"), 0).unwrap();
+    }
+    let mut round = 0u64;
+    bench("affinity_release_rebind_64", move || {
+        round += 1;
+        for i in 0..64u64 {
+            pool.release(i);
+        }
+        for i in 0..64u64 {
+            pool.place(i, &format!("r{i}"), 0).unwrap();
+        }
+        round
+    });
+}

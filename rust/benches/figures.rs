@@ -10,7 +10,7 @@ fn main() {
     for id in [
         "tab1", "tab3", "fig14", "fig15", "fig16", "fig17", "fig19", "fig20",
         "fig21", "fig22", "fig23", "fig24", "ablation-style",
-        "ablation-depcheck", "ablation-ctx", "ablation-barrier",
+        "ablation-depcheck", "ablation-ctx", "ablation-barrier", "multi-gpu",
     ] {
         bench(&format!("exp_{id}"), || {
             vgpu::harness::run(id).unwrap().table.len()

@@ -19,9 +19,18 @@ use std::sync::mpsc;
 
 use crate::gvm::Command;
 use crate::ipc::transport::{Transport, UnixTransport};
-use crate::ipc::{ClientMsg, ServerMsg};
+use crate::ipc::{ClientMsg, DeviceEntry, ServerMsg};
 use crate::runtime::TensorValue;
 use crate::{Error, Result};
+
+/// Device-pool snapshot (see [`VgpuClient::devices`]).
+#[derive(Debug, Clone)]
+pub struct DevicesView {
+    /// The physical device this VGPU is placed on (`None` = unplaced).
+    pub self_device: Option<u32>,
+    /// Per-device status rows, by device id.
+    pub devices: Vec<DeviceEntry>,
+}
 
 /// Node statistics snapshot (see [`VgpuClient::stats`]).
 #[derive(Debug, Clone, Copy)]
@@ -192,6 +201,22 @@ impl VgpuClient {
             }),
             ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
             other => Err(Error::Ipc(format!("expected Stats, got {other:?}"))),
+        }
+    }
+
+    /// Query the node's physical device pool and this VGPU's placement
+    /// (multi-GPU observability extension; see [`crate::gvm::devices`]).
+    pub fn devices(&mut self) -> Result<DevicesView> {
+        match self.call(ClientMsg::DevInfo)? {
+            ServerMsg::Devices {
+                self_device,
+                devices,
+            } => Ok(DevicesView {
+                self_device: (self_device != u32::MAX).then_some(self_device),
+                devices,
+            }),
+            ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
+            other => Err(Error::Ipc(format!("expected Devices, got {other:?}"))),
         }
     }
 

@@ -2,22 +2,28 @@
 //!
 //! The paper's system picture is a cluster of heterogeneous nodes joined
 //! by an interconnect, with the GVM deployed *per node*.  This module
-//! composes the single-node device model into that picture: an SPMD
-//! program of `n_nodes x n_procs` ranks where every iteration is
+//! composes the node-level device pool into that picture: an SPMD
+//! program over nodes that may differ in **processor count and GPU
+//! count/spec**, where every iteration is
 //!
-//! 1. a local GPU phase on each node (virtualized or native sharing,
-//!    simulated by [`crate::gpusim`] through the GVM planner), then
+//! 1. a local GPU phase on each node — the node's ranks are placed over
+//!    its [`crate::gvm::devices`] pool and each device's batch is
+//!    simulated on its own timeline, so a node finishes with its slowest
+//!    device (virtualized or native sharing), then
 //! 2. a cluster-wide exchange (ring-allreduce α–β cost model over the
 //!    interconnect), as MPI-style SPMD codes do between kernel offloads.
 //!
-//! The node phases proceed in parallel across nodes; the exchange
-//! synchronizes them, so iteration time = max(node GPU time) + comm.
-//! This is what lets the harness answer the paper's closing claim — that
-//! the approach "can be deployed to any heterogeneous GPU clusters with
-//! imbalanced CPU/GPU resources" — with numbers (`vgpu exp ext-cluster`).
+//! Node phases proceed in parallel across nodes; the exchange
+//! synchronizes them, so iteration time = max over nodes of (max over
+//! that node's devices) + comm.  This is what lets the harness answer
+//! the paper's closing claim — that the approach "can be deployed to any
+//! heterogeneous GPU clusters with imbalanced CPU/GPU resources" — with
+//! numbers (`vgpu exp ext-cluster`, `vgpu exp multi-gpu`).
 
 use crate::config::NodeConfig;
-use crate::gvm::sim_backend::simulate_spmd;
+use crate::gvm::devices::PlacementPolicy;
+use crate::gvm::scheduler::Policy;
+use crate::gvm::sim_backend::{simulate_pool, simulate_pool_baseline};
 use crate::workloads::Workload;
 use crate::Result;
 
@@ -51,24 +57,37 @@ impl Interconnect {
     }
 }
 
-/// A homogeneous cluster of GVM-managed nodes.
+/// A cluster of GVM-managed nodes; nodes may differ in processor count
+/// and GPU count/spec (the heterogeneous deployment of §7).
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
-    /// Number of compute nodes.
-    pub n_nodes: usize,
-    /// Per-node topology (processors + device).
-    pub node: NodeConfig,
+    /// Per-node topologies (processors + device pool).
+    pub nodes: Vec<NodeConfig>,
     /// Inter-node fabric.
     pub interconnect: Interconnect,
+    /// VGPU placement policy applied on every node.
+    pub placement: PlacementPolicy,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
+        Self::homogeneous(4, NodeConfig::default())
+    }
+}
+
+impl ClusterConfig {
+    /// `n_nodes` identical nodes over QDR InfiniBand.
+    pub fn homogeneous(n_nodes: usize, node: NodeConfig) -> Self {
         Self {
-            n_nodes: 4,
-            node: NodeConfig::default(),
+            nodes: vec![node; n_nodes],
             interconnect: Interconnect::qdr_infiniband(),
+            placement: PlacementPolicy::default(),
         }
+    }
+
+    /// Total SPMD ranks across the cluster.
+    pub fn ranks(&self) -> usize {
+        self.nodes.iter().map(|n| n.n_processors).sum()
     }
 }
 
@@ -93,39 +112,63 @@ impl ClusterEstimate {
 }
 
 /// Estimate one SPMD iteration (GPU phase + allreduce of `reduce_bytes`)
-/// for `cfg.n_nodes` nodes each running `cfg.node.n_processors` ranks of
-/// `workload`.
+/// for every node running `workload` on all its processors.  The barrier
+/// is the slowest node; each node is as slow as its slowest device.
 pub fn estimate_iteration(
     cfg: &ClusterConfig,
     workload: &Workload,
     reduce_bytes: u64,
 ) -> Result<ClusterEstimate> {
-    let per_node = cfg.node.n_processors;
-    let ranks = cfg.n_nodes * per_node;
-    // Homogeneous nodes -> every node's GPU phase costs the same; the
-    // barrier is the slowest node (== any node).
-    let (virt, base) = simulate_spmd(workload, per_node, &cfg.node.device)?;
+    if cfg.nodes.is_empty() {
+        return Err(crate::Error::Config(
+            "cluster config has no nodes".into(),
+        ));
+    }
+    let ranks = cfg.ranks();
+    let mut virt_worst: f64 = 0.0;
+    let mut base_worst: f64 = 0.0;
+    for node in &cfg.nodes {
+        let virt = simulate_pool(
+            workload,
+            node.n_processors,
+            &node.devices,
+            cfg.placement,
+            &Policy::default(),
+        )?;
+        let base = simulate_pool_baseline(
+            workload,
+            node.n_processors,
+            &node.devices,
+            cfg.placement,
+        )?;
+        virt_worst = virt_worst.max(virt.total_ms);
+        base_worst = base_worst.max(base.total_ms);
+    }
     let comm = cfg.interconnect.allreduce_ms(ranks, reduce_bytes);
     Ok(ClusterEstimate {
-        virt_iter_ms: virt.total_ms + comm,
-        no_virt_iter_ms: base.total_ms + comm,
+        virt_iter_ms: virt_worst + comm,
+        no_virt_iter_ms: base_worst + comm,
         comm_ms: comm,
         ranks,
     })
 }
 
-/// Weak-scaling sweep: nodes in `node_counts`, fixed per-rank problem.
+/// Weak-scaling sweep: replicate the base cluster's first node across
+/// `node_counts`, fixed per-rank problem.
 pub fn weak_scaling(
     base_cfg: &ClusterConfig,
     workload: &Workload,
     reduce_bytes: u64,
     node_counts: &[usize],
 ) -> Result<Vec<(usize, ClusterEstimate)>> {
+    let base_node = base_cfg.nodes.first().ok_or_else(|| {
+        crate::Error::Config("cluster config has no nodes".into())
+    })?;
     node_counts
         .iter()
         .map(|&n| {
             let mut cfg = base_cfg.clone();
-            cfg.n_nodes = n;
+            cfg.nodes = vec![base_node.clone(); n];
             Ok((n, estimate_iteration(&cfg, workload, reduce_bytes)?))
         })
         .collect()
@@ -134,6 +177,7 @@ pub fn weak_scaling(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::DeviceConfig;
     use crate::workloads::Suite;
 
     #[test]
@@ -185,8 +229,45 @@ mod tests {
         cfg.interconnect.latency_ms = 0.0;
         cfg.interconnect.bytes_per_ms = f64::INFINITY;
         let est = estimate_iteration(&cfg, w, 1 << 30).unwrap();
-        let (virt, _) =
-            simulate_spmd(w, cfg.node.n_processors, &cfg.node.device).unwrap();
+        let node = &cfg.nodes[0];
+        let virt = simulate_pool(
+            w,
+            node.n_processors,
+            &node.devices,
+            cfg.placement,
+            &Policy::default(),
+        )
+        .unwrap();
         assert!((est.virt_iter_ms - virt.total_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mixed_gpu_counts_pace_by_the_thin_node() {
+        // Node A: 8 procs over 1 GPU.  Node B: 8 procs over 4 GPUs.
+        // The iteration barrier is node A; giving A more GPUs closes it.
+        let suite = Suite::paper_defaults();
+        let w = suite.get("electrostatics").unwrap();
+        let spec = DeviceConfig::tesla_c2070();
+        let thin = NodeConfig::with_gpus(8, 1, spec.clone());
+        let fat = NodeConfig::with_gpus(8, 4, spec.clone());
+        let mixed = ClusterConfig {
+            nodes: vec![thin, fat.clone()],
+            interconnect: Interconnect::qdr_infiniband(),
+            placement: PlacementPolicy::LeastLoaded,
+        };
+        let balanced = ClusterConfig {
+            nodes: vec![fat.clone(), fat],
+            interconnect: Interconnect::qdr_infiniband(),
+            placement: PlacementPolicy::LeastLoaded,
+        };
+        let est_mixed = estimate_iteration(&mixed, w, 1 << 20).unwrap();
+        let est_balanced = estimate_iteration(&balanced, w, 1 << 20).unwrap();
+        assert_eq!(est_mixed.ranks, 16);
+        assert!(
+            est_mixed.virt_iter_ms > 1.5 * est_balanced.virt_iter_ms,
+            "mixed {} vs balanced {}",
+            est_mixed.virt_iter_ms,
+            est_balanced.virt_iter_ms
+        );
     }
 }

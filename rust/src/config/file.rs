@@ -17,6 +17,12 @@
 //! [node]
 //! n_processors = 8
 //!
+//! [devices]
+//! count = 4                   # physical GPUs per node (default 1)
+//! policy = least-loaded       # round-robin|least-loaded|memory-aware|affinity
+//! n_sms = 14,14,8,8           # optional per-device override (1 or count values)
+//! mem_mb = 6144               # optional per-device memory override
+//!
 //! [gvm]
 //! barrier = 8                 # omit for "all registered clients"
 //! barrier_timeout_ms = 50
@@ -30,6 +36,7 @@ use std::collections::HashMap;
 use std::path::Path;
 
 use super::{DepcheckSemantics, DeviceConfig, NodeConfig};
+use crate::gvm::devices::{PlacementPolicy, PoolConfig};
 use crate::gvm::{DaemonConfig, GvmConfig, StyleRule};
 use crate::{Error, Result};
 
@@ -138,10 +145,86 @@ impl ConfigFile {
         Ok(d)
     }
 
-    /// Build a node config.
+    /// Comma-separated usize list (a single value is a 1-list).
+    fn get_usize_list(
+        &self,
+        section: &str,
+        key: &str,
+    ) -> Result<Option<Vec<usize>>> {
+        self.get(section, key)
+            .map(|v| {
+                v.split(',')
+                    .map(|p| {
+                        p.trim().parse().map_err(|e| {
+                            Error::Config(format!(
+                                "[{section}] {key} = {v:?}: {e}"
+                            ))
+                        })
+                    })
+                    .collect()
+            })
+            .transpose()
+    }
+
+    /// Expand a per-device override list against the pool size.
+    fn per_device<T: Copy>(
+        list: Vec<T>,
+        count: usize,
+        key: &str,
+    ) -> Result<Vec<T>> {
+        match list.len() {
+            1 => Ok(vec![list[0]; count]),
+            n if n == count => Ok(list),
+            n => Err(Error::Config(format!(
+                "[devices] {key}: {n} values for count = {count} \
+                 (want 1 or {count})"
+            ))),
+        }
+    }
+
+    /// Build the device-pool config (the `[devices]` section); omitted
+    /// section = one device with the `[device]` spec, least-loaded.
+    pub fn devices(&self) -> Result<PoolConfig> {
+        let base = self.device()?;
+        let count = self.get_usize("devices", "count")?.unwrap_or(1);
+        if count == 0 {
+            return Err(Error::Config("[devices] count must be >= 1".into()));
+        }
+        let mut specs = vec![base; count];
+        if let Some(list) = self.get_usize_list("devices", "n_sms")? {
+            for (spec, v) in
+                specs.iter_mut().zip(Self::per_device(list, count, "n_sms")?)
+            {
+                spec.n_sms = v;
+            }
+        }
+        if let Some(list) = self.get_usize_list("devices", "mem_mb")? {
+            for (spec, v) in
+                specs.iter_mut().zip(Self::per_device(list, count, "mem_mb")?)
+            {
+                spec.mem_bytes = (v as u64) << 20;
+            }
+        }
+        let policy = match self.get("devices", "policy") {
+            Some(v) => PlacementPolicy::parse(v).ok_or_else(|| {
+                Error::Config(format!(
+                    "[devices] policy = {v:?} (want round-robin|least-loaded|\
+                     memory-aware|affinity)"
+                ))
+            })?,
+            None => PlacementPolicy::default(),
+        };
+        Ok(PoolConfig {
+            count,
+            specs,
+            policy,
+        })
+    }
+
+    /// Build a node config (`[node]` + `[devices]` + `[device]`).
     pub fn node(&self) -> Result<NodeConfig> {
         let mut n = NodeConfig {
-            device: self.device()?,
+            devices: self.devices()?.build_specs()?,
             ..NodeConfig::default()
         };
         if let Some(v) = self.get_usize("node", "n_processors")? {
@@ -174,6 +257,7 @@ impl ConfigFile {
                 }
             };
         }
+        daemon.pool = self.devices()?;
         let artifacts_dir = self
             .get("gvm", "artifacts_dir")
             .map(std::path::PathBuf::from)
@@ -200,6 +284,12 @@ depcheck = started
 [node]
 n_processors = 4
 
+[devices]
+count = 4
+policy = memory-aware
+n_sms = 16,16,8,8
+mem_mb = 6144
+
 [gvm]
 barrier = 4
 mem_budget_mb = 1024
@@ -216,10 +306,42 @@ policy = model-optimal
         assert_eq!(d.depcheck, DepcheckSemantics::Started);
         let n = c.node().unwrap();
         assert_eq!(n.n_processors, 4);
+        assert_eq!(n.devices.len(), 4);
         let g = c.gvm().unwrap();
         assert_eq!(g.daemon.barrier, Some(4));
         assert_eq!(g.daemon.mem_budget, 1 << 30);
         assert_eq!(g.daemon.policy.rule, StyleRule::ModelOptimal);
+        let pool = c.devices().unwrap();
+        assert_eq!(pool.count, 4);
+        assert_eq!(pool.policy, PlacementPolicy::MemoryAware);
+        let specs = pool.build_specs().unwrap();
+        assert_eq!(
+            specs.iter().map(|s| s.n_sms).collect::<Vec<_>>(),
+            vec![16, 16, 8, 8]
+        );
+        assert!(specs.iter().all(|s| s.mem_bytes == 6144 << 20));
+    }
+
+    #[test]
+    fn devices_section_defaults_to_single_gpu() {
+        let c = ConfigFile::parse("").unwrap();
+        let pool = c.devices().unwrap();
+        assert_eq!(pool.count, 1);
+        assert_eq!(pool.policy, PlacementPolicy::LeastLoaded);
+        assert_eq!(c.node().unwrap().devices.len(), 1);
+    }
+
+    #[test]
+    fn bad_devices_sections_rejected() {
+        let c = ConfigFile::parse("[devices]\ncount = 0\n").unwrap();
+        assert!(c.devices().is_err());
+        let c = ConfigFile::parse("[devices]\ncount = 2\npolicy = magic\n").unwrap();
+        assert!(c.devices().is_err());
+        let c =
+            ConfigFile::parse("[devices]\ncount = 2\nn_sms = 14,14,14\n").unwrap();
+        assert!(c.devices().is_err());
+        let c = ConfigFile::parse("[devices]\ncount = 2\nmem_mb = lots\n").unwrap();
+        assert!(c.devices().is_err());
     }
 
     #[test]

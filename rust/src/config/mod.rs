@@ -92,21 +92,40 @@ impl DeviceConfig {
     }
 }
 
-/// Node topology: processors sharing one device (paper: dual X5570 = 8).
+/// Node topology: processors sharing the node's devices (the paper's
+/// testbed: dual X5570 = 8 cores over one C2070; real heterogeneous
+/// nodes carry several, possibly unequal, GPUs).
 #[derive(Debug, Clone)]
 pub struct NodeConfig {
     /// CPU cores per node (= max SPMD processes = VGPU count).
     pub n_processors: usize,
-    /// The device shared by all of them.
-    pub device: DeviceConfig,
+    /// The physical devices shared by all of them (never empty; one
+    /// entry = the paper's single-GPU node).
+    pub devices: Vec<DeviceConfig>,
 }
 
 impl Default for NodeConfig {
     fn default() -> Self {
         Self {
             n_processors: 8,
-            device: DeviceConfig::default(),
+            devices: vec![DeviceConfig::default()],
         }
+    }
+}
+
+impl NodeConfig {
+    /// A node with `n_gpus` identical devices.
+    pub fn with_gpus(n_processors: usize, n_gpus: usize, spec: DeviceConfig) -> Self {
+        Self {
+            n_processors,
+            devices: vec![spec; n_gpus.max(1)],
+        }
+    }
+
+    /// The primary (first) device — the single-GPU view older call
+    /// sites and the paper's experiments use.
+    pub fn device(&self) -> &DeviceConfig {
+        &self.devices[0]
     }
 }
 
@@ -125,6 +144,14 @@ mod tests {
     fn node_defaults_match_paper_testbed() {
         let n = NodeConfig::default();
         assert_eq!(n.n_processors, 8); // dual quad-core X5570
-        assert_eq!(n.device.n_sms, 14);
+        assert_eq!(n.devices.len(), 1); // one C2070
+        assert_eq!(n.device().n_sms, 14);
+    }
+
+    #[test]
+    fn multi_gpu_node_replicates_spec() {
+        let n = NodeConfig::with_gpus(16, 4, DeviceConfig::tesla_c2070());
+        assert_eq!(n.devices.len(), 4);
+        assert_eq!(n.device().n_sms, 14);
     }
 }

@@ -1,45 +1,73 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+//! offline environment has no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for every vgpu subsystem.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Artifact missing / malformed, or manifest mismatch.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// PJRT / XLA failure surfaced by the runtime layer.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Wire-protocol violation or transport failure.
-    #[error("ipc error: {0}")]
     Ipc(String),
 
     /// Client drove the REQ/SND/STR/STP/RCV/RLS protocol out of order.
-    #[error("protocol error: {0}")]
     Protocol(String),
 
     /// GVM resource exhaustion (VGPU table full, shmem budget exceeded).
-    #[error("resource error: {0}")]
     Resource(String),
 
+    /// GVM-internal invariant violation (accounting underflow, empty
+    /// device pool, placement with no feasible device).
+    Gvm(String),
+
     /// Simulator misuse (unknown stream, op after drain, ...).
-    #[error("gpusim error: {0}")]
     Sim(String),
 
     /// Unknown benchmark / bad experiment id / bad CLI usage.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Underlying I/O failure.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Ipc(m) => write!(f, "ipc error: {m}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::Resource(m) => write!(f, "resource error: {m}"),
+            Error::Gvm(m) => write!(f, "gvm error: {m}"),
+            Error::Sim(m) => write!(f, "gpusim error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::runtime::pjrt::Error> for Error {
+    fn from(e: crate::runtime::pjrt::Error) -> Self {
         Error::Runtime(e.to_string())
     }
 }
@@ -51,5 +79,10 @@ impl Error {
     /// Helper: protocol error with context.
     pub fn protocol(msg: impl Into<String>) -> Self {
         Error::Protocol(msg.into())
+    }
+
+    /// Helper: GVM-internal invariant violation with context.
+    pub fn gvm(msg: impl Into<String>) -> Self {
+        Error::Gvm(msg.into())
     }
 }

@@ -1,21 +1,33 @@
-//! The GVM daemon loop: request queue, SPMD barrier, batch execution.
+//! The GVM daemon loop: request queue, SPMD barrier, per-device batches.
 //!
 //! One thread owns the VGPU table and drives the lifecycle of Fig. 13:
 //! clients' messages arrive through an mpsc command queue (the POSIX
 //! message-queue analogue); data rides in the messages into per-client
 //! segments (the POSIX shared-memory analogue); the daemon flushes a
 //! *batch* of queued jobs when the SPMD barrier fills — all registered
-//! clients have issued `STR` — or the barrier window times out, then
-//! plans the batch (PS-1/PS-2 per §4.2.3) and executes it through the
-//! PJRT device thread.
+//! clients have issued `STR` — or the barrier window times out.
+//!
+//! With the multi-GPU [`super::devices`] pool, every `REQ` places the new
+//! VGPU onto a physical device (pluggable policy), and a flush groups the
+//! queued jobs **per device**: each device gets its own §4.2.3 plan
+//! (PS-1/PS-2) and its own batch queue, so simulated device timelines
+//! proceed concurrently and the pool's load/memory view stays accurate.
+//! On the CPU PJRT substrate the actual numerics still execute serially
+//! through the single host executor — per-device concurrency is a
+//! timing-model property, exactly like the rest of the testbed
+//! substitution.  Placement is observable through `ClientMsg::DevInfo`.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
+use super::devices::{DeviceId, DevicePool, PoolConfig};
 use super::plan::Job;
 use super::scheduler::{plan_batch, Policy};
 use super::vgpu::{ClientId, VgpuState, VgpuTable};
+use crate::ipc::wire::DeviceEntry;
 use crate::ipc::{ClientMsg, ServerMsg};
+use crate::log;
 use crate::runtime::ExecHandle;
 use crate::workloads::Suite;
 use crate::{Error, Result};
@@ -44,6 +56,8 @@ pub struct DaemonConfig {
     pub mem_budget: u64,
     /// Max registered clients (the VGPU count; paper: `N_processor`).
     pub max_clients: usize,
+    /// Physical device pool (count + specs + placement policy).
+    pub pool: PoolConfig,
 }
 
 impl Default for DaemonConfig {
@@ -54,6 +68,7 @@ impl Default for DaemonConfig {
             policy: Policy::default(),
             mem_budget: 6 * 1024 * 1024 * 1024, // the C2070's 6 GB
             max_clients: 64,
+            pool: PoolConfig::default(),
         }
     }
 }
@@ -64,6 +79,9 @@ pub struct Daemon {
     cfg: DaemonConfig,
     exec: ExecHandle,
     suite: Suite,
+    /// Physical devices + VGPU placements (bound by client id; sticky
+    /// affinity by rank name).
+    pool: DevicePool,
     /// Clients blocked in STP waiting for their result.
     waiters: Vec<(ClientId, mpsc::Sender<ServerMsg>)>,
     /// When the oldest queued-but-unflushed job arrived.
@@ -90,14 +108,19 @@ pub struct NodeStats {
 }
 
 impl Daemon {
-    /// Build a daemon over an executor handle.
+    /// Build a daemon over an executor handle.  Panics only if the pool
+    /// config is invalid — callers validate through [`PoolConfig`] /
+    /// `config::file` first.
     pub fn new(cfg: DaemonConfig, exec: ExecHandle) -> Self {
         let artifact_names = exec.names().unwrap_or_default();
+        let pool = DevicePool::new(&cfg.pool)
+            .expect("invalid device-pool config (validate via config::file)");
         Self {
             table: VgpuTable::new(cfg.mem_budget, cfg.max_clients),
             cfg: cfg.clone(),
             exec,
             suite: Suite::paper_defaults(),
+            pool,
             waiters: Vec::new(),
             barrier_open_since: None,
             artifact_names,
@@ -157,11 +180,29 @@ impl Daemon {
         queued >= want
     }
 
+    /// Keep the pool's per-device segment accounting in step with a
+    /// client's `seg_bytes` transition.
+    fn sync_pool_mem(&mut self, client: ClientId, before: u64, after: u64) {
+        if let Some(dev) = self.pool.placement(client) {
+            if after >= before {
+                self.pool.reserve_mem(dev, after - before);
+            } else {
+                self.pool.free_mem(dev, before - after);
+            }
+        }
+    }
+
     /// Handle one command; `client==0` means pre-registration.
     fn handle(&mut self, cmd: Command) -> Result<()> {
         match cmd.msg {
             ClientMsg::Req { name } => {
                 let id = self.table.register(&name)?;
+                // Place the fresh VGPU onto a physical device; unwind the
+                // registration if no device can take it.
+                if let Err(e) = self.pool.place(id, &name, 0) {
+                    let _ = self.table.release(id);
+                    return Err(e);
+                }
                 // The id travels back out-of-band via Queued.ticket: the
                 // in-proc/socket adapters assign ids at connect time, so
                 // here we just ACK with the id as a ticket.
@@ -170,6 +211,7 @@ impl Daemon {
                     .map_err(|_| Error::Ipc("client gone".into()))?;
             }
             ClientMsg::Snd { slot, tensor } => {
+                let before = self.table.get(cmd.client)?.seg_bytes;
                 // A SND after Done starts the client's next request
                 // cycle: recycle the VGPU back to Idle first.
                 if matches!(
@@ -179,7 +221,12 @@ impl Daemon {
                     self.table.recycle(cmd.client)?;
                 }
                 self.stats.bytes_staged += tensor.bytes() as u64;
-                self.table.stage(cmd.client, slot, tensor)?;
+                let staged = self.table.stage(cmd.client, slot, tensor);
+                // The recycle above may have freed bytes even if staging
+                // failed — resync unconditionally before surfacing.
+                let after = self.table.get(cmd.client)?.seg_bytes;
+                self.sync_pool_mem(cmd.client, before, after);
+                staged?;
                 self.ack(&cmd.reply)?;
             }
             ClientMsg::Str { workload } => {
@@ -193,6 +240,9 @@ impl Daemon {
                     )));
                 }
                 let ticket = self.table.queue(cmd.client, &workload)?;
+                if let Some(dev) = self.pool.placement(cmd.client) {
+                    self.pool.note_queued(dev, self.job_est_ms(&workload));
+                }
                 if self.barrier_open_since.is_none() {
                     self.barrier_open_since = Some(Instant::now());
                 }
@@ -234,7 +284,25 @@ impl Daemon {
                     .map_err(|_| Error::Ipc("client gone".into()))?;
             }
             ClientMsg::Rls => {
+                let v = self.table.get(cmd.client)?;
+                let seg = v.seg_bytes;
+                // A client abandoning a still-queued job must also take
+                // its load estimate with it, or LeastLoaded would shun
+                // this device forever.
+                let abandoned_est = match &v.state {
+                    VgpuState::Queued { workload, .. } => {
+                        Some(self.job_est_ms(workload))
+                    }
+                    _ => None,
+                };
                 self.table.release(cmd.client)?;
+                if let Some(dev) = self.pool.placement(cmd.client) {
+                    self.pool.free_mem(dev, seg);
+                    if let Some(est) = abandoned_est {
+                        self.pool.retire_queued(dev, est);
+                    }
+                    self.pool.release(cmd.client);
+                }
                 self.ack(&cmd.reply)?;
             }
             ClientMsg::Stats => {
@@ -249,6 +317,32 @@ impl Daemon {
                     })
                     .map_err(|_| Error::Ipc("client gone".into()))?;
             }
+            ClientMsg::DevInfo => {
+                let devices = self
+                    .pool
+                    .status()
+                    .into_iter()
+                    .map(|s| DeviceEntry {
+                        id: s.id,
+                        clients: s.clients,
+                        mem_used: s.mem_used,
+                        queued_ms: s.queued_ms,
+                        jobs_done: s.jobs_done,
+                        busy_ms: s.busy_ms,
+                    })
+                    .collect();
+                let self_device = self
+                    .pool
+                    .placement(cmd.client)
+                    .map(|d| d.0 as u32)
+                    .unwrap_or(u32::MAX);
+                cmd.reply
+                    .send(ServerMsg::Devices {
+                        self_device,
+                        devices,
+                    })
+                    .map_err(|_| Error::Ipc("client gone".into()))?;
+            }
         }
         Ok(())
     }
@@ -259,7 +353,17 @@ impl Daemon {
             .map_err(|_| Error::Ipc("client gone".into()))
     }
 
-    /// Flush the queued batch: plan per §4.2.3 and execute in plan order.
+    /// Queue-load estimate for one job of `workload` (suite stage sums;
+    /// neutral 1 ms for unknown artifacts) — feeds `LeastLoaded`.
+    fn job_est_ms(&self, workload: &str) -> f64 {
+        match self.suite.get(workload) {
+            Some(w) => w.stages.t_in + w.stages.t_comp + w.stages.t_out,
+            None => 1.0,
+        }
+    }
+
+    /// Flush the queued batch: group by placed device, then plan and
+    /// execute each device's batch per §4.2.3.
     fn flush_batch(&mut self) -> Result<()> {
         self.barrier_open_since = None;
         let queued = self.table.queued_clients();
@@ -267,87 +371,15 @@ impl Daemon {
             return Ok(());
         }
 
-        // Build jobs: stage profiles come from the suite when known
-        // (paper benchmarks), else a neutral profile from byte counts.
-        let mut jobs = Vec::with_capacity(queued.len());
-        for (idx, (client, workload)) in queued.iter().enumerate() {
-            let (stages, grid) = match self.suite.get(workload) {
-                Some(w) => (w.stages, w.grid),
-                None => {
-                    let v = self.table.get(*client)?;
-                    let in_b: usize = v
-                        .in_slots
-                        .iter()
-                        .flatten()
-                        .map(|t| t.bytes())
-                        .sum();
-                    (
-                        crate::model::StageTimes {
-                            t_in: in_b as f64 / crate::workloads::PCIE_BYTES_PER_MS,
-                            t_comp: 1.0,
-                            t_out: 0.5,
-                        },
-                        64,
-                    )
-                }
-            };
-            let v = self.table.get(*client)?;
-            let in_bytes: u64 = v.in_slots.iter().flatten().map(|t| t.bytes() as u64).sum();
-            jobs.push(Job {
-                idx,
-                workload: workload.clone(),
-                stages,
-                in_bytes,
-                out_bytes: 0,
-                grid,
-            });
+        // Per-device batch queues (BTreeMap: deterministic device order).
+        let mut by_dev: BTreeMap<DeviceId, Vec<(ClientId, String)>> =
+            BTreeMap::new();
+        for (client, workload) in queued {
+            let dev = self.pool.placement(client).unwrap_or(DeviceId(0));
+            by_dev.entry(dev).or_default().push((client, workload));
         }
-
-        let plan = plan_batch(jobs, &self.cfg.policy);
-
-        // Execute computes in plan order through the single device
-        // context.  (On the CPU PJRT substrate, SendData/RtrvData are
-        // subsumed by execute(): literals move host<->device inside it.)
-        let order: Vec<usize> = plan
-            .ops
-            .iter()
-            .filter_map(|op| match op {
-                super::plan::PlanOp::Compute(j) => Some(*j),
-                _ => None,
-            })
-            .collect();
-        for j in order {
-            let (client, workload) = &queued[j];
-            let artifact = self
-                .suite
-                .get(workload)
-                .and_then(|w| w.artifact)
-                .map(str::to_string)
-                .unwrap_or_else(|| workload.clone());
-            // Per-job failure isolation: a bad job fails alone; the rest
-            // of the SPMD batch still completes.  Inputs are *moved* out
-            // of the segment (not cloned) — the launch consumes them,
-            // halving memory traffic on the large-transfer path (Fig. 18).
-            let result = self
-                .table
-                .take_staged_inputs(*client)
-                .and_then(|inputs| {
-                    let t0 = Instant::now();
-                    let outputs = self.exec.execute(&artifact, inputs)?;
-                    Ok((outputs, t0.elapsed().as_secs_f64() * 1e3))
-                });
-            match result {
-                Ok((outputs, gpu_ms)) => {
-                    self.stats.jobs_ok += 1;
-                    self.stats.device_ms += gpu_ms;
-                    self.table.complete(*client, outputs, gpu_ms)?;
-                }
-                Err(e) => {
-                    log::warn!("job for client {client} failed: {e}");
-                    self.stats.jobs_failed += 1;
-                    self.table.fail(*client, e.to_string())?;
-                }
-            }
+        for (dev, batch) in by_dev {
+            self.run_device_batch(dev, &batch)?;
         }
         self.stats.batches += 1;
 
@@ -373,5 +405,102 @@ impl Daemon {
         self.waiters = still_waiting;
         Ok(())
     }
-}
 
+    /// Plan and execute one device's batch in plan order.
+    fn run_device_batch(
+        &mut self,
+        dev: DeviceId,
+        queued: &[(ClientId, String)],
+    ) -> Result<()> {
+        // Build jobs: stage profiles come from the suite when known
+        // (paper benchmarks), else a neutral profile from byte counts.
+        let mut jobs = Vec::with_capacity(queued.len());
+        for (idx, (client, workload)) in queued.iter().enumerate() {
+            let (stages, grid) = match self.suite.get(workload) {
+                Some(w) => (w.stages, w.grid),
+                None => {
+                    let v = self.table.get(*client)?;
+                    let in_b: usize = v
+                        .in_slots
+                        .iter()
+                        .flatten()
+                        .map(|t| t.bytes())
+                        .sum();
+                    (
+                        crate::model::StageTimes {
+                            t_in: in_b as f64 / crate::workloads::PCIE_BYTES_PER_MS,
+                            t_comp: 1.0,
+                            t_out: 0.5,
+                        },
+                        64,
+                    )
+                }
+            };
+            let v = self.table.get(*client)?;
+            let in_bytes: u64 =
+                v.in_slots.iter().flatten().map(|t| t.bytes() as u64).sum();
+            jobs.push(Job {
+                idx,
+                workload: workload.clone(),
+                stages,
+                in_bytes,
+                out_bytes: 0,
+                grid,
+            });
+        }
+
+        let plan = plan_batch(jobs, &self.cfg.policy);
+
+        // Execute computes in plan order through the shared host
+        // executor.  (On the CPU PJRT substrate, SendData/RtrvData are
+        // subsumed by execute(): literals move host<->device inside it.)
+        let order: Vec<usize> = plan
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                super::plan::PlanOp::Compute(j) => Some(*j),
+                _ => None,
+            })
+            .collect();
+        for j in order {
+            let (client, workload) = &queued[j];
+            let est_ms = self.job_est_ms(workload);
+            let artifact = self
+                .suite
+                .get(workload)
+                .and_then(|w| w.artifact)
+                .map(str::to_string)
+                .unwrap_or_else(|| workload.clone());
+            // Per-job failure isolation: a bad job fails alone; the rest
+            // of the SPMD batch still completes.  Inputs are *moved* out
+            // of the segment (not cloned) — the launch consumes them,
+            // halving memory traffic on the large-transfer path (Fig. 18).
+            let before = self.table.get(*client)?.seg_bytes;
+            let result = self
+                .table
+                .take_staged_inputs(*client)
+                .and_then(|inputs| {
+                    let t0 = Instant::now();
+                    let outputs = self.exec.execute(&artifact, inputs)?;
+                    Ok((outputs, t0.elapsed().as_secs_f64() * 1e3))
+                });
+            let after = self.table.get(*client)?.seg_bytes;
+            self.sync_pool_mem(*client, before, after);
+            match result {
+                Ok((outputs, gpu_ms)) => {
+                    self.stats.jobs_ok += 1;
+                    self.stats.device_ms += gpu_ms;
+                    self.pool.note_done(dev, est_ms, gpu_ms);
+                    self.table.complete(*client, outputs, gpu_ms)?;
+                }
+                Err(e) => {
+                    log::warn!("job for client {client} failed: {e}");
+                    self.stats.jobs_failed += 1;
+                    self.pool.note_done(dev, est_ms, 0.0);
+                    self.table.fail(*client, e.to_string())?;
+                }
+            }
+        }
+        Ok(())
+    }
+}

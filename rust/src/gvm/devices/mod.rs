@@ -1,0 +1,32 @@
+//! Multi-GPU device pool: N simulated physical GPUs per node with
+//! pluggable VGPU placement and per-device load accounting.
+//!
+//! The paper's GVM restores the 1:1 processor/accelerator ratio by
+//! multiplexing SPMD processes onto *one* device context; real
+//! heterogeneous nodes carry several GPUs.  This subsystem models that
+//! dimension:
+//!
+//! * [`DevicePool`] owns the node's physical devices (possibly
+//!   heterogeneous [`crate::config::DeviceConfig`] specs) plus the
+//!   per-device load view — bound VGPUs, estimated queued work, segment
+//!   memory, completed-job counters.
+//! * [`PlacementPolicy`] decides where each `REQ`'s VGPU lands:
+//!   `RoundRobin`, `LeastLoaded`, `MemoryAware`, or sticky `Affinity`.
+//! * The daemon groups every barrier flush into **per-device batches**
+//!   (one plan per device instead of one global queue) and exposes the
+//!   pool through `ClientMsg::DevInfo`; the simulator backend replays
+//!   those per-device batches on independent timelines
+//!   ([`crate::gvm::sim_backend::simulate_pool`]), so node turnaround is
+//!   the max over devices; [`crate::cluster`] composes nodes with
+//!   differing GPU counts on top.
+//!
+//! Configure with the `[devices]` config-file section (`count`,
+//! `policy`, per-device `n_sms` / `mem_mb` lists); sweep with
+//! `vgpu exp multi-gpu`; measure placement cost with
+//! `cargo bench --bench device_pool`.
+
+pub mod placement;
+pub mod pool;
+
+pub use placement::PlacementPolicy;
+pub use pool::{DeviceId, DevicePool, DeviceStatus, PoolConfig, PooledDevice};

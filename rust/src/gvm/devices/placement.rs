@@ -1,0 +1,215 @@
+//! Pluggable VGPU→device placement policies.
+//!
+//! Placement happens once per `REQ` (and, for the simulator harness, once
+//! per synthetic job): the engine inspects the pool's per-device load
+//! view and returns the device the new VGPU binds to.  Multi-tenant vGPU
+//! studies (Prades et al.; Schieffer et al.) show the landing device
+//! dominates throughput, so the policy is a first-class, configurable
+//! knob (`[devices] policy = ...`).
+
+use std::fmt;
+
+use super::pool::{DeviceId, PooledDevice};
+use crate::{Error, Result};
+
+/// Which device a new VGPU lands on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// Cycle through devices in id order — oblivious but perfectly fair
+    /// for homogeneous pools and identical jobs.
+    RoundRobin,
+    /// Least estimated queued work (ms), then fewest bound clients —
+    /// adapts to heterogeneous specs and uneven job costs.
+    #[default]
+    LeastLoaded,
+    /// Most free segment memory that still fits the declared demand;
+    /// errors when no device can hold the segment (the `seg_bytes`
+    /// budget made placement-aware).
+    MemoryAware,
+    /// Sticky: a client (by rank name) returns to the device it used
+    /// last, even across RLS/REQ cycles — keeps iterative SPMD clients'
+    /// warm state local.  Falls back to least-loaded for first contact.
+    Affinity,
+}
+
+impl PlacementPolicy {
+    /// Every policy, in documentation order (for sweeps and benches).
+    pub const ALL: [PlacementPolicy; 4] = [
+        PlacementPolicy::RoundRobin,
+        PlacementPolicy::LeastLoaded,
+        PlacementPolicy::MemoryAware,
+        PlacementPolicy::Affinity,
+    ];
+
+    /// Canonical config-file spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::RoundRobin => "round-robin",
+            PlacementPolicy::LeastLoaded => "least-loaded",
+            PlacementPolicy::MemoryAware => "memory-aware",
+            PlacementPolicy::Affinity => "affinity",
+        }
+    }
+
+    /// Parse the config-file spelling.
+    pub fn parse(s: &str) -> Option<PlacementPolicy> {
+        match s.trim().to_lowercase().as_str() {
+            "round-robin" | "roundrobin" => Some(PlacementPolicy::RoundRobin),
+            "least-loaded" | "leastloaded" => Some(PlacementPolicy::LeastLoaded),
+            "memory-aware" | "memoryaware" => Some(PlacementPolicy::MemoryAware),
+            "affinity" => Some(PlacementPolicy::Affinity),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for PlacementPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Least-loaded selection: (queued_ms, clients, id) ascending.
+fn least_loaded(devices: &[PooledDevice]) -> DeviceId {
+    let mut best = 0usize;
+    for (i, d) in devices.iter().enumerate() {
+        let b = &devices[best];
+        if (d.queued_ms, d.clients) < (b.queued_ms, b.clients) {
+            best = i;
+        }
+    }
+    DeviceId(best)
+}
+
+/// Apply `policy` over the pool's load view.  `sticky_prev` is the
+/// client's remembered device (Affinity only); `rr_cursor` is the
+/// pool-owned round-robin state.  Total for every policy except
+/// `MemoryAware`, which errors when no device fits `mem_demand`.
+pub(super) fn pick(
+    policy: PlacementPolicy,
+    devices: &[PooledDevice],
+    rr_cursor: &mut usize,
+    sticky_prev: Option<DeviceId>,
+    mem_demand: u64,
+) -> Result<DeviceId> {
+    if devices.is_empty() {
+        return Err(Error::gvm("placement over an empty device pool"));
+    }
+    match policy {
+        PlacementPolicy::RoundRobin => {
+            let id = DeviceId(*rr_cursor % devices.len());
+            *rr_cursor = (*rr_cursor + 1) % devices.len();
+            Ok(id)
+        }
+        PlacementPolicy::LeastLoaded => Ok(least_loaded(devices)),
+        PlacementPolicy::MemoryAware => {
+            let mut best: Option<(u64, usize)> = None; // (free, id)
+            for (i, d) in devices.iter().enumerate() {
+                let free = d.mem_free();
+                if free >= mem_demand && best.map(|(bf, _)| free > bf).unwrap_or(true)
+                {
+                    best = Some((free, i));
+                }
+            }
+            match best {
+                Some((_, i)) => Ok(DeviceId(i)),
+                None => Err(Error::gvm(format!(
+                    "no device fits a {mem_demand} B segment (largest free: {} B)",
+                    devices.iter().map(|d| d.mem_free()).max().unwrap_or(0)
+                ))),
+            }
+        }
+        PlacementPolicy::Affinity => match sticky_prev {
+            Some(id) if id.0 < devices.len() => Ok(id),
+            _ => Ok(least_loaded(devices)),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceConfig;
+
+    fn devs(n: usize) -> Vec<PooledDevice> {
+        (0..n)
+            .map(|_| PooledDevice::new(DeviceConfig::tesla_c2070()))
+            .collect()
+    }
+
+    #[test]
+    fn parse_roundtrips_every_policy() {
+        for p in PlacementPolicy::ALL {
+            assert_eq!(PlacementPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(PlacementPolicy::parse("magic"), None);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let d = devs(3);
+        let mut cur = 0;
+        let picks: Vec<usize> = (0..6)
+            .map(|_| {
+                pick(PlacementPolicy::RoundRobin, &d, &mut cur, None, 0)
+                    .unwrap()
+                    .0
+            })
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_device() {
+        let mut d = devs(3);
+        d[0].queued_ms = 10.0;
+        d[1].queued_ms = 2.0;
+        d[2].queued_ms = 5.0;
+        let mut cur = 0;
+        let id = pick(PlacementPolicy::LeastLoaded, &d, &mut cur, None, 0).unwrap();
+        assert_eq!(id, DeviceId(1));
+    }
+
+    #[test]
+    fn memory_aware_rejects_oversized_demand() {
+        let mut d = devs(2);
+        let cap = DeviceConfig::tesla_c2070().mem_bytes;
+        d[0].mem_used = cap; // full
+        d[1].mem_used = cap - 100;
+        let mut cur = 0;
+        let id =
+            pick(PlacementPolicy::MemoryAware, &d, &mut cur, None, 100).unwrap();
+        assert_eq!(id, DeviceId(1));
+        let err =
+            pick(PlacementPolicy::MemoryAware, &d, &mut cur, None, 101).unwrap_err();
+        assert!(matches!(err, crate::Error::Gvm(_)), "{err}");
+    }
+
+    #[test]
+    fn affinity_honors_sticky_and_falls_back() {
+        let mut d = devs(4);
+        d[0].queued_ms = 50.0;
+        let mut cur = 0;
+        // Remembered device wins even if loaded.
+        let id = pick(
+            PlacementPolicy::Affinity,
+            &d,
+            &mut cur,
+            Some(DeviceId(0)),
+            0,
+        )
+        .unwrap();
+        assert_eq!(id, DeviceId(0));
+        // First contact falls back to least-loaded.
+        let id = pick(PlacementPolicy::Affinity, &d, &mut cur, None, 0).unwrap();
+        assert_ne!(id, DeviceId(0));
+    }
+
+    #[test]
+    fn empty_pool_is_an_error() {
+        let mut cur = 0;
+        for p in PlacementPolicy::ALL {
+            assert!(pick(p, &[], &mut cur, None, 0).is_err());
+        }
+    }
+}

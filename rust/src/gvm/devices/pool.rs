@@ -1,0 +1,404 @@
+//! The device pool: per-node registry of N simulated physical GPUs with
+//! load/memory accounting and VGPU→device bindings.
+//!
+//! The pool is deliberately backend-agnostic plain data: the daemon uses
+//! it to route real jobs, [`crate::gvm::sim_backend`] to split simulated
+//! batches, and [`crate::cluster`] to compose nodes with differing GPU
+//! counts.  All policy logic lives in [`super::placement`]; the pool owns
+//! the state a policy inspects (queued work, bound clients, segment
+//! memory) and the sticky map the `Affinity` policy needs.
+
+use std::collections::HashMap;
+
+use super::placement::{self, PlacementPolicy};
+use crate::config::DeviceConfig;
+use crate::{Error, Result};
+
+/// Physical device index within one node's pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeviceId(pub usize);
+
+/// Pool construction parameters — the `[devices]` config-file section.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Physical device count per node.
+    pub count: usize,
+    /// Per-device specs: one entry replicated across the pool, or
+    /// exactly `count` entries for a heterogeneous node.
+    pub specs: Vec<DeviceConfig>,
+    /// VGPU placement policy.
+    pub policy: PlacementPolicy,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self {
+            count: 1,
+            specs: vec![DeviceConfig::default()],
+            policy: PlacementPolicy::default(),
+        }
+    }
+}
+
+impl PoolConfig {
+    /// `count` identical devices under `policy`.
+    pub fn homogeneous(
+        count: usize,
+        spec: DeviceConfig,
+        policy: PlacementPolicy,
+    ) -> Self {
+        Self {
+            count,
+            specs: vec![spec],
+            policy,
+        }
+    }
+
+    /// Materialize the per-device spec list (replicating a single spec).
+    pub fn build_specs(&self) -> Result<Vec<DeviceConfig>> {
+        if self.count == 0 {
+            return Err(Error::Config("[devices] count must be >= 1".into()));
+        }
+        match self.specs.len() {
+            1 => Ok(vec![self.specs[0].clone(); self.count]),
+            n if n == self.count => Ok(self.specs.clone()),
+            n => Err(Error::Config(format!(
+                "[devices] {n} specs for count = {}",
+                self.count
+            ))),
+        }
+    }
+}
+
+/// One physical GPU plus its queue/memory accounting.
+#[derive(Debug, Clone)]
+pub struct PooledDevice {
+    /// Device model parameters (capacity, bandwidth, memory).
+    pub spec: DeviceConfig,
+    /// VGPUs currently bound here.
+    pub clients: usize,
+    /// Estimated queued work not yet completed (ms).
+    pub queued_ms: f64,
+    /// Segment bytes attributed to this device.
+    pub mem_used: u64,
+    /// Jobs completed on this device.
+    pub jobs_done: u64,
+    /// Cumulative execution time attributed to this device (ms).
+    pub busy_ms: f64,
+}
+
+impl PooledDevice {
+    /// Fresh idle device over a spec.
+    pub fn new(spec: DeviceConfig) -> Self {
+        Self {
+            spec,
+            clients: 0,
+            queued_ms: 0.0,
+            mem_used: 0,
+            jobs_done: 0,
+            busy_ms: 0.0,
+        }
+    }
+
+    /// Free device memory under the spec's capacity.
+    pub fn mem_free(&self) -> u64 {
+        self.spec.mem_bytes.saturating_sub(self.mem_used)
+    }
+}
+
+/// Status snapshot served through `ClientMsg::DevInfo`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceStatus {
+    /// Device index.
+    pub id: u32,
+    /// Bound VGPUs.
+    pub clients: u32,
+    /// Segment bytes attributed here.
+    pub mem_used: u64,
+    /// Estimated queued work (ms).
+    pub queued_ms: f64,
+    /// Jobs completed here.
+    pub jobs_done: u64,
+    /// Cumulative execution time here (ms).
+    pub busy_ms: f64,
+}
+
+/// The node's device pool.
+#[derive(Debug)]
+pub struct DevicePool {
+    devices: Vec<PooledDevice>,
+    policy: PlacementPolicy,
+    rr_cursor: usize,
+    /// Live VGPU→device bindings, keyed by unique client id (rank
+    /// *names* are client-supplied and may collide).
+    bound: HashMap<u64, DeviceId>,
+    /// Affinity memory, keyed by rank name: survives release so a
+    /// re-registering rank lands back on its previous device (sticky
+    /// across request iterations).
+    sticky: HashMap<String, DeviceId>,
+}
+
+impl DevicePool {
+    /// Build from a pool config.
+    pub fn new(cfg: &PoolConfig) -> Result<Self> {
+        Self::from_specs(cfg.build_specs()?, cfg.policy)
+    }
+
+    /// Build from explicit per-device specs.
+    pub fn from_specs(
+        specs: Vec<DeviceConfig>,
+        policy: PlacementPolicy,
+    ) -> Result<Self> {
+        if specs.is_empty() {
+            return Err(Error::gvm("device pool needs at least one device"));
+        }
+        Ok(Self {
+            devices: specs.into_iter().map(PooledDevice::new).collect(),
+            policy,
+            rr_cursor: 0,
+            bound: HashMap::new(),
+            sticky: HashMap::new(),
+        })
+    }
+
+    /// Device count.
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Always false (construction rejects empty pools); for clippy.
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Active placement policy.
+    pub fn policy(&self) -> PlacementPolicy {
+        self.policy
+    }
+
+    /// A device's model parameters.
+    pub fn spec(&self, id: DeviceId) -> &DeviceConfig {
+        &self.devices[id.0].spec
+    }
+
+    /// A device's full accounting view.
+    pub fn device(&self, id: DeviceId) -> &PooledDevice {
+        &self.devices[id.0]
+    }
+
+    /// Current binding of a client, if any.
+    pub fn placement(&self, client: u64) -> Option<DeviceId> {
+        self.bound.get(&client).copied()
+    }
+
+    /// Place (or re-resolve) a VGPU.  Idempotent for a live binding; a
+    /// released rank re-registering under `Affinity` returns to its
+    /// name's remembered device.  `client` must be unique per live VGPU
+    /// (names are client-supplied and may collide); `mem_demand` is the
+    /// declared segment size the `MemoryAware` policy must fit
+    /// (0 = unknown yet).
+    pub fn place(
+        &mut self,
+        client: u64,
+        name: &str,
+        mem_demand: u64,
+    ) -> Result<DeviceId> {
+        if let Some(&id) = self.bound.get(&client) {
+            return Ok(id);
+        }
+        let sticky_prev = self.sticky.get(name).copied();
+        let id = placement::pick(
+            self.policy,
+            &self.devices,
+            &mut self.rr_cursor,
+            sticky_prev,
+            mem_demand,
+        )?;
+        self.devices[id.0].clients += 1;
+        self.bound.insert(client, id);
+        self.sticky.insert(name.to_string(), id);
+        Ok(id)
+    }
+
+    /// Drop a client's binding (RLS).  The name-keyed sticky memory is
+    /// retained for `Affinity` re-placement.  Returns the device it was
+    /// bound to.
+    pub fn release(&mut self, client: u64) -> Option<DeviceId> {
+        let id = self.bound.remove(&client)?;
+        let d = &mut self.devices[id.0];
+        d.clients = d.clients.saturating_sub(1);
+        Some(id)
+    }
+
+    /// Attribute `bytes` of segment memory to a device.
+    pub fn reserve_mem(&mut self, id: DeviceId, bytes: u64) {
+        self.devices[id.0].mem_used =
+            self.devices[id.0].mem_used.saturating_add(bytes);
+    }
+
+    /// Release `bytes` of segment memory from a device.
+    pub fn free_mem(&mut self, id: DeviceId, bytes: u64) {
+        self.devices[id.0].mem_used =
+            self.devices[id.0].mem_used.saturating_sub(bytes);
+    }
+
+    /// Record estimated work queued onto a device.
+    pub fn note_queued(&mut self, id: DeviceId, est_ms: f64) {
+        self.devices[id.0].queued_ms += est_ms.max(0.0);
+    }
+
+    /// Retire a queue estimate without a completion — a queued job that
+    /// was abandoned (client released mid-flight).  Leaving the estimate
+    /// behind would permanently bias `LeastLoaded` away from the device.
+    pub fn retire_queued(&mut self, id: DeviceId, est_ms: f64) {
+        let d = &mut self.devices[id.0];
+        d.queued_ms = (d.queued_ms - est_ms.max(0.0)).max(0.0);
+    }
+
+    /// Record a job's completion: retire its queue estimate, accumulate
+    /// actual execution time.
+    pub fn note_done(&mut self, id: DeviceId, est_ms: f64, busy_ms: f64) {
+        let d = &mut self.devices[id.0];
+        d.queued_ms = (d.queued_ms - est_ms.max(0.0)).max(0.0);
+        d.jobs_done += 1;
+        d.busy_ms += busy_ms.max(0.0);
+    }
+
+    /// Status snapshot, by device id.
+    pub fn status(&self) -> Vec<DeviceStatus> {
+        self.devices
+            .iter()
+            .enumerate()
+            .map(|(i, d)| DeviceStatus {
+                id: i as u32,
+                clients: d.clients as u32,
+                mem_used: d.mem_used,
+                queued_ms: d.queued_ms,
+                jobs_done: d.jobs_done,
+                busy_ms: d.busy_ms,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(n: usize, policy: PlacementPolicy) -> DevicePool {
+        DevicePool::from_specs(vec![DeviceConfig::tesla_c2070(); n], policy)
+            .unwrap()
+    }
+
+    #[test]
+    fn round_robin_spreads_clients_evenly() {
+        let mut p = pool(4, PlacementPolicy::RoundRobin);
+        for i in 0..8u64 {
+            p.place(i, &format!("r{i}"), 0).unwrap();
+        }
+        for s in p.status() {
+            assert_eq!(s.clients, 2, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn place_is_idempotent_for_live_bindings() {
+        let mut p = pool(4, PlacementPolicy::RoundRobin);
+        let a = p.place(1, "r0", 0).unwrap();
+        let b = p.place(1, "r0", 0).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(p.device(a).clients, 1);
+    }
+
+    #[test]
+    fn duplicate_names_get_independent_bindings() {
+        // Rank names are client-supplied: two live clients under the
+        // same name must not share (or double-free) a binding.
+        let mut p = pool(2, PlacementPolicy::RoundRobin);
+        let a = p.place(1, "rank0", 0).unwrap();
+        let b = p.place(2, "rank0", 0).unwrap();
+        assert_ne!(a, b);
+        let total: u32 = p.status().iter().map(|s| s.clients).sum();
+        assert_eq!(total, 2);
+        p.release(1).unwrap();
+        let total: u32 = p.status().iter().map(|s| s.clients).sum();
+        assert_eq!(total, 1, "client 2 must stay bound");
+        assert_eq!(p.placement(2), Some(b));
+    }
+
+    #[test]
+    fn affinity_sticks_across_release_and_rebind() {
+        let mut p = pool(4, PlacementPolicy::Affinity);
+        let first = p.place(100, "rank3", 0).unwrap();
+        p.release(100).unwrap();
+        // Load up every other device; the sticky binding must still win
+        // even for a fresh client id re-registering the same rank name.
+        for i in 0..12u64 {
+            let d = p.place(i, &format!("x{i}"), 0).unwrap();
+            p.note_queued(d, 100.0);
+        }
+        assert_eq!(p.place(200, "rank3", 0).unwrap(), first);
+    }
+
+    #[test]
+    fn least_loaded_balances_queued_work() {
+        let mut p = pool(2, PlacementPolicy::LeastLoaded);
+        let a = p.place(1, "a", 0).unwrap();
+        p.note_queued(a, 10.0);
+        let b = p.place(2, "b", 0).unwrap();
+        assert_ne!(a, b);
+        p.note_done(a, 10.0, 9.5);
+        assert_eq!(p.device(a).queued_ms, 0.0);
+        assert_eq!(p.device(a).jobs_done, 1);
+    }
+
+    #[test]
+    fn retire_queued_drops_abandoned_estimates() {
+        let mut p = pool(2, PlacementPolicy::LeastLoaded);
+        let a = p.place(1, "a", 0).unwrap();
+        p.note_queued(a, 25.0);
+        p.retire_queued(a, 25.0);
+        assert_eq!(p.device(a).queued_ms, 0.0);
+        assert_eq!(p.device(a).jobs_done, 0, "no completion recorded");
+    }
+
+    #[test]
+    fn memory_accounting_saturates() {
+        let mut p = pool(1, PlacementPolicy::MemoryAware);
+        p.reserve_mem(DeviceId(0), 100);
+        p.free_mem(DeviceId(0), 1000); // over-free must not wrap
+        assert_eq!(p.device(DeviceId(0)).mem_used, 0);
+    }
+
+    #[test]
+    fn heterogeneous_specs_accepted() {
+        let mut small = DeviceConfig::tesla_c2070();
+        small.n_sms = 7;
+        let cfg = PoolConfig {
+            count: 2,
+            specs: vec![DeviceConfig::tesla_c2070(), small],
+            policy: PlacementPolicy::LeastLoaded,
+        };
+        let p = DevicePool::new(&cfg).unwrap();
+        assert_eq!(p.spec(DeviceId(0)).n_sms, 14);
+        assert_eq!(p.spec(DeviceId(1)).n_sms, 7);
+    }
+
+    #[test]
+    fn bad_pool_configs_rejected() {
+        assert!(DevicePool::from_specs(vec![], PlacementPolicy::RoundRobin)
+            .is_err());
+        let cfg = PoolConfig {
+            count: 3,
+            specs: vec![DeviceConfig::tesla_c2070(); 2],
+            policy: PlacementPolicy::RoundRobin,
+        };
+        assert!(DevicePool::new(&cfg).is_err());
+        assert!(PoolConfig {
+            count: 0,
+            ..PoolConfig::default()
+        }
+        .build_specs()
+        .is_err());
+    }
+}

@@ -7,18 +7,25 @@
 //! emits it in the model-optimal stream style — PS-1 for
 //! Compute-Intensive, PS-2 for I/O-Intensive (§4.2.3) — then executes on
 //! the device (PJRT for numerics; [`sim_backend`] replays the same plans
-//! on the C2070 simulator for paper-scale timing).
+//! on the C2070 simulator for paper-scale timing).  On multi-GPU nodes
+//! the [`devices`] pool places each VGPU onto a physical device and the
+//! daemon plans one batch *per device* (policy-driven placement:
+//! round-robin, least-loaded, memory-aware, or sticky affinity).
 
 pub mod daemon;
+pub mod devices;
 pub mod plan;
 pub mod scheduler;
 pub mod sim_backend;
 pub mod vgpu;
 
 pub use daemon::{Command, Daemon, DaemonConfig};
+pub use devices::{DevicePool, PlacementPolicy, PoolConfig};
 pub use plan::{CtxMode, Job, Plan, PlanOp};
 pub use scheduler::{plan_batch, Policy, StyleRule};
-pub use sim_backend::{simulate, simulate_spmd, BatchTiming};
+pub use sim_backend::{
+    simulate, simulate_pool, simulate_spmd, BatchTiming, PoolTiming,
+};
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -26,6 +33,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::ipc::{ClientMsg, ServerMsg};
+use crate::log;
 use crate::runtime::{DeviceThread, TensorValue};
 use crate::{Error, Result};
 

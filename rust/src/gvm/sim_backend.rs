@@ -135,6 +135,110 @@ pub fn simulate_spmd(
     ))
 }
 
+/// Timing of one SPMD batch spread over a multi-GPU device pool.
+#[derive(Debug, Clone)]
+pub struct PoolTiming {
+    /// Per device, by id: jobs placed there + that device's batch timing
+    /// (zero timing for idle devices).
+    pub per_device: Vec<(usize, BatchTiming)>,
+    /// Node makespan: devices run concurrently, so the max over devices.
+    pub total_ms: f64,
+}
+
+impl PoolTiming {
+    /// Total jobs across the pool.
+    pub fn n_jobs(&self) -> usize {
+        self.per_device.iter().map(|(k, _)| k).sum()
+    }
+
+    /// Node throughput in jobs per second.
+    pub fn jobs_per_s(&self) -> f64 {
+        if self.total_ms <= 0.0 {
+            0.0
+        } else {
+            self.n_jobs() as f64 / (self.total_ms / 1e3)
+        }
+    }
+
+    /// Per-device compute utilization over each device's own batch span.
+    pub fn utilizations(&self) -> Vec<f64> {
+        self.per_device.iter().map(|(_, t)| t.utilization()).collect()
+    }
+}
+
+/// Place `n` SPMD instances of `w` across a device pool (one synthetic
+/// rank per instance, `placement` policy) and simulate every device's
+/// batch on its own timeline; `planner` turns each device's job list
+/// into its emission plan (virtualized styles or the no-virt baseline).
+pub fn simulate_pool_with(
+    w: &crate::workloads::Workload,
+    n: usize,
+    specs: &[DeviceConfig],
+    placement: super::devices::PlacementPolicy,
+    mut planner: impl FnMut(Vec<super::plan::Job>) -> Plan,
+) -> Result<PoolTiming> {
+    use super::devices::DevicePool;
+    use super::scheduler::jobs_for_workload;
+
+    let mut pool = DevicePool::from_specs(specs.to_vec(), placement)?;
+    let est_ms = w.stages.t_in + w.stages.t_comp + w.stages.t_out;
+    let seg = w.in_bytes + w.out_bytes;
+    let mut counts = vec![0usize; pool.len()];
+    for i in 0..n {
+        let dev = pool.place(i as u64, &format!("rank{i}"), seg)?;
+        pool.reserve_mem(dev, seg);
+        pool.note_queued(dev, est_ms);
+        counts[dev.0] += 1;
+    }
+
+    let mut per_device = Vec::with_capacity(counts.len());
+    let mut total: f64 = 0.0;
+    for (d, &k) in counts.iter().enumerate() {
+        let timing = if k == 0 {
+            BatchTiming {
+                total_ms: 0.0,
+                job_end_ms: vec![],
+                compute_busy_ms: 0.0,
+            }
+        } else {
+            simulate(
+                &planner(jobs_for_workload(w, k)),
+                pool.spec(super::devices::DeviceId(d)),
+            )?
+        };
+        total = total.max(timing.total_ms);
+        per_device.push((k, timing));
+    }
+    Ok(PoolTiming {
+        per_device,
+        total_ms: total,
+    })
+}
+
+/// [`simulate_pool_with`] under the virtualized §4.2.3 scheduler.
+pub fn simulate_pool(
+    w: &crate::workloads::Workload,
+    n: usize,
+    specs: &[DeviceConfig],
+    placement: super::devices::PlacementPolicy,
+    policy: &super::scheduler::Policy,
+) -> Result<PoolTiming> {
+    simulate_pool_with(w, n, specs, placement, |jobs| {
+        super::scheduler::plan_batch(jobs, policy)
+    })
+}
+
+/// [`simulate_pool_with`] under the no-virtualization baseline (one
+/// context per process on each device).
+pub fn simulate_pool_baseline(
+    w: &crate::workloads::Workload,
+    n: usize,
+    specs: &[DeviceConfig],
+    placement: super::devices::PlacementPolicy,
+) -> Result<PoolTiming> {
+    simulate_pool_with(w, n, specs, placement, Plan::no_virt)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,5 +437,117 @@ mod tests {
     fn utilization_bounded() {
         let t = simulate(&Plan::ps1(ci_jobs(4)), &io_dev()).unwrap();
         assert!(t.utilization() > 0.0 && t.utilization() <= 1.0);
+    }
+
+    #[test]
+    fn pool_scaling_beats_single_device() {
+        use crate::gvm::devices::PlacementPolicy;
+        use crate::gvm::scheduler::Policy;
+        let suite = crate::workloads::Suite::paper_defaults();
+        let w = suite.get("electrostatics").unwrap();
+        let spec = DeviceConfig::tesla_c2070();
+        let one = simulate_pool(
+            w,
+            16,
+            &[spec.clone()],
+            PlacementPolicy::LeastLoaded,
+            &Policy::default(),
+        )
+        .unwrap();
+        let four = simulate_pool(
+            w,
+            16,
+            &vec![spec; 4],
+            PlacementPolicy::LeastLoaded,
+            &Policy::default(),
+        )
+        .unwrap();
+        assert_eq!(one.n_jobs(), 16);
+        assert_eq!(four.n_jobs(), 16);
+        // Acceptance bar: >= 1.5x simulated throughput on 4 devices.
+        assert!(
+            four.jobs_per_s() >= 1.5 * one.jobs_per_s(),
+            "4-dev {} jobs/s vs 1-dev {} jobs/s",
+            four.jobs_per_s(),
+            one.jobs_per_s()
+        );
+        for u in four.utilizations() {
+            assert!((0.0..=1.0).contains(&u), "utilization {u}");
+        }
+    }
+
+    #[test]
+    fn pool_leaves_surplus_devices_idle() {
+        use crate::gvm::devices::PlacementPolicy;
+        use crate::gvm::scheduler::Policy;
+        let suite = crate::workloads::Suite::paper_defaults();
+        let w = suite.get("mg").unwrap();
+        let t = simulate_pool(
+            w,
+            2,
+            &vec![DeviceConfig::tesla_c2070(); 4],
+            PlacementPolicy::RoundRobin,
+            &Policy::default(),
+        )
+        .unwrap();
+        let idle = t.per_device.iter().filter(|(k, _)| *k == 0).count();
+        assert_eq!(idle, 2);
+        assert!(t.total_ms > 0.0);
+    }
+
+    #[test]
+    fn heterogeneous_pool_makespan_is_slowest_device() {
+        use crate::gvm::devices::PlacementPolicy;
+        use crate::gvm::scheduler::Policy;
+        let suite = crate::workloads::Suite::paper_defaults();
+        let w = suite.get("vecadd").unwrap();
+        let fast = DeviceConfig::tesla_c2070();
+        let mut slow = DeviceConfig::tesla_c2070();
+        slow.h2d_bytes_per_ms /= 4.0; // a PCIe-starved second device
+        slow.d2h_bytes_per_ms /= 4.0;
+        let hetero = simulate_pool(
+            w,
+            8,
+            &[fast.clone(), slow],
+            PlacementPolicy::RoundRobin,
+            &Policy::default(),
+        )
+        .unwrap();
+        let fast_only = simulate_pool(
+            w,
+            4,
+            &[fast],
+            PlacementPolicy::RoundRobin,
+            &Policy::default(),
+        )
+        .unwrap();
+        // 4 IO-bound jobs land on each; the starved link sets the pace.
+        assert!(
+            hetero.total_ms > 2.0 * fast_only.total_ms,
+            "hetero {} vs fast-only {}",
+            hetero.total_ms,
+            fast_only.total_ms
+        );
+    }
+
+    #[test]
+    fn pool_baseline_slower_than_virtualized() {
+        use crate::gvm::devices::PlacementPolicy;
+        use crate::gvm::scheduler::Policy;
+        let suite = crate::workloads::Suite::paper_defaults();
+        let w = suite.get("mg").unwrap();
+        let specs = vec![DeviceConfig::tesla_c2070(); 2];
+        let virt = simulate_pool(
+            w,
+            8,
+            &specs,
+            PlacementPolicy::LeastLoaded,
+            &Policy::default(),
+        )
+        .unwrap();
+        let base =
+            simulate_pool_baseline(w, 8, &specs, PlacementPolicy::LeastLoaded)
+                .unwrap();
+        assert!(virt.total_ms < base.total_ms);
     }
 }

@@ -14,6 +14,17 @@ use crate::{Error, Result};
 /// Client identity assigned at connection time.
 pub type ClientId = u64;
 
+/// Checked budget decrement: a double release (or any accounting bug)
+/// must surface as an error, never wrap the u64 budget around.
+fn sub_checked(cur: u64, freed: u64, what: &str) -> Result<u64> {
+    cur.checked_sub(freed).ok_or_else(|| {
+        Error::gvm(format!(
+            "{what} accounting underflow: releasing {freed} B from {cur} B \
+             (double release?)"
+        ))
+    })
+}
+
 /// Lifecycle of one VGPU.
 #[derive(Debug, Clone, PartialEq)]
 pub enum VgpuState {
@@ -103,9 +114,9 @@ impl VgpuTable {
             let v = self.get_mut(id)?;
             out = v.in_slots.drain(..).map(|t| t.unwrap()).collect();
             freed = out.iter().map(|t| t.bytes() as u64).sum();
-            v.seg_bytes -= freed;
+            v.seg_bytes = sub_checked(v.seg_bytes, freed, "segment")?;
         }
-        self.mem_used -= freed;
+        self.mem_used = sub_checked(self.mem_used, freed, "node budget")?;
         Ok(out)
     }
 }
@@ -174,12 +185,12 @@ impl VgpuTable {
             }
             if let Some(old) = v.in_slots[slot].take() {
                 freed = old.bytes() as u64;
-                v.seg_bytes -= freed;
+                v.seg_bytes = sub_checked(v.seg_bytes, freed, "segment")?;
             }
             v.in_slots[slot] = Some(tensor);
             v.seg_bytes += bytes;
         }
-        self.mem_used -= freed;
+        self.mem_used = sub_checked(self.mem_used, freed, "node budget")?;
         self.mem_used += bytes;
         Ok(())
     }
@@ -242,7 +253,7 @@ impl VgpuTable {
             .vgpus
             .remove(&id)
             .ok_or_else(|| Error::protocol("RLS from unregistered client"))?;
-        self.mem_used -= v.seg_bytes;
+        self.mem_used = sub_checked(self.mem_used, v.seg_bytes, "node budget")?;
         Ok(())
     }
 
@@ -257,11 +268,11 @@ impl VgpuTable {
                 .flatten()
                 .map(|t| t.bytes() as u64)
                 .sum();
-            v.seg_bytes -= freed;
+            v.seg_bytes = sub_checked(v.seg_bytes, freed, "segment")?;
             v.out_slots.clear();
             v.state = VgpuState::Idle;
         }
-        self.mem_used -= freed;
+        self.mem_used = sub_checked(self.mem_used, freed, "node budget")?;
         Ok(())
     }
 
@@ -383,6 +394,49 @@ mod tests {
         let id = tbl.register("r").unwrap();
         tbl.stage(id, 1, t(1)).unwrap(); // slot 0 missing
         assert!(tbl.get(id).unwrap().staged_inputs().is_err());
+    }
+
+    #[test]
+    fn accounting_underflow_is_an_error_not_a_wrap() {
+        let mut tbl = VgpuTable::new(1 << 20, 8);
+        let id = tbl.register("r").unwrap();
+        tbl.stage(id, 0, t(4)).unwrap();
+        // Simulate corrupted accounting (a would-be double release).
+        tbl.mem_used = 0;
+        let err = tbl.recycle(id).unwrap_err();
+        assert!(matches!(err, Error::Gvm(_)), "{err}");
+        assert_eq!(tbl.mem_used, 0, "budget must not wrap");
+    }
+
+    #[test]
+    fn release_after_corruption_reports_gvm_error() {
+        let mut tbl = VgpuTable::new(1 << 20, 8);
+        let id = tbl.register("r").unwrap();
+        tbl.stage(id, 0, t(8)).unwrap();
+        tbl.mem_used = 4; // less than the segment's 32 B
+        assert!(matches!(tbl.release(id).unwrap_err(), Error::Gvm(_)));
+    }
+
+    #[test]
+    fn accounting_stays_exact_across_cycles() {
+        let mut tbl = VgpuTable::new(1 << 20, 8);
+        let a = tbl.register("a").unwrap();
+        let b = tbl.register("b").unwrap();
+        for _ in 0..3 {
+            tbl.stage(a, 0, t(8)).unwrap();
+            tbl.stage(a, 0, t(4)).unwrap(); // replace shrinks
+            tbl.stage(b, 1, t(16)).unwrap();
+            tbl.queue(a, "w").unwrap();
+            let moved = tbl.take_staged_inputs(a).unwrap();
+            assert_eq!(moved.len(), 1);
+            tbl.complete(a, vec![t(2)], 1.0).unwrap();
+            tbl.recycle(a).unwrap();
+            tbl.recycle(b).unwrap();
+            assert_eq!(tbl.mem_used(), 0);
+        }
+        tbl.release(a).unwrap();
+        tbl.release(b).unwrap();
+        assert_eq!(tbl.mem_used(), 0);
     }
 
     #[test]

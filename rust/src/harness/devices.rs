@@ -1,0 +1,176 @@
+//! Extension experiments for the multi-GPU device pool
+//! (`vgpu exp multi-gpu`): procs × devices × placement-policy sweep over
+//! the [`crate::gvm::devices`] subsystem, with per-device utilization.
+
+use super::ExpOutput;
+use crate::config::DeviceConfig;
+use crate::gvm::devices::PlacementPolicy;
+use crate::gvm::scheduler::Policy;
+use crate::gvm::sim_backend::simulate_pool;
+use crate::util::table::{f2, f3, Table};
+use crate::workloads::Suite;
+use crate::Result;
+
+/// Device counts swept per (workload, procs, policy) cell.
+const GPU_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// The `multi-gpu` experiment: one C2070 per pool slot, 8/16 SPMD
+/// processes, every placement policy, 1–8 devices.  Throughput is node
+/// jobs/s (batch size over the slowest device's makespan); per-device
+/// compute utilization is reported for every device in the pool.
+pub fn multi_gpu_pool() -> Result<ExpOutput> {
+    let suite = Suite::paper_defaults();
+    let spec = DeviceConfig::tesla_c2070();
+    let mut table = Table::new(&[
+        "workload",
+        "procs",
+        "devices",
+        "policy",
+        "node_ms",
+        "jobs_per_s",
+        "speedup_vs_1dev",
+        "per_device_util",
+    ]);
+    let mut notes = Vec::new();
+    let mut accept: Option<f64> = None; // LeastLoaded ES 16p: 4-dev vs 1-dev
+
+    for name in ["electrostatics", "vecadd"] {
+        let w = suite.get(name).unwrap();
+        for procs in [8usize, 16] {
+            for policy in PlacementPolicy::ALL {
+                let mut one_dev_ms: Option<f64> = None;
+                for g in GPU_SWEEP {
+                    let specs = vec![spec.clone(); g];
+                    let t = match simulate_pool(
+                        w,
+                        procs,
+                        &specs,
+                        policy,
+                        &Policy::default(),
+                    ) {
+                        Ok(t) => t,
+                        Err(crate::Error::Gvm(why)) => {
+                            // MemoryAware legitimately refuses when the
+                            // concurrent segments outgrow the pool (e.g.
+                            // 16 x 600 MB VecAdd on one 6 GB device).
+                            table.row(vec![
+                                name.to_string(),
+                                procs.to_string(),
+                                g.to_string(),
+                                policy.name().to_string(),
+                                "-".into(),
+                                "-".into(),
+                                "-".into(),
+                                format!("infeasible: {why}"),
+                            ]);
+                            continue;
+                        }
+                        Err(e) => return Err(e),
+                    };
+                    if g == 1 {
+                        one_dev_ms = Some(t.total_ms);
+                    }
+                    if name == "electrostatics"
+                        && procs == 16
+                        && g == 4
+                        && policy == PlacementPolicy::LeastLoaded
+                    {
+                        accept = one_dev_ms.map(|b| b / t.total_ms);
+                    }
+                    let utils = t
+                        .utilizations()
+                        .iter()
+                        .map(|u| format!("{u:.2}"))
+                        .collect::<Vec<_>>()
+                        .join("/");
+                    table.row(vec![
+                        name.to_string(),
+                        procs.to_string(),
+                        g.to_string(),
+                        policy.name().to_string(),
+                        f2(t.total_ms),
+                        f2(t.jobs_per_s()),
+                        match one_dev_ms {
+                            Some(b) => f3(b / t.total_ms),
+                            None => "-".into(),
+                        },
+                        utils,
+                    ]);
+                }
+            }
+        }
+    }
+
+    if let Some(s) = accept {
+        notes.push(format!(
+            "least-loaded, ES, 16 procs: 4 devices deliver {s:.2}x the \
+             single-device throughput (acceptance bar: >= 1.5x)"
+        ));
+    }
+    notes.push(
+        "device-bound kernels (ES) scale near-linearly with pool size; \
+         IO-bound kernels (VecAdd) scale with the added PCIe links until \
+         the per-device batch shrinks to one job; policies tie on \
+         homogeneous pools with uniform jobs — they diverge under \
+         heterogeneous specs and uneven load (see gvm::devices docs)"
+            .into(),
+    );
+    Ok(ExpOutput {
+        id: "multi-gpu".into(),
+        title: "Multi-GPU device pool: procs x devices x placement policy"
+            .into(),
+        table,
+        notes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multi_gpu_table_covers_the_sweep() {
+        let out = multi_gpu_pool().unwrap();
+        // 2 workloads x 2 proc counts x 4 policies x 4 device counts.
+        assert_eq!(out.table.len(), 64);
+    }
+
+    #[test]
+    fn meets_the_four_device_throughput_bar() {
+        let suite = Suite::paper_defaults();
+        let w = suite.get("electrostatics").unwrap();
+        let spec = DeviceConfig::tesla_c2070();
+        let one = simulate_pool(
+            w,
+            16,
+            &[spec.clone()],
+            PlacementPolicy::LeastLoaded,
+            &Policy::default(),
+        )
+        .unwrap();
+        let four = simulate_pool(
+            w,
+            16,
+            &vec![spec; 4],
+            PlacementPolicy::LeastLoaded,
+            &Policy::default(),
+        )
+        .unwrap();
+        assert!(
+            four.jobs_per_s() >= 1.5 * one.jobs_per_s(),
+            "{} vs {}",
+            four.jobs_per_s(),
+            one.jobs_per_s()
+        );
+    }
+
+    #[test]
+    fn acceptance_note_present() {
+        let out = multi_gpu_pool().unwrap();
+        assert!(
+            out.notes.iter().any(|n| n.contains("acceptance bar")),
+            "{:?}",
+            out.notes
+        );
+    }
+}

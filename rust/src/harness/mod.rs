@@ -25,11 +25,13 @@
 //! | ablation-ctx | ctx-switch sensitivity |
 //! | ablation-barrier | barrier vs immediate flush |
 //! | ablation-policy | paper policy vs model-optimal rule |
+//! | multi-gpu | device pool: procs x devices x placement policy |
 //! | ext-multigpu | extension: multi-GPU node scaling |
 //! | ext-cluster | extension: cluster weak scaling (Fig. 11) |
 //! | ext-fig18-socket | extension: Fig. 18 over the socket transport |
 
 pub mod ablations;
+pub mod devices;
 pub mod figures;
 pub mod tables;
 
@@ -92,6 +94,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "ablation-ctx",
     "ablation-barrier",
     "ablation-policy",
+    "multi-gpu",
     "ext-multigpu",
     "ext-cluster",
     "ext-fig18-socket",
@@ -119,6 +122,7 @@ pub fn run(id: &str) -> Result<ExpOutput> {
         "ablation-ctx" => ablations::ctx_switch_sweep(),
         "ablation-barrier" => ablations::barrier_vs_immediate(),
         "ablation-policy" => ablations::policy_rule_comparison(),
+        "multi-gpu" => devices::multi_gpu_pool(),
         "ext-multigpu" => ablations::multi_gpu_scaling(),
         "ext-cluster" => ablations::cluster_scaling(),
         "ext-fig18-socket" => figures::overhead_socket_figure(),

@@ -24,10 +24,15 @@ impl<S: Read + Write> Framed<S> {
 
     /// Write one frame.
     pub fn send(&mut self, payload: &[u8]) -> Result<()> {
-        let len = payload.len() as u32;
-        if len > MAX_FRAME {
-            return Err(Error::Ipc(format!("frame too large: {len}")));
+        // Checked on usize: an `as u32` cast would silently truncate
+        // payloads above 4 GiB into small-but-wrong length prefixes.
+        if payload.len() > MAX_FRAME as usize {
+            return Err(Error::Ipc(format!(
+                "frame too large: {} > {MAX_FRAME}",
+                payload.len()
+            )));
         }
+        let len = payload.len() as u32;
         self.stream.write_all(&len.to_le_bytes())?;
         self.stream.write_all(payload)?;
         self.stream.flush()?;
@@ -130,6 +135,66 @@ mod tests {
             let mut a = a;
             a.write_all(&u32::MAX.to_le_bytes()).unwrap();
         }
+        assert!(fb.recv().is_err());
+    }
+
+    #[test]
+    fn oversized_frame_rejected_on_send() {
+        // MAX_FRAME + 1 zero bytes: virtually allocated, never written —
+        // send must reject on the length check before touching the
+        // stream, so the peer sees a clean EOF, not a partial frame.
+        let (a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        let payload = vec![0u8; MAX_FRAME as usize + 1];
+        let mut fa = Framed::new(a);
+        let err = fa.send(&payload).unwrap_err();
+        assert!(matches!(err, Error::Ipc(_)), "{err}");
+        assert!(err.to_string().contains("frame too large"), "{err}");
+        drop(fa);
+        let mut fb = Framed::new(b);
+        assert!(fb.recv().unwrap().is_none(), "no bytes must have leaked");
+    }
+
+    #[test]
+    fn oversized_frame_rejected_on_recv() {
+        // A just-over-limit length prefix is rejected without attempting
+        // the (gigabyte-scale) payload allocation.
+        let (a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        let mut fb = Framed::new(b);
+        {
+            use std::io::Write;
+            let mut a = a;
+            a.write_all(&(MAX_FRAME + 1).to_le_bytes()).unwrap();
+        }
+        let err = fb.recv().unwrap_err();
+        assert!(err.to_string().contains("corrupt frame length"), "{err}");
+    }
+
+    #[test]
+    fn truncated_length_prefix_is_clean_eof() {
+        // Peer died mid-prefix: recv must report end-of-stream, not an
+        // error and not a hang.
+        let (a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        {
+            use std::io::Write;
+            let mut a = a;
+            a.write_all(&[0x10, 0x00]).unwrap(); // 2 of 4 length bytes
+        }
+        let mut fb = Framed::new(b);
+        assert!(fb.recv().unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_payload_is_an_error() {
+        // Peer died mid-payload: a half-delivered frame must surface as
+        // an error (silent EOF would drop a message boundary).
+        let (a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        {
+            use std::io::Write;
+            let mut a = a;
+            a.write_all(&16u32.to_le_bytes()).unwrap();
+            a.write_all(&[1, 2, 3]).unwrap(); // 3 of 16 payload bytes
+        }
+        let mut fb = Framed::new(b);
         assert!(fb.recv().is_err());
     }
 }

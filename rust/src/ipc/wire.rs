@@ -38,6 +38,26 @@ pub enum ClientMsg {
     Rls,
     /// Query GVM node statistics (observability extension).
     Stats,
+    /// Query the physical device pool and this VGPU's placement
+    /// (multi-GPU observability extension).
+    DevInfo,
+}
+
+/// Per-device status row carried by [`ServerMsg::Devices`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceEntry {
+    /// Device index within the node's pool.
+    pub id: u32,
+    /// VGPUs currently placed on this device.
+    pub clients: u32,
+    /// Segment bytes attributed to this device.
+    pub mem_used: u64,
+    /// Estimated queued work (ms).
+    pub queued_ms: f64,
+    /// Jobs completed on this device.
+    pub jobs_done: u64,
+    /// Cumulative execution time attributed to this device (ms).
+    pub busy_ms: f64,
 }
 
 /// GVM -> client responses.
@@ -82,6 +102,13 @@ pub enum ServerMsg {
         device_ms: f64,
         /// Currently registered clients.
         clients: u32,
+    },
+    /// Device-pool snapshot (DevInfo response).
+    Devices {
+        /// The requesting VGPU's device index (`u32::MAX` = unplaced).
+        self_device: u32,
+        /// Per-device status, by device id.
+        devices: Vec<DeviceEntry>,
     },
 }
 
@@ -128,6 +155,7 @@ impl ClientMsg {
             }
             ClientMsg::Rls => out.push(5),
             ClientMsg::Stats => out.push(6),
+            ClientMsg::DevInfo => out.push(7),
         }
         out
     }
@@ -157,6 +185,7 @@ impl ClientMsg {
             },
             5 => ClientMsg::Rls,
             6 => ClientMsg::Stats,
+            7 => ClientMsg::DevInfo,
             t => return Err(Error::Ipc(format!("bad client tag {t}"))),
         };
         Ok(msg)
@@ -202,6 +231,22 @@ impl ServerMsg {
                 out.extend_from_slice(&device_ms.to_le_bytes());
                 out.extend_from_slice(&clients.to_le_bytes());
             }
+            ServerMsg::Devices {
+                self_device,
+                devices,
+            } => {
+                out.push(6);
+                out.extend_from_slice(&self_device.to_le_bytes());
+                out.extend_from_slice(&(devices.len() as u32).to_le_bytes());
+                for d in devices {
+                    out.extend_from_slice(&d.id.to_le_bytes());
+                    out.extend_from_slice(&d.clients.to_le_bytes());
+                    out.extend_from_slice(&d.mem_used.to_le_bytes());
+                    out.extend_from_slice(&d.queued_ms.to_le_bytes());
+                    out.extend_from_slice(&d.jobs_done.to_le_bytes());
+                    out.extend_from_slice(&d.busy_ms.to_le_bytes());
+                }
+            }
         }
         out
     }
@@ -237,6 +282,28 @@ impl ServerMsg {
                 device_ms: f64::from_le_bytes(read_arr::<8>(buf, &mut pos)?),
                 clients: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
             },
+            6 => {
+                let self_device = u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
+                let n = u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
+                if n > 4096 {
+                    return Err(Error::Ipc(format!("implausible device count {n}")));
+                }
+                let mut devices = Vec::with_capacity(n as usize);
+                for _ in 0..n {
+                    devices.push(DeviceEntry {
+                        id: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
+                        clients: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
+                        mem_used: read_u64(buf, &mut pos)?,
+                        queued_ms: f64::from_le_bytes(read_arr::<8>(buf, &mut pos)?),
+                        jobs_done: read_u64(buf, &mut pos)?,
+                        busy_ms: f64::from_le_bytes(read_arr::<8>(buf, &mut pos)?),
+                    });
+                }
+                ServerMsg::Devices {
+                    self_device,
+                    devices,
+                }
+            }
             t => return Err(Error::Ipc(format!("bad server tag {t}"))),
         };
         Ok(msg)
@@ -271,6 +338,7 @@ mod tests {
         roundtrip_c(ClientMsg::Rcv { slot: 1 });
         roundtrip_c(ClientMsg::Rls);
         roundtrip_c(ClientMsg::Stats);
+        roundtrip_c(ClientMsg::DevInfo);
     }
 
     #[test]
@@ -294,6 +362,31 @@ mod tests {
             bytes_staged: 1 << 30,
             device_ms: 123.5,
             clients: 8,
+        });
+        roundtrip_s(ServerMsg::Devices {
+            self_device: 1,
+            devices: vec![
+                DeviceEntry {
+                    id: 0,
+                    clients: 3,
+                    mem_used: 1 << 24,
+                    queued_ms: 12.5,
+                    jobs_done: 7,
+                    busy_ms: 88.25,
+                },
+                DeviceEntry {
+                    id: 1,
+                    clients: 0,
+                    mem_used: 0,
+                    queued_ms: 0.0,
+                    jobs_done: 0,
+                    busy_ms: 0.0,
+                },
+            ],
+        });
+        roundtrip_s(ServerMsg::Devices {
+            self_device: u32::MAX,
+            devices: vec![],
         });
     }
 

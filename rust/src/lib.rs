@@ -13,6 +13,9 @@
 //! * [`gvm`] — the coordinator: VGPU registry, request queues, SPMD
 //!   barriers, the PS-1/PS-2 stream scheduler, and the no-virtualization
 //!   baseline executor.
+//! * [`gvm::devices`] — the multi-GPU device pool: N (possibly
+//!   heterogeneous) physical devices per node with pluggable VGPU
+//!   placement policies and per-device batch queues.
 //! * [`api`] — the client-side VGPU handle implementing the paper's
 //!   `REQ/SND/STR/STP/RCV/RLS` protocol.
 //! * [`ipc`] — wire protocol + transports (unix socket, in-process).
@@ -43,6 +46,21 @@
 //! assert_eq!(out.elems(), n);
 //! # drop(done);
 //! ```
+//!
+//! ## Multi-GPU virtualization
+//!
+//! Real heterogeneous nodes carry several GPUs, not one.  The
+//! [`gvm::devices`] pool virtualizes all of them behind the same six-verb
+//! API: every `REQ` places the new VGPU onto a physical device through a
+//! pluggable policy — `RoundRobin`, `LeastLoaded` (by queued work),
+//! `MemoryAware` (segment-budget aware), or `Affinity` (sticky for
+//! iterative SPMD clients) — and the daemon plans and emits one batch
+//! *per device*, so device timelines proceed concurrently and node
+//! turnaround is the max over devices.  Configure it with a `[devices]`
+//! section (`count`, `policy`, optional per-device `n_sms`/`mem_mb`
+//! lists for heterogeneous pools; see [`config::file`]), inspect it with
+//! [`api::VgpuClient::devices`], and sweep procs × devices × policy with
+//! `vgpu exp multi-gpu`.
 
 pub mod api;
 pub mod cli;
@@ -53,6 +71,7 @@ pub mod gpusim;
 pub mod gvm;
 pub mod harness;
 pub mod ipc;
+pub mod log;
 pub mod metrics;
 pub mod model;
 pub mod profile;

@@ -1,0 +1,101 @@
+//! Minimal leveled stderr logging (the offline environment has no `log`
+//! crate): `log::{error!, warn!, info!}` macros over a process-wide
+//! level.  Modules opt in with `use crate::log;` so call sites read the
+//! same as with the external facade; binaries use `use vgpu::log;`.
+//!
+//! The level defaults to `Warn`; the CLI raises it to `Info`, and the
+//! `VGPU_LOG` environment variable (`error|warn|info`) overrides both.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ascending verbosity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable subsystem failures.
+    Error = 1,
+    /// Degraded-but-continuing conditions (job failures, client drops).
+    Warn = 2,
+    /// Lifecycle events (daemon up, socket bound).
+    Info = 3,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+
+/// Set the maximum emitted level.
+pub fn set_max_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Apply `VGPU_LOG=error|warn|info` if set; unknown values are ignored.
+pub fn init_from_env() {
+    match std::env::var("VGPU_LOG").as_deref() {
+        Ok("error") => set_max_level(Level::Error),
+        Ok("warn") => set_max_level(Level::Warn),
+        Ok("info") => set_max_level(Level::Info),
+        _ => {}
+    }
+}
+
+/// Would a record at `level` be emitted?
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+#[doc(hidden)]
+pub fn emit(level: Level, args: fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{}] {}", level.tag(), args);
+    }
+}
+
+macro_rules! error {
+    ($($t:tt)*) => {
+        $crate::log::emit($crate::log::Level::Error, format_args!($($t)*))
+    };
+}
+macro_rules! warn {
+    ($($t:tt)*) => {
+        $crate::log::emit($crate::log::Level::Warn, format_args!($($t)*))
+    };
+}
+macro_rules! info {
+    ($($t:tt)*) => {
+        $crate::log::emit($crate::log::Level::Info, format_args!($($t)*))
+    };
+}
+pub use {error, info, warn};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_max_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_max_level(Level::Info);
+        assert!(enabled(Level::Info));
+        set_max_level(Level::Warn); // restore default for other tests
+    }
+
+    #[test]
+    fn macros_compile_through_the_module_path() {
+        use crate::log;
+        log::info!("info {}", 1);
+        log::warn!("warn {}", 2);
+        log::error!("error {}", 3);
+    }
+}

@@ -24,21 +24,8 @@ fn main() {
 }
 
 fn init_logging() {
-    struct StderrLog;
-    impl log::Log for StderrLog {
-        fn enabled(&self, meta: &log::Metadata) -> bool {
-            meta.level() <= log::Level::Info
-        }
-        fn log(&self, rec: &log::Record) {
-            if self.enabled(rec.metadata()) {
-                eprintln!("[{}] {}", rec.level(), rec.args());
-            }
-        }
-        fn flush(&self) {}
-    }
-    static LOGGER: StderrLog = StderrLog;
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(log::LevelFilter::Info);
+    vgpu::log::set_max_level(vgpu::log::Level::Info);
+    vgpu::log::init_from_env(); // VGPU_LOG overrides the CLI default
 }
 
 fn dispatch(cmd: Cmd) -> Result<()> {

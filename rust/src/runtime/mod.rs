@@ -13,10 +13,15 @@
 //! single device context and everyone else queues requests to it.
 
 mod device_thread;
+pub mod pjrt;
 pub(crate) mod values;
 
 pub use device_thread::{DeviceThread, ExecHandle};
 pub use values::TensorValue;
+
+// The GPU-enabled image swaps this alias for the real `xla` crate; the
+// offline tree compiles the API-identical stub (see pjrt.rs docs).
+use pjrt as xla;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

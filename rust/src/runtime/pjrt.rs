@@ -1,0 +1,144 @@
+//! PJRT binding shim.
+//!
+//! GPU-enabled images compile [`super::Runtime`] against the real `xla`
+//! PJRT bindings (CPU client + HLO-text compiler).  This offline tree
+//! ships an API-identical stub instead: constructing the client fails
+//! with a clear error, so artifact-backed paths (`Gvm::launch`,
+//! `vgpu run`) degrade to the same "artifacts not built" skips the
+//! integration tests already use, while every simulator-backed path
+//! stays fully functional.  Swapping the real binding back in is the
+//! one-line `use ... as xla` alias in [`super`] and [`super::values`].
+
+use std::fmt;
+use std::path::Path;
+
+const UNAVAILABLE: &str = "PJRT unavailable: this build uses the offline \
+                           stub (src/runtime/pjrt.rs); rebuild against \
+                           the real xla binding for artifact execution";
+
+/// Error type mirroring `xla::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+/// Host-side literal (stub: carries no data).
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    /// Reshape to `dims`.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+
+    /// Destructure a tuple literal into its leaves.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+}
+
+/// PJRT client handle (stub: cannot be constructed).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// CPU client. Always fails in the stub — callers surface the error
+    /// at daemon launch, before any protocol traffic.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    /// Platform name (for logs).
+    pub fn platform_name(&self) -> String {
+        "pjrt-stub".to_string()
+    }
+
+    /// Compile a computation into a loaded executable.
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal inputs; `[replica][output]` buffers.
+    pub fn execute<L>(
+        &self,
+        _args: &[Literal],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Synchronous device-to-host copy.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self, Error> {
+        unavailable()
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loud_and_early() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT unavailable"), "{err}");
+        assert!(HloModuleProto::from_text_file("/nope").is_err());
+        assert!(Literal::vec1(&[1.0f32]).to_vec::<f32>().is_err());
+    }
+}

@@ -1,5 +1,6 @@
 //! Host tensor values crossing the IPC and runtime boundaries.
 
+use super::pjrt as xla;
 use crate::profile::{DType, TensorSpec};
 use crate::{Error, Result};
 

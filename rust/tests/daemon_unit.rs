@@ -9,6 +9,8 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Duration;
 
+use vgpu::config::DeviceConfig;
+use vgpu::gvm::devices::{PlacementPolicy, PoolConfig};
 use vgpu::gvm::{Command, Daemon, DaemonConfig};
 use vgpu::ipc::{ClientMsg, ServerMsg};
 use vgpu::runtime::{ExecHandle, TensorValue};
@@ -219,6 +221,96 @@ fn stats_counters_track_activity() {
             assert_eq!(jobs_failed, 0);
             assert_eq!(bytes_staged, 16); // 4 x f32
             assert_eq!(clients, 1);
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+/// Like `daemon_with`, but over a multi-GPU pool.
+fn daemon_with_pool(
+    barrier: Option<usize>,
+    timeout_ms: u64,
+    n_devices: usize,
+    policy: PlacementPolicy,
+) -> mpsc::Sender<Command> {
+    let exec = ExecHandle::mock(vec!["double".into()], |_, inputs| {
+        Ok(vec![inputs[0].clone()])
+    });
+    let cfg = DaemonConfig {
+        barrier,
+        barrier_timeout: Duration::from_millis(timeout_ms),
+        pool: PoolConfig::homogeneous(
+            n_devices,
+            DeviceConfig::tesla_c2070(),
+            policy,
+        ),
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::new(cfg, exec);
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+    tx
+}
+
+#[test]
+fn round_robin_placement_visible_through_devinfo() {
+    let tx = daemon_with_pool(Some(4), 5_000, 2, PlacementPolicy::RoundRobin);
+    let ids: Vec<u64> = (0..4)
+        .map(|i| register(&tx, &format!("rank{i}")))
+        .collect();
+    match call(&tx, ids[0], ClientMsg::DevInfo) {
+        ServerMsg::Devices {
+            self_device,
+            devices,
+        } => {
+            assert_eq!(devices.len(), 2);
+            assert!(self_device < 2, "self_device {self_device}");
+            // 4 ranks round-robined over 2 devices: 2 each.
+            assert!(
+                devices.iter().all(|d| d.clients == 2),
+                "{devices:?}"
+            );
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn per_device_batches_complete_every_client() {
+    let tx = daemon_with_pool(Some(4), 5_000, 2, PlacementPolicy::RoundRobin);
+    let ids: Vec<u64> = (0..4)
+        .map(|i| register(&tx, &format!("rank{i}")))
+        .collect();
+    for &id in &ids {
+        call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+        call(&tx, id, ClientMsg::Str { workload: "double".into() });
+    }
+    for &id in &ids {
+        assert!(matches!(call(&tx, id, ClientMsg::Stp), ServerMsg::Done { .. }));
+    }
+    // Both devices did work and the pool's queue estimates drained.
+    match call(&tx, ids[0], ClientMsg::DevInfo) {
+        ServerMsg::Devices { devices, .. } => {
+            assert!(devices.iter().all(|d| d.jobs_done == 2), "{devices:?}");
+            assert!(
+                devices.iter().all(|d| d.queued_ms.abs() < 1e-9),
+                "{devices:?}"
+            );
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn release_unbinds_from_the_pool() {
+    let tx = daemon_with_pool(Some(1), 50, 2, PlacementPolicy::RoundRobin);
+    let a = register(&tx, "a");
+    let b = register(&tx, "b");
+    assert!(matches!(call(&tx, a, ClientMsg::Rls), ServerMsg::Ack));
+    match call(&tx, b, ClientMsg::DevInfo) {
+        ServerMsg::Devices { devices, .. } => {
+            let total: u32 = devices.iter().map(|d| d.clients).sum();
+            assert_eq!(total, 1, "{devices:?}");
         }
         other => panic!("{other:?}"),
     }

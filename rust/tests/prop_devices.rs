@@ -1,0 +1,216 @@
+//! Property tests over the multi-GPU device pool and placement engine.
+//!
+//! Invariants (ISSUE acceptance set): placement is *total* (every client
+//! lands on a valid device whenever one is feasible), `MemoryAware`
+//! respects per-device memory budgets, and `Affinity` is sticky across
+//! request iterations (RLS + re-REQ).  Reproduce failures with
+//! `VGPU_PROP_SEED=<seed> cargo test --test prop_devices`.
+
+use vgpu::config::DeviceConfig;
+use vgpu::gvm::devices::{DevicePool, PlacementPolicy};
+use vgpu::testkit::{default_cases, forall_check};
+use vgpu::util::rng::SplitMix64;
+
+#[derive(Debug)]
+struct PoolCase {
+    n_devices: usize,
+    n_clients: usize,
+    policy: PlacementPolicy,
+    /// Per-client segment demand (bytes).
+    demands: Vec<u64>,
+    /// Per-client estimated job cost (ms), for load accounting.
+    est_ms: Vec<f64>,
+}
+
+fn gen_case(r: &mut SplitMix64) -> PoolCase {
+    let n_devices = 1 + r.below(8);
+    let n_clients = 1 + r.below(32);
+    let policy = PlacementPolicy::ALL[r.below(4)];
+    let demands = (0..n_clients)
+        .map(|_| r.range_u64(1, 1 << 30))
+        .collect();
+    let est_ms = (0..n_clients).map(|_| r.next_f64() * 100.0).collect();
+    PoolCase {
+        n_devices,
+        n_clients,
+        policy,
+        demands,
+        est_ms,
+    }
+}
+
+fn pool_for(c: &PoolCase) -> DevicePool {
+    DevicePool::from_specs(
+        vec![DeviceConfig::tesla_c2070(); c.n_devices],
+        c.policy,
+    )
+    .unwrap()
+}
+
+#[test]
+fn prop_placement_is_total_and_valid() {
+    forall_check("placement totality", default_cases(), gen_case, |c| {
+        let mut pool = pool_for(c);
+        for i in 0..c.n_clients {
+            // Demands stay under the C2070's 6 GB, so every policy must
+            // succeed and return an in-range device.
+            let dev = pool
+                .place(i as u64, &format!("r{i}"), c.demands[i].min(1 << 20))
+                .map_err(|e| format!("client {i}: {e}"))?;
+            if dev.0 >= pool.len() {
+                return Err(format!("device {} out of range", dev.0));
+            }
+            pool.note_queued(dev, c.est_ms[i]);
+        }
+        // Every client is bound, and bindings are stable.
+        for i in 0..c.n_clients {
+            let bound = pool
+                .placement(i as u64)
+                .ok_or_else(|| format!("client {i} unbound"))?;
+            let again = pool
+                .place(i as u64, &format!("r{i}"), 0)
+                .map_err(|e| e.to_string())?;
+            if bound != again {
+                return Err(format!("binding moved: {bound:?} -> {again:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memory_aware_respects_budgets() {
+    forall_check("memory budgets", default_cases(), gen_case, |c| {
+        let mut pool = DevicePool::from_specs(
+            vec![DeviceConfig::tesla_c2070(); c.n_devices],
+            PlacementPolicy::MemoryAware,
+        )
+        .unwrap();
+        let cap = DeviceConfig::tesla_c2070().mem_bytes;
+        for (i, &demand) in c.demands.iter().enumerate() {
+            let before: Vec<u64> = (0..pool.len())
+                .map(|d| pool.device(vgpu::gvm::devices::DeviceId(d)).mem_free())
+                .collect();
+            match pool.place(i as u64, &format!("r{i}"), demand) {
+                Ok(dev) => {
+                    // The chosen device really had room.
+                    if before[dev.0] < demand {
+                        return Err(format!(
+                            "client {i}: placed {demand} B on a device \
+                             with {} B free",
+                            before[dev.0]
+                        ));
+                    }
+                    pool.reserve_mem(dev, demand);
+                    let d = pool.device(dev);
+                    if d.mem_used > cap {
+                        return Err(format!(
+                            "device over budget: {} > {cap}",
+                            d.mem_used
+                        ));
+                    }
+                }
+                Err(_) => {
+                    // Refusal is only legal when nothing fits.
+                    if before.iter().any(|&f| f >= demand) {
+                        return Err(format!(
+                            "client {i}: refused {demand} B though a \
+                             device had room ({before:?})"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_affinity_sticks_across_iterations() {
+    forall_check("affinity stickiness", default_cases(), gen_case, |c| {
+        let mut pool = DevicePool::from_specs(
+            vec![DeviceConfig::tesla_c2070(); c.n_devices],
+            PlacementPolicy::Affinity,
+        )
+        .unwrap();
+        let mut first = Vec::with_capacity(c.n_clients);
+        for i in 0..c.n_clients {
+            let dev = pool
+                .place(i as u64, &format!("r{i}"), 0)
+                .map_err(|e| e.to_string())?;
+            pool.note_queued(dev, c.est_ms[i]);
+            first.push(dev);
+        }
+        // Iterate: release everyone, shift the load picture, re-place
+        // the same rank names under fresh client ids (an RLS/REQ cycle).
+        for round in 0..3u64 {
+            for i in 0..c.n_clients {
+                pool.release(round * 1000 + i as u64);
+            }
+            for i in 0..c.n_clients {
+                let dev = pool
+                    .place((round + 1) * 1000 + i as u64, &format!("r{i}"), 0)
+                    .map_err(|e| e.to_string())?;
+                if dev != first[i] {
+                    return Err(format!(
+                        "round {round}: client {i} moved {:?} -> {dev:?}",
+                        first[i]
+                    ));
+                }
+                pool.note_queued(dev, c.est_ms[i] * (round + 1) as f64);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_round_robin_balances_client_counts() {
+    forall_check("round-robin balance", default_cases(), gen_case, |c| {
+        let mut pool = DevicePool::from_specs(
+            vec![DeviceConfig::tesla_c2070(); c.n_devices],
+            PlacementPolicy::RoundRobin,
+        )
+        .unwrap();
+        for i in 0..c.n_clients {
+            pool.place(i as u64, &format!("r{i}"), 0)
+                .map_err(|e| e.to_string())?;
+        }
+        let counts: Vec<u32> = pool.status().iter().map(|s| s.clients).collect();
+        let (min, max) = (
+            *counts.iter().min().unwrap(),
+            *counts.iter().max().unwrap(),
+        );
+        if max - min > 1 {
+            return Err(format!("imbalanced: {counts:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_least_loaded_never_picks_a_strictly_busier_device() {
+    forall_check("least-loaded greediness", default_cases(), gen_case, |c| {
+        let mut pool = DevicePool::from_specs(
+            vec![DeviceConfig::tesla_c2070(); c.n_devices],
+            PlacementPolicy::LeastLoaded,
+        )
+        .unwrap();
+        for i in 0..c.n_clients {
+            let loads: Vec<f64> =
+                pool.status().iter().map(|s| s.queued_ms).collect();
+            let min = loads.iter().cloned().fold(f64::INFINITY, f64::min);
+            let dev = pool
+                .place(i as u64, &format!("r{i}"), 0)
+                .map_err(|e| e.to_string())?;
+            if loads[dev.0] > min {
+                return Err(format!(
+                    "client {i}: picked load {} with min {min}",
+                    loads[dev.0]
+                ));
+            }
+            pool.note_queued(dev, c.est_ms[i]);
+        }
+        Ok(())
+    });
+}
