@@ -40,6 +40,7 @@ fn main() {
         f.send(
             &ClientMsg::Req {
                 name: "bench".into(),
+                tenant: String::new(),
             }
             .encode(),
         )

@@ -82,14 +82,28 @@ impl VgpuClient {
         }
     }
 
-    /// Connect over a unix socket and perform `REQ`.
+    /// Connect over a unix socket and perform `REQ` under the default
+    /// QoS tenant.
     pub fn connect_unix(
         path: impl AsRef<std::path::Path>,
         name: &str,
     ) -> Result<Self> {
+        Self::connect_unix_as(path, name, crate::gvm::qos::DEFAULT_TENANT)
+    }
+
+    /// Connect over a unix socket and perform `REQ` attributed to a QoS
+    /// tenant (see [`crate::gvm::qos`]): the tenant's `[qos]` weight
+    /// shapes this VGPU's placement and its batch service order, and its
+    /// rate limit caps how many jobs it may hold queued.
+    pub fn connect_unix_as(
+        path: impl AsRef<std::path::Path>,
+        name: &str,
+        tenant: &str,
+    ) -> Result<Self> {
         let mut t = UnixTransport::connect(path)?;
         match t.call(ClientMsg::Req {
             name: name.to_string(),
+            tenant: tenant.to_string(),
         })? {
             ServerMsg::Ack => {}
             ServerMsg::Err { msg } => return Err(Error::Protocol(msg)),

@@ -19,9 +19,15 @@
 //!
 //! [devices]
 //! count = 4                   # physical GPUs per node (default 1)
-//! policy = least-loaded       # round-robin|least-loaded|memory-aware|affinity
+//! policy = least-loaded       # round-robin|least-loaded|memory-aware|
+//!                             # affinity|weighted-least-loaded
 //! n_sms = 14,14,8,8           # optional per-device override (1 or count values)
 //! mem_mb = 6144               # optional per-device memory override
+//!
+//! [qos]
+//! tenants = gold:3, silver:1  # tenant:weight share list
+//! rate_limit = silver:4       # tenant:max-queued-jobs caps (optional)
+//! default_weight = 1.0        # weight for unlisted tenants
 //!
 //! [gvm]
 //! barrier = 8                 # omit for "all registered clients"
@@ -37,6 +43,7 @@ use std::path::Path;
 
 use super::{DepcheckSemantics, DeviceConfig, NodeConfig};
 use crate::gvm::devices::{PlacementPolicy, PoolConfig};
+use crate::gvm::qos::{parse_share_list, QosConfig};
 use crate::gvm::{DaemonConfig, GvmConfig, StyleRule};
 use crate::{Error, Result};
 
@@ -209,7 +216,7 @@ impl ConfigFile {
             Some(v) => PlacementPolicy::parse(v).ok_or_else(|| {
                 Error::Config(format!(
                     "[devices] policy = {v:?} (want round-robin|least-loaded|\
-                     memory-aware|affinity)"
+                     memory-aware|affinity|weighted-least-loaded)"
                 ))
             })?,
             None => PlacementPolicy::default(),
@@ -218,7 +225,34 @@ impl ConfigFile {
             count,
             specs,
             policy,
+            qos: self.qos()?,
         })
+    }
+
+    /// Build the tenant share table (the `[qos]` section); omitted
+    /// section = QoS off (single default tenant, FIFO batch service).
+    pub fn qos(&self) -> Result<QosConfig> {
+        let mut q = QosConfig::default();
+        if let Some(v) = self.get_f64("qos", "default_weight")? {
+            q.set_default_weight(v)?;
+        }
+        if let Some(v) = self.get("qos", "tenants") {
+            for (tenant, weight) in parse_share_list(v)? {
+                q.set_weight(&tenant, weight)?;
+            }
+        }
+        if let Some(v) = self.get("qos", "rate_limit") {
+            for (tenant, cap) in parse_share_list(v)? {
+                if cap.fract() != 0.0 || cap < 0.0 || cap > u32::MAX as f64 {
+                    return Err(Error::Config(format!(
+                        "[qos] rate_limit for {tenant}: {cap} is not a \
+                         whole job count"
+                    )));
+                }
+                q.set_rate_limit(&tenant, cap as u32)?;
+            }
+        }
+        Ok(q)
     }
 
     /// Build a node config (`[node]` + `[devices]` + `[device]`).
@@ -320,6 +354,61 @@ policy = model-optimal
             vec![16, 16, 8, 8]
         );
         assert!(specs.iter().all(|s| s.mem_bytes == 6144 << 20));
+    }
+
+    #[test]
+    fn qos_section_parses_weights_and_limits() {
+        let c = ConfigFile::parse(
+            "[qos]\ntenants = gold:3, silver:1\nrate_limit = silver:4\n\
+             default_weight = 0.5\n",
+        )
+        .unwrap();
+        let q = c.qos().unwrap();
+        assert_eq!(q.weight("gold"), 3.0);
+        assert_eq!(q.weight("silver"), 1.0);
+        assert_eq!(q.weight("unlisted"), 0.5);
+        assert_eq!(q.rate_limit("silver"), Some(4));
+        assert_eq!(q.rate_limit("gold"), None);
+        // The share table rides into the pool (and thus the daemon).
+        let pool = c.devices().unwrap();
+        assert_eq!(pool.qos.weight("gold"), 3.0);
+        let g = c.gvm().unwrap();
+        assert_eq!(g.daemon.pool.qos.rate_limit("silver"), Some(4));
+    }
+
+    #[test]
+    fn qos_section_defaults_to_off() {
+        let c = ConfigFile::parse("").unwrap();
+        let q = c.qos().unwrap();
+        assert!(q.is_trivial());
+        assert_eq!(q.weight("anyone"), 1.0);
+    }
+
+    #[test]
+    fn bad_qos_sections_rejected() {
+        for bad in [
+            "[qos]\ntenants = gold:0\n",
+            "[qos]\ntenants = gold:-1\n",
+            "[qos]\ntenants = gold=3\n",
+            "[qos]\nrate_limit = gold:0\n",
+            "[qos]\nrate_limit = gold:2.5\n",
+            "[qos]\ndefault_weight = 0\n",
+        ] {
+            let c = ConfigFile::parse(bad).unwrap();
+            assert!(c.qos().is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn weighted_policy_spelling_accepted() {
+        let c = ConfigFile::parse(
+            "[devices]\ncount = 2\npolicy = weighted-least-loaded\n",
+        )
+        .unwrap();
+        assert_eq!(
+            c.devices().unwrap().policy,
+            PlacementPolicy::WeightedLeastLoaded
+        );
     }
 
     #[test]

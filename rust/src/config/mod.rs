@@ -1,6 +1,13 @@
 //! Configuration: device model, node topology, GVM tunables, and the
 //! config-file loader ([`file`]).
 //!
+//! Sections: `[device]` (the physical GPU model), `[devices]` (pool
+//! size, per-device overrides, placement policy), `[qos]` (per-tenant
+//! share weights and rate limits — see [`crate::gvm::qos`]), `[node]`
+//! (processor count), and `[gvm]` (barrier, budgets, scheduling policy).
+//! Every key, its default, and a worked multi-tenant example live in
+//! `docs/CONFIG.md`.
+//!
 //! The device defaults mirror the paper's testbed — an NVIDIA Tesla C2070
 //! (Fermi): 14 SMs at 1.15 GHz, 6 GB device memory, up to 16 concurrent
 //! kernels, 8 resident blocks per SM, PCIe 2.0 x16 host link.  Overhead

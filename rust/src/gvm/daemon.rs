@@ -12,6 +12,14 @@
 //! queued jobs **per device**: each device gets its own §4.2.3 plan
 //! (PS-1/PS-2) and its own batch queue, so simulated device timelines
 //! proceed concurrently and the pool's load/memory view stays accurate.
+//!
+//! Per-tenant QoS ([`super::qos`]) shapes both ends of the pipeline: the
+//! tenant carried on `REQ` attributes the VGPU's load for
+//! share-normalized placement, each per-device batch is drained through
+//! a weighted-deficit queue instead of raw ticket order (a 3:1 weight
+//! split yields ~3:1 service order under contention), and a tenant at
+//! its configured rate limit has `STR` rejected with a typed
+//! [`Error::Gvm`] throttle instead of silently queueing.
 //! On the CPU PJRT substrate the actual numerics still execute serially
 //! through the single host executor — per-device concurrency is a
 //! timing-model property, exactly like the rest of the testbed
@@ -23,6 +31,7 @@ use std::time::{Duration, Instant};
 
 use super::devices::{DeviceId, DevicePool, PoolConfig};
 use super::plan::Job;
+use super::qos::{WeightedDeficitQueue, DEFAULT_TENANT};
 use super::scheduler::{plan_batch, Policy};
 use super::vgpu::{ClientId, VgpuState, VgpuTable};
 use crate::ipc::wire::DeviceEntry;
@@ -195,11 +204,16 @@ impl Daemon {
     /// Handle one command; `client==0` means pre-registration.
     fn handle(&mut self, cmd: Command) -> Result<()> {
         match cmd.msg {
-            ClientMsg::Req { name } => {
+            ClientMsg::Req { name, tenant } => {
                 let id = self.table.register(&name)?;
+                let tenant = if tenant.is_empty() {
+                    DEFAULT_TENANT
+                } else {
+                    tenant.as_str()
+                };
                 // Place the fresh VGPU onto a physical device; unwind the
                 // registration if no device can take it.
-                if let Err(e) = self.pool.place(id, &name, 0) {
+                if let Err(e) = self.pool.place_as(id, &name, tenant, 0) {
                     let _ = self.table.release(id);
                     return Err(e);
                 }
@@ -220,8 +234,13 @@ impl Daemon {
                 ) {
                     self.table.recycle(cmd.client)?;
                 }
-                self.stats.bytes_staged += tensor.bytes() as u64;
+                let bytes = tensor.bytes() as u64;
                 let staged = self.table.stage(cmd.client, slot, tensor);
+                if staged.is_ok() {
+                    // Count only bytes that actually landed — a rejected
+                    // SND (budget, bad slot) must not inflate the stat.
+                    self.stats.bytes_staged += bytes;
+                }
                 // The recycle above may have freed bytes even if staging
                 // failed — resync unconditionally before surfacing.
                 let after = self.table.get(cmd.client)?.seg_bytes;
@@ -239,9 +258,30 @@ impl Daemon {
                         "unknown workload {workload:?}"
                     )));
                 }
+                // QoS admission: a tenant at its queued-job cap is
+                // throttled with a typed error, never a silent queue.
+                let tenant = self.tenant_of(cmd.client);
+                if let Some(cap) = self.pool.qos().rate_limit(&tenant) {
+                    let queued = self
+                        .table
+                        .queued_clients()
+                        .iter()
+                        .filter(|(c, _)| {
+                            self.pool.tenant_of(*c).unwrap_or(DEFAULT_TENANT)
+                                == tenant
+                        })
+                        .count();
+                    if queued >= cap as usize {
+                        return Err(Error::gvm(format!(
+                            "tenant {tenant:?} throttled: {queued} jobs \
+                             already queued (rate limit {cap})"
+                        )));
+                    }
+                }
                 let ticket = self.table.queue(cmd.client, &workload)?;
                 if let Some(dev) = self.pool.placement(cmd.client) {
-                    self.pool.note_queued(dev, self.job_est_ms(&workload));
+                    let est = self.job_est_ms(&workload);
+                    self.pool.note_queued_as(dev, &tenant, est);
                 }
                 if self.barrier_open_since.is_none() {
                     self.barrier_open_since = Some(Instant::now());
@@ -295,14 +335,21 @@ impl Daemon {
                     }
                     _ => None,
                 };
-                self.table.release(cmd.client)?;
+                // Unbind from the pool *regardless* of how the table
+                // release goes: an accounting error there must not leak
+                // the client slot, segment bytes, or queued-work
+                // estimate on the device (they would bias placement
+                // forever — the mid-flight disconnect leak).
+                let released = self.table.release(cmd.client);
                 if let Some(dev) = self.pool.placement(cmd.client) {
+                    let tenant = self.tenant_of(cmd.client);
                     self.pool.free_mem(dev, seg);
                     if let Some(est) = abandoned_est {
-                        self.pool.retire_queued(dev, est);
+                        self.pool.retire_queued_as(dev, &tenant, est);
                     }
                     self.pool.release(cmd.client);
                 }
+                released?;
                 self.ack(&cmd.reply)?;
             }
             ClientMsg::Stats => {
@@ -362,6 +409,15 @@ impl Daemon {
         }
     }
 
+    /// A client's tenant attribution (placement-time, default if the
+    /// client was never placed).
+    fn tenant_of(&self, client: ClientId) -> String {
+        self.pool
+            .tenant_of(client)
+            .unwrap_or(DEFAULT_TENANT)
+            .to_string()
+    }
+
     /// Flush the queued batch: group by placed device, then plan and
     /// execute each device's batch per §4.2.3.
     fn flush_batch(&mut self) -> Result<()> {
@@ -379,7 +435,22 @@ impl Daemon {
             by_dev.entry(dev).or_default().push((client, workload));
         }
         for (dev, batch) in by_dev {
-            self.run_device_batch(dev, &batch)?;
+            // Weighted-deficit service order: ticket order within a
+            // tenant, weight-proportional interleave across tenants.
+            // With no `[qos]` tenants a single lane would reproduce
+            // ticket order anyway, so skip the queue (and its share-
+            // table clone) entirely on that common path.
+            let ordered = if self.pool.qos().is_trivial() {
+                batch
+            } else {
+                let mut wdq = WeightedDeficitQueue::new(self.pool.qos());
+                for (client, workload) in batch {
+                    let tenant = self.tenant_of(client);
+                    wdq.push(&tenant, 1.0, (client, workload));
+                }
+                wdq.drain().into_iter().map(|(_, job)| job).collect()
+            };
+            self.run_device_batch(dev, &ordered)?;
         }
         self.stats.batches += 1;
 
@@ -490,13 +561,15 @@ impl Daemon {
                 Ok((outputs, gpu_ms)) => {
                     self.stats.jobs_ok += 1;
                     self.stats.device_ms += gpu_ms;
-                    self.pool.note_done(dev, est_ms, gpu_ms);
+                    let tenant = self.tenant_of(*client);
+                    self.pool.note_done_as(dev, &tenant, est_ms, gpu_ms);
                     self.table.complete(*client, outputs, gpu_ms)?;
                 }
                 Err(e) => {
                     log::warn!("job for client {client} failed: {e}");
                     self.stats.jobs_failed += 1;
-                    self.pool.note_done(dev, est_ms, 0.0);
+                    let tenant = self.tenant_of(*client);
+                    self.pool.note_done_as(dev, &tenant, est_ms, 0.0);
                     self.table.fail(*client, e.to_string())?;
                 }
             }

@@ -11,7 +11,9 @@
 //!   per-device load view — bound VGPUs, estimated queued work, segment
 //!   memory, completed-job counters.
 //! * [`PlacementPolicy`] decides where each `REQ`'s VGPU lands:
-//!   `RoundRobin`, `LeastLoaded`, `MemoryAware`, or sticky `Affinity`.
+//!   `RoundRobin`, `LeastLoaded`, `MemoryAware`, sticky `Affinity`, or
+//!   the QoS-aware `WeightedLeastLoaded`, which scores devices by queued
+//!   work normalized to each tenant's [`crate::gvm::qos`] share weight.
 //! * The daemon groups every barrier flush into **per-device batches**
 //!   (one plan per device instead of one global queue) and exposes the
 //!   pool through `ClientMsg::DevInfo`; the simulator backend replays

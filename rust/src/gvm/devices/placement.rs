@@ -6,10 +6,20 @@
 //! studies (Prades et al.; Schieffer et al.) show the landing device
 //! dominates throughput, so the policy is a first-class, configurable
 //! knob (`[devices] policy = ...`).
+//!
+//! With per-tenant QoS ([`crate::gvm::qos`]), placement also consults the
+//! tenant share table: [`PlacementPolicy::WeightedLeastLoaded`] scores a
+//! device by its queued work with each tenant's contribution divided by
+//! that tenant's weight, so load a tenant runs *within* its entitlement
+//! repels new placements less than the same milliseconds run by an
+//! over-subscribed low-weight tenant.  It also refuses devices whose
+//! free segment memory cannot hold the declared demand — the same
+//! capacity check `MemoryAware` enforces.
 
 use std::fmt;
 
 use super::pool::{DeviceId, PooledDevice};
+use crate::gvm::qos::QosConfig;
 use crate::{Error, Result};
 
 /// Which device a new VGPU lands on.
@@ -30,15 +40,22 @@ pub enum PlacementPolicy {
     /// last, even across RLS/REQ cycles — keeps iterative SPMD clients'
     /// warm state local.  Falls back to least-loaded for first contact.
     Affinity,
+    /// Least *share-normalized* queued work: each tenant's queued ms are
+    /// divided by its QoS weight before summing, and devices that cannot
+    /// fit the declared segment demand are skipped (`MemoryAware`-style
+    /// capacity check; errors when nothing fits).  With no `[qos]`
+    /// section this degenerates to `LeastLoaded` with a capacity check.
+    WeightedLeastLoaded,
 }
 
 impl PlacementPolicy {
     /// Every policy, in documentation order (for sweeps and benches).
-    pub const ALL: [PlacementPolicy; 4] = [
+    pub const ALL: [PlacementPolicy; 5] = [
         PlacementPolicy::RoundRobin,
         PlacementPolicy::LeastLoaded,
         PlacementPolicy::MemoryAware,
         PlacementPolicy::Affinity,
+        PlacementPolicy::WeightedLeastLoaded,
     ];
 
     /// Canonical config-file spelling.
@@ -48,6 +65,7 @@ impl PlacementPolicy {
             PlacementPolicy::LeastLoaded => "least-loaded",
             PlacementPolicy::MemoryAware => "memory-aware",
             PlacementPolicy::Affinity => "affinity",
+            PlacementPolicy::WeightedLeastLoaded => "weighted-least-loaded",
         }
     }
 
@@ -58,6 +76,9 @@ impl PlacementPolicy {
             "least-loaded" | "leastloaded" => Some(PlacementPolicy::LeastLoaded),
             "memory-aware" | "memoryaware" => Some(PlacementPolicy::MemoryAware),
             "affinity" => Some(PlacementPolicy::Affinity),
+            "weighted-least-loaded" | "weightedleastloaded" | "weighted" => {
+                Some(PlacementPolicy::WeightedLeastLoaded)
+            }
             _ => None,
         }
     }
@@ -67,6 +88,20 @@ impl fmt::Display for PlacementPolicy {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.write_str(self.name())
     }
+}
+
+/// Placement request context: the per-call inputs every policy may
+/// consult (the pool owns the durable state).
+pub(super) struct PickCtx<'a> {
+    /// Pool-owned round-robin state.
+    pub rr_cursor: &'a mut usize,
+    /// The client's remembered device (`Affinity` only).
+    pub sticky_prev: Option<DeviceId>,
+    /// Declared segment size the capacity-checked policies must fit
+    /// (0 = unknown yet).
+    pub mem_demand: u64,
+    /// Tenant share table for weight-normalized scoring.
+    pub qos: &'a QosConfig,
 }
 
 /// Least-loaded selection: (queued_ms, clients, id) ascending.
@@ -81,24 +116,30 @@ fn least_loaded(devices: &[PooledDevice]) -> DeviceId {
     DeviceId(best)
 }
 
-/// Apply `policy` over the pool's load view.  `sticky_prev` is the
-/// client's remembered device (Affinity only); `rr_cursor` is the
-/// pool-owned round-robin state.  Total for every policy except
-/// `MemoryAware`, which errors when no device fits `mem_demand`.
+/// A device's queued work with every tenant's contribution normalized by
+/// that tenant's share weight (entitled load counts less).
+fn normalized_queued_ms(d: &PooledDevice, qos: &QosConfig) -> f64 {
+    d.tenant_queued_ms
+        .iter()
+        .map(|(tenant, ms)| ms / qos.weight(tenant))
+        .sum()
+}
+
+/// Apply `policy` over the pool's load view.  Total for every policy
+/// except `MemoryAware` and `WeightedLeastLoaded`, which error when no
+/// device fits `ctx.mem_demand`.
 pub(super) fn pick(
     policy: PlacementPolicy,
     devices: &[PooledDevice],
-    rr_cursor: &mut usize,
-    sticky_prev: Option<DeviceId>,
-    mem_demand: u64,
+    ctx: PickCtx<'_>,
 ) -> Result<DeviceId> {
     if devices.is_empty() {
         return Err(Error::gvm("placement over an empty device pool"));
     }
     match policy {
         PlacementPolicy::RoundRobin => {
-            let id = DeviceId(*rr_cursor % devices.len());
-            *rr_cursor = (*rr_cursor + 1) % devices.len();
+            let id = DeviceId(*ctx.rr_cursor % devices.len());
+            *ctx.rr_cursor = (*ctx.rr_cursor + 1) % devices.len();
             Ok(id)
         }
         PlacementPolicy::LeastLoaded => Ok(least_loaded(devices)),
@@ -106,7 +147,8 @@ pub(super) fn pick(
             let mut best: Option<(u64, usize)> = None; // (free, id)
             for (i, d) in devices.iter().enumerate() {
                 let free = d.mem_free();
-                if free >= mem_demand && best.map(|(bf, _)| free > bf).unwrap_or(true)
+                if free >= ctx.mem_demand
+                    && best.map(|(bf, _)| free > bf).unwrap_or(true)
                 {
                     best = Some((free, i));
                 }
@@ -114,15 +156,39 @@ pub(super) fn pick(
             match best {
                 Some((_, i)) => Ok(DeviceId(i)),
                 None => Err(Error::gvm(format!(
-                    "no device fits a {mem_demand} B segment (largest free: {} B)",
+                    "no device fits a {} B segment (largest free: {} B)",
+                    ctx.mem_demand,
                     devices.iter().map(|d| d.mem_free()).max().unwrap_or(0)
                 ))),
             }
         }
-        PlacementPolicy::Affinity => match sticky_prev {
+        PlacementPolicy::Affinity => match ctx.sticky_prev {
             Some(id) if id.0 < devices.len() => Ok(id),
             _ => Ok(least_loaded(devices)),
         },
+        PlacementPolicy::WeightedLeastLoaded => {
+            // (normalized load, clients, id) ascending over devices that
+            // can hold the declared segment.
+            let mut best: Option<(f64, usize, usize)> = None;
+            for (i, d) in devices.iter().enumerate() {
+                if ctx.mem_demand > 0 && d.mem_free() < ctx.mem_demand {
+                    continue;
+                }
+                let key = (normalized_queued_ms(d, ctx.qos), d.clients, i);
+                if best.map(|b| key < b).unwrap_or(true) {
+                    best = Some(key);
+                }
+            }
+            match best {
+                Some((_, _, i)) => Ok(DeviceId(i)),
+                None => Err(Error::gvm(format!(
+                    "no device fits a {} B segment under \
+                     weighted-least-loaded (largest free: {} B)",
+                    ctx.mem_demand,
+                    devices.iter().map(|d| d.mem_free()).max().unwrap_or(0)
+                ))),
+            }
+        }
     }
 }
 
@@ -135,6 +201,37 @@ mod tests {
         (0..n)
             .map(|_| PooledDevice::new(DeviceConfig::tesla_c2070()))
             .collect()
+    }
+
+    fn pick_with(
+        policy: PlacementPolicy,
+        devices: &[PooledDevice],
+        rr_cursor: &mut usize,
+        sticky_prev: Option<DeviceId>,
+        mem_demand: u64,
+        qos: &QosConfig,
+    ) -> Result<DeviceId> {
+        pick(
+            policy,
+            devices,
+            PickCtx {
+                rr_cursor,
+                sticky_prev,
+                mem_demand,
+                qos,
+            },
+        )
+    }
+
+    fn pick_plain(
+        policy: PlacementPolicy,
+        devices: &[PooledDevice],
+        rr_cursor: &mut usize,
+        sticky_prev: Option<DeviceId>,
+        mem_demand: u64,
+    ) -> Result<DeviceId> {
+        let qos = QosConfig::default();
+        pick_with(policy, devices, rr_cursor, sticky_prev, mem_demand, &qos)
     }
 
     #[test]
@@ -151,7 +248,7 @@ mod tests {
         let mut cur = 0;
         let picks: Vec<usize> = (0..6)
             .map(|_| {
-                pick(PlacementPolicy::RoundRobin, &d, &mut cur, None, 0)
+                pick_plain(PlacementPolicy::RoundRobin, &d, &mut cur, None, 0)
                     .unwrap()
                     .0
             })
@@ -166,7 +263,9 @@ mod tests {
         d[1].queued_ms = 2.0;
         d[2].queued_ms = 5.0;
         let mut cur = 0;
-        let id = pick(PlacementPolicy::LeastLoaded, &d, &mut cur, None, 0).unwrap();
+        let id =
+            pick_plain(PlacementPolicy::LeastLoaded, &d, &mut cur, None, 0)
+                .unwrap();
         assert_eq!(id, DeviceId(1));
     }
 
@@ -178,10 +277,12 @@ mod tests {
         d[1].mem_used = cap - 100;
         let mut cur = 0;
         let id =
-            pick(PlacementPolicy::MemoryAware, &d, &mut cur, None, 100).unwrap();
+            pick_plain(PlacementPolicy::MemoryAware, &d, &mut cur, None, 100)
+                .unwrap();
         assert_eq!(id, DeviceId(1));
         let err =
-            pick(PlacementPolicy::MemoryAware, &d, &mut cur, None, 101).unwrap_err();
+            pick_plain(PlacementPolicy::MemoryAware, &d, &mut cur, None, 101)
+                .unwrap_err();
         assert!(matches!(err, crate::Error::Gvm(_)), "{err}");
     }
 
@@ -191,7 +292,7 @@ mod tests {
         d[0].queued_ms = 50.0;
         let mut cur = 0;
         // Remembered device wins even if loaded.
-        let id = pick(
+        let id = pick_plain(
             PlacementPolicy::Affinity,
             &d,
             &mut cur,
@@ -201,15 +302,99 @@ mod tests {
         .unwrap();
         assert_eq!(id, DeviceId(0));
         // First contact falls back to least-loaded.
-        let id = pick(PlacementPolicy::Affinity, &d, &mut cur, None, 0).unwrap();
+        let id =
+            pick_plain(PlacementPolicy::Affinity, &d, &mut cur, None, 0)
+                .unwrap();
         assert_ne!(id, DeviceId(0));
+    }
+
+    #[test]
+    fn weighted_divides_load_by_tenant_weight() {
+        let qos = QosConfig::default()
+            .with_weight("gold", 4.0)
+            .with_weight("bronze", 1.0);
+        let mut d = devs(2);
+        // Device 0 carries 40 ms of gold work (entitled: /4 -> 10);
+        // device 1 carries 20 ms of bronze work (/1 -> 20).  Raw
+        // least-loaded would pick device 1; weighted picks device 0.
+        d[0].queued_ms = 40.0;
+        d[0].tenant_queued_ms.insert("gold".into(), 40.0);
+        d[1].queued_ms = 20.0;
+        d[1].tenant_queued_ms.insert("bronze".into(), 20.0);
+        let mut cur = 0;
+        assert_eq!(
+            pick_plain(PlacementPolicy::LeastLoaded, &d, &mut cur, None, 0)
+                .unwrap(),
+            DeviceId(1)
+        );
+        assert_eq!(
+            pick_with(
+                PlacementPolicy::WeightedLeastLoaded,
+                &d,
+                &mut cur,
+                None,
+                0,
+                &qos
+            )
+            .unwrap(),
+            DeviceId(0)
+        );
+    }
+
+    #[test]
+    fn weighted_enforces_capacity_like_memory_aware() {
+        let mut d = devs(2);
+        let cap = DeviceConfig::tesla_c2070().mem_bytes;
+        d[0].mem_used = cap; // full but idle
+        d[1].mem_used = cap - 100;
+        d[1].queued_ms = 99.0; // busy but has room
+        d[1].tenant_queued_ms.insert("t".into(), 99.0);
+        let mut cur = 0;
+        let id = pick_plain(
+            PlacementPolicy::WeightedLeastLoaded,
+            &d,
+            &mut cur,
+            None,
+            100,
+        )
+        .unwrap();
+        assert_eq!(id, DeviceId(1), "must skip the full device");
+        let err = pick_plain(
+            PlacementPolicy::WeightedLeastLoaded,
+            &d,
+            &mut cur,
+            None,
+            101,
+        )
+        .unwrap_err();
+        assert!(matches!(err, crate::Error::Gvm(_)), "{err}");
+    }
+
+    #[test]
+    fn weighted_without_qos_acts_like_least_loaded() {
+        let mut d = devs(3);
+        for (i, ms) in [30.0, 5.0, 12.0].iter().enumerate() {
+            d[i].queued_ms = *ms;
+            d[i].tenant_queued_ms
+                .insert(crate::gvm::qos::DEFAULT_TENANT.into(), *ms);
+        }
+        let mut cur = 0;
+        let id = pick_plain(
+            PlacementPolicy::WeightedLeastLoaded,
+            &d,
+            &mut cur,
+            None,
+            0,
+        )
+        .unwrap();
+        assert_eq!(id, DeviceId(1));
     }
 
     #[test]
     fn empty_pool_is_an_error() {
         let mut cur = 0;
         for p in PlacementPolicy::ALL {
-            assert!(pick(p, &[], &mut cur, None, 0).is_err());
+            assert!(pick_plain(p, &[], &mut cur, None, 0).is_err());
         }
     }
 }

@@ -6,19 +6,26 @@
 //! batches, and [`crate::cluster`] to compose nodes with differing GPU
 //! counts.  All policy logic lives in [`super::placement`]; the pool owns
 //! the state a policy inspects (queued work, bound clients, segment
-//! memory) and the sticky map the `Affinity` policy needs.
+//! memory, per-tenant load attribution) and the sticky map the
+//! `Affinity` policy needs.  Tenant attribution (see [`crate::gvm::qos`])
+//! rides along every accounting path: `place_as`/`note_queued_as`/
+//! `note_done_as` tag work with the owning tenant so the
+//! `WeightedLeastLoaded` policy can score devices by share-normalized
+//! load; the unsuffixed variants attribute to the default tenant.
 
 use std::collections::HashMap;
 
-use super::placement::{self, PlacementPolicy};
+use super::placement::{self, PickCtx, PlacementPolicy};
 use crate::config::DeviceConfig;
+use crate::gvm::qos::{QosConfig, DEFAULT_TENANT};
 use crate::{Error, Result};
 
 /// Physical device index within one node's pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct DeviceId(pub usize);
 
-/// Pool construction parameters — the `[devices]` config-file section.
+/// Pool construction parameters — the `[devices]` config-file section
+/// (plus the `[qos]` tenant share table).
 #[derive(Debug, Clone)]
 pub struct PoolConfig {
     /// Physical device count per node.
@@ -28,6 +35,8 @@ pub struct PoolConfig {
     pub specs: Vec<DeviceConfig>,
     /// VGPU placement policy.
     pub policy: PlacementPolicy,
+    /// Per-tenant share table (weights + rate limits).
+    pub qos: QosConfig,
 }
 
 impl Default for PoolConfig {
@@ -36,6 +45,7 @@ impl Default for PoolConfig {
             count: 1,
             specs: vec![DeviceConfig::default()],
             policy: PlacementPolicy::default(),
+            qos: QosConfig::default(),
         }
     }
 }
@@ -51,6 +61,7 @@ impl PoolConfig {
             count,
             specs: vec![spec],
             policy,
+            qos: QosConfig::default(),
         }
     }
 
@@ -79,6 +90,9 @@ pub struct PooledDevice {
     pub clients: usize,
     /// Estimated queued work not yet completed (ms).
     pub queued_ms: f64,
+    /// `queued_ms` broken down by owning tenant — the input to
+    /// share-normalized placement scoring.
+    pub tenant_queued_ms: HashMap<String, f64>,
     /// Segment bytes attributed to this device.
     pub mem_used: u64,
     /// Jobs completed on this device.
@@ -94,6 +108,7 @@ impl PooledDevice {
             spec,
             clients: 0,
             queued_ms: 0.0,
+            tenant_queued_ms: HashMap::new(),
             mem_used: 0,
             jobs_done: 0,
             busy_ms: 0.0,
@@ -103,6 +118,17 @@ impl PooledDevice {
     /// Free device memory under the spec's capacity.
     pub fn mem_free(&self) -> u64 {
         self.spec.mem_bytes.saturating_sub(self.mem_used)
+    }
+
+    /// Retire `est_ms` of queued work from a tenant's bucket (clamped at
+    /// zero; empty buckets are dropped so the map stays small).
+    fn retire_tenant_est(&mut self, tenant: &str, est_ms: f64) {
+        if let Some(ms) = self.tenant_queued_ms.get_mut(tenant) {
+            *ms = (*ms - est_ms.max(0.0)).max(0.0);
+            if *ms <= 1e-12 {
+                self.tenant_queued_ms.remove(tenant);
+            }
+        }
     }
 }
 
@@ -128,10 +154,13 @@ pub struct DeviceStatus {
 pub struct DevicePool {
     devices: Vec<PooledDevice>,
     policy: PlacementPolicy,
+    qos: QosConfig,
     rr_cursor: usize,
     /// Live VGPU→device bindings, keyed by unique client id (rank
     /// *names* are client-supplied and may collide).
     bound: HashMap<u64, DeviceId>,
+    /// Live VGPU→tenant attribution, keyed by client id.
+    tenants: HashMap<u64, String>,
     /// Affinity memory, keyed by rank name: survives release so a
     /// re-registering rank lands back on its previous device (sticky
     /// across request iterations).
@@ -141,13 +170,22 @@ pub struct DevicePool {
 impl DevicePool {
     /// Build from a pool config.
     pub fn new(cfg: &PoolConfig) -> Result<Self> {
-        Self::from_specs(cfg.build_specs()?, cfg.policy)
+        Self::from_specs_qos(cfg.build_specs()?, cfg.policy, cfg.qos.clone())
     }
 
-    /// Build from explicit per-device specs.
+    /// Build from explicit per-device specs (QoS-off share table).
     pub fn from_specs(
         specs: Vec<DeviceConfig>,
         policy: PlacementPolicy,
+    ) -> Result<Self> {
+        Self::from_specs_qos(specs, policy, QosConfig::default())
+    }
+
+    /// Build from explicit per-device specs and a tenant share table.
+    pub fn from_specs_qos(
+        specs: Vec<DeviceConfig>,
+        policy: PlacementPolicy,
+        qos: QosConfig,
     ) -> Result<Self> {
         if specs.is_empty() {
             return Err(Error::gvm("device pool needs at least one device"));
@@ -155,8 +193,10 @@ impl DevicePool {
         Ok(Self {
             devices: specs.into_iter().map(PooledDevice::new).collect(),
             policy,
+            qos,
             rr_cursor: 0,
             bound: HashMap::new(),
+            tenants: HashMap::new(),
             sticky: HashMap::new(),
         })
     }
@@ -176,6 +216,11 @@ impl DevicePool {
         self.policy
     }
 
+    /// The tenant share table this pool scores against.
+    pub fn qos(&self) -> &QosConfig {
+        &self.qos
+    }
+
     /// A device's model parameters.
     pub fn spec(&self, id: DeviceId) -> &DeviceConfig {
         &self.devices[id.0].spec
@@ -191,16 +236,33 @@ impl DevicePool {
         self.bound.get(&client).copied()
     }
 
-    /// Place (or re-resolve) a VGPU.  Idempotent for a live binding; a
-    /// released rank re-registering under `Affinity` returns to its
-    /// name's remembered device.  `client` must be unique per live VGPU
-    /// (names are client-supplied and may collide); `mem_demand` is the
-    /// declared segment size the `MemoryAware` policy must fit
-    /// (0 = unknown yet).
+    /// The tenant a live client was placed under, if any.
+    pub fn tenant_of(&self, client: u64) -> Option<&str> {
+        self.tenants.get(&client).map(String::as_str)
+    }
+
+    /// Place (or re-resolve) a VGPU under the default tenant.  See
+    /// [`DevicePool::place_as`].
     pub fn place(
         &mut self,
         client: u64,
         name: &str,
+        mem_demand: u64,
+    ) -> Result<DeviceId> {
+        self.place_as(client, name, DEFAULT_TENANT, mem_demand)
+    }
+
+    /// Place (or re-resolve) a VGPU for a tenant.  Idempotent for a live
+    /// binding; a released rank re-registering under `Affinity` returns
+    /// to its name's remembered device.  `client` must be unique per
+    /// live VGPU (names are client-supplied and may collide);
+    /// `mem_demand` is the declared segment size the capacity-checked
+    /// policies must fit (0 = unknown yet).
+    pub fn place_as(
+        &mut self,
+        client: u64,
+        name: &str,
+        tenant: &str,
         mem_demand: u64,
     ) -> Result<DeviceId> {
         if let Some(&id) = self.bound.get(&client) {
@@ -210,21 +272,32 @@ impl DevicePool {
         let id = placement::pick(
             self.policy,
             &self.devices,
-            &mut self.rr_cursor,
-            sticky_prev,
-            mem_demand,
+            PickCtx {
+                rr_cursor: &mut self.rr_cursor,
+                sticky_prev,
+                mem_demand,
+                qos: &self.qos,
+            },
         )?;
         self.devices[id.0].clients += 1;
         self.bound.insert(client, id);
-        self.sticky.insert(name.to_string(), id);
+        self.tenants.insert(client, tenant.to_string());
+        // Only `Affinity` ever reads the name-keyed memory; recording it
+        // under the other policies would grow without bound (one entry
+        // per rank name ever seen, surviving release by design).
+        if self.policy == PlacementPolicy::Affinity {
+            self.sticky.insert(name.to_string(), id);
+        }
         Ok(id)
     }
 
-    /// Drop a client's binding (RLS).  The name-keyed sticky memory is
-    /// retained for `Affinity` re-placement.  Returns the device it was
-    /// bound to.
+    /// Drop a client's binding (RLS or disconnect).  The name-keyed
+    /// sticky memory is retained for `Affinity` re-placement; the tenant
+    /// attribution is dropped with the binding.  Returns the device it
+    /// was bound to.
     pub fn release(&mut self, client: u64) -> Option<DeviceId> {
         let id = self.bound.remove(&client)?;
+        self.tenants.remove(&client);
         let d = &mut self.devices[id.0];
         d.clients = d.clients.saturating_sub(1);
         Some(id)
@@ -242,26 +315,58 @@ impl DevicePool {
             self.devices[id.0].mem_used.saturating_sub(bytes);
     }
 
-    /// Record estimated work queued onto a device.
+    /// Record estimated work queued onto a device (default tenant).
     pub fn note_queued(&mut self, id: DeviceId, est_ms: f64) {
-        self.devices[id.0].queued_ms += est_ms.max(0.0);
+        self.note_queued_as(id, DEFAULT_TENANT, est_ms);
+    }
+
+    /// Record estimated work queued onto a device for a tenant.
+    pub fn note_queued_as(&mut self, id: DeviceId, tenant: &str, est_ms: f64) {
+        let est = est_ms.max(0.0);
+        let d = &mut self.devices[id.0];
+        d.queued_ms += est;
+        *d.tenant_queued_ms.entry(tenant.to_string()).or_insert(0.0) += est;
     }
 
     /// Retire a queue estimate without a completion — a queued job that
     /// was abandoned (client released mid-flight).  Leaving the estimate
-    /// behind would permanently bias `LeastLoaded` away from the device.
+    /// behind would permanently bias `LeastLoaded` (and the tenant's
+    /// normalized share) away from the device.  Default tenant.
     pub fn retire_queued(&mut self, id: DeviceId, est_ms: f64) {
+        self.retire_queued_as(id, DEFAULT_TENANT, est_ms);
+    }
+
+    /// Tenant-attributed [`DevicePool::retire_queued`].
+    pub fn retire_queued_as(
+        &mut self,
+        id: DeviceId,
+        tenant: &str,
+        est_ms: f64,
+    ) {
         let d = &mut self.devices[id.0];
         d.queued_ms = (d.queued_ms - est_ms.max(0.0)).max(0.0);
+        d.retire_tenant_est(tenant, est_ms);
     }
 
     /// Record a job's completion: retire its queue estimate, accumulate
-    /// actual execution time.
+    /// actual execution time.  Default tenant.
     pub fn note_done(&mut self, id: DeviceId, est_ms: f64, busy_ms: f64) {
+        self.note_done_as(id, DEFAULT_TENANT, est_ms, busy_ms);
+    }
+
+    /// Tenant-attributed [`DevicePool::note_done`].
+    pub fn note_done_as(
+        &mut self,
+        id: DeviceId,
+        tenant: &str,
+        est_ms: f64,
+        busy_ms: f64,
+    ) {
         let d = &mut self.devices[id.0];
         d.queued_ms = (d.queued_ms - est_ms.max(0.0)).max(0.0);
         d.jobs_done += 1;
         d.busy_ms += busy_ms.max(0.0);
+        d.retire_tenant_est(tenant, est_ms);
     }
 
     /// Status snapshot, by device id.
@@ -371,6 +476,49 @@ mod tests {
     }
 
     #[test]
+    fn tenant_attribution_tracks_and_drains() {
+        let qos = QosConfig::default()
+            .with_weight("gold", 3.0)
+            .with_weight("bronze", 1.0);
+        let mut p = DevicePool::from_specs_qos(
+            vec![DeviceConfig::tesla_c2070(); 2],
+            PlacementPolicy::WeightedLeastLoaded,
+            qos,
+        )
+        .unwrap();
+        let a = p.place_as(1, "r0", "gold", 0).unwrap();
+        assert_eq!(p.tenant_of(1), Some("gold"));
+        p.note_queued_as(a, "gold", 12.0);
+        assert_eq!(p.device(a).tenant_queued_ms["gold"], 12.0);
+        p.note_done_as(a, "gold", 12.0, 11.0);
+        assert!(p.device(a).tenant_queued_ms.is_empty(), "bucket drained");
+        assert_eq!(p.device(a).queued_ms, 0.0);
+        p.release(1).unwrap();
+        assert_eq!(p.tenant_of(1), None, "attribution dropped on release");
+    }
+
+    #[test]
+    fn weighted_placement_prefers_under_subscribed_tenants_device() {
+        let qos = QosConfig::default()
+            .with_weight("gold", 4.0)
+            .with_weight("bronze", 1.0);
+        let mut p = DevicePool::from_specs_qos(
+            vec![DeviceConfig::tesla_c2070(); 2],
+            PlacementPolicy::WeightedLeastLoaded,
+            qos,
+        )
+        .unwrap();
+        // Gold queues 40 ms on device 0; bronze queues 20 ms on device 1.
+        let d0 = p.place_as(1, "g", "gold", 0).unwrap();
+        p.note_queued_as(d0, "gold", 40.0);
+        let d1 = DeviceId(1 - d0.0);
+        p.note_queued_as(d1, "bronze", 20.0);
+        // Normalized: d0 = 40/4 = 10 < d1 = 20/1 = 20.
+        let got = p.place_as(2, "n", "bronze", 0).unwrap();
+        assert_eq!(got, d0);
+    }
+
+    #[test]
     fn heterogeneous_specs_accepted() {
         let mut small = DeviceConfig::tesla_c2070();
         small.n_sms = 7;
@@ -378,6 +526,7 @@ mod tests {
             count: 2,
             specs: vec![DeviceConfig::tesla_c2070(), small],
             policy: PlacementPolicy::LeastLoaded,
+            qos: QosConfig::default(),
         };
         let p = DevicePool::new(&cfg).unwrap();
         assert_eq!(p.spec(DeviceId(0)).n_sms, 14);
@@ -392,6 +541,7 @@ mod tests {
             count: 3,
             specs: vec![DeviceConfig::tesla_c2070(); 2],
             policy: PlacementPolicy::RoundRobin,
+            qos: QosConfig::default(),
         };
         assert!(DevicePool::new(&cfg).is_err());
         assert!(PoolConfig {

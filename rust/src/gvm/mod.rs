@@ -10,11 +10,17 @@
 //! on the C2070 simulator for paper-scale timing).  On multi-GPU nodes
 //! the [`devices`] pool places each VGPU onto a physical device and the
 //! daemon plans one batch *per device* (policy-driven placement:
-//! round-robin, least-loaded, memory-aware, or sticky affinity).
+//! round-robin, least-loaded, memory-aware, sticky affinity, or
+//! QoS-weighted).  Per-tenant shares ([`qos`]) ride the whole pipeline:
+//! `REQ` carries a tenant id, placement can normalize device load by
+//! tenant weight, and every per-device batch drains through a
+//! weighted-deficit queue so configured weight ratios become batch
+//! service ratios.
 
 pub mod daemon;
 pub mod devices;
 pub mod plan;
+pub mod qos;
 pub mod scheduler;
 pub mod sim_backend;
 pub mod vgpu;
@@ -22,9 +28,11 @@ pub mod vgpu;
 pub use daemon::{Command, Daemon, DaemonConfig};
 pub use devices::{DevicePool, PlacementPolicy, PoolConfig};
 pub use plan::{CtxMode, Job, Plan, PlanOp};
+pub use qos::{QosConfig, TenantShare, WeightedDeficitQueue};
 pub use scheduler::{plan_batch, Policy, StyleRule};
 pub use sim_backend::{
-    simulate, simulate_pool, simulate_spmd, BatchTiming, PoolTiming,
+    simulate, simulate_pool, simulate_pool_qos, simulate_spmd, BatchTiming,
+    PoolTiming, QosPoolTiming, TenantTiming,
 };
 
 use std::path::PathBuf;
@@ -91,15 +99,28 @@ impl Gvm {
         })
     }
 
-    /// Connect an in-process client (one per emulated SPMD process).
-    /// Performs the `REQ` handshake and returns the VGPU handle.
+    /// Connect an in-process client (one per emulated SPMD process)
+    /// under the default QoS tenant.  Performs the `REQ` handshake and
+    /// returns the VGPU handle.
     pub fn connect(&self, name: &str) -> Result<crate::api::VgpuClient> {
+        self.connect_as(name, qos::DEFAULT_TENANT)
+    }
+
+    /// Connect an in-process client attributed to a QoS tenant: the
+    /// tenant's `[qos]` weight shapes placement and batch service order
+    /// (see [`qos`]).
+    pub fn connect_as(
+        &self,
+        name: &str,
+        tenant: &str,
+    ) -> Result<crate::api::VgpuClient> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.cmd_tx
             .send(Command {
                 client: 0,
                 msg: ClientMsg::Req {
                     name: name.to_string(),
+                    tenant: tenant.to_string(),
                 },
                 reply: reply_tx,
             })
@@ -168,6 +189,21 @@ pub fn serve_unix(gvm: &Gvm, socket_path: &std::path::Path) -> Result<()> {
                     }
                 };
                 let is_req = matches!(msg, ClientMsg::Req { .. });
+                let is_rls = matches!(msg, ClientMsg::Rls);
+                // One VGPU per connection: a second REQ would overwrite
+                // client_id and orphan (leak) the first registration at
+                // disconnect time — reject it at the adapter.
+                if is_req && client_id != 0 {
+                    let err = ServerMsg::Err {
+                        msg: "REQ on an already-registered connection \
+                              (RLS first)"
+                            .into(),
+                    };
+                    if framed.send(&err.encode()).is_err() {
+                        break;
+                    }
+                    continue;
+                }
                 let (reply_tx, reply_rx) = mpsc::channel();
                 if cmd_tx
                     .send(Command {
@@ -184,18 +220,47 @@ pub fn serve_unix(gvm: &Gvm, socket_path: &std::path::Path) -> Result<()> {
                     Err(_) => break,
                 };
                 if is_req {
-                    if let ServerMsg::Queued { ticket } = &reply {
-                        client_id = *ticket;
-                    }
-                    // The REQ reply is surfaced to the client as Ack —
-                    // the id stays a server-side detail.
-                    if framed.send(&ServerMsg::Ack.encode()).is_err() {
+                    // A successful REQ is surfaced to the client as Ack
+                    // (the id stays a server-side detail); a rejected
+                    // REQ (table full, placement failed) must forward
+                    // the error, not mask it as success.
+                    let out = match &reply {
+                        ServerMsg::Queued { ticket } => {
+                            client_id = *ticket;
+                            ServerMsg::Ack.encode()
+                        }
+                        _ => reply.encode(),
+                    };
+                    if framed.send(&out).is_err() {
                         break;
                     }
                     continue;
                 }
+                // A client-initiated RLS that succeeded leaves nothing
+                // to clean up at disconnect time.
+                if is_rls && matches!(reply, ServerMsg::Ack) {
+                    client_id = 0;
+                }
                 if framed.send(&reply.encode()).is_err() {
                     break;
+                }
+            }
+            // Disconnect cleanup: a client that vanished without `RLS`
+            // (crash, kill, dropped socket) must not leak its VGPU,
+            // its pool binding, or its queued-work estimate — release
+            // it on its behalf and wait for the daemon to finish so
+            // accounting is settled before the thread exits.
+            if client_id != 0 {
+                let (reply_tx, reply_rx) = mpsc::channel();
+                if cmd_tx
+                    .send(Command {
+                        client: client_id,
+                        msg: ClientMsg::Rls,
+                        reply: reply_tx,
+                    })
+                    .is_ok()
+                {
+                    let _ = reply_rx.recv();
                 }
             }
         });

@@ -1,0 +1,573 @@
+//! Per-tenant quality of service: weighted shares, rate limits, and the
+//! weighted-deficit queue that turns them into proportional batch service.
+//!
+//! The paper virtualizes one GPU into N VGPUs but treats every client
+//! identically; multi-tenant vGPU deployments (Prades et al.) need
+//! *shares* — tenant A paid for 3x tenant B's capacity, so A's jobs
+//! should see ~3x the batch service under contention.  This module holds
+//! the tenant share model used across the stack:
+//!
+//! * [`QosConfig`] — tenant id → [`TenantShare`] (weight + optional rate
+//!   limit), parsed from the `[qos]` config section (see
+//!   [`crate::config::file`]) and carried on `REQ` in the wire protocol.
+//! * [`WeightedDeficitQueue`] — deficit round-robin (Shreedhar &
+//!   Varghese) over per-tenant FIFO lanes; the daemon drains each
+//!   per-device batch through it so a 3:1 weight split yields ~3:1
+//!   service order, and [`service_counts`] measures exactly that.
+//! * Placement: [`crate::gvm::devices::PlacementPolicy::WeightedLeastLoaded`]
+//!   scores devices by queued work *normalized by the owning tenant's
+//!   weight*, so capacity consumed beyond a tenant's entitlement repels
+//!   new placements more than entitled capacity does.
+//!
+//! Rate limits are enforced at `STR` admission: a tenant at its cap gets
+//! a typed [`crate::Error::Gvm`] throttle error immediately — never a
+//! silent queue or a hang.
+//!
+//! A default (empty) [`QosConfig`] is exactly the pre-QoS behaviour:
+//! every client lands in the [`DEFAULT_TENANT`] lane with weight 1, and
+//! a single-lane deficit queue degenerates to FIFO ticket order.
+//!
+//! ```
+//! use vgpu::gvm::qos::{QosConfig, WeightedDeficitQueue};
+//!
+//! let qos = QosConfig::default()
+//!     .with_weight("gold", 3.0)
+//!     .with_weight("bronze", 1.0);
+//! let mut q = WeightedDeficitQueue::new(&qos);
+//! for i in 0..4 {
+//!     q.push("gold", 1.0, i);
+//!     q.push("bronze", 1.0, i);
+//! }
+//! // Steady-state service interleaves ~3 gold jobs per bronze job.
+//! let order: Vec<String> =
+//!     std::iter::from_fn(|| q.pop()).map(|(t, _)| t).collect();
+//! assert_eq!(order.len(), 8);
+//! assert_eq!(order.iter().filter(|t| *t == "gold").count(), 4);
+//! ```
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+use crate::{Error, Result};
+
+/// Tenant every unattributed client belongs to (weight =
+/// `QosConfig::default_weight`, no rate limit unless configured).
+pub const DEFAULT_TENANT: &str = "default";
+
+/// One tenant's share of the node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantShare {
+    /// Relative service weight (> 0).  Under contention a tenant with
+    /// weight `w` receives `w / sum(weights of active tenants)` of the
+    /// batch service slots.
+    pub weight: f64,
+    /// Max jobs the tenant may hold queued behind the barrier at once
+    /// (`None` = unlimited).  Exceeding it fails `STR` with a typed
+    /// [`Error::Gvm`] throttle.
+    pub rate_limit: Option<u32>,
+}
+
+impl Default for TenantShare {
+    fn default() -> Self {
+        Self {
+            weight: 1.0,
+            rate_limit: None,
+        }
+    }
+}
+
+/// The node's tenant share table — the `[qos]` config section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QosConfig {
+    /// Configured tenants, by id (BTreeMap: deterministic iteration).
+    shares: BTreeMap<String, TenantShare>,
+    /// Weight for tenants not listed in `shares`.
+    default_weight: f64,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        Self {
+            shares: BTreeMap::new(),
+            default_weight: 1.0,
+        }
+    }
+}
+
+fn check_weight(w: f64) -> Result<f64> {
+    if w.is_finite() && w > 0.0 {
+        Ok(w)
+    } else {
+        Err(Error::Config(format!(
+            "[qos] weight must be a positive finite number, got {w}"
+        )))
+    }
+}
+
+impl QosConfig {
+    /// Set (or update) a tenant's weight.
+    pub fn set_weight(&mut self, tenant: &str, weight: f64) -> Result<()> {
+        let weight = check_weight(weight)?;
+        self.shares.entry(tenant.to_string()).or_default().weight = weight;
+        Ok(())
+    }
+
+    /// Set (or update) a tenant's queued-job cap (must be >= 1).
+    pub fn set_rate_limit(&mut self, tenant: &str, cap: u32) -> Result<()> {
+        if cap == 0 {
+            return Err(Error::Config(
+                "[qos] rate_limit must be >= 1 (omit the tenant for unlimited)"
+                    .into(),
+            ));
+        }
+        self.shares.entry(tenant.to_string()).or_default().rate_limit =
+            Some(cap);
+        Ok(())
+    }
+
+    /// Set the weight used for tenants absent from the share table.
+    pub fn set_default_weight(&mut self, weight: f64) -> Result<()> {
+        self.default_weight = check_weight(weight)?;
+        Ok(())
+    }
+
+    /// Builder-style [`QosConfig::set_weight`]; panics on an invalid
+    /// weight (use `set_weight` for fallible configuration paths).
+    pub fn with_weight(mut self, tenant: &str, weight: f64) -> Self {
+        self.set_weight(tenant, weight)
+            .expect("with_weight: weight must be positive and finite");
+        self
+    }
+
+    /// Builder-style [`QosConfig::set_rate_limit`]; panics on cap = 0.
+    pub fn with_rate_limit(mut self, tenant: &str, cap: u32) -> Self {
+        self.set_rate_limit(tenant, cap)
+            .expect("with_rate_limit: cap must be >= 1");
+        self
+    }
+
+    /// A tenant's service weight (the default weight when unlisted).
+    pub fn weight(&self, tenant: &str) -> f64 {
+        self.shares
+            .get(tenant)
+            .map(|s| s.weight)
+            .unwrap_or(self.default_weight)
+    }
+
+    /// A tenant's queued-job cap, if any.
+    pub fn rate_limit(&self, tenant: &str) -> Option<u32> {
+        self.shares.get(tenant).and_then(|s| s.rate_limit)
+    }
+
+    /// Configured tenants, in id order.
+    pub fn tenants(&self) -> impl Iterator<Item = (&str, &TenantShare)> {
+        self.shares.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// True when no tenant is configured — QoS-off behaviour.
+    pub fn is_trivial(&self) -> bool {
+        self.shares.is_empty()
+    }
+
+    /// The share of service `tenant` is entitled to among `active`
+    /// tenants: `weight / sum(weights)`.
+    pub fn configured_share(&self, tenant: &str, active: &[String]) -> f64 {
+        let total: f64 = active.iter().map(|t| self.weight(t)).sum();
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.weight(tenant) / total
+        }
+    }
+}
+
+/// Parse a `name:value` comma-separated list (the `[qos]` file syntax,
+/// e.g. `tenants = gold:3, silver:1`).  Names are trimmed, values must
+/// parse as f64.
+pub fn parse_share_list(s: &str) -> Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, value) = part.split_once(':').ok_or_else(|| {
+            Error::Config(format!(
+                "[qos] expected name:value, got {part:?} in {s:?}"
+            ))
+        })?;
+        let name = name.trim();
+        if name.is_empty() {
+            return Err(Error::Config(format!(
+                "[qos] empty tenant name in {s:?}"
+            )));
+        }
+        let value: f64 = value.trim().parse().map_err(|e| {
+            Error::Config(format!("[qos] {name}: bad value {value:?}: {e}"))
+        })?;
+        out.push((name.to_string(), value));
+    }
+    Ok(out)
+}
+
+/// One tenant's FIFO lane inside the deficit queue.
+#[derive(Debug)]
+struct Lane<T> {
+    tenant: String,
+    weight: f64,
+    deficit: f64,
+    items: VecDeque<(f64, T)>,
+}
+
+/// Deficit round-robin over per-tenant FIFO lanes.
+///
+/// Each lane earns `weight` units of credit per scheduling round and
+/// spends them on its queued items' costs (1.0 per job for batch-slot
+/// fairness; `est_ms` for time-proportional fairness).  Long-run service
+/// converges to the weight ratios regardless of batch boundaries; an
+/// idle lane's credit resets, so tenants cannot bank service while
+/// inactive.  With a single lane the queue is plain FIFO — the pre-QoS
+/// ticket order.
+#[derive(Debug)]
+pub struct WeightedDeficitQueue<T> {
+    qos: QosConfig,
+    lanes: Vec<Lane<T>>,
+    index: HashMap<String, usize>,
+    cursor: usize,
+    len: usize,
+}
+
+impl<T> WeightedDeficitQueue<T> {
+    /// Empty queue over a share table (weights are looked up lazily, so
+    /// tenants absent from the table get the default weight).
+    pub fn new(qos: &QosConfig) -> Self {
+        Self {
+            qos: qos.clone(),
+            lanes: Vec::new(),
+            index: HashMap::new(),
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    /// Queued items across all lanes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no items are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Queued items in one tenant's lane.
+    pub fn lane_len(&self, tenant: &str) -> usize {
+        self.index
+            .get(tenant)
+            .map(|&i| self.lanes[i].items.len())
+            .unwrap_or(0)
+    }
+
+    /// Enqueue an item for `tenant` at `cost` service units (clamped to
+    /// a tiny positive value; jobs usually cost 1.0 each).
+    pub fn push(&mut self, tenant: &str, cost: f64, item: T) {
+        let cost = if cost.is_finite() && cost > 0.0 {
+            cost
+        } else {
+            1.0
+        };
+        let i = match self.index.get(tenant) {
+            Some(&i) => i,
+            None => {
+                let i = self.lanes.len();
+                self.lanes.push(Lane {
+                    tenant: tenant.to_string(),
+                    // Clamped so a pathological (but validation-passing)
+                    // weight like 1e-300 cannot make pop() spin for an
+                    // unbounded number of credit rounds.
+                    weight: self.qos.weight(tenant).clamp(1e-6, 1e9),
+                    deficit: 0.0,
+                    items: VecDeque::new(),
+                });
+                self.index.insert(tenant.to_string(), i);
+                i
+            }
+        };
+        self.lanes[i].items.push_back((cost, item));
+        self.len += 1;
+    }
+
+    /// Serve the next item per deficit round-robin; `None` when empty.
+    pub fn pop(&mut self) -> Option<(String, T)> {
+        if self.len == 0 {
+            return None;
+        }
+        let n = self.lanes.len();
+        loop {
+            let lane = &mut self.lanes[self.cursor % n];
+            if lane.items.is_empty() {
+                // Idle lanes earn nothing and bank nothing.
+                lane.deficit = 0.0;
+                self.cursor = (self.cursor + 1) % n;
+                continue;
+            }
+            let cost = lane.items.front().map(|(c, _)| *c).unwrap_or(1.0);
+            if lane.deficit + 1e-12 >= cost {
+                lane.deficit -= cost;
+                let (_, item) = lane.items.pop_front().unwrap();
+                self.len -= 1;
+                if lane.items.is_empty() {
+                    lane.deficit = 0.0;
+                }
+                return Some((lane.tenant.clone(), item));
+            }
+            lane.deficit += lane.weight;
+            self.cursor = (self.cursor + 1) % n;
+        }
+    }
+
+    /// Drain every queued item in weighted service order.
+    pub fn drain(&mut self) -> Vec<(String, T)> {
+        std::iter::from_fn(|| self.pop()).collect()
+    }
+}
+
+/// Saturated-contention service simulation: every tenant keeps an
+/// always-full backlog while `n_batches` batches of `batch_size` slots
+/// are served through a [`WeightedDeficitQueue`].  Returns per-tenant
+/// service counts, in `tenants` order — the "achieved batch share"
+/// measurement behind `vgpu exp qos` and the convergence property tests.
+pub fn service_counts(
+    qos: &QosConfig,
+    tenants: &[String],
+    n_batches: usize,
+    batch_size: usize,
+) -> Vec<(String, u64)> {
+    let mut q: WeightedDeficitQueue<()> = WeightedDeficitQueue::new(qos);
+    let mut counts: BTreeMap<&str, u64> =
+        tenants.iter().map(|t| (t.as_str(), 0)).collect();
+    for _ in 0..n_batches {
+        for t in tenants {
+            while q.lane_len(t) < batch_size {
+                q.push(t, 1.0, ());
+            }
+        }
+        for _ in 0..batch_size {
+            if let Some((t, ())) = q.pop() {
+                if let Some(c) = counts.get_mut(t.as_str()) {
+                    *c += 1;
+                }
+            }
+        }
+    }
+    tenants
+        .iter()
+        .map(|t| (t.clone(), counts[t.as_str()]))
+        .collect()
+}
+
+/// Per-tenant achieved share of service, in `tenants` order (fractions
+/// summing to ~1.0 over the horizon of [`service_counts`]).
+pub fn achieved_shares(
+    qos: &QosConfig,
+    tenants: &[String],
+    n_batches: usize,
+    batch_size: usize,
+) -> Vec<(String, f64)> {
+    let counts = service_counts(qos, tenants, n_batches, batch_size);
+    let total: u64 = counts.iter().map(|(_, c)| c).sum();
+    counts
+        .into_iter()
+        .map(|(t, c)| {
+            let share = if total == 0 {
+                0.0
+            } else {
+                c as f64 / total as f64
+            };
+            (t, share)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three_one_one() -> QosConfig {
+        QosConfig::default()
+            .with_weight("gold", 3.0)
+            .with_weight("silver", 1.0)
+            .with_weight("bronze", 1.0)
+    }
+
+    #[test]
+    fn weights_default_and_override() {
+        let q = three_one_one();
+        assert_eq!(q.weight("gold"), 3.0);
+        assert_eq!(q.weight("unlisted"), 1.0);
+        assert_eq!(q.weight(DEFAULT_TENANT), 1.0);
+        assert!(q.rate_limit("gold").is_none());
+    }
+
+    #[test]
+    fn invalid_weights_rejected() {
+        let mut q = QosConfig::default();
+        assert!(q.set_weight("a", 0.0).is_err());
+        assert!(q.set_weight("a", -1.0).is_err());
+        assert!(q.set_weight("a", f64::NAN).is_err());
+        assert!(q.set_default_weight(f64::INFINITY).is_err());
+        assert!(q.set_rate_limit("a", 0).is_err());
+        assert!(q.set_weight("a", 2.5).is_ok());
+    }
+
+    #[test]
+    fn share_list_parses_and_rejects() {
+        let got = parse_share_list("gold:3, silver:1,bronze : 0.5").unwrap();
+        assert_eq!(
+            got,
+            vec![
+                ("gold".to_string(), 3.0),
+                ("silver".to_string(), 1.0),
+                ("bronze".to_string(), 0.5),
+            ]
+        );
+        assert!(parse_share_list("gold=3").is_err());
+        assert!(parse_share_list("gold:lots").is_err());
+        assert!(parse_share_list(":3").is_err());
+        assert!(parse_share_list("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn configured_share_normalizes() {
+        let q = three_one_one();
+        let active = vec![
+            "gold".to_string(),
+            "silver".to_string(),
+            "bronze".to_string(),
+        ];
+        assert!((q.configured_share("gold", &active) - 0.6).abs() < 1e-12);
+        assert!((q.configured_share("silver", &active) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_lane_is_fifo() {
+        let mut q = WeightedDeficitQueue::new(&QosConfig::default());
+        for i in 0..10 {
+            q.push(DEFAULT_TENANT, 1.0, i);
+        }
+        let order: Vec<i32> = q.drain().into_iter().map(|(_, i)| i).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drain_preserves_per_tenant_fifo() {
+        let q3 = three_one_one();
+        let mut q = WeightedDeficitQueue::new(&q3);
+        for i in 0..6 {
+            q.push("gold", 1.0, i);
+            q.push("bronze", 1.0, 100 + i);
+        }
+        let out = q.drain();
+        assert_eq!(out.len(), 12);
+        let gold: Vec<i32> = out
+            .iter()
+            .filter(|(t, _)| t == "gold")
+            .map(|(_, i)| *i)
+            .collect();
+        assert_eq!(gold, (0..6).collect::<Vec<_>>());
+        let bronze: Vec<i32> = out
+            .iter()
+            .filter(|(t, _)| t == "bronze")
+            .map(|(_, i)| *i)
+            .collect();
+        assert_eq!(bronze, (100..106).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn service_follows_three_one_one_weights() {
+        let q = three_one_one();
+        let tenants = vec![
+            "gold".to_string(),
+            "silver".to_string(),
+            "bronze".to_string(),
+        ];
+        let shares = achieved_shares(&q, &tenants, 1000, 8);
+        let want = [0.6, 0.2, 0.2];
+        for ((t, got), want) in shares.iter().zip(want) {
+            assert!(
+                (got - want).abs() / want <= 0.10,
+                "{t}: achieved {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn fractional_weights_accumulate_credit() {
+        // weight 0.5 vs 1.0: the slow lane must still be served ~1/3.
+        let q = QosConfig::default()
+            .with_weight("slow", 0.5)
+            .with_weight("fast", 1.0);
+        let tenants = vec!["slow".to_string(), "fast".to_string()];
+        let shares = achieved_shares(&q, &tenants, 1000, 4);
+        assert!((shares[0].1 - 1.0 / 3.0).abs() <= 0.05, "{shares:?}");
+        assert!((shares[1].1 - 2.0 / 3.0).abs() <= 0.05, "{shares:?}");
+    }
+
+    #[test]
+    fn idle_lane_banks_no_credit() {
+        let q = QosConfig::default()
+            .with_weight("a", 1.0)
+            .with_weight("b", 1.0);
+        let mut wdq = WeightedDeficitQueue::new(&q);
+        // b idles while a is served 100 times...
+        for i in 0..100 {
+            wdq.push("a", 1.0, i);
+        }
+        // register b's lane, then drain it so it sits empty (idle).
+        wdq.push("b", 1.0, -1);
+        let _ = wdq.drain();
+        // ...then both go contended: b must NOT get a 100-item catch-up.
+        for i in 0..20 {
+            wdq.push("a", 1.0, i);
+            wdq.push("b", 1.0, i);
+        }
+        let first10: Vec<String> = std::iter::from_fn(|| wdq.pop())
+            .take(10)
+            .map(|(t, _)| t)
+            .collect();
+        let b_count = first10.iter().filter(|t| *t == "b").count();
+        assert!(b_count <= 6, "b burst ahead: {first10:?}");
+    }
+
+    #[test]
+    fn costs_weight_the_service() {
+        // Equal weights, but a's items cost 2.0 each: a gets half the
+        // *items* b gets over a long horizon.
+        let q = QosConfig::default()
+            .with_weight("a", 1.0)
+            .with_weight("b", 1.0);
+        let mut wdq = WeightedDeficitQueue::new(&q);
+        for i in 0..300 {
+            wdq.push("a", 2.0, i);
+            wdq.push("b", 1.0, i);
+        }
+        let first: Vec<String> = std::iter::from_fn(|| wdq.pop())
+            .take(150)
+            .map(|(t, _)| t)
+            .collect();
+        let a = first.iter().filter(|t| *t == "a").count() as f64;
+        let b = first.iter().filter(|t| *t == "b").count() as f64;
+        assert!((b / a - 2.0).abs() <= 0.2, "a={a} b={b}");
+    }
+
+    #[test]
+    fn empty_queue_pops_none() {
+        let mut q: WeightedDeficitQueue<u8> =
+            WeightedDeficitQueue::new(&QosConfig::default());
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+        q.push("t", 1.0, 7);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop(), Some(("t".to_string(), 7)));
+        assert!(q.pop().is_none());
+    }
+}

@@ -239,6 +239,155 @@ pub fn simulate_pool_baseline(
     simulate_pool_with(w, n, specs, placement, Plan::no_virt)
 }
 
+/// One tenant's view of a simulated QoS batch (see
+/// [`simulate_pool_qos`]).
+#[derive(Debug, Clone)]
+pub struct TenantTiming {
+    /// Tenant id.
+    pub tenant: String,
+    /// Jobs the tenant ran across the pool.
+    pub jobs: usize,
+    /// Configured share weight.
+    pub weight: f64,
+    /// Mean completion time of the tenant's jobs (ms since batch start).
+    pub mean_end_ms: f64,
+    /// Mean slowdown versus running one job alone on its device
+    /// (`mean_end_ms` of the contended run over the solo turnaround).
+    pub mean_slowdown: f64,
+}
+
+/// [`PoolTiming`] plus per-tenant attribution: which tenant's jobs ended
+/// when, under weighted-deficit batch service.
+#[derive(Debug, Clone)]
+pub struct QosPoolTiming {
+    /// The underlying per-device timelines.
+    pub pool: PoolTiming,
+    /// Per-tenant timing rows, in `mix` order.
+    pub per_tenant: Vec<TenantTiming>,
+}
+
+/// Place a multi-tenant SPMD mix (`mix` = tenant → instance count)
+/// across a device pool under `placement` + the `qos` share table, order
+/// every device's batch through the weighted-deficit queue exactly as
+/// the daemon's flush does, and simulate each device's timeline.  The
+/// per-job completion times are attributed back to tenants, so a higher
+/// weight is visible as an earlier mean completion under contention.
+pub fn simulate_pool_qos(
+    w: &crate::workloads::Workload,
+    mix: &[(String, usize)],
+    specs: &[DeviceConfig],
+    placement: super::devices::PlacementPolicy,
+    policy: &super::scheduler::Policy,
+    qos: &super::qos::QosConfig,
+) -> Result<QosPoolTiming> {
+    use super::devices::{DeviceId, DevicePool};
+    use super::qos::WeightedDeficitQueue;
+    use super::scheduler::{jobs_for_workload, plan_batch};
+
+    let mut pool = DevicePool::from_specs_qos(
+        specs.to_vec(),
+        placement,
+        qos.clone(),
+    )?;
+    let est_ms = w.stages.t_in + w.stages.t_comp + w.stages.t_out;
+    let seg = w.in_bytes + w.out_bytes;
+
+    // Interleave tenant arrivals (round-robin over the mix) so placement
+    // sees the concurrent-arrival picture, not one tenant at a time.
+    let mut per_dev_tenants: Vec<Vec<String>> = vec![Vec::new(); pool.len()];
+    let mut remaining: Vec<usize> = mix.iter().map(|(_, n)| *n).collect();
+    let mut client: u64 = 0;
+    while remaining.iter().any(|&r| r > 0) {
+        for (i, (tenant, _)) in mix.iter().enumerate() {
+            if remaining[i] == 0 {
+                continue;
+            }
+            remaining[i] -= 1;
+            let dev = pool.place_as(
+                client,
+                &format!("{tenant}:{}", remaining[i]),
+                tenant,
+                seg,
+            )?;
+            pool.reserve_mem(dev, seg);
+            pool.note_queued_as(dev, tenant, est_ms);
+            per_dev_tenants[dev.0].push(tenant.clone());
+            client += 1;
+        }
+    }
+
+    // Per device: weighted-deficit service order, then one simulated
+    // timeline; job index j in the plan is the j-th served slot.
+    let mut per_device = Vec::with_capacity(pool.len());
+    let mut total: f64 = 0.0;
+    let mut ends: Vec<(String, f64, f64)> = Vec::new(); // (tenant, end, solo)
+    for (d, tenants) in per_dev_tenants.iter().enumerate() {
+        let k = tenants.len();
+        let spec = pool.spec(DeviceId(d)).clone();
+        let timing = if k == 0 {
+            BatchTiming {
+                total_ms: 0.0,
+                job_end_ms: vec![],
+                compute_busy_ms: 0.0,
+            }
+        } else {
+            let mut wdq = WeightedDeficitQueue::new(qos);
+            for t in tenants {
+                wdq.push(t, 1.0, ());
+            }
+            let order: Vec<String> =
+                wdq.drain().into_iter().map(|(t, ())| t).collect();
+            let timing =
+                simulate(&plan_batch(jobs_for_workload(w, k), policy), &spec)?;
+            let solo =
+                simulate(&plan_batch(jobs_for_workload(w, 1), policy), &spec)?
+                    .total_ms;
+            for (j, tenant) in order.iter().enumerate() {
+                ends.push((tenant.clone(), timing.job_end_ms[j], solo));
+            }
+            timing
+        };
+        total = total.max(timing.total_ms);
+        per_device.push((k, timing));
+    }
+
+    let per_tenant = mix
+        .iter()
+        .map(|(tenant, _)| {
+            let mine: Vec<&(String, f64, f64)> =
+                ends.iter().filter(|(t, _, _)| t == tenant).collect();
+            let jobs = mine.len();
+            let (mean_end_ms, mean_slowdown) = if jobs == 0 {
+                (0.0, 0.0)
+            } else {
+                let end: f64 =
+                    mine.iter().map(|(_, e, _)| e).sum::<f64>() / jobs as f64;
+                let slow: f64 = mine
+                    .iter()
+                    .map(|(_, e, s)| if *s > 0.0 { e / s } else { 0.0 })
+                    .sum::<f64>()
+                    / jobs as f64;
+                (end, slow)
+            };
+            TenantTiming {
+                tenant: tenant.clone(),
+                jobs,
+                weight: qos.weight(tenant),
+                mean_end_ms,
+                mean_slowdown,
+            }
+        })
+        .collect();
+
+    Ok(QosPoolTiming {
+        pool: PoolTiming {
+            per_device,
+            total_ms: total,
+        },
+        per_tenant,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -527,6 +676,64 @@ mod tests {
             "hetero {} vs fast-only {}",
             hetero.total_ms,
             fast_only.total_ms
+        );
+    }
+
+    #[test]
+    fn qos_pool_attributes_every_job_to_its_tenant() {
+        use crate::gvm::devices::PlacementPolicy;
+        use crate::gvm::qos::QosConfig;
+        use crate::gvm::scheduler::Policy;
+        let suite = crate::workloads::Suite::paper_defaults();
+        let w = suite.get("electrostatics").unwrap();
+        let qos = QosConfig::default()
+            .with_weight("gold", 3.0)
+            .with_weight("bronze", 1.0);
+        let mix = vec![("gold".to_string(), 6), ("bronze".to_string(), 6)];
+        let t = simulate_pool_qos(
+            w,
+            &mix,
+            &[DeviceConfig::tesla_c2070()],
+            PlacementPolicy::WeightedLeastLoaded,
+            &Policy::default(),
+            &qos,
+        )
+        .unwrap();
+        assert_eq!(t.pool.n_jobs(), 12);
+        assert_eq!(t.per_tenant.len(), 2);
+        assert!(t.per_tenant.iter().all(|tt| tt.jobs == 6), "{t:?}");
+        assert!(t.per_tenant.iter().all(|tt| tt.mean_slowdown >= 1.0 - 1e-9));
+    }
+
+    #[test]
+    fn qos_weights_pull_completion_order_forward() {
+        // On one contended device, the 4x-weight tenant's jobs occupy
+        // earlier service slots, so its mean completion time is earlier.
+        use crate::gvm::devices::PlacementPolicy;
+        use crate::gvm::qos::QosConfig;
+        use crate::gvm::scheduler::Policy;
+        let suite = crate::workloads::Suite::paper_defaults();
+        let w = suite.get("electrostatics").unwrap();
+        let qos = QosConfig::default()
+            .with_weight("gold", 4.0)
+            .with_weight("bronze", 1.0);
+        let mix = vec![("gold".to_string(), 8), ("bronze".to_string(), 8)];
+        let t = simulate_pool_qos(
+            w,
+            &mix,
+            &[DeviceConfig::tesla_c2070()],
+            PlacementPolicy::WeightedLeastLoaded,
+            &Policy::default(),
+            &qos,
+        )
+        .unwrap();
+        let gold = &t.per_tenant[0];
+        let bronze = &t.per_tenant[1];
+        assert!(
+            gold.mean_end_ms < bronze.mean_end_ms,
+            "gold {} vs bronze {}",
+            gold.mean_end_ms,
+            bronze.mean_end_ms
         );
     }
 

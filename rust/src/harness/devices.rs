@@ -131,8 +131,8 @@ mod tests {
     #[test]
     fn multi_gpu_table_covers_the_sweep() {
         let out = multi_gpu_pool().unwrap();
-        // 2 workloads x 2 proc counts x 4 policies x 4 device counts.
-        assert_eq!(out.table.len(), 64);
+        // 2 workloads x 2 proc counts x 5 policies x 4 device counts.
+        assert_eq!(out.table.len(), 80);
     }
 
     #[test]

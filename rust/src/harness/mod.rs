@@ -26,6 +26,7 @@
 //! | ablation-barrier | barrier vs immediate flush |
 //! | ablation-policy | paper policy vs model-optimal rule |
 //! | multi-gpu | device pool: procs x devices x placement policy |
+//! | qos     | per-tenant QoS: weights x policies, achieved shares |
 //! | ext-multigpu | extension: multi-GPU node scaling |
 //! | ext-cluster | extension: cluster weak scaling (Fig. 11) |
 //! | ext-fig18-socket | extension: Fig. 18 over the socket transport |
@@ -33,6 +34,7 @@
 pub mod ablations;
 pub mod devices;
 pub mod figures;
+pub mod qos;
 pub mod tables;
 
 use crate::util::table::Table;
@@ -95,6 +97,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "ablation-barrier",
     "ablation-policy",
     "multi-gpu",
+    "qos",
     "ext-multigpu",
     "ext-cluster",
     "ext-fig18-socket",
@@ -123,6 +126,7 @@ pub fn run(id: &str) -> Result<ExpOutput> {
         "ablation-barrier" => ablations::barrier_vs_immediate(),
         "ablation-policy" => ablations::policy_rule_comparison(),
         "multi-gpu" => devices::multi_gpu_pool(),
+        "qos" => qos::qos_sweep(),
         "ext-multigpu" => ablations::multi_gpu_scaling(),
         "ext-cluster" => ablations::cluster_scaling(),
         "ext-fig18-socket" => figures::overhead_socket_figure(),

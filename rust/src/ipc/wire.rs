@@ -1,6 +1,14 @@
 //! Wire message set + hand-rolled binary encoding (offline build: no
 //! serde).  Every message is encoded as `tag:u8` + fields; frames add a
 //! u32 length prefix (see [`super::transport`]).
+//!
+//! `REQ` carries the client's **tenant id** alongside its rank name so
+//! the daemon can attribute the VGPU to a `[qos]` share from the very
+//! first message (placement happens at `REQ` time — see
+//! [`crate::gvm::qos`]).  An empty tenant string means the default
+//! tenant; in-tree clients fill it from
+//! [`crate::api::VgpuClient::connect_unix_as`] /
+//! [`crate::gvm::Gvm::connect_as`].
 
 use crate::runtime::TensorValue;
 use crate::runtime::values::{read_arr, read_u64};
@@ -13,6 +21,8 @@ pub enum ClientMsg {
     Req {
         /// Client display name (rank label).
         name: String,
+        /// QoS tenant the VGPU is attributed to (empty = default).
+        tenant: String,
     },
     /// `SND()`: place one input tensor into the client's virtual shared
     /// memory segment at `slot`.
@@ -135,9 +145,10 @@ impl ClientMsg {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
         match self {
-            ClientMsg::Req { name } => {
+            ClientMsg::Req { name, tenant } => {
                 out.push(0);
                 put_str(name, &mut out);
+                put_str(tenant, &mut out);
             }
             ClientMsg::Snd { slot, tensor } => {
                 out.push(1);
@@ -170,6 +181,7 @@ impl ClientMsg {
         let msg = match tag {
             0 => ClientMsg::Req {
                 name: get_str(buf, &mut pos)?,
+                tenant: get_str(buf, &mut pos)?,
             },
             1 => {
                 let slot = u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
@@ -326,6 +338,11 @@ mod tests {
     fn client_roundtrips() {
         roundtrip_c(ClientMsg::Req {
             name: "rank7".into(),
+            tenant: String::new(),
+        });
+        roundtrip_c(ClientMsg::Req {
+            name: "rank7".into(),
+            tenant: "gold".into(),
         });
         roundtrip_c(ClientMsg::Snd {
             slot: 3,

@@ -16,6 +16,8 @@
 //! * [`gvm::devices`] — the multi-GPU device pool: N (possibly
 //!   heterogeneous) physical devices per node with pluggable VGPU
 //!   placement policies and per-device batch queues.
+//! * [`gvm::qos`] — per-tenant quality of service: share weights and
+//!   rate limits that shape both placement and batch service order.
 //! * [`api`] — the client-side VGPU handle implementing the paper's
 //!   `REQ/SND/STR/STP/RCV/RLS` protocol.
 //! * [`ipc`] — wire protocol + transports (unix socket, in-process).
@@ -61,6 +63,37 @@
 //! lists for heterogeneous pools; see [`config::file`]), inspect it with
 //! [`api::VgpuClient::devices`], and sweep procs × devices × policy with
 //! `vgpu exp multi-gpu`.
+//!
+//! ## Per-tenant QoS
+//!
+//! Shared GPUs become a predictable service only with per-tenant shares.
+//! A `[qos]` config section (or [`gvm::qos::QosConfig`] in code) gives
+//! each tenant a weight and an optional rate limit; clients attribute
+//! themselves with [`Gvm::connect_as`](gvm::Gvm::connect_as) /
+//! [`api::VgpuClient::connect_unix_as`] (the tenant rides on `REQ`).
+//! Weights shape *placement* (the `weighted-least-loaded` policy scores
+//! devices by share-normalized load) and *flush* (each per-device batch
+//! drains through a weighted-deficit queue, so a 3:1 weight split yields
+//! ~3:1 batch service under contention); a tenant at its rate limit has
+//! `STR` rejected with a typed [`Error::Gvm`] throttle instead of
+//! queueing silently.  Sweep it with `vgpu exp qos`:
+//!
+//! ```no_run
+//! use vgpu::gvm::{Gvm, GvmConfig};
+//! use vgpu::gvm::qos::QosConfig;
+//!
+//! let mut cfg = GvmConfig::default();
+//! cfg.daemon.pool.qos = QosConfig::default()
+//!     .with_weight("interactive", 3.0)
+//!     .with_weight("batch", 1.0)
+//!     .with_rate_limit("batch", 8);
+//! let gvm = Gvm::launch(cfg).unwrap();
+//! let mut v = gvm.connect_as("rank0", "interactive").unwrap();
+//! # let _ = &mut v;
+//! ```
+//!
+//! Architecture and configuration reference: `docs/ARCHITECTURE.md` and
+//! `docs/CONFIG.md` at the repository root.
 
 pub mod api;
 pub mod cli;

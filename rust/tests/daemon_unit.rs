@@ -11,6 +11,7 @@ use std::time::Duration;
 
 use vgpu::config::DeviceConfig;
 use vgpu::gvm::devices::{PlacementPolicy, PoolConfig};
+use vgpu::gvm::qos::QosConfig;
 use vgpu::gvm::{Command, Daemon, DaemonConfig};
 use vgpu::ipc::{ClientMsg, ServerMsg};
 use vgpu::runtime::{ExecHandle, TensorValue};
@@ -61,11 +62,16 @@ fn call(tx: &mpsc::Sender<Command>, client: u64, msg: ClientMsg) -> ServerMsg {
 }
 
 fn register(tx: &mpsc::Sender<Command>, name: &str) -> u64 {
+    register_as(tx, name, "")
+}
+
+fn register_as(tx: &mpsc::Sender<Command>, name: &str, tenant: &str) -> u64 {
     match call(
         tx,
         0,
         ClientMsg::Req {
             name: name.into(),
+            tenant: tenant.into(),
         },
     ) {
         ServerMsg::Queued { ticket } => ticket,
@@ -311,6 +317,91 @@ fn release_unbinds_from_the_pool() {
         ServerMsg::Devices { devices, .. } => {
             let total: u32 = devices.iter().map(|d| d.clients).sum();
             assert_eq!(total, 1, "{devices:?}");
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+/// Daemon over one device with a `[qos]` share table.
+fn daemon_with_qos(barrier: Option<usize>, qos: QosConfig) -> mpsc::Sender<Command> {
+    let exec = ExecHandle::mock(vec!["double".into()], |_, inputs| {
+        Ok(vec![inputs[0].clone()])
+    });
+    let mut pool = PoolConfig::homogeneous(
+        1,
+        DeviceConfig::tesla_c2070(),
+        PlacementPolicy::WeightedLeastLoaded,
+    );
+    pool.qos = qos;
+    let cfg = DaemonConfig {
+        barrier,
+        barrier_timeout: Duration::from_millis(5_000),
+        pool,
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::new(cfg, exec);
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+    tx
+}
+
+#[test]
+fn rate_limited_tenant_gets_typed_throttle_not_a_hang() {
+    let qos = QosConfig::default()
+        .with_weight("capped", 1.0)
+        .with_rate_limit("capped", 1);
+    // Barrier large enough that nothing flushes while we probe.
+    let tx = daemon_with_qos(Some(8), qos);
+    let a = register_as(&tx, "a", "capped");
+    let b = register_as(&tx, "b", "capped");
+    let c = register_as(&tx, "c", "free");
+    for id in [a, b, c] {
+        call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+    }
+    assert!(matches!(
+        call(&tx, a, ClientMsg::Str { workload: "double".into() }),
+        ServerMsg::Queued { .. }
+    ));
+    // Second queued job for the same tenant trips the cap, immediately.
+    match call(&tx, b, ClientMsg::Str { workload: "double".into() }) {
+        ServerMsg::Err { msg } => {
+            assert!(msg.contains("throttled"), "{msg}");
+            assert!(msg.contains("gvm error"), "typed Error::Gvm: {msg}");
+        }
+        other => panic!("expected throttle, got {other:?}"),
+    }
+    // An uncapped tenant is unaffected.
+    assert!(matches!(
+        call(&tx, c, ClientMsg::Str { workload: "double".into() }),
+        ServerMsg::Queued { .. }
+    ));
+}
+
+#[test]
+fn weighted_flush_completes_every_tenant() {
+    let qos = QosConfig::default()
+        .with_weight("gold", 3.0)
+        .with_weight("bronze", 1.0);
+    let tx = daemon_with_qos(Some(6), qos);
+    let ids: Vec<u64> = (0..6)
+        .map(|i| {
+            let tenant = if i % 2 == 0 { "gold" } else { "bronze" };
+            register_as(&tx, &format!("rank{i}"), tenant)
+        })
+        .collect();
+    for &id in &ids {
+        call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+        call(&tx, id, ClientMsg::Str { workload: "double".into() });
+    }
+    // Weighted service reorders the batch but must never starve anyone.
+    for &id in &ids {
+        assert!(matches!(call(&tx, id, ClientMsg::Stp), ServerMsg::Done { .. }));
+    }
+    // The pool's queue estimates drained through the tenant buckets.
+    match call(&tx, ids[0], ClientMsg::DevInfo) {
+        ServerMsg::Devices { devices, .. } => {
+            assert!(devices.iter().all(|d| d.queued_ms.abs() < 1e-9), "{devices:?}");
+            assert_eq!(devices.iter().map(|d| d.jobs_done).sum::<u64>(), 6);
         }
         other => panic!("{other:?}"),
     }

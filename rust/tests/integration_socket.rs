@@ -6,6 +6,7 @@ use std::path::PathBuf;
 
 use vgpu::api::VgpuClient;
 use vgpu::gvm::{serve_unix, Gvm, GvmConfig};
+use vgpu::ipc::{ClientMsg, Framed, ServerMsg};
 use vgpu::runtime::TensorValue;
 
 fn artifacts_dir() -> Option<PathBuf> {
@@ -94,6 +95,59 @@ fn protocol_error_travels_over_socket() {
         )
         .unwrap();
     assert!((outs[0].as_f64_vec()[0] - 3.0).abs() < 1e-6);
+    let _ = std::fs::remove_file(sock);
+}
+
+#[test]
+fn abrupt_disconnect_releases_the_vgpu_and_pool_binding() {
+    // A client that registers and queues a job, then vanishes WITHOUT
+    // `RLS` (crashed process: raw socket drop, no Drop handler) must
+    // not leak its VGPU registration, its pool client slot, or its
+    // queued-work estimate — the server releases on disconnect.
+    let sock = "/tmp/vgpu-test-abrupt-disconnect.sock";
+    if serve(sock, 8).is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    {
+        let stream =
+            std::os::unix::net::UnixStream::connect(sock).unwrap();
+        let mut framed = Framed::new(stream);
+        framed
+            .send(
+                &ClientMsg::Req {
+                    name: "crasher".into(),
+                    tenant: "doomed".into(),
+                }
+                .encode(),
+            )
+            .unwrap();
+        let reply = framed.recv().unwrap().unwrap();
+        assert!(matches!(
+            ServerMsg::decode(&reply).unwrap(),
+            ServerMsg::Ack
+        ));
+        framed
+            .send(&ClientMsg::Str { workload: "vecadd".into() }.encode())
+            .unwrap();
+        let _ = framed.recv().unwrap().unwrap(); // Queued or Err, either way
+        // ...and the process "crashes" here: stream dropped, no RLS.
+    }
+    let mut monitor = VgpuClient::connect_unix(sock, "monitor").unwrap();
+    // Disconnect cleanup is asynchronous; poll until it lands.
+    let mut leaked = true;
+    for _ in 0..200 {
+        let view = monitor.devices().unwrap();
+        let clients: u32 = view.devices.iter().map(|d| d.clients).sum();
+        let queued: f64 = view.devices.iter().map(|d| d.queued_ms).sum();
+        if clients == 1 && queued.abs() < 1e-9 {
+            leaked = false;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert!(!leaked, "ghost client still bound (or queue estimate leaked)");
+    monitor.rls().unwrap();
     let _ = std::fs::remove_file(sock);
 }
 

@@ -25,7 +25,7 @@ struct PoolCase {
 fn gen_case(r: &mut SplitMix64) -> PoolCase {
     let n_devices = 1 + r.below(8);
     let n_clients = 1 + r.below(32);
-    let policy = PlacementPolicy::ALL[r.below(4)];
+    let policy = PlacementPolicy::ALL[r.below(PlacementPolicy::ALL.len())];
     let demands = (0..n_clients)
         .map(|_| r.range_u64(1, 1 << 30))
         .collect();

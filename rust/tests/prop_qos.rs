@@ -1,0 +1,215 @@
+//! Property tests for per-tenant QoS (ISSUE 2 acceptance set).
+//!
+//! Invariants: weighted-deficit service converges to the configured
+//! weight ratios (±10% over 1k batches) for random tenant counts and
+//! weights, the queue conserves items and per-tenant FIFO order, and
+//! `WeightedLeastLoaded` placement never lands a segment on a device
+//! that cannot hold it (the `MemoryAware`-style capacity check).
+//! Reproduce failures with `VGPU_PROP_SEED=<seed> cargo test --test
+//! prop_qos`.
+
+use vgpu::config::DeviceConfig;
+use vgpu::gvm::devices::{DeviceId, DevicePool, PlacementPolicy};
+use vgpu::gvm::qos::{achieved_shares, QosConfig, WeightedDeficitQueue};
+use vgpu::testkit::{default_cases, forall_check};
+use vgpu::util::rng::SplitMix64;
+
+#[derive(Debug)]
+struct ShareCase {
+    /// (tenant, weight) pairs.
+    weights: Vec<(String, f64)>,
+}
+
+fn gen_share_case(r: &mut SplitMix64) -> ShareCase {
+    let n = 2 + r.below(4); // 2..=5 tenants
+    let weights = (0..n)
+        .map(|i| {
+            // Weights in [0.5, 8.0] on a 0.25 grid: spans 16:1 splits
+            // without degenerate near-zero lanes.
+            let w = 0.5 + 0.25 * r.below(31) as f64;
+            (format!("t{i}"), w)
+        })
+        .collect();
+    ShareCase { weights }
+}
+
+#[test]
+fn prop_weighted_deficit_converges_to_configured_ratios() {
+    forall_check(
+        "weighted-deficit convergence",
+        default_cases(),
+        gen_share_case,
+        |c| {
+            let mut qos = QosConfig::default();
+            for (t, w) in &c.weights {
+                qos.set_weight(t, *w).map_err(|e| e.to_string())?;
+            }
+            let names: Vec<String> =
+                c.weights.iter().map(|(t, _)| t.clone()).collect();
+            let total_w: f64 = c.weights.iter().map(|(_, w)| w).sum();
+            // 1k batches of 8 service slots under saturated backlogs.
+            let shares = achieved_shares(&qos, &names, 1000, 8);
+            for ((tenant, achieved), (_, weight)) in
+                shares.iter().zip(&c.weights)
+            {
+                let want = weight / total_w;
+                let rel = (achieved - want).abs() / want;
+                if rel > 0.10 {
+                    return Err(format!(
+                        "{tenant}: achieved {achieved:.4}, configured \
+                         {want:.4} (rel err {rel:.3} > 0.10)"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_weighted_deficit_conserves_items_in_fifo_lanes() {
+    #[derive(Debug)]
+    struct Case {
+        weights: Vec<(String, f64)>,
+        /// Per-item (tenant index, seq) in push order.
+        pushes: Vec<(usize, usize)>,
+    }
+    let gen = |r: &mut SplitMix64| {
+        let share = gen_share_case(r);
+        let n_items = 1 + r.below(200);
+        let mut seq = vec![0usize; share.weights.len()];
+        let pushes = (0..n_items)
+            .map(|_| {
+                let t = r.below(share.weights.len());
+                seq[t] += 1;
+                (t, seq[t])
+            })
+            .collect();
+        Case {
+            weights: share.weights,
+            pushes,
+        }
+    };
+    forall_check("deficit-queue conservation", default_cases(), gen, |c| {
+        let mut qos = QosConfig::default();
+        for (t, w) in &c.weights {
+            qos.set_weight(t, *w).map_err(|e| e.to_string())?;
+        }
+        let mut q = WeightedDeficitQueue::new(&qos);
+        for &(t, seq) in &c.pushes {
+            q.push(&c.weights[t].0, 1.0, (t, seq));
+        }
+        let drained = q.drain();
+        if drained.len() != c.pushes.len() {
+            return Err(format!(
+                "lost items: pushed {}, drained {}",
+                c.pushes.len(),
+                drained.len()
+            ));
+        }
+        // Per-tenant order must be FIFO (seq strictly increasing).
+        let mut last = vec![0usize; c.weights.len()];
+        for (tenant, (t, seq)) in &drained {
+            if tenant != &c.weights[*t].0 {
+                return Err(format!("item of {t} served under {tenant:?}"));
+            }
+            if *seq <= last[*t] {
+                return Err(format!(
+                    "{tenant}: seq {seq} after {}, FIFO violated",
+                    last[*t]
+                ));
+            }
+            last[*t] = *seq;
+        }
+        Ok(())
+    });
+}
+
+#[derive(Debug)]
+struct PlacementCase {
+    n_devices: usize,
+    /// Per-client (weight-bucket tenant, segment demand).
+    clients: Vec<(usize, u64)>,
+    weights: Vec<f64>,
+}
+
+fn gen_placement_case(r: &mut SplitMix64) -> PlacementCase {
+    let n_devices = 1 + r.below(6);
+    let n_tenants = 1 + r.below(4);
+    let weights = (0..n_tenants)
+        .map(|_| 0.5 + 0.25 * r.below(31) as f64)
+        .collect();
+    let cap = DeviceConfig::tesla_c2070().mem_bytes;
+    let clients = (0..1 + r.below(40))
+        .map(|_| {
+            // Demands up to 1.33x device capacity: some never fit, the
+            // rest fill devices up over the run.
+            (r.below(n_tenants), r.range_u64(1, cap + cap / 3))
+        })
+        .collect();
+    PlacementCase {
+        n_devices,
+        clients,
+        weights,
+    }
+}
+
+#[test]
+fn prop_weighted_least_loaded_never_violates_capacity() {
+    forall_check(
+        "weighted-least-loaded capacity",
+        default_cases(),
+        gen_placement_case,
+        |c| {
+            let mut qos = QosConfig::default();
+            for (i, w) in c.weights.iter().enumerate() {
+                qos.set_weight(&format!("t{i}"), *w)
+                    .map_err(|e| e.to_string())?;
+            }
+            let mut pool = DevicePool::from_specs_qos(
+                vec![DeviceConfig::tesla_c2070(); c.n_devices],
+                PlacementPolicy::WeightedLeastLoaded,
+                qos,
+            )
+            .unwrap();
+            for (i, &(tenant, demand)) in c.clients.iter().enumerate() {
+                let free_before: Vec<u64> = (0..pool.len())
+                    .map(|d| pool.device(DeviceId(d)).mem_free())
+                    .collect();
+                let tenant = format!("t{tenant}");
+                match pool.place_as(i as u64, &format!("r{i}"), &tenant, demand)
+                {
+                    Ok(dev) => {
+                        if free_before[dev.0] < demand {
+                            return Err(format!(
+                                "client {i}: {demand} B placed on a device \
+                                 with {} B free",
+                                free_before[dev.0]
+                            ));
+                        }
+                        pool.reserve_mem(dev, demand);
+                        pool.note_queued_as(dev, &tenant, 5.0);
+                        let cap =
+                            pool.spec(dev).mem_bytes;
+                        if pool.device(dev).mem_used > cap {
+                            return Err(format!(
+                                "device over capacity: {} > {cap}",
+                                pool.device(dev).mem_used
+                            ));
+                        }
+                    }
+                    Err(_) => {
+                        // Refusal is only legal when nothing fits.
+                        if free_before.iter().any(|&f| f >= demand) {
+                            return Err(format!(
+                                "client {i}: refused {demand} B though a \
+                                 device had room ({free_before:?})"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

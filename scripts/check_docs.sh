@@ -1,0 +1,55 @@
+#!/usr/bin/env bash
+# Docs-presence gate: the docs suite must exist, and every config key the
+# loader (rust/src/config/file.rs) reads must be documented in
+# docs/CONFIG.md.  Run from the repository root; CI runs it after rustdoc.
+set -euo pipefail
+
+fail=0
+
+for f in README.md docs/ARCHITECTURE.md docs/CONFIG.md; do
+    if [ ! -s "$f" ]; then
+        echo "missing or empty: $f"
+        fail=1
+    fi
+done
+[ "$fail" -eq 0 ] || exit "$fail"
+
+# Extract "section.key" pairs from the config loader's get*() calls.
+# The source is flattened first so a call whose arguments are wrapped
+# across lines (rustfmt) still matches.
+keys=$(tr '\n' ' ' < rust/src/config/file.rs \
+    | grep -oE '\("(device|devices|qos|node|gvm)", *"[a-z_0-9]+"\)' \
+    | sed -E 's/\("([a-z]+)", *"([a-z_0-9]+)"\)/\1.\2/' \
+    | sort -u)
+
+if [ -z "$keys" ]; then
+    echo "extracted no config keys from rust/src/config/file.rs" \
+         "(check_docs.sh pattern out of date?)"
+    exit 1
+fi
+
+for pair in $keys; do
+    section=${pair%%.*}
+    key=${pair##*.}
+    if ! grep -q "\[$section\]" docs/CONFIG.md; then
+        echo "docs/CONFIG.md: section [$section] undocumented"
+        fail=1
+    fi
+    if ! grep -q "\`$key\`" docs/CONFIG.md; then
+        echo "docs/CONFIG.md: key \`$key\` (section [$section]) undocumented"
+        fail=1
+    fi
+done
+
+# README must link the docs suite.
+for link in docs/ARCHITECTURE.md docs/CONFIG.md; do
+    if ! grep -q "$link" README.md; then
+        echo "README.md does not link $link"
+        fail=1
+    fi
+done
+
+if [ "$fail" -eq 0 ]; then
+    echo "docs check OK ($(echo "$keys" | wc -l | tr -d ' ') config keys documented)"
+fi
+exit "$fail"
