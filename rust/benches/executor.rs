@@ -1,0 +1,117 @@
+//! Executor-engine benches: single shared handle vs per-device
+//! [`vgpu::gvm::exec::ExecutorPool`] throughput at 1/2/4/8 devices.
+//!
+//! Each case pushes a fixed batch (4 jobs per device, each job spinning
+//! ~200 µs of CPU — a stand-in for device time) and waits for every
+//! completion.  With one *shared* handle all workers funnel into one
+//! mock device thread (the pre-engine architecture); with *per-device*
+//! handles the queues drain concurrently, so ns/op should scale down
+//! with the device count.  Results are also written to
+//! `BENCH_executor.json` (override the path with `VGPU_BENCH_JSON`).
+
+mod bench_common;
+use bench_common::{bench, section};
+
+use std::time::{Duration, Instant};
+
+use vgpu::gvm::devices::DeviceId;
+use vgpu::gvm::exec::{ExecutorPool, Submission};
+use vgpu::runtime::ExecHandle;
+
+const JOBS_PER_DEVICE: usize = 4;
+const SPIN_US: u64 = 200;
+
+/// A mock handle that burns ~`us` of CPU per execute (its own thread).
+fn spin_handle(us: u64) -> ExecHandle {
+    ExecHandle::mock(vec!["spin".into()], move |_, inputs| {
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_micros(us) {
+            std::hint::spin_loop();
+        }
+        Ok(inputs)
+    })
+}
+
+fn submission(client: u64) -> Submission {
+    Submission {
+        seq: 1,
+        client,
+        tenant: "default".into(),
+        est_ms: 1.0,
+        artifact: "spin".into(),
+        inputs: vec![],
+    }
+}
+
+/// Drive one full batch through a pool: submit round-robin, await all.
+fn run_batch(pool: &ExecutorPool, g: usize) -> usize {
+    let n = g * JOBS_PER_DEVICE;
+    for i in 0..n {
+        pool.submit(DeviceId(i % g), submission(i as u64)).unwrap();
+    }
+    for _ in 0..n {
+        pool.recv_completion(Duration::from_secs(10)).unwrap();
+    }
+    n
+}
+
+fn fmt_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.1}")
+    } else {
+        "null".into()
+    }
+}
+
+fn main() {
+    let mut rows: Vec<(usize, f64, f64)> = Vec::new(); // (devices, single, per-dev)
+
+    for g in [1usize, 2, 4, 8] {
+        section(&format!(
+            "executor engine: {g} device(s) x {JOBS_PER_DEVICE} jobs \
+             ({SPIN_US} us/job)"
+        ));
+        // Pre-engine architecture: every worker shares ONE device thread.
+        let single = ExecutorPool::replicated(g, spin_handle(SPIN_US)).unwrap();
+        let ns_single = bench(&format!("batch_{g}dev_single_handle"), || {
+            run_batch(&single, g)
+        });
+        // The engine: one independent substrate per device worker.
+        let per_dev =
+            ExecutorPool::new((0..g).map(|_| spin_handle(SPIN_US)).collect())
+                .unwrap();
+        let ns_per_dev = bench(&format!("batch_{g}dev_per_device"), || {
+            run_batch(&per_dev, g)
+        });
+        println!(
+            "{:48} {:>12.2}x",
+            format!("speedup_{g}dev"),
+            ns_single / ns_per_dev
+        );
+        rows.push((g, ns_single, ns_per_dev));
+    }
+
+    // Record the comparison for the repo (BENCH_executor.json).
+    let path = std::env::var("VGPU_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_executor.json".into());
+    let mut json = String::from(
+        "{\n  \"bench\": \"executor\",\n  \"unit\": \"ns_per_batch\",\n  \
+         \"jobs_per_device\": 4,\n  \"spin_us_per_job\": 200,\n  \
+         \"rows\": [\n",
+    );
+    for (i, (g, s, p)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"devices\": {g}, \"single_handle\": {}, \
+             \"per_device\": {}, \"speedup\": {}}}{}\n",
+            fmt_num(*s),
+            fmt_num(*p),
+            fmt_num(s / p),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("\n[recorded {path}]"),
+        Err(e) => eprintln!("\n[could not write {path}: {e}]"),
+    }
+}

@@ -19,7 +19,7 @@ use std::sync::mpsc;
 
 use crate::gvm::Command;
 use crate::ipc::transport::{Transport, UnixTransport};
-use crate::ipc::{ClientMsg, DeviceEntry, ServerMsg};
+use crate::ipc::{ClientMsg, DeviceEntry, ServerMsg, TenantStatsEntry};
 use crate::runtime::TensorValue;
 use crate::{Error, Result};
 
@@ -33,7 +33,7 @@ pub struct DevicesView {
 }
 
 /// Node statistics snapshot (see [`VgpuClient::stats`]).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct NodeStatsView {
     /// Batches flushed since GVM launch.
     pub batches: u64,
@@ -47,6 +47,17 @@ pub struct NodeStatsView {
     pub device_ms: f64,
     /// Registered clients right now.
     pub clients: u32,
+    /// Per-tenant counters (completion-event fed), in tenant-id order.
+    pub tenants: Vec<TenantStatsEntry>,
+}
+
+/// Outcome of a migration request (see [`VgpuClient::migrate`]).
+#[derive(Debug, Clone, Copy)]
+pub struct MigrationOutcome {
+    /// VGPUs drained and rebound.
+    pub moved: u32,
+    /// Device index the (last) VGPU landed on.
+    pub device: u32,
 }
 
 /// Completion info returned by `STP`.
@@ -205,6 +216,7 @@ impl VgpuClient {
                 bytes_staged,
                 device_ms,
                 clients,
+                tenants,
             } => Ok(NodeStatsView {
                 batches,
                 jobs_ok,
@@ -212,9 +224,40 @@ impl VgpuClient {
                 bytes_staged,
                 device_ms,
                 clients,
+                tenants,
             }),
             ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
             other => Err(Error::Ipc(format!("expected Stats, got {other:?}"))),
+        }
+    }
+
+    /// Live-migrate *this* VGPU to another physical device (`None` =
+    /// let the daemon pick the coolest other device).  The daemon drains
+    /// the source executor lane, re-stages the segment, and rebinds —
+    /// see [`crate::gvm::exec`].
+    pub fn migrate(&mut self, target: Option<u32>) -> Result<MigrationOutcome> {
+        self.migrate_named("", target)
+    }
+
+    /// Admin form of [`VgpuClient::migrate`]: move every live VGPU
+    /// registered under `name` (the `vgpu migrate` CLI uses this; an
+    /// empty name means the requesting client's own VGPU).
+    pub fn migrate_named(
+        &mut self,
+        name: &str,
+        target: Option<u32>,
+    ) -> Result<MigrationOutcome> {
+        match self.call(ClientMsg::Migrate {
+            name: name.to_string(),
+            target: target.unwrap_or(u32::MAX),
+        })? {
+            ServerMsg::Migrated { moved, device } => {
+                Ok(MigrationOutcome { moved, device })
+            }
+            ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
+            other => {
+                Err(Error::Ipc(format!("expected Migrated, got {other:?}")))
+            }
         }
     }
 

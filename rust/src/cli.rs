@@ -5,6 +5,8 @@
 //! vgpu serve --socket PATH [--barrier N]   run the GVM daemon for real
 //!                                          multi-process SPMD clients
 //! vgpu run <workload> [-n N] [--reps R]    in-proc SPMD run (real PJRT)
+//! vgpu migrate <rank> --socket PATH [--to DEV]
+//!                                          live-migrate a VGPU
 //! vgpu list                                list workloads + artifacts
 //! vgpu profile                             show calibration derivation
 //! ```
@@ -58,6 +60,16 @@ pub enum Cmd {
         id: String,
         /// Results directory.
         results_dir: String,
+    },
+    /// Live-migrate VGPU(s) on a served GVM (admin verb over the wire
+    /// `Migrate` message; see `gvm::exec`).
+    Migrate {
+        /// Socket of the served GVM.
+        socket: String,
+        /// Rank name whose live VGPU(s) to move.
+        name: String,
+        /// Target device index (None = coolest other device).
+        target: Option<u32>,
     },
     /// List workloads and artifacts.
     List,
@@ -215,6 +227,51 @@ pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Cmd> {
             }
             Ok(Cmd::Plot { id, results_dir })
         }
+        "migrate" => {
+            let name = args
+                .pop_front()
+                .ok_or_else(|| Error::Config("migrate: missing rank name".into()))?;
+            if name.starts_with("--") {
+                return Err(Error::Config(
+                    "migrate: rank name must come before flags".into(),
+                ));
+            }
+            let mut socket = None;
+            let mut target = None;
+            while let Some(flag) = args.pop_front() {
+                match flag.as_str() {
+                    "--socket" => {
+                        socket = Some(args.pop_front().ok_or_else(|| {
+                            Error::Config("--socket needs a value".into())
+                        })?)
+                    }
+                    "--to" => {
+                        target = Some(
+                            args.pop_front()
+                                .ok_or_else(|| {
+                                    Error::Config("--to needs a value".into())
+                                })?
+                                .parse()
+                                .map_err(|e| {
+                                    Error::Config(format!("bad --to: {e}"))
+                                })?,
+                        )
+                    }
+                    f => {
+                        return Err(Error::Config(format!(
+                            "migrate: unknown flag {f}"
+                        )))
+                    }
+                }
+            }
+            Ok(Cmd::Migrate {
+                socket: socket.ok_or_else(|| {
+                    Error::Config("migrate: --socket required".into())
+                })?,
+                name,
+                target,
+            })
+        }
         "list" => Ok(Cmd::List),
         "profile" => Ok(Cmd::Profile),
         "help" | "--help" | "-h" => Ok(Cmd::Help),
@@ -235,6 +292,8 @@ USAGE:
   vgpu trace <workload> [-n N] [--out F.json] [--baseline]
                                       export a chrome://tracing timeline
   vgpu plot <id> [--results DIR]      ASCII-chart a regenerated figure
+  vgpu migrate <rank> --socket PATH [--to DEV]
+                                      live-migrate a VGPU between devices
   vgpu list                           list workloads and artifacts
   vgpu profile                        show cost-calibration details
   vgpu help                           this text
@@ -242,7 +301,7 @@ USAGE:
 EXPERIMENTS: tab1 tab3 fig14 fig15 fig16 fig17 fig18 fig19 fig20 fig21
              fig22 fig23 fig24 ablation-style ablation-depcheck
              ablation-ctx ablation-barrier ablation-policy multi-gpu qos
-             ext-multigpu ext-cluster ext-fig18-socket
+             multi-gpu-cluster ext-multigpu ext-cluster ext-fig18-socket
 ";
 
 #[cfg(test)]
@@ -295,6 +354,30 @@ mod tests {
             }
         );
         assert!(p("run vecadd -n 0").is_err());
+    }
+
+    #[test]
+    fn parses_migrate() {
+        assert_eq!(
+            p("migrate rank3 --socket /tmp/v.sock --to 1").unwrap(),
+            Cmd::Migrate {
+                socket: "/tmp/v.sock".into(),
+                name: "rank3".into(),
+                target: Some(1)
+            }
+        );
+        assert_eq!(
+            p("migrate rank3 --socket /tmp/v.sock").unwrap(),
+            Cmd::Migrate {
+                socket: "/tmp/v.sock".into(),
+                name: "rank3".into(),
+                target: None
+            }
+        );
+        assert!(p("migrate").is_err());
+        assert!(p("migrate rank3").is_err(), "--socket required");
+        assert!(p("migrate --socket /tmp/v.sock").is_err());
+        assert!(p("migrate rank3 --socket /tmp/v.sock --to many").is_err());
     }
 
     #[test]

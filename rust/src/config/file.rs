@@ -29,6 +29,12 @@
 //! rate_limit = silver:4       # tenant:max-queued-jobs caps (optional)
 //! default_weight = 1.0        # weight for unlisted tenants
 //!
+//! [migration]
+//! enabled = true              # automatic rebalancing (default off)
+//! hot_threshold_ms = 250      # queued-work level that marks a device hot
+//! drain_timeout_ms = 5000     # max wait for a lane to quiesce
+//! max_moves_per_flush = 2     # rebalancer migration cap per flush
+//!
 //! [gvm]
 //! barrier = 8                 # omit for "all registered clients"
 //! barrier_timeout_ms = 50
@@ -43,6 +49,7 @@ use std::path::Path;
 
 use super::{DepcheckSemantics, DeviceConfig, NodeConfig};
 use crate::gvm::devices::{PlacementPolicy, PoolConfig};
+use crate::gvm::exec::MigrationConfig;
 use crate::gvm::qos::{parse_share_list, QosConfig};
 use crate::gvm::{DaemonConfig, GvmConfig, StyleRule};
 use crate::{Error, Result};
@@ -255,6 +262,44 @@ impl ConfigFile {
         Ok(q)
     }
 
+    /// Build the live-migration tunables (the `[migration]` section);
+    /// omitted section = automatic rebalancing off (explicit `Migrate`
+    /// requests always work).
+    pub fn migration(&self) -> Result<MigrationConfig> {
+        let mut m = MigrationConfig::default();
+        if let Some(v) = self.get("migration", "enabled") {
+            m.enabled = match v.to_lowercase().as_str() {
+                "true" | "1" | "on" | "yes" => true,
+                "false" | "0" | "off" | "no" => false,
+                other => {
+                    return Err(Error::Config(format!(
+                        "[migration] enabled = {other:?} (want true|false)"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = self.get_f64("migration", "hot_threshold_ms")? {
+            if !v.is_finite() || v < 0.0 {
+                return Err(Error::Config(format!(
+                    "[migration] hot_threshold_ms = {v} must be >= 0"
+                )));
+            }
+            m.hot_threshold_ms = v;
+        }
+        if let Some(v) = self.get_f64("migration", "drain_timeout_ms")? {
+            if !v.is_finite() || v <= 0.0 {
+                return Err(Error::Config(format!(
+                    "[migration] drain_timeout_ms = {v} must be > 0"
+                )));
+            }
+            m.drain_timeout = std::time::Duration::from_micros((v * 1e3) as u64);
+        }
+        if let Some(v) = self.get_usize("migration", "max_moves_per_flush")? {
+            m.max_moves_per_flush = v;
+        }
+        Ok(m)
+    }
+
     /// Build a node config (`[node]` + `[devices]` + `[device]`).
     pub fn node(&self) -> Result<NodeConfig> {
         let mut n = NodeConfig {
@@ -292,6 +337,7 @@ impl ConfigFile {
             };
         }
         daemon.pool = self.devices()?;
+        daemon.migration = self.migration()?;
         let artifacts_dir = self
             .get("gvm", "artifacts_dir")
             .map(std::path::PathBuf::from)
@@ -396,6 +442,43 @@ policy = model-optimal
         ] {
             let c = ConfigFile::parse(bad).unwrap();
             assert!(c.qos().is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn migration_section_parses_and_rides_into_gvm() {
+        let c = ConfigFile::parse(
+            "[migration]\nenabled = true\nhot_threshold_ms = 120\n\
+             drain_timeout_ms = 2500\nmax_moves_per_flush = 3\n",
+        )
+        .unwrap();
+        let m = c.migration().unwrap();
+        assert!(m.enabled);
+        assert!((m.hot_threshold_ms - 120.0).abs() < 1e-12);
+        assert_eq!(m.drain_timeout, std::time::Duration::from_millis(2500));
+        assert_eq!(m.max_moves_per_flush, 3);
+        let g = c.gvm().unwrap();
+        assert!(g.daemon.migration.enabled);
+    }
+
+    #[test]
+    fn migration_section_defaults_to_off() {
+        let c = ConfigFile::parse("").unwrap();
+        let m = c.migration().unwrap();
+        assert!(!m.enabled);
+        assert!(m.hot_threshold_ms > 0.0);
+    }
+
+    #[test]
+    fn bad_migration_sections_rejected() {
+        for bad in [
+            "[migration]\nenabled = maybe\n",
+            "[migration]\nhot_threshold_ms = -1\n",
+            "[migration]\ndrain_timeout_ms = 0\n",
+            "[migration]\nmax_moves_per_flush = lots\n",
+        ] {
+            let c = ConfigFile::parse(bad).unwrap();
+            assert!(c.migration().is_err(), "{bad:?} should be rejected");
         }
     }
 

@@ -1,4 +1,5 @@
-//! The GVM daemon loop: request queue, SPMD barrier, per-device batches.
+//! The GVM daemon loop: request queue, SPMD barrier, per-device batches
+//! drained by the per-device executor engine.
 //!
 //! One thread owns the VGPU table and drives the lifecycle of Fig. 13:
 //! clients' messages arrive through an mpsc command queue (the POSIX
@@ -10,8 +11,14 @@
 //! With the multi-GPU [`super::devices`] pool, every `REQ` places the new
 //! VGPU onto a physical device (pluggable policy), and a flush groups the
 //! queued jobs **per device**: each device gets its own §4.2.3 plan
-//! (PS-1/PS-2) and its own batch queue, so simulated device timelines
-//! proceed concurrently and the pool's load/memory view stays accurate.
+//! (PS-1/PS-2) and its own batch queue.  Execution goes through the
+//! [`super::exec`] engine — one [`super::exec::ExecutorPool`] worker
+//! thread per pool entry, each draining its device's submission queue —
+//! so device batches execute *concurrently in wall-clock time*, and
+//! [`NodeStats`]/per-tenant accounting update from real
+//! [`super::exec::Completion`] events on the reporting channel, never
+//! from inline bookkeeping (a failed job retires its queue estimate but
+//! never increments done counters).
 //!
 //! Per-tenant QoS ([`super::qos`]) shapes both ends of the pipeline: the
 //! tenant carried on `REQ` attributes the VGPU's load for
@@ -20,26 +27,49 @@
 //! split yields ~3:1 service order under contention), and a tenant at
 //! its configured rate limit has `STR` rejected with a typed
 //! [`Error::Gvm`] throttle instead of silently queueing.
-//! On the CPU PJRT substrate the actual numerics still execute serially
-//! through the single host executor — per-device concurrency is a
-//! timing-model property, exactly like the rest of the testbed
-//! substitution.  Placement is observable through `ClientMsg::DevInfo`.
+//!
+//! Live VGPU migration rides the same engine: `ClientMsg::Migrate` (or
+//! the [`super::exec::Rebalancer`], when `[migration]` enables it)
+//! quiesces the source executor lane, re-stages the VGPU's segment bytes
+//! on the target, and rebinds through
+//! [`DevicePool::note_migrated`] — conservation of segments, queued
+//! estimates, and tenant attribution is a pool invariant.  Placement and
+//! migrations are observable through `ClientMsg::DevInfo` /
+//! `ClientMsg::Stats`.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use super::devices::{DeviceId, DevicePool, PoolConfig};
+use super::exec::{
+    Completion, ExecutorPool, MigrationConfig, Rebalancer, Submission,
+};
 use super::plan::Job;
 use super::qos::{WeightedDeficitQueue, DEFAULT_TENANT};
 use super::scheduler::{plan_batch, Policy};
 use super::vgpu::{ClientId, VgpuState, VgpuTable};
-use crate::ipc::wire::DeviceEntry;
+use crate::ipc::wire::{DeviceEntry, TenantStatsEntry};
 use crate::ipc::{ClientMsg, ServerMsg};
 use crate::log;
 use crate::runtime::ExecHandle;
 use crate::workloads::Suite;
 use crate::{Error, Result};
+
+/// Upper bound on waiting for one executor completion during a flush —
+/// a guard against a wedged device thread, not a pacing knob (normal
+/// executions complete in milliseconds to seconds).
+const COMPLETION_TIMEOUT: Duration = Duration::from_secs(3600);
+
+/// Cap on distinct per-tenant counter rows.  Tenant ids are
+/// client-supplied strings: without a bound a churn of unique ids would
+/// grow daemon memory forever and eventually overflow the Stats wire
+/// decoder's plausibility cap.  Tenants beyond the cap aggregate under
+/// [`OTHER_TENANTS`].
+const MAX_TENANT_STATS: usize = 1024;
+
+/// Aggregate row for tenants beyond [`MAX_TENANT_STATS`].
+const OTHER_TENANTS: &str = "(other)";
 
 /// A client command routed to the daemon.
 pub struct Command {
@@ -67,6 +97,8 @@ pub struct DaemonConfig {
     pub max_clients: usize,
     /// Physical device pool (count + specs + placement policy).
     pub pool: PoolConfig,
+    /// Live-migration tunables (`[migration]` config section).
+    pub migration: MigrationConfig,
 }
 
 impl Default for DaemonConfig {
@@ -78,6 +110,7 @@ impl Default for DaemonConfig {
             mem_budget: 6 * 1024 * 1024 * 1024, // the C2070's 6 GB
             max_clients: 64,
             pool: PoolConfig::default(),
+            migration: MigrationConfig::default(),
         }
     }
 }
@@ -86,7 +119,10 @@ impl Default for DaemonConfig {
 pub struct Daemon {
     table: VgpuTable,
     cfg: DaemonConfig,
-    exec: ExecHandle,
+    /// Per-device executor engine: one worker thread per pool entry.
+    executors: ExecutorPool,
+    /// Automatic-migration policy over the executor load view.
+    rebalancer: Rebalancer,
     suite: Suite,
     /// Physical devices + VGPU placements (bound by client id; sticky
     /// affinity by rank name).
@@ -97,8 +133,15 @@ pub struct Daemon {
     barrier_open_since: Option<Instant>,
     /// Cached artifact names (avoids a device-thread round-trip per STR).
     artifact_names: Vec<String>,
+    /// Monotonic flush epoch stamped on submissions; completions from an
+    /// older epoch (a worker that out-lived a completion timeout) are
+    /// discarded instead of being mis-attributed to the current flush.
+    flush_seq: u64,
     /// Observability counters (served by `ClientMsg::Stats`).
     stats: NodeStats,
+    /// Per-tenant counters fed by completion/migration events
+    /// (BTreeMap: deterministic wire order).
+    tenant_stats: BTreeMap<String, TenantCounters>,
 }
 
 /// Node-level counters.
@@ -116,24 +159,71 @@ pub struct NodeStats {
     pub device_ms: f64,
 }
 
+/// One tenant's completion-event counters.
+#[derive(Debug, Clone, Copy, Default)]
+struct TenantCounters {
+    jobs_ok: u64,
+    jobs_failed: u64,
+    device_ms: f64,
+    migrations: u64,
+}
+
 impl Daemon {
-    /// Build a daemon over an executor handle.  Panics only if the pool
-    /// config is invalid — callers validate through [`PoolConfig`] /
-    /// `config::file` first.
+    /// Build a daemon over one shared executor handle: every device
+    /// worker drains its own queue through a clone of `exec`, so
+    /// submission and accounting are per-device but the numerics
+    /// serialize at the shared device thread.  For true wall-clock
+    /// device concurrency, pass one handle per device via
+    /// [`Daemon::with_handles`] (as [`super::Gvm::launch`] does).
+    /// Panics only if the pool config is invalid — callers validate
+    /// through [`PoolConfig`] / `config::file` first.
     pub fn new(cfg: DaemonConfig, exec: ExecHandle) -> Self {
-        let artifact_names = exec.names().unwrap_or_default();
         let pool = DevicePool::new(&cfg.pool)
             .expect("invalid device-pool config (validate via config::file)");
+        let handles = vec![exec; pool.len()];
+        Self::build(cfg, pool, handles)
+    }
+
+    /// Build a daemon over one executor handle *per device* — the real
+    /// multi-queue engine, where each physical device services its own
+    /// stream of work on its own thread.
+    pub fn with_handles(
+        cfg: DaemonConfig,
+        handles: Vec<ExecHandle>,
+    ) -> Result<Self> {
+        let pool = DevicePool::new(&cfg.pool)?;
+        if handles.len() != pool.len() {
+            return Err(Error::gvm(format!(
+                "{} executor handles for a {}-device pool",
+                handles.len(),
+                pool.len()
+            )));
+        }
+        Ok(Self::build(cfg, pool, handles))
+    }
+
+    fn build(
+        cfg: DaemonConfig,
+        pool: DevicePool,
+        handles: Vec<ExecHandle>,
+    ) -> Self {
+        let artifact_names = handles[0].names().unwrap_or_default();
+        let executors =
+            ExecutorPool::new(handles).expect("pool construction is non-empty");
+        let rebalancer = Rebalancer::new(cfg.migration.clone());
         Self {
             table: VgpuTable::new(cfg.mem_budget, cfg.max_clients),
-            cfg: cfg.clone(),
-            exec,
+            cfg,
+            executors,
+            rebalancer,
             suite: Suite::paper_defaults(),
             pool,
             waiters: Vec::new(),
             barrier_open_since: None,
             artifact_names,
+            flush_seq: 0,
             stats: NodeStats::default(),
+            tenant_stats: BTreeMap::new(),
         }
     }
 
@@ -217,6 +307,11 @@ impl Daemon {
                     let _ = self.table.release(id);
                     return Err(e);
                 }
+                // Surface the tenant in Stats from first contact, before
+                // any completion event mentions it (bounded; see
+                // MAX_TENANT_STATS).
+                let tenant_key = tenant.to_string();
+                self.tenant_counters(&tenant_key);
                 // The id travels back out-of-band via Queued.ticket: the
                 // in-proc/socket adapters assign ids at connect time, so
                 // here we just ACK with the id as a ticket.
@@ -352,7 +447,63 @@ impl Daemon {
                 released?;
                 self.ack(&cmd.reply)?;
             }
+            ClientMsg::Migrate { name, target } => {
+                // Resolve the VGPUs to move: the requester itself, or —
+                // the admin form — every live VGPU under a rank name.
+                let clients: Vec<ClientId> = if name.is_empty() {
+                    vec![cmd.client]
+                } else {
+                    self.table.clients_named(&name)
+                };
+                if clients.is_empty() {
+                    return Err(Error::gvm(format!(
+                        "no live VGPU named {name:?} to migrate"
+                    )));
+                }
+                let want = (target != u32::MAX)
+                    .then_some(DeviceId(target as usize));
+                // Per-client isolation: one VGPU's failed handshake must
+                // not mask the ones that already rebound — report the
+                // moved count, and error only when nothing moved at all.
+                let mut moved = 0u32;
+                let mut device = u32::MAX;
+                let mut first_err: Option<Error> = None;
+                for client in clients {
+                    match self.migrate_client(client, want) {
+                        Ok((_, to)) => {
+                            moved += 1;
+                            device = to.0 as u32;
+                        }
+                        Err(e) => {
+                            log::warn!(
+                                "migration of client {client} failed: {e}"
+                            );
+                            if first_err.is_none() {
+                                first_err = Some(e);
+                            }
+                        }
+                    }
+                }
+                if moved == 0 {
+                    return Err(first_err
+                        .unwrap_or_else(|| Error::gvm("no VGPU migrated")));
+                }
+                cmd.reply
+                    .send(ServerMsg::Migrated { moved, device })
+                    .map_err(|_| Error::Ipc("client gone".into()))?;
+            }
             ClientMsg::Stats => {
+                let tenants: Vec<TenantStatsEntry> = self
+                    .tenant_stats
+                    .iter()
+                    .map(|(t, c)| TenantStatsEntry {
+                        tenant: t.clone(),
+                        jobs_ok: c.jobs_ok,
+                        jobs_failed: c.jobs_failed,
+                        device_ms: c.device_ms,
+                        migrations: c.migrations,
+                    })
+                    .collect();
                 cmd.reply
                     .send(ServerMsg::Stats {
                         batches: self.stats.batches,
@@ -361,6 +512,7 @@ impl Daemon {
                         bytes_staged: self.stats.bytes_staged,
                         device_ms: self.stats.device_ms,
                         clients: self.table.len() as u32,
+                        tenants,
                     })
                     .map_err(|_| Error::Ipc("client gone".into()))?;
             }
@@ -418,14 +570,137 @@ impl Daemon {
             .to_string()
     }
 
-    /// Flush the queued batch: group by placed device, then plan and
-    /// execute each device's batch per §4.2.3.
+    fn tenant_counters(&mut self, tenant: &str) -> &mut TenantCounters {
+        let key = if self.tenant_stats.contains_key(tenant)
+            || self.tenant_stats.len() < MAX_TENANT_STATS
+        {
+            tenant
+        } else {
+            OTHER_TENANTS
+        };
+        self.tenant_stats.entry(key.to_string()).or_default()
+    }
+
+    /// The drain/rebind handshake for one VGPU: quiesce the source
+    /// executor lane, then move the binding, segment bytes, and any
+    /// queued-work estimate to `target` (`None` = coolest other device
+    /// with room for the segment).  A target equal to the current
+    /// placement is a successful no-op — the intent is already
+    /// satisfied.
+    fn migrate_client(
+        &mut self,
+        client: ClientId,
+        target: Option<DeviceId>,
+    ) -> Result<(DeviceId, DeviceId)> {
+        let from = self.pool.placement(client).ok_or_else(|| {
+            Error::gvm(format!("client {client} has no device placement"))
+        })?;
+        let (name, seg, est) = {
+            let v = self.table.get(client)?;
+            let est = match &v.state {
+                VgpuState::Queued { workload, .. } => self.job_est_ms(workload),
+                _ => 0.0,
+            };
+            (v.name.clone(), v.seg_bytes, est)
+        };
+        let to = match target {
+            Some(d) => d,
+            None => self.coolest_other_device(from, seg)?,
+        };
+        if to == from {
+            return Ok((from, to));
+        }
+        // Quiesce: nothing may execute on the source lane mid-rebind.
+        // Between flushes the lane is idle and this returns immediately;
+        // a wedged lane surfaces as a typed drain-timeout error.
+        self.executors
+            .drain(from, self.cfg.migration.drain_timeout)?;
+        self.pool.note_migrated(client, &name, to, seg, est)?;
+        let tenant = self.tenant_of(client);
+        self.tenant_counters(&tenant).migrations += 1;
+        log::info!(
+            "migrated client {client} ({name:?}): device {} -> {} \
+             ({seg} B segment, {est:.2} ms queued re-staged)",
+            from.0,
+            to.0
+        );
+        Ok((from, to))
+    }
+
+    /// Least-loaded device other than `from` that can hold `seg_bytes`
+    /// of segments — the auto-target for a `Migrate` without a
+    /// destination.
+    fn coolest_other_device(
+        &self,
+        from: DeviceId,
+        seg_bytes: u64,
+    ) -> Result<DeviceId> {
+        let mut best: Option<(f64, usize, usize)> = None;
+        for i in 0..self.pool.len() {
+            if i == from.0 {
+                continue;
+            }
+            let d = self.pool.device(DeviceId(i));
+            if d.mem_free() < seg_bytes {
+                continue;
+            }
+            let key = (d.queued_ms, d.clients, i);
+            if best.map(|b| key < b).unwrap_or(true) {
+                best = Some(key);
+            }
+        }
+        best.map(|(_, _, i)| DeviceId(i)).ok_or_else(|| {
+            Error::gvm(
+                "migration needs a second device with room for the segment",
+            )
+        })
+    }
+
+    /// Automatic QoS-aware rebalancing: let the [`Rebalancer`] inspect
+    /// per-executor queued load and drain low-weight tenants off hot
+    /// devices before the batch is grouped.
+    fn auto_rebalance(&mut self) {
+        if !self.cfg.migration.enabled {
+            return;
+        }
+        let queued: Vec<(ClientId, f64, u64)> = self
+            .table
+            .queued_clients()
+            .into_iter()
+            .map(|(c, w)| {
+                let seg = self.table.get(c).map(|v| v.seg_bytes).unwrap_or(0);
+                (c, self.job_est_ms(&w), seg)
+            })
+            .collect();
+        for p in self.rebalancer.plan(&self.pool, &queued) {
+            match self.migrate_client(p.client, Some(p.to)) {
+                Ok((from, to)) => log::info!(
+                    "rebalancer drained tenant {:?} (client {}) off hot \
+                     device {} -> {}",
+                    p.tenant,
+                    p.client,
+                    from.0,
+                    to.0
+                ),
+                Err(e) => log::warn!(
+                    "rebalancer migration of client {} failed: {e}",
+                    p.client
+                ),
+            }
+        }
+    }
+
+    /// Flush the queued batch: rebalance, group by placed device, submit
+    /// every device's plan to its executor, then account completions as
+    /// they arrive on the reporting channel.
     fn flush_batch(&mut self) -> Result<()> {
         self.barrier_open_since = None;
+        self.auto_rebalance();
         let queued = self.table.queued_clients();
         if queued.is_empty() {
             return Ok(());
         }
+        self.flush_seq += 1;
 
         // Per-device batch queues (BTreeMap: deterministic device order).
         let mut by_dev: BTreeMap<DeviceId, Vec<(ClientId, String)>> =
@@ -434,6 +709,10 @@ impl Daemon {
             let dev = self.pool.placement(client).unwrap_or(DeviceId(0));
             by_dev.entry(dev).or_default().push((client, workload));
         }
+        // Submit every device's batch first — the executors start
+        // draining their queues concurrently while later devices are
+        // still being staged — then wait for all completions.
+        let mut pending: Vec<(ClientId, String, f64, DeviceId)> = Vec::new();
         for (dev, batch) in by_dev {
             // Weighted-deficit service order: ticket order within a
             // tenant, weight-proportional interleave across tenants.
@@ -450,8 +729,9 @@ impl Daemon {
                 }
                 wdq.drain().into_iter().map(|(_, job)| job).collect()
             };
-            self.run_device_batch(dev, &ordered)?;
+            self.submit_device_batch(dev, &ordered, &mut pending)?;
         }
+        self.drain_flush_completions(pending);
         self.stats.batches += 1;
 
         // Wake every parked STP whose job finished.
@@ -477,11 +757,15 @@ impl Daemon {
         Ok(())
     }
 
-    /// Plan and execute one device's batch in plan order.
-    fn run_device_batch(
+    /// Plan one device's batch and hand its computes, in plan order, to
+    /// that device's executor queue.  Jobs whose inputs cannot be staged
+    /// fail inline; everything submitted is recorded in `pending` for
+    /// the completion drain.
+    fn submit_device_batch(
         &mut self,
         dev: DeviceId,
         queued: &[(ClientId, String)],
+        pending: &mut Vec<(ClientId, String, f64, DeviceId)>,
     ) -> Result<()> {
         // Build jobs: stage profiles come from the suite when known
         // (paper benchmarks), else a neutral profile from byte counts.
@@ -522,9 +806,9 @@ impl Daemon {
 
         let plan = plan_batch(jobs, &self.cfg.policy);
 
-        // Execute computes in plan order through the shared host
-        // executor.  (On the CPU PJRT substrate, SendData/RtrvData are
-        // subsumed by execute(): literals move host<->device inside it.)
+        // Stage inputs and submit computes in plan order.  (On the CPU
+        // PJRT substrate, SendData/RtrvData are subsumed by execute():
+        // literals move host<->device inside it.)
         let order: Vec<usize> = plan
             .ops
             .iter()
@@ -536,6 +820,7 @@ impl Daemon {
         for j in order {
             let (client, workload) = &queued[j];
             let est_ms = self.job_est_ms(workload);
+            let tenant = self.tenant_of(*client);
             let artifact = self
                 .suite
                 .get(workload)
@@ -547,33 +832,136 @@ impl Daemon {
             // of the segment (not cloned) — the launch consumes them,
             // halving memory traffic on the large-transfer path (Fig. 18).
             let before = self.table.get(*client)?.seg_bytes;
-            let result = self
-                .table
-                .take_staged_inputs(*client)
-                .and_then(|inputs| {
-                    let t0 = Instant::now();
-                    let outputs = self.exec.execute(&artifact, inputs)?;
-                    Ok((outputs, t0.elapsed().as_secs_f64() * 1e3))
-                });
+            let staged = self.table.take_staged_inputs(*client);
             let after = self.table.get(*client)?.seg_bytes;
             self.sync_pool_mem(*client, before, after);
-            match result {
-                Ok((outputs, gpu_ms)) => {
-                    self.stats.jobs_ok += 1;
-                    self.stats.device_ms += gpu_ms;
-                    let tenant = self.tenant_of(*client);
-                    self.pool.note_done_as(dev, &tenant, est_ms, gpu_ms);
-                    self.table.complete(*client, outputs, gpu_ms)?;
+            match staged {
+                Ok(inputs) => {
+                    let sub = Submission {
+                        seq: self.flush_seq,
+                        client: *client,
+                        tenant: tenant.clone(),
+                        est_ms,
+                        artifact,
+                        inputs,
+                    };
+                    match self.executors.submit(dev, sub) {
+                        Ok(()) => {
+                            pending.push((*client, tenant, est_ms, dev));
+                        }
+                        Err(e) => {
+                            self.fail_job(
+                                dev,
+                                *client,
+                                &tenant,
+                                est_ms,
+                                e.to_string(),
+                            );
+                        }
+                    }
                 }
                 Err(e) => {
-                    log::warn!("job for client {client} failed: {e}");
-                    self.stats.jobs_failed += 1;
-                    let tenant = self.tenant_of(*client);
-                    self.pool.note_done_as(dev, &tenant, est_ms, 0.0);
-                    self.table.fail(*client, e.to_string())?;
+                    self.fail_job(dev, *client, &tenant, est_ms, e.to_string());
                 }
             }
         }
         Ok(())
+    }
+
+    /// Wait until every submitted job of this flush has reported back,
+    /// applying each completion to stats/pool/table.  If the engine dies
+    /// mid-flush, the still-pending jobs fail with a typed error instead
+    /// of leaving clients parked forever.
+    fn drain_flush_completions(
+        &mut self,
+        mut pending: Vec<(ClientId, String, f64, DeviceId)>,
+    ) {
+        while !pending.is_empty() {
+            match self.executors.recv_completion(COMPLETION_TIMEOUT) {
+                Ok(c) if c.seq != self.flush_seq => {
+                    // A worker out-lived an earlier flush's completion
+                    // timeout: that job was already failed and its
+                    // estimate retired — applying it now would
+                    // double-account and hand stale outputs to whatever
+                    // the client queued next.
+                    log::warn!(
+                        "discarding stale completion for client {} \
+                         (flush {} vs current {})",
+                        c.client,
+                        c.seq,
+                        self.flush_seq
+                    );
+                }
+                Ok(c) => {
+                    pending.retain(|(client, ..)| *client != c.client);
+                    self.apply_completion(c);
+                }
+                Err(e) => {
+                    log::error!("executor engine failure: {e}");
+                    for (client, tenant, est_ms, dev) in
+                        std::mem::take(&mut pending)
+                    {
+                        self.fail_job(
+                            dev,
+                            client,
+                            &tenant,
+                            est_ms,
+                            format!("executor lost: {e}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Account one real completion event: done counters move **only**
+    /// here, on the success path — a failed job retires its queue
+    /// estimate but never counts as serviced.
+    fn apply_completion(&mut self, c: Completion) {
+        match c.outcome {
+            Ok((outputs, gpu_ms)) => {
+                self.stats.jobs_ok += 1;
+                self.stats.device_ms += gpu_ms;
+                self.pool.note_done_as(c.device, &c.tenant, c.est_ms, gpu_ms);
+                let t = self.tenant_counters(&c.tenant);
+                t.jobs_ok += 1;
+                t.device_ms += gpu_ms;
+                if let Err(e) = self.table.complete(c.client, outputs, gpu_ms) {
+                    log::warn!(
+                        "completion for vanished client {}: {e}",
+                        c.client
+                    );
+                }
+            }
+            Err(e) => {
+                self.fail_job(
+                    c.device,
+                    c.client,
+                    &c.tenant,
+                    c.est_ms,
+                    e.to_string(),
+                );
+            }
+        }
+    }
+
+    /// The single failure path: retire the queue estimate (the device is
+    /// no longer going to run this work) *without* touching done
+    /// counters, bump failure stats, and mark the VGPU failed.
+    fn fail_job(
+        &mut self,
+        dev: DeviceId,
+        client: ClientId,
+        tenant: &str,
+        est_ms: f64,
+        msg: String,
+    ) {
+        log::warn!("job for client {client} failed: {msg}");
+        self.stats.jobs_failed += 1;
+        self.pool.retire_queued_as(dev, tenant, est_ms);
+        self.tenant_counters(tenant).jobs_failed += 1;
+        if let Err(e) = self.table.fail(client, msg) {
+            log::warn!("failure for vanished client {client}: {e}");
+        }
     }
 }

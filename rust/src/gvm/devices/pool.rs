@@ -165,6 +165,8 @@ pub struct DevicePool {
     /// re-registering rank lands back on its previous device (sticky
     /// across request iterations).
     sticky: HashMap<String, DeviceId>,
+    /// Completed VGPU migrations (drain/rebind handshakes).
+    migrations: u64,
 }
 
 impl DevicePool {
@@ -198,6 +200,7 @@ impl DevicePool {
             bound: HashMap::new(),
             tenants: HashMap::new(),
             sticky: HashMap::new(),
+            migrations: 0,
         })
     }
 
@@ -369,6 +372,89 @@ impl DevicePool {
         d.retire_tenant_est(tenant, est_ms);
     }
 
+    /// Rebind a live VGPU to another device — the accounting half of the
+    /// live-migration handshake (the daemon quiesces the source executor
+    /// lane first; see [`crate::gvm::exec`]).  Moves the binding, the
+    /// client count, `seg_bytes` of segment memory, and `queued_est_ms`
+    /// of tenant-attributed queued work from the source to `to`, and
+    /// updates the `Affinity` sticky memory so a future re-REQ of `name`
+    /// follows the migration.  Returns the source device.
+    ///
+    /// Conservation property: pool-wide totals (clients, `mem_used`,
+    /// `queued_ms`, per-tenant buckets) are unchanged by a migration —
+    /// only their per-device split moves.
+    pub fn note_migrated(
+        &mut self,
+        client: u64,
+        name: &str,
+        to: DeviceId,
+        seg_bytes: u64,
+        queued_est_ms: f64,
+    ) -> Result<DeviceId> {
+        if to.0 >= self.devices.len() {
+            return Err(Error::gvm(format!(
+                "migration target device {} out of range ({} devices)",
+                to.0,
+                self.devices.len()
+            )));
+        }
+        let from = *self.bound.get(&client).ok_or_else(|| {
+            Error::gvm(format!("migrate: client {client} is not placed"))
+        })?;
+        if from == to {
+            return Err(Error::gvm(format!(
+                "client {client} is already on device {}",
+                to.0
+            )));
+        }
+        // The capacity invariant MemoryAware/WeightedLeastLoaded enforce
+        // at placement must survive migration: never overcommit the
+        // target's segment memory.
+        if self.devices[to.0].mem_free() < seg_bytes {
+            return Err(Error::gvm(format!(
+                "migration target device {} cannot fit {seg_bytes} B of \
+                 segments ({} B free)",
+                to.0,
+                self.devices[to.0].mem_free()
+            )));
+        }
+        let tenant = self
+            .tenants
+            .get(&client)
+            .cloned()
+            .unwrap_or_else(|| DEFAULT_TENANT.to_string());
+        let est = queued_est_ms.max(0.0);
+        {
+            let d = &mut self.devices[from.0];
+            d.clients = d.clients.saturating_sub(1);
+            d.mem_used = d.mem_used.saturating_sub(seg_bytes);
+            if est > 0.0 {
+                d.queued_ms = (d.queued_ms - est).max(0.0);
+                d.retire_tenant_est(&tenant, est);
+            }
+        }
+        {
+            let d = &mut self.devices[to.0];
+            d.clients += 1;
+            d.mem_used = d.mem_used.saturating_add(seg_bytes);
+            if est > 0.0 {
+                d.queued_ms += est;
+                *d.tenant_queued_ms.entry(tenant).or_insert(0.0) += est;
+            }
+        }
+        self.bound.insert(client, to);
+        if self.policy == PlacementPolicy::Affinity {
+            self.sticky.insert(name.to_string(), to);
+        }
+        self.migrations += 1;
+        Ok(from)
+    }
+
+    /// Completed migrations since construction.
+    pub fn migrations(&self) -> u64 {
+        self.migrations
+    }
+
     /// Status snapshot, by device id.
     pub fn status(&self) -> Vec<DeviceStatus> {
         self.devices
@@ -516,6 +602,74 @@ mod tests {
         // Normalized: d0 = 40/4 = 10 < d1 = 20/1 = 20.
         let got = p.place_as(2, "n", "bronze", 0).unwrap();
         assert_eq!(got, d0);
+    }
+
+    #[test]
+    fn migration_moves_accounting_and_conserves_totals() {
+        let qos = QosConfig::default().with_weight("gold", 2.0);
+        let mut p = DevicePool::from_specs_qos(
+            vec![DeviceConfig::tesla_c2070(); 2],
+            PlacementPolicy::LeastLoaded,
+            qos,
+        )
+        .unwrap();
+        let from = p.place_as(1, "r0", "gold", 0).unwrap();
+        p.reserve_mem(from, 4096);
+        p.note_queued_as(from, "gold", 25.0);
+        let to = DeviceId(1 - from.0);
+        let got_from = p.note_migrated(1, "r0", to, 4096, 25.0).unwrap();
+        assert_eq!(got_from, from);
+        assert_eq!(p.placement(1), Some(to));
+        assert_eq!(p.tenant_of(1), Some("gold"), "attribution survives");
+        // Source fully drained; target carries everything.
+        assert_eq!(p.device(from).clients, 0);
+        assert_eq!(p.device(from).mem_used, 0);
+        assert_eq!(p.device(from).queued_ms, 0.0);
+        assert!(p.device(from).tenant_queued_ms.is_empty());
+        assert_eq!(p.device(to).clients, 1);
+        assert_eq!(p.device(to).mem_used, 4096);
+        assert_eq!(p.device(to).queued_ms, 25.0);
+        assert_eq!(p.device(to).tenant_queued_ms["gold"], 25.0);
+        assert_eq!(p.migrations(), 1);
+        // Completion on the new device retires the moved estimate.
+        p.note_done_as(to, "gold", 25.0, 24.0);
+        assert_eq!(p.device(to).queued_ms, 0.0);
+    }
+
+    #[test]
+    fn migration_rejects_bad_targets() {
+        let mut p = pool(2, PlacementPolicy::RoundRobin);
+        let from = p.place(1, "r0", 0).unwrap();
+        assert!(p.note_migrated(1, "r0", DeviceId(9), 0, 0.0).is_err());
+        assert!(p.note_migrated(1, "r0", from, 0, 0.0).is_err(), "self-move");
+        assert!(p.note_migrated(99, "x", DeviceId(0), 0, 0.0).is_err());
+        assert_eq!(p.migrations(), 0, "failed handshakes don't count");
+    }
+
+    #[test]
+    fn migration_never_overcommits_the_target() {
+        let mut p = pool(2, PlacementPolicy::RoundRobin);
+        let from = p.place(1, "r0", 0).unwrap();
+        p.reserve_mem(from, 4096);
+        let to = DeviceId(1 - from.0);
+        let cap = DeviceConfig::tesla_c2070().mem_bytes;
+        p.reserve_mem(to, cap - 100); // target has only 100 B free
+        let err = p.note_migrated(1, "r0", to, 4096, 0.0).unwrap_err();
+        assert!(matches!(err, crate::Error::Gvm(_)), "{err}");
+        assert_eq!(p.placement(1), Some(from), "binding untouched");
+        assert_eq!(p.device(from).mem_used, 4096, "accounting untouched");
+        assert_eq!(p.migrations(), 0);
+    }
+
+    #[test]
+    fn migration_updates_affinity_sticky_memory() {
+        let mut p = pool(2, PlacementPolicy::Affinity);
+        let from = p.place(1, "rank0", 0).unwrap();
+        let to = DeviceId(1 - from.0);
+        p.note_migrated(1, "rank0", to, 0, 0.0).unwrap();
+        p.release(1).unwrap();
+        // A re-registering rank follows the migration, not the old home.
+        assert_eq!(p.place(2, "rank0", 0).unwrap(), to);
     }
 
     #[test]

@@ -1,0 +1,583 @@
+//! The per-device execution engine: one `DeviceExecutor` worker thread
+//! per physical device, fed by the daemon's flush and reporting
+//! completions back over a channel — plus the live-migration policy
+//! ([`Rebalancer`]) that rides on top of it.
+//!
+//! Before this engine the daemon funneled every device's batch through a
+//! single shared [`ExecHandle`], so adding devices improved only the
+//! *simulated* timelines (the rCUDA-style claim the paper makes needs
+//! each physical GPU to service its own stream of work).  The
+//! [`ExecutorPool`] gives each pool entry its own submission queue and
+//! its own OS thread: batches for different devices drain concurrently,
+//! wall-clock node time approaches the max over devices instead of the
+//! sum, and the daemon's stats/per-tenant accounting update from real
+//! [`Completion`] events instead of inline bookkeeping.
+//!
+//! Within one device, submissions execute in the exact order the daemon
+//! submitted them (single worker per queue), so §4.2.3 plan order is
+//! preserved; across devices there is no ordering at all — exactly the
+//! concurrency model of N independent GPUs.
+//!
+//! Live VGPU migration builds on the same substrate: a
+//! [`MigrationPlan`] names a VGPU, its hot source device and an idle
+//! target; the daemon quiesces the source lane
+//! ([`ExecutorPool::drain`]), re-stages the VGPU's segment bytes onto
+//! the target, and rebinds through
+//! [`crate::gvm::devices::DevicePool::note_migrated`].  Plans come from
+//! an explicit `ClientMsg::Migrate` (the `vgpu migrate` CLI) or from the
+//! [`Rebalancer`], which watches per-executor queued load and drains
+//! low-weight tenants off hot devices first (QoS-aware migration).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::devices::{DeviceId, DevicePool};
+use super::qos::DEFAULT_TENANT;
+use super::vgpu::ClientId;
+use crate::runtime::{ExecHandle, TensorValue};
+use crate::{Error, Result};
+
+/// One job handed to a device executor by the daemon's flush.
+#[derive(Debug)]
+pub struct Submission {
+    /// Flush epoch the job belongs to (echoed on the [`Completion`]):
+    /// lets the submitter discard stale completions from a worker that
+    /// out-lived a drain timeout instead of mis-attributing them.
+    pub seq: u64,
+    /// Owning client (for completion routing).
+    pub client: ClientId,
+    /// Tenant the job is attributed to.
+    pub tenant: String,
+    /// Queue-load estimate recorded at STR time (retired on completion).
+    pub est_ms: f64,
+    /// Artifact to execute.
+    pub artifact: String,
+    /// Staged inputs, moved out of the client's segment.
+    pub inputs: Vec<TensorValue>,
+}
+
+/// A finished job, reported back over the completion channel.
+#[derive(Debug)]
+pub struct Completion {
+    /// Flush epoch echoed from the [`Submission`].
+    pub seq: u64,
+    /// Device the job ran on.
+    pub device: DeviceId,
+    /// Owning client.
+    pub client: ClientId,
+    /// Tenant attribution (mirrors the submission).
+    pub tenant: String,
+    /// Queue-load estimate to retire.
+    pub est_ms: f64,
+    /// Outputs + device wall time (ms) on success; the failure otherwise.
+    pub outcome: Result<(Vec<TensorValue>, f64)>,
+}
+
+/// One device's worker: submission queue + in-flight counter + thread.
+struct DeviceExecutor {
+    tx: mpsc::Sender<Submission>,
+    inflight: Arc<AtomicUsize>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// One worker thread per physical device, each owning its device's
+/// submission queue and draining it through its own [`ExecHandle`].
+///
+/// Build with [`ExecutorPool::new`] (one independent handle per device —
+/// true wall-clock concurrency) or [`ExecutorPool::replicated`] (one
+/// shared handle cloned per device — the pre-engine behaviour, where
+/// submission/accounting are per-device but the numerics still serialize
+/// at the shared device thread).
+pub struct ExecutorPool {
+    workers: Vec<DeviceExecutor>,
+    completion_rx: mpsc::Receiver<Completion>,
+}
+
+impl ExecutorPool {
+    /// Spawn one worker per handle.  Errors on an empty handle list.
+    pub fn new(handles: Vec<ExecHandle>) -> Result<Self> {
+        if handles.is_empty() {
+            return Err(Error::gvm("executor pool needs at least one device"));
+        }
+        let (completion_tx, completion_rx) = mpsc::channel::<Completion>();
+        let mut workers = Vec::with_capacity(handles.len());
+        for (i, exec) in handles.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<Submission>();
+            let inflight = Arc::new(AtomicUsize::new(0));
+            let worker_inflight = inflight.clone();
+            let worker_tx = completion_tx.clone();
+            let device = DeviceId(i);
+            let join = std::thread::Builder::new()
+                .name(format!("vgpu-exec-{i}"))
+                .spawn(move || {
+                    while let Ok(sub) = rx.recv() {
+                        let t0 = Instant::now();
+                        let outcome = exec
+                            .execute(&sub.artifact, sub.inputs)
+                            .map(|outs| {
+                                (outs, t0.elapsed().as_secs_f64() * 1e3)
+                            });
+                        let done = Completion {
+                            seq: sub.seq,
+                            device,
+                            client: sub.client,
+                            tenant: sub.tenant,
+                            est_ms: sub.est_ms,
+                            outcome,
+                        };
+                        worker_inflight.fetch_sub(1, Ordering::SeqCst);
+                        if worker_tx.send(done).is_err() {
+                            break; // pool gone; nobody to report to
+                        }
+                    }
+                })?;
+            workers.push(DeviceExecutor {
+                tx,
+                inflight,
+                join: Some(join),
+            });
+        }
+        Ok(Self {
+            workers,
+            completion_rx,
+        })
+    }
+
+    /// `n` workers over clones of one shared handle (numerics serialize
+    /// at the shared device thread; see [`ExecutorPool::new`]).
+    pub fn replicated(n: usize, handle: ExecHandle) -> Result<Self> {
+        Self::new(vec![handle; n.max(1)])
+    }
+
+    /// Device worker count.
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Always false (construction rejects empty pools); for clippy.
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    /// Hand one job to a device's queue.  The job will complete — the
+    /// worker reports every submission exactly once — unless the pool is
+    /// torn down first.
+    pub fn submit(&self, dev: DeviceId, sub: Submission) -> Result<()> {
+        let w = self.workers.get(dev.0).ok_or_else(|| {
+            Error::gvm(format!(
+                "submit to device {} of a {}-device executor pool",
+                dev.0,
+                self.workers.len()
+            ))
+        })?;
+        w.inflight.fetch_add(1, Ordering::SeqCst);
+        if w.tx.send(sub).is_err() {
+            w.inflight.fetch_sub(1, Ordering::SeqCst);
+            return Err(Error::Runtime(format!(
+                "device executor {} is gone",
+                dev.0
+            )));
+        }
+        Ok(())
+    }
+
+    /// Jobs submitted to a device and not yet executed.
+    pub fn inflight(&self, dev: DeviceId) -> usize {
+        self.workers
+            .get(dev.0)
+            .map(|w| w.inflight.load(Ordering::SeqCst))
+            .unwrap_or(0)
+    }
+
+    /// Wait for one completion (any device).
+    pub fn recv_completion(&self, timeout: Duration) -> Result<Completion> {
+        self.completion_rx.recv_timeout(timeout).map_err(|e| match e {
+            mpsc::RecvTimeoutError::Timeout => Error::Runtime(format!(
+                "no executor completion within {timeout:?}"
+            )),
+            mpsc::RecvTimeoutError::Disconnected => {
+                Error::Runtime("all device executors are gone".into())
+            }
+        })
+    }
+
+    /// Quiesce one device's lane: block until everything submitted to it
+    /// has executed (the migration handshake's drain step).  Errors if
+    /// the lane is still busy after `timeout`.
+    pub fn drain(&self, dev: DeviceId, timeout: Duration) -> Result<()> {
+        let t0 = Instant::now();
+        while self.inflight(dev) > 0 {
+            if t0.elapsed() > timeout {
+                return Err(Error::gvm(format!(
+                    "drain of device {} timed out after {timeout:?} \
+                     ({} jobs still in flight)",
+                    dev.0,
+                    self.inflight(dev)
+                )));
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ExecutorPool {
+    fn drop(&mut self) {
+        // Closing each submission channel ends its worker loop; join so
+        // no worker outlives the daemon that owns the accounting.
+        for w in self.workers.drain(..) {
+            let DeviceExecutor { tx, join, .. } = w;
+            drop(tx);
+            if let Some(j) = join {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// Live-migration tunables — the `[migration]` config-file section.
+#[derive(Debug, Clone)]
+pub struct MigrationConfig {
+    /// Run the [`Rebalancer`] at every flush (explicit `Migrate`
+    /// requests work regardless).
+    pub enabled: bool,
+    /// A device whose estimated queued work exceeds this is *hot* and a
+    /// candidate source for automatic drains (ms).
+    pub hot_threshold_ms: f64,
+    /// Max wait for a source executor lane to quiesce before a rebind.
+    pub drain_timeout: Duration,
+    /// Cap on automatic migrations per flush (keeps rebalancing from
+    /// thrashing placements under bursty load).
+    pub max_moves_per_flush: usize,
+}
+
+impl Default for MigrationConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            hot_threshold_ms: 250.0,
+            drain_timeout: Duration::from_secs(5),
+            max_moves_per_flush: 2,
+        }
+    }
+}
+
+/// One planned rebind: drain `client` off `from`, re-stage on `to`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrationPlan {
+    /// The VGPU to move.
+    pub client: ClientId,
+    /// Current (hot) device.
+    pub from: DeviceId,
+    /// Target (cooler) device.
+    pub to: DeviceId,
+    /// Tenant attribution (lowest weights drain first).
+    pub tenant: String,
+    /// Queued-work estimate that moves with the VGPU (ms).
+    pub queued_est_ms: f64,
+}
+
+/// The automatic-migration policy: watch per-executor queued load and
+/// drain low-weight tenants off hot devices first.
+///
+/// Each planning round moves one queued VGPU from the hottest device to
+/// the coolest, choosing the candidate whose tenant has the *lowest* QoS
+/// weight (high-weight tenants keep their warm placement — the QoS-aware
+/// follow-up from the per-tenant-shares work) and only when the move
+/// strictly improves the spread, so plans never ping-pong.
+#[derive(Debug, Clone)]
+pub struct Rebalancer {
+    cfg: MigrationConfig,
+}
+
+impl Rebalancer {
+    /// Policy over a tunable set.
+    pub fn new(cfg: MigrationConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Plan up to `max_moves_per_flush` rebinds over the pool's current
+    /// load view.  `queued` lists the clients with jobs behind the
+    /// barrier as `(client, est_ms, seg_bytes)` — only queued VGPUs move
+    /// (an idle VGPU has nothing to gain and its next cycle re-places
+    /// anyway), and only onto devices with room for their segment.
+    pub fn plan(
+        &self,
+        pool: &DevicePool,
+        queued: &[(ClientId, f64, u64)],
+    ) -> Vec<MigrationPlan> {
+        if !self.cfg.enabled || pool.len() < 2 || queued.is_empty() {
+            return Vec::new();
+        }
+        // Working copy of per-device queued load, updated per move.
+        let mut load: Vec<f64> = (0..pool.len())
+            .map(|i| pool.device(DeviceId(i)).queued_ms)
+            .collect();
+        struct Cand {
+            client: ClientId,
+            est_ms: f64,
+            seg_bytes: u64,
+            tenant: String,
+            dev: usize,
+            weight: f64,
+        }
+        // Candidates sorted low-weight-first (ties: stable by client id).
+        let mut cands: Vec<Cand> = queued
+            .iter()
+            .filter_map(|&(client, est_ms, seg_bytes)| {
+                let dev = pool.placement(client)?;
+                let tenant = pool
+                    .tenant_of(client)
+                    .unwrap_or(DEFAULT_TENANT)
+                    .to_string();
+                let weight = pool.qos().weight(&tenant);
+                Some(Cand {
+                    client,
+                    est_ms,
+                    seg_bytes,
+                    tenant,
+                    dev: dev.0,
+                    weight,
+                })
+            })
+            .collect();
+        cands.sort_by(|a, b| {
+            a.weight
+                .partial_cmp(&b.weight)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.client.cmp(&b.client))
+        });
+
+        let mut plans = Vec::new();
+        for _ in 0..self.cfg.max_moves_per_flush {
+            let hot = (0..load.len())
+                .max_by(|&a, &b| {
+                    load[a]
+                        .partial_cmp(&load[b])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .unwrap_or(0);
+            let cold = (0..load.len())
+                .min_by(|&a, &b| {
+                    load[a]
+                        .partial_cmp(&load[b])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .unwrap_or(0);
+            if hot == cold || load[hot] <= self.cfg.hot_threshold_ms {
+                break;
+            }
+            let gap = load[hot] - load[cold];
+            let cold_free = pool.device(DeviceId(cold)).mem_free();
+            // Lowest-weight queued VGPU on the hot device whose move
+            // strictly narrows the spread and whose segment fits the
+            // target (the placement-time capacity invariant must
+            // survive migration).
+            let pick = cands.iter().position(|c| {
+                c.dev == hot
+                    && c.est_ms > 0.0
+                    && c.est_ms < gap
+                    && c.seg_bytes <= cold_free
+            });
+            let Some(i) = pick else { break };
+            let c = cands.remove(i);
+            load[hot] -= c.est_ms;
+            load[cold] += c.est_ms;
+            plans.push(MigrationPlan {
+                client: c.client,
+                from: DeviceId(hot),
+                to: DeviceId(cold),
+                tenant: c.tenant,
+                queued_est_ms: c.est_ms,
+            });
+        }
+        plans
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceConfig;
+    use crate::gvm::devices::PlacementPolicy;
+    use crate::gvm::qos::QosConfig;
+
+    fn sleepy_handle(ms: u64) -> ExecHandle {
+        ExecHandle::mock(vec!["w".into()], move |_, inputs| {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(inputs)
+        })
+    }
+
+    fn sub(client: ClientId) -> Submission {
+        Submission {
+            seq: 1,
+            client,
+            tenant: DEFAULT_TENANT.into(),
+            est_ms: 1.0,
+            artifact: "w".into(),
+            inputs: vec![],
+        }
+    }
+
+    #[test]
+    fn every_submission_completes_exactly_once() {
+        let pool =
+            ExecutorPool::new(vec![sleepy_handle(0), sleepy_handle(0)]).unwrap();
+        for i in 0..6u64 {
+            pool.submit(DeviceId((i % 2) as usize), sub(i)).unwrap();
+        }
+        let mut seen = Vec::new();
+        for _ in 0..6 {
+            let c = pool.recv_completion(Duration::from_secs(5)).unwrap();
+            assert!(c.outcome.is_ok());
+            seen.push(c.client);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..6).collect::<Vec<u64>>());
+        assert_eq!(pool.inflight(DeviceId(0)), 0);
+        assert_eq!(pool.inflight(DeviceId(1)), 0);
+    }
+
+    #[test]
+    fn one_device_preserves_submission_order() {
+        let pool = ExecutorPool::new(vec![sleepy_handle(0)]).unwrap();
+        for i in 0..8u64 {
+            pool.submit(DeviceId(0), sub(i)).unwrap();
+        }
+        for want in 0..8u64 {
+            let c = pool.recv_completion(Duration::from_secs(5)).unwrap();
+            assert_eq!(c.client, want, "per-device order must be FIFO");
+        }
+    }
+
+    #[test]
+    fn independent_queues_drain_concurrently() {
+        // 4 workers x 1 sleep(60ms) job each: serialized would be
+        // ~240 ms; concurrent is ~60 ms.  Assert well under the sum.
+        let handles: Vec<ExecHandle> = (0..4).map(|_| sleepy_handle(60)).collect();
+        let pool = ExecutorPool::new(handles).unwrap();
+        let t0 = Instant::now();
+        for i in 0..4u64 {
+            pool.submit(DeviceId(i as usize), sub(i)).unwrap();
+        }
+        for _ in 0..4 {
+            pool.recv_completion(Duration::from_secs(5)).unwrap();
+        }
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < Duration::from_millis(180),
+            "4 workers took {elapsed:?}; serialized sum would be ~240ms"
+        );
+    }
+
+    #[test]
+    fn drain_waits_for_the_lane() {
+        let pool = ExecutorPool::new(vec![sleepy_handle(30)]).unwrap();
+        pool.submit(DeviceId(0), sub(1)).unwrap();
+        pool.drain(DeviceId(0), Duration::from_secs(5)).unwrap();
+        assert_eq!(pool.inflight(DeviceId(0)), 0);
+        // The completion is still delivered after the drain.
+        assert!(pool.recv_completion(Duration::from_secs(1)).is_ok());
+    }
+
+    #[test]
+    fn submit_out_of_range_is_an_error() {
+        let pool = ExecutorPool::new(vec![sleepy_handle(0)]).unwrap();
+        assert!(pool.submit(DeviceId(3), sub(1)).is_err());
+    }
+
+    fn rebalance_pool(qos: QosConfig) -> DevicePool {
+        DevicePool::from_specs_qos(
+            vec![DeviceConfig::tesla_c2070(); 2],
+            PlacementPolicy::RoundRobin,
+            qos,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn rebalancer_drains_low_weight_tenant_first() {
+        let qos = QosConfig::default()
+            .with_weight("gold", 4.0)
+            .with_weight("bronze", 1.0);
+        let mut pool = rebalance_pool(qos);
+        // Both tenants land on device 0 (round-robin, then rebind).
+        let d0 = pool.place_as(1, "g", "gold", 0).unwrap();
+        let moved = pool.place_as(2, "b", "bronze", 0).unwrap();
+        if moved != d0 {
+            pool.note_migrated(2, "b", d0, 0, 0.0).unwrap();
+        }
+        pool.note_queued_as(d0, "gold", 30.0);
+        pool.note_queued_as(d0, "bronze", 30.0);
+        let reb = Rebalancer::new(MigrationConfig {
+            enabled: true,
+            hot_threshold_ms: 5.0,
+            ..MigrationConfig::default()
+        });
+        let plans = reb.plan(&pool, &[(1, 30.0, 0), (2, 30.0, 0)]);
+        assert_eq!(plans.len(), 1, "{plans:?}");
+        assert_eq!(plans[0].tenant, "bronze", "lowest weight drains first");
+        assert_eq!(plans[0].from, d0);
+        assert_ne!(plans[0].to, d0);
+    }
+
+    #[test]
+    fn rebalancer_skips_targets_without_segment_room() {
+        let mut pool = rebalance_pool(QosConfig::default());
+        let d0 = pool.place(1, "a", 0).unwrap();
+        pool.note_queued(d0, 100.0);
+        let cold = DeviceId(1 - d0.0);
+        // The only cooler device cannot hold the candidate's segment.
+        let cap = DeviceConfig::tesla_c2070().mem_bytes;
+        pool.reserve_mem(cold, cap - 100);
+        let reb = Rebalancer::new(MigrationConfig {
+            enabled: true,
+            hot_threshold_ms: 5.0,
+            ..MigrationConfig::default()
+        });
+        assert!(reb.plan(&pool, &[(1, 100.0, 4096)]).is_empty());
+        // With room, the same candidate moves.
+        pool.free_mem(cold, cap - 100);
+        assert_eq!(reb.plan(&pool, &[(1, 100.0, 4096)]).len(), 1);
+    }
+
+    #[test]
+    fn rebalancer_respects_threshold_and_disabled() {
+        let mut pool = rebalance_pool(QosConfig::default());
+        let d0 = pool.place(1, "a", 0).unwrap();
+        pool.note_queued(d0, 100.0);
+        let cold = Rebalancer::new(MigrationConfig {
+            enabled: true,
+            hot_threshold_ms: 1000.0, // nothing is hot
+            ..MigrationConfig::default()
+        });
+        assert!(cold.plan(&pool, &[(1, 100.0, 0)]).is_empty());
+        let off = Rebalancer::new(MigrationConfig {
+            enabled: false,
+            hot_threshold_ms: 1.0,
+            ..MigrationConfig::default()
+        });
+        assert!(off.plan(&pool, &[(1, 100.0, 0)]).is_empty());
+    }
+
+    #[test]
+    fn rebalancer_never_ping_pongs() {
+        // One queued job bigger than the gap must not move.
+        let mut pool = rebalance_pool(QosConfig::default());
+        let d0 = pool.place(1, "a", 0).unwrap();
+        pool.note_queued(d0, 40.0);
+        let other = DeviceId(1 - d0.0);
+        pool.note_queued(other, 30.0);
+        let reb = Rebalancer::new(MigrationConfig {
+            enabled: true,
+            hot_threshold_ms: 5.0,
+            ..MigrationConfig::default()
+        });
+        // est 40 >= gap 10: moving would just swap hot and cold.
+        assert!(reb.plan(&pool, &[(1, 40.0, 0)]).is_empty());
+    }
+}

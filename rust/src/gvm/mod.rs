@@ -15,10 +15,16 @@
 //! `REQ` carries a tenant id, placement can normalize device load by
 //! tenant weight, and every per-device batch drains through a
 //! weighted-deficit queue so configured weight ratios become batch
-//! service ratios.
+//! service ratios.  The [`exec`] engine gives each physical device its
+//! own executor worker thread (batches execute concurrently in
+//! wall-clock time, completions report back over a channel) and hosts
+//! live VGPU migration: a drain/rebind handshake triggered explicitly
+//! (`ClientMsg::Migrate`, `vgpu migrate`) or by the QoS-aware
+//! [`exec::Rebalancer`].
 
 pub mod daemon;
 pub mod devices;
+pub mod exec;
 pub mod plan;
 pub mod qos;
 pub mod scheduler;
@@ -27,6 +33,9 @@ pub mod vgpu;
 
 pub use daemon::{Command, Daemon, DaemonConfig};
 pub use devices::{DevicePool, PlacementPolicy, PoolConfig};
+pub use exec::{
+    ExecutorPool, MigrationConfig, MigrationPlan, Rebalancer, Submission,
+};
 pub use plan::{CtxMode, Job, Plan, PlanOp};
 pub use qos::{QosConfig, TenantShare, WeightedDeficitQueue};
 pub use scheduler::{plan_batch, Policy, StyleRule};
@@ -67,33 +76,59 @@ impl Default for GvmConfig {
     }
 }
 
-/// A running GVM: device thread + daemon thread.
+/// A running GVM: one device thread per pool entry + daemon thread.
 pub struct Gvm {
     cmd_tx: mpsc::Sender<Command>,
-    // Kept alive for the daemon's lifetime.
-    _device: DeviceThread,
+    // Kept alive for the daemon's lifetime (one per physical device —
+    // the executor engine drains each through its own worker).
+    _devices: Vec<DeviceThread>,
     daemon_join: Option<JoinHandle<()>>,
     /// Serializes connect() id assignment.
     _connect_lock: Arc<Mutex<()>>,
 }
 
 impl Gvm {
-    /// Launch the GVM: spin up the PJRT device thread, preload kernels,
-    /// start the daemon loop.
+    /// Launch the GVM: spin up one PJRT device thread *per pool entry*
+    /// (so the executor engine's per-device workers drain genuinely
+    /// independent substrates), preload kernels on each, start the
+    /// daemon loop.
     pub fn launch(cfg: GvmConfig) -> Result<Self> {
-        let device = DeviceThread::spawn(cfg.artifacts_dir.clone())?;
-        let exec = device.handle();
-        for name in &cfg.preload {
-            exec.preload(name)?;
+        let n_devices = cfg.daemon.pool.build_specs()?.len();
+        // Spawn + preload every device substrate concurrently: each
+        // device's setup (runtime init, kernel compiles) is independent,
+        // so launch latency stays ~flat in the pool size.
+        let preload = Arc::new(cfg.preload.clone());
+        let spawners: Vec<_> = (0..n_devices)
+            .map(|_| {
+                let dir = cfg.artifacts_dir.clone();
+                let preload = preload.clone();
+                std::thread::spawn(move || -> Result<DeviceThread> {
+                    let device = DeviceThread::spawn(dir)?;
+                    let exec = device.handle();
+                    for name in preload.iter() {
+                        exec.preload(name)?;
+                    }
+                    Ok(device)
+                })
+            })
+            .collect();
+        let mut devices = Vec::with_capacity(n_devices);
+        let mut handles = Vec::with_capacity(n_devices);
+        for s in spawners {
+            let device = s.join().map_err(|_| {
+                Error::Runtime("device spawner thread panicked".into())
+            })??;
+            handles.push(device.handle());
+            devices.push(device);
         }
         let (cmd_tx, cmd_rx) = mpsc::channel::<Command>();
-        let daemon = Daemon::new(cfg.daemon.clone(), exec);
+        let daemon = Daemon::with_handles(cfg.daemon.clone(), handles)?;
         let daemon_join = std::thread::Builder::new()
             .name("vgpu-gvm".into())
             .spawn(move || daemon.run(cmd_rx))?;
         Ok(Self {
             cmd_tx,
-            _device: device,
+            _devices: devices,
             daemon_join: Some(daemon_join),
             _connect_lock: Arc::new(Mutex::new(())),
         })

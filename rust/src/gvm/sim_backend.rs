@@ -164,6 +164,14 @@ impl PoolTiming {
     pub fn utilizations(&self) -> Vec<f64> {
         self.per_device.iter().map(|(_, t)| t.utilization()).collect()
     }
+
+    /// Sum of per-device makespans — what one shared executor draining
+    /// the same per-device batches back-to-back would take.  The ratio
+    /// `serialized_ms() / total_ms` is the executor engine's parallel
+    /// speedup (reported by `vgpu exp multi-gpu-cluster`).
+    pub fn serialized_ms(&self) -> f64 {
+        self.per_device.iter().map(|(_, t)| t.total_ms).sum()
+    }
 }
 
 /// Place `n` SPMD instances of `w` across a device pool (one synthetic

@@ -292,6 +292,20 @@ impl VgpuTable {
         q.into_iter().map(|(id, _, w)| (id, w)).collect()
     }
 
+    /// Live clients registered under a rank name, in id order (names
+    /// are client-supplied and may collide — admin verbs like `Migrate`
+    /// act on all of them).
+    pub fn clients_named(&self, name: &str) -> Vec<ClientId> {
+        let mut ids: Vec<ClientId> = self
+            .vgpus
+            .iter()
+            .filter(|(_, v)| v.name == name)
+            .map(|(id, _)| *id)
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
     /// Registered client count.
     pub fn len(&self) -> usize {
         self.vgpus.len()

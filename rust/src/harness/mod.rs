@@ -26,6 +26,7 @@
 //! | ablation-barrier | barrier vs immediate flush |
 //! | ablation-policy | paper policy vs model-optimal rule |
 //! | multi-gpu | device pool: procs x devices x placement policy |
+//! | multi-gpu-cluster | thin/fat node mixes x placement, executor makespan |
 //! | qos     | per-tenant QoS: weights x policies, achieved shares |
 //! | ext-multigpu | extension: multi-GPU node scaling |
 //! | ext-cluster | extension: cluster weak scaling (Fig. 11) |
@@ -97,6 +98,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "ablation-barrier",
     "ablation-policy",
     "multi-gpu",
+    "multi-gpu-cluster",
     "qos",
     "ext-multigpu",
     "ext-cluster",
@@ -126,6 +128,7 @@ pub fn run(id: &str) -> Result<ExpOutput> {
         "ablation-barrier" => ablations::barrier_vs_immediate(),
         "ablation-policy" => ablations::policy_rule_comparison(),
         "multi-gpu" => devices::multi_gpu_pool(),
+        "multi-gpu-cluster" => devices::multi_gpu_cluster(),
         "qos" => qos::qos_sweep(),
         "ext-multigpu" => ablations::multi_gpu_scaling(),
         "ext-cluster" => ablations::cluster_scaling(),

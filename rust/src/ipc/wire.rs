@@ -51,6 +51,34 @@ pub enum ClientMsg {
     /// Query the physical device pool and this VGPU's placement
     /// (multi-GPU observability extension).
     DevInfo,
+    /// Live-migration request (executor-engine extension): drain a VGPU
+    /// off its current device and rebind it to `target`.
+    Migrate {
+        /// Rank name to migrate (empty = the requesting client's own
+        /// VGPU; a name moves *every* live VGPU registered under it —
+        /// the admin form used by `vgpu migrate`).
+        name: String,
+        /// Target device index (`u32::MAX` = auto: coolest other
+        /// device).
+        target: u32,
+    },
+}
+
+/// Per-tenant counter row carried by [`ServerMsg::Stats`] — fed by the
+/// executor engine's completion events (see [`crate::gvm::exec`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantStatsEntry {
+    /// Tenant id.
+    pub tenant: String,
+    /// Jobs completed successfully for this tenant.
+    pub jobs_ok: u64,
+    /// Jobs failed for this tenant.
+    pub jobs_failed: u64,
+    /// Cumulative device execution time attributed to this tenant (ms).
+    pub device_ms: f64,
+    /// VGPU migrations (explicit or rebalancer-driven) of this tenant's
+    /// clients.
+    pub migrations: u64,
 }
 
 /// Per-device status row carried by [`ServerMsg::Devices`].
@@ -112,6 +140,9 @@ pub enum ServerMsg {
         device_ms: f64,
         /// Currently registered clients.
         clients: u32,
+        /// Per-tenant counters, in tenant-id order (completion-event
+        /// fed; empty until a tenant registers).
+        tenants: Vec<TenantStatsEntry>,
     },
     /// Device-pool snapshot (DevInfo response).
     Devices {
@@ -119,6 +150,13 @@ pub enum ServerMsg {
         self_device: u32,
         /// Per-device status, by device id.
         devices: Vec<DeviceEntry>,
+    },
+    /// Migration response: how many VGPUs were rebound and where.
+    Migrated {
+        /// VGPUs drained and rebound.
+        moved: u32,
+        /// Device index the (last) VGPU landed on.
+        device: u32,
     },
 }
 
@@ -167,6 +205,11 @@ impl ClientMsg {
             ClientMsg::Rls => out.push(5),
             ClientMsg::Stats => out.push(6),
             ClientMsg::DevInfo => out.push(7),
+            ClientMsg::Migrate { name, target } => {
+                out.push(8);
+                put_str(name, &mut out);
+                out.extend_from_slice(&target.to_le_bytes());
+            }
         }
         out
     }
@@ -198,6 +241,10 @@ impl ClientMsg {
             5 => ClientMsg::Rls,
             6 => ClientMsg::Stats,
             7 => ClientMsg::DevInfo,
+            8 => ClientMsg::Migrate {
+                name: get_str(buf, &mut pos)?,
+                target: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
+            },
             t => return Err(Error::Ipc(format!("bad client tag {t}"))),
         };
         Ok(msg)
@@ -234,6 +281,7 @@ impl ServerMsg {
                 bytes_staged,
                 device_ms,
                 clients,
+                tenants,
             } => {
                 out.push(5);
                 out.extend_from_slice(&batches.to_le_bytes());
@@ -242,6 +290,14 @@ impl ServerMsg {
                 out.extend_from_slice(&bytes_staged.to_le_bytes());
                 out.extend_from_slice(&device_ms.to_le_bytes());
                 out.extend_from_slice(&clients.to_le_bytes());
+                out.extend_from_slice(&(tenants.len() as u32).to_le_bytes());
+                for t in tenants {
+                    put_str(&t.tenant, &mut out);
+                    out.extend_from_slice(&t.jobs_ok.to_le_bytes());
+                    out.extend_from_slice(&t.jobs_failed.to_le_bytes());
+                    out.extend_from_slice(&t.device_ms.to_le_bytes());
+                    out.extend_from_slice(&t.migrations.to_le_bytes());
+                }
             }
             ServerMsg::Devices {
                 self_device,
@@ -258,6 +314,11 @@ impl ServerMsg {
                     out.extend_from_slice(&d.jobs_done.to_le_bytes());
                     out.extend_from_slice(&d.busy_ms.to_le_bytes());
                 }
+            }
+            ServerMsg::Migrated { moved, device } => {
+                out.push(7);
+                out.extend_from_slice(&moved.to_le_bytes());
+                out.extend_from_slice(&device.to_le_bytes());
             }
         }
         out
@@ -286,14 +347,41 @@ impl ServerMsg {
             4 => ServerMsg::Err {
                 msg: get_str(buf, &mut pos)?,
             },
-            5 => ServerMsg::Stats {
-                batches: read_u64(buf, &mut pos)?,
-                jobs_ok: read_u64(buf, &mut pos)?,
-                jobs_failed: read_u64(buf, &mut pos)?,
-                bytes_staged: read_u64(buf, &mut pos)?,
-                device_ms: f64::from_le_bytes(read_arr::<8>(buf, &mut pos)?),
-                clients: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
-            },
+            5 => {
+                let batches = read_u64(buf, &mut pos)?;
+                let jobs_ok = read_u64(buf, &mut pos)?;
+                let jobs_failed = read_u64(buf, &mut pos)?;
+                let bytes_staged = read_u64(buf, &mut pos)?;
+                let device_ms = f64::from_le_bytes(read_arr::<8>(buf, &mut pos)?);
+                let clients = u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
+                let n = u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
+                if n > 4096 {
+                    return Err(Error::Ipc(format!(
+                        "implausible tenant count {n}"
+                    )));
+                }
+                let mut tenants = Vec::with_capacity(n as usize);
+                for _ in 0..n {
+                    tenants.push(TenantStatsEntry {
+                        tenant: get_str(buf, &mut pos)?,
+                        jobs_ok: read_u64(buf, &mut pos)?,
+                        jobs_failed: read_u64(buf, &mut pos)?,
+                        device_ms: f64::from_le_bytes(read_arr::<8>(
+                            buf, &mut pos,
+                        )?),
+                        migrations: read_u64(buf, &mut pos)?,
+                    });
+                }
+                ServerMsg::Stats {
+                    batches,
+                    jobs_ok,
+                    jobs_failed,
+                    bytes_staged,
+                    device_ms,
+                    clients,
+                    tenants,
+                }
+            }
             6 => {
                 let self_device = u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
                 let n = u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
@@ -316,6 +404,10 @@ impl ServerMsg {
                     devices,
                 }
             }
+            7 => ServerMsg::Migrated {
+                moved: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
+                device: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
+            },
             t => return Err(Error::Ipc(format!("bad server tag {t}"))),
         };
         Ok(msg)
@@ -356,6 +448,14 @@ mod tests {
         roundtrip_c(ClientMsg::Rls);
         roundtrip_c(ClientMsg::Stats);
         roundtrip_c(ClientMsg::DevInfo);
+        roundtrip_c(ClientMsg::Migrate {
+            name: String::new(),
+            target: u32::MAX,
+        });
+        roundtrip_c(ClientMsg::Migrate {
+            name: "rank3".into(),
+            target: 1,
+        });
     }
 
     #[test]
@@ -379,6 +479,35 @@ mod tests {
             bytes_staged: 1 << 30,
             device_ms: 123.5,
             clients: 8,
+            tenants: vec![],
+        });
+        roundtrip_s(ServerMsg::Stats {
+            batches: 3,
+            jobs_ok: 24,
+            jobs_failed: 1,
+            bytes_staged: 1 << 30,
+            device_ms: 123.5,
+            clients: 8,
+            tenants: vec![
+                TenantStatsEntry {
+                    tenant: "gold".into(),
+                    jobs_ok: 18,
+                    jobs_failed: 0,
+                    device_ms: 99.25,
+                    migrations: 2,
+                },
+                TenantStatsEntry {
+                    tenant: "bronze".into(),
+                    jobs_ok: 6,
+                    jobs_failed: 1,
+                    device_ms: 24.25,
+                    migrations: 0,
+                },
+            ],
+        });
+        roundtrip_s(ServerMsg::Migrated {
+            moved: 2,
+            device: 1,
         });
         roundtrip_s(ServerMsg::Devices {
             self_device: 1,

@@ -18,6 +18,10 @@
 //!   placement policies and per-device batch queues.
 //! * [`gvm::qos`] — per-tenant quality of service: share weights and
 //!   rate limits that shape both placement and batch service order.
+//! * [`gvm::exec`] — the per-device executor engine: one worker thread
+//!   per physical device draining its own submission queue (wall-clock
+//!   concurrency, completion-event accounting), plus live VGPU
+//!   migration and the QoS-aware rebalancer.
 //! * [`api`] — the client-side VGPU handle implementing the paper's
 //!   `REQ/SND/STR/STP/RCV/RLS` protocol.
 //! * [`ipc`] — wire protocol + transports (unix socket, in-process).
@@ -91,6 +95,23 @@
 //! let mut v = gvm.connect_as("rank0", "interactive").unwrap();
 //! # let _ = &mut v;
 //! ```
+//!
+//! ## Per-device execution + live migration
+//!
+//! The [`gvm::exec`] engine gives every pool entry its own executor
+//! worker thread (and [`Gvm::launch`](gvm::Gvm::launch) spawns one PJRT
+//! device thread per entry), so per-device batches drain concurrently
+//! in *wall-clock* time — node turnaround approaches the max over
+//! devices, not the sum — and all accounting updates from real
+//! completion events.  On top of it, a VGPU can be **live-migrated**
+//! between devices mid-stream: a drain/rebind handshake that conserves
+//! staged segments and queued batches, triggered explicitly
+//! (`vgpu migrate <rank> --socket PATH [--to DEV]`,
+//! [`api::VgpuClient::migrate`]) or automatically by the
+//! [`gvm::exec::Rebalancer`] (`[migration]` config section), which
+//! drains low-weight tenants off hot devices first.  Compare engine
+//! throughput with `cargo bench --bench executor`, and sweep thin/fat
+//! cluster mixes with `vgpu exp multi-gpu-cluster`.
 //!
 //! Architecture and configuration reference: `docs/ARCHITECTURE.md` and
 //! `docs/CONFIG.md` at the repository root.

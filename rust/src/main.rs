@@ -50,6 +50,35 @@ fn dispatch(cmd: Cmd) -> Result<()> {
             barrier,
             config,
         } => cmd_serve(&socket, barrier, config.as_deref()),
+        Cmd::Migrate {
+            socket,
+            name,
+            target,
+        } => cmd_migrate(&socket, &name, target),
+    }
+}
+
+/// Admin verb: ask a served GVM to drain `name`'s VGPU(s) off their
+/// current device and rebind them (`--to DEV`, or the coolest other
+/// device).  Talks the raw wire protocol — no REQ handshake, so it never
+/// occupies a VGPU slot itself.
+fn cmd_migrate(socket: &str, name: &str, target: Option<u32>) -> Result<()> {
+    use vgpu::ipc::transport::{Transport, UnixTransport};
+    use vgpu::ipc::{ClientMsg, ServerMsg};
+    let mut t = UnixTransport::connect(socket)?;
+    let reply = t.call(ClientMsg::Migrate {
+        name: name.to_string(),
+        target: target.unwrap_or(u32::MAX),
+    })?;
+    match reply {
+        ServerMsg::Migrated { moved, device } => {
+            println!(
+                "migrated {moved} VGPU(s) named {name:?} -> device {device}"
+            );
+            Ok(())
+        }
+        ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
+        other => Err(Error::Ipc(format!("expected Migrated, got {other:?}"))),
     }
 }
 

@@ -1,0 +1,256 @@
+//! Executor-engine integration tests: the daemon drains per-device
+//! batches through independent worker threads (wall-clock concurrency),
+//! accounting moves to the completion path (a failed job never counts
+//! as serviced), and per-tenant counters ride the Stats wire message.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use vgpu::config::DeviceConfig;
+use vgpu::gvm::devices::{PlacementPolicy, PoolConfig};
+use vgpu::gvm::qos::QosConfig;
+use vgpu::gvm::{Command, Daemon, DaemonConfig};
+use vgpu::ipc::{ClientMsg, ServerMsg};
+use vgpu::runtime::{ExecHandle, TensorValue};
+use vgpu::Error;
+
+fn call(tx: &mpsc::Sender<Command>, client: u64, msg: ClientMsg) -> ServerMsg {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Command {
+        client,
+        msg,
+        reply: rtx,
+    })
+    .unwrap();
+    rrx.recv().unwrap()
+}
+
+fn register_as(tx: &mpsc::Sender<Command>, name: &str, tenant: &str) -> u64 {
+    match call(
+        tx,
+        0,
+        ClientMsg::Req {
+            name: name.into(),
+            tenant: tenant.into(),
+        },
+    ) {
+        ServerMsg::Queued { ticket } => ticket,
+        other => panic!("bad REQ reply {other:?}"),
+    }
+}
+
+fn t4() -> TensorValue {
+    TensorValue::F32(vec![4], vec![1.0, 2.0, 3.0, 4.0])
+}
+
+/// One sleepy mock handle (its own background thread — a stand-in for
+/// one physical device's substrate).
+fn sleepy_handle(ms: u64) -> ExecHandle {
+    ExecHandle::mock(vec!["sleepy".into()], move |_, inputs| {
+        std::thread::sleep(Duration::from_millis(ms));
+        Ok(vec![inputs[0].clone()])
+    })
+}
+
+/// ISSUE acceptance: N=4 device workers drain independent queues
+/// concurrently — wall-clock well under the serialized sum on a
+/// sleep-backed workload.
+#[test]
+fn four_device_workers_beat_the_serialized_sum() {
+    const SLEEP_MS: u64 = 60;
+    let handles: Vec<ExecHandle> = (0..4).map(|_| sleepy_handle(SLEEP_MS)).collect();
+    let cfg = DaemonConfig {
+        barrier: Some(4),
+        barrier_timeout: Duration::from_secs(5),
+        pool: PoolConfig::homogeneous(
+            4,
+            DeviceConfig::tesla_c2070(),
+            PlacementPolicy::RoundRobin,
+        ),
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::with_handles(cfg, handles).unwrap();
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+
+    let ids: Vec<u64> = (0..4)
+        .map(|i| register_as(&tx, &format!("rank{i}"), ""))
+        .collect();
+    for &id in &ids {
+        call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+    }
+    let t0 = Instant::now();
+    for &id in &ids {
+        assert!(matches!(
+            call(&tx, id, ClientMsg::Str { workload: "sleepy".into() }),
+            ServerMsg::Queued { .. }
+        ));
+    }
+    for &id in &ids {
+        assert!(matches!(call(&tx, id, ClientMsg::Stp), ServerMsg::Done { .. }));
+    }
+    let elapsed = t0.elapsed();
+    let serialized = Duration::from_millis(4 * SLEEP_MS);
+    assert!(
+        elapsed < serialized * 3 / 4,
+        "4-device flush took {elapsed:?}; serialized sum is {serialized:?}"
+    );
+}
+
+/// With one handle per device the same batch through ONE device is the
+/// serialized sum — sanity check that the previous test measured engine
+/// concurrency, not mock cheapness.
+#[test]
+fn single_device_pays_the_serialized_sum() {
+    const SLEEP_MS: u64 = 30;
+    let cfg = DaemonConfig {
+        barrier: Some(4),
+        barrier_timeout: Duration::from_secs(5),
+        pool: PoolConfig::homogeneous(
+            1,
+            DeviceConfig::tesla_c2070(),
+            PlacementPolicy::RoundRobin,
+        ),
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::with_handles(cfg, vec![sleepy_handle(SLEEP_MS)]).unwrap();
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+
+    let ids: Vec<u64> = (0..4)
+        .map(|i| register_as(&tx, &format!("rank{i}"), ""))
+        .collect();
+    for &id in &ids {
+        call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+    }
+    let t0 = Instant::now();
+    for &id in &ids {
+        call(&tx, id, ClientMsg::Str { workload: "sleepy".into() });
+    }
+    for &id in &ids {
+        assert!(matches!(call(&tx, id, ClientMsg::Stp), ServerMsg::Done { .. }));
+    }
+    assert!(
+        t0.elapsed() >= Duration::from_millis(4 * SLEEP_MS),
+        "one worker cannot beat 4 serial sleeps"
+    );
+}
+
+/// Daemon over a mock that fails on the "fail" artifact.
+fn failing_daemon() -> mpsc::Sender<Command> {
+    let exec = ExecHandle::mock(
+        vec!["double".into(), "fail".into()],
+        |name, inputs| {
+            if name == "fail" {
+                return Err(Error::Runtime("injected failure".into()));
+            }
+            Ok(vec![inputs[0].clone()])
+        },
+    );
+    let cfg = DaemonConfig {
+        barrier: Some(1),
+        barrier_timeout: Duration::from_millis(50),
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::new(cfg, exec);
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+    tx
+}
+
+/// Regression (ISSUE satellite): done counters move on the completion
+/// path — a failed batch retires its queue estimate but never increments
+/// `jobs_done`/`jobs_ok`/`busy_ms`.
+#[test]
+fn failed_batch_never_increments_done_counters() {
+    let tx = failing_daemon();
+    let id = register_as(&tx, "a", "");
+    call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+    call(&tx, id, ClientMsg::Str { workload: "fail".into() });
+    assert!(matches!(call(&tx, id, ClientMsg::Stp), ServerMsg::Err { .. }));
+    match call(&tx, id, ClientMsg::DevInfo) {
+        ServerMsg::Devices { devices, .. } => {
+            assert_eq!(devices[0].jobs_done, 0, "failed job counted as done");
+            assert!(devices[0].busy_ms.abs() < 1e-9, "{devices:?}");
+            assert!(
+                devices[0].queued_ms.abs() < 1e-9,
+                "queue estimate must still retire: {devices:?}"
+            );
+        }
+        other => panic!("{other:?}"),
+    }
+    match call(&tx, id, ClientMsg::Stats) {
+        ServerMsg::Stats {
+            jobs_ok,
+            jobs_failed,
+            device_ms,
+            ..
+        } => {
+            assert_eq!(jobs_ok, 0);
+            assert_eq!(jobs_failed, 1);
+            assert!(device_ms.abs() < 1e-9);
+        }
+        other => panic!("{other:?}"),
+    }
+    // A successful retry on the same VGPU counts exactly once.
+    call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+    call(&tx, id, ClientMsg::Str { workload: "double".into() });
+    assert!(matches!(call(&tx, id, ClientMsg::Stp), ServerMsg::Done { .. }));
+    match call(&tx, id, ClientMsg::DevInfo) {
+        ServerMsg::Devices { devices, .. } => {
+            assert_eq!(devices[0].jobs_done, 1, "{devices:?}");
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+/// Per-tenant counters (ISSUE satellite): the Stats wire message carries
+/// a tenant section fed by completion events.
+#[test]
+fn stats_carry_per_tenant_counters() {
+    let exec = ExecHandle::mock(
+        vec!["double".into(), "fail".into()],
+        |name, inputs| {
+            if name == "fail" {
+                return Err(Error::Runtime("injected failure".into()));
+            }
+            Ok(vec![inputs[0].clone()])
+        },
+    );
+    let mut pool = PoolConfig::homogeneous(
+        1,
+        DeviceConfig::tesla_c2070(),
+        PlacementPolicy::WeightedLeastLoaded,
+    );
+    pool.qos = QosConfig::default()
+        .with_weight("gold", 3.0)
+        .with_weight("bronze", 1.0);
+    let cfg = DaemonConfig {
+        barrier: Some(1),
+        barrier_timeout: Duration::from_millis(50),
+        pool,
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::new(cfg, exec);
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+
+    let g = register_as(&tx, "g", "gold");
+    let b = register_as(&tx, "b", "bronze");
+    for (id, wl) in [(g, "double"), (g, "double"), (b, "fail")] {
+        call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+        call(&tx, id, ClientMsg::Str { workload: wl.into() });
+        let _ = call(&tx, id, ClientMsg::Stp);
+    }
+    match call(&tx, g, ClientMsg::Stats) {
+        ServerMsg::Stats { tenants, .. } => {
+            let gold = tenants.iter().find(|t| t.tenant == "gold").unwrap();
+            assert_eq!(gold.jobs_ok, 2, "{tenants:?}");
+            assert_eq!(gold.jobs_failed, 0);
+            let bronze = tenants.iter().find(|t| t.tenant == "bronze").unwrap();
+            assert_eq!(bronze.jobs_ok, 0, "{tenants:?}");
+            assert_eq!(bronze.jobs_failed, 1);
+        }
+        other => panic!("{other:?}"),
+    }
+}

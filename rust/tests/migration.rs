@@ -1,0 +1,416 @@
+//! Live VGPU migration tests: the drain/rebind handshake conserves
+//! segments, queued estimates, and batches (ISSUE acceptance), the
+//! explicit wire verb and auto-target both work, and the QoS-aware
+//! rebalancer drains low-weight tenants off hot devices.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use vgpu::config::DeviceConfig;
+use vgpu::gvm::devices::{DeviceId, DevicePool, PlacementPolicy, PoolConfig};
+use vgpu::gvm::exec::MigrationConfig;
+use vgpu::gvm::qos::QosConfig;
+use vgpu::gvm::{Command, Daemon, DaemonConfig};
+use vgpu::ipc::{ClientMsg, ServerMsg};
+use vgpu::runtime::{ExecHandle, TensorValue};
+use vgpu::testkit::forall_check;
+use vgpu::util::rng::SplitMix64;
+
+fn call(tx: &mpsc::Sender<Command>, client: u64, msg: ClientMsg) -> ServerMsg {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Command {
+        client,
+        msg,
+        reply: rtx,
+    })
+    .unwrap();
+    rrx.recv().unwrap()
+}
+
+fn register_as(tx: &mpsc::Sender<Command>, name: &str, tenant: &str) -> u64 {
+    match call(
+        tx,
+        0,
+        ClientMsg::Req {
+            name: name.into(),
+            tenant: tenant.into(),
+        },
+    ) {
+        ServerMsg::Queued { ticket } => ticket,
+        other => panic!("bad REQ reply {other:?}"),
+    }
+}
+
+fn t4() -> TensorValue {
+    TensorValue::F32(vec![4], vec![1.0, 2.0, 3.0, 4.0])
+}
+
+fn echo_exec() -> ExecHandle {
+    ExecHandle::mock(vec!["double".into()], |_, inputs| {
+        Ok(vec![inputs[0].clone()])
+    })
+}
+
+fn daemon_with(cfg: DaemonConfig) -> mpsc::Sender<Command> {
+    let daemon = Daemon::new(cfg, echo_exec());
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+    tx
+}
+
+fn two_dev_cfg(barrier: usize) -> DaemonConfig {
+    DaemonConfig {
+        barrier: Some(barrier),
+        barrier_timeout: Duration::from_secs(5),
+        pool: PoolConfig::homogeneous(
+            2,
+            DeviceConfig::tesla_c2070(),
+            PlacementPolicy::RoundRobin,
+        ),
+        ..DaemonConfig::default()
+    }
+}
+
+fn devinfo(
+    tx: &mpsc::Sender<Command>,
+    client: u64,
+) -> (u32, Vec<vgpu::ipc::DeviceEntry>) {
+    match call(tx, client, ClientMsg::DevInfo) {
+        ServerMsg::Devices {
+            self_device,
+            devices,
+        } => (self_device, devices),
+        other => panic!("{other:?}"),
+    }
+}
+
+/// ISSUE acceptance: a VGPU bound to a loaded device is drained and
+/// rebound to an idle one with no lost segments or batches — the staged
+/// tensor, the queued job, and every counter survive the rebind.
+#[test]
+fn migration_conserves_segments_and_batches() {
+    let tx = daemon_with(two_dev_cfg(2));
+    let a = register_as(&tx, "rank0", ""); // round-robin -> device 0
+    let b = register_as(&tx, "rank1", ""); // -> device 1
+    call(&tx, a, ClientMsg::Snd { slot: 0, tensor: t4() });
+    assert!(matches!(
+        call(&tx, a, ClientMsg::Str { workload: "double".into() }),
+        ServerMsg::Queued { .. }
+    ));
+    let (a_dev_before, devs) = devinfo(&tx, a);
+    assert_eq!(a_dev_before, 0);
+    assert_eq!(devs[0].mem_used, 16, "4 x f32 staged on the source");
+    assert!(devs[0].queued_ms > 0.0);
+
+    // Drain + rebind while the job is queued behind the barrier.
+    match call(
+        &tx,
+        a,
+        ClientMsg::Migrate {
+            name: String::new(),
+            target: 1,
+        },
+    ) {
+        ServerMsg::Migrated { moved, device } => {
+            assert_eq!(moved, 1);
+            assert_eq!(device, 1);
+        }
+        other => panic!("{other:?}"),
+    }
+    let (a_dev, devs) = devinfo(&tx, a);
+    assert_eq!(a_dev, 1, "binding moved");
+    assert_eq!(devs[0].clients, 0, "source fully drained");
+    assert_eq!(devs[0].mem_used, 0);
+    assert!(devs[0].queued_ms.abs() < 1e-9);
+    assert_eq!(devs[1].clients, 2, "segment re-staged on the target");
+    assert_eq!(devs[1].mem_used, 16);
+    assert!(devs[1].queued_ms > 0.0);
+
+    // Fill the barrier; the migrated job must execute on the target.
+    call(&tx, b, ClientMsg::Snd { slot: 0, tensor: t4() });
+    call(&tx, b, ClientMsg::Str { workload: "double".into() });
+    for &id in &[a, b] {
+        assert!(matches!(call(&tx, id, ClientMsg::Stp), ServerMsg::Done { .. }));
+    }
+    match call(&tx, a, ClientMsg::Rcv { slot: 0 }) {
+        ServerMsg::Data { tensor } => {
+            assert_eq!(tensor.as_f64_vec(), vec![1.0, 2.0, 3.0, 4.0]);
+        }
+        other => panic!("{other:?}"),
+    }
+    let (_, devs) = devinfo(&tx, a);
+    assert_eq!(devs[0].jobs_done, 0, "nothing ran on the drained source");
+    assert_eq!(devs[1].jobs_done, 2, "both batches ran on the target");
+    assert!(devs.iter().all(|d| d.queued_ms.abs() < 1e-9), "{devs:?}");
+    match call(&tx, a, ClientMsg::Stats) {
+        ServerMsg::Stats {
+            jobs_ok,
+            jobs_failed,
+            ..
+        } => {
+            assert_eq!(jobs_ok, 2, "no batch lost in the handshake");
+            assert_eq!(jobs_failed, 0);
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn auto_target_picks_the_coolest_other_device() {
+    let tx = daemon_with(two_dev_cfg(8));
+    let a = register_as(&tx, "rank0", "");
+    match call(
+        &tx,
+        a,
+        ClientMsg::Migrate {
+            name: String::new(),
+            target: u32::MAX,
+        },
+    ) {
+        ServerMsg::Migrated { moved, device } => {
+            assert_eq!(moved, 1);
+            assert_eq!(device, 1, "only other device");
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn admin_migration_by_rank_name_needs_no_vgpu() {
+    let tx = daemon_with(two_dev_cfg(8));
+    let _a = register_as(&tx, "worker", "");
+    // client 0 = an unregistered admin connection (the `vgpu migrate`
+    // CLI path): it can move other VGPUs by name.
+    match call(
+        &tx,
+        0,
+        ClientMsg::Migrate {
+            name: "worker".into(),
+            target: 1,
+        },
+    ) {
+        ServerMsg::Migrated { moved, device } => {
+            assert_eq!(moved, 1);
+            assert_eq!(device, 1);
+        }
+        other => panic!("{other:?}"),
+    }
+    match call(
+        &tx,
+        0,
+        ClientMsg::Migrate {
+            name: "nobody".into(),
+            target: 1,
+        },
+    ) {
+        ServerMsg::Err { msg } => assert!(msg.contains("no live VGPU"), "{msg}"),
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn migration_errors_are_typed_and_harmless() {
+    // Single-device pool: nowhere to go.
+    let cfg = DaemonConfig {
+        barrier: Some(8),
+        barrier_timeout: Duration::from_secs(5),
+        ..DaemonConfig::default()
+    };
+    let tx = daemon_with(cfg);
+    let a = register_as(&tx, "rank0", "");
+    match call(
+        &tx,
+        a,
+        ClientMsg::Migrate {
+            name: String::new(),
+            target: u32::MAX,
+        },
+    ) {
+        ServerMsg::Err { msg } => {
+            assert!(msg.contains("second device"), "{msg}")
+        }
+        other => panic!("{other:?}"),
+    }
+    // Out-of-range explicit target on a 2-device pool.
+    let tx = daemon_with(two_dev_cfg(8));
+    let a = register_as(&tx, "rank0", "");
+    match call(
+        &tx,
+        a,
+        ClientMsg::Migrate {
+            name: String::new(),
+            target: 9,
+        },
+    ) {
+        ServerMsg::Err { msg } => assert!(msg.contains("out of range"), "{msg}"),
+        other => panic!("{other:?}"),
+    }
+    // The VGPU still works after both failed handshakes.
+    call(&tx, a, ClientMsg::Snd { slot: 0, tensor: t4() });
+    call(&tx, a, ClientMsg::Str { workload: "double".into() });
+    let (_, devs) = devinfo(&tx, a);
+    assert_eq!(devs[0].clients + devs[1].clients, 1);
+}
+
+/// The Rebalancer (QoS-aware auto-migration): low-weight tenants drain
+/// off the hot device first; the high-weight tenant keeps its placement.
+#[test]
+fn rebalancer_drains_low_weight_tenant_off_hot_device() {
+    let mut pool = PoolConfig::homogeneous(
+        2,
+        DeviceConfig::tesla_c2070(),
+        PlacementPolicy::WeightedLeastLoaded,
+    );
+    pool.qos = QosConfig::default()
+        .with_weight("gold", 4.0)
+        .with_weight("bronze", 1.0);
+    let cfg = DaemonConfig {
+        barrier: Some(2),
+        barrier_timeout: Duration::from_secs(5),
+        pool,
+        migration: MigrationConfig {
+            enabled: true,
+            hot_threshold_ms: 0.5,
+            ..MigrationConfig::default()
+        },
+        ..DaemonConfig::default()
+    };
+    let tx = daemon_with(cfg);
+    let g = register_as(&tx, "g", "gold"); // lands on device 0
+    let b = register_as(&tx, "b", "bronze"); // lands on device 1
+    // Force co-location on device 0 so it becomes hot.
+    match call(
+        &tx,
+        b,
+        ClientMsg::Migrate {
+            name: String::new(),
+            target: 0,
+        },
+    ) {
+        ServerMsg::Migrated { .. } => {}
+        other => panic!("{other:?}"),
+    }
+    for &id in &[g, b] {
+        call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+        call(&tx, id, ClientMsg::Str { workload: "double".into() });
+    }
+    // The barrier filled: flush ran the rebalancer, then the batch.
+    for &id in &[g, b] {
+        assert!(matches!(call(&tx, id, ClientMsg::Stp), ServerMsg::Done { .. }));
+    }
+    let (g_dev, devs) = devinfo(&tx, g);
+    let (b_dev, _) = devinfo(&tx, b);
+    assert_eq!(g_dev, 0, "high-weight tenant keeps its warm placement");
+    assert_eq!(b_dev, 1, "low-weight tenant drained off the hot device");
+    assert_eq!(devs[0].jobs_done, 1, "{devs:?}");
+    assert_eq!(devs[1].jobs_done, 1, "{devs:?}");
+    match call(&tx, g, ClientMsg::Stats) {
+        ServerMsg::Stats { tenants, .. } => {
+            let bronze = tenants.iter().find(|t| t.tenant == "bronze").unwrap();
+            assert_eq!(
+                bronze.migrations, 2,
+                "explicit co-locate + rebalancer drain: {tenants:?}"
+            );
+            let gold = tenants.iter().find(|t| t.tenant == "gold").unwrap();
+            assert_eq!(gold.migrations, 0, "{tenants:?}");
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[derive(Debug)]
+struct MigrationCase {
+    n_devices: usize,
+    /// Per client: (segment bytes, queued est ms).
+    clients: Vec<(u64, f64)>,
+    /// Random (client index, target device) migration attempts.
+    moves: Vec<(usize, usize)>,
+}
+
+fn gen_case(r: &mut SplitMix64) -> MigrationCase {
+    let n_devices = 2 + r.below(6);
+    let n_clients = 1 + r.below(12);
+    let clients = (0..n_clients)
+        .map(|_| (r.range_u64(0, 1 << 20), r.next_f64() * 50.0))
+        .collect();
+    let moves = (0..r.below(24))
+        .map(|_| (r.below(n_clients), r.below(n_devices)))
+        .collect();
+    MigrationCase {
+        n_devices,
+        clients,
+        moves,
+    }
+}
+
+/// Conservation property: pool-wide totals (bound clients, segment
+/// bytes, queued milliseconds) are invariant under any sequence of
+/// migrations — only the per-device split moves.
+#[test]
+fn prop_migration_conserves_pool_totals() {
+    forall_check(
+        "migration conservation",
+        vgpu::testkit::default_cases(),
+        gen_case,
+        |c| {
+            let mut pool = DevicePool::from_specs(
+                vec![DeviceConfig::tesla_c2070(); c.n_devices],
+                PlacementPolicy::LeastLoaded,
+            )
+            .map_err(|e| e.to_string())?;
+            let mut total_bytes = 0u64;
+            let mut total_ms = 0.0f64;
+            for (i, &(bytes, est)) in c.clients.iter().enumerate() {
+                let dev = pool
+                    .place(i as u64, &format!("r{i}"), bytes)
+                    .map_err(|e| e.to_string())?;
+                pool.reserve_mem(dev, bytes);
+                pool.note_queued(dev, est);
+                total_bytes += bytes;
+                total_ms += est;
+            }
+            for &(ci, target) in &c.moves {
+                let client = ci as u64;
+                let (bytes, est) = c.clients[ci];
+                // Self-moves are rejected; that must not disturb totals.
+                let _ = pool.note_migrated(
+                    client,
+                    &format!("r{ci}"),
+                    DeviceId(target),
+                    bytes,
+                    est,
+                );
+                let status = pool.status();
+                let clients: u32 = status.iter().map(|s| s.clients).sum();
+                if clients as usize != c.clients.len() {
+                    return Err(format!(
+                        "client count drifted: {clients} != {}",
+                        c.clients.len()
+                    ));
+                }
+                let bytes_sum: u64 = status.iter().map(|s| s.mem_used).sum();
+                if bytes_sum != total_bytes {
+                    return Err(format!(
+                        "segment bytes drifted: {bytes_sum} != {total_bytes}"
+                    ));
+                }
+                let ms_sum: f64 = status.iter().map(|s| s.queued_ms).sum();
+                if (ms_sum - total_ms).abs() > 1e-6 * total_ms.max(1.0) {
+                    return Err(format!(
+                        "queued ms drifted: {ms_sum} != {total_ms}"
+                    ));
+                }
+                // Every binding stays valid.
+                for i in 0..c.clients.len() {
+                    let dev = pool
+                        .placement(i as u64)
+                        .ok_or_else(|| format!("client {i} unbound"))?;
+                    if dev.0 >= pool.len() {
+                        return Err(format!("device {} out of range", dev.0));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
