@@ -1,0 +1,177 @@
+//! Async-flush-pipeline bench: the real event-driven daemon at pipeline
+//! depth 1 (serialized, the pre-refactor behaviour) vs depth 2/4, over
+//! two sleep-backed device handles.
+//!
+//! Each op runs `CYCLES` back-to-back flush cycles with two clients
+//! round-robined onto different devices and `barrier = 1`, so every
+//! `STR` starts its own flush epoch.  At depth 1 the second client's
+//! epoch waits for the first to settle (cost per cycle ~= 2 sleeps); at
+//! depth >= 2 the second epoch is submitted while the first executes,
+//! so the two devices sleep concurrently (~1 sleep per cycle).  Results
+//! are written to `BENCH_pipeline.json` next to `BENCH_executor.json`
+//! (override the path with `VGPU_BENCH_PIPELINE_JSON`).
+
+mod bench_common;
+use bench_common::{bench, section};
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use vgpu::config::DeviceConfig;
+use vgpu::gvm::devices::{PlacementPolicy, PoolConfig};
+use vgpu::gvm::{Command, Daemon, DaemonConfig, PipelineConfig};
+use vgpu::ipc::{ClientMsg, ServerMsg};
+use vgpu::runtime::{ExecHandle, TensorValue};
+
+const SLEEP_MS: u64 = 5;
+const CYCLES: usize = 4;
+
+/// A mock handle that sleeps ~`ms` per execute (a stand-in for one
+/// physical device's kernel time, on its own thread).
+fn sleepy_handle(ms: u64) -> ExecHandle {
+    ExecHandle::mock(vec!["sleepy".into()], move |_, inputs| {
+        std::thread::sleep(Duration::from_millis(ms));
+        Ok(inputs)
+    })
+}
+
+fn call(tx: &mpsc::Sender<Command>, client: u64, msg: ClientMsg) -> ServerMsg {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Command {
+        client,
+        msg,
+        reply: rtx,
+    })
+    .unwrap();
+    rrx.recv().unwrap()
+}
+
+fn t4() -> TensorValue {
+    TensorValue::F32(vec![4], vec![1.0, 2.0, 3.0, 4.0])
+}
+
+/// Daemon over two sleep-backed devices at the given pipeline depth,
+/// with two clients registered (round-robin: one per device).
+fn spawn_daemon(depth: usize) -> (mpsc::Sender<Command>, Vec<u64>) {
+    let cfg = DaemonConfig {
+        barrier: Some(1),
+        barrier_timeout: Duration::from_secs(5),
+        pool: PoolConfig::homogeneous(
+            2,
+            DeviceConfig::tesla_c2070(),
+            PlacementPolicy::RoundRobin,
+        ),
+        pipeline: PipelineConfig {
+            max_in_flight_flushes: depth,
+        },
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::with_handles(
+        cfg,
+        vec![sleepy_handle(SLEEP_MS), sleepy_handle(SLEEP_MS)],
+    )
+    .unwrap();
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+    let ids = (0..2)
+        .map(|i| {
+            match call(
+                &tx,
+                0,
+                ClientMsg::Req {
+                    name: format!("rank{i}"),
+                    tenant: String::new(),
+                },
+            ) {
+                ServerMsg::Queued { ticket } => ticket,
+                other => panic!("bad REQ reply {other:?}"),
+            }
+        })
+        .collect();
+    (tx, ids)
+}
+
+/// `CYCLES` back-to-back flush cycles: stage + STR one job per device
+/// (each STR fills the barrier and starts an epoch), then collect both
+/// results.
+fn run_cycles(tx: &mpsc::Sender<Command>, ids: &[u64]) -> usize {
+    for _ in 0..CYCLES {
+        for &id in ids {
+            call(tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+            match call(
+                tx,
+                id,
+                ClientMsg::Str {
+                    workload: "sleepy".into(),
+                },
+            ) {
+                ServerMsg::Queued { .. } => {}
+                other => panic!("bad STR reply {other:?}"),
+            }
+        }
+        for &id in ids {
+            match call(tx, id, ClientMsg::Stp) {
+                ServerMsg::Done { .. } => {}
+                other => panic!("bad STP reply {other:?}"),
+            }
+        }
+    }
+    CYCLES
+}
+
+fn fmt_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.1}")
+    } else {
+        "null".into()
+    }
+}
+
+fn main() {
+    let mut rows: Vec<(usize, f64)> = Vec::new();
+    for depth in [1usize, 2, 4] {
+        section(&format!(
+            "async flush pipeline: depth {depth}, 2 devices x {CYCLES} \
+             cycles ({SLEEP_MS} ms/job)"
+        ));
+        let (tx, ids) = spawn_daemon(depth);
+        let ns = bench(&format!("cycles_depth{depth}_2dev"), || {
+            run_cycles(&tx, &ids)
+        });
+        for &id in &ids {
+            call(&tx, id, ClientMsg::Rls);
+        }
+        rows.push((depth, ns));
+    }
+    let d1 = rows[0].1;
+    for &(depth, ns) in &rows[1..] {
+        println!(
+            "{:48} {:>12.2}x",
+            format!("overlap_gain_depth{depth}"),
+            d1 / ns
+        );
+    }
+
+    // Record the comparison for the repo (BENCH_pipeline.json).
+    let path = std::env::var("VGPU_BENCH_PIPELINE_JSON")
+        .unwrap_or_else(|_| "BENCH_pipeline.json".into());
+    let mut json = String::from(
+        "{\n  \"bench\": \"pipeline\",\n  \"unit\": \"ns_per_run\",\n  \
+         \"devices\": 2,\n  \"cycles_per_run\": 4,\n  \
+         \"sleep_ms_per_job\": 5,\n  \"rows\": [\n",
+    );
+    for (i, (depth, ns)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"depth\": {depth}, \"ns_per_run\": {}, \
+             \"gain_vs_depth1\": {}}}{}\n",
+            fmt_num(*ns),
+            fmt_num(d1 / ns),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("\n[recorded {path}]"),
+        Err(e) => eprintln!("\n[could not write {path}: {e}]"),
+    }
+}

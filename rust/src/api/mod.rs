@@ -14,6 +14,13 @@
 //! Porting an existing GPU program is intentionally mechanical — exactly
 //! the paper's claim ("very little effort to port existing GPU
 //! programs").
+//!
+//! The async flush pipeline adds an opt-in seventh verb: `FLH`.
+//! [`VgpuClient::flush`] pushes the queued batch out synchronously;
+//! [`VgpuClient::flush_async`] returns a [`FlushTicket`] immediately so
+//! the caller can stage the next cycle while devices execute this one,
+//! and [`VgpuClient::wait_flush`] redeems the ticket once every epoch up
+//! to it has settled.
 
 use std::sync::mpsc;
 
@@ -47,6 +54,12 @@ pub struct NodeStatsView {
     pub device_ms: f64,
     /// Registered clients right now.
     pub clients: u32,
+    /// Flush epochs currently in flight (async-pipeline depth gauge;
+    /// bounded by `[pipeline] max_in_flight_flushes`).
+    pub in_flight_flushes: u32,
+    /// Submitted jobs whose completion events are still pending, across
+    /// all in-flight epochs.
+    pub queued_completions: u32,
     /// Per-tenant counters (completion-event fed), in tenant-id order.
     pub tenants: Vec<TenantStatsEntry>,
 }
@@ -58,6 +71,16 @@ pub struct MigrationOutcome {
     pub moved: u32,
     /// Device index the (last) VGPU landed on.
     pub device: u32,
+}
+
+/// Handle on a requested flush epoch (see [`VgpuClient::flush_async`]).
+#[derive(Debug, Clone, Copy)]
+pub struct FlushTicket {
+    /// Flush epoch the queued batch will run as; pass to
+    /// [`VgpuClient::wait_flush`].
+    pub epoch: u64,
+    /// Jobs that were queued node-wide when the flush was requested.
+    pub jobs: u32,
 }
 
 /// Completion info returned by `STP`.
@@ -216,6 +239,8 @@ impl VgpuClient {
                 bytes_staged,
                 device_ms,
                 clients,
+                in_flight_flushes,
+                queued_completions,
                 tenants,
             } => Ok(NodeStatsView {
                 batches,
@@ -224,11 +249,44 @@ impl VgpuClient {
                 bytes_staged,
                 device_ms,
                 clients,
+                in_flight_flushes,
+                queued_completions,
                 tenants,
             }),
             ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
             other => Err(Error::Ipc(format!("expected Stats, got {other:?}"))),
         }
+    }
+
+    /// `FLH()`, synchronous: flush the queued batch now (don't wait for
+    /// the SPMD barrier) and block until every epoch up to it settles —
+    /// the pre-pipeline behaviour, on demand.
+    pub fn flush(&mut self) -> Result<()> {
+        self.expect_ack(ClientMsg::Flh { wait: true })
+    }
+
+    /// `FLH()`, non-blocking (the async-pipeline opt-in): flush the
+    /// queued batch now and return a [`FlushTicket`] immediately, so
+    /// the caller can stage the next cycle while devices execute this
+    /// one.  Redeem the ticket with [`VgpuClient::wait_flush`].
+    pub fn flush_async(&mut self) -> Result<FlushTicket> {
+        match self.call(ClientMsg::Flh { wait: false })? {
+            ServerMsg::FlushTicket { epoch, jobs } => {
+                Ok(FlushTicket { epoch, jobs })
+            }
+            ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
+            other => {
+                Err(Error::Ipc(format!("expected FlushTicket, got {other:?}")))
+            }
+        }
+    }
+
+    /// Block until every flush epoch up to and including the ticket's
+    /// has settled (all completions applied, all accounting done).
+    pub fn wait_flush(&mut self, ticket: FlushTicket) -> Result<()> {
+        self.expect_ack(ClientMsg::WaitFlush {
+            epoch: ticket.epoch,
+        })
     }
 
     /// Live-migrate *this* VGPU to another physical device (`None` =

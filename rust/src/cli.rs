@@ -7,6 +7,7 @@
 //! vgpu run <workload> [-n N] [--reps R]    in-proc SPMD run (real PJRT)
 //! vgpu migrate <rank> --socket PATH [--to DEV]
 //!                                          live-migrate a VGPU
+//! vgpu stats --socket PATH                 node stats incl. pipeline gauges
 //! vgpu list                                list workloads + artifacts
 //! vgpu profile                             show calibration derivation
 //! ```
@@ -70,6 +71,12 @@ pub enum Cmd {
         name: String,
         /// Target device index (None = coolest other device).
         target: Option<u32>,
+    },
+    /// Render a served GVM's node statistics (admin verb over the wire
+    /// `Stats` message), including the async-pipeline gauges.
+    Stats {
+        /// Socket of the served GVM.
+        socket: String,
     },
     /// List workloads and artifacts.
     List,
@@ -272,6 +279,28 @@ pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Cmd> {
                 target,
             })
         }
+        "stats" => {
+            let mut socket = None;
+            while let Some(flag) = args.pop_front() {
+                match flag.as_str() {
+                    "--socket" => {
+                        socket = Some(args.pop_front().ok_or_else(|| {
+                            Error::Config("--socket needs a value".into())
+                        })?)
+                    }
+                    f => {
+                        return Err(Error::Config(format!(
+                            "stats: unknown flag {f}"
+                        )))
+                    }
+                }
+            }
+            Ok(Cmd::Stats {
+                socket: socket.ok_or_else(|| {
+                    Error::Config("stats: --socket required".into())
+                })?,
+            })
+        }
         "list" => Ok(Cmd::List),
         "profile" => Ok(Cmd::Profile),
         "help" | "--help" | "-h" => Ok(Cmd::Help),
@@ -294,6 +323,8 @@ USAGE:
   vgpu plot <id> [--results DIR]      ASCII-chart a regenerated figure
   vgpu migrate <rank> --socket PATH [--to DEV]
                                       live-migrate a VGPU between devices
+  vgpu stats --socket PATH            node statistics of a served GVM
+                                      (incl. async-pipeline gauges)
   vgpu list                           list workloads and artifacts
   vgpu profile                        show cost-calibration details
   vgpu help                           this text
@@ -301,7 +332,8 @@ USAGE:
 EXPERIMENTS: tab1 tab3 fig14 fig15 fig16 fig17 fig18 fig19 fig20 fig21
              fig22 fig23 fig24 ablation-style ablation-depcheck
              ablation-ctx ablation-barrier ablation-policy multi-gpu qos
-             multi-gpu-cluster ext-multigpu ext-cluster ext-fig18-socket
+             multi-gpu-cluster pipeline ext-multigpu ext-cluster
+             ext-fig18-socket
 ";
 
 #[cfg(test)]
@@ -378,6 +410,18 @@ mod tests {
         assert!(p("migrate rank3").is_err(), "--socket required");
         assert!(p("migrate --socket /tmp/v.sock").is_err());
         assert!(p("migrate rank3 --socket /tmp/v.sock --to many").is_err());
+    }
+
+    #[test]
+    fn parses_stats() {
+        assert_eq!(
+            p("stats --socket /tmp/v.sock").unwrap(),
+            Cmd::Stats {
+                socket: "/tmp/v.sock".into()
+            }
+        );
+        assert!(p("stats").is_err(), "--socket required");
+        assert!(p("stats --bogus x").is_err());
     }
 
     #[test]

@@ -35,6 +35,10 @@
 //! drain_timeout_ms = 5000     # max wait for a lane to quiesce
 //! max_moves_per_flush = 2     # rebalancer migration cap per flush
 //!
+//! [pipeline]
+//! max_in_flight_flushes = 2   # flush epochs in flight at once
+//!                             # (1 = serialized pre-pipeline daemon)
+//!
 //! [gvm]
 //! barrier = 8                 # omit for "all registered clients"
 //! barrier_timeout_ms = 50
@@ -51,7 +55,7 @@ use super::{DepcheckSemantics, DeviceConfig, NodeConfig};
 use crate::gvm::devices::{PlacementPolicy, PoolConfig};
 use crate::gvm::exec::MigrationConfig;
 use crate::gvm::qos::{parse_share_list, QosConfig};
-use crate::gvm::{DaemonConfig, GvmConfig, StyleRule};
+use crate::gvm::{DaemonConfig, GvmConfig, PipelineConfig, StyleRule};
 use crate::{Error, Result};
 
 /// Parsed sections: `section -> key -> value`.
@@ -300,6 +304,24 @@ impl ConfigFile {
         Ok(m)
     }
 
+    /// Build the async-flush-pipeline tunables (the `[pipeline]`
+    /// section); omitted section = depth 1, the serialized pre-pipeline
+    /// daemon behaviour.
+    pub fn pipeline(&self) -> Result<PipelineConfig> {
+        let mut p = PipelineConfig::default();
+        if let Some(v) = self.get_usize("pipeline", "max_in_flight_flushes")? {
+            if v == 0 {
+                return Err(Error::Config(
+                    "[pipeline] max_in_flight_flushes must be >= 1 \
+                     (1 = serialized flushes)"
+                        .into(),
+                ));
+            }
+            p.max_in_flight_flushes = v;
+        }
+        Ok(p)
+    }
+
     /// Build a node config (`[node]` + `[devices]` + `[device]`).
     pub fn node(&self) -> Result<NodeConfig> {
         let mut n = NodeConfig {
@@ -338,6 +360,7 @@ impl ConfigFile {
         }
         daemon.pool = self.devices()?;
         daemon.migration = self.migration()?;
+        daemon.pipeline = self.pipeline()?;
         let artifacts_dir = self
             .get("gvm", "artifacts_dir")
             .map(std::path::PathBuf::from)
@@ -479,6 +502,33 @@ policy = model-optimal
         ] {
             let c = ConfigFile::parse(bad).unwrap();
             assert!(c.migration().is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn pipeline_section_parses_and_rides_into_gvm() {
+        let c =
+            ConfigFile::parse("[pipeline]\nmax_in_flight_flushes = 3\n").unwrap();
+        assert_eq!(c.pipeline().unwrap().max_in_flight_flushes, 3);
+        let g = c.gvm().unwrap();
+        assert_eq!(g.daemon.pipeline.max_in_flight_flushes, 3);
+    }
+
+    #[test]
+    fn pipeline_section_defaults_to_serialized_depth_one() {
+        let c = ConfigFile::parse("").unwrap();
+        assert_eq!(c.pipeline().unwrap().max_in_flight_flushes, 1);
+        assert_eq!(c.gvm().unwrap().daemon.pipeline.max_in_flight_flushes, 1);
+    }
+
+    #[test]
+    fn bad_pipeline_sections_rejected() {
+        for bad in [
+            "[pipeline]\nmax_in_flight_flushes = 0\n",
+            "[pipeline]\nmax_in_flight_flushes = lots\n",
+        ] {
+            let c = ConfigFile::parse(bad).unwrap();
+            assert!(c.pipeline().is_err(), "{bad:?} should be rejected");
         }
     }
 

@@ -1,5 +1,9 @@
 //! The GVM daemon loop: request queue, SPMD barrier, per-device batches
-//! drained by the per-device executor engine.
+//! drained by the per-device executor engine — wired together as a
+//! single **event-driven loop** that selects over client commands *and*
+//! executor completion events, so flush *N*'s device execution overlaps
+//! flush *N+1*'s staging (the paper's §4.2 point: the VGM keeps the
+//! physical GPU busy while many virtual clients stage work).
 //!
 //! One thread owns the VGPU table and drives the lifecycle of Fig. 13:
 //! clients' messages arrive through an mpsc command queue (the POSIX
@@ -7,6 +11,35 @@
 //! segments (the POSIX shared-memory analogue); the daemon flushes a
 //! *batch* of queued jobs when the SPMD barrier fills — all registered
 //! clients have issued `STR` — or the barrier window times out.
+//!
+//! ## The async flush pipeline
+//!
+//! A flush no longer blocks the daemon: [`Daemon::run`] forwards both
+//! command and completion channels into one event stream, submits each
+//! flush as an **epoch** recorded in an in-flight table keyed by
+//! `flush_seq`, and returns to serving commands immediately.
+//! Completions are applied incrementally as they arrive; an epoch
+//! settles when its last pending job reports back.  Ordering
+//! guarantees:
+//!
+//! * **per device** — submissions drain FIFO through one worker, so an
+//!   epoch's plan order holds and epoch *N*'s jobs on a device precede
+//!   epoch *N+1*'s;
+//! * **per client** — at most one job is ever in flight
+//!   ([`super::vgpu::VgpuState::Running`]): the client may `SND` its
+//!   next cycle while the job executes, but a second `STR` is rejected
+//!   until the completion lands, and a flush never includes a client
+//!   with an in-flight job;
+//! * **per epoch** — `FLH`/`WaitFlush` settle only when every epoch up
+//!   to and including the awaited one has settled.
+//!
+//! Concurrent epochs are bounded by
+//! [`PipelineConfig::max_in_flight_flushes`] (the `[pipeline]` config
+//! section); depth 1 reproduces the pre-pipeline daemon, where a new
+//! flush waits for the previous one to settle.  A completion whose
+//! epoch entry is gone (the client `RLS`-ed mid-flight, or the epoch
+//! timed out) is discarded — its queue estimate was already retired
+//! when the entry was settled, so pool load cannot drift.
 //!
 //! With the multi-GPU [`super::devices`] pool, every `REQ` places the new
 //! VGPU onto a physical device (pluggable policy), and a flush groups the
@@ -56,9 +89,9 @@ use crate::runtime::ExecHandle;
 use crate::workloads::Suite;
 use crate::{Error, Result};
 
-/// Upper bound on waiting for one executor completion during a flush —
-/// a guard against a wedged device thread, not a pacing knob (normal
-/// executions complete in milliseconds to seconds).
+/// Upper bound on an in-flight flush epoch: an epoch older than this is
+/// failed out (a guard against a wedged device thread, not a pacing
+/// knob — normal executions complete in milliseconds to seconds).
 const COMPLETION_TIMEOUT: Duration = Duration::from_secs(3600);
 
 /// Cap on distinct per-tenant counter rows.  Tenant ids are
@@ -81,6 +114,54 @@ pub struct Command {
     pub reply: mpsc::Sender<ServerMsg>,
 }
 
+/// One event of the daemon's select loop: a client command, an executor
+/// completion, the command channel closing (begin shutdown), or the
+/// completion channel closing (every device worker is gone — fail the
+/// in-flight epochs instead of leaving clients parked).
+enum Event {
+    Cmd(Command),
+    Done(Completion),
+    CmdClosed,
+    EngineLost,
+}
+
+/// Async-flush-pipeline tunables — the `[pipeline]` config-file section.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Max flush epochs concurrently in flight.  `1` (the default)
+    /// reproduces the pre-pipeline daemon: a new flush waits for the
+    /// previous epoch to settle.  `>= 2` lets the next batch's staging
+    /// and submission overlap the previous epoch's device execution.
+    pub max_in_flight_flushes: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            max_in_flight_flushes: 1,
+        }
+    }
+}
+
+/// One submitted job awaiting its completion event.
+#[derive(Debug)]
+struct PendingJob {
+    client: ClientId,
+    tenant: String,
+    est_ms: f64,
+    dev: DeviceId,
+}
+
+/// One in-flight flush epoch (keyed by `flush_seq` in the daemon's
+/// table).  An epoch settles when `jobs` empties — each entry is removed
+/// exactly once, either by its completion event or by an explicit
+/// settle (client `RLS` mid-flight, epoch timeout), which is also where
+/// its queue estimate is retired.
+struct PendingFlush {
+    started: Instant,
+    jobs: Vec<PendingJob>,
+}
+
 /// Daemon tunables.
 #[derive(Debug, Clone)]
 pub struct DaemonConfig {
@@ -99,6 +180,8 @@ pub struct DaemonConfig {
     pub pool: PoolConfig,
     /// Live-migration tunables (`[migration]` config section).
     pub migration: MigrationConfig,
+    /// Async-flush-pipeline tunables (`[pipeline]` config section).
+    pub pipeline: PipelineConfig,
 }
 
 impl Default for DaemonConfig {
@@ -111,6 +194,7 @@ impl Default for DaemonConfig {
             max_clients: 64,
             pool: PoolConfig::default(),
             migration: MigrationConfig::default(),
+            pipeline: PipelineConfig::default(),
         }
     }
 }
@@ -133,10 +217,20 @@ pub struct Daemon {
     barrier_open_since: Option<Instant>,
     /// Cached artifact names (avoids a device-thread round-trip per STR).
     artifact_names: Vec<String>,
-    /// Monotonic flush epoch stamped on submissions; completions from an
-    /// older epoch (a worker that out-lived a completion timeout) are
-    /// discarded instead of being mis-attributed to the current flush.
+    /// Monotonic flush epoch stamped on submissions; the key of
+    /// `inflight`.  A completion whose epoch entry is gone is discarded
+    /// instead of being mis-attributed.
     flush_seq: u64,
+    /// In-flight flush epochs, by epoch number (BTreeMap: ordered, so
+    /// "all epochs <= e settled" is a range check).
+    inflight: BTreeMap<u64, PendingFlush>,
+    /// A flush is due but was deferred (barrier window expired or `FLH`
+    /// arrived while `inflight` was at the pipeline depth cap); started
+    /// as soon as an epoch settles.
+    flush_requested: bool,
+    /// Clients parked in `WaitFlush`/synchronous `FLH`, each waiting for
+    /// every epoch up to its recorded one to settle.
+    flush_waiters: Vec<(u64, mpsc::Sender<ServerMsg>)>,
     /// Observability counters (served by `ClientMsg::Stats`).
     stats: NodeStats,
     /// Per-tenant counters fed by completion/migration events
@@ -222,61 +316,135 @@ impl Daemon {
             barrier_open_since: None,
             artifact_names,
             flush_seq: 0,
+            inflight: BTreeMap::new(),
+            flush_requested: false,
+            flush_waiters: Vec::new(),
             stats: NodeStats::default(),
             tenant_stats: BTreeMap::new(),
         }
     }
 
-    /// Serve commands until all senders hang up.
+    /// Serve until all command senders hang up, then settle any still
+    /// in-flight epochs and return.
+    ///
+    /// The event-driven select loop of the async flush pipeline: two
+    /// pump threads forward the client command channel and the executor
+    /// completion channel into one event stream, so the daemon blocks
+    /// on exactly one receiver and handles whichever event arrives
+    /// first — a flush's device execution no longer gates the next
+    /// cycle's `SND`/`STR`.
     pub fn run(mut self, rx: mpsc::Receiver<Command>) {
+        let (ev_tx, ev_rx) = mpsc::channel::<Event>();
+        let completion_rx = self
+            .executors
+            .take_completion_rx()
+            .expect("completion receiver is taken once, by run()");
+        let done_tx = ev_tx.clone();
+        // Completion pump.  The channel disconnecting means every device
+        // worker is gone: during normal shutdown that happens after the
+        // loop below already exited (the EngineLost send fails,
+        // harmlessly); while serving it means the engine died and the
+        // loop must fail the in-flight epochs instead of leaving
+        // clients parked until the wedge timeout.
+        drop(
+            std::thread::Builder::new()
+                .name("vgpu-gvm-completions".into())
+                .spawn(move || {
+                    while let Ok(c) = completion_rx.recv() {
+                        if done_tx.send(Event::Done(c)).is_err() {
+                            return;
+                        }
+                    }
+                    let _ = done_tx.send(Event::EngineLost);
+                })
+                .expect("spawn completion pump"),
+        );
+        // Command pump: ends when every client sender hangs up.
+        drop(
+            std::thread::Builder::new()
+                .name("vgpu-gvm-commands".into())
+                .spawn(move || {
+                    for cmd in rx {
+                        if ev_tx.send(Event::Cmd(cmd)).is_err() {
+                            return;
+                        }
+                    }
+                    let _ = ev_tx.send(Event::CmdClosed);
+                })
+                .expect("spawn command pump"),
+        );
+
+        let mut cmds_closed = false;
         loop {
-            let timeout = self.next_deadline();
-            match rx.recv_timeout(timeout) {
-                Ok(cmd) => {
+            match ev_rx.recv_timeout(self.next_deadline()) {
+                Ok(Event::Cmd(cmd)) => {
                     let reply_tx = cmd.reply.clone();
                     if let Err(e) = self.handle(cmd) {
-                        let _ = reply_tx.send(ServerMsg::Err { msg: e.to_string() });
+                        let _ =
+                            reply_tx.send(ServerMsg::Err { msg: e.to_string() });
                     }
                 }
-                Err(mpsc::RecvTimeoutError::Timeout) => {
-                    // Barrier window expired: flush what we have.
-                    if let Err(e) = self.flush_batch() {
-                        log::error!("batch flush failed: {e}");
-                    }
-                }
+                Ok(Event::Done(c)) => self.on_completion(c),
+                Ok(Event::CmdClosed) => cmds_closed = true,
+                Ok(Event::EngineLost) => self.fail_all_inflight(
+                    "executor engine lost (all device workers gone)",
+                ),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
-            // Flush when the barrier fills.
-            if self.barrier_full() {
-                if let Err(e) = self.flush_batch() {
-                    log::error!("batch flush failed: {e}");
-                }
+            self.expire_wedged_epochs();
+            self.maybe_start_flush();
+            // Shutdown: the last client is gone and every epoch settled.
+            if cmds_closed && self.inflight.is_empty() {
+                break;
             }
         }
     }
 
+    /// How long the event loop may block: the barrier window (if one is
+    /// open), the oldest in-flight epoch's wedge deadline, else "idle".
     fn next_deadline(&self) -> Duration {
-        match self.barrier_open_since {
-            Some(t0) => self
-                .cfg
-                .barrier_timeout
-                .checked_sub(t0.elapsed())
-                .unwrap_or(Duration::from_millis(0)),
-            None => Duration::from_secs(3600),
+        let mut d = Duration::from_secs(3600);
+        if let Some(t0) = self.barrier_open_since {
+            d = d.min(self.cfg.barrier_timeout.saturating_sub(t0.elapsed()));
         }
+        if let Some(f) = self.inflight.values().next() {
+            d = d.min(COMPLETION_TIMEOUT.saturating_sub(f.started.elapsed()));
+        }
+        d
     }
 
     fn barrier_full(&self) -> bool {
-        let queued = self.table.queued_clients().len();
+        let queued = self.table.queued_count();
         if queued == 0 {
             return false;
         }
+        // The implicit barrier keeps its SPMD meaning: every registered
+        // client has issued STR.  Clients still Running the previous
+        // cycle haven't — the barrier waits for them (no deadlock:
+        // their completions arrive and they STR, or the barrier window
+        // flushes a partial batch), so batch composition at depth 1 is
+        // identical to the pre-pipeline daemon instead of collapsing
+        // into singleton epochs whenever one rank laps the others.
         let want = self
             .cfg
             .barrier
             .unwrap_or_else(|| self.table.len())
             .max(1);
         queued >= want
+    }
+
+    /// Clients with a job in flight (at most one job per client, so
+    /// pending-job count == running-client count).
+    fn running_clients(&self) -> usize {
+        self.inflight.values().map(|f| f.jobs.len()).sum()
+    }
+
+    /// True if `client` has a job in flight in any epoch.
+    fn client_in_flight(&self, client: ClientId) -> bool {
+        self.inflight
+            .values()
+            .any(|f| f.jobs.iter().any(|j| j.client == client))
     }
 
     /// Keep the pool's per-device segment accounting in step with a
@@ -321,13 +489,22 @@ impl Daemon {
             }
             ClientMsg::Snd { slot, tensor } => {
                 let before = self.table.get(cmd.client)?.seg_bytes;
-                // A SND after Done starts the client's next request
-                // cycle: recycle the VGPU back to Idle first.
-                if matches!(
-                    self.table.get(cmd.client)?.state,
-                    VgpuState::Done { .. } | VgpuState::Failed { .. }
-                ) {
-                    self.table.recycle(cmd.client)?;
+                // A SND after Done/Failed starts the client's next
+                // request cycle.  Input slots survive the recycle: a
+                // settled job's own inputs left the segment at
+                // submission (or were dropped at failure time — see
+                // `fail_job`), so whatever is staged now can only be
+                // next-cycle tensors pre-staged during execution (the
+                // pipeline overlap).
+                let settled = {
+                    let v = self.table.get(cmd.client)?;
+                    matches!(
+                        v.state,
+                        VgpuState::Done { .. } | VgpuState::Failed { .. }
+                    )
+                };
+                if settled {
+                    self.table.recycle_outputs(cmd.client)?;
                 }
                 let bytes = tensor.bytes() as u64;
                 let staged = self.table.stage(cmd.client, slot, tensor);
@@ -353,25 +530,48 @@ impl Daemon {
                         "unknown workload {workload:?}"
                     )));
                 }
-                // QoS admission: a tenant at its queued-job cap is
-                // throttled with a typed error, never a silent queue.
+                // QoS admission: a tenant at its job cap is throttled
+                // with a typed error, never a silent queue.  The cap
+                // bounds jobs *in the system* — queued behind the
+                // barrier AND submitted-but-uncompleted — else the
+                // async pipeline would multiply every cap by the flush
+                // depth (pre-pipeline, the blocking flush made the
+                // queued count an in-system bound by construction).
                 let tenant = self.tenant_of(cmd.client);
                 if let Some(cap) = self.pool.qos().rate_limit(&tenant) {
                     let queued = self
                         .table
-                        .queued_clients()
-                        .iter()
-                        .filter(|(c, _)| {
+                        .queued_ids()
+                        .filter(|c| {
                             self.pool.tenant_of(*c).unwrap_or(DEFAULT_TENANT)
                                 == tenant
                         })
                         .count();
-                    if queued >= cap as usize {
+                    let in_flight = self
+                        .inflight
+                        .values()
+                        .flat_map(|f| f.jobs.iter())
+                        .filter(|j| j.tenant == tenant)
+                        .count();
+                    if queued + in_flight >= cap as usize {
                         return Err(Error::gvm(format!(
-                            "tenant {tenant:?} throttled: {queued} jobs \
-                             already queued (rate limit {cap})"
+                            "tenant {tenant:?} throttled: {queued} queued \
+                             + {in_flight} in flight (rate limit {cap})"
                         )));
                     }
+                }
+                // A STR straight after Done/Failed continues the
+                // pipeline when the next cycle's inputs were pre-staged
+                // while the job executed (unread outputs are discarded —
+                // RCV first if they matter).  Without pre-staged inputs
+                // the legacy protocol error below stands.
+                let v = self.table.get(cmd.client)?;
+                if matches!(
+                    v.state,
+                    VgpuState::Done { .. } | VgpuState::Failed { .. }
+                ) && !v.in_slots.is_empty()
+                {
+                    self.table.recycle_outputs(cmd.client)?;
                 }
                 let ticket = self.table.queue(cmd.client, &workload)?;
                 if let Some(dev) = self.pool.placement(cmd.client) {
@@ -397,8 +597,10 @@ impl Daemon {
                             .send(msg)
                             .map_err(|_| Error::Ipc("client gone".into()))?;
                     }
-                    VgpuState::Queued { .. } => {
-                        // Park until the batch completes.
+                    VgpuState::Queued { .. } | VgpuState::Running { .. } => {
+                        // Park until the job completes (Queued: still
+                        // behind the barrier; Running: submitted, its
+                        // completion event is in flight).
                         self.waiters.push((cmd.client, cmd.reply));
                     }
                     VgpuState::Failed { msg } => {
@@ -421,15 +623,25 @@ impl Daemon {
             ClientMsg::Rls => {
                 let v = self.table.get(cmd.client)?;
                 let seg = v.seg_bytes;
-                // A client abandoning a still-queued job must also take
-                // its load estimate with it, or LeastLoaded would shun
-                // this device forever.
+                // A client abandoning a still-queued OR in-flight job
+                // must also take its load estimate with it, or
+                // LeastLoaded would shun this device forever.  A queued
+                // job's estimate sits on the current placement (it
+                // moves with migrations); an in-flight job's sits on
+                // the device recorded in its epoch entry (a mid-flight
+                // migration moves the binding but NOT the running
+                // estimate), so each settled entry retires at its own
+                // device and the eventual completion is discarded
+                // instead of retiring a second time.
                 let abandoned_est = match &v.state {
                     VgpuState::Queued { workload, .. } => {
                         Some(self.job_est_ms(workload))
                     }
                     _ => None,
                 };
+                for j in self.settle_inflight_entries(cmd.client) {
+                    self.pool.retire_queued_as(j.dev, &j.tenant, j.est_ms);
+                }
                 // Unbind from the pool *regardless* of how the table
                 // release goes: an accounting error there must not leak
                 // the client slot, segment bytes, or queued-work
@@ -512,9 +724,56 @@ impl Daemon {
                         bytes_staged: self.stats.bytes_staged,
                         device_ms: self.stats.device_ms,
                         clients: self.table.len() as u32,
+                        in_flight_flushes: self.inflight.len() as u32,
+                        queued_completions: self.running_clients() as u32,
                         tenants,
                     })
                     .map_err(|_| Error::Ipc("client gone".into()))?;
+            }
+            ClientMsg::Flh { wait } => {
+                // Explicit flush: push the queued batch out now instead
+                // of waiting for the barrier.  The epoch the batch will
+                // run as is `flush_seq + 1` — the event loop starts it
+                // right after this handler (or defers it at the depth
+                // cap, in which case the *next started* epoch is still
+                // that one and contains this batch).
+                let jobs = self.table.queued_count() as u32;
+                let epoch = if jobs > 0 {
+                    self.flush_requested = true;
+                    self.flush_seq + 1
+                } else {
+                    self.flush_seq
+                };
+                if wait {
+                    // Plain FLH: synchronous reply once every epoch up
+                    // to the batch's has settled (the pre-pipeline
+                    // blocking behaviour, scoped to this client).
+                    self.flush_waiters.push((epoch, cmd.reply));
+                    self.wake_flush_waiters();
+                } else {
+                    cmd.reply
+                        .send(ServerMsg::FlushTicket { epoch, jobs })
+                        .map_err(|_| Error::Ipc("client gone".into()))?;
+                }
+            }
+            ClientMsg::WaitFlush { epoch } => {
+                // Tickets only ever name epochs up to `flush_seq + 1`
+                // (the next flush to start); anything beyond is a
+                // made-up epoch that could park the reply forever on a
+                // busy node — reject it like any other protocol error.
+                if epoch > self.flush_seq + 1 {
+                    return Err(Error::protocol(format!(
+                        "WaitFlush for epoch {epoch} which no ticket \
+                         could name (latest started: {}, next: {})",
+                        self.flush_seq,
+                        self.flush_seq + 1
+                    )));
+                }
+                // Settles when every epoch <= `epoch` has settled; an
+                // epoch that will never start (its batch drained away)
+                // settles once nothing is queued or in flight.
+                self.flush_waiters.push((epoch, cmd.reply));
+                self.wake_flush_waiters();
             }
             ClientMsg::DevInfo => {
                 let devices = self
@@ -597,6 +856,11 @@ impl Daemon {
         })?;
         let (name, seg, est) = {
             let v = self.table.get(client)?;
+            // Only a *queued* (not yet submitted) job's estimate moves
+            // with the VGPU.  A Running job already executes on the
+            // source device: its estimate stays there and is retired by
+            // its completion event — moving it would double-retire on
+            // the source and leak on the target.
             let est = match &v.state {
                 VgpuState::Queued { workload, .. } => self.job_est_ms(workload),
                 _ => 0.0,
@@ -611,8 +875,13 @@ impl Daemon {
             return Ok((from, to));
         }
         // Quiesce: nothing may execute on the source lane mid-rebind.
-        // Between flushes the lane is idle and this returns immediately;
-        // a wedged lane surfaces as a typed drain-timeout error.
+        // Only the *targeted device's* in-flight work is waited on —
+        // the other executors keep running and their completions queue
+        // on the event channel.  Command service does pause for the
+        // wait, so it is bounded by `drain_timeout` and the automatic
+        // rebalancer never gets here with a busy lane (it skips them);
+        // with the source idle this returns immediately, and a wedged
+        // lane surfaces as a typed drain-timeout error.
         self.executors
             .drain(from, self.cfg.migration.drain_timeout)?;
         self.pool.note_migrated(client, &name, to, seg, est)?;
@@ -673,6 +942,20 @@ impl Daemon {
             })
             .collect();
         for p in self.rebalancer.plan(&self.pool, &queued) {
+            // Never block the event loop for automatic moves: a busy
+            // source lane means the previous epoch is still executing
+            // there — skip this round and let the next flush retry once
+            // the lane drains (rebalancing is best-effort; only an
+            // explicit `Migrate` pays the bounded drain wait).
+            if self.executors.inflight(p.from) > 0 {
+                log::info!(
+                    "rebalancer skipping client {}: source device {} lane \
+                     busy (will retry next flush)",
+                    p.client,
+                    p.from.0
+                );
+                continue;
+            }
             match self.migrate_client(p.client, Some(p.to)) {
                 Ok((from, to)) => log::info!(
                     "rebalancer drained tenant {:?} (client {}) off hot \
@@ -690,13 +973,56 @@ impl Daemon {
         }
     }
 
+    /// Start a flush if one is due (barrier full, barrier window
+    /// expired, or an explicit `FLH`) *and* the pipeline has depth for
+    /// another epoch.  At the depth cap the batch stays queued and the
+    /// request is remembered; the next epoch settle re-runs this check.
+    fn maybe_start_flush(&mut self) {
+        let window_expired = self
+            .barrier_open_since
+            .map(|t0| t0.elapsed() >= self.cfg.barrier_timeout)
+            .unwrap_or(false);
+        if !(self.flush_requested || window_expired || self.barrier_full()) {
+            return;
+        }
+        if self.table.queued_count() == 0 {
+            // Nothing left to flush (the queue drained through RLS):
+            // clear the request and settle any waiters on the epoch
+            // that will now never start.
+            self.flush_requested = false;
+            self.barrier_open_since = None;
+            self.wake_flush_waiters();
+            return;
+        }
+        if self.inflight.len() >= self.cfg.pipeline.max_in_flight_flushes.max(1)
+        {
+            self.flush_requested = true;
+            self.barrier_open_since = None;
+            return;
+        }
+        self.flush_requested = false;
+        if let Err(e) = self.start_flush() {
+            log::error!("batch flush failed: {e}");
+        }
+    }
+
     /// Flush the queued batch: rebalance, group by placed device, submit
-    /// every device's plan to its executor, then account completions as
-    /// they arrive on the reporting channel.
-    fn flush_batch(&mut self) -> Result<()> {
+    /// every device's plan to its executor, and record the epoch in the
+    /// in-flight table.  Returns immediately — completions are applied
+    /// by the event loop as they arrive ([`Daemon::on_completion`]).
+    fn start_flush(&mut self) -> Result<()> {
         self.barrier_open_since = None;
         self.auto_rebalance();
-        let queued = self.table.queued_clients();
+        // Per-client ordering: a client with a job in flight never gets
+        // a second one.  `queued_clients()` only returns `Queued` state
+        // (disjoint from `Running`), so this filter is a defensive
+        // invariant, not a hot path.
+        let queued: Vec<(ClientId, String)> = self
+            .table
+            .queued_clients()
+            .into_iter()
+            .filter(|(c, _)| !self.client_in_flight(*c))
+            .collect();
         if queued.is_empty() {
             return Ok(());
         }
@@ -709,10 +1035,10 @@ impl Daemon {
             let dev = self.pool.placement(client).unwrap_or(DeviceId(0));
             by_dev.entry(dev).or_default().push((client, workload));
         }
-        // Submit every device's batch first — the executors start
-        // draining their queues concurrently while later devices are
-        // still being staged — then wait for all completions.
-        let mut pending: Vec<(ClientId, String, f64, DeviceId)> = Vec::new();
+        // Submit every device's batch — the executors start draining
+        // their queues concurrently while later devices are still being
+        // staged.
+        let mut pending: Vec<PendingJob> = Vec::new();
         for (dev, batch) in by_dev {
             // Weighted-deficit service order: ticket order within a
             // tenant, weight-proportional interleave across tenants.
@@ -731,10 +1057,68 @@ impl Daemon {
             };
             self.submit_device_batch(dev, &ordered, &mut pending)?;
         }
-        self.drain_flush_completions(pending);
         self.stats.batches += 1;
+        if pending.is_empty() {
+            // Every job failed at staging: the epoch settled instantly.
+            self.wake_flush_waiters();
+        } else {
+            self.inflight.insert(
+                self.flush_seq,
+                PendingFlush {
+                    started: Instant::now(),
+                    jobs: pending,
+                },
+            );
+        }
+        // Inline staging failures resolve parked STPs immediately.
+        self.wake_stp_waiters();
+        Ok(())
+    }
 
-        // Wake every parked STP whose job finished.
+    /// Apply one completion event from the executor engine.  The job's
+    /// epoch entry is removed exactly once; a completion without an
+    /// entry is stale (the client `RLS`-ed mid-flight or the epoch
+    /// timed out) and is discarded — its queue estimate and tenant
+    /// attribution were already settled when the entry was removed, so
+    /// applying it again would double-account.
+    fn on_completion(&mut self, c: Completion) {
+        let Some(flush) = self.inflight.get_mut(&c.seq) else {
+            log::warn!(
+                "discarding stale completion for client {} (flush {} \
+                 already settled; current flush {})",
+                c.client,
+                c.seq,
+                self.flush_seq
+            );
+            return;
+        };
+        let Some(i) = flush.jobs.iter().position(|j| j.client == c.client)
+        else {
+            log::warn!(
+                "discarding stale completion for departed client {} \
+                 (flush {})",
+                c.client,
+                c.seq
+            );
+            return;
+        };
+        flush.jobs.remove(i);
+        let settled = flush.jobs.is_empty();
+        if settled {
+            self.inflight.remove(&c.seq);
+        }
+        self.apply_completion(c);
+        self.wake_stp_waiters();
+        if settled {
+            self.wake_flush_waiters();
+        }
+    }
+
+    /// Wake every parked STP whose job finished (or failed).
+    fn wake_stp_waiters(&mut self) {
+        if self.waiters.is_empty() {
+            return;
+        }
         let mut still_waiting = Vec::new();
         for (client, reply) in self.waiters.drain(..) {
             match self.table.get(client) {
@@ -754,18 +1138,142 @@ impl Daemon {
             }
         }
         self.waiters = still_waiting;
-        Ok(())
+    }
+
+    /// Wake every `WaitFlush`/synchronous-`FLH` waiter whose epoch —
+    /// and every epoch before it — has settled.
+    fn wake_flush_waiters(&mut self) {
+        if self.flush_waiters.is_empty() {
+            return;
+        }
+        let flush_seq = self.flush_seq;
+        // A ticket can name `flush_seq + 1` for a flush that was due
+        // but deferred; if the queue then drained (RLS) the epoch will
+        // never start — settled once nothing is queued or in flight.
+        let idle = self.inflight.is_empty()
+            && !self.flush_requested
+            && self.table.queued_count() == 0;
+        let mut waiters = std::mem::take(&mut self.flush_waiters);
+        waiters.retain(|(epoch, reply)| {
+            let settled = if *epoch <= flush_seq {
+                !self.inflight.keys().any(|k| *k <= *epoch)
+            } else {
+                idle
+            };
+            if settled {
+                let _ = reply.send(ServerMsg::Ack);
+                false
+            } else {
+                true
+            }
+        });
+        self.flush_waiters = waiters;
+    }
+
+    /// Settle (remove) a departing client's in-flight entries and
+    /// return them, so the caller (RLS) can retire each queue estimate
+    /// at the entry's *recorded* device — the device the estimate was
+    /// queued on, which the client's current placement may no longer be
+    /// after a mid-flight migration.  The eventual completion is then
+    /// discarded as stale.
+    fn settle_inflight_entries(&mut self, client: ClientId) -> Vec<PendingJob> {
+        let mut removed = Vec::new();
+        let mut settled_any = false;
+        let epochs: Vec<u64> = self.inflight.keys().copied().collect();
+        for e in epochs {
+            let f = self.inflight.get_mut(&e).expect("key just listed");
+            let before = f.jobs.len();
+            while let Some(i) =
+                f.jobs.iter().position(|j| j.client == client)
+            {
+                removed.push(f.jobs.remove(i));
+            }
+            if f.jobs.len() != before && f.jobs.is_empty() {
+                self.inflight.remove(&e);
+                settled_any = true;
+            }
+        }
+        if settled_any {
+            self.wake_flush_waiters();
+        }
+        removed
+    }
+
+    /// Fail every in-flight job of every epoch (the engine died):
+    /// estimates retire through the single failure path and parked
+    /// clients get a typed error immediately — the pre-pipeline
+    /// behaviour of the flush drain's engine-failure branch.
+    fn fail_all_inflight(&mut self, why: &str) {
+        if self.inflight.is_empty() {
+            return;
+        }
+        log::error!(
+            "{why}: failing {} in-flight job(s)",
+            self.running_clients()
+        );
+        let epochs: Vec<u64> = self.inflight.keys().copied().collect();
+        for epoch in epochs {
+            let f = self.inflight.remove(&epoch).expect("key just listed");
+            for j in f.jobs {
+                self.fail_job(
+                    j.dev,
+                    j.client,
+                    &j.tenant,
+                    j.est_ms,
+                    format!("executor lost: {why}"),
+                );
+            }
+        }
+        self.wake_stp_waiters();
+        self.wake_flush_waiters();
+    }
+
+    /// Fail out epochs older than [`COMPLETION_TIMEOUT`] (a wedged
+    /// device thread): each still-pending job retires its queue
+    /// estimate through the single failure path, so pool load cannot
+    /// drift even though the completions will never be applied.
+    fn expire_wedged_epochs(&mut self) {
+        let wedged: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, f)| f.started.elapsed() > COMPLETION_TIMEOUT)
+            .map(|(e, _)| *e)
+            .collect();
+        if wedged.is_empty() {
+            return;
+        }
+        for epoch in wedged {
+            let f = self.inflight.remove(&epoch).expect("key just listed");
+            log::error!(
+                "flush {epoch} timed out after {COMPLETION_TIMEOUT:?}; \
+                 failing {} in-flight job(s)",
+                f.jobs.len()
+            );
+            for j in f.jobs {
+                self.fail_job(
+                    j.dev,
+                    j.client,
+                    &j.tenant,
+                    j.est_ms,
+                    format!(
+                        "no executor completion within {COMPLETION_TIMEOUT:?}"
+                    ),
+                );
+            }
+        }
+        self.wake_stp_waiters();
+        self.wake_flush_waiters();
     }
 
     /// Plan one device's batch and hand its computes, in plan order, to
     /// that device's executor queue.  Jobs whose inputs cannot be staged
-    /// fail inline; everything submitted is recorded in `pending` for
-    /// the completion drain.
+    /// fail inline; everything submitted is recorded in `pending` (the
+    /// epoch's in-flight entries) and its VGPU transitions to Running.
     fn submit_device_batch(
         &mut self,
         dev: DeviceId,
         queued: &[(ClientId, String)],
-        pending: &mut Vec<(ClientId, String, f64, DeviceId)>,
+        pending: &mut Vec<PendingJob>,
     ) -> Result<()> {
         // Build jobs: stage profiles come from the suite when known
         // (paper benchmarks), else a neutral profile from byte counts.
@@ -847,7 +1355,20 @@ impl Daemon {
                     };
                     match self.executors.submit(dev, sub) {
                         Ok(()) => {
-                            pending.push((*client, tenant, est_ms, dev));
+                            if let Err(e) = self.table.mark_running(*client) {
+                                // Unreachable (the client was Queued a
+                                // moment ago); completion application
+                                // is permissive, so just surface it.
+                                log::warn!(
+                                    "client {client} not marked running: {e}"
+                                );
+                            }
+                            pending.push(PendingJob {
+                                client: *client,
+                                tenant,
+                                est_ms,
+                                dev,
+                            });
                         }
                         Err(e) => {
                             self.fail_job(
@@ -866,52 +1387,6 @@ impl Daemon {
             }
         }
         Ok(())
-    }
-
-    /// Wait until every submitted job of this flush has reported back,
-    /// applying each completion to stats/pool/table.  If the engine dies
-    /// mid-flush, the still-pending jobs fail with a typed error instead
-    /// of leaving clients parked forever.
-    fn drain_flush_completions(
-        &mut self,
-        mut pending: Vec<(ClientId, String, f64, DeviceId)>,
-    ) {
-        while !pending.is_empty() {
-            match self.executors.recv_completion(COMPLETION_TIMEOUT) {
-                Ok(c) if c.seq != self.flush_seq => {
-                    // A worker out-lived an earlier flush's completion
-                    // timeout: that job was already failed and its
-                    // estimate retired — applying it now would
-                    // double-account and hand stale outputs to whatever
-                    // the client queued next.
-                    log::warn!(
-                        "discarding stale completion for client {} \
-                         (flush {} vs current {})",
-                        c.client,
-                        c.seq,
-                        self.flush_seq
-                    );
-                }
-                Ok(c) => {
-                    pending.retain(|(client, ..)| *client != c.client);
-                    self.apply_completion(c);
-                }
-                Err(e) => {
-                    log::error!("executor engine failure: {e}");
-                    for (client, tenant, est_ms, dev) in
-                        std::mem::take(&mut pending)
-                    {
-                        self.fail_job(
-                            dev,
-                            client,
-                            &tenant,
-                            est_ms,
-                            format!("executor lost: {e}"),
-                        );
-                    }
-                }
-            }
-        }
     }
 
     /// Account one real completion event: done counters move **only**
@@ -960,6 +1435,27 @@ impl Daemon {
         self.stats.jobs_failed += 1;
         self.pool.retire_queued_as(dev, tenant, est_ms);
         self.tenant_counters(tenant).jobs_failed += 1;
+        // A job failing *before* submission (still Queued) holds its own
+        // cycle's inputs; drop them now, with accounting, so a Failed
+        // VGPU's input slots can only ever hold next-cycle pre-staging —
+        // which the recycle on the next SND/STR then preserves, exactly
+        // like the Done path.  A Running job's inputs were moved out at
+        // submission, so anything staged since is kept.
+        let pre_submit = self
+            .table
+            .get(client)
+            .map(|v| matches!(v.state, VgpuState::Queued { .. }))
+            .unwrap_or(false);
+        if pre_submit {
+            let before =
+                self.table.get(client).map(|v| v.seg_bytes).unwrap_or(0);
+            if let Err(e) = self.table.recycle(client) {
+                log::warn!("failed-job recycle for client {client}: {e}");
+            }
+            let after =
+                self.table.get(client).map(|v| v.seg_bytes).unwrap_or(before);
+            self.sync_pool_mem(client, before, after);
+        }
         if let Err(e) = self.table.fail(client, msg) {
             log::warn!("failure for vanished client {client}: {e}");
         }

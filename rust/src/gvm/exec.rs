@@ -93,7 +93,10 @@ struct DeviceExecutor {
 /// at the shared device thread).
 pub struct ExecutorPool {
     workers: Vec<DeviceExecutor>,
-    completion_rx: mpsc::Receiver<Completion>,
+    /// Completion event channel.  `None` after
+    /// [`ExecutorPool::take_completion_rx`] moved it into an external
+    /// event loop (the async-pipeline daemon selects over it).
+    completion_rx: Option<mpsc::Receiver<Completion>>,
 }
 
 impl ExecutorPool {
@@ -142,7 +145,7 @@ impl ExecutorPool {
         }
         Ok(Self {
             workers,
-            completion_rx,
+            completion_rx: Some(completion_rx),
         })
     }
 
@@ -192,15 +195,50 @@ impl ExecutorPool {
             .unwrap_or(0)
     }
 
-    /// Wait for one completion (any device).
+    /// Wait for one completion (any device).  Errors once the receiver
+    /// was moved out via [`ExecutorPool::take_completion_rx`].
     pub fn recv_completion(&self, timeout: Duration) -> Result<Completion> {
-        self.completion_rx.recv_timeout(timeout).map_err(|e| match e {
+        let rx = self.completion_rx.as_ref().ok_or_else(|| {
+            Error::Runtime("completion receiver was taken".into())
+        })?;
+        rx.recv_timeout(timeout).map_err(|e| match e {
             mpsc::RecvTimeoutError::Timeout => Error::Runtime(format!(
                 "no executor completion within {timeout:?}"
             )),
             mpsc::RecvTimeoutError::Disconnected => {
                 Error::Runtime("all device executors are gone".into())
             }
+        })
+    }
+
+    /// Non-blocking poll for one completion: `Ok(None)` when nothing has
+    /// reported yet.  An auxiliary surface for external embedders that
+    /// drive the pool directly (benches, custom schedulers) — the
+    /// daemon itself does not poll; it moves the receiver out via
+    /// [`ExecutorPool::take_completion_rx`] and selects over it in its
+    /// event loop.
+    pub fn try_recv_completion(&self) -> Result<Option<Completion>> {
+        let rx = self.completion_rx.as_ref().ok_or_else(|| {
+            Error::Runtime("completion receiver was taken".into())
+        })?;
+        match rx.try_recv() {
+            Ok(c) => Ok(Some(c)),
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Err(Error::Runtime("all device executors are gone".into()))
+            }
+        }
+    }
+
+    /// Move the completion receiver out of the pool so an event loop can
+    /// `select` over it alongside other channels (the daemon forwards it
+    /// into its command stream).  After this, `recv_completion` /
+    /// `try_recv_completion` return errors; [`ExecutorPool::drain`] and
+    /// [`ExecutorPool::inflight`] keep working (counter-based).  Errors
+    /// on a second take.
+    pub fn take_completion_rx(&mut self) -> Result<mpsc::Receiver<Completion>> {
+        self.completion_rx.take().ok_or_else(|| {
+            Error::Runtime("completion receiver already taken".into())
         })
     }
 
@@ -488,6 +526,41 @@ mod tests {
     fn submit_out_of_range_is_an_error() {
         let pool = ExecutorPool::new(vec![sleepy_handle(0)]).unwrap();
         assert!(pool.submit(DeviceId(3), sub(1)).is_err());
+    }
+
+    #[test]
+    fn try_recv_polls_without_blocking() {
+        let pool = ExecutorPool::new(vec![sleepy_handle(20)]).unwrap();
+        assert!(pool.try_recv_completion().unwrap().is_none());
+        pool.submit(DeviceId(0), sub(1)).unwrap();
+        // Still executing: the poll must return immediately, empty.
+        assert!(pool.try_recv_completion().unwrap().is_none());
+        pool.drain(DeviceId(0), Duration::from_secs(5)).unwrap();
+        // Drain returns once the worker decremented in-flight; the send
+        // races that decrement, so poll briefly.
+        let t0 = Instant::now();
+        loop {
+            if let Some(c) = pool.try_recv_completion().unwrap() {
+                assert_eq!(c.client, 1);
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5), "completion lost");
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+
+    #[test]
+    fn taking_the_completion_rx_disables_pool_side_recv() {
+        let mut pool = ExecutorPool::new(vec![sleepy_handle(0)]).unwrap();
+        let rx = pool.take_completion_rx().unwrap();
+        assert!(pool.take_completion_rx().is_err(), "second take");
+        assert!(pool.recv_completion(Duration::from_millis(10)).is_err());
+        assert!(pool.try_recv_completion().is_err());
+        pool.submit(DeviceId(0), sub(7)).unwrap();
+        let c = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(c.client, 7);
+        // Drain still works without the receiver (counter-based).
+        pool.drain(DeviceId(0), Duration::from_secs(5)).unwrap();
     }
 
     fn rebalance_pool(qos: QosConfig) -> DevicePool {

@@ -20,7 +20,10 @@
 //! wall-clock time, completions report back over a channel) and hosts
 //! live VGPU migration: a drain/rebind handshake triggered explicitly
 //! (`ClientMsg::Migrate`, `vgpu migrate`) or by the QoS-aware
-//! [`exec::Rebalancer`].
+//! [`exec::Rebalancer`].  The [`daemon`] consumes those completions
+//! through a single event-driven loop — the **async flush pipeline** —
+//! so one flush's device execution overlaps the next cycle's `SND`/`STR`
+//! staging, bounded by `[pipeline] max_in_flight_flushes`.
 
 pub mod daemon;
 pub mod devices;
@@ -31,7 +34,7 @@ pub mod scheduler;
 pub mod sim_backend;
 pub mod vgpu;
 
-pub use daemon::{Command, Daemon, DaemonConfig};
+pub use daemon::{Command, Daemon, DaemonConfig, PipelineConfig};
 pub use devices::{DevicePool, PlacementPolicy, PoolConfig};
 pub use exec::{
     ExecutorPool, MigrationConfig, MigrationPlan, Rebalancer, Submission,
@@ -40,8 +43,9 @@ pub use plan::{CtxMode, Job, Plan, PlanOp};
 pub use qos::{QosConfig, TenantShare, WeightedDeficitQueue};
 pub use scheduler::{plan_batch, Policy, StyleRule};
 pub use sim_backend::{
-    simulate, simulate_pool, simulate_pool_qos, simulate_spmd, BatchTiming,
-    PoolTiming, QosPoolTiming, TenantTiming,
+    simulate, simulate_pool, simulate_pool_pipelined, simulate_pool_qos,
+    simulate_spmd, BatchTiming, PipelineTiming, PoolTiming, QosPoolTiming,
+    TenantTiming,
 };
 
 use std::path::PathBuf;

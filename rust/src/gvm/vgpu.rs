@@ -37,6 +37,17 @@ pub enum VgpuState {
         /// Ticket returned to the client.
         ticket: u64,
     },
+    /// Submitted to a device executor; the completion event is still in
+    /// flight.  The job's inputs were moved out of the segment at
+    /// submission, so the client may already `SND` the *next* cycle's
+    /// tensors while this one executes (the async flush pipeline) — but
+    /// a second `STR` must wait for the completion.
+    Running {
+        /// Workload executing.
+        workload: String,
+        /// Ticket returned to the client at STR time.
+        ticket: u64,
+    },
     /// Batch executed; results available in the output slots.
     Done {
         /// Device wall time of this job inside the GVM (ms).
@@ -173,8 +184,13 @@ impl VgpuTable {
         let mut freed: u64 = 0;
         {
             let v = self.get_mut(id)?;
-            if !matches!(v.state, VgpuState::Idle) {
-                return Err(Error::protocol("SND while a job is in flight"));
+            // Idle stages the current cycle; Running stages the *next*
+            // one (this cycle's inputs were moved out at submission, so
+            // the slots are free) — that overlap is the point of the
+            // async flush pipeline.  Only Queued rejects: the job is
+            // behind the barrier with its inputs still in the segment.
+            if !matches!(v.state, VgpuState::Idle | VgpuState::Running { .. }) {
+                return Err(Error::protocol("SND while a job is queued"));
             }
             let slot = slot as usize;
             if slot >= 64 {
@@ -208,6 +224,25 @@ impl VgpuTable {
         };
         self.next_ticket += 1;
         Ok(ticket)
+    }
+
+    /// Transition a queued job to Running at submission time: its
+    /// inputs have been moved to a device executor and the completion
+    /// event is now in flight.  Errors if the client has no queued job.
+    pub fn mark_running(&mut self, id: ClientId) -> Result<()> {
+        let v = self.get_mut(id)?;
+        match &v.state {
+            VgpuState::Queued { workload, ticket } => {
+                v.state = VgpuState::Running {
+                    workload: workload.clone(),
+                    ticket: *ticket,
+                };
+                Ok(())
+            }
+            other => Err(Error::protocol(format!(
+                "cannot submit a job in state {other:?}"
+            ))),
+        }
     }
 
     /// Mark a client's job failed (per-job failure isolation: other
@@ -274,6 +309,41 @@ impl VgpuTable {
         }
         self.mem_used = sub_checked(self.mem_used, freed, "node budget")?;
         Ok(())
+    }
+
+    /// Reset a settled (Done/Failed) VGPU to Idle for its next cycle,
+    /// *preserving* any inputs staged since submission.  A settled
+    /// job's own inputs are gone from the segment (moved out at submit
+    /// time, or dropped at failure time by the daemon's failure path),
+    /// so whatever sits in `in_slots` now was `SND`-ed for the next
+    /// cycle while the job executed (the async flush pipeline) — a full
+    /// [`VgpuTable::recycle`] would drop it.
+    pub fn recycle_outputs(&mut self, id: ClientId) -> Result<()> {
+        let v = self.get_mut(id)?;
+        v.out_slots.clear();
+        v.state = VgpuState::Idle;
+        Ok(())
+    }
+
+    /// Number of clients currently queued behind the barrier — the
+    /// cheap counting form of [`VgpuTable::queued_clients`] (no clones,
+    /// no sort) for the daemon's per-event barrier checks.
+    pub fn queued_count(&self) -> usize {
+        self.vgpus
+            .values()
+            .filter(|v| matches!(v.state, VgpuState::Queued { .. }))
+            .count()
+    }
+
+    /// Ids of clients currently queued behind the barrier, unsorted and
+    /// without workload clones — for counting/filtering (e.g. the QoS
+    /// admission check); use [`VgpuTable::queued_clients`] when the
+    /// ticket-ordered list is needed.
+    pub fn queued_ids(&self) -> impl Iterator<Item = ClientId> + '_ {
+        self.vgpus
+            .iter()
+            .filter(|(_, v)| matches!(v.state, VgpuState::Queued { .. }))
+            .map(|(id, _)| *id)
     }
 
     /// All clients currently queued behind the barrier.
@@ -451,6 +521,47 @@ mod tests {
         tbl.release(a).unwrap();
         tbl.release(b).unwrap();
         assert_eq!(tbl.mem_used(), 0);
+    }
+
+    #[test]
+    fn running_state_allows_next_cycle_staging() {
+        let mut tbl = VgpuTable::new(1 << 20, 8);
+        let id = tbl.register("r").unwrap();
+        tbl.stage(id, 0, t(4)).unwrap();
+        tbl.queue(id, "w").unwrap();
+        assert!(tbl.mark_running(99).is_err(), "unknown client");
+        // Submission: inputs move out, Queued -> Running.
+        let moved = tbl.take_staged_inputs(id).unwrap();
+        assert_eq!(moved.len(), 1);
+        tbl.mark_running(id).unwrap();
+        assert!(matches!(
+            tbl.get(id).unwrap().state,
+            VgpuState::Running { .. }
+        ));
+        assert!(tbl.mark_running(id).is_err(), "double submit");
+        // Next-cycle staging overlaps execution; a second STR does not.
+        tbl.stage(id, 0, t(8)).unwrap();
+        assert!(tbl.queue(id, "w").is_err());
+        // Completion keeps the pre-staged inputs through the recycle.
+        tbl.complete(id, vec![t(2)], 1.0).unwrap();
+        tbl.recycle_outputs(id).unwrap();
+        assert_eq!(tbl.get(id).unwrap().seg_bytes, 32, "pre-staged kept");
+        assert!(tbl.get(id).unwrap().out_slots.is_empty());
+        let ticket = tbl.queue(id, "w").unwrap();
+        assert!(ticket > 1);
+    }
+
+    #[test]
+    fn queued_clients_exclude_running() {
+        let mut tbl = VgpuTable::new(1 << 20, 8);
+        let a = tbl.register("a").unwrap();
+        let b = tbl.register("b").unwrap();
+        tbl.queue(a, "w").unwrap();
+        tbl.queue(b, "w").unwrap();
+        tbl.mark_running(a).unwrap();
+        let q: Vec<ClientId> =
+            tbl.queued_clients().iter().map(|(i, _)| *i).collect();
+        assert_eq!(q, vec![b]);
     }
 
     #[test]

@@ -28,6 +28,7 @@
 //! | multi-gpu | device pool: procs x devices x placement policy |
 //! | multi-gpu-cluster | thin/fat node mixes x placement, executor makespan |
 //! | qos     | per-tenant QoS: weights x policies, achieved shares |
+//! | pipeline | async flush pipeline: depth x devices x batch, overlap gain |
 //! | ext-multigpu | extension: multi-GPU node scaling |
 //! | ext-cluster | extension: cluster weak scaling (Fig. 11) |
 //! | ext-fig18-socket | extension: Fig. 18 over the socket transport |
@@ -35,6 +36,7 @@
 pub mod ablations;
 pub mod devices;
 pub mod figures;
+pub mod pipeline;
 pub mod qos;
 pub mod tables;
 
@@ -100,6 +102,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "multi-gpu",
     "multi-gpu-cluster",
     "qos",
+    "pipeline",
     "ext-multigpu",
     "ext-cluster",
     "ext-fig18-socket",
@@ -130,6 +133,7 @@ pub fn run(id: &str) -> Result<ExpOutput> {
         "multi-gpu" => devices::multi_gpu_pool(),
         "multi-gpu-cluster" => devices::multi_gpu_cluster(),
         "qos" => qos::qos_sweep(),
+        "pipeline" => pipeline::pipeline_sweep(),
         "ext-multigpu" => ablations::multi_gpu_scaling(),
         "ext-cluster" => ablations::cluster_scaling(),
         "ext-fig18-socket" => figures::overhead_socket_figure(),

@@ -1,0 +1,156 @@
+//! Extension experiment for the async flush pipeline
+//! (`vgpu exp pipeline`): flush depth × device count × batch size sweep
+//! over [`crate::gvm::sim_backend::simulate_pool_pipelined`], reporting
+//! the end-to-end makespan of back-to-back flush cycles against the
+//! serialized (depth-1, pre-pipeline) daemon and the resulting overlap
+//! gain.  `cargo bench --bench pipeline` measures the same comparison
+//! on the real event-driven daemon with sleep-backed device handles.
+
+use super::ExpOutput;
+use crate::config::DeviceConfig;
+use crate::gvm::devices::PlacementPolicy;
+use crate::gvm::scheduler::Policy;
+use crate::gvm::sim_backend::simulate_pool_pipelined;
+use crate::util::table::{f2, f3, Table};
+use crate::workloads::Suite;
+use crate::Result;
+
+/// Flush depths swept per (workload, devices, procs) cell.
+const DEPTH_SWEEP: [usize; 3] = [1, 2, 4];
+
+/// Device counts swept.
+const GPU_SWEEP: [usize; 3] = [1, 2, 4];
+
+/// Back-to-back flush cycles per cell.
+const CYCLES: usize = 4;
+
+/// The `pipeline` experiment: a compute-bound and an IO-bound workload,
+/// 8/16 SPMD processes, 1–4 devices, pipeline depth 1/2/4.  Depth 1 is
+/// the serialized pre-pipeline daemon; the overlap gain column is the
+/// serialized-over-pipelined makespan ratio for `CYCLES` back-to-back
+/// flush cycles.
+pub fn pipeline_sweep() -> Result<ExpOutput> {
+    let suite = Suite::paper_defaults();
+    let spec = DeviceConfig::tesla_c2070();
+    let mut table = Table::new(&[
+        "workload",
+        "procs",
+        "devices",
+        "depth",
+        "stage_ms",
+        "exec_ms",
+        "serialized_ms",
+        "pipelined_ms",
+        "overlap_gain",
+    ]);
+    let mut notes = Vec::new();
+    let mut accept: Option<(f64, f64)> = None; // ES 8p, 2 dev: depth 1 vs 2
+
+    for name in ["electrostatics", "vecadd"] {
+        let w = suite.get(name).unwrap();
+        for procs in [8usize, 16] {
+            for g in GPU_SWEEP {
+                let specs = vec![spec.clone(); g];
+                for depth in DEPTH_SWEEP {
+                    let t = simulate_pool_pipelined(
+                        w,
+                        procs,
+                        &specs,
+                        PlacementPolicy::LeastLoaded,
+                        &Policy::default(),
+                        CYCLES,
+                        depth,
+                    )?;
+                    if name == "electrostatics" && procs == 8 && g == 2 {
+                        if depth == 1 {
+                            accept = Some((t.pipelined_ms, f64::NAN));
+                        } else if depth == 2 {
+                            if let Some((d1, _)) = accept {
+                                accept = Some((d1, t.pipelined_ms));
+                            }
+                        }
+                    }
+                    table.row(vec![
+                        name.to_string(),
+                        procs.to_string(),
+                        g.to_string(),
+                        depth.to_string(),
+                        f2(t.stage_ms),
+                        f2(t.exec_ms),
+                        f2(t.serialized_ms),
+                        f2(t.pipelined_ms),
+                        f3(t.overlap_gain()),
+                    ]);
+                }
+            }
+        }
+    }
+
+    if let Some((d1, d2)) = accept {
+        notes.push(format!(
+            "ES, 8 procs, 2 devices, {CYCLES} back-to-back cycles: depth-2 \
+             makespan {d2:.2} ms vs depth-1 (serialized) {d1:.2} ms \
+             (acceptance bar: strictly below the serialized daemon)"
+        ));
+    }
+    notes.push(
+        "depth 1 reproduces the pre-pipeline daemon (stage then execute, \
+         serialized); depth 2 overlaps cycle k+1's SND/STR staging with \
+         cycle k's device execution, so the slower phase paces the \
+         makespan and the faster one is paid once as ramp-up.  A \
+         two-phase pipeline is fully overlapped at depth 2 — the depth-4 \
+         rows match depth 2, which is why [pipeline] \
+         max_in_flight_flushes = 2 is the recommended production \
+         setting.  Compute-bound kernels (ES) hide all of staging; \
+         IO-bound kernels (VecAdd) flip to staging-bound once enough \
+         devices shrink the per-device batch"
+            .into(),
+    );
+    Ok(ExpOutput {
+        id: "pipeline".into(),
+        title: "Async flush pipeline: depth x devices x batch size, \
+                overlap gain vs the serialized daemon"
+            .into(),
+        table,
+        notes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_table_covers_the_sweep() {
+        let out = pipeline_sweep().unwrap();
+        // 2 workloads x 2 proc counts x 3 device counts x 3 depths.
+        assert_eq!(out.table.len(), 36);
+    }
+
+    #[test]
+    fn acceptance_note_present_and_depth_two_wins() {
+        let out = pipeline_sweep().unwrap();
+        assert!(
+            out.notes.iter().any(|n| n.contains("acceptance bar")),
+            "{:?}",
+            out.notes
+        );
+        let suite = Suite::paper_defaults();
+        let w = suite.get("electrostatics").unwrap();
+        let specs = vec![DeviceConfig::tesla_c2070(); 2];
+        let run = |depth| {
+            simulate_pool_pipelined(
+                w,
+                8,
+                &specs,
+                PlacementPolicy::LeastLoaded,
+                &Policy::default(),
+                CYCLES,
+                depth,
+            )
+            .unwrap()
+            .pipelined_ms
+        };
+        assert!(run(2) < run(1), "{} vs {}", run(2), run(1));
+    }
+}

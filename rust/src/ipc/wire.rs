@@ -62,6 +62,24 @@ pub enum ClientMsg {
         /// device).
         target: u32,
     },
+    /// `FLH()`: flush the queued batch now (async-pipeline extension)
+    /// instead of waiting for the SPMD barrier.
+    Flh {
+        /// `true` = synchronous: the reply (`Ack`) arrives once every
+        /// epoch up to the flushed batch's has settled.  `false` = the
+        /// non-blocking form: the reply is an immediate
+        /// [`ServerMsg::FlushTicket`] to pass to `WaitFlush` later.
+        wait: bool,
+    },
+    /// Park until every flush epoch up to and including `epoch` has
+    /// settled (pairs with the ticket from a non-blocking `Flh`).  An
+    /// epoch beyond what any ticket could name (more than one past the
+    /// latest started flush) is rejected as a protocol error rather
+    /// than parked forever.
+    WaitFlush {
+        /// Epoch from [`ServerMsg::FlushTicket`].
+        epoch: u64,
+    },
 }
 
 /// Per-tenant counter row carried by [`ServerMsg::Stats`] — fed by the
@@ -140,6 +158,12 @@ pub enum ServerMsg {
         device_ms: f64,
         /// Currently registered clients.
         clients: u32,
+        /// Flush epochs currently in flight (async-pipeline depth
+        /// gauge; bounded by `[pipeline] max_in_flight_flushes`).
+        in_flight_flushes: u32,
+        /// Submitted jobs whose completion events are still pending,
+        /// across all in-flight epochs.
+        queued_completions: u32,
         /// Per-tenant counters, in tenant-id order (completion-event
         /// fed; empty until a tenant registers).
         tenants: Vec<TenantStatsEntry>,
@@ -157,6 +181,15 @@ pub enum ServerMsg {
         moved: u32,
         /// Device index the (last) VGPU landed on.
         device: u32,
+    },
+    /// Immediate reply to a non-blocking `FLH`: a handle on the flush
+    /// epoch the queued batch will run as (async-pipeline extension).
+    FlushTicket {
+        /// Epoch to pass to `WaitFlush` (settles when every epoch up to
+        /// it has settled).
+        epoch: u64,
+        /// Jobs that were queued when the flush was requested.
+        jobs: u32,
     },
 }
 
@@ -210,6 +243,14 @@ impl ClientMsg {
                 put_str(name, &mut out);
                 out.extend_from_slice(&target.to_le_bytes());
             }
+            ClientMsg::Flh { wait } => {
+                out.push(9);
+                out.push(u8::from(*wait));
+            }
+            ClientMsg::WaitFlush { epoch } => {
+                out.push(10);
+                out.extend_from_slice(&epoch.to_le_bytes());
+            }
         }
         out
     }
@@ -244,6 +285,19 @@ impl ClientMsg {
             8 => ClientMsg::Migrate {
                 name: get_str(buf, &mut pos)?,
                 target: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
+            },
+            9 => {
+                let [w] = read_arr::<1>(buf, &mut pos)?;
+                match w {
+                    0 => ClientMsg::Flh { wait: false },
+                    1 => ClientMsg::Flh { wait: true },
+                    b => {
+                        return Err(Error::Ipc(format!("bad FLH wait byte {b}")))
+                    }
+                }
+            }
+            10 => ClientMsg::WaitFlush {
+                epoch: read_u64(buf, &mut pos)?,
             },
             t => return Err(Error::Ipc(format!("bad client tag {t}"))),
         };
@@ -281,6 +335,8 @@ impl ServerMsg {
                 bytes_staged,
                 device_ms,
                 clients,
+                in_flight_flushes,
+                queued_completions,
                 tenants,
             } => {
                 out.push(5);
@@ -290,6 +346,8 @@ impl ServerMsg {
                 out.extend_from_slice(&bytes_staged.to_le_bytes());
                 out.extend_from_slice(&device_ms.to_le_bytes());
                 out.extend_from_slice(&clients.to_le_bytes());
+                out.extend_from_slice(&in_flight_flushes.to_le_bytes());
+                out.extend_from_slice(&queued_completions.to_le_bytes());
                 out.extend_from_slice(&(tenants.len() as u32).to_le_bytes());
                 for t in tenants {
                     put_str(&t.tenant, &mut out);
@@ -319,6 +377,11 @@ impl ServerMsg {
                 out.push(7);
                 out.extend_from_slice(&moved.to_le_bytes());
                 out.extend_from_slice(&device.to_le_bytes());
+            }
+            ServerMsg::FlushTicket { epoch, jobs } => {
+                out.push(8);
+                out.extend_from_slice(&epoch.to_le_bytes());
+                out.extend_from_slice(&jobs.to_le_bytes());
             }
         }
         out
@@ -354,6 +417,10 @@ impl ServerMsg {
                 let bytes_staged = read_u64(buf, &mut pos)?;
                 let device_ms = f64::from_le_bytes(read_arr::<8>(buf, &mut pos)?);
                 let clients = u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
+                let in_flight_flushes =
+                    u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
+                let queued_completions =
+                    u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
                 let n = u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
                 if n > 4096 {
                     return Err(Error::Ipc(format!(
@@ -379,6 +446,8 @@ impl ServerMsg {
                     bytes_staged,
                     device_ms,
                     clients,
+                    in_flight_flushes,
+                    queued_completions,
                     tenants,
                 }
             }
@@ -407,6 +476,10 @@ impl ServerMsg {
             7 => ServerMsg::Migrated {
                 moved: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
                 device: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
+            },
+            8 => ServerMsg::FlushTicket {
+                epoch: read_u64(buf, &mut pos)?,
+                jobs: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
             },
             t => return Err(Error::Ipc(format!("bad server tag {t}"))),
         };
@@ -456,6 +529,15 @@ mod tests {
             name: "rank3".into(),
             target: 1,
         });
+        roundtrip_c(ClientMsg::Flh { wait: false });
+        roundtrip_c(ClientMsg::Flh { wait: true });
+        roundtrip_c(ClientMsg::WaitFlush { epoch: 42 });
+    }
+
+    #[test]
+    fn flh_rejects_bad_wait_byte() {
+        assert!(ClientMsg::decode(&[9, 2]).is_err());
+        assert!(ClientMsg::decode(&[9]).is_err());
     }
 
     #[test]
@@ -479,6 +561,8 @@ mod tests {
             bytes_staged: 1 << 30,
             device_ms: 123.5,
             clients: 8,
+            in_flight_flushes: 0,
+            queued_completions: 0,
             tenants: vec![],
         });
         roundtrip_s(ServerMsg::Stats {
@@ -488,6 +572,8 @@ mod tests {
             bytes_staged: 1 << 30,
             device_ms: 123.5,
             clients: 8,
+            in_flight_flushes: 2,
+            queued_completions: 5,
             tenants: vec![
                 TenantStatsEntry {
                     tenant: "gold".into(),
@@ -509,6 +595,7 @@ mod tests {
             moved: 2,
             device: 1,
         });
+        roundtrip_s(ServerMsg::FlushTicket { epoch: 9, jobs: 4 });
         roundtrip_s(ServerMsg::Devices {
             self_device: 1,
             devices: vec![

@@ -55,6 +55,60 @@ fn dispatch(cmd: Cmd) -> Result<()> {
             name,
             target,
         } => cmd_migrate(&socket, &name, target),
+        Cmd::Stats { socket } => cmd_stats(&socket),
+    }
+}
+
+/// Admin verb: render a served GVM's node statistics, including the
+/// async-pipeline gauges (`in_flight_flushes` / `queued_completions`)
+/// and the per-tenant counter rows.  Talks the raw wire protocol — no
+/// REQ handshake, so it never occupies a VGPU slot itself.
+fn cmd_stats(socket: &str) -> Result<()> {
+    use vgpu::ipc::transport::{Transport, UnixTransport};
+    use vgpu::ipc::{ClientMsg, ServerMsg};
+    let mut t = UnixTransport::connect(socket)?;
+    match t.call(ClientMsg::Stats)? {
+        ServerMsg::Stats {
+            batches,
+            jobs_ok,
+            jobs_failed,
+            bytes_staged,
+            device_ms,
+            clients,
+            in_flight_flushes,
+            queued_completions,
+            tenants,
+        } => {
+            println!("node statistics ({socket}):");
+            println!("  batches flushed      {batches}");
+            println!("  jobs ok / failed     {jobs_ok} / {jobs_failed}");
+            println!("  bytes staged         {bytes_staged}");
+            println!("  device time          {device_ms:.2} ms");
+            println!("  clients registered   {clients}");
+            println!(
+                "  pipeline             {in_flight_flushes} flush(es) in \
+                 flight, {queued_completions} completion(s) pending"
+            );
+            if !tenants.is_empty() {
+                println!(
+                    "  {:16} {:>8} {:>8} {:>12} {:>10}",
+                    "tenant", "ok", "failed", "device_ms", "migrations"
+                );
+                for t in &tenants {
+                    println!(
+                        "  {:16} {:>8} {:>8} {:>12.2} {:>10}",
+                        t.tenant,
+                        t.jobs_ok,
+                        t.jobs_failed,
+                        t.device_ms,
+                        t.migrations
+                    );
+                }
+            }
+            Ok(())
+        }
+        ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
+        other => Err(Error::Ipc(format!("expected Stats, got {other:?}"))),
     }
 }
 

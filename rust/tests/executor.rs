@@ -1,7 +1,9 @@
 //! Executor-engine integration tests: the daemon drains per-device
 //! batches through independent worker threads (wall-clock concurrency),
 //! accounting moves to the completion path (a failed job never counts
-//! as serviced), and per-tenant counters ride the Stats wire message.
+//! as serviced), per-tenant counters ride the Stats wire message, and
+//! the async flush pipeline's epoch bookkeeping never double-accounts —
+//! neither for interleaved epochs nor for stale completions.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -9,9 +11,10 @@ use std::time::{Duration, Instant};
 use vgpu::config::DeviceConfig;
 use vgpu::gvm::devices::{PlacementPolicy, PoolConfig};
 use vgpu::gvm::qos::QosConfig;
-use vgpu::gvm::{Command, Daemon, DaemonConfig};
+use vgpu::gvm::{Command, Daemon, DaemonConfig, PipelineConfig};
 use vgpu::ipc::{ClientMsg, ServerMsg};
 use vgpu::runtime::{ExecHandle, TensorValue};
+use vgpu::util::rng::SplitMix64;
 use vgpu::Error;
 
 fn call(tx: &mpsc::Sender<Command>, client: u64, msg: ClientMsg) -> ServerMsg {
@@ -201,6 +204,178 @@ fn failed_batch_never_increments_done_counters() {
             assert_eq!(devices[0].jobs_done, 1, "{devices:?}");
         }
         other => panic!("{other:?}"),
+    }
+}
+
+/// Regression (ISSUE satellite): a completion that arrives after its
+/// epoch entry was settled (here: the client RLS-ed mid-flight) is
+/// discarded WITHOUT dropping the settle-time accounting — the queue
+/// estimate was retired exactly once at RLS, so pool load must read
+/// zero, not drift upward forever (and not go negative either).
+#[test]
+fn stale_completion_discard_still_settles_pool_accounting() {
+    let exec = ExecHandle::mock(vec!["slow".into()], |_, inputs| {
+        std::thread::sleep(Duration::from_millis(120));
+        Ok(vec![inputs[0].clone()])
+    });
+    let cfg = DaemonConfig {
+        barrier: Some(1),
+        barrier_timeout: Duration::from_millis(50),
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::new(cfg, exec);
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+
+    let a = register_as(&tx, "a", "doomed");
+    call(&tx, a, ClientMsg::Snd { slot: 0, tensor: t4() });
+    // STR returns immediately (the flush no longer blocks the daemon)…
+    assert!(matches!(
+        call(&tx, a, ClientMsg::Str { workload: "slow".into() }),
+        ServerMsg::Queued { .. }
+    ));
+    // …so the RLS lands while the job is still executing.
+    assert!(matches!(call(&tx, a, ClientMsg::Rls), ServerMsg::Ack));
+    // Let the orphaned completion arrive and be discarded.
+    std::thread::sleep(Duration::from_millis(300));
+
+    let b = register_as(&tx, "b", "");
+    match call(&tx, b, ClientMsg::DevInfo) {
+        ServerMsg::Devices { devices, .. } => {
+            let queued: f64 = devices.iter().map(|d| d.queued_ms).sum();
+            assert!(
+                queued.abs() < 1e-9,
+                "queue estimate not retired exactly once: {devices:?}"
+            );
+            // The discarded completion must not count as serviced work.
+            assert_eq!(devices.iter().map(|d| d.jobs_done).sum::<u64>(), 0);
+            assert_eq!(devices.iter().map(|d| d.clients).sum::<u32>(), 1);
+        }
+        other => panic!("{other:?}"),
+    }
+    match call(&tx, b, ClientMsg::Stats) {
+        ServerMsg::Stats {
+            jobs_ok,
+            jobs_failed,
+            in_flight_flushes,
+            queued_completions,
+            ..
+        } => {
+            assert_eq!(jobs_ok, 0, "discarded completion counted as ok");
+            assert_eq!(jobs_failed, 0, "RLS is not a job failure");
+            assert_eq!(in_flight_flushes, 0, "epoch not settled");
+            assert_eq!(queued_completions, 0);
+        }
+        other => panic!("{other:?}"),
+    }
+    // The device is still fully usable (no phantom load, no wedged lane).
+    call(&tx, b, ClientMsg::Snd { slot: 0, tensor: t4() });
+    call(&tx, b, ClientMsg::Str { workload: "slow".into() });
+    assert!(matches!(call(&tx, b, ClientMsg::Stp), ServerMsg::Done { .. }));
+}
+
+/// ISSUE satellite: two-epoch interleaving property.  A slow device and
+/// a fast device pipeline at depth 2, so the fast epoch's completions
+/// arrive while the slow epoch is still in flight (and while its owner
+/// may already be staging the next cycle).  Across randomized
+/// interleavings, nothing may ever double-account or mis-attribute:
+/// per-tenant counters, per-device done counters, and queue estimates
+/// must all come out exact after every round.
+#[test]
+fn epoch_interleaving_never_double_accounts() {
+    let slow = ExecHandle::mock(vec!["w".into()], |_, inputs| {
+        std::thread::sleep(Duration::from_millis(40));
+        Ok(vec![inputs[0].clone()])
+    });
+    let fast = ExecHandle::mock(vec!["w".into()], |_, inputs| {
+        Ok(vec![inputs[0].clone()])
+    });
+    let cfg = DaemonConfig {
+        barrier: Some(1),
+        barrier_timeout: Duration::from_millis(5_000),
+        pool: PoolConfig::homogeneous(
+            2,
+            DeviceConfig::tesla_c2070(),
+            PlacementPolicy::RoundRobin,
+        ),
+        pipeline: PipelineConfig {
+            max_in_flight_flushes: 2,
+        },
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::with_handles(cfg, vec![slow, fast]).unwrap();
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+
+    // Round-robin: g lands on device 0 (slow), b on device 1 (fast).
+    let g = register_as(&tx, "g", "gold");
+    let b = register_as(&tx, "b", "bronze");
+    let mut rng = SplitMix64::new(0x5EED);
+    const ROUNDS: u64 = 12;
+    for round in 1..=ROUNDS {
+        // g's epoch first (slow, stays in flight)…
+        call(&tx, g, ClientMsg::Snd { slot: 0, tensor: t4() });
+        assert!(matches!(
+            call(&tx, g, ClientMsg::Str { workload: "w".into() }),
+            ServerMsg::Queued { .. }
+        ));
+        // …then b's epoch starts while g's is executing; its completion
+        // is applied mid-flight of epoch N.
+        call(&tx, b, ClientMsg::Snd { slot: 0, tensor: t4() });
+        assert!(matches!(
+            call(&tx, b, ClientMsg::Str { workload: "w".into() }),
+            ServerMsg::Queued { .. }
+        ));
+        // Randomize the collection interleaving (which STP parks first).
+        let order = if rng.below(2) == 0 { [g, b] } else { [b, g] };
+        for id in order {
+            assert!(matches!(
+                call(&tx, id, ClientMsg::Stp),
+                ServerMsg::Done { .. }
+            ));
+        }
+        // Conservation after every round: counters exact, nothing
+        // double-applied, no estimate left behind.
+        match call(&tx, g, ClientMsg::Stats) {
+            ServerMsg::Stats {
+                batches,
+                jobs_ok,
+                jobs_failed,
+                in_flight_flushes,
+                queued_completions,
+                tenants,
+                ..
+            } => {
+                assert_eq!(batches, 2 * round, "one epoch per STR");
+                assert_eq!(jobs_ok, 2 * round);
+                assert_eq!(jobs_failed, 0);
+                assert_eq!(in_flight_flushes, 0);
+                assert_eq!(queued_completions, 0);
+                let gold = tenants.iter().find(|t| t.tenant == "gold").unwrap();
+                let bronze =
+                    tenants.iter().find(|t| t.tenant == "bronze").unwrap();
+                assert_eq!(
+                    (gold.jobs_ok, bronze.jobs_ok),
+                    (round, round),
+                    "mis-attributed tenants: {tenants:?}"
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+        match call(&tx, g, ClientMsg::DevInfo) {
+            ServerMsg::Devices { devices, .. } => {
+                assert!(
+                    devices.iter().all(|d| d.queued_ms.abs() < 1e-9),
+                    "round {round}: {devices:?}"
+                );
+                assert!(
+                    devices.iter().all(|d| d.jobs_done == round),
+                    "round {round}: each device ran its own epoch's job: \
+                     {devices:?}"
+                );
+            }
+            other => panic!("{other:?}"),
+        }
     }
 }
 

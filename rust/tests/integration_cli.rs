@@ -50,10 +50,33 @@ fn exp_fig16_reports_low_deviation() {
 }
 
 #[test]
+fn exp_pipeline_reports_overlap_gain() {
+    let tmp = std::env::temp_dir().join("vgpu-cli-test-pipeline");
+    let (ok, stdout, stderr) =
+        run(&["exp", "pipeline", "--results", tmp.to_str().unwrap()]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("overlap_gain"), "{stdout}");
+    assert!(stdout.contains("acceptance bar"), "{stdout}");
+    assert!(tmp.join("pipeline.tsv").exists());
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
 fn unknown_experiment_fails_cleanly() {
     let (ok, _, stderr) = run(&["exp", "fig99"]);
     assert!(!ok);
     assert!(stderr.contains("unknown experiment"), "{stderr}");
+}
+
+#[test]
+fn stats_requires_socket_and_fails_cleanly_when_absent() {
+    let (ok, _, stderr) = run(&["stats"]);
+    assert!(!ok);
+    assert!(stderr.contains("--socket required"), "{stderr}");
+    let (ok, _, stderr) =
+        run(&["stats", "--socket", "/tmp/vgpu-no-such-daemon.sock"]);
+    assert!(!ok);
+    assert!(!stderr.is_empty(), "connect failure must be reported");
 }
 
 #[test]
