@@ -1,0 +1,137 @@
+//! Host-memory-spill bench: spill-on vs spill-off oversubscription runs
+//! at ×1/×2/×4 working sets over the spill simulator
+//! (`simulate_pool_spill` — the same model `vgpu exp spill` sweeps).
+//!
+//! Each op runs one full admission + `CYCLES`-cycle oversubscription
+//! round over a 2×C2070 pool with 8 SPMD clients; the recorded rows
+//! compare the completed-job count and modeled makespan with the tier
+//! on vs off.  Results go to `BENCH_spill.json` next to
+//! `BENCH_executor.json` / `BENCH_pipeline.json` (override the path
+//! with `VGPU_BENCH_SPILL_JSON`).
+
+mod bench_common;
+use bench_common::{bench, section};
+
+use vgpu::config::DeviceConfig;
+use vgpu::gvm::devices::PlacementPolicy;
+use vgpu::gvm::sim_backend::simulate_pool_spill;
+use vgpu::gvm::spill::SpillConfig;
+use vgpu::workloads::Suite;
+
+const CLIENTS: usize = 8;
+const DEVICES: usize = 2;
+const CYCLES: usize = 3;
+
+fn cfg(enabled: bool) -> SpillConfig {
+    SpillConfig {
+        enabled,
+        host_budget_bytes: 64 << 30,
+        watermark: 1.0,
+    }
+}
+
+fn fmt_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.1}")
+    } else {
+        "null".into()
+    }
+}
+
+fn main() {
+    let suite = Suite::paper_defaults();
+    let w = suite.get("electrostatics").unwrap().clone();
+    let specs = vec![DeviceConfig::tesla_c2070(); DEVICES];
+
+    struct Row {
+        oversub: f64,
+        enabled: bool,
+        ns: f64,
+        completed: usize,
+        total: usize,
+        errors: usize,
+        restages: u64,
+        makespan_ms: f64,
+        serialized_ms: f64,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+
+    for oversub in [1.0f64, 2.0, 4.0] {
+        section(&format!(
+            "host-memory spill: x{oversub:.0} working set, {CLIENTS} \
+             clients x {CYCLES} cycles over {DEVICES} devices"
+        ));
+        for enabled in [false, true] {
+            let label = if enabled { "on" } else { "off" };
+            let last = std::cell::RefCell::new(None);
+            let ns = bench(&format!("oversub_x{oversub:.0}_spill_{label}"), || {
+                let t = simulate_pool_spill(
+                    &w,
+                    CLIENTS,
+                    &specs,
+                    PlacementPolicy::MemoryAware,
+                    CYCLES,
+                    oversub,
+                    &cfg(enabled),
+                )
+                .expect("spill sim");
+                *last.borrow_mut() = Some(t);
+            });
+            let t = last.into_inner().expect("at least one run");
+            println!(
+                "{:48} {:>6}/{:<6} jobs, {} errors, {} restages, \
+                 makespan {:.1} ms (serialized bound {:.1} ms)",
+                format!("  -> x{oversub:.0} spill {label}"),
+                t.jobs_completed,
+                t.jobs_total,
+                t.placement_errors,
+                t.restage_events,
+                t.total_ms,
+                t.serialized_ms
+            );
+            rows.push(Row {
+                oversub,
+                enabled,
+                ns,
+                completed: t.jobs_completed,
+                total: t.jobs_total,
+                errors: t.placement_errors,
+                restages: t.restage_events,
+                makespan_ms: t.total_ms,
+                serialized_ms: t.serialized_ms,
+            });
+        }
+    }
+
+    // Record the comparison for the repo (BENCH_spill.json).
+    let path = std::env::var("VGPU_BENCH_SPILL_JSON")
+        .unwrap_or_else(|_| "BENCH_spill.json".into());
+    let mut json = String::from(
+        "{\n  \"bench\": \"spill\",\n  \"unit\": \"ns_per_run\",\n  \
+         \"devices\": 2,\n  \"clients\": 8,\n  \"cycles\": 3,\n  \
+         \"rows\": [\n",
+    );
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"oversub\": {}, \"spill\": {}, \"ns_per_run\": {}, \
+             \"completed\": {}, \"total\": {}, \"errors\": {}, \
+             \"restages\": {}, \"makespan_ms\": {}, \
+             \"serialized_ms\": {}}}{}\n",
+            r.oversub,
+            r.enabled,
+            fmt_num(r.ns),
+            r.completed,
+            r.total,
+            r.errors,
+            r.restages,
+            fmt_num(r.makespan_ms),
+            fmt_num(r.serialized_ms),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("\n[recorded {path}]"),
+        Err(e) => eprintln!("\n[could not write {path}: {e}]"),
+    }
+}

@@ -60,6 +60,13 @@ pub struct NodeStatsView {
     /// Submitted jobs whose completion events are still pending, across
     /// all in-flight epochs.
     pub queued_completions: u32,
+    /// Segment bytes currently spilled to the host store (see the
+    /// `[spill]` config section).
+    pub spilled_bytes: u64,
+    /// Segments evicted to the host store since launch.
+    pub spill_events: u64,
+    /// Spilled segments re-staged onto a device since launch.
+    pub restage_events: u64,
     /// Per-tenant counters (completion-event fed), in tenant-id order.
     pub tenants: Vec<TenantStatsEntry>,
 }
@@ -241,6 +248,9 @@ impl VgpuClient {
                 clients,
                 in_flight_flushes,
                 queued_completions,
+                spilled_bytes,
+                spill_events,
+                restage_events,
                 tenants,
             } => Ok(NodeStatsView {
                 batches,
@@ -251,6 +261,9 @@ impl VgpuClient {
                 clients,
                 in_flight_flushes,
                 queued_completions,
+                spilled_bytes,
+                spill_events,
+                restage_events,
                 tenants,
             }),
             ServerMsg::Err { msg } => Err(Error::Protocol(msg)),

@@ -332,7 +332,7 @@ USAGE:
 EXPERIMENTS: tab1 tab3 fig14 fig15 fig16 fig17 fig18 fig19 fig20 fig21
              fig22 fig23 fig24 ablation-style ablation-depcheck
              ablation-ctx ablation-barrier ablation-policy multi-gpu qos
-             multi-gpu-cluster pipeline ext-multigpu ext-cluster
+             multi-gpu-cluster pipeline spill ext-multigpu ext-cluster
              ext-fig18-socket
 ";
 

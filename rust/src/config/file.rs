@@ -39,6 +39,11 @@
 //! max_in_flight_flushes = 2   # flush epochs in flight at once
 //!                             # (1 = serialized pre-pipeline daemon)
 //!
+//! [spill]
+//! enabled = true              # host-memory spill tier (default off)
+//! host_budget_bytes = 34359738368  # cap on spilled bytes (32 GiB)
+//! watermark = 1.0             # device fill fraction that triggers spill
+//!
 //! [gvm]
 //! barrier = 8                 # omit for "all registered clients"
 //! barrier_timeout_ms = 50
@@ -55,6 +60,7 @@ use super::{DepcheckSemantics, DeviceConfig, NodeConfig};
 use crate::gvm::devices::{PlacementPolicy, PoolConfig};
 use crate::gvm::exec::MigrationConfig;
 use crate::gvm::qos::{parse_share_list, QosConfig};
+use crate::gvm::spill::SpillConfig;
 use crate::gvm::{DaemonConfig, GvmConfig, PipelineConfig, StyleRule};
 use crate::{Error, Result};
 
@@ -322,6 +328,41 @@ impl ConfigFile {
         Ok(p)
     }
 
+    /// Build the host-memory-spill tunables (the `[spill]` section);
+    /// omitted section = spill off, the pre-spill behaviour where the
+    /// capacity-checked policies error when no device has room.
+    pub fn spill(&self) -> Result<SpillConfig> {
+        let mut s = SpillConfig::default();
+        if let Some(v) = self.get("spill", "enabled") {
+            s.enabled = match v.to_lowercase().as_str() {
+                "true" | "1" | "on" | "yes" => true,
+                "false" | "0" | "off" | "no" => false,
+                other => {
+                    return Err(Error::Config(format!(
+                        "[spill] enabled = {other:?} (want true|false)"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = self.get_usize("spill", "host_budget_bytes")? {
+            if v == 0 {
+                return Err(Error::Config(
+                    "[spill] host_budget_bytes must be >= 1".into(),
+                ));
+            }
+            s.host_budget_bytes = v as u64;
+        }
+        if let Some(v) = self.get_f64("spill", "watermark")? {
+            if !v.is_finite() || v <= 0.0 || v > 1.0 {
+                return Err(Error::Config(format!(
+                    "[spill] watermark = {v} must be in (0, 1]"
+                )));
+            }
+            s.watermark = v;
+        }
+        Ok(s)
+    }
+
     /// Build a node config (`[node]` + `[devices]` + `[device]`).
     pub fn node(&self) -> Result<NodeConfig> {
         let mut n = NodeConfig {
@@ -361,6 +402,7 @@ impl ConfigFile {
         daemon.pool = self.devices()?;
         daemon.migration = self.migration()?;
         daemon.pipeline = self.pipeline()?;
+        daemon.spill = self.spill()?;
         let artifacts_dir = self
             .get("gvm", "artifacts_dir")
             .map(std::path::PathBuf::from)
@@ -529,6 +571,47 @@ policy = model-optimal
         ] {
             let c = ConfigFile::parse(bad).unwrap();
             assert!(c.pipeline().is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn spill_section_parses_and_rides_into_gvm() {
+        let c = ConfigFile::parse(
+            "[spill]\nenabled = true\nhost_budget_bytes = 1048576\n\
+             watermark = 0.9\n",
+        )
+        .unwrap();
+        let s = c.spill().unwrap();
+        assert!(s.enabled);
+        assert_eq!(s.host_budget_bytes, 1 << 20);
+        assert!((s.watermark - 0.9).abs() < 1e-12);
+        let g = c.gvm().unwrap();
+        assert!(g.daemon.spill.enabled);
+        assert_eq!(g.daemon.spill.host_budget_bytes, 1 << 20);
+    }
+
+    #[test]
+    fn spill_section_defaults_to_off() {
+        let c = ConfigFile::parse("").unwrap();
+        let s = c.spill().unwrap();
+        assert!(!s.enabled);
+        assert!(s.host_budget_bytes > 0);
+        assert_eq!(s.watermark, 1.0);
+        assert!(!c.gvm().unwrap().daemon.spill.enabled);
+    }
+
+    #[test]
+    fn bad_spill_sections_rejected() {
+        for bad in [
+            "[spill]\nenabled = maybe\n",
+            "[spill]\nhost_budget_bytes = 0\n",
+            "[spill]\nhost_budget_bytes = lots\n",
+            "[spill]\nwatermark = 0\n",
+            "[spill]\nwatermark = 1.5\n",
+            "[spill]\nwatermark = -0.5\n",
+        ] {
+            let c = ConfigFile::parse(bad).unwrap();
+            assert!(c.spill().is_err(), "{bad:?} should be rejected");
         }
     }
 

@@ -61,6 +61,20 @@
 //! its configured rate limit has `STR` rejected with a typed
 //! [`Error::Gvm`] throttle instead of silently queueing.
 //!
+//! Host-memory spill ([`super::spill`], the `[spill]` config section)
+//! keeps oversubscribed pools sharing instead of erroring: when a
+//! device fills past its watermark, the coldest *idle* VGPUs' segments
+//! (LRU by last flush epoch; never a `Running` client's) are evicted to
+//! a host-side [`SpillStore`] and their `reserve_mem` accounting is
+//! released; a spilled client's segment is transparently **re-staged**
+//! — placement re-run, a re-stage step submitted ahead of the execute
+//! step in the per-device plan — when its next `STR`/`FLH` flushes.
+//! Conservation after every event is an invariant the property suite
+//! (`rust/tests/spill.rs`) enforces:
+//! `Σ device mem_used + spill bytes == Σ live clients' seg_bytes`, with
+//! `mem_used <= capacity` on every device.  The `spilled_bytes` /
+//! `spill_events` / `restage_events` gauges ride `ClientMsg::Stats`.
+//!
 //! Live VGPU migration rides the same engine: `ClientMsg::Migrate` (or
 //! the [`super::exec::Rebalancer`], when `[migration]` enables it)
 //! quiesces the source executor lane, re-stages the VGPU's segment bytes
@@ -81,7 +95,8 @@ use super::exec::{
 use super::plan::Job;
 use super::qos::{WeightedDeficitQueue, DEFAULT_TENANT};
 use super::scheduler::{plan_batch, Policy};
-use super::vgpu::{ClientId, VgpuState, VgpuTable};
+use super::spill::{SpillConfig, SpillStore};
+use super::vgpu::{ClientId, Residency, VgpuState, VgpuTable};
 use crate::ipc::wire::{DeviceEntry, TenantStatsEntry};
 use crate::ipc::{ClientMsg, ServerMsg};
 use crate::log;
@@ -182,6 +197,8 @@ pub struct DaemonConfig {
     pub migration: MigrationConfig,
     /// Async-flush-pipeline tunables (`[pipeline]` config section).
     pub pipeline: PipelineConfig,
+    /// Host-memory spill tunables (`[spill]` config section).
+    pub spill: SpillConfig,
 }
 
 impl Default for DaemonConfig {
@@ -195,6 +212,7 @@ impl Default for DaemonConfig {
             pool: PoolConfig::default(),
             migration: MigrationConfig::default(),
             pipeline: PipelineConfig::default(),
+            spill: SpillConfig::default(),
         }
     }
 }
@@ -211,6 +229,10 @@ pub struct Daemon {
     /// Physical devices + VGPU placements (bound by client id; sticky
     /// affinity by rank name).
     pool: DevicePool,
+    /// Host-side spill store: cold idle segments evicted here under
+    /// device-memory pressure, re-staged ahead of their owner's next
+    /// execute step (see [`super::spill`]).
+    spill: SpillStore,
     /// Clients blocked in STP waiting for their result.
     waiters: Vec<(ClientId, mpsc::Sender<ServerMsg>)>,
     /// When the oldest queued-but-unflushed job arrived.
@@ -305,6 +327,7 @@ impl Daemon {
         let executors =
             ExecutorPool::new(handles).expect("pool construction is non-empty");
         let rebalancer = Rebalancer::new(cfg.migration.clone());
+        let spill = SpillStore::new(cfg.spill.clone());
         Self {
             table: VgpuTable::new(cfg.mem_budget, cfg.max_clients),
             cfg,
@@ -312,6 +335,7 @@ impl Daemon {
             rebalancer,
             suite: Suite::paper_defaults(),
             pool,
+            spill,
             waiters: Vec::new(),
             barrier_open_since: None,
             artifact_names,
@@ -447,16 +471,288 @@ impl Daemon {
             .any(|f| f.jobs.iter().any(|j| j.client == client))
     }
 
-    /// Keep the pool's per-device segment accounting in step with a
-    /// client's `seg_bytes` transition.
-    fn sync_pool_mem(&mut self, client: ClientId, before: u64, after: u64) {
-        if let Some(dev) = self.pool.placement(client) {
-            if after >= before {
-                self.pool.reserve_mem(dev, after - before);
+    /// Keep the per-device segment accounting — or, for a spilled
+    /// client, the host spill store — in step with a client's
+    /// `seg_bytes` transition.  With spill enabled, resident growth is
+    /// capacity-checked: cold idle segments are evicted below the
+    /// watermark first, and when nothing (else) is evictable the
+    /// staging client's own segment is routed to the host store instead
+    /// of overcommitting the device.  The conservation invariant after
+    /// every transition:
+    /// `Σ device mem_used + spill bytes == Σ live clients' seg_bytes`.
+    fn sync_seg_mem(&mut self, client: ClientId, before: u64, after: u64) {
+        if before == after {
+            return;
+        }
+        let spilled = self
+            .table
+            .get(client)
+            .map(|v| v.residency == Residency::Spilled)
+            .unwrap_or(false);
+        if spilled {
+            let r = if after >= before {
+                self.spill.grow(client, after - before)
             } else {
-                self.pool.free_mem(dev, before - after);
+                self.spill.shrink(client, before - after)
+            };
+            if let Err(e) = r {
+                log::warn!("spill-store accounting for client {client}: {e}");
+            }
+            return;
+        }
+        let Some(dev) = self.pool.placement(client) else {
+            return;
+        };
+        if after >= before {
+            self.reserve_resident(client, dev, before, after - before);
+        } else {
+            self.pool.free_mem(dev, before - after);
+        }
+    }
+
+    /// A device's watermark fill limit: resident growth past it
+    /// triggers eviction (never above the spec's capacity).
+    fn spill_limit(&self, dev: DeviceId) -> u64 {
+        let cap = self.pool.spec(dev).mem_bytes;
+        ((cap as f64) * self.cfg.spill.watermark.clamp(0.0, 1.0)) as u64
+    }
+
+    /// Grow a resident client's on-device bytes by `delta`.  With spill
+    /// off this is the legacy saturating reserve; with it on, the
+    /// device stays at or below its watermark: evict cold idle
+    /// segments first, then — nothing else evictable — self-spill the
+    /// staging client (its bytes are not referenced by any in-flight
+    /// execution; the re-stage step returns them before its own next
+    /// execute).
+    fn reserve_resident(
+        &mut self,
+        client: ClientId,
+        dev: DeviceId,
+        before: u64,
+        delta: u64,
+    ) {
+        if !self.spill.enabled() {
+            self.pool.reserve_mem(dev, delta);
+            return;
+        }
+        let limit = self.spill_limit(dev);
+        let cap = self.pool.spec(dev).mem_bytes;
+        let used = self.pool.device(dev).mem_used;
+        if used + delta > limit {
+            self.make_room_on(dev, (used + delta).saturating_sub(limit), client);
+        }
+        // The watermark decides when eviction *starts*, not what may be
+        // resident: a segment that still fits raw capacity after the
+        // eviction pass stays on the device (a single segment larger
+        // than watermark x capacity must not be banished to the host
+        // forever).  Only true overcommit self-spills.
+        if self.pool.device(dev).mem_used + delta <= cap {
+            self.pool.reserve_mem(dev, delta);
+            return;
+        }
+        let total = before + delta;
+        if !self.spill.can_admit(total) {
+            // Host budget exhausted: overcommit rather than lose the
+            // staged bytes (the documented escape hatch — capacity
+            // invariants resume once the store drains).
+            log::warn!(
+                "spill store budget exhausted; overcommitting device {} \
+                 by {delta} B for client {client}",
+                dev.0
+            );
+            self.pool.reserve_mem(dev, delta);
+            return;
+        }
+        let epoch = self
+            .table
+            .get(client)
+            .map(|v| v.last_flush_epoch)
+            .unwrap_or(0);
+        match self.pool.note_spilled(client, before) {
+            Ok(_) => {
+                if let Err(e) = self.spill.spill(client, total, epoch) {
+                    log::warn!("self-spill of client {client} failed: {e}");
+                    self.pool.reserve_mem(dev, before + delta);
+                    return;
+                }
+                let _ = self.table.set_residency(client, Residency::Spilled);
+                log::info!(
+                    "spilled client {client}'s {total} B segment to host \
+                     (device {} at watermark)",
+                    dev.0
+                );
+            }
+            Err(e) => {
+                log::warn!("self-spill accounting for client {client}: {e}");
+                self.pool.reserve_mem(dev, delta);
             }
         }
+    }
+
+    /// Evict cold idle resident segments from `dev` into the host
+    /// store until `need` bytes were freed or candidates run out.  LRU
+    /// by last flush epoch (coldest first); never touches `exclude`,
+    /// any in-flight (`Running`) client, or one queued behind the
+    /// barrier — [`VgpuTable::spill_candidates`] offers only settled
+    /// VGPUs.
+    fn make_room_on(&mut self, dev: DeviceId, need: u64, exclude: ClientId) {
+        if !self.spill.enabled() || need == 0 {
+            return;
+        }
+        let mut freed = 0u64;
+        for (c, seg, epoch) in self.table.spill_candidates() {
+            if freed >= need {
+                break;
+            }
+            if c == exclude
+                || self.pool.placement(c) != Some(dev)
+                || self.client_in_flight(c)
+                || !self.spill.can_admit(seg)
+            {
+                continue;
+            }
+            match self.pool.note_spilled(c, seg) {
+                Ok(_) => {
+                    if let Err(e) = self.spill.spill(c, seg, epoch) {
+                        log::warn!("evicting client {c}: {e}");
+                        self.pool.reserve_mem(dev, seg); // undo
+                        continue;
+                    }
+                    let _ = self.table.set_residency(c, Residency::Spilled);
+                    freed += seg;
+                    log::info!(
+                        "spilled client {c}'s {seg} B segment off device \
+                         {} (LRU epoch {epoch})",
+                        dev.0
+                    );
+                }
+                Err(e) => log::warn!("evicting client {c}: {e}"),
+            }
+        }
+    }
+
+    /// Per-device evictable bytes (cold idle resident segments) — the
+    /// spill-aware placement headroom.  Each device's promise is capped
+    /// by the host budget still available: headroom the store could not
+    /// actually admit would steer placement onto a device where
+    /// eviction then refuses.
+    fn evictable_headroom(&self) -> Vec<u64> {
+        let budget = self.spill.remaining_budget();
+        let mut head = vec![0u64; self.pool.len()];
+        for (c, seg, _) in self.table.spill_candidates() {
+            if self.client_in_flight(c) {
+                continue;
+            }
+            if let Some(d) = self.pool.placement(c) {
+                head[d.0] = head[d.0].saturating_add(seg).min(budget);
+            }
+        }
+        head
+    }
+
+    /// Bring a spilled client's segment back onto a device — the
+    /// re-stage step the flush submits ahead of the client's execute
+    /// step.  Prefers the bound device (evicting colder idle segments
+    /// for room); when it cannot fit even after eviction and
+    /// `allow_rebind` is set, the binding (plus any queued estimate)
+    /// moves to the device with the most free-plus-evictable room, as
+    /// in a migration — no executor drain is needed since a spilled
+    /// client has nothing in flight.  Errors when no device can hold
+    /// the segment.
+    fn restage_client(
+        &mut self,
+        client: ClientId,
+        allow_rebind: bool,
+    ) -> Result<DeviceId> {
+        let seg = self.spill.bytes_of(client).ok_or_else(|| {
+            Error::gvm(format!("client {client} is not spilled"))
+        })?;
+        let mut dev = self.pool.placement(client).ok_or_else(|| {
+            Error::gvm(format!("client {client} has no device placement"))
+        })?;
+        // Fit is judged against raw capacity — a segment within
+        // capacity must be restageable, or any job larger than
+        // watermark x capacity would fail forever.  Eviction
+        // (make_room_on) still *aims* for the watermark so re-stages
+        // keep headroom when cold segments allow it.
+        let deficit = |s: &Self, d: DeviceId| -> u64 {
+            let cap = s.pool.spec(d).mem_bytes;
+            (s.pool.device(d).mem_used + seg).saturating_sub(cap)
+        };
+        let evict_goal = |s: &Self, d: DeviceId| -> u64 {
+            (s.pool.device(d).mem_used + seg).saturating_sub(s.spill_limit(d))
+        };
+        let need = evict_goal(self, dev);
+        if need > 0 {
+            self.make_room_on(dev, need, client);
+        }
+        if deficit(self, dev) > 0 && allow_rebind {
+            let head = self.evictable_headroom();
+            let mut best: Option<(u64, usize)> = None; // (effective free, id)
+            for i in 0..self.pool.len() {
+                if i == dev.0 {
+                    continue;
+                }
+                let d = DeviceId(i);
+                let used = self.pool.device(d).mem_used;
+                let cap = self.pool.spec(d).mem_bytes;
+                if used.saturating_sub(head[i]) + seg > cap {
+                    continue;
+                }
+                let eff = cap.saturating_sub(used).saturating_add(head[i]);
+                if best.map(|(b, _)| eff > b).unwrap_or(true) {
+                    best = Some((eff, i));
+                }
+            }
+            if let Some((_, i)) = best {
+                let to = DeviceId(i);
+                let (name, est) = {
+                    let v = self.table.get(client)?;
+                    let est = match &v.state {
+                        VgpuState::Queued { workload, .. } => {
+                            self.job_est_ms(workload)
+                        }
+                        _ => 0.0,
+                    };
+                    (v.name.clone(), est)
+                };
+                // The segment is host-side: zero bytes move with the
+                // binding; the queued estimate follows as in migration.
+                self.pool.note_migrated(client, &name, to, 0, est)?;
+                log::info!(
+                    "re-stage rebinding client {client}: device {} -> {}",
+                    dev.0,
+                    to.0
+                );
+                dev = to;
+                let need = evict_goal(self, dev);
+                if need > 0 {
+                    self.make_room_on(dev, need, client);
+                }
+            }
+        }
+        let need = deficit(self, dev);
+        if need > 0 {
+            return Err(Error::gvm(format!(
+                "re-stage of {seg} B for client {client}: no room on \
+                 device {} ({need} B short)",
+                dev.0
+            )));
+        }
+        self.pool.note_restaged(client, seg)?;
+        let restaged = self.spill.restage(client)?;
+        if restaged != seg {
+            log::warn!(
+                "re-stage byte mismatch for client {client}: store \
+                 {restaged} vs segment {seg}"
+            );
+        }
+        self.table.set_residency(client, Residency::Resident)?;
+        log::info!(
+            "re-staged client {client}'s {seg} B segment onto device {}",
+            dev.0
+        );
+        Ok(dev)
     }
 
     /// Handle one command; `client==0` means pre-registration.
@@ -516,7 +812,7 @@ impl Daemon {
                 // The recycle above may have freed bytes even if staging
                 // failed — resync unconditionally before surfacing.
                 let after = self.table.get(cmd.client)?.seg_bytes;
-                self.sync_pool_mem(cmd.client, before, after);
+                self.sync_seg_mem(cmd.client, before, after);
                 staged?;
                 self.ack(&cmd.reply)?;
             }
@@ -623,6 +919,7 @@ impl Daemon {
             ClientMsg::Rls => {
                 let v = self.table.get(cmd.client)?;
                 let seg = v.seg_bytes;
+                let spilled = v.residency == Residency::Spilled;
                 // A client abandoning a still-queued OR in-flight job
                 // must also take its load estimate with it, or
                 // LeastLoaded would shun this device forever.  A queued
@@ -648,9 +945,24 @@ impl Daemon {
                 // estimate on the device (they would bias placement
                 // forever — the mid-flight disconnect leak).
                 let released = self.table.release(cmd.client);
+                // A spilled client's bytes live in the host store, not
+                // on its device — drop them there; freeing the device
+                // too would double-free another client's residency.
+                if spilled {
+                    let freed = self.spill.drop_client(cmd.client);
+                    if freed != seg {
+                        log::warn!(
+                            "RLS of spilled client {}: store held {freed} B \
+                             vs segment {seg} B",
+                            cmd.client
+                        );
+                    }
+                }
                 if let Some(dev) = self.pool.placement(cmd.client) {
                     let tenant = self.tenant_of(cmd.client);
-                    self.pool.free_mem(dev, seg);
+                    if !spilled {
+                        self.pool.free_mem(dev, seg);
+                    }
                     if let Some(est) = abandoned_est {
                         self.pool.retire_queued_as(dev, &tenant, est);
                     }
@@ -726,6 +1038,9 @@ impl Daemon {
                         clients: self.table.len() as u32,
                         in_flight_flushes: self.inflight.len() as u32,
                         queued_completions: self.running_clients() as u32,
+                        spilled_bytes: self.spill.bytes(),
+                        spill_events: self.spill.spill_events(),
+                        restage_events: self.spill.restage_events(),
                         tenants,
                     })
                     .map_err(|_| Error::Ipc("client gone".into()))?;
@@ -865,7 +1180,15 @@ impl Daemon {
                 VgpuState::Queued { workload, .. } => self.job_est_ms(workload),
                 _ => 0.0,
             };
-            (v.name.clone(), v.seg_bytes, est)
+            // A spilled client's segment lives in the host store, not on
+            // the source device: zero bytes move with the binding (the
+            // re-stage step lands them on whatever device the client is
+            // bound to by then).
+            let seg = match v.residency {
+                Residency::Spilled => 0,
+                Residency::Resident => v.seg_bytes,
+            };
+            (v.name.clone(), seg, est)
         };
         let to = match target {
             Some(d) => d,
@@ -937,7 +1260,16 @@ impl Daemon {
             .queued_clients()
             .into_iter()
             .map(|(c, w)| {
-                let seg = self.table.get(c).map(|v| v.seg_bytes).unwrap_or(0);
+                // A spilled client's segment needs no room on a
+                // migration target — the re-stage step places it later.
+                let seg = self
+                    .table
+                    .get(c)
+                    .map(|v| match v.residency {
+                        Residency::Spilled => 0,
+                        Residency::Resident => v.seg_bytes,
+                    })
+                    .unwrap_or(0);
                 (c, self.job_est_ms(&w), seg)
             })
             .collect();
@@ -1013,6 +1345,25 @@ impl Daemon {
     fn start_flush(&mut self) -> Result<()> {
         self.barrier_open_since = None;
         self.auto_rebalance();
+        // Re-stage spilled clients ahead of grouping, so placement (and
+        // any rebind toward a device with room) is settled before the
+        // per-device plans are built.  A segment that cannot fit yet is
+        // deferred — it gets a second re-stage attempt right before its
+        // own submission, once earlier jobs' inputs were consumed and
+        // freed device memory.
+        if self.spill.enabled() {
+            let queued: Vec<ClientId> = self.table.queued_ids().collect();
+            for c in queued {
+                if self.spill.contains(c) {
+                    if let Err(e) = self.restage_client(c, true) {
+                        log::info!(
+                            "deferring re-stage of client {c} to submit \
+                             time: {e}"
+                        );
+                    }
+                }
+            }
+        }
         // Per-client ordering: a client with a job in flight never gets
         // a second one.  `queued_clients()` only returns `Queued` state
         // (disjoint from `Running`), so this filter is a defensive
@@ -1325,65 +1676,113 @@ impl Daemon {
                 _ => None,
             })
             .collect();
+        // Re-stage step of the per-device plan: a spilled client's
+        // segment returns to the device *ahead of* its execute step.
+        // Submissions consume their inputs (freeing device memory)
+        // synchronously as the plan advances, so a re-stage that cannot
+        // fit yet — e.g. behind a queued resident holding the device —
+        // is deferred to a second pass after the rest of the batch
+        // submitted, and only fails if the drained device *still*
+        // cannot hold it.  A spilled client is never submitted.
+        let mut deferred: Vec<usize> = Vec::new();
         for j in order {
+            let client = queued[j].0;
+            if self.spill.contains(client)
+                && self.restage_client(client, false).is_err()
+            {
+                deferred.push(j);
+                continue;
+            }
+            self.submit_one(dev, &queued[j], pending)?;
+        }
+        for j in deferred {
             let (client, workload) = &queued[j];
-            let est_ms = self.job_est_ms(workload);
-            let tenant = self.tenant_of(*client);
-            let artifact = self
-                .suite
-                .get(workload)
-                .and_then(|w| w.artifact)
-                .map(str::to_string)
-                .unwrap_or_else(|| workload.clone());
-            // Per-job failure isolation: a bad job fails alone; the rest
-            // of the SPMD batch still completes.  Inputs are *moved* out
-            // of the segment (not cloned) — the launch consumes them,
-            // halving memory traffic on the large-transfer path (Fig. 18).
-            let before = self.table.get(*client)?.seg_bytes;
-            let staged = self.table.take_staged_inputs(*client);
-            let after = self.table.get(*client)?.seg_bytes;
-            self.sync_pool_mem(*client, before, after);
-            match staged {
-                Ok(inputs) => {
-                    let sub = Submission {
-                        seq: self.flush_seq,
-                        client: *client,
-                        tenant: tenant.clone(),
-                        est_ms,
-                        artifact,
-                        inputs,
-                    };
-                    match self.executors.submit(dev, sub) {
-                        Ok(()) => {
-                            if let Err(e) = self.table.mark_running(*client) {
-                                // Unreachable (the client was Queued a
-                                // moment ago); completion application
-                                // is permissive, so just surface it.
-                                log::warn!(
-                                    "client {client} not marked running: {e}"
-                                );
-                            }
-                            pending.push(PendingJob {
-                                client: *client,
-                                tenant,
-                                est_ms,
-                                dev,
-                            });
-                        }
-                        Err(e) => {
-                            self.fail_job(
-                                dev,
-                                *client,
-                                &tenant,
-                                est_ms,
-                                e.to_string(),
+            if let Err(e) = self.restage_client(*client, false) {
+                let est_ms = self.job_est_ms(workload);
+                let tenant = self.tenant_of(*client);
+                self.fail_job(
+                    dev,
+                    *client,
+                    &tenant,
+                    est_ms,
+                    format!("re-stage failed: {e}"),
+                );
+                continue;
+            }
+            self.submit_one(dev, &queued[j], pending)?;
+        }
+        Ok(())
+    }
+
+    /// Submit one (re-staged, resident) queued job to its device's
+    /// executor.  Per-job failure isolation: a bad job fails alone; the
+    /// rest of the SPMD batch still completes.  Inputs are *moved* out
+    /// of the segment (not cloned) — the launch consumes them, halving
+    /// memory traffic on the large-transfer path (Fig. 18).
+    fn submit_one(
+        &mut self,
+        dev: DeviceId,
+        job: &(ClientId, String),
+        pending: &mut Vec<PendingJob>,
+    ) -> Result<()> {
+        let (client, workload) = job;
+        let est_ms = self.job_est_ms(workload);
+        let tenant = self.tenant_of(*client);
+        let artifact = self
+            .suite
+            .get(workload)
+            .and_then(|w| w.artifact)
+            .map(str::to_string)
+            .unwrap_or_else(|| workload.clone());
+        let before = self.table.get(*client)?.seg_bytes;
+        let staged = self.table.take_staged_inputs(*client);
+        let after = self.table.get(*client)?.seg_bytes;
+        self.sync_seg_mem(*client, before, after);
+        match staged {
+            Ok(inputs) => {
+                let sub = Submission {
+                    seq: self.flush_seq,
+                    client: *client,
+                    tenant: tenant.clone(),
+                    est_ms,
+                    artifact,
+                    inputs,
+                };
+                match self.executors.submit(dev, sub) {
+                    Ok(()) => {
+                        if let Err(e) = self.table.mark_running(*client) {
+                            // Unreachable (the client was Queued a
+                            // moment ago); completion application
+                            // is permissive, so just surface it.
+                            log::warn!(
+                                "client {client} not marked running: {e}"
                             );
                         }
+                        // LRU recency stamp for spill eviction: the
+                        // epoch this client last submitted in.
+                        let _ = self
+                            .table
+                            .note_flush_epoch(*client, self.flush_seq);
+                        pending.push(PendingJob {
+                            client: *client,
+                            tenant,
+                            est_ms,
+                            dev,
+                        });
+                    }
+                    Err(e) => {
+                        self.fail_job(
+                            dev,
+                            *client,
+                            &tenant,
+                            est_ms,
+                            e.to_string(),
+                        );
                     }
                 }
-                Err(e) => {
-                    self.fail_job(dev, *client, &tenant, est_ms, e.to_string());
-                }
+            }
+            Err(e) => {
+                self.fail_job(dev, *client, &tenant, est_ms, e.to_string());
             }
         }
         Ok(())
@@ -1454,7 +1853,7 @@ impl Daemon {
             }
             let after =
                 self.table.get(client).map(|v| v.seg_bytes).unwrap_or(before);
-            self.sync_pool_mem(client, before, after);
+            self.sync_seg_mem(client, before, after);
         }
         if let Err(e) = self.table.fail(client, msg) {
             log::warn!("failure for vanished client {client}: {e}");

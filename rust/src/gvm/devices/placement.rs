@@ -102,6 +102,21 @@ pub(super) struct PickCtx<'a> {
     pub mem_demand: u64,
     /// Tenant share table for weight-normalized scoring.
     pub qos: &'a QosConfig,
+    /// Spill-aware headroom: per-device bytes that *could* be evicted
+    /// to the host spill store (cold idle residents' segments), indexed
+    /// by device id.  `None` = spill off — the capacity-checked
+    /// policies see only raw free memory, the pre-spill behaviour.
+    pub headroom: Option<&'a [u64]>,
+}
+
+impl PickCtx<'_> {
+    /// A device's free memory plus its evictable spill headroom — what
+    /// the capacity-checked policies can make available for a new
+    /// segment (saturating; headroom beyond the spec is meaningless).
+    fn effective_free(&self, i: usize, d: &PooledDevice) -> u64 {
+        let head = self.headroom.map(|h| h.get(i).copied().unwrap_or(0));
+        d.mem_free().saturating_add(head.unwrap_or(0))
+    }
 }
 
 /// Least-loaded selection: (queued_ms, clients, id) ascending.
@@ -146,7 +161,7 @@ pub(super) fn pick(
         PlacementPolicy::MemoryAware => {
             let mut best: Option<(u64, usize)> = None; // (free, id)
             for (i, d) in devices.iter().enumerate() {
-                let free = d.mem_free();
+                let free = ctx.effective_free(i, d);
                 if free >= ctx.mem_demand
                     && best.map(|(bf, _)| free > bf).unwrap_or(true)
                 {
@@ -156,9 +171,19 @@ pub(super) fn pick(
             match best {
                 Some((_, i)) => Ok(DeviceId(i)),
                 None => Err(Error::gvm(format!(
-                    "no device fits a {} B segment (largest free: {} B)",
+                    "no device fits a {} B segment (largest free{}: {} B)",
                     ctx.mem_demand,
-                    devices.iter().map(|d| d.mem_free()).max().unwrap_or(0)
+                    if ctx.headroom.is_some() {
+                        " incl. spillable headroom"
+                    } else {
+                        ""
+                    },
+                    devices
+                        .iter()
+                        .enumerate()
+                        .map(|(i, d)| ctx.effective_free(i, d))
+                        .max()
+                        .unwrap_or(0)
                 ))),
             }
         }
@@ -171,7 +196,9 @@ pub(super) fn pick(
             // can hold the declared segment.
             let mut best: Option<(f64, usize, usize)> = None;
             for (i, d) in devices.iter().enumerate() {
-                if ctx.mem_demand > 0 && d.mem_free() < ctx.mem_demand {
+                if ctx.mem_demand > 0
+                    && ctx.effective_free(i, d) < ctx.mem_demand
+                {
                     continue;
                 }
                 let key = (normalized_queued_ms(d, ctx.qos), d.clients, i);
@@ -183,9 +210,19 @@ pub(super) fn pick(
                 Some((_, _, i)) => Ok(DeviceId(i)),
                 None => Err(Error::gvm(format!(
                     "no device fits a {} B segment under \
-                     weighted-least-loaded (largest free: {} B)",
+                     weighted-least-loaded (largest free{}: {} B)",
                     ctx.mem_demand,
-                    devices.iter().map(|d| d.mem_free()).max().unwrap_or(0)
+                    if ctx.headroom.is_some() {
+                        " incl. spillable headroom"
+                    } else {
+                        ""
+                    },
+                    devices
+                        .iter()
+                        .enumerate()
+                        .map(|(i, d)| ctx.effective_free(i, d))
+                        .max()
+                        .unwrap_or(0)
                 ))),
             }
         }
@@ -219,6 +256,7 @@ mod tests {
                 sticky_prev,
                 mem_demand,
                 qos,
+                headroom: None,
             },
         )
     }
@@ -388,6 +426,55 @@ mod tests {
         )
         .unwrap();
         assert_eq!(id, DeviceId(1));
+    }
+
+    #[test]
+    fn headroom_extends_the_capacity_check() {
+        // Both devices raw-full; device 1 has 4 KiB of evictable idle
+        // segments.  Without headroom the capacity-checked policies
+        // refuse; with it they pick the device whose cold residents can
+        // be spilled to make room.
+        let mut d = devs(2);
+        let cap = DeviceConfig::tesla_c2070().mem_bytes;
+        d[0].mem_used = cap;
+        d[1].mem_used = cap;
+        let qos = QosConfig::default();
+        let head = [0u64, 4096];
+        for policy in [
+            PlacementPolicy::MemoryAware,
+            PlacementPolicy::WeightedLeastLoaded,
+        ] {
+            let mut cur = 0;
+            let err = pick_plain(policy, &d, &mut cur, None, 4096).unwrap_err();
+            assert!(matches!(err, crate::Error::Gvm(_)), "{err}");
+            let got = pick(
+                policy,
+                &d,
+                PickCtx {
+                    rr_cursor: &mut cur,
+                    sticky_prev: None,
+                    mem_demand: 4096,
+                    qos: &qos,
+                    headroom: Some(&head),
+                },
+            )
+            .unwrap();
+            assert_eq!(got, DeviceId(1), "{policy}: headroom device wins");
+            // Headroom cannot conjure room that isn't there.
+            let err = pick(
+                policy,
+                &d,
+                PickCtx {
+                    rr_cursor: &mut cur,
+                    sticky_prev: None,
+                    mem_demand: 4097,
+                    qos: &qos,
+                    headroom: Some(&head),
+                },
+            )
+            .unwrap_err();
+            assert!(err.to_string().contains("headroom"), "{err}");
+        }
     }
 
     #[test]

@@ -268,6 +268,42 @@ impl DevicePool {
         tenant: &str,
         mem_demand: u64,
     ) -> Result<DeviceId> {
+        self.place_inner(client, name, tenant, mem_demand, None)
+    }
+
+    /// [`DevicePool::place_as`] with spill-aware capacity checking:
+    /// `headroom[i]` is the evictable cold-segment byte count on device
+    /// `i` (what the caller could spill to the host store to make
+    /// room), so the capacity-checked policies accept a device whose
+    /// raw free memory is short as long as eviction can cover the
+    /// deficit.  The caller performs the actual evictions after the
+    /// pick (see the daemon's spill-on-place path).
+    pub fn place_with_headroom(
+        &mut self,
+        client: u64,
+        name: &str,
+        tenant: &str,
+        mem_demand: u64,
+        headroom: &[u64],
+    ) -> Result<DeviceId> {
+        if headroom.len() != self.devices.len() {
+            return Err(Error::gvm(format!(
+                "headroom for {} devices on a {}-device pool",
+                headroom.len(),
+                self.devices.len()
+            )));
+        }
+        self.place_inner(client, name, tenant, mem_demand, Some(headroom))
+    }
+
+    fn place_inner(
+        &mut self,
+        client: u64,
+        name: &str,
+        tenant: &str,
+        mem_demand: u64,
+        headroom: Option<&[u64]>,
+    ) -> Result<DeviceId> {
         if let Some(&id) = self.bound.get(&client) {
             return Ok(id);
         }
@@ -280,6 +316,7 @@ impl DevicePool {
                 sticky_prev,
                 mem_demand,
                 qos: &self.qos,
+                headroom,
             },
         )?;
         self.devices[id.0].clients += 1;
@@ -316,6 +353,51 @@ impl DevicePool {
     pub fn free_mem(&mut self, id: DeviceId, bytes: u64) {
         self.devices[id.0].mem_used =
             self.devices[id.0].mem_used.saturating_sub(bytes);
+    }
+
+    /// Spill accounting: move `bytes` of a live client's segment OFF
+    /// its bound device (they are being evicted to the host spill
+    /// store).  Unlike the saturating [`DevicePool::free_mem`], this is
+    /// *checked*: spilling more than the device holds is an accounting
+    /// bug and surfaces as a typed error with nothing mutated — the
+    /// over-free/underflow guard discipline from the VGPU table,
+    /// extended to the spill lifecycle.  Returns the bound device.
+    pub fn note_spilled(&mut self, client: u64, bytes: u64) -> Result<DeviceId> {
+        let id = *self.bound.get(&client).ok_or_else(|| {
+            Error::gvm(format!("spill: client {client} is not placed"))
+        })?;
+        let d = &mut self.devices[id.0];
+        if d.mem_used < bytes {
+            return Err(Error::gvm(format!(
+                "spill accounting underflow: evicting {bytes} B from \
+                 device {} holding {} B (double spill?)",
+                id.0, d.mem_used
+            )));
+        }
+        d.mem_used -= bytes;
+        Ok(id)
+    }
+
+    /// Spill accounting: move `bytes` of a live client's segment back
+    /// ONTO its bound device (the re-stage step ahead of its next
+    /// execute).  Checked against the device's capacity — the invariant
+    /// the capacity-checked policies enforce at placement must survive
+    /// re-staging, exactly as it survives migration.  Returns the bound
+    /// device.
+    pub fn note_restaged(&mut self, client: u64, bytes: u64) -> Result<DeviceId> {
+        let id = *self.bound.get(&client).ok_or_else(|| {
+            Error::gvm(format!("re-stage: client {client} is not placed"))
+        })?;
+        if self.devices[id.0].mem_free() < bytes {
+            return Err(Error::gvm(format!(
+                "re-stage of {bytes} B cannot fit device {} \
+                 ({} B free)",
+                id.0,
+                self.devices[id.0].mem_free()
+            )));
+        }
+        self.devices[id.0].mem_used += bytes;
+        Ok(id)
     }
 
     /// Record estimated work queued onto a device (default tenant).
@@ -559,6 +641,72 @@ mod tests {
         p.reserve_mem(DeviceId(0), 100);
         p.free_mem(DeviceId(0), 1000); // over-free must not wrap
         assert_eq!(p.device(DeviceId(0)).mem_used, 0);
+    }
+
+    #[test]
+    fn spill_accounting_is_checked_not_wrapping() {
+        let mut p = pool(2, PlacementPolicy::MemoryAware);
+        let dev = p.place(1, "r0", 4096).unwrap();
+        p.reserve_mem(dev, 4096);
+        // Eviction moves the bytes off; a double spill is a typed error
+        // that leaves the accounting untouched, never a wrap.
+        assert_eq!(p.note_spilled(1, 4096).unwrap(), dev);
+        assert_eq!(p.device(dev).mem_used, 0);
+        let err = p.note_spilled(1, 4096).unwrap_err();
+        assert!(matches!(err, crate::Error::Gvm(_)), "{err}");
+        assert_eq!(p.device(dev).mem_used, 0, "must not wrap");
+        // Re-stage brings them back, capacity-checked.
+        assert_eq!(p.note_restaged(1, 4096).unwrap(), dev);
+        assert_eq!(p.device(dev).mem_used, 4096);
+        let cap = DeviceConfig::tesla_c2070().mem_bytes;
+        let err = p.note_restaged(1, cap).unwrap_err();
+        assert!(matches!(err, crate::Error::Gvm(_)), "{err}");
+        assert_eq!(p.device(dev).mem_used, 4096, "failed re-stage inert");
+        // Unplaced clients are rejected on both paths.
+        assert!(p.note_spilled(99, 1).is_err());
+        assert!(p.note_restaged(99, 1).is_err());
+    }
+
+    #[test]
+    fn over_free_guards_hold_for_a_client_spilled_mid_lifecycle() {
+        // Regression (spill satellite): free_mem / retire_queued_as on a
+        // client whose segment was spilled mid-lifecycle must not
+        // double-free or wrap the device accounting.
+        let mut p = pool(1, PlacementPolicy::LeastLoaded);
+        let dev = p.place(1, "r0", 0).unwrap();
+        p.reserve_mem(dev, 1000);
+        p.note_queued(dev, 30.0);
+        p.note_spilled(1, 1000).unwrap(); // segment now host-side
+        // An RLS that (wrongly) also freed the device would underflow;
+        // the saturating free clamps and the pool stays consistent.
+        p.free_mem(dev, 1000);
+        assert_eq!(p.device(dev).mem_used, 0);
+        p.retire_queued(dev, 30.0);
+        p.retire_queued(dev, 30.0); // double retire clamps at zero
+        assert_eq!(p.device(dev).queued_ms, 0.0);
+        assert!(p.device(dev).tenant_queued_ms.is_empty());
+        // And a re-stage after the bogus free still capacity-checks.
+        assert_eq!(p.note_restaged(1, 1000).unwrap(), dev);
+        assert_eq!(p.device(dev).mem_used, 1000);
+    }
+
+    #[test]
+    fn place_with_headroom_accepts_evictable_devices() {
+        let mut p = pool(2, PlacementPolicy::MemoryAware);
+        let cap = DeviceConfig::tesla_c2070().mem_bytes;
+        p.reserve_mem(DeviceId(0), cap);
+        p.reserve_mem(DeviceId(1), cap);
+        // Raw placement refuses a full pool…
+        let err = p.place(7, "r", 4096).unwrap_err();
+        assert!(matches!(err, crate::Error::Gvm(_)), "{err}");
+        // …headroom on device 1 rescues it.
+        let dev = p
+            .place_with_headroom(7, "r", "default", 4096, &[0, 8192])
+            .unwrap();
+        assert_eq!(dev, DeviceId(1));
+        assert_eq!(p.placement(7), Some(dev));
+        // Wrong-length headroom is a typed error.
+        assert!(p.place_with_headroom(8, "s", "default", 0, &[0]).is_err());
     }
 
     #[test]

@@ -23,7 +23,11 @@
 //! [`exec::Rebalancer`].  The [`daemon`] consumes those completions
 //! through a single event-driven loop — the **async flush pipeline** —
 //! so one flush's device execution overlaps the next cycle's `SND`/`STR`
-//! staging, bounded by `[pipeline] max_in_flight_flushes`.
+//! staging, bounded by `[pipeline] max_in_flight_flushes`.  Under
+//! device-memory oversubscription the [`spill`] tier keeps sharing
+//! alive: cold idle segments are evicted to a host-side store instead
+//! of failing placement, and re-staged ahead of their owner's next
+//! execute step (the `[spill]` config section).
 
 pub mod daemon;
 pub mod devices;
@@ -32,6 +36,7 @@ pub mod plan;
 pub mod qos;
 pub mod scheduler;
 pub mod sim_backend;
+pub mod spill;
 pub mod vgpu;
 
 pub use daemon::{Command, Daemon, DaemonConfig, PipelineConfig};
@@ -44,9 +49,10 @@ pub use qos::{QosConfig, TenantShare, WeightedDeficitQueue};
 pub use scheduler::{plan_batch, Policy, StyleRule};
 pub use sim_backend::{
     simulate, simulate_pool, simulate_pool_pipelined, simulate_pool_qos,
-    simulate_spmd, BatchTiming, PipelineTiming, PoolTiming, QosPoolTiming,
-    TenantTiming,
+    simulate_pool_spill, simulate_spmd, BatchTiming, PipelineTiming,
+    PoolTiming, QosPoolTiming, SpillTiming, TenantTiming,
 };
+pub use spill::{SpillConfig, SpillStore};
 
 use std::path::PathBuf;
 use std::sync::mpsc;

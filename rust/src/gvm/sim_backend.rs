@@ -328,6 +328,242 @@ pub fn simulate_pool_pipelined(
     })
 }
 
+/// Outcome of one oversubscription run through [`simulate_pool_spill`].
+#[derive(Debug, Clone)]
+pub struct SpillTiming {
+    /// Oversubscription factor: Σ declared segments / Σ device memory.
+    pub oversub: f64,
+    /// SPMD clients requested.
+    pub clients: usize,
+    /// Clients that obtained a placement (all of them with spill on,
+    /// unless the host budget ran out).
+    pub placed: usize,
+    /// Jobs attempted: `clients x cycles`.
+    pub jobs_total: usize,
+    /// Jobs that ran to completion.
+    pub jobs_completed: usize,
+    /// Placement/re-stage refusals — the typed `Error::Gvm` failures a
+    /// spill-less capacity-checked policy reports, one per attempted
+    /// job of an unplaceable client.
+    pub placement_errors: usize,
+    /// Segments evicted to the host store.
+    pub spill_events: u64,
+    /// Segments re-staged onto a device.
+    pub restage_events: u64,
+    /// Makespan: max over per-device timelines, including initial
+    /// segment loads and every re-stage's H2D transfer.
+    pub total_ms: f64,
+    /// The serialized single-tenant bound: every job run alone,
+    /// one-at-a-time, each paying its own cold segment load — what a
+    /// non-shared deployment would cost for the same `jobs_total`.
+    pub serialized_ms: f64,
+}
+
+impl SpillTiming {
+    /// Spill-thrash: re-stages per completed job (0 = every working
+    /// set stayed resident; 1 = every job re-staged its segment).
+    pub fn thrash(&self) -> f64 {
+        if self.jobs_completed == 0 {
+            0.0
+        } else {
+            self.restage_events as f64 / self.jobs_completed as f64
+        }
+    }
+
+    /// Fraction of attempted jobs that failed placement.
+    pub fn error_rate(&self) -> f64 {
+        if self.jobs_total == 0 {
+            0.0
+        } else {
+            self.placement_errors as f64 / self.jobs_total as f64
+        }
+    }
+}
+
+/// Model `cycles` rounds of `n` SPMD clients sharing a device pool
+/// whose combined working sets are `oversub` times the pool's total
+/// memory (each client declares `oversub * Σ mem / n` bytes).
+///
+/// With `spill.enabled == false` this reproduces the pre-spill
+/// behaviour: the capacity-checked policies place clients until no
+/// device has room, the rest fail with `Error::Gvm` and contribute one
+/// placement error per attempted job.  With spill on, placement runs
+/// with evictable headroom ([`DevicePool::place_with_headroom`]): cold
+/// resident segments (LRU by last run) are evicted to a host
+/// [`SpillStore`] to make room, and every job whose segment was evicted
+/// pays a re-stage H2D transfer (`seg / h2d_bytes_per_ms`) on its
+/// device's timeline before executing — the spill-thrash the harness
+/// sweep reports.  The serialized single-tenant bound charges every job
+/// its solo cost plus a cold segment load, which is what running the
+/// tenants one-at-a-time without sharing would pay.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_pool_spill(
+    w: &crate::workloads::Workload,
+    n: usize,
+    specs: &[DeviceConfig],
+    placement: super::devices::PlacementPolicy,
+    cycles: usize,
+    oversub: f64,
+    spill: &super::spill::SpillConfig,
+) -> Result<SpillTiming> {
+    use super::devices::{DeviceId, DevicePool};
+    use super::spill::SpillStore;
+    use std::collections::HashMap;
+
+    if n == 0 {
+        return Err(crate::Error::gvm("spill sim needs at least one client"));
+    }
+    let mut pool = DevicePool::from_specs(specs.to_vec(), placement)?;
+    let mut store = SpillStore::new(spill.clone());
+    let total_mem: u64 = specs.iter().map(|s| s.mem_bytes).sum();
+    let seg = ((oversub * total_mem as f64) / n as f64).max(1.0) as u64;
+    let job_ms = w.stages.t_in + w.stages.t_comp + w.stages.t_out;
+    let load_ms = |spec: &DeviceConfig| seg as f64 / spec.h2d_bytes_per_ms;
+
+    let mut clock = vec![0.0f64; pool.len()];
+    let mut resident: HashMap<u64, bool> = HashMap::new();
+    let mut last_run: HashMap<u64, u64> = HashMap::new();
+    let mut placed: Vec<(u64, DeviceId)> = Vec::new();
+    let mut unplaced = 0usize;
+
+    // Evict cold residents (LRU by last run) bound to `dev` until
+    // `need` bytes can fit, respecting the host budget.  Returns the
+    // spilled count this call made.
+    let evict_for = |pool: &mut DevicePool,
+                     store: &mut SpillStore,
+                     resident: &mut HashMap<u64, bool>,
+                     last_run: &HashMap<u64, u64>,
+                     placed: &[(u64, DeviceId)],
+                     dev: DeviceId,
+                     exclude: u64| {
+        let mut victims: Vec<(u64, u64)> = placed
+            .iter()
+            .filter(|(c, d)| {
+                *d == dev && *c != exclude && resident.get(c) == Some(&true)
+            })
+            .map(|(c, _)| (*last_run.get(c).unwrap_or(&0), *c))
+            .collect();
+        victims.sort_unstable();
+        for (epoch, c) in victims {
+            if pool.device(dev).mem_free() >= seg {
+                break;
+            }
+            if !store.can_admit(seg) {
+                break;
+            }
+            if pool.note_spilled(c, seg).is_ok()
+                && store.spill(c, seg, epoch).is_ok()
+            {
+                resident.insert(c, false);
+            }
+        }
+    };
+
+    // Admission: place every client, spilling cold residents for room
+    // when enabled.  Initial segment loads ride the device timelines.
+    for i in 0..n as u64 {
+        let got = if spill.enabled {
+            let mut head = vec![0u64; pool.len()];
+            for (c, d) in &placed {
+                if resident.get(c) == Some(&true) {
+                    head[d.0] = head[d.0].saturating_add(seg);
+                }
+            }
+            pool.place_with_headroom(
+                i,
+                &format!("rank{i}"),
+                super::qos::DEFAULT_TENANT,
+                seg,
+                &head,
+            )
+        } else {
+            pool.place(i, &format!("rank{i}"), seg)
+        };
+        match got {
+            Ok(dev) => {
+                if spill.enabled {
+                    evict_for(
+                        &mut pool,
+                        &mut store,
+                        &mut resident,
+                        &last_run,
+                        &placed,
+                        dev,
+                        i,
+                    );
+                }
+                if pool.device(dev).mem_free() >= seg {
+                    pool.reserve_mem(dev, seg);
+                    resident.insert(i, true);
+                    clock[dev.0] += load_ms(pool.spec(dev));
+                } else if spill.enabled && store.can_admit(seg) {
+                    // Born spilled: admitted, but the first run pays the
+                    // re-stage.
+                    store.spill(i, seg, 0)?;
+                    resident.insert(i, false);
+                } else {
+                    // Neither the device nor the host tier can take the
+                    // segment: undo the binding so the phantom client
+                    // doesn't bias later placements.
+                    pool.release(i);
+                    unplaced += 1;
+                    continue;
+                }
+                placed.push((i, dev));
+            }
+            Err(crate::Error::Gvm(_)) => unplaced += 1,
+            Err(e) => return Err(e),
+        }
+    }
+
+    // Run phase: every placed client executes once per cycle; a spilled
+    // client re-stages (evicting colder residents) first.
+    let mut completed = 0usize;
+    let mut errors = unplaced * cycles;
+    for cycle in 1..=cycles as u64 {
+        for &(c, dev) in &placed {
+            if resident.get(&c) != Some(&true) {
+                evict_for(
+                    &mut pool,
+                    &mut store,
+                    &mut resident,
+                    &last_run,
+                    &placed,
+                    dev,
+                    c,
+                );
+                if pool.device(dev).mem_free() < seg {
+                    errors += 1;
+                    continue;
+                }
+                store.restage(c)?;
+                pool.reserve_mem(dev, seg);
+                resident.insert(c, true);
+                clock[dev.0] += load_ms(pool.spec(dev));
+            }
+            clock[dev.0] += job_ms;
+            last_run.insert(c, cycle);
+            completed += 1;
+        }
+    }
+
+    let total_ms = clock.iter().cloned().fold(0.0, f64::max);
+    let serialized_ms =
+        (n * cycles) as f64 * (job_ms + load_ms(&specs[0]));
+    Ok(SpillTiming {
+        oversub,
+        clients: n,
+        placed: placed.len(),
+        jobs_total: n * cycles,
+        jobs_completed: completed,
+        placement_errors: errors,
+        spill_events: store.spill_events(),
+        restage_events: store.restage_events(),
+        total_ms,
+        serialized_ms,
+    })
+}
+
 /// One tenant's view of a simulated QoS batch (see
 /// [`simulate_pool_qos`]).
 #[derive(Debug, Clone)]
@@ -833,6 +1069,124 @@ mod tests {
         };
         assert_eq!(t(2), t(4));
         assert!(t(2) < t(1));
+    }
+
+    #[test]
+    fn spill_rescues_the_oversubscribed_pool() {
+        use crate::gvm::devices::PlacementPolicy;
+        use crate::gvm::spill::SpillConfig;
+        let suite = crate::workloads::Suite::paper_defaults();
+        let w = suite.get("electrostatics").unwrap();
+        let specs = vec![DeviceConfig::tesla_c2070(); 2];
+        let run = |enabled: bool, oversub: f64| {
+            simulate_pool_spill(
+                w,
+                8,
+                &specs,
+                PlacementPolicy::MemoryAware,
+                3,
+                oversub,
+                &SpillConfig {
+                    enabled,
+                    host_budget_bytes: 64 << 30,
+                    ..SpillConfig::default()
+                },
+            )
+            .unwrap()
+        };
+        // At 2x oversubscription the spill-less pool refuses half the
+        // clients; the spill tier completes every attempted job with
+        // ZERO placement errors (ISSUE acceptance).
+        let off = run(false, 2.0);
+        let on = run(true, 2.0);
+        assert!(off.placement_errors > 0, "{off:?}");
+        assert!(off.jobs_completed < off.jobs_total);
+        assert_eq!(on.placement_errors, 0, "{on:?}");
+        assert_eq!(on.jobs_completed, on.jobs_total);
+        assert!(
+            on.jobs_completed > off.jobs_completed,
+            "spill-on {} vs spill-off {}",
+            on.jobs_completed,
+            off.jobs_completed
+        );
+        // Sharing with spill stays under the serialized single-tenant
+        // bound (each job alone, paying its own cold segment load).
+        assert!(
+            on.total_ms < on.serialized_ms,
+            "makespan {} vs serialized bound {}",
+            on.total_ms,
+            on.serialized_ms
+        );
+        assert!(on.spill_events > 0 && on.restage_events > 0, "{on:?}");
+    }
+
+    #[test]
+    fn spill_is_free_without_oversubscription() {
+        use crate::gvm::devices::PlacementPolicy;
+        use crate::gvm::spill::SpillConfig;
+        let suite = crate::workloads::Suite::paper_defaults();
+        let w = suite.get("electrostatics").unwrap();
+        let specs = vec![DeviceConfig::tesla_c2070(); 2];
+        let t = simulate_pool_spill(
+            w,
+            8,
+            &specs,
+            PlacementPolicy::MemoryAware,
+            3,
+            1.0,
+            &SpillConfig {
+                enabled: true,
+                host_budget_bytes: 64 << 30,
+                ..SpillConfig::default()
+            },
+        )
+        .unwrap();
+        // Working sets fit: nothing spills, nothing re-stages, every
+        // job completes.
+        assert_eq!(t.spill_events, 0, "{t:?}");
+        assert_eq!(t.restage_events, 0);
+        assert_eq!(t.jobs_completed, t.jobs_total);
+        assert_eq!(t.placement_errors, 0);
+        assert!((t.thrash() - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spill_thrash_grows_with_oversubscription() {
+        use crate::gvm::devices::PlacementPolicy;
+        use crate::gvm::spill::SpillConfig;
+        let suite = crate::workloads::Suite::paper_defaults();
+        let w = suite.get("electrostatics").unwrap();
+        let specs = vec![DeviceConfig::tesla_c2070(); 2];
+        let cfg = SpillConfig {
+            enabled: true,
+            host_budget_bytes: 64 << 30,
+            ..SpillConfig::default()
+        };
+        let run = |oversub: f64| {
+            simulate_pool_spill(
+                w,
+                8,
+                &specs,
+                PlacementPolicy::MemoryAware,
+                3,
+                oversub,
+                &cfg,
+            )
+            .unwrap()
+        };
+        let x2 = run(2.0);
+        let x4 = run(4.0);
+        assert!(
+            x4.thrash() >= x2.thrash(),
+            "x4 {} vs x2 {}",
+            x4.thrash(),
+            x2.thrash()
+        );
+        assert!(x4.total_ms >= x2.total_ms, "{} vs {}", x4.total_ms, x2.total_ms);
+        // Both still complete everything — oversubscription costs
+        // transfer time, not correctness.
+        assert_eq!(x2.jobs_completed, x2.jobs_total);
+        assert_eq!(x4.jobs_completed, x4.jobs_total);
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! Host-memory spill for oversubscribed device pools.
+//!
+//! The paper's virtualization layer only delivers full utilization if
+//! oversubscribed VGPUs can keep sharing a device when their combined
+//! working sets exceed device memory — the "as many CPUs per GPU as the
+//! node has" scenario (§3, Fig. 5).  Before this module, the
+//! capacity-checked placement policies (`MemoryAware`,
+//! `WeightedLeastLoaded`) simply returned a typed [`crate::Error::Gvm`]
+//! when no device had room.  Multi-tenant vGPU work (Prades et al.) and
+//! CPU-offload work (Schieffer et al.) both treat host memory as the
+//! natural overflow tier, and that is what the [`SpillStore`] models: a
+//! host-side staging area that cold **idle** VGPUs' device segments are
+//! evicted to under pressure, and re-staged from — ahead of the execute
+//! step in the per-device plan — when their owner's next `STR`/`FLH`
+//! flushes.
+//!
+//! The store is deliberately *accounting only*: segment payloads already
+//! live in host memory inside the [`super::vgpu::VgpuTable`] (the
+//! POSIX-shm analogue), so spilling moves the device-residency
+//! *attribution* of those bytes, exactly as
+//! [`super::devices::DevicePool::reserve_mem`] attributes them on the
+//! way in.  The daemon pairs every store transition with the matching
+//! pool transition so the node-wide conservation invariant holds after
+//! every event:
+//!
+//! ```text
+//! Σ device mem_used  +  SpillStore bytes  ==  Σ live clients' seg_bytes
+//! ```
+//!
+//! and, with spill enabled (and the host budget not exhausted),
+//! `mem_used <= capacity` on every device.
+//!
+//! Eviction policy is LRU by **last flush epoch** (the coldest client —
+//! the one whose job ran longest ago — spills first) and never touches a
+//! `Running` client or one with a job queued behind the barrier: only
+//! `Idle`/`Done`/`Failed` VGPUs are candidates (see
+//! [`super::vgpu::VgpuTable::spill_candidates`]).  The one exception is
+//! **self-spill**: the staging client itself may have its own (next
+//! cycle's) bytes routed to the host store when nothing else is
+//! evictable — those bytes are not referenced by any in-flight
+//! execution, and the re-stage step brings them back before the client's
+//! own next submission.
+
+use std::collections::HashMap;
+
+use super::vgpu::ClientId;
+use crate::{Error, Result};
+
+/// Host-memory spill tunables — the `[spill]` config-file section.
+#[derive(Debug, Clone)]
+pub struct SpillConfig {
+    /// Spill instead of erroring when device memory is exhausted
+    /// (default off: the pre-spill behaviour, where the capacity-checked
+    /// policies refuse with a typed error).
+    pub enabled: bool,
+    /// Cap on bytes held by the host-side [`SpillStore`]; eviction stops
+    /// (and placement falls back to erroring) once reaching it.
+    pub host_budget_bytes: u64,
+    /// Fraction of each device's memory the daemon fills before
+    /// spilling; `1.0` (the default) spills only at capacity, lower
+    /// values keep headroom for re-stages.
+    pub watermark: f64,
+}
+
+impl Default for SpillConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            host_budget_bytes: 32 << 30, // 32 GiB of host overflow
+            watermark: 1.0,
+        }
+    }
+}
+
+/// One spilled segment: its byte count and the owner's last flush epoch
+/// at eviction time (the LRU key it was chosen by).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpilledSeg {
+    /// Segment bytes held on the host for this client.
+    pub bytes: u64,
+    /// Owner's last flush epoch when evicted (0 = never flushed).
+    pub epoch: u64,
+}
+
+/// The host-side spill store: per-client spilled segment accounting plus
+/// the spill/re-stage event counters surfaced through `vgpu stats`.
+#[derive(Debug)]
+pub struct SpillStore {
+    cfg: SpillConfig,
+    entries: HashMap<ClientId, SpilledSeg>,
+    bytes: u64,
+    spill_events: u64,
+    restage_events: u64,
+}
+
+impl SpillStore {
+    /// Empty store over a tunable set.
+    pub fn new(cfg: SpillConfig) -> Self {
+        Self {
+            cfg,
+            entries: HashMap::new(),
+            bytes: 0,
+            spill_events: 0,
+            restage_events: 0,
+        }
+    }
+
+    /// Whether spilling is enabled at all.
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// The active tunables.
+    pub fn config(&self) -> &SpillConfig {
+        &self.cfg
+    }
+
+    /// Bytes currently spilled to the host.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Segments evicted since launch.
+    pub fn spill_events(&self) -> u64 {
+        self.spill_events
+    }
+
+    /// Segments re-staged since launch.
+    pub fn restage_events(&self) -> u64 {
+        self.restage_events
+    }
+
+    /// Clients currently spilled.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is spilled.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Whether `client`'s segment is currently spilled.
+    pub fn contains(&self, client: ClientId) -> bool {
+        self.entries.contains_key(&client)
+    }
+
+    /// Spilled bytes of one client, if spilled.
+    pub fn bytes_of(&self, client: ClientId) -> Option<u64> {
+        self.entries.get(&client).map(|s| s.bytes)
+    }
+
+    /// Whether `more` additional bytes fit under the host budget.
+    pub fn can_admit(&self, more: u64) -> bool {
+        self.bytes.saturating_add(more) <= self.cfg.host_budget_bytes
+    }
+
+    /// Bytes of host budget still available for evictions — what
+    /// placement headroom may realistically promise.
+    pub fn remaining_budget(&self) -> u64 {
+        self.cfg.host_budget_bytes.saturating_sub(self.bytes)
+    }
+
+    /// Evict a client's segment to the host: record `bytes` under the
+    /// LRU `epoch` it was chosen by.  Errors on a double spill or when
+    /// the host budget cannot admit the segment (callers check
+    /// [`SpillStore::can_admit`] first; the error is the backstop).
+    pub fn spill(&mut self, client: ClientId, bytes: u64, epoch: u64) -> Result<()> {
+        if self.entries.contains_key(&client) {
+            return Err(Error::gvm(format!(
+                "client {client} is already spilled (double eviction?)"
+            )));
+        }
+        if !self.can_admit(bytes) {
+            return Err(Error::gvm(format!(
+                "spill store budget exceeded: {} + {bytes} > {} B",
+                self.bytes, self.cfg.host_budget_bytes
+            )));
+        }
+        self.entries.insert(client, SpilledSeg { bytes, epoch });
+        self.bytes += bytes;
+        self.spill_events += 1;
+        Ok(())
+    }
+
+    /// Grow a spilled client's segment (it `SND`-ed while spilled).  The
+    /// host budget gates *eviction*, not growth: the staged payload
+    /// already exists in the table's host segment either way, and the
+    /// node-wide `mem_budget` bounds the total.
+    pub fn grow(&mut self, client: ClientId, delta: u64) -> Result<()> {
+        let e = self.entries.get_mut(&client).ok_or_else(|| {
+            Error::gvm(format!("grow of unspilled client {client}"))
+        })?;
+        e.bytes = e.bytes.saturating_add(delta);
+        self.bytes = self.bytes.saturating_add(delta);
+        Ok(())
+    }
+
+    /// Shrink a spilled client's segment (slot replaced or recycled
+    /// while spilled).  A shrink past zero is an accounting bug and
+    /// surfaces as a typed error, never a wrap.
+    pub fn shrink(&mut self, client: ClientId, delta: u64) -> Result<()> {
+        let e = self.entries.get_mut(&client).ok_or_else(|| {
+            Error::gvm(format!("shrink of unspilled client {client}"))
+        })?;
+        if e.bytes < delta || self.bytes < delta {
+            return Err(Error::gvm(format!(
+                "spill accounting underflow: releasing {delta} B from \
+                 {} B (client {client}; double release?)",
+                e.bytes
+            )));
+        }
+        e.bytes -= delta;
+        self.bytes -= delta;
+        Ok(())
+    }
+
+    /// Re-stage a client's segment back onto a device: remove the entry
+    /// and return its bytes.  Errors if the client is not spilled.
+    pub fn restage(&mut self, client: ClientId) -> Result<u64> {
+        let e = self.entries.remove(&client).ok_or_else(|| {
+            Error::gvm(format!("re-stage of unspilled client {client}"))
+        })?;
+        self.bytes = self.bytes.saturating_sub(e.bytes);
+        self.restage_events += 1;
+        Ok(e.bytes)
+    }
+
+    /// Drop a departing client's spilled segment (RLS/disconnect); not a
+    /// re-stage — nothing returns to a device.  Returns the freed bytes
+    /// (0 if the client was not spilled).
+    pub fn drop_client(&mut self, client: ClientId) -> u64 {
+        match self.entries.remove(&client) {
+            Some(e) => {
+                self.bytes = self.bytes.saturating_sub(e.bytes);
+                e.bytes
+            }
+            None => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(budget: u64) -> SpillStore {
+        SpillStore::new(SpillConfig {
+            enabled: true,
+            host_budget_bytes: budget,
+            watermark: 1.0,
+        })
+    }
+
+    #[test]
+    fn spill_restage_roundtrip_conserves_bytes() {
+        let mut s = store(1 << 20);
+        s.spill(1, 4096, 7).unwrap();
+        assert_eq!(s.bytes(), 4096);
+        assert_eq!(s.bytes_of(1), Some(4096));
+        assert_eq!(s.spill_events(), 1);
+        assert_eq!(s.restage(1).unwrap(), 4096);
+        assert_eq!(s.bytes(), 0);
+        assert_eq!(s.restage_events(), 1);
+        assert!(!s.contains(1));
+    }
+
+    #[test]
+    fn budget_gates_eviction() {
+        let mut s = store(100);
+        assert!(s.can_admit(100));
+        s.spill(1, 60, 0).unwrap();
+        assert!(!s.can_admit(41));
+        let err = s.spill(2, 41, 0).unwrap_err();
+        assert!(matches!(err, Error::Gvm(_)), "{err}");
+        assert_eq!(s.bytes(), 60, "failed spill must not account");
+        assert_eq!(s.spill_events(), 1);
+    }
+
+    #[test]
+    fn double_spill_is_an_error() {
+        let mut s = store(1 << 20);
+        s.spill(1, 10, 0).unwrap();
+        assert!(s.spill(1, 10, 0).is_err());
+        assert_eq!(s.bytes(), 10);
+    }
+
+    #[test]
+    fn grow_and_shrink_track_segment_churn() {
+        let mut s = store(100);
+        s.spill(1, 40, 0).unwrap();
+        // Growth is not budget-gated (the payload already exists host-side).
+        s.grow(1, 80).unwrap();
+        assert_eq!(s.bytes(), 120);
+        s.shrink(1, 100).unwrap();
+        assert_eq!(s.bytes_of(1), Some(20));
+        let err = s.shrink(1, 21).unwrap_err();
+        assert!(matches!(err, Error::Gvm(_)), "{err}");
+        assert_eq!(s.bytes(), 20, "underflow must not wrap");
+        assert!(s.grow(99, 1).is_err(), "unknown client");
+        assert!(s.shrink(99, 1).is_err(), "unknown client");
+    }
+
+    #[test]
+    fn restage_of_unspilled_client_is_an_error() {
+        let mut s = store(1 << 20);
+        assert!(s.restage(5).is_err());
+        assert_eq!(s.restage_events(), 0, "failed re-stage doesn't count");
+    }
+
+    #[test]
+    fn drop_client_frees_without_counting_a_restage() {
+        let mut s = store(1 << 20);
+        s.spill(1, 64, 0).unwrap();
+        assert_eq!(s.drop_client(1), 64);
+        assert_eq!(s.drop_client(1), 0, "idempotent");
+        assert_eq!(s.bytes(), 0);
+        assert_eq!(s.restage_events(), 0);
+    }
+}

@@ -25,6 +25,22 @@ fn sub_checked(cur: u64, freed: u64, what: &str) -> Result<u64> {
     })
 }
 
+/// Where a VGPU's segment bytes are attributed: on its placed device,
+/// or evicted to the host-side [`crate::gvm::spill::SpillStore`] under
+/// device-memory pressure.  Residency is orthogonal to the job
+/// lifecycle ([`VgpuState`]) and survives `recycle`/`recycle_outputs`:
+/// a spilled client stays spilled across request cycles until the
+/// daemon's re-stage step brings its segment back ahead of its next
+/// submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Residency {
+    /// Segment bytes counted against the placed device's memory.
+    #[default]
+    Resident,
+    /// Segment bytes evicted to the host spill store.
+    Spilled,
+}
+
 /// Lifecycle of one VGPU.
 #[derive(Debug, Clone, PartialEq)]
 pub enum VgpuState {
@@ -74,6 +90,11 @@ pub struct Vgpu {
     pub state: VgpuState,
     /// Bytes currently held by this segment (for the memory budget).
     pub seg_bytes: u64,
+    /// Device vs host residency of the segment bytes (spill extension).
+    pub residency: Residency,
+    /// Flush epoch of this VGPU's most recent submission — the LRU
+    /// coldness key spill eviction sorts by (0 = never flushed).
+    pub last_flush_epoch: u64,
 }
 
 impl Vgpu {
@@ -84,6 +105,8 @@ impl Vgpu {
             out_slots: Vec::new(),
             state: VgpuState::Idle,
             seg_bytes: 0,
+            residency: Residency::default(),
+            last_flush_epoch: 0,
         }
     }
 
@@ -325,6 +348,54 @@ impl VgpuTable {
         Ok(())
     }
 
+    /// A client's segment residency (spill extension).
+    pub fn residency(&self, id: ClientId) -> Result<Residency> {
+        Ok(self.get(id)?.residency)
+    }
+
+    /// Transition a client's segment residency.  Pure state: the caller
+    /// (the daemon) pairs it with the matching pool/spill-store
+    /// accounting moves.
+    pub fn set_residency(&mut self, id: ClientId, r: Residency) -> Result<()> {
+        self.get_mut(id)?.residency = r;
+        Ok(())
+    }
+
+    /// Stamp a client's most recent submission epoch — the LRU key
+    /// spill eviction prefers old values of (coldest-first).
+    pub fn note_flush_epoch(&mut self, id: ClientId, epoch: u64) -> Result<()> {
+        self.get_mut(id)?.last_flush_epoch = epoch;
+        Ok(())
+    }
+
+    /// Eviction candidates for host-memory spill, coldest first:
+    /// *resident* clients holding segment bytes whose lifecycle is
+    /// settled (`Idle`/`Done`/`Failed`).  A `Running` client's segments
+    /// are never offered (its pre-staged next cycle must survive the
+    /// flight) and a `Queued` client's inputs are about to be consumed
+    /// by the flush, so neither appears.  Returns
+    /// `(client, seg_bytes, last_flush_epoch)` ordered by epoch then id
+    /// (deterministic LRU).
+    pub fn spill_candidates(&self) -> Vec<(ClientId, u64, u64)> {
+        let mut out: Vec<(ClientId, u64, u64)> = self
+            .vgpus
+            .iter()
+            .filter(|(_, v)| {
+                v.residency == Residency::Resident
+                    && v.seg_bytes > 0
+                    && matches!(
+                        v.state,
+                        VgpuState::Idle
+                            | VgpuState::Done { .. }
+                            | VgpuState::Failed { .. }
+                    )
+            })
+            .map(|(id, v)| (*id, v.seg_bytes, v.last_flush_epoch))
+            .collect();
+        out.sort_by_key(|&(id, _, epoch)| (epoch, id));
+        out
+    }
+
     /// Number of clients currently queued behind the barrier — the
     /// cheap counting form of [`VgpuTable::queued_clients`] (no clones,
     /// no sort) for the daemon's per-event barrier checks.
@@ -562,6 +633,51 @@ mod tests {
         let q: Vec<ClientId> =
             tbl.queued_clients().iter().map(|(i, _)| *i).collect();
         assert_eq!(q, vec![b]);
+    }
+
+    #[test]
+    fn residency_survives_recycles_and_orders_candidates_lru() {
+        let mut tbl = VgpuTable::new(1 << 20, 8);
+        let a = tbl.register("a").unwrap();
+        let b = tbl.register("b").unwrap();
+        let c = tbl.register("c").unwrap();
+        tbl.stage(a, 0, t(4)).unwrap();
+        tbl.stage(b, 0, t(4)).unwrap();
+        tbl.stage(c, 0, t(4)).unwrap();
+        tbl.note_flush_epoch(a, 5).unwrap();
+        tbl.note_flush_epoch(b, 2).unwrap();
+        // c never flushed (epoch 0): the coldest candidate.
+        let cands = tbl.spill_candidates();
+        let order: Vec<ClientId> = cands.iter().map(|&(id, _, _)| id).collect();
+        assert_eq!(order, vec![c, b, a], "coldest (lowest epoch) first");
+        assert!(cands.iter().all(|&(_, seg, _)| seg == 16));
+        // Spilled clients drop out of the candidate set…
+        tbl.set_residency(b, Residency::Spilled).unwrap();
+        assert_eq!(tbl.spill_candidates().len(), 2);
+        // …and residency survives both recycle flavours.
+        tbl.complete(b, vec![t(2)], 1.0).unwrap();
+        tbl.recycle_outputs(b).unwrap();
+        assert_eq!(tbl.residency(b).unwrap(), Residency::Spilled);
+        tbl.recycle(b).unwrap();
+        assert_eq!(tbl.residency(b).unwrap(), Residency::Spilled);
+        assert!(tbl.residency(99).is_err(), "unknown client");
+    }
+
+    #[test]
+    fn queued_and_running_clients_are_never_spill_candidates() {
+        let mut tbl = VgpuTable::new(1 << 20, 8);
+        let a = tbl.register("a").unwrap();
+        tbl.stage(a, 0, t(4)).unwrap();
+        assert_eq!(tbl.spill_candidates().len(), 1, "idle is eligible");
+        tbl.queue(a, "w").unwrap();
+        assert!(tbl.spill_candidates().is_empty(), "queued is not");
+        tbl.take_staged_inputs(a).unwrap();
+        tbl.mark_running(a).unwrap();
+        // Pre-stage next-cycle bytes mid-flight: still ineligible.
+        tbl.stage(a, 0, t(4)).unwrap();
+        assert!(tbl.spill_candidates().is_empty(), "running is not");
+        tbl.complete(a, vec![t(2)], 1.0).unwrap();
+        assert_eq!(tbl.spill_candidates().len(), 1, "done is eligible");
     }
 
     #[test]

@@ -29,6 +29,7 @@
 //! | multi-gpu-cluster | thin/fat node mixes x placement, executor makespan |
 //! | qos     | per-tenant QoS: weights x policies, achieved shares |
 //! | pipeline | async flush pipeline: depth x devices x batch, overlap gain |
+//! | spill   | host-memory spill: oversubscription x policy, thrash vs errors |
 //! | ext-multigpu | extension: multi-GPU node scaling |
 //! | ext-cluster | extension: cluster weak scaling (Fig. 11) |
 //! | ext-fig18-socket | extension: Fig. 18 over the socket transport |
@@ -38,6 +39,7 @@ pub mod devices;
 pub mod figures;
 pub mod pipeline;
 pub mod qos;
+pub mod spill;
 pub mod tables;
 
 use crate::util::table::Table;
@@ -103,6 +105,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "multi-gpu-cluster",
     "qos",
     "pipeline",
+    "spill",
     "ext-multigpu",
     "ext-cluster",
     "ext-fig18-socket",
@@ -134,6 +137,7 @@ pub fn run(id: &str) -> Result<ExpOutput> {
         "multi-gpu-cluster" => devices::multi_gpu_cluster(),
         "qos" => qos::qos_sweep(),
         "pipeline" => pipeline::pipeline_sweep(),
+        "spill" => spill::spill_sweep(),
         "ext-multigpu" => ablations::multi_gpu_scaling(),
         "ext-cluster" => ablations::cluster_scaling(),
         "ext-fig18-socket" => figures::overhead_socket_figure(),

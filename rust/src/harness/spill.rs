@@ -1,0 +1,206 @@
+//! Extension experiment for host-memory spill (`vgpu exp spill`): an
+//! oversubscription sweep over
+//! [`crate::gvm::sim_backend::simulate_pool_spill`] — working sets ×1–×4
+//! of total device memory × capacity-checked placement policy × spill
+//! on/off — reporting spill-thrash (re-stages per completed job) vs
+//! error rate vs makespan against the serialized single-tenant bound.
+//! `cargo bench --bench spill` measures the same comparison as a bench
+//! and records `BENCH_spill.json`.
+
+use super::ExpOutput;
+use crate::config::DeviceConfig;
+use crate::gvm::devices::PlacementPolicy;
+use crate::gvm::spill::SpillConfig;
+use crate::gvm::sim_backend::simulate_pool_spill;
+use crate::util::table::{f2, f3, Table};
+use crate::workloads::Suite;
+use crate::Result;
+
+/// Oversubscription factors swept: Σ declared segments over Σ device
+/// memory (×1 fits; ×2/×4 need the host tier).
+const OVERSUB_SWEEP: [f64; 3] = [1.0, 2.0, 4.0];
+
+/// SPMD clients sharing the pool.
+const CLIENTS: usize = 8;
+
+/// Devices in the pool.
+const DEVICES: usize = 2;
+
+/// Rounds each client executes.
+const CYCLES: usize = 3;
+
+/// Spill tunables for the sweep: budget sized so the host tier can
+/// absorb the full ×4 working set (the budget knob itself is exercised
+/// by the unit/property tests).
+fn sweep_cfg(enabled: bool) -> SpillConfig {
+    SpillConfig {
+        enabled,
+        host_budget_bytes: 64 << 30,
+        watermark: 1.0,
+    }
+}
+
+/// The `spill` experiment: ES (device-bound) over a 2×C2070 pool,
+/// 8 SPMD clients, working sets ×1/×2/×4 of total device memory, both
+/// capacity-checked policies, spill off vs on.  Spill off reproduces
+/// the pre-spill `Error::Gvm` refusals; spill on completes every job
+/// and pays re-stage H2D traffic instead (the thrash column).
+pub fn spill_sweep() -> Result<ExpOutput> {
+    let suite = Suite::paper_defaults();
+    let w = suite.get("electrostatics").unwrap();
+    let specs = vec![DeviceConfig::tesla_c2070(); DEVICES];
+    let mut table = Table::new(&[
+        "oversub",
+        "policy",
+        "spill",
+        "placed",
+        "completed",
+        "errors",
+        "spills",
+        "restages",
+        "thrash",
+        "makespan_ms",
+        "serialized_ms",
+        "vs_serialized",
+    ]);
+    let mut notes = Vec::new();
+    // Acceptance cell: memory-aware at x2, off vs on.
+    let mut accept: Option<(usize, usize, f64, f64)> = None;
+
+    for &oversub in &OVERSUB_SWEEP {
+        for policy in [
+            PlacementPolicy::MemoryAware,
+            PlacementPolicy::WeightedLeastLoaded,
+        ] {
+            let mut off_completed = None;
+            for enabled in [false, true] {
+                let t = simulate_pool_spill(
+                    w,
+                    CLIENTS,
+                    &specs,
+                    policy,
+                    CYCLES,
+                    oversub,
+                    &sweep_cfg(enabled),
+                )?;
+                if policy == PlacementPolicy::MemoryAware
+                    && (oversub - 2.0).abs() < 1e-9
+                {
+                    if !enabled {
+                        off_completed = Some(t.jobs_completed);
+                    } else if let Some(off) = off_completed {
+                        accept = Some((
+                            off,
+                            t.jobs_completed,
+                            t.total_ms,
+                            t.serialized_ms,
+                        ));
+                    }
+                }
+                table.row(vec![
+                    format!("x{oversub:.0}"),
+                    policy.name().to_string(),
+                    if enabled { "on" } else { "off" }.to_string(),
+                    t.placed.to_string(),
+                    t.jobs_completed.to_string(),
+                    t.placement_errors.to_string(),
+                    t.spill_events.to_string(),
+                    t.restage_events.to_string(),
+                    f3(t.thrash()),
+                    f2(t.total_ms),
+                    f2(t.serialized_ms),
+                    f3(t.total_ms / t.serialized_ms),
+                ]);
+            }
+        }
+    }
+
+    // The acceptance phrase is emitted only when the criterion actually
+    // holds, so the CLI test that greps for it fails on regression
+    // instead of passing vacuously.
+    if let Some((off, on, makespan, bound)) = accept {
+        if on > off && makespan < bound {
+            notes.push(format!(
+                "memory-aware, x2 working set: spill-on completes {on} \
+                 jobs vs {off} for the spill-less pool (which errors), \
+                 with makespan {makespan:.2} ms under the serialized \
+                 single-tenant bound {bound:.2} ms (acceptance bar: \
+                 strictly more completions AND under the bound)"
+            ));
+        } else {
+            notes.push(format!(
+                "ACCEPTANCE NOT MET at x2 memory-aware: spill-on {on} \
+                 jobs vs spill-off {off}, makespan {makespan:.2} ms vs \
+                 bound {bound:.2} ms"
+            ));
+        }
+    }
+    notes.push(
+        "spill off reproduces the pre-spill behaviour: the \
+         capacity-checked policies refuse clients once no device fits \
+         their declared segment, so completed-job count collapses as \
+         oversubscription grows.  Spill on admits everyone: cold idle \
+         segments (LRU by last run) move to the host store and each \
+         re-stage pays one segment H2D on the owning device's timeline \
+         — thrash approaches 1 re-stage/job once the working set is a \
+         multiple of device memory, which is still cheaper than \
+         serializing tenants because compute overlaps across devices \
+         while only transfers are repeated"
+            .into(),
+    );
+    Ok(ExpOutput {
+        id: "spill".into(),
+        title: "Host-memory spill: oversubscription x policy, \
+                spill-thrash vs error-rate vs makespan"
+            .into(),
+        table,
+        notes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spill_table_covers_the_sweep() {
+        let out = spill_sweep().unwrap();
+        // 3 oversub factors x 2 policies x on/off.
+        assert_eq!(out.table.len(), 12);
+    }
+
+    #[test]
+    fn acceptance_note_present_and_spill_on_wins_at_2x() {
+        let out = spill_sweep().unwrap();
+        assert!(
+            out.notes.iter().any(|n| n.contains("acceptance bar")),
+            "{:?}",
+            out.notes
+        );
+        let suite = Suite::paper_defaults();
+        let w = suite.get("electrostatics").unwrap();
+        let specs = vec![DeviceConfig::tesla_c2070(); DEVICES];
+        let run = |enabled| {
+            simulate_pool_spill(
+                w,
+                CLIENTS,
+                &specs,
+                PlacementPolicy::MemoryAware,
+                CYCLES,
+                2.0,
+                &sweep_cfg(enabled),
+            )
+            .unwrap()
+        };
+        let off = run(false);
+        let on = run(true);
+        assert!(
+            on.jobs_completed > off.jobs_completed,
+            "{} vs {}",
+            on.jobs_completed,
+            off.jobs_completed
+        );
+        assert_eq!(on.placement_errors, 0, "{on:?}");
+        assert!(on.total_ms < on.serialized_ms, "{on:?}");
+    }
+}

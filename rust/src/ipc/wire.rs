@@ -164,6 +164,13 @@ pub enum ServerMsg {
         /// Submitted jobs whose completion events are still pending,
         /// across all in-flight epochs.
         queued_completions: u32,
+        /// Segment bytes currently spilled to the host store (memory
+        /// oversubscription extension; see `[spill]`).
+        spilled_bytes: u64,
+        /// Segments evicted to the host store since launch.
+        spill_events: u64,
+        /// Spilled segments re-staged onto a device since launch.
+        restage_events: u64,
         /// Per-tenant counters, in tenant-id order (completion-event
         /// fed; empty until a tenant registers).
         tenants: Vec<TenantStatsEntry>,
@@ -337,6 +344,9 @@ impl ServerMsg {
                 clients,
                 in_flight_flushes,
                 queued_completions,
+                spilled_bytes,
+                spill_events,
+                restage_events,
                 tenants,
             } => {
                 out.push(5);
@@ -348,6 +358,9 @@ impl ServerMsg {
                 out.extend_from_slice(&clients.to_le_bytes());
                 out.extend_from_slice(&in_flight_flushes.to_le_bytes());
                 out.extend_from_slice(&queued_completions.to_le_bytes());
+                out.extend_from_slice(&spilled_bytes.to_le_bytes());
+                out.extend_from_slice(&spill_events.to_le_bytes());
+                out.extend_from_slice(&restage_events.to_le_bytes());
                 out.extend_from_slice(&(tenants.len() as u32).to_le_bytes());
                 for t in tenants {
                     put_str(&t.tenant, &mut out);
@@ -421,6 +434,9 @@ impl ServerMsg {
                     u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
                 let queued_completions =
                     u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
+                let spilled_bytes = read_u64(buf, &mut pos)?;
+                let spill_events = read_u64(buf, &mut pos)?;
+                let restage_events = read_u64(buf, &mut pos)?;
                 let n = u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
                 if n > 4096 {
                     return Err(Error::Ipc(format!(
@@ -448,6 +464,9 @@ impl ServerMsg {
                     clients,
                     in_flight_flushes,
                     queued_completions,
+                    spilled_bytes,
+                    spill_events,
+                    restage_events,
                     tenants,
                 }
             }
@@ -563,6 +582,9 @@ mod tests {
             clients: 8,
             in_flight_flushes: 0,
             queued_completions: 0,
+            spilled_bytes: 0,
+            spill_events: 0,
+            restage_events: 0,
             tenants: vec![],
         });
         roundtrip_s(ServerMsg::Stats {
@@ -574,6 +596,9 @@ mod tests {
             clients: 8,
             in_flight_flushes: 2,
             queued_completions: 5,
+            spilled_bytes: 3 << 30,
+            spill_events: 17,
+            restage_events: 12,
             tenants: vec![
                 TenantStatsEntry {
                     tenant: "gold".into(),

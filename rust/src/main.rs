@@ -77,6 +77,9 @@ fn cmd_stats(socket: &str) -> Result<()> {
             clients,
             in_flight_flushes,
             queued_completions,
+            spilled_bytes,
+            spill_events,
+            restage_events,
             tenants,
         } => {
             println!("node statistics ({socket}):");
@@ -88,6 +91,10 @@ fn cmd_stats(socket: &str) -> Result<()> {
             println!(
                 "  pipeline             {in_flight_flushes} flush(es) in \
                  flight, {queued_completions} completion(s) pending"
+            );
+            println!(
+                "  spill                {spilled_bytes} B on host, \
+                 {spill_events} spill(s), {restage_events} re-stage(s)"
             );
             if !tenants.is_empty() {
                 println!(

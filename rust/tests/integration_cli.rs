@@ -62,6 +62,27 @@ fn exp_pipeline_reports_overlap_gain() {
 }
 
 #[test]
+fn exp_spill_meets_the_oversubscription_acceptance_bar() {
+    let tmp = std::env::temp_dir().join("vgpu-cli-test-spill");
+    let (ok, stdout, stderr) =
+        run(&["exp", "spill", "--results", tmp.to_str().unwrap()]);
+    assert!(ok, "{stderr}");
+    // The sweep table covers both spill states and reports thrash.
+    assert!(stdout.contains("thrash"), "{stdout}");
+    assert!(stdout.contains("serialized_ms"), "{stdout}");
+    // ISSUE acceptance: at x2 working set the spill-enabled run
+    // strictly exceeds the spill-disabled (erroring) run's completed
+    // jobs and stays under the serialized single-tenant bound.
+    assert!(stdout.contains("acceptance bar"), "{stdout}");
+    assert!(
+        stdout.contains("strictly more completions AND under the bound"),
+        "{stdout}"
+    );
+    assert!(tmp.join("spill.tsv").exists());
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
 fn unknown_experiment_fails_cleanly() {
     let (ok, _, stderr) = run(&["exp", "fig99"]);
     assert!(!ok);

@@ -10,6 +10,7 @@ use std::time::{Duration, Instant};
 use vgpu::config::DeviceConfig;
 use vgpu::gvm::devices::{PlacementPolicy, PoolConfig};
 use vgpu::gvm::qos::QosConfig;
+use vgpu::gvm::spill::SpillConfig;
 use vgpu::gvm::{Command, Daemon, DaemonConfig, PipelineConfig};
 use vgpu::ipc::{ClientMsg, ServerMsg};
 use vgpu::runtime::{ExecHandle, TensorValue};
@@ -403,6 +404,193 @@ fn stats_gauges_track_in_flight_epochs() {
         }
         other => panic!("{other:?}"),
     }
+}
+
+/// `n` f32 elements = `4n` bytes.
+fn tn(n: usize) -> TensorValue {
+    TensorValue::F32(vec![n], vec![0.0; n])
+}
+
+/// One sleep-backed device with `mem` bytes of memory and the host
+/// spill tier enabled, at pipeline depth 2.
+fn spill_daemon(mem: u64, sleep_ms: u64) -> mpsc::Sender<Command> {
+    let mut spec = DeviceConfig::tesla_c2070();
+    spec.mem_bytes = mem;
+    let cfg = DaemonConfig {
+        barrier: Some(1),
+        barrier_timeout: Duration::from_secs(5),
+        pool: PoolConfig::homogeneous(1, spec, PlacementPolicy::RoundRobin),
+        pipeline: PipelineConfig {
+            max_in_flight_flushes: 2,
+        },
+        spill: SpillConfig {
+            enabled: true,
+            host_budget_bytes: 1 << 20,
+            watermark: 1.0,
+        },
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::with_handles(cfg, vec![sleepy_handle(sleep_ms)]).unwrap();
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+    tx
+}
+
+fn spill_gauges(tx: &mpsc::Sender<Command>, probe: u64) -> (u64, u64, u64, u64) {
+    match call(tx, probe, ClientMsg::Stats) {
+        ServerMsg::Stats {
+            spilled_bytes,
+            spill_events,
+            restage_events,
+            jobs_failed,
+            ..
+        } => (spilled_bytes, spill_events, restage_events, jobs_failed),
+        other => panic!("{other:?}"),
+    }
+}
+
+fn device_mem(tx: &mpsc::Sender<Command>, probe: u64) -> u64 {
+    match call(tx, probe, ClientMsg::DevInfo) {
+        ServerMsg::Devices { devices, .. } => {
+            devices.iter().map(|d| d.mem_used).sum()
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+/// ISSUE satellite: spill never touches in-flight state.  A `Running`
+/// client's segments (its pre-staged next cycle) are never evicted —
+/// under pressure the *idle* resident spills instead — and a spilled
+/// client is never included in a flush before its re-stage step
+/// completes (observable as `restage_events` advancing before its job
+/// completes, with the device never over capacity).
+#[test]
+fn spill_never_evicts_in_flight_segments() {
+    const MEM: u64 = 96;
+    let tx = spill_daemon(MEM, 80);
+
+    // C: idle resident with 16 B (the eviction candidate).
+    let c = register(&tx, "c");
+    call(&tx, c, ClientMsg::Snd { slot: 0, tensor: tn(4) });
+    // A: 32 B staged, STR -> submitted (inputs consumed), then 32 B of
+    // NEXT-cycle inputs pre-staged while Running.
+    let a = register(&tx, "a");
+    call(&tx, a, ClientMsg::Snd { slot: 0, tensor: tn(8) });
+    assert!(matches!(
+        call(&tx, a, ClientMsg::Str { workload: "sleepy".into() }),
+        ServerMsg::Queued { .. }
+    ));
+    assert!(matches!(
+        call(&tx, a, ClientMsg::Snd { slot: 0, tensor: tn(8) }),
+        ServerMsg::Ack
+    ));
+    // B: 64 B of staging forces pressure (16 + 32 + 64 > 96).  The
+    // idle 16 B (C) must spill — never A's in-flight pre-stage.
+    let b = register(&tx, "b");
+    assert!(matches!(
+        call(&tx, b, ClientMsg::Snd { slot: 0, tensor: tn(16) }),
+        ServerMsg::Ack
+    ));
+    let (spilled, spills, restages, failed) = spill_gauges(&tx, a);
+    assert_eq!(
+        spilled, 16,
+        "exactly C's idle 16 B spilled (a Running eviction would show 32)"
+    );
+    assert_eq!(spills, 1);
+    assert_eq!(restages, 0);
+    assert_eq!(failed, 0);
+    assert_eq!(device_mem(&tx, a), MEM, "A's 32 + B's 64 resident");
+
+    // A's flight completes untouched, and its pre-staged inputs are
+    // still intact for the next cycle.
+    assert!(matches!(call(&tx, a, ClientMsg::Stp), ServerMsg::Done { .. }));
+    assert!(matches!(
+        call(&tx, b, ClientMsg::Str { workload: "sleepy".into() }),
+        ServerMsg::Queued { .. }
+    ));
+    assert!(matches!(call(&tx, b, ClientMsg::Stp), ServerMsg::Done { .. }));
+
+    // C's next STR transparently re-stages its spilled segment ahead
+    // of the execute step — the job completes, never submitted while
+    // spilled.
+    assert!(matches!(
+        call(&tx, c, ClientMsg::Str { workload: "sleepy".into() }),
+        ServerMsg::Queued { .. }
+    ));
+    assert!(matches!(call(&tx, c, ClientMsg::Stp), ServerMsg::Done { .. }));
+    let (spilled, spills, restages, failed) = spill_gauges(&tx, a);
+    assert_eq!(spilled, 0, "C's segment returned to the device");
+    assert_eq!((spills, restages, failed), (1, 1, 0));
+
+    // A's pre-staged cycle still runs with its input intact.
+    assert!(matches!(
+        call(&tx, a, ClientMsg::Str { workload: "sleepy".into() }),
+        ServerMsg::Queued { .. }
+    ));
+    match call(&tx, a, ClientMsg::Stp) {
+        ServerMsg::Done { n_outputs, .. } => {
+            assert_eq!(n_outputs, 1, "pre-staged input survived the pressure")
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+/// When nothing idle is evictable (the only other resident is
+/// `Running`), the *staging client itself* spills to the host store —
+/// the device never overcommits and the in-flight pre-stage is never
+/// touched.  The self-spilled client re-stages on its own next STR.
+#[test]
+fn staging_client_self_spills_when_nothing_is_evictable() {
+    const MEM: u64 = 64;
+    let tx = spill_daemon(MEM, 300);
+
+    // A: submitted (Running for ~300 ms) with 32 B pre-staged.
+    let a = register(&tx, "a");
+    call(&tx, a, ClientMsg::Snd { slot: 0, tensor: tn(8) });
+    assert!(matches!(
+        call(&tx, a, ClientMsg::Str { workload: "sleepy".into() }),
+        ServerMsg::Queued { .. }
+    ));
+    assert!(matches!(
+        call(&tx, a, ClientMsg::Snd { slot: 0, tensor: tn(8) }),
+        ServerMsg::Ack
+    ));
+    // B stages a full-device segment: only A (Running) is resident, so
+    // B itself goes host-side.
+    let b = register(&tx, "b");
+    assert!(matches!(
+        call(&tx, b, ClientMsg::Snd { slot: 0, tensor: tn(16) }),
+        ServerMsg::Ack
+    ));
+    let (spilled, spills, _, failed) = spill_gauges(&tx, a);
+    assert_eq!(spilled, 64, "B self-spilled; A's pre-stage untouched");
+    assert_eq!(spills, 1);
+    assert_eq!(failed, 0);
+    assert_eq!(device_mem(&tx, a), 32, "only A's pre-stage resident");
+
+    // A settles; B's STR re-stages (evicting the now-idle A) and runs.
+    assert!(matches!(call(&tx, a, ClientMsg::Stp), ServerMsg::Done { .. }));
+    assert!(matches!(
+        call(&tx, b, ClientMsg::Str { workload: "sleepy".into() }),
+        ServerMsg::Queued { .. }
+    ));
+    assert!(matches!(call(&tx, b, ClientMsg::Stp), ServerMsg::Done { .. }));
+    let (_, _, restages, failed) = spill_gauges(&tx, a);
+    assert!(restages >= 1, "B re-staged before executing");
+    assert_eq!(failed, 0);
+
+    // And A's pre-staged cycle (possibly evicted for B) still runs.
+    assert!(matches!(
+        call(&tx, a, ClientMsg::Str { workload: "sleepy".into() }),
+        ServerMsg::Queued { .. }
+    ));
+    match call(&tx, a, ClientMsg::Stp) {
+        ServerMsg::Done { n_outputs, .. } => assert_eq!(n_outputs, 1),
+        other => panic!("{other:?}"),
+    }
+    let (spilled, _, _, failed) = spill_gauges(&tx, a);
+    assert_eq!(spilled, 0, "everything consumed after settle");
+    assert_eq!(failed, 0, "oversubscription never failed a job");
 }
 
 /// Depth 1 defers a second epoch until the first settles — the
