@@ -1,0 +1,147 @@
+//! Metrics-registry bench: what observability costs on the hot path.
+//!
+//! Cases: one atomic counter increment through a pre-resolved handle,
+//! the float-counter CAS add, one histogram observe, the *cold* path
+//! (name+label map lookup per publication — what handles exist to
+//! avoid), a per-completion publication composite with metrics on vs
+//! off (the daemon's `apply_completion` instrumentation), and a full
+//! Prometheus render at a realistic registry size.  Results go to
+//! `BENCH_metrics.json` next to the other BENCH_*.json files (override
+//! the path with `VGPU_BENCH_METRICS_JSON`).
+
+mod bench_common;
+use bench_common::{bench, section};
+
+use vgpu::metrics::Registry;
+
+const FLUSH_BUCKETS_MS: [f64; 14] = [
+    0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0,
+    2500.0, 5000.0, 10000.0,
+];
+
+fn fmt_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.1}")
+    } else {
+        "null".into()
+    }
+}
+
+/// A registry shaped like a live daemon's: node counters, pipeline
+/// gauges, the flush histogram, 4 devices, 16 tenants.
+fn daemon_shaped_registry() -> Registry {
+    let reg = Registry::new();
+    reg.counter("vgpu_batches_total", "flush epochs");
+    reg.counter("vgpu_jobs_ok_total", "jobs completed");
+    reg.counter("vgpu_jobs_failed_total", "jobs failed");
+    reg.counter("vgpu_bytes_staged_total", "bytes staged");
+    reg.counter_f("vgpu_device_ms_total", "device time");
+    reg.gauge("vgpu_clients", "registered clients");
+    reg.gauge("vgpu_pipeline_in_flight_flushes", "epochs in flight");
+    reg.gauge("vgpu_pipeline_queued_completions", "pending completions");
+    reg.histogram("vgpu_flush_latency_ms", "epoch latency", &FLUSH_BUCKETS_MS);
+    for d in 0..4 {
+        let dev = d.to_string();
+        let labels = [("device", dev.as_str())];
+        reg.gauge_with("vgpu_device_mem_used_bytes", "bytes", &labels);
+        reg.gauge_f_with("vgpu_device_queued_ms", "queued ms", &labels);
+        reg.counter_with("vgpu_device_jobs_done_total", "jobs", &labels);
+    }
+    for t in 0..16 {
+        let tenant = format!("tenant{t}");
+        let labels = [("tenant", tenant.as_str())];
+        reg.counter_with("vgpu_tenant_jobs_ok_total", "jobs ok", &labels);
+        reg.counter_f_with("vgpu_tenant_device_ms_total", "ms", &labels);
+    }
+    reg
+}
+
+fn main() {
+    struct Row {
+        case: &'static str,
+        ns: f64,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+    let mut record = |case: &'static str, ns: f64| rows.push(Row { case, ns });
+
+    section("handle hot path (pre-resolved, one atomic op)");
+    let reg = daemon_shaped_registry();
+    let counter = reg.counter("vgpu_jobs_ok_total", "jobs completed");
+    record("counter_inc", bench("counter_inc", || counter.inc()));
+    let counter_f = reg.counter_f("vgpu_device_ms_total", "device time");
+    record(
+        "counter_f_add",
+        bench("counter_f_add", || counter_f.add(0.125)),
+    );
+    let hist = reg.histogram("vgpu_flush_latency_ms", "epoch latency", &FLUSH_BUCKETS_MS);
+    let mut v = 0u64;
+    record(
+        "histogram_observe",
+        bench("histogram_observe", || {
+            v = (v + 1) % 16;
+            hist.observe(0.4 + v as f64);
+        }),
+    );
+
+    section("cold path (map lookup per publication)");
+    record(
+        "labeled_lookup_inc",
+        bench("labeled_lookup_inc", || {
+            reg.counter_with("vgpu_tenant_jobs_ok_total", "jobs ok", &[("tenant", "tenant7")])
+                .inc()
+        }),
+    );
+
+    section("per-completion publication: metrics on vs off");
+    // Off: the pre-registry accounting — plain local counters.
+    let mut jobs_ok = 0u64;
+    let mut device_ms = 0.0f64;
+    record(
+        "completion_metrics_off",
+        bench("completion_metrics_off", || {
+            jobs_ok += 1;
+            device_ms += 0.125;
+            std::hint::black_box((jobs_ok, device_ms));
+        }),
+    );
+    // On: what `apply_completion` publishes per event (node counters +
+    // the completed tenant's pre-resolved handles).
+    let t_ok = reg.counter_with("vgpu_tenant_jobs_ok_total", "jobs ok", &[("tenant", "tenant3")]);
+    let t_ms = reg.counter_f_with("vgpu_tenant_device_ms_total", "ms", &[("tenant", "tenant3")]);
+    record(
+        "completion_metrics_on",
+        bench("completion_metrics_on", || {
+            counter.inc();
+            counter_f.add(0.125);
+            t_ok.inc();
+            t_ms.add(0.125);
+        }),
+    );
+
+    section("exposition render (scrape cost, off the daemon loop)");
+    record(
+        "render_prometheus",
+        bench("render_prometheus", || reg.render_prometheus()),
+    );
+
+    // Record the comparison for the repo (BENCH_metrics.json).
+    let path = std::env::var("VGPU_BENCH_METRICS_JSON")
+        .unwrap_or_else(|_| "BENCH_metrics.json".into());
+    let mut json = String::from(
+        "{\n  \"bench\": \"metrics\",\n  \"unit\": \"ns_per_op\",\n  \
+         \"devices\": 4,\n  \"tenants\": 16,\n  \"rows\": [\n",
+    );
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"case\": \"{}\", \"ns_per_op\": {}}}{}\n",
+            r.case,
+            fmt_num(r.ns),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("\n[recorded {path}]"),
+        Err(e) => eprintln!("\n[could not write {path}: {e}]"),
+    }
+}

@@ -26,7 +26,9 @@ use std::sync::mpsc;
 
 use crate::gvm::Command;
 use crate::ipc::transport::{Transport, UnixTransport};
-use crate::ipc::{ClientMsg, DeviceEntry, ServerMsg, TenantStatsEntry};
+use crate::ipc::{
+    ClientMsg, DeviceEntry, ServerMsg, TenantStatsEntry, UsageEntry,
+};
 use crate::runtime::TensorValue;
 use crate::{Error, Result};
 
@@ -69,6 +71,14 @@ pub struct NodeStatsView {
     pub restage_events: u64,
     /// Per-tenant counters (completion-event fed), in tenant-id order.
     pub tenants: Vec<TenantStatsEntry>,
+}
+
+/// Per-tenant metering snapshot (see [`VgpuClient::usage`]).
+#[derive(Debug, Clone)]
+pub struct UsageView {
+    /// One metered row per tenant, in tenant-id order (the daemon's
+    /// [`crate::metrics::UsageLedger`] snapshot).
+    pub records: Vec<UsageEntry>,
 }
 
 /// Outcome of a migration request (see [`VgpuClient::migrate`]).
@@ -268,6 +278,17 @@ impl VgpuClient {
             }),
             ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
             other => Err(Error::Ipc(format!("expected Stats, got {other:?}"))),
+        }
+    }
+
+    /// Query the per-tenant metering ledger (observability extension):
+    /// device-ms, bytes staged/spilled, migrations, and flushes billed
+    /// to each tenant from the daemon's completion events.
+    pub fn usage(&mut self) -> Result<UsageView> {
+        match self.call(ClientMsg::Usage)? {
+            ServerMsg::Usage { records } => Ok(UsageView { records }),
+            ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
+            other => Err(Error::Ipc(format!("expected Usage, got {other:?}"))),
         }
     }
 

@@ -7,7 +7,8 @@
 //! vgpu run <workload> [-n N] [--reps R]    in-proc SPMD run (real PJRT)
 //! vgpu migrate <rank> --socket PATH [--to DEV]
 //!                                          live-migrate a VGPU
-//! vgpu stats --socket PATH                 node stats incl. pipeline gauges
+//! vgpu stats --socket PATH [--json]        node stats incl. pipeline gauges
+//! vgpu usage --socket PATH                 per-tenant metering ledger
 //! vgpu list                                list workloads + artifacts
 //! vgpu profile                             show calibration derivation
 //! ```
@@ -75,6 +76,14 @@ pub enum Cmd {
     /// Render a served GVM's node statistics (admin verb over the wire
     /// `Stats` message), including the async-pipeline gauges.
     Stats {
+        /// Socket of the served GVM.
+        socket: String,
+        /// Emit one JSON object instead of the human table.
+        json: bool,
+    },
+    /// Render a served GVM's per-tenant metering ledger (admin verb over
+    /// the wire `Usage` message; see `metrics::ledger`).
+    Usage {
         /// Socket of the served GVM.
         socket: String,
     },
@@ -281,6 +290,7 @@ pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Cmd> {
         }
         "stats" => {
             let mut socket = None;
+            let mut json = false;
             while let Some(flag) = args.pop_front() {
                 match flag.as_str() {
                     "--socket" => {
@@ -288,6 +298,7 @@ pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Cmd> {
                             Error::Config("--socket needs a value".into())
                         })?)
                     }
+                    "--json" => json = true,
                     f => {
                         return Err(Error::Config(format!(
                             "stats: unknown flag {f}"
@@ -298,6 +309,29 @@ pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Cmd> {
             Ok(Cmd::Stats {
                 socket: socket.ok_or_else(|| {
                     Error::Config("stats: --socket required".into())
+                })?,
+                json,
+            })
+        }
+        "usage" => {
+            let mut socket = None;
+            while let Some(flag) = args.pop_front() {
+                match flag.as_str() {
+                    "--socket" => {
+                        socket = Some(args.pop_front().ok_or_else(|| {
+                            Error::Config("--socket needs a value".into())
+                        })?)
+                    }
+                    f => {
+                        return Err(Error::Config(format!(
+                            "usage: unknown flag {f}"
+                        )))
+                    }
+                }
+            }
+            Ok(Cmd::Usage {
+                socket: socket.ok_or_else(|| {
+                    Error::Config("usage: --socket required".into())
                 })?,
             })
         }
@@ -323,8 +357,10 @@ USAGE:
   vgpu plot <id> [--results DIR]      ASCII-chart a regenerated figure
   vgpu migrate <rank> --socket PATH [--to DEV]
                                       live-migrate a VGPU between devices
-  vgpu stats --socket PATH            node statistics of a served GVM
+  vgpu stats --socket PATH [--json]   node statistics of a served GVM
                                       (incl. async-pipeline gauges)
+  vgpu usage --socket PATH            per-tenant metering ledger of a
+                                      served GVM (device-ms, bytes, ...)
   vgpu list                           list workloads and artifacts
   vgpu profile                        show cost-calibration details
   vgpu help                           this text
@@ -417,11 +453,31 @@ mod tests {
         assert_eq!(
             p("stats --socket /tmp/v.sock").unwrap(),
             Cmd::Stats {
-                socket: "/tmp/v.sock".into()
+                socket: "/tmp/v.sock".into(),
+                json: false
+            }
+        );
+        assert_eq!(
+            p("stats --socket /tmp/v.sock --json").unwrap(),
+            Cmd::Stats {
+                socket: "/tmp/v.sock".into(),
+                json: true
             }
         );
         assert!(p("stats").is_err(), "--socket required");
         assert!(p("stats --bogus x").is_err());
+    }
+
+    #[test]
+    fn parses_usage() {
+        assert_eq!(
+            p("usage --socket /tmp/v.sock").unwrap(),
+            Cmd::Usage {
+                socket: "/tmp/v.sock".into()
+            }
+        );
+        assert!(p("usage").is_err(), "--socket required");
+        assert!(p("usage --bogus x").is_err());
     }
 
     #[test]

@@ -44,6 +44,10 @@
 //! host_budget_bytes = 34359738368  # cap on spilled bytes (32 GiB)
 //! watermark = 1.0             # device fill fraction that triggers spill
 //!
+//! [metrics]
+//! enabled = true              # Prometheus /metrics endpoint (default off)
+//! listen = 127.0.0.1:9187     # TCP listen address (:0 picks a port)
+//!
 //! [gvm]
 //! barrier = 8                 # omit for "all registered clients"
 //! barrier_timeout_ms = 50
@@ -62,6 +66,7 @@ use crate::gvm::exec::MigrationConfig;
 use crate::gvm::qos::{parse_share_list, QosConfig};
 use crate::gvm::spill::SpillConfig;
 use crate::gvm::{DaemonConfig, GvmConfig, PipelineConfig, StyleRule};
+use crate::metrics::MetricsConfig;
 use crate::{Error, Result};
 
 /// Parsed sections: `section -> key -> value`.
@@ -363,6 +368,34 @@ impl ConfigFile {
         Ok(s)
     }
 
+    /// Build the observability-endpoint tunables (the `[metrics]`
+    /// section); omitted section = endpoint off (the registry still
+    /// accumulates — `vgpu stats` / `vgpu usage` serve it over IPC).
+    pub fn metrics(&self) -> Result<MetricsConfig> {
+        let mut m = MetricsConfig::default();
+        if let Some(v) = self.get("metrics", "enabled") {
+            m.enabled = match v.to_lowercase().as_str() {
+                "true" | "1" | "on" | "yes" => true,
+                "false" | "0" | "off" | "no" => false,
+                other => {
+                    return Err(Error::Config(format!(
+                        "[metrics] enabled = {other:?} (want true|false)"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = self.get("metrics", "listen") {
+            if v.is_empty() || !v.contains(':') {
+                return Err(Error::Config(format!(
+                    "[metrics] listen = {v:?} (want host:port, e.g. \
+                     127.0.0.1:9187)"
+                )));
+            }
+            m.listen = v.to_string();
+        }
+        Ok(m)
+    }
+
     /// Build a node config (`[node]` + `[devices]` + `[device]`).
     pub fn node(&self) -> Result<NodeConfig> {
         let mut n = NodeConfig {
@@ -411,6 +444,7 @@ impl ConfigFile {
             artifacts_dir,
             daemon,
             preload: Vec::new(),
+            metrics: self.metrics()?,
         })
     }
 }
@@ -612,6 +646,40 @@ policy = model-optimal
         ] {
             let c = ConfigFile::parse(bad).unwrap();
             assert!(c.spill().is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn metrics_section_parses_and_rides_into_gvm() {
+        let c = ConfigFile::parse(
+            "[metrics]\nenabled = true\nlisten = 0.0.0.0:9999\n",
+        )
+        .unwrap();
+        let m = c.metrics().unwrap();
+        assert!(m.enabled);
+        assert_eq!(m.listen, "0.0.0.0:9999");
+        let g = c.gvm().unwrap();
+        assert!(g.metrics.enabled);
+        assert_eq!(g.metrics.listen, "0.0.0.0:9999");
+    }
+
+    #[test]
+    fn metrics_section_defaults_to_off() {
+        let c = ConfigFile::parse("").unwrap();
+        let m = c.metrics().unwrap();
+        assert!(!m.enabled);
+        assert_eq!(m.listen, "127.0.0.1:9187");
+        assert!(!c.gvm().unwrap().metrics.enabled);
+    }
+
+    #[test]
+    fn bad_metrics_sections_rejected() {
+        for bad in [
+            "[metrics]\nenabled = maybe\n",
+            "[metrics]\nlisten = nocolon\n",
+        ] {
+            let c = ConfigFile::parse(bad).unwrap();
+            assert!(c.metrics().is_err(), "{bad:?} should be rejected");
         }
     }
 

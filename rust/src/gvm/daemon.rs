@@ -48,10 +48,19 @@
 //! [`super::exec`] engine — one [`super::exec::ExecutorPool`] worker
 //! thread per pool entry, each draining its device's submission queue —
 //! so device batches execute *concurrently in wall-clock time*, and
-//! [`NodeStats`]/per-tenant accounting update from real
+//! node/per-tenant accounting updates from real
 //! [`super::exec::Completion`] events on the reporting channel, never
 //! from inline bookkeeping (a failed job retires its queue estimate but
-//! never increments done counters).
+//! never increments done counters).  All of that accounting lives in a
+//! shared [`crate::metrics::Registry`] ([`Daemon::registry`]): the
+//! subsystems publish named counters/gauges/histograms, the
+//! `ClientMsg::Stats` reply is a byte-identical *view* over the same
+//! handles, the `/metrics` HTTP endpoint
+//! ([`crate::metrics::MetricsServer`]) renders the registry as
+//! Prometheus text, and a [`crate::metrics::UsageLedger`] meters
+//! per-tenant usage (device-ms, bytes staged/spilled, migrations,
+//! flushes) from the same completion events, served by
+//! `ClientMsg::Usage`.
 //!
 //! Per-tenant QoS ([`super::qos`]) shapes both ends of the pipeline: the
 //! tenant carried on `REQ` attributes the VGPU's load for
@@ -86,6 +95,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::devices::{DeviceId, DevicePool, PoolConfig};
@@ -93,13 +103,17 @@ use super::exec::{
     Completion, ExecutorPool, MigrationConfig, Rebalancer, Submission,
 };
 use super::plan::Job;
-use super::qos::{WeightedDeficitQueue, DEFAULT_TENANT};
+use super::qos::{QueueMetrics, WeightedDeficitQueue, DEFAULT_TENANT};
 use super::scheduler::{plan_batch, Policy};
-use super::spill::{SpillConfig, SpillStore};
+use super::spill::{SpillConfig, SpillMetrics, SpillStore};
 use super::vgpu::{ClientId, Residency, VgpuState, VgpuTable};
-use crate::ipc::wire::{DeviceEntry, TenantStatsEntry};
+use crate::ipc::wire::{DeviceEntry, TenantStatsEntry, UsageEntry};
 use crate::ipc::{ClientMsg, ServerMsg};
 use crate::log;
+use crate::metrics::registry::{
+    Counter, CounterF, Gauge, GaugeF, Histogram, Registry,
+};
+use crate::metrics::UsageLedger;
 use crate::runtime::ExecHandle;
 use crate::workloads::Suite;
 use crate::{Error, Result};
@@ -118,6 +132,15 @@ const MAX_TENANT_STATS: usize = 1024;
 
 /// Aggregate row for tenants beyond [`MAX_TENANT_STATS`].
 const OTHER_TENANTS: &str = "(other)";
+
+/// Flush-epoch settle-latency histogram bounds (ms).  Fixed buckets so
+/// every daemon exports the same series shape: sub-millisecond mock
+/// executions land in the first buckets, real multi-second batches in
+/// the last.
+const FLUSH_LATENCY_BUCKETS_MS: [f64; 14] = [
+    0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0,
+    2500.0, 5000.0, 10000.0,
+];
 
 /// A client command routed to the daemon.
 pub struct Command {
@@ -253,35 +276,183 @@ pub struct Daemon {
     /// Clients parked in `WaitFlush`/synchronous `FLH`, each waiting for
     /// every epoch up to its recorded one to settle.
     flush_waiters: Vec<(u64, mpsc::Sender<ServerMsg>)>,
-    /// Observability counters (served by `ClientMsg::Stats`).
-    stats: NodeStats,
-    /// Per-tenant counters fed by completion/migration events
-    /// (BTreeMap: deterministic wire order).
-    tenant_stats: BTreeMap<String, TenantCounters>,
+    /// Registry-backed observability handles: every counter the daemon
+    /// keeps lives in the shared [`Registry`], and `ClientMsg::Stats`
+    /// is served as a view over these handles.
+    metrics: NodeMetrics,
+    /// Per-tenant metering ledger fed by the same completion events as
+    /// the pool accounting (served by `ClientMsg::Usage`).
+    ledger: UsageLedger,
+    /// Service-counter publisher cloned into each flush's
+    /// weighted-deficit queue.
+    qos_metrics: QueueMetrics,
 }
 
-/// Node-level counters.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct NodeStats {
-    /// Batches flushed.
-    pub batches: u64,
-    /// Jobs completed successfully.
-    pub jobs_ok: u64,
-    /// Jobs failed.
-    pub jobs_failed: u64,
-    /// Bytes staged through SND.
-    pub bytes_staged: u64,
-    /// Cumulative device execution time (ms).
-    pub device_ms: f64,
+/// The daemon's handles into the shared metrics [`Registry`] — named
+/// node-level counters plus lazily-registered per-tenant and per-device
+/// series.  Monotone counters are bumped at the event sites; sampled
+/// gauges are refreshed once per event-loop turn
+/// ([`Daemon::publish_gauges`]).
+struct NodeMetrics {
+    registry: Arc<Registry>,
+    batches: Counter,
+    jobs_ok: Counter,
+    jobs_failed: Counter,
+    bytes_staged: Counter,
+    device_ms: CounterF,
+    clients: Gauge,
+    in_flight_flushes: Gauge,
+    queued_completions: Gauge,
+    flush_latency_ms: Histogram,
+    devices: Vec<DeviceHandles>,
+    /// Per-tenant handles, capped like the wire rows (BTreeMap:
+    /// deterministic `Stats` wire order).
+    tenants: BTreeMap<String, TenantHandles>,
 }
 
-/// One tenant's completion-event counters.
-#[derive(Debug, Clone, Copy, Default)]
-struct TenantCounters {
-    jobs_ok: u64,
-    jobs_failed: u64,
-    device_ms: f64,
-    migrations: u64,
+/// One device's labeled gauge/counter handles.
+struct DeviceHandles {
+    clients: Gauge,
+    mem_used: Gauge,
+    queued_ms: GaugeF,
+    jobs_done: Counter,
+    busy_ms: CounterF,
+}
+
+/// One tenant's labeled counter handles.
+struct TenantHandles {
+    jobs_ok: Counter,
+    jobs_failed: Counter,
+    device_ms: CounterF,
+    migrations: Counter,
+}
+
+impl DeviceHandles {
+    fn new(registry: &Registry, id: usize) -> Self {
+        let dev = id.to_string();
+        let labels = [("device", dev.as_str())];
+        Self {
+            clients: registry.gauge_with(
+                "vgpu_device_clients",
+                "VGPUs bound to this device",
+                &labels,
+            ),
+            mem_used: registry.gauge_with(
+                "vgpu_device_mem_used_bytes",
+                "Resident segment bytes attributed to this device",
+                &labels,
+            ),
+            queued_ms: registry.gauge_f_with(
+                "vgpu_device_queued_ms",
+                "Estimated queued work (ms) on this device",
+                &labels,
+            ),
+            jobs_done: registry.counter_with(
+                "vgpu_device_jobs_done_total",
+                "Jobs completed on this device",
+                &labels,
+            ),
+            busy_ms: registry.counter_f_with(
+                "vgpu_device_busy_ms_total",
+                "Cumulative execution time (ms) on this device",
+                &labels,
+            ),
+        }
+    }
+}
+
+impl TenantHandles {
+    fn new(registry: &Registry, tenant: &str) -> Self {
+        let labels = [("tenant", tenant)];
+        Self {
+            jobs_ok: registry.counter_with(
+                "vgpu_tenant_jobs_ok_total",
+                "Jobs completed successfully, per tenant",
+                &labels,
+            ),
+            jobs_failed: registry.counter_with(
+                "vgpu_tenant_jobs_failed_total",
+                "Jobs failed, per tenant",
+                &labels,
+            ),
+            device_ms: registry.counter_f_with(
+                "vgpu_tenant_device_ms_total",
+                "Cumulative device execution time (ms), per tenant",
+                &labels,
+            ),
+            migrations: registry.counter_with(
+                "vgpu_tenant_migrations_total",
+                "Live VGPU migrations, per tenant",
+                &labels,
+            ),
+        }
+    }
+}
+
+impl NodeMetrics {
+    fn new(registry: Arc<Registry>, n_devices: usize) -> Self {
+        let devices = (0..n_devices)
+            .map(|i| DeviceHandles::new(&registry, i))
+            .collect();
+        Self {
+            batches: registry.counter("vgpu_batches_total", "Batches flushed"),
+            jobs_ok: registry
+                .counter("vgpu_jobs_ok_total", "Jobs completed successfully"),
+            jobs_failed: registry
+                .counter("vgpu_jobs_failed_total", "Jobs failed"),
+            bytes_staged: registry
+                .counter("vgpu_bytes_staged_total", "Bytes staged through SND"),
+            device_ms: registry.counter_f(
+                "vgpu_device_ms_total",
+                "Cumulative device execution time (ms)",
+            ),
+            clients: registry
+                .gauge("vgpu_clients", "Live registered VGPU clients"),
+            in_flight_flushes: registry.gauge(
+                "vgpu_pipeline_in_flight_flushes",
+                "Flush epochs currently in flight",
+            ),
+            queued_completions: registry.gauge(
+                "vgpu_pipeline_queued_completions",
+                "Submitted jobs awaiting their completion event",
+            ),
+            flush_latency_ms: registry.histogram(
+                "vgpu_flush_latency_ms",
+                "Flush epoch submit-to-settle latency (ms)",
+                &FLUSH_LATENCY_BUCKETS_MS,
+            ),
+            devices,
+            tenants: BTreeMap::new(),
+            registry,
+        }
+    }
+
+    /// A tenant's counter handles, registering the series on first
+    /// contact.  Same cardinality bound as the wire rows: tenants
+    /// beyond [`MAX_TENANT_STATS`] aggregate under [`OTHER_TENANTS`].
+    fn tenant(&mut self, tenant: &str) -> &TenantHandles {
+        let key = if self.tenants.contains_key(tenant)
+            || self.tenants.len() < MAX_TENANT_STATS
+        {
+            tenant
+        } else {
+            OTHER_TENANTS
+        };
+        let registry = &self.registry;
+        self.tenants
+            .entry(key.to_string())
+            .or_insert_with(|| TenantHandles::new(registry, key))
+    }
+
+    /// The throttle counter for a tenant — resolved per event (the
+    /// throttle path is rare and already returns an error).
+    fn throttled(&self, tenant: &str) -> Counter {
+        self.registry.counter_with(
+            "vgpu_qos_throttled_total",
+            "STR admissions rejected at a tenant's rate limit",
+            &[("tenant", tenant)],
+        )
+    }
 }
 
 impl Daemon {
@@ -324,10 +495,15 @@ impl Daemon {
         handles: Vec<ExecHandle>,
     ) -> Self {
         let artifact_names = handles[0].names().unwrap_or_default();
-        let executors =
+        let registry = Arc::new(Registry::new());
+        let mut executors =
             ExecutorPool::new(handles).expect("pool construction is non-empty");
+        executors.attach_metrics(&registry);
         let rebalancer = Rebalancer::new(cfg.migration.clone());
-        let spill = SpillStore::new(cfg.spill.clone());
+        let mut spill = SpillStore::new(cfg.spill.clone());
+        spill.set_metrics(SpillMetrics::new(&registry));
+        let metrics = NodeMetrics::new(registry.clone(), pool.len());
+        let qos_metrics = QueueMetrics::new(registry);
         Self {
             table: VgpuTable::new(cfg.mem_budget, cfg.max_clients),
             cfg,
@@ -343,9 +519,17 @@ impl Daemon {
             inflight: BTreeMap::new(),
             flush_requested: false,
             flush_waiters: Vec::new(),
-            stats: NodeStats::default(),
-            tenant_stats: BTreeMap::new(),
+            metrics,
+            ledger: UsageLedger::new(),
+            qos_metrics,
         }
+    }
+
+    /// The daemon's shared metrics registry.  Grab it before
+    /// [`Daemon::run`] consumes `self` — the `/metrics` HTTP endpoint
+    /// renders this registry from its own listener thread.
+    pub fn registry(&self) -> Arc<Registry> {
+        self.metrics.registry.clone()
     }
 
     /// Serve until all command senders hang up, then settle any still
@@ -418,11 +602,37 @@ impl Daemon {
             }
             self.expire_wedged_epochs();
             self.maybe_start_flush();
+            self.publish_gauges();
             // Shutdown: the last client is gone and every epoch settled.
             if cmds_closed && self.inflight.is_empty() {
                 break;
             }
         }
+    }
+
+    /// Refresh the sampled gauges from live state — once per event-loop
+    /// turn, so a `/metrics` scrape is at most one event stale.  The
+    /// per-device jobs_done/busy_ms counters mirror the pool's monotone
+    /// accounting (`store`, not `add`: the pool is the source of truth).
+    fn publish_gauges(&self) {
+        self.metrics.clients.set(self.table.len() as u64);
+        self.metrics
+            .in_flight_flushes
+            .set(self.inflight.len() as u64);
+        self.metrics
+            .queued_completions
+            .set(self.running_clients() as u64);
+        for s in self.pool.status() {
+            let Some(d) = self.metrics.devices.get(s.id as usize) else {
+                continue;
+            };
+            d.clients.set(s.clients as u64);
+            d.mem_used.set(s.mem_used);
+            d.queued_ms.set(s.queued_ms);
+            d.jobs_done.store(s.jobs_done);
+            d.busy_ms.store(s.busy_ms);
+        }
+        self.executors.publish_inflight();
     }
 
     /// How long the event loop may block: the barrier window (if one is
@@ -576,6 +786,8 @@ impl Daemon {
                     return;
                 }
                 let _ = self.table.set_residency(client, Residency::Spilled);
+                let tenant = self.tenant_of(client);
+                self.ledger.charge_spilled(&tenant, total);
                 log::info!(
                     "spilled client {client}'s {total} B segment to host \
                      (device {} at watermark)",
@@ -619,6 +831,8 @@ impl Daemon {
                         continue;
                     }
                     let _ = self.table.set_residency(c, Residency::Spilled);
+                    let tenant = self.tenant_of(c);
+                    self.ledger.charge_spilled(&tenant, seg);
                     freed += seg;
                     log::info!(
                         "spilled client {c}'s {seg} B segment off device \
@@ -771,11 +985,11 @@ impl Daemon {
                     let _ = self.table.release(id);
                     return Err(e);
                 }
-                // Surface the tenant in Stats from first contact, before
-                // any completion event mentions it (bounded; see
-                // MAX_TENANT_STATS).
+                // Surface the tenant in Stats and the registry from
+                // first contact, before any completion event mentions
+                // it (bounded; see MAX_TENANT_STATS).
                 let tenant_key = tenant.to_string();
-                self.tenant_counters(&tenant_key);
+                self.metrics.tenant(&tenant_key);
                 // The id travels back out-of-band via Queued.ticket: the
                 // in-proc/socket adapters assign ids at connect time, so
                 // here we just ACK with the id as a ticket.
@@ -806,8 +1020,11 @@ impl Daemon {
                 let staged = self.table.stage(cmd.client, slot, tensor);
                 if staged.is_ok() {
                     // Count only bytes that actually landed — a rejected
-                    // SND (budget, bad slot) must not inflate the stat.
-                    self.stats.bytes_staged += bytes;
+                    // SND (budget, bad slot) must not inflate the stat
+                    // or the tenant's metered bill.
+                    self.metrics.bytes_staged.add(bytes);
+                    let tenant = self.tenant_of(cmd.client);
+                    self.ledger.charge_staged(&tenant, bytes);
                 }
                 // The recycle above may have freed bytes even if staging
                 // failed — resync unconditionally before surfacing.
@@ -850,6 +1067,7 @@ impl Daemon {
                         .filter(|j| j.tenant == tenant)
                         .count();
                     if queued + in_flight >= cap as usize {
+                        self.metrics.throttled(&tenant).inc();
                         return Err(Error::gvm(format!(
                             "tenant {tenant:?} throttled: {queued} queued \
                              + {in_flight} in flight (rate limit {cap})"
@@ -1017,24 +1235,30 @@ impl Daemon {
                     .map_err(|_| Error::Ipc("client gone".into()))?;
             }
             ClientMsg::Stats => {
+                // The wire reply is a *view over the registry*: the
+                // monotone counters read back the same handles the
+                // event sites bump, the instantaneous fields read live
+                // daemon state — same values, same order, same bytes
+                // as the pre-registry reply.
                 let tenants: Vec<TenantStatsEntry> = self
-                    .tenant_stats
+                    .metrics
+                    .tenants
                     .iter()
-                    .map(|(t, c)| TenantStatsEntry {
+                    .map(|(t, h)| TenantStatsEntry {
                         tenant: t.clone(),
-                        jobs_ok: c.jobs_ok,
-                        jobs_failed: c.jobs_failed,
-                        device_ms: c.device_ms,
-                        migrations: c.migrations,
+                        jobs_ok: h.jobs_ok.get(),
+                        jobs_failed: h.jobs_failed.get(),
+                        device_ms: h.device_ms.get(),
+                        migrations: h.migrations.get(),
                     })
                     .collect();
                 cmd.reply
                     .send(ServerMsg::Stats {
-                        batches: self.stats.batches,
-                        jobs_ok: self.stats.jobs_ok,
-                        jobs_failed: self.stats.jobs_failed,
-                        bytes_staged: self.stats.bytes_staged,
-                        device_ms: self.stats.device_ms,
+                        batches: self.metrics.batches.get(),
+                        jobs_ok: self.metrics.jobs_ok.get(),
+                        jobs_failed: self.metrics.jobs_failed.get(),
+                        bytes_staged: self.metrics.bytes_staged.get(),
+                        device_ms: self.metrics.device_ms.get(),
                         clients: self.table.len() as u32,
                         in_flight_flushes: self.inflight.len() as u32,
                         queued_completions: self.running_clients() as u32,
@@ -1043,6 +1267,26 @@ impl Daemon {
                         restage_events: self.spill.restage_events(),
                         tenants,
                     })
+                    .map_err(|_| Error::Ipc("client gone".into()))?;
+            }
+            ClientMsg::Usage => {
+                let records: Vec<UsageEntry> = self
+                    .ledger
+                    .snapshot()
+                    .into_iter()
+                    .map(|(tenant, r)| UsageEntry {
+                        tenant,
+                        jobs_ok: r.jobs_ok,
+                        jobs_failed: r.jobs_failed,
+                        device_ms: r.device_ms,
+                        bytes_staged: r.bytes_staged,
+                        bytes_spilled: r.bytes_spilled,
+                        migrations: r.migrations,
+                        flushes: r.flushes,
+                    })
+                    .collect();
+                cmd.reply
+                    .send(ServerMsg::Usage { records })
                     .map_err(|_| Error::Ipc("client gone".into()))?;
             }
             ClientMsg::Flh { wait } => {
@@ -1144,17 +1388,6 @@ impl Daemon {
             .to_string()
     }
 
-    fn tenant_counters(&mut self, tenant: &str) -> &mut TenantCounters {
-        let key = if self.tenant_stats.contains_key(tenant)
-            || self.tenant_stats.len() < MAX_TENANT_STATS
-        {
-            tenant
-        } else {
-            OTHER_TENANTS
-        };
-        self.tenant_stats.entry(key.to_string()).or_default()
-    }
-
     /// The drain/rebind handshake for one VGPU: quiesce the source
     /// executor lane, then move the binding, segment bytes, and any
     /// queued-work estimate to `target` (`None` = coolest other device
@@ -1209,7 +1442,8 @@ impl Daemon {
             .drain(from, self.cfg.migration.drain_timeout)?;
         self.pool.note_migrated(client, &name, to, seg, est)?;
         let tenant = self.tenant_of(client);
-        self.tenant_counters(&tenant).migrations += 1;
+        self.metrics.tenant(&tenant).migrations.inc();
+        self.ledger.charge_migration(&tenant);
         log::info!(
             "migrated client {client} ({name:?}): device {} -> {} \
              ({seg} B segment, {est:.2} ms queued re-staged)",
@@ -1400,6 +1634,7 @@ impl Daemon {
                 batch
             } else {
                 let mut wdq = WeightedDeficitQueue::new(self.pool.qos());
+                wdq.set_metrics(self.qos_metrics.clone());
                 for (client, workload) in batch {
                     let tenant = self.tenant_of(client);
                     wdq.push(&tenant, 1.0, (client, workload));
@@ -1408,7 +1643,16 @@ impl Daemon {
             };
             self.submit_device_batch(dev, &ordered, &mut pending)?;
         }
-        self.stats.batches += 1;
+        self.metrics.batches.inc();
+        // Meter one flush per tenant that actually submitted work in
+        // this epoch (dedup: a tenant with five jobs pays one flush).
+        let mut flushed: Vec<&str> =
+            pending.iter().map(|j| j.tenant.as_str()).collect();
+        flushed.sort_unstable();
+        flushed.dedup();
+        for t in flushed {
+            self.ledger.charge_flush(t);
+        }
         if pending.is_empty() {
             // Every job failed at staging: the epoch settled instantly.
             self.wake_flush_waiters();
@@ -1455,8 +1699,14 @@ impl Daemon {
         };
         flush.jobs.remove(i);
         let settled = flush.jobs.is_empty();
+        let started = flush.started;
         if settled {
             self.inflight.remove(&c.seq);
+            // Epoch submit-to-settle latency: observed once per epoch,
+            // when its last pending job reports back.
+            self.metrics
+                .flush_latency_ms
+                .observe(started.elapsed().as_secs_f64() * 1e3);
         }
         self.apply_completion(c);
         self.wake_stp_waiters();
@@ -1794,12 +2044,22 @@ impl Daemon {
     fn apply_completion(&mut self, c: Completion) {
         match c.outcome {
             Ok((outputs, gpu_ms)) => {
-                self.stats.jobs_ok += 1;
-                self.stats.device_ms += gpu_ms;
+                self.metrics.jobs_ok.inc();
+                self.metrics.device_ms.add(gpu_ms);
                 self.pool.note_done_as(c.device, &c.tenant, c.est_ms, gpu_ms);
-                let t = self.tenant_counters(&c.tenant);
-                t.jobs_ok += 1;
-                t.device_ms += gpu_ms;
+                let t = self.metrics.tenant(&c.tenant);
+                t.jobs_ok.inc();
+                t.device_ms.add(gpu_ms);
+                // The metering ledger bills from the same completion
+                // event — checked accounting: an unbillable duration
+                // is surfaced, never silently recorded.
+                if let Err(e) = self.ledger.charge_completion(&c.tenant, gpu_ms)
+                {
+                    log::warn!(
+                        "metering charge for client {}: {e}",
+                        c.client
+                    );
+                }
                 if let Err(e) = self.table.complete(c.client, outputs, gpu_ms) {
                     log::warn!(
                         "completion for vanished client {}: {e}",
@@ -1831,9 +2091,10 @@ impl Daemon {
         msg: String,
     ) {
         log::warn!("job for client {client} failed: {msg}");
-        self.stats.jobs_failed += 1;
+        self.metrics.jobs_failed.inc();
         self.pool.retire_queued_as(dev, tenant, est_ms);
-        self.tenant_counters(tenant).jobs_failed += 1;
+        self.metrics.tenant(tenant).jobs_failed.inc();
+        self.ledger.charge_failure(tenant);
         // A job failing *before* submission (still Queued) holds its own
         // cycle's inputs; drop them now, with accounting, so a Failed
         // VGPU's input slots can only ever hold next-cycle pre-staging —

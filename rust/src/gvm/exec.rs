@@ -37,6 +37,7 @@ use std::time::{Duration, Instant};
 use super::devices::{DeviceId, DevicePool};
 use super::qos::DEFAULT_TENANT;
 use super::vgpu::ClientId;
+use crate::metrics::registry::{Counter, Gauge, Registry};
 use crate::runtime::{ExecHandle, TensorValue};
 use crate::{Error, Result};
 
@@ -83,6 +84,12 @@ struct DeviceExecutor {
     join: Option<JoinHandle<()>>,
 }
 
+/// Per-device registry handles (see [`ExecutorPool::attach_metrics`]).
+struct ExecMetrics {
+    submissions: Counter,
+    inflight: Gauge,
+}
+
 /// One worker thread per physical device, each owning its device's
 /// submission queue and draining it through its own [`ExecHandle`].
 ///
@@ -97,6 +104,9 @@ pub struct ExecutorPool {
     /// [`ExecutorPool::take_completion_rx`] moved it into an external
     /// event loop (the async-pipeline daemon selects over it).
     completion_rx: Option<mpsc::Receiver<Completion>>,
+    /// Per-device registry handles; empty until
+    /// [`ExecutorPool::attach_metrics`] (metrics off costs nothing).
+    metrics: Vec<ExecMetrics>,
 }
 
 impl ExecutorPool {
@@ -146,7 +156,43 @@ impl ExecutorPool {
         Ok(Self {
             workers,
             completion_rx: Some(completion_rx),
+            metrics: Vec::new(),
         })
+    }
+
+    /// Publish per-device executor series through `registry`:
+    /// `vgpu_executor_submissions_total{device}` bumps on every
+    /// [`ExecutorPool::submit`]; `vgpu_executor_inflight{device}` is
+    /// refreshed from the live counters by
+    /// [`ExecutorPool::publish_inflight`] (the daemon calls it once per
+    /// event-loop turn).
+    pub fn attach_metrics(&mut self, registry: &Registry) {
+        self.metrics = (0..self.workers.len())
+            .map(|i| {
+                let dev = i.to_string();
+                let labels = [("device", dev.as_str())];
+                ExecMetrics {
+                    submissions: registry.counter_with(
+                        "vgpu_executor_submissions_total",
+                        "Jobs handed to this device's executor queue",
+                        &labels,
+                    ),
+                    inflight: registry.gauge_with(
+                        "vgpu_executor_inflight",
+                        "Jobs submitted to this device and not yet executed",
+                        &labels,
+                    ),
+                }
+            })
+            .collect();
+    }
+
+    /// Refresh the per-device in-flight gauges from the live counters.
+    /// No-op before [`ExecutorPool::attach_metrics`].
+    pub fn publish_inflight(&self) {
+        for (w, m) in self.workers.iter().zip(&self.metrics) {
+            m.inflight.set(w.inflight.load(Ordering::SeqCst) as u64);
+        }
     }
 
     /// `n` workers over clones of one shared handle (numerics serialize
@@ -183,6 +229,9 @@ impl ExecutorPool {
                 "device executor {} is gone",
                 dev.0
             )));
+        }
+        if let Some(m) = self.metrics.get(dev.0) {
+            m.submissions.inc();
         }
         Ok(())
     }

@@ -45,14 +45,14 @@ pub use exec::{
     ExecutorPool, MigrationConfig, MigrationPlan, Rebalancer, Submission,
 };
 pub use plan::{CtxMode, Job, Plan, PlanOp};
-pub use qos::{QosConfig, TenantShare, WeightedDeficitQueue};
+pub use qos::{QosConfig, QueueMetrics, TenantShare, WeightedDeficitQueue};
 pub use scheduler::{plan_batch, Policy, StyleRule};
 pub use sim_backend::{
     simulate, simulate_pool, simulate_pool_pipelined, simulate_pool_qos,
     simulate_pool_spill, simulate_spmd, BatchTiming, PipelineTiming,
     PoolTiming, QosPoolTiming, SpillTiming, TenantTiming,
 };
-pub use spill::{SpillConfig, SpillStore};
+pub use spill::{SpillConfig, SpillMetrics, SpillStore};
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -61,6 +61,7 @@ use std::thread::JoinHandle;
 
 use crate::ipc::{ClientMsg, ServerMsg};
 use crate::log;
+use crate::metrics::{MetricsConfig, MetricsServer};
 use crate::runtime::{DeviceThread, TensorValue};
 use crate::{Error, Result};
 
@@ -74,6 +75,9 @@ pub struct GvmConfig {
     /// Artifacts to compile at init (the paper's GVM "prepares the
     /// kernels to be executed when initialized").
     pub preload: Vec<String>,
+    /// Prometheus `/metrics` endpoint tunables (`[metrics]` config
+    /// section; off by default).
+    pub metrics: MetricsConfig,
 }
 
 impl Default for GvmConfig {
@@ -82,6 +86,7 @@ impl Default for GvmConfig {
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             daemon: DaemonConfig::default(),
             preload: Vec::new(),
+            metrics: MetricsConfig::default(),
         }
     }
 }
@@ -95,6 +100,9 @@ pub struct Gvm {
     daemon_join: Option<JoinHandle<()>>,
     /// Serializes connect() id assignment.
     _connect_lock: Arc<Mutex<()>>,
+    /// The `/metrics` HTTP listener, when `[metrics]` enables it (held
+    /// for the GVM's lifetime; Drop stops the listener thread).
+    _metrics: Option<MetricsServer>,
 }
 
 impl Gvm {
@@ -133,6 +141,16 @@ impl Gvm {
         }
         let (cmd_tx, cmd_rx) = mpsc::channel::<Command>();
         let daemon = Daemon::with_handles(cfg.daemon.clone(), handles)?;
+        // The registry outlives run() consuming the daemon: the HTTP
+        // listener renders it from its own thread.
+        let metrics = if cfg.metrics.enabled {
+            let server =
+                MetricsServer::start(&cfg.metrics.listen, daemon.registry())?;
+            log::info!("metrics endpoint on http://{}/metrics", server.local_addr());
+            Some(server)
+        } else {
+            None
+        };
         let daemon_join = std::thread::Builder::new()
             .name("vgpu-gvm".into())
             .spawn(move || daemon.run(cmd_rx))?;
@@ -141,6 +159,7 @@ impl Gvm {
             _devices: devices,
             daemon_join: Some(daemon_join),
             _connect_lock: Arc::new(Mutex::new(())),
+            _metrics: metrics,
         })
     }
 

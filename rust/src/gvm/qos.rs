@@ -46,7 +46,9 @@
 //! ```
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::Arc;
 
+use crate::metrics::registry::Registry;
 use crate::{Error, Result};
 
 /// Tenant every unattributed client belongs to (weight =
@@ -209,6 +211,32 @@ pub fn parse_share_list(s: &str) -> Result<Vec<(String, f64)>> {
     Ok(out)
 }
 
+/// Publisher for the per-tenant QoS service counter
+/// (`vgpu_qos_serviced_total{tenant}`).  Tenant lanes appear lazily, so
+/// the publisher holds the registry and resolves the labeled handle per
+/// service event (a lock + BTreeMap lookup — nothing on the submit path).
+#[derive(Debug, Clone)]
+pub struct QueueMetrics {
+    registry: Arc<Registry>,
+}
+
+impl QueueMetrics {
+    /// Publisher over a shared registry.
+    pub fn new(registry: Arc<Registry>) -> Self {
+        Self { registry }
+    }
+
+    fn note_serviced(&self, tenant: &str) {
+        self.registry
+            .counter_with(
+                "vgpu_qos_serviced_total",
+                "Jobs served through the weighted-deficit queue, per tenant",
+                &[("tenant", tenant)],
+            )
+            .inc();
+    }
+}
+
 /// One tenant's FIFO lane inside the deficit queue.
 #[derive(Debug)]
 struct Lane<T> {
@@ -234,6 +262,9 @@ pub struct WeightedDeficitQueue<T> {
     index: HashMap<String, usize>,
     cursor: usize,
     len: usize,
+    /// Service-counter publisher; `None` (free) until
+    /// [`WeightedDeficitQueue::set_metrics`].
+    metrics: Option<QueueMetrics>,
 }
 
 impl<T> WeightedDeficitQueue<T> {
@@ -246,7 +277,14 @@ impl<T> WeightedDeficitQueue<T> {
             index: HashMap::new(),
             cursor: 0,
             len: 0,
+            metrics: None,
         }
+    }
+
+    /// Count every [`WeightedDeficitQueue::pop`] into
+    /// `vgpu_qos_serviced_total{tenant}`.
+    pub fn set_metrics(&mut self, metrics: QueueMetrics) {
+        self.metrics = Some(metrics);
     }
 
     /// Queued items across all lanes.
@@ -317,6 +355,9 @@ impl<T> WeightedDeficitQueue<T> {
                 self.len -= 1;
                 if lane.items.is_empty() {
                     lane.deficit = 0.0;
+                }
+                if let Some(m) = &self.metrics {
+                    m.note_serviced(&lane.tenant);
                 }
                 return Some((lane.tenant.clone(), item));
             }
@@ -557,6 +598,29 @@ mod tests {
         let a = first.iter().filter(|t| *t == "a").count() as f64;
         let b = first.iter().filter(|t| *t == "b").count() as f64;
         assert!((b / a - 2.0).abs() <= 0.2, "a={a} b={b}");
+    }
+
+    #[test]
+    fn service_counter_tracks_pops_per_tenant() {
+        let registry = Arc::new(Registry::new());
+        let mut q = WeightedDeficitQueue::new(&three_one_one());
+        q.set_metrics(QueueMetrics::new(registry.clone()));
+        for i in 0..6 {
+            q.push("gold", 1.0, i);
+        }
+        q.push("bronze", 1.0, 99);
+        let _ = q.drain();
+        let gold = registry.counter_with(
+            "vgpu_qos_serviced_total",
+            "",
+            &[("tenant", "gold")],
+        );
+        let bronze = registry.counter_with(
+            "vgpu_qos_serviced_total",
+            "",
+            &[("tenant", "bronze")],
+        );
+        assert_eq!((gold.get(), bronze.get()), (6, 1));
     }
 
     #[test]

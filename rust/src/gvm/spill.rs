@@ -44,6 +44,7 @@
 use std::collections::HashMap;
 
 use super::vgpu::ClientId;
+use crate::metrics::registry::{Counter, Gauge, Registry};
 use crate::{Error, Result};
 
 /// Host-memory spill tunables — the `[spill]` config-file section.
@@ -82,6 +83,35 @@ pub struct SpilledSeg {
     pub epoch: u64,
 }
 
+/// Registry handles mirroring the spill store's accounting (see
+/// [`SpillStore::set_metrics`]).
+#[derive(Debug, Clone)]
+pub struct SpillMetrics {
+    bytes: Gauge,
+    spills: Counter,
+    restages: Counter,
+}
+
+impl SpillMetrics {
+    /// Register the spill series in `registry` and return the handles.
+    pub fn new(registry: &Registry) -> Self {
+        Self {
+            bytes: registry.gauge(
+                "vgpu_spill_bytes",
+                "Bytes currently spilled to the host store",
+            ),
+            spills: registry.counter(
+                "vgpu_spill_events_total",
+                "Segments evicted to the host store since launch",
+            ),
+            restages: registry.counter(
+                "vgpu_restage_events_total",
+                "Segments re-staged back onto a device since launch",
+            ),
+        }
+    }
+}
+
 /// The host-side spill store: per-client spilled segment accounting plus
 /// the spill/re-stage event counters surfaced through `vgpu stats`.
 #[derive(Debug)]
@@ -91,6 +121,8 @@ pub struct SpillStore {
     bytes: u64,
     spill_events: u64,
     restage_events: u64,
+    /// Registry mirror; `None` (free) until [`SpillStore::set_metrics`].
+    metrics: Option<SpillMetrics>,
 }
 
 impl SpillStore {
@@ -102,6 +134,24 @@ impl SpillStore {
             bytes: 0,
             spill_events: 0,
             restage_events: 0,
+            metrics: None,
+        }
+    }
+
+    /// Mirror the store's accounting into registry series
+    /// (`vgpu_spill_bytes`, `vgpu_spill_events_total`,
+    /// `vgpu_restage_events_total`); every mutation republishes.
+    pub fn set_metrics(&mut self, metrics: SpillMetrics) {
+        self.metrics = Some(metrics);
+        self.publish();
+    }
+
+    /// Push the current accounting into the registry mirror, if attached.
+    fn publish(&self) {
+        if let Some(m) = &self.metrics {
+            m.bytes.set(self.bytes);
+            m.spills.store(self.spill_events);
+            m.restages.store(self.restage_events);
         }
     }
 
@@ -180,6 +230,7 @@ impl SpillStore {
         self.entries.insert(client, SpilledSeg { bytes, epoch });
         self.bytes += bytes;
         self.spill_events += 1;
+        self.publish();
         Ok(())
     }
 
@@ -193,6 +244,7 @@ impl SpillStore {
         })?;
         e.bytes = e.bytes.saturating_add(delta);
         self.bytes = self.bytes.saturating_add(delta);
+        self.publish();
         Ok(())
     }
 
@@ -212,6 +264,7 @@ impl SpillStore {
         }
         e.bytes -= delta;
         self.bytes -= delta;
+        self.publish();
         Ok(())
     }
 
@@ -223,6 +276,7 @@ impl SpillStore {
         })?;
         self.bytes = self.bytes.saturating_sub(e.bytes);
         self.restage_events += 1;
+        self.publish();
         Ok(e.bytes)
     }
 
@@ -233,6 +287,7 @@ impl SpillStore {
         match self.entries.remove(&client) {
             Some(e) => {
                 self.bytes = self.bytes.saturating_sub(e.bytes);
+                self.publish();
                 e.bytes
             }
             None => 0,
@@ -306,6 +361,27 @@ mod tests {
         let mut s = store(1 << 20);
         assert!(s.restage(5).is_err());
         assert_eq!(s.restage_events(), 0, "failed re-stage doesn't count");
+    }
+
+    #[test]
+    fn registry_mirror_tracks_every_mutation() {
+        let registry = Registry::new();
+        let mut s = store(1 << 20);
+        s.set_metrics(SpillMetrics::new(&registry));
+        let bytes = registry.gauge("vgpu_spill_bytes", "");
+        let spills = registry.counter("vgpu_spill_events_total", "");
+        let restages = registry.counter("vgpu_restage_events_total", "");
+        assert_eq!((bytes.get(), spills.get(), restages.get()), (0, 0, 0));
+        s.spill(1, 100, 0).unwrap();
+        s.grow(1, 28).unwrap();
+        s.shrink(1, 8).unwrap();
+        assert_eq!((bytes.get(), spills.get()), (120, 1));
+        s.restage(1).unwrap();
+        assert_eq!((bytes.get(), restages.get()), (0, 1));
+        s.spill(2, 64, 0).unwrap();
+        s.drop_client(2);
+        assert_eq!(bytes.get(), 0);
+        assert_eq!(restages.get(), 1, "drop is not a re-stage");
     }
 
     #[test]

@@ -18,4 +18,4 @@ pub mod transport;
 pub mod wire;
 
 pub use transport::{Framed, Transport};
-pub use wire::{ClientMsg, DeviceEntry, ServerMsg, TenantStatsEntry};
+pub use wire::{ClientMsg, DeviceEntry, ServerMsg, TenantStatsEntry, UsageEntry};

@@ -80,6 +80,9 @@ pub enum ClientMsg {
         /// Epoch from [`ServerMsg::FlushTicket`].
         epoch: u64,
     },
+    /// Query the per-tenant metering ledger (observability extension;
+    /// see [`crate::metrics::ledger`]).
+    Usage,
 }
 
 /// Per-tenant counter row carried by [`ServerMsg::Stats`] — fed by the
@@ -97,6 +100,29 @@ pub struct TenantStatsEntry {
     /// VGPU migrations (explicit or rebalancer-driven) of this tenant's
     /// clients.
     pub migrations: u64,
+}
+
+/// Per-tenant metering row carried by [`ServerMsg::Usage`] — one
+/// tenant's accumulated usage record from the daemon's metering ledger
+/// (see [`crate::metrics::ledger::UsageLedger`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct UsageEntry {
+    /// Tenant id.
+    pub tenant: String,
+    /// Jobs completed successfully.
+    pub jobs_ok: u64,
+    /// Jobs failed.
+    pub jobs_failed: u64,
+    /// Device milliseconds consumed by successful jobs.
+    pub device_ms: f64,
+    /// Bytes staged into device memory via `SND`.
+    pub bytes_staged: u64,
+    /// Bytes spilled to the host tier on this tenant's behalf.
+    pub bytes_spilled: u64,
+    /// Live migrations of this tenant's VGPUs.
+    pub migrations: u64,
+    /// Flush epochs that carried at least one of this tenant's jobs.
+    pub flushes: u64,
 }
 
 /// Per-device status row carried by [`ServerMsg::Devices`].
@@ -198,6 +224,11 @@ pub enum ServerMsg {
         /// Jobs that were queued when the flush was requested.
         jobs: u32,
     },
+    /// Metering-ledger snapshot (Usage response), in tenant-id order.
+    Usage {
+        /// One row per tenant that has been charged since launch.
+        records: Vec<UsageEntry>,
+    },
 }
 
 fn put_str(s: &str, out: &mut Vec<u8>) {
@@ -258,6 +289,7 @@ impl ClientMsg {
                 out.push(10);
                 out.extend_from_slice(&epoch.to_le_bytes());
             }
+            ClientMsg::Usage => out.push(11),
         }
         out
     }
@@ -306,6 +338,7 @@ impl ClientMsg {
             10 => ClientMsg::WaitFlush {
                 epoch: read_u64(buf, &mut pos)?,
             },
+            11 => ClientMsg::Usage,
             t => return Err(Error::Ipc(format!("bad client tag {t}"))),
         };
         Ok(msg)
@@ -395,6 +428,20 @@ impl ServerMsg {
                 out.push(8);
                 out.extend_from_slice(&epoch.to_le_bytes());
                 out.extend_from_slice(&jobs.to_le_bytes());
+            }
+            ServerMsg::Usage { records } => {
+                out.push(9);
+                out.extend_from_slice(&(records.len() as u32).to_le_bytes());
+                for r in records {
+                    put_str(&r.tenant, &mut out);
+                    out.extend_from_slice(&r.jobs_ok.to_le_bytes());
+                    out.extend_from_slice(&r.jobs_failed.to_le_bytes());
+                    out.extend_from_slice(&r.device_ms.to_le_bytes());
+                    out.extend_from_slice(&r.bytes_staged.to_le_bytes());
+                    out.extend_from_slice(&r.bytes_spilled.to_le_bytes());
+                    out.extend_from_slice(&r.migrations.to_le_bytes());
+                    out.extend_from_slice(&r.flushes.to_le_bytes());
+                }
             }
         }
         out
@@ -500,6 +547,30 @@ impl ServerMsg {
                 epoch: read_u64(buf, &mut pos)?,
                 jobs: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
             },
+            9 => {
+                let n = u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
+                if n > 4096 {
+                    return Err(Error::Ipc(format!(
+                        "implausible usage record count {n}"
+                    )));
+                }
+                let mut records = Vec::with_capacity(n as usize);
+                for _ in 0..n {
+                    records.push(UsageEntry {
+                        tenant: get_str(buf, &mut pos)?,
+                        jobs_ok: read_u64(buf, &mut pos)?,
+                        jobs_failed: read_u64(buf, &mut pos)?,
+                        device_ms: f64::from_le_bytes(read_arr::<8>(
+                            buf, &mut pos,
+                        )?),
+                        bytes_staged: read_u64(buf, &mut pos)?,
+                        bytes_spilled: read_u64(buf, &mut pos)?,
+                        migrations: read_u64(buf, &mut pos)?,
+                        flushes: read_u64(buf, &mut pos)?,
+                    });
+                }
+                ServerMsg::Usage { records }
+            }
             t => return Err(Error::Ipc(format!("bad server tag {t}"))),
         };
         Ok(msg)
@@ -551,6 +622,7 @@ mod tests {
         roundtrip_c(ClientMsg::Flh { wait: false });
         roundtrip_c(ClientMsg::Flh { wait: true });
         roundtrip_c(ClientMsg::WaitFlush { epoch: 42 });
+        roundtrip_c(ClientMsg::Usage);
     }
 
     #[test]
@@ -646,6 +718,63 @@ mod tests {
             self_device: u32::MAX,
             devices: vec![],
         });
+    }
+
+    #[test]
+    fn usage_roundtrips() {
+        // Empty ledger.
+        roundtrip_s(ServerMsg::Usage { records: vec![] });
+        // Single tenant.
+        roundtrip_s(ServerMsg::Usage {
+            records: vec![UsageEntry {
+                tenant: "gold".into(),
+                jobs_ok: 18,
+                jobs_failed: 1,
+                device_ms: 99.25,
+                bytes_staged: 1 << 30,
+                bytes_spilled: 1 << 20,
+                migrations: 2,
+                flushes: 7,
+            }],
+        });
+        // Many tenants, including the overflow bucket and an empty id.
+        let records: Vec<UsageEntry> = (0..64)
+            .map(|i| UsageEntry {
+                tenant: match i {
+                    0 => String::new(),
+                    1 => "(other)".into(),
+                    _ => format!("tenant-{i}"),
+                },
+                jobs_ok: i,
+                jobs_failed: 64 - i,
+                device_ms: i as f64 * 0.125,
+                bytes_staged: i << 20,
+                bytes_spilled: i << 10,
+                migrations: i % 3,
+                flushes: i % 5,
+            })
+            .collect();
+        roundtrip_s(ServerMsg::Usage { records });
+        // u64 boundary values survive the trip bit-for-bit.
+        roundtrip_s(ServerMsg::Usage {
+            records: vec![UsageEntry {
+                tenant: "max".into(),
+                jobs_ok: u64::MAX,
+                jobs_failed: u64::MAX,
+                device_ms: f64::MAX,
+                bytes_staged: u64::MAX,
+                bytes_spilled: u64::MAX,
+                migrations: u64::MAX,
+                flushes: u64::MAX,
+            }],
+        });
+    }
+
+    #[test]
+    fn usage_rejects_implausible_record_count() {
+        let mut buf = vec![9u8];
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(ServerMsg::decode(&buf).is_err());
     }
 
     #[test]

@@ -25,6 +25,10 @@
 //! * [`api`] — the client-side VGPU handle implementing the paper's
 //!   `REQ/SND/STR/STP/RCV/RLS` protocol.
 //! * [`ipc`] — wire protocol + transports (unix socket, in-process).
+//! * [`metrics`] — the observability stack: a unified registry of
+//!   counters/gauges/histograms every subsystem publishes through, a
+//!   Prometheus `/metrics` HTTP endpoint, and the per-tenant metering
+//!   ledger behind `vgpu usage`.
 //! * [`gpusim`] — a discrete-event Fermi-class GPU simulator (SM pool,
 //!   single hardware work queue, dual copy engines, context switching);
 //!   the substitute for the paper's Tesla C2070 testbed.
@@ -112,6 +116,21 @@
 //! drains low-weight tenants off hot devices first.  Compare engine
 //! throughput with `cargo bench --bench executor`, and sweep thin/fat
 //! cluster mixes with `vgpu exp multi-gpu-cluster`.
+//!
+//! ## Observability & metering
+//!
+//! Every subsystem publishes into one [`metrics::Registry`] — the
+//! daemon's node/tenant/device counters, the executor pool's
+//! submission/in-flight series, the spill store's byte gauges, the
+//! weighted-deficit queues' service counters, and the flush-latency
+//! histogram.  The `Stats` wire message (`vgpu stats`, `--json` for
+//! scripting) is a *view over the registry*, a `[metrics]` config
+//! section serves the whole registry as Prometheus text exposition at
+//! `GET /metrics` ([`metrics::http`]), and a per-tenant metering
+//! ledger ([`metrics::ledger`]) bills device-ms, staged/spilled bytes,
+//! migrations, and flushes from the same completion events —
+//! `vgpu usage --socket PATH` renders the invoice.  Overhead is one
+//! relaxed atomic op per publication (`cargo bench --bench metrics`).
 //!
 //! Architecture and configuration reference: `docs/ARCHITECTURE.md` and
 //! `docs/CONFIG.md` at the repository root.

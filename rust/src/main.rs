@@ -55,15 +55,18 @@ fn dispatch(cmd: Cmd) -> Result<()> {
             name,
             target,
         } => cmd_migrate(&socket, &name, target),
-        Cmd::Stats { socket } => cmd_stats(&socket),
+        Cmd::Stats { socket, json } => cmd_stats(&socket, json),
+        Cmd::Usage { socket } => cmd_usage(&socket),
     }
 }
 
 /// Admin verb: render a served GVM's node statistics, including the
 /// async-pipeline gauges (`in_flight_flushes` / `queued_completions`)
 /// and the per-tenant counter rows.  Talks the raw wire protocol — no
-/// REQ handshake, so it never occupies a VGPU slot itself.
-fn cmd_stats(socket: &str) -> Result<()> {
+/// REQ handshake, so it never occupies a VGPU slot itself.  `--json`
+/// emits the same snapshot as one JSON object for scripting.
+fn cmd_stats(socket: &str, json: bool) -> Result<()> {
+    use vgpu::api::NodeStatsView;
     use vgpu::ipc::transport::{Transport, UnixTransport};
     use vgpu::ipc::{ClientMsg, ServerMsg};
     let mut t = UnixTransport::connect(socket)?;
@@ -82,6 +85,38 @@ fn cmd_stats(socket: &str) -> Result<()> {
             restage_events,
             tenants,
         } => {
+            let view = NodeStatsView {
+                batches,
+                jobs_ok,
+                jobs_failed,
+                bytes_staged,
+                device_ms,
+                clients,
+                in_flight_flushes,
+                queued_completions,
+                spilled_bytes,
+                spill_events,
+                restage_events,
+                tenants,
+            };
+            if json {
+                println!("{}", stats_json(&view));
+                return Ok(());
+            }
+            let NodeStatsView {
+                batches,
+                jobs_ok,
+                jobs_failed,
+                bytes_staged,
+                device_ms,
+                clients,
+                in_flight_flushes,
+                queued_completions,
+                spilled_bytes,
+                spill_events,
+                restage_events,
+                tenants,
+            } = view;
             println!("node statistics ({socket}):");
             println!("  batches flushed      {batches}");
             println!("  jobs ok / failed     {jobs_ok} / {jobs_failed}");
@@ -116,6 +151,120 @@ fn cmd_stats(socket: &str) -> Result<()> {
         }
         ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
         other => Err(Error::Ipc(format!("expected Stats, got {other:?}"))),
+    }
+}
+
+/// Render a [`vgpu::api::NodeStatsView`] as one JSON object (std-only,
+/// hand-built like the `BENCH_*.json` writers; non-finite floats become
+/// `null`).
+fn stats_json(s: &vgpu::api::NodeStatsView) -> String {
+    let mut tenants = String::new();
+    for (i, t) in s.tenants.iter().enumerate() {
+        if i > 0 {
+            tenants.push(',');
+        }
+        tenants.push_str(&format!(
+            "{{\"tenant\":{},\"jobs_ok\":{},\"jobs_failed\":{},\
+             \"device_ms\":{},\"migrations\":{}}}",
+            json_str(&t.tenant),
+            t.jobs_ok,
+            t.jobs_failed,
+            json_f64(t.device_ms),
+            t.migrations
+        ));
+    }
+    format!(
+        "{{\"batches\":{},\"jobs_ok\":{},\"jobs_failed\":{},\
+         \"bytes_staged\":{},\"device_ms\":{},\"clients\":{},\
+         \"in_flight_flushes\":{},\"queued_completions\":{},\
+         \"spilled_bytes\":{},\"spill_events\":{},\"restage_events\":{},\
+         \"tenants\":[{}]}}",
+        s.batches,
+        s.jobs_ok,
+        s.jobs_failed,
+        s.bytes_staged,
+        json_f64(s.device_ms),
+        s.clients,
+        s.in_flight_flushes,
+        s.queued_completions,
+        s.spilled_bytes,
+        s.spill_events,
+        s.restage_events,
+        tenants
+    )
+}
+
+/// JSON string literal with the minimal escapes (quote, backslash,
+/// control characters).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON number; non-finite values are unrepresentable and become `null`.
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Admin verb: render a served GVM's per-tenant metering ledger (the
+/// wire `Usage` message): jobs, device-ms, bytes staged/spilled,
+/// migrations, and flushes billed to each tenant.  Talks the raw wire
+/// protocol — no REQ handshake, so it never occupies a VGPU slot.
+fn cmd_usage(socket: &str) -> Result<()> {
+    use vgpu::ipc::transport::{Transport, UnixTransport};
+    use vgpu::ipc::{ClientMsg, ServerMsg};
+    let mut t = UnixTransport::connect(socket)?;
+    match t.call(ClientMsg::Usage)? {
+        ServerMsg::Usage { records } => {
+            println!("tenant usage ({socket}):");
+            if records.is_empty() {
+                println!("  (no usage recorded yet)");
+                return Ok(());
+            }
+            println!(
+                "  {:16} {:>7} {:>7} {:>12} {:>13} {:>13} {:>5} {:>7}",
+                "tenant",
+                "ok",
+                "failed",
+                "device_ms",
+                "staged_B",
+                "spilled_B",
+                "migr",
+                "flushes"
+            );
+            for r in &records {
+                println!(
+                    "  {:16} {:>7} {:>7} {:>12.2} {:>13} {:>13} {:>5} {:>7}",
+                    r.tenant,
+                    r.jobs_ok,
+                    r.jobs_failed,
+                    r.device_ms,
+                    r.bytes_staged,
+                    r.bytes_spilled,
+                    r.migrations,
+                    r.flushes
+                );
+            }
+            Ok(())
+        }
+        ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
+        other => Err(Error::Ipc(format!("expected Usage, got {other:?}"))),
     }
 }
 

@@ -1,0 +1,195 @@
+//! Tiny std-only HTTP listener serving Prometheus text exposition.
+//!
+//! One endpoint, `GET /metrics`, rendered straight from a shared
+//! [`Registry`] snapshot.  The accept loop mirrors the `ipc` unix-socket
+//! adapter: a listener thread accepts, each connection is handled on its
+//! own short-lived thread, and dropping the [`MetricsServer`] shuts the
+//! loop down (a self-connect unblocks the blocking `accept`).
+//!
+//! This is deliberately not a web framework: it parses one request
+//! line, answers `/metrics`, and closes the connection — exactly what a
+//! Prometheus scraper needs and nothing more.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::log;
+use crate::metrics::registry::Registry;
+use crate::{Error, Result};
+
+/// `[metrics]` config section: the observability endpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsConfig {
+    /// Serve `/metrics` at all (off by default).
+    pub enabled: bool,
+    /// TCP listen address, e.g. `127.0.0.1:9187` (`:0` picks a port).
+    pub listen: String,
+}
+
+impl Default for MetricsConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            listen: "127.0.0.1:9187".into(),
+        }
+    }
+}
+
+/// Content-Type for Prometheus text exposition format 0.0.4.
+const CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// Cap on the request head we are willing to buffer.
+const MAX_REQUEST_BYTES: usize = 8 * 1024;
+
+/// Per-connection socket timeout (scrapers are fast; stalls are bugs).
+const IO_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// A running `/metrics` listener; dropping it stops the accept loop.
+#[derive(Debug)]
+pub struct MetricsServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `listen` and start serving `registry` in the background.
+    pub fn start(listen: &str, registry: Arc<Registry>) -> Result<Self> {
+        let listener = TcpListener::bind(listen)
+            .map_err(|e| Error::gvm(format!("metrics: bind {listen}: {e}")))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::gvm(format!("metrics: local_addr: {e}")))?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stop = shutdown.clone();
+        let join = std::thread::Builder::new()
+            .name("vgpu-metrics-http".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match stream {
+                        Ok(s) => {
+                            let reg = registry.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("vgpu-metrics-conn".into())
+                                .spawn(move || handle_conn(s, &reg));
+                        }
+                        Err(e) => log::warn!("metrics: accept failed: {e}"),
+                    }
+                }
+            })
+            .map_err(|e| Error::gvm(format!("metrics: spawn listener: {e}")))?;
+        log::info!("metrics: serving /metrics on http://{addr}");
+        Ok(Self {
+            addr,
+            shutdown,
+            join: Some(join),
+        })
+    }
+
+    /// The bound address (useful with a `:0` listen spec).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Unblock the accept loop so the listener thread can observe
+        // the flag and exit.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+/// Serve one connection: read the request head, answer, close.
+fn handle_conn(mut stream: TcpStream, registry: &Registry) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let head = match read_head(&mut stream) {
+        Some(head) => head,
+        None => return,
+    };
+    let request_line = head.lines().next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let (status, body) = match (method, path) {
+        ("GET", "/metrics") => ("200 OK", registry.render_prometheus()),
+        ("GET", _) => ("404 Not Found", "not found\n".into()),
+        ("", _) => ("400 Bad Request", "bad request\n".into()),
+        _ => ("405 Method Not Allowed", "only GET is supported\n".into()),
+    };
+    let _ = write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: {CONTENT_TYPE}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.flush();
+}
+
+/// Read until the blank line ending the request head (or give up).
+fn read_head(stream: &mut TcpStream) -> Option<String> {
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 512];
+    while !buf.windows(4).any(|w| w == b"\r\n\r\n") {
+        if buf.len() >= MAX_REQUEST_BYTES {
+            return None;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) | Err(_) => return None,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+        }
+    }
+    Some(String::from_utf8_lossy(&buf).into_owned())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, request: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(request.as_bytes()).unwrap();
+        let mut reply = String::new();
+        s.read_to_string(&mut reply).unwrap();
+        reply
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_other_paths() {
+        let reg = Arc::new(Registry::new());
+        reg.counter("http_test_total", "hits").add(3);
+        let srv = MetricsServer::start("127.0.0.1:0", reg).unwrap();
+        let addr = srv.local_addr();
+
+        let ok = get(addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "{ok}");
+        assert!(ok.contains("text/plain; version=0.0.4"), "{ok}");
+        assert!(ok.contains("http_test_total 3"), "{ok}");
+
+        let missing = get(addr, "GET /nope HTTP/1.1\r\n\r\n");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+
+        let post = get(addr, "POST /metrics HTTP/1.1\r\n\r\n");
+        assert!(post.starts_with("HTTP/1.1 405"), "{post}");
+
+        drop(srv); // must join the listener thread without hanging
+    }
+
+    #[test]
+    fn default_config_is_off() {
+        let cfg = MetricsConfig::default();
+        assert!(!cfg.enabled);
+        assert_eq!(cfg.listen, "127.0.0.1:9187");
+    }
+}

@@ -1,0 +1,217 @@
+//! Per-tenant metering ledger: the billing substrate for a shared-GPU
+//! service.
+//!
+//! The daemon feeds the ledger from the *same* completion / staging /
+//! spill / migration events that drive pool accounting, so the ledger's
+//! per-tenant `device_ms` totals are conserved against the completions
+//! actually applied (asserted by the daemon test suite).  Charges are
+//! checked: a non-finite or negative duration is rejected with a typed
+//! error instead of silently corrupting a bill, and integer charges
+//! saturate rather than wrap.
+//!
+//! The ledger is owned by the daemon thread (single writer, no locks);
+//! snapshots leave over the `Usage` wire message.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Tenant cardinality cap: beyond this, usage lands on `"(other)"` so a
+/// tenant-per-request workload can't grow the ledger without bound.
+const MAX_TENANTS: usize = 1024;
+
+/// Overflow bucket for tenants beyond [`MAX_TENANTS`].
+const OTHER_TENANTS: &str = "(other)";
+
+/// Accumulated usage for one tenant.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct UsageRecord {
+    /// Jobs completed successfully.
+    pub jobs_ok: u64,
+    /// Jobs that failed (still billable work arrived at a device).
+    pub jobs_failed: u64,
+    /// Device milliseconds consumed by successful jobs.
+    pub device_ms: f64,
+    /// Bytes staged into device memory via `SND`.
+    pub bytes_staged: u64,
+    /// Bytes evicted to the host spill tier on this tenant's behalf.
+    pub bytes_spilled: u64,
+    /// Live migrations of this tenant's VGPUs.
+    pub migrations: u64,
+    /// Flush epochs that carried at least one of this tenant's jobs.
+    pub flushes: u64,
+}
+
+/// The per-tenant usage ledger (single-writer, daemon-owned).
+#[derive(Debug, Default)]
+pub struct UsageLedger {
+    tenants: BTreeMap<String, UsageRecord>,
+}
+
+impl UsageLedger {
+    /// New empty ledger.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge one successful completion worth `device_ms` milliseconds.
+    pub fn charge_completion(&mut self, tenant: &str, device_ms: f64) -> Result<()> {
+        if !device_ms.is_finite() || device_ms < 0.0 {
+            return Err(Error::gvm(format!(
+                "ledger: bad device_ms {device_ms:?} for tenant {tenant:?}"
+            )));
+        }
+        let rec = self.record(tenant);
+        rec.jobs_ok = rec.jobs_ok.saturating_add(1);
+        rec.device_ms += device_ms;
+        Ok(())
+    }
+
+    /// Charge one failed job.
+    pub fn charge_failure(&mut self, tenant: &str) {
+        let rec = self.record(tenant);
+        rec.jobs_failed = rec.jobs_failed.saturating_add(1);
+    }
+
+    /// Charge `bytes` staged into device memory.
+    pub fn charge_staged(&mut self, tenant: &str, bytes: u64) {
+        let rec = self.record(tenant);
+        rec.bytes_staged = rec.bytes_staged.saturating_add(bytes);
+    }
+
+    /// Charge `bytes` spilled to the host tier.
+    pub fn charge_spilled(&mut self, tenant: &str, bytes: u64) {
+        let rec = self.record(tenant);
+        rec.bytes_spilled = rec.bytes_spilled.saturating_add(bytes);
+    }
+
+    /// Charge one live migration.
+    pub fn charge_migration(&mut self, tenant: &str) {
+        let rec = self.record(tenant);
+        rec.migrations = rec.migrations.saturating_add(1);
+    }
+
+    /// Charge participation in one flush epoch.
+    pub fn charge_flush(&mut self, tenant: &str) {
+        let rec = self.record(tenant);
+        rec.flushes = rec.flushes.saturating_add(1);
+    }
+
+    /// Number of tenants with a record (including `"(other)"`).
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// True when no tenant has been charged yet.
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Ordered snapshot of every tenant's record.
+    pub fn snapshot(&self) -> Vec<(String, UsageRecord)> {
+        self.tenants
+            .iter()
+            .map(|(t, r)| (t.clone(), *r))
+            .collect()
+    }
+
+    /// The record for `tenant`, routing overflow tenants to `(other)`.
+    fn record(&mut self, tenant: &str) -> &mut UsageRecord {
+        let key = if self.tenants.contains_key(tenant) || self.tenants.len() < MAX_TENANTS
+        {
+            tenant
+        } else {
+            OTHER_TENANTS
+        };
+        self.tenants.entry(key.to_string()).or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate_per_tenant() {
+        let mut ledger = UsageLedger::new();
+        ledger.charge_completion("a", 2.5).unwrap();
+        ledger.charge_completion("a", 1.5).unwrap();
+        ledger.charge_completion("b", 4.0).unwrap();
+        ledger.charge_failure("a");
+        ledger.charge_staged("a", 1024);
+        ledger.charge_spilled("b", 512);
+        ledger.charge_migration("b");
+        ledger.charge_flush("a");
+        let snap = ledger.snapshot();
+        assert_eq!(snap.len(), 2);
+        let (name_a, a) = &snap[0];
+        assert_eq!(name_a, "a");
+        assert_eq!(a.jobs_ok, 2);
+        assert_eq!(a.jobs_failed, 1);
+        assert!((a.device_ms - 4.0).abs() < 1e-12);
+        assert_eq!(a.bytes_staged, 1024);
+        assert_eq!(a.flushes, 1);
+        let (name_b, b) = &snap[1];
+        assert_eq!(name_b, "b");
+        assert_eq!(b.jobs_ok, 1);
+        assert_eq!(b.bytes_spilled, 512);
+        assert_eq!(b.migrations, 1);
+    }
+
+    #[test]
+    fn rejects_unbillable_durations() {
+        let mut ledger = UsageLedger::new();
+        assert!(ledger.charge_completion("a", f64::NAN).is_err());
+        assert!(ledger.charge_completion("a", f64::INFINITY).is_err());
+        assert!(ledger.charge_completion("a", -1.0).is_err());
+        // A rejected charge must leave no partial record behind.
+        assert!(ledger.is_empty());
+        ledger.charge_completion("a", 0.0).unwrap();
+        assert_eq!(ledger.snapshot()[0].1.jobs_ok, 1);
+    }
+
+    #[test]
+    fn integer_charges_saturate() {
+        let mut ledger = UsageLedger::new();
+        ledger.charge_staged("a", u64::MAX);
+        ledger.charge_staged("a", 10);
+        assert_eq!(ledger.snapshot()[0].1.bytes_staged, u64::MAX);
+    }
+
+    #[test]
+    fn tenant_cardinality_is_capped() {
+        let mut ledger = UsageLedger::new();
+        for i in 0..(MAX_TENANTS + 50) {
+            ledger.charge_failure(&format!("t{i}"));
+        }
+        assert_eq!(ledger.len(), MAX_TENANTS + 1);
+        let snap = ledger.snapshot();
+        let other = snap.iter().find(|(t, _)| t == OTHER_TENANTS).unwrap();
+        assert_eq!(other.1.jobs_failed, 50);
+        // Known tenants keep accumulating under their own name.
+        ledger.charge_failure("t0");
+        let snap = ledger.snapshot();
+        let t0 = snap.iter().find(|(t, _)| t == "t0").unwrap();
+        assert_eq!(t0.1.jobs_failed, 2);
+    }
+
+    #[test]
+    fn conservation_over_random_charges() {
+        // Sum of per-tenant device_ms equals the sum of applied charges.
+        let mut ledger = UsageLedger::new();
+        let mut expected = 0.0f64;
+        let mut x = 0x2545f4914f6cdd1du64;
+        for i in 0..1_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let ms = (x % 1_000) as f64 / 8.0;
+            ledger
+                .charge_completion(&format!("t{}", i % 7), ms)
+                .unwrap();
+            expected += ms;
+        }
+        let total: f64 = ledger.snapshot().iter().map(|(_, r)| r.device_ms).sum();
+        assert!((total - expected).abs() < 1e-6, "{total} vs {expected}");
+    }
+}

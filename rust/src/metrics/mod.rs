@@ -1,4 +1,15 @@
-//! Timing metrics: stopwatches, run statistics, speedup summaries.
+//! Metrics: the unified observability registry ([`registry`]), the
+//! Prometheus `/metrics` endpoint ([`http`]), the per-tenant metering
+//! ledger ([`ledger`]) — plus the original timing helpers (stopwatches,
+//! run statistics, throughput).
+
+pub mod http;
+pub mod ledger;
+pub mod registry;
+
+pub use http::{MetricsConfig, MetricsServer};
+pub use ledger::{UsageLedger, UsageRecord};
+pub use registry::{Counter, CounterF, Gauge, GaugeF, Histogram, Registry};
 
 use std::time::Instant;
 

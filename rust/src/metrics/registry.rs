@@ -1,0 +1,612 @@
+//! Unified metrics registry: named counters, gauges, and histograms
+//! behind cheap clone-able handles, plus Prometheus text exposition.
+//!
+//! The daemon, executor pool, spill store, and QoS queues all publish
+//! through one shared [`Registry`]; `ServerMsg::Stats` and the
+//! `/metrics` HTTP endpoint ([`super::http`]) are both *views* over it.
+//! Handles are lock-free on the hot path (one atomic op per update);
+//! the registry mutex is touched only when a series is created or
+//! re-looked-up, and when rendering an exposition snapshot.
+//!
+//! Registration is idempotent: asking for the same family + label set
+//! again returns a handle over the *same* underlying series, so any
+//! subsystem can cheaply re-derive its handles from a shared
+//! `Arc<Registry>`.  Registering the same name with a different metric
+//! kind (or an invalid metric/label name) is a programming error and
+//! panics with a descriptive message.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One label set, sorted key order (the series key within a family).
+type LabelSet = Vec<(String, String)>;
+
+/// Metric family kind — fixes the Prometheus `# TYPE` line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+/// Storage for one series.
+#[derive(Debug)]
+enum Slot {
+    /// Integer-valued counter or gauge.
+    Int(Arc<AtomicU64>),
+    /// Float-valued counter or gauge (f64 bits in an `AtomicU64`).
+    Float(Arc<AtomicU64>),
+    /// Histogram buckets + sum.
+    Hist(Arc<HistogramCore>),
+}
+
+/// One named family: shared HELP/TYPE plus its labeled series.
+#[derive(Debug)]
+struct Family {
+    help: String,
+    kind: Kind,
+    series: BTreeMap<LabelSet, Slot>,
+}
+
+/// Monotone integer counter handle.
+#[derive(Debug, Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Overwrite with `v` — for mirroring an upstream counter that is
+    /// already monotone (e.g. the pool's per-device `jobs_done`).
+    pub fn store(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+}
+
+/// Monotone float counter handle (CAS-add, lossless under concurrency).
+#[derive(Debug, Clone)]
+pub struct CounterF(Arc<AtomicU64>);
+
+impl CounterF {
+    /// Add `v`.
+    pub fn add(&self, v: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.0.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    /// Overwrite with `v` — for mirroring an upstream float counter
+    /// that is already monotone (e.g. per-device cumulative busy time).
+    pub fn store(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Integer gauge handle (set to the current level).
+#[derive(Debug, Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Overwrite with `v`.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Float gauge handle.
+#[derive(Debug, Clone)]
+pub struct GaugeF(Arc<AtomicU64>);
+
+impl GaugeF {
+    /// Overwrite with `v`.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Histogram internals: per-bucket (non-cumulative) counts; the sample
+/// count is the sum of the buckets, so `+Inf` always equals `_count`.
+#[derive(Debug)]
+struct HistogramCore {
+    /// Upper bounds, strictly increasing; an implicit `+Inf` follows.
+    bounds: Vec<f64>,
+    /// One slot per bound plus the `+Inf` overflow slot.
+    counts: Vec<AtomicU64>,
+    /// Sum of observed values (f64 bits, CAS-add).
+    sum_bits: AtomicU64,
+}
+
+/// Histogram handle.
+#[derive(Debug, Clone)]
+pub struct Histogram(Arc<HistogramCore>);
+
+impl Histogram {
+    /// Record one observation.
+    pub fn observe(&self, v: f64) {
+        let c = &self.0;
+        let idx = c
+            .bounds
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(c.bounds.len());
+        c.counts[idx].fetch_add(1, Ordering::Relaxed);
+        let mut cur = c.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match c.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Total number of observations.
+    pub fn count(&self) -> u64 {
+        self.0
+            .counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Sum of observed values.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+}
+
+/// The process-wide metric store.  Share it as `Arc<Registry>`.
+#[derive(Debug, Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+impl Registry {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Unlabeled integer counter.
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        self.counter_with(name, help, &[])
+    }
+
+    /// Labeled integer counter.
+    pub fn counter_with(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Counter {
+        match self.slot(name, help, Kind::Counter, labels, false) {
+            Slot::Int(a) => Counter(a),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Unlabeled float counter (e.g. accumulated device milliseconds).
+    pub fn counter_f(&self, name: &str, help: &str) -> CounterF {
+        self.counter_f_with(name, help, &[])
+    }
+
+    /// Labeled float counter.
+    pub fn counter_f_with(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> CounterF {
+        match self.slot(name, help, Kind::Counter, labels, true) {
+            Slot::Float(a) => CounterF(a),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Unlabeled integer gauge.
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        self.gauge_with(name, help, &[])
+    }
+
+    /// Labeled integer gauge.
+    pub fn gauge_with(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Gauge {
+        match self.slot(name, help, Kind::Gauge, labels, false) {
+            Slot::Int(a) => Gauge(a),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Labeled float gauge.
+    pub fn gauge_f_with(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> GaugeF {
+        match self.slot(name, help, Kind::Gauge, labels, true) {
+            Slot::Float(a) => GaugeF(a),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Unlabeled histogram with the given strictly-increasing bucket
+    /// upper bounds (an implicit `+Inf` bucket is appended).
+    pub fn histogram(&self, name: &str, help: &str, bounds: &[f64]) -> Histogram {
+        self.histogram_with(name, help, bounds, &[])
+    }
+
+    /// Labeled histogram.
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        help: &str,
+        bounds: &[f64],
+        labels: &[(&str, &str)],
+    ) -> Histogram {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram {name:?}: bounds must be strictly increasing"
+        );
+        assert!(
+            bounds.iter().all(|b| b.is_finite()),
+            "histogram {name:?}: bounds must be finite"
+        );
+        let mut fams = self.families.lock().unwrap();
+        let fam = Self::family(&mut fams, name, help, Kind::Histogram);
+        let slot = fam.series.entry(own_labels(name, labels)).or_insert_with(|| {
+            Slot::Hist(Arc::new(HistogramCore {
+                bounds: bounds.to_vec(),
+                counts: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+                sum_bits: AtomicU64::new(0),
+            }))
+        });
+        match slot {
+            Slot::Hist(h) => Histogram(h.clone()),
+            _ => panic!("metric {name:?} is registered with a different kind"),
+        }
+    }
+
+    /// Render the whole registry in Prometheus text exposition format
+    /// (one `# HELP` / `# TYPE` pair per family, series sorted).
+    pub fn render_prometheus(&self) -> String {
+        let fams = self.families.lock().unwrap();
+        let mut out = String::new();
+        for (name, fam) in fams.iter() {
+            out.push_str(&format!("# HELP {name} {}\n", escape_help(&fam.help)));
+            out.push_str(&format!("# TYPE {name} {}\n", fam.kind.as_str()));
+            for (labels, slot) in &fam.series {
+                match slot {
+                    Slot::Int(a) => {
+                        let v = a.load(Ordering::Relaxed);
+                        out.push_str(&format!("{name}{} {v}\n", fmt_labels(labels, None)));
+                    }
+                    Slot::Float(a) => {
+                        let v = f64::from_bits(a.load(Ordering::Relaxed));
+                        out.push_str(&format!("{name}{} {v}\n", fmt_labels(labels, None)));
+                    }
+                    Slot::Hist(h) => {
+                        let mut cum = 0u64;
+                        for (i, b) in h.bounds.iter().enumerate() {
+                            cum += h.counts[i].load(Ordering::Relaxed);
+                            let ls = fmt_labels(labels, Some(&format!("{b}")));
+                            out.push_str(&format!("{name}_bucket{ls} {cum}\n"));
+                        }
+                        cum += h.counts[h.bounds.len()].load(Ordering::Relaxed);
+                        let ls = fmt_labels(labels, Some("+Inf"));
+                        out.push_str(&format!("{name}_bucket{ls} {cum}\n"));
+                        let sum = f64::from_bits(h.sum_bits.load(Ordering::Relaxed));
+                        out.push_str(&format!(
+                            "{name}_sum{} {sum}\n",
+                            fmt_labels(labels, None)
+                        ));
+                        out.push_str(&format!(
+                            "{name}_count{} {cum}\n",
+                            fmt_labels(labels, None)
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Get-or-create the scalar series for (`name`, `labels`).
+    fn slot(
+        &self,
+        name: &str,
+        help: &str,
+        kind: Kind,
+        labels: &[(&str, &str)],
+        float: bool,
+    ) -> Slot {
+        let mut fams = self.families.lock().unwrap();
+        let fam = Self::family(&mut fams, name, help, kind);
+        let slot = fam.series.entry(own_labels(name, labels)).or_insert_with(|| {
+            if float {
+                Slot::Float(Arc::new(AtomicU64::new(0)))
+            } else {
+                Slot::Int(Arc::new(AtomicU64::new(0)))
+            }
+        });
+        match (slot, float) {
+            (Slot::Int(a), false) => Slot::Int(a.clone()),
+            (Slot::Float(a), true) => Slot::Float(a.clone()),
+            _ => panic!("metric {name:?} is registered with a different kind"),
+        }
+    }
+
+    /// Get-or-create a family, enforcing name validity + kind agreement.
+    fn family<'a>(
+        fams: &'a mut BTreeMap<String, Family>,
+        name: &str,
+        help: &str,
+        kind: Kind,
+    ) -> &'a mut Family {
+        assert!(
+            valid_metric_name(name),
+            "invalid metric name {name:?} (want [a-zA-Z_:][a-zA-Z0-9_:]*)"
+        );
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            series: BTreeMap::new(),
+        });
+        assert!(
+            fam.kind == kind,
+            "metric {name:?} re-registered as {kind:?} (was {:?})",
+            fam.kind
+        );
+        fam
+    }
+}
+
+/// Validate + own a label set (sorted by key for a canonical series key).
+fn own_labels(name: &str, labels: &[(&str, &str)]) -> LabelSet {
+    let mut out: LabelSet = labels
+        .iter()
+        .map(|(k, v)| {
+            assert!(
+                valid_label_name(k),
+                "metric {name:?}: invalid label name {k:?}"
+            );
+            (k.to_string(), v.to_string())
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+fn valid_metric_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    matches!(chars.next(), Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':')
+        && chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    matches!(chars.next(), Some(c) if c.is_ascii_alphabetic() || c == '_')
+        && chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// `{k="v",...}` with an optional trailing `le` label; empty string when
+/// there is nothing to print.
+fn fmt_labels(labels: &[(String, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some(bound) = le {
+        parts.push(format!("le=\"{bound}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn concurrent_counter_increments_sum_exactly() {
+        let reg = Arc::new(Registry::new());
+        let c = reg.counter("test_incs_total", "concurrent increments");
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 80_000);
+        // Registration is idempotent: a re-lookup sees the same series.
+        assert_eq!(reg.counter("test_incs_total", "x").get(), 80_000);
+    }
+
+    #[test]
+    fn concurrent_float_adds_lose_nothing() {
+        // 0.25 is exactly representable, so the CAS loop must land on
+        // the exact total no matter how the threads interleave.
+        let reg = Registry::new();
+        let c = reg.counter_f("test_ms_total", "float adds");
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.add(0.25);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 20_000.0);
+    }
+
+    #[test]
+    fn histogram_buckets_monotone_and_total_to_count() {
+        let reg = Registry::new();
+        let h = reg.histogram("test_lat_ms", "latencies", &[1.0, 5.0, 25.0]);
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                thread::spawn(move || {
+                    for i in 0..1_000 {
+                        // Mix of values across all buckets incl. +Inf.
+                        h.observe((t * 1_000 + i) as f64 * 0.031);
+                    }
+                })
+            })
+            .collect();
+        for hd in handles {
+            hd.join().unwrap();
+        }
+        assert_eq!(h.count(), 4_000);
+        let text = reg.render_prometheus();
+        let buckets: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("test_lat_ms_bucket"))
+            .map(|l| l.split_whitespace().last().unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(buckets.len(), 4, "{text}");
+        assert!(buckets.windows(2).all(|w| w[0] <= w[1]), "{buckets:?}");
+        assert_eq!(*buckets.last().unwrap(), 4_000);
+        let count_line = text
+            .lines()
+            .find(|l| l.starts_with("test_lat_ms_count"))
+            .unwrap();
+        assert_eq!(count_line, "test_lat_ms_count 4000");
+    }
+
+    #[test]
+    fn gauges_set_and_render() {
+        let reg = Registry::new();
+        reg.gauge("test_depth", "queue depth").set(7);
+        reg.gauge_f_with("test_queued_ms", "queued ms", &[("device", "0")])
+            .set(1.5);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE test_depth gauge"), "{text}");
+        assert!(text.contains("test_depth 7\n"), "{text}");
+        assert!(text.contains("test_queued_ms{device=\"0\"} 1.5\n"), "{text}");
+    }
+
+    #[test]
+    fn labels_escape_and_sort() {
+        let reg = Registry::new();
+        reg.counter_with("test_esc_total", "h", &[("tenant", "a\"b\\c\nd")])
+            .inc();
+        let text = reg.render_prometheus();
+        assert!(
+            text.contains("test_esc_total{tenant=\"a\\\"b\\\\c\\nd\"} 1"),
+            "{text}"
+        );
+        // Same labels in any order address the same series.
+        let a = reg.counter_with("test_ord_total", "h", &[("a", "1"), ("b", "2")]);
+        let b = reg.counter_with("test_ord_total", "h", &[("b", "2"), ("a", "1")]);
+        a.inc();
+        assert_eq!(b.get(), 1);
+    }
+
+    #[test]
+    fn help_and_type_emitted_once_per_family() {
+        let reg = Registry::new();
+        for d in ["0", "1", "2"] {
+            reg.counter_with("test_multi_total", "per-device", &[("device", d)])
+                .inc();
+        }
+        let text = reg.render_prometheus();
+        let helps = text.matches("# HELP test_multi_total").count();
+        let types = text.matches("# TYPE test_multi_total").count();
+        assert_eq!((helps, types), (1, 1), "{text}");
+    }
+
+    #[test]
+    #[should_panic(expected = "re-registered")]
+    fn kind_mismatch_panics() {
+        let reg = Registry::new();
+        reg.counter("test_kind", "h");
+        reg.gauge("test_kind", "h");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid metric name")]
+    fn invalid_name_panics() {
+        Registry::new().counter("9bad", "h");
+    }
+}

@@ -408,6 +408,88 @@ fn weighted_flush_completes_every_tenant() {
 }
 
 #[test]
+fn usage_empty_before_any_activity() {
+    let (tx, _) = daemon_with(Some(1), 50);
+    let id = register(&tx, "a");
+    match call(&tx, id, ClientMsg::Usage) {
+        ServerMsg::Usage { records } => {
+            assert!(records.is_empty(), "{records:?}")
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+/// The metering acceptance invariant: per-tenant `device_ms` billed in
+/// the ledger equals the sum of the `Done` completions the clients saw,
+/// and the Stats tenant rows (read from the same registry) agree.
+#[test]
+fn usage_ledger_conserves_completion_device_ms() {
+    let qos = QosConfig::default()
+        .with_weight("gold", 3.0)
+        .with_weight("bronze", 1.0);
+    let tx = daemon_with_qos(Some(4), qos);
+    let ids: Vec<(u64, &str)> = (0..4)
+        .map(|i| {
+            let tenant = if i % 2 == 0 { "gold" } else { "bronze" };
+            (register_as(&tx, &format!("rank{i}"), tenant), tenant)
+        })
+        .collect();
+    // Drive 3 full cycles; tally what each tenant's Done replies report.
+    let mut billed: std::collections::BTreeMap<&str, (u64, f64)> =
+        Default::default();
+    for _cycle in 0..3 {
+        for &(id, _) in &ids {
+            call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+            call(&tx, id, ClientMsg::Str { workload: "double".into() });
+        }
+        for &(id, tenant) in &ids {
+            match call(&tx, id, ClientMsg::Stp) {
+                ServerMsg::Done { gpu_ms, .. } => {
+                    let e = billed.entry(tenant).or_insert((0, 0.0));
+                    e.0 += 1;
+                    e.1 += gpu_ms;
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+    match call(&tx, ids[0].0, ClientMsg::Usage) {
+        ServerMsg::Usage { records } => {
+            assert_eq!(records.len(), 2, "{records:?}");
+            for r in &records {
+                let (jobs, ms) = billed[r.tenant.as_str()];
+                assert_eq!(r.jobs_ok, jobs, "{r:?}");
+                assert_eq!(r.jobs_failed, 0, "{r:?}");
+                assert!(
+                    (r.device_ms - ms).abs() < 1e-6,
+                    "{}: clients saw {ms} ms, ledger billed {} ms",
+                    r.tenant,
+                    r.device_ms
+                );
+                // Each job staged one 16-byte tensor; 3 barrier flushes
+                // each contained both tenants.
+                assert_eq!(r.bytes_staged, 16 * jobs, "{r:?}");
+                assert_eq!(r.flushes, 3, "{r:?}");
+                assert_eq!(r.migrations, 0, "{r:?}");
+            }
+        }
+        other => panic!("{other:?}"),
+    }
+    // The Stats tenant rows are a view over the same registry counters.
+    match call(&tx, ids[0].0, ClientMsg::Stats) {
+        ServerMsg::Stats { tenants, .. } => {
+            assert_eq!(tenants.len(), 2, "{tenants:?}");
+            for t in &tenants {
+                let (jobs, ms) = billed[t.tenant.as_str()];
+                assert_eq!(t.jobs_ok, jobs, "{t:?}");
+                assert!((t.device_ms - ms).abs() < 1e-6, "{t:?}");
+            }
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
 fn unknown_client_id_rejected() {
     let (tx, _) = daemon_with(Some(1), 50);
     match call(&tx, 999, ClientMsg::Stp) {

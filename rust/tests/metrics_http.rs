@@ -1,0 +1,242 @@
+//! Integration test: start a daemon with the metrics endpoint, drive a
+//! real barrier cycle, scrape `GET /metrics` over TCP, and validate the
+//! Prometheus text exposition — `# HELP`/`# TYPE` once per family, no
+//! duplicate series, every sample parseable, and all four series groups
+//! (per-device, per-tenant, spill, pipeline) present.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use vgpu::config::DeviceConfig;
+use vgpu::gvm::devices::{PlacementPolicy, PoolConfig};
+use vgpu::gvm::qos::QosConfig;
+use vgpu::gvm::{Command, Daemon, DaemonConfig};
+use vgpu::ipc::{ClientMsg, ServerMsg};
+use vgpu::metrics::MetricsServer;
+use vgpu::runtime::{ExecHandle, TensorValue};
+
+fn call(tx: &mpsc::Sender<Command>, client: u64, msg: ClientMsg) -> ServerMsg {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Command {
+        client,
+        msg,
+        reply: rtx,
+    })
+    .unwrap();
+    rrx.recv().unwrap()
+}
+
+fn register_as(tx: &mpsc::Sender<Command>, name: &str, tenant: &str) -> u64 {
+    match call(
+        tx,
+        0,
+        ClientMsg::Req {
+            name: name.into(),
+            tenant: tenant.into(),
+        },
+    ) {
+        ServerMsg::Queued { ticket } => ticket,
+        other => panic!("bad REQ reply {other:?}"),
+    }
+}
+
+fn t4() -> TensorValue {
+    TensorValue::F32(vec![4], vec![1.0, 2.0, 3.0, 4.0])
+}
+
+/// Scrape `path` from the endpoint over a raw TCP socket.
+fn scrape(addr: std::net::SocketAddr) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut reply = String::new();
+    s.read_to_string(&mut reply).unwrap();
+    reply
+}
+
+#[test]
+fn scraped_exposition_is_valid_and_complete() {
+    // A daemon over a mock executor with two QoS tenants, so per-tenant
+    // and weighted-queue series both materialize.
+    let exec = ExecHandle::mock(vec!["double".into()], |_, inputs| {
+        Ok(vec![inputs[0].clone()])
+    });
+    let mut pool = PoolConfig::homogeneous(
+        1,
+        DeviceConfig::tesla_c2070(),
+        PlacementPolicy::WeightedLeastLoaded,
+    );
+    pool.qos = QosConfig::default()
+        .with_weight("gold", 3.0)
+        .with_weight("bronze", 1.0);
+    let cfg = DaemonConfig {
+        barrier: Some(2),
+        barrier_timeout: Duration::from_millis(5_000),
+        pool,
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::new(cfg, exec);
+    // `[metrics] enabled` path: the listener shares the daemon registry.
+    let server =
+        MetricsServer::start("127.0.0.1:0", daemon.registry()).expect("bind :0");
+    let addr = server.local_addr();
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+
+    // One full two-tenant barrier cycle.
+    let a = register_as(&tx, "a", "gold");
+    let b = register_as(&tx, "b", "bronze");
+    for id in [a, b] {
+        call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+        call(&tx, id, ClientMsg::Str { workload: "double".into() });
+    }
+    for id in [a, b] {
+        assert!(matches!(call(&tx, id, ClientMsg::Stp), ServerMsg::Done { .. }));
+    }
+    // One more command turn so the post-completion gauge publish ran.
+    assert!(matches!(call(&tx, a, ClientMsg::Stats), ServerMsg::Stats { .. }));
+
+    let reply = scrape(addr);
+    assert!(reply.starts_with("HTTP/1.1 200 OK\r\n"), "{reply}");
+    assert!(
+        reply.contains("Content-Type: text/plain; version=0.0.4"),
+        "{reply}"
+    );
+    let body = reply.split_once("\r\n\r\n").expect("header/body split").1;
+
+    // Walk every line: HELP/TYPE exactly once per family, samples
+    // parseable and unique, every sample under a typed family.
+    let mut helps: HashSet<String> = HashSet::new();
+    let mut types: HashMap<String, String> = HashMap::new();
+    let mut series: HashSet<String> = HashSet::new();
+    for line in body.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let fam = rest.split_whitespace().next().unwrap().to_string();
+            assert!(helps.insert(fam.clone()), "duplicate # HELP for {fam}");
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let fam = it.next().unwrap().to_string();
+            let kind = it.next().unwrap_or("").to_string();
+            assert!(
+                ["counter", "gauge", "histogram"].contains(&kind.as_str()),
+                "bad kind in {line:?}"
+            );
+            assert!(
+                types.insert(fam.clone(), kind).is_none(),
+                "duplicate # TYPE for {fam}"
+            );
+        } else {
+            let (key, value) = line
+                .rsplit_once(' ')
+                .unwrap_or_else(|| panic!("unparseable sample {line:?}"));
+            value
+                .parse::<f64>()
+                .unwrap_or_else(|_| panic!("bad value in {line:?}"));
+            assert!(series.insert(key.to_string()), "duplicate series {key:?}");
+            let fam = key.split('{').next().unwrap();
+            let typed = types.contains_key(fam)
+                || ["_bucket", "_sum", "_count"].iter().any(|suffix| {
+                    fam.strip_suffix(suffix).is_some_and(|base| {
+                        types.get(base).map(String::as_str) == Some("histogram")
+                    })
+                });
+            assert!(typed, "sample {line:?} precedes or lacks its # TYPE");
+        }
+    }
+    assert_eq!(
+        helps,
+        types.keys().cloned().collect::<HashSet<_>>(),
+        "HELP and TYPE cover different families"
+    );
+
+    // All four series groups, plus the subsystem-published families.
+    for needle in [
+        // per-device
+        "vgpu_device_clients{device=\"0\"}",
+        "vgpu_device_mem_used_bytes{device=\"0\"}",
+        "vgpu_device_queued_ms{device=\"0\"}",
+        "vgpu_device_jobs_done_total{device=\"0\"}",
+        // per-tenant
+        "vgpu_tenant_jobs_ok_total{tenant=\"gold\"}",
+        "vgpu_tenant_jobs_ok_total{tenant=\"bronze\"}",
+        "vgpu_tenant_device_ms_total{tenant=\"gold\"}",
+        // spill
+        "vgpu_spill_bytes",
+        "vgpu_spill_events_total",
+        "vgpu_restage_events_total",
+        // pipeline
+        "vgpu_pipeline_in_flight_flushes",
+        "vgpu_pipeline_queued_completions",
+        "vgpu_flush_latency_ms_bucket{le=\"+Inf\"}",
+        "vgpu_flush_latency_ms_sum",
+        "vgpu_flush_latency_ms_count",
+        // subsystem-published
+        "vgpu_executor_submissions_total{device=\"0\"}",
+        "vgpu_qos_serviced_total{tenant=\"gold\"}",
+    ] {
+        assert!(series.contains(needle), "missing series {needle:?}");
+    }
+
+    // The cycle's activity is visible through the exposition.
+    let sample = |key: &str| -> f64 {
+        body.lines()
+            .find(|l| l.strip_prefix(key).is_some_and(|r| r.starts_with(' ')))
+            .unwrap_or_else(|| panic!("no sample for {key}"))
+            .rsplit_once(' ')
+            .unwrap()
+            .1
+            .parse()
+            .unwrap()
+    };
+    assert_eq!(sample("vgpu_batches_total") as u64, 1);
+    assert_eq!(sample("vgpu_jobs_ok_total") as u64, 2);
+    assert_eq!(sample("vgpu_jobs_failed_total") as u64, 0);
+    assert_eq!(sample("vgpu_bytes_staged_total") as u64, 32);
+    assert_eq!(sample("vgpu_clients") as u64, 2);
+    assert_eq!(sample("vgpu_flush_latency_ms_count") as u64, 1);
+    assert_eq!(
+        sample("vgpu_device_jobs_done_total{device=\"0\"}") as u64,
+        2
+    );
+    assert_eq!(
+        sample("vgpu_tenant_jobs_ok_total{tenant=\"gold\"}") as u64,
+        1
+    );
+}
+
+#[test]
+fn scrapes_see_fresh_values_without_daemon_involvement() {
+    // The listener renders from the shared registry; two scrapes around
+    // new activity must observe the counter move.
+    let exec = ExecHandle::mock(vec!["double".into()], |_, inputs| {
+        Ok(vec![inputs[0].clone()])
+    });
+    let cfg = DaemonConfig {
+        barrier: Some(1),
+        barrier_timeout: Duration::from_millis(50),
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::new(cfg, exec);
+    let server =
+        MetricsServer::start("127.0.0.1:0", daemon.registry()).expect("bind :0");
+    let addr = server.local_addr();
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+
+    let before = scrape(addr);
+    assert!(before.contains("\nvgpu_jobs_ok_total 0\n"), "{before}");
+
+    let id = register_as(&tx, "a", "");
+    call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
+    call(&tx, id, ClientMsg::Str { workload: "double".into() });
+    assert!(matches!(call(&tx, id, ClientMsg::Stp), ServerMsg::Done { .. }));
+
+    let after = scrape(addr);
+    assert!(after.contains("\nvgpu_jobs_ok_total 1\n"), "{after}");
+}
