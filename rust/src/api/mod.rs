@@ -27,7 +27,8 @@ use std::sync::mpsc;
 use crate::gvm::Command;
 use crate::ipc::transport::{Transport, UnixTransport};
 use crate::ipc::{
-    ClientMsg, DeviceEntry, ServerMsg, TenantStatsEntry, UsageEntry,
+    ClientMsg, DeviceEntry, HealthEntry, ServerMsg, TenantStatsEntry,
+    UsageEntry,
 };
 use crate::runtime::TensorValue;
 use crate::{Error, Result};
@@ -79,6 +80,23 @@ pub struct UsageView {
     /// One metered row per tenant, in tenant-id order (the daemon's
     /// [`crate::metrics::UsageLedger`] snapshot).
     pub records: Vec<UsageEntry>,
+}
+
+/// Health-plane snapshot (see [`VgpuClient::health`]).
+#[derive(Debug, Clone)]
+pub struct HealthView {
+    /// `[health]` detection is on.
+    pub enabled: bool,
+    /// Automatic remediation (quarantine/evacuate/fail over) is on.
+    pub remediate: bool,
+    /// Devices quarantined since launch.
+    pub quarantines: u64,
+    /// Quarantines that failed over at least one in-flight job.
+    pub failovers: u64,
+    /// In-flight jobs resubmitted onto a healthy device.
+    pub resubmitted: u64,
+    /// Per-device health rows, by device id.
+    pub devices: Vec<HealthEntry>,
 }
 
 /// Outcome of a migration request (see [`VgpuClient::migrate`]).
@@ -289,6 +307,32 @@ impl VgpuClient {
             ServerMsg::Usage { records } => Ok(UsageView { records }),
             ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
             other => Err(Error::Ipc(format!("expected Usage, got {other:?}"))),
+        }
+    }
+
+    /// Query the health plane (self-healing extension; see
+    /// [`crate::gvm::health`]): per-device state byte, completion-
+    /// latency EWMA, strike count, and outstanding submissions, plus
+    /// the remediation counters.
+    pub fn health(&mut self) -> Result<HealthView> {
+        match self.call(ClientMsg::Health)? {
+            ServerMsg::Health {
+                enabled,
+                remediate,
+                quarantines,
+                failovers,
+                resubmitted,
+                devices,
+            } => Ok(HealthView {
+                enabled,
+                remediate,
+                quarantines,
+                failovers,
+                resubmitted,
+                devices,
+            }),
+            ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
+            other => Err(Error::Ipc(format!("expected Health, got {other:?}"))),
         }
     }
 

@@ -9,6 +9,7 @@
 //!                                          live-migrate a VGPU
 //! vgpu stats --socket PATH [--json]        node stats incl. pipeline gauges
 //! vgpu usage --socket PATH                 per-tenant metering ledger
+//! vgpu health --socket PATH                per-device health plane view
 //! vgpu list                                list workloads + artifacts
 //! vgpu profile                             show calibration derivation
 //! ```
@@ -84,6 +85,13 @@ pub enum Cmd {
     /// Render a served GVM's per-tenant metering ledger (admin verb over
     /// the wire `Usage` message; see `metrics::ledger`).
     Usage {
+        /// Socket of the served GVM.
+        socket: String,
+    },
+    /// Render a served GVM's health plane (admin verb over the wire
+    /// `Health` message; see `gvm::health`): per-device state, latency
+    /// EWMAs, strikes, and the remediation counters.
+    Health {
         /// Socket of the served GVM.
         socket: String,
     },
@@ -335,6 +343,28 @@ pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Cmd> {
                 })?,
             })
         }
+        "health" => {
+            let mut socket = None;
+            while let Some(flag) = args.pop_front() {
+                match flag.as_str() {
+                    "--socket" => {
+                        socket = Some(args.pop_front().ok_or_else(|| {
+                            Error::Config("--socket needs a value".into())
+                        })?)
+                    }
+                    f => {
+                        return Err(Error::Config(format!(
+                            "health: unknown flag {f}"
+                        )))
+                    }
+                }
+            }
+            Ok(Cmd::Health {
+                socket: socket.ok_or_else(|| {
+                    Error::Config("health: --socket required".into())
+                })?,
+            })
+        }
         "list" => Ok(Cmd::List),
         "profile" => Ok(Cmd::Profile),
         "help" | "--help" | "-h" => Ok(Cmd::Help),
@@ -361,6 +391,8 @@ USAGE:
                                       (incl. async-pipeline gauges)
   vgpu usage --socket PATH            per-tenant metering ledger of a
                                       served GVM (device-ms, bytes, ...)
+  vgpu health --socket PATH           per-device health plane of a served
+                                      GVM (state, EWMAs, remediations)
   vgpu list                           list workloads and artifacts
   vgpu profile                        show cost-calibration details
   vgpu help                           this text
@@ -368,8 +400,8 @@ USAGE:
 EXPERIMENTS: tab1 tab3 fig14 fig15 fig16 fig17 fig18 fig19 fig20 fig21
              fig22 fig23 fig24 ablation-style ablation-depcheck
              ablation-ctx ablation-barrier ablation-policy multi-gpu qos
-             multi-gpu-cluster pipeline spill ext-multigpu ext-cluster
-             ext-fig18-socket
+             multi-gpu-cluster pipeline spill chaos ext-multigpu
+             ext-cluster ext-fig18-socket
 ";
 
 #[cfg(test)]
@@ -478,6 +510,18 @@ mod tests {
         );
         assert!(p("usage").is_err(), "--socket required");
         assert!(p("usage --bogus x").is_err());
+    }
+
+    #[test]
+    fn parses_health() {
+        assert_eq!(
+            p("health --socket /tmp/v.sock").unwrap(),
+            Cmd::Health {
+                socket: "/tmp/v.sock".into()
+            }
+        );
+        assert!(p("health").is_err(), "--socket required");
+        assert!(p("health --bogus x").is_err());
     }
 
     #[test]

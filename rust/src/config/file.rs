@@ -48,6 +48,25 @@
 //! enabled = true              # Prometheus /metrics endpoint (default off)
 //! listen = 127.0.0.1:9187     # TCP listen address (:0 picks a port)
 //!
+//! [faults]
+//! enabled = true              # deterministic fault injection (default off)
+//! seed = 42                   # decision-hash seed (same seed = same run)
+//! stall_rate = 0.01           # per-job sticky device-stall probability
+//! stall_factor = 10.0         # latency multiplier while stalled
+//! death_rate = 0.0            # per-job sticky executor-death probability
+//! straggler_rate = 0.05       # per-job straggler-tail probability
+//! straggler_factor = 4.0      # straggler latency multiplier
+//! corrupt_rate = 0.0          # per-job corrupted-completion probability
+//!
+//! [health]
+//! enabled = true              # health detection (default off)
+//! remediate = true            # quarantine/evacuate/fail over automatically
+//! ewma_alpha = 0.2            # completion-latency EWMA smoothing (0, 1]
+//! straggler_factor = 4.0      # strike when latency > factor x EWMA
+//! heartbeat_timeout_ms = 2000 # missed-completion quarantine deadline
+//! suspect_strikes = 3         # strikes to Suspect (2x quarantines)
+//! max_quarantined = 1         # concurrent-quarantine cap
+//!
 //! [gvm]
 //! barrier = 8                 # omit for "all registered clients"
 //! barrier_timeout_ms = 50
@@ -63,6 +82,8 @@ use std::path::Path;
 use super::{DepcheckSemantics, DeviceConfig, NodeConfig};
 use crate::gvm::devices::{PlacementPolicy, PoolConfig};
 use crate::gvm::exec::MigrationConfig;
+use crate::gvm::faults::FaultConfig;
+use crate::gvm::health::HealthConfig;
 use crate::gvm::qos::{parse_share_list, QosConfig};
 use crate::gvm::spill::SpillConfig;
 use crate::gvm::{DaemonConfig, GvmConfig, PipelineConfig, StyleRule};
@@ -368,6 +389,101 @@ impl ConfigFile {
         Ok(s)
     }
 
+    /// Build the fault-injection tunables (the `[faults]` section);
+    /// omitted section = injection off — the executor workers carry no
+    /// fault plan at all.
+    pub fn faults(&self) -> Result<FaultConfig> {
+        let mut f = FaultConfig::default();
+        if let Some(v) = self.get("faults", "enabled") {
+            f.enabled = match v.to_lowercase().as_str() {
+                "true" | "1" | "on" | "yes" => true,
+                "false" | "0" | "off" | "no" => false,
+                other => {
+                    return Err(Error::Config(format!(
+                        "[faults] enabled = {other:?} (want true|false)"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = self.get("faults", "seed") {
+            f.seed = v.parse().map_err(|e| {
+                Error::Config(format!("[faults] seed = {v:?}: {e}"))
+            })?;
+        }
+        if let Some(v) = self.get_f64("faults", "stall_rate")? {
+            f.stall_rate = v;
+        }
+        if let Some(v) = self.get_f64("faults", "stall_factor")? {
+            f.stall_factor = v;
+        }
+        if let Some(v) = self.get_f64("faults", "death_rate")? {
+            f.death_rate = v;
+        }
+        if let Some(v) = self.get_f64("faults", "straggler_rate")? {
+            f.straggler_rate = v;
+        }
+        if let Some(v) = self.get_f64("faults", "straggler_factor")? {
+            f.straggler_factor = v;
+        }
+        if let Some(v) = self.get_f64("faults", "corrupt_rate")? {
+            f.corrupt_rate = v;
+        }
+        f.validate()?;
+        Ok(f)
+    }
+
+    /// Build the health-plane tunables (the `[health]` section);
+    /// omitted section = detection off (no EWMAs, no deadlines, no
+    /// remediation — the pre-health daemon).
+    pub fn health(&self) -> Result<HealthConfig> {
+        let mut h = HealthConfig::default();
+        if let Some(v) = self.get("health", "enabled") {
+            h.enabled = match v.to_lowercase().as_str() {
+                "true" | "1" | "on" | "yes" => true,
+                "false" | "0" | "off" | "no" => false,
+                other => {
+                    return Err(Error::Config(format!(
+                        "[health] enabled = {other:?} (want true|false)"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = self.get("health", "remediate") {
+            h.remediate = match v.to_lowercase().as_str() {
+                "true" | "1" | "on" | "yes" => true,
+                "false" | "0" | "off" | "no" => false,
+                other => {
+                    return Err(Error::Config(format!(
+                        "[health] remediate = {other:?} (want true|false)"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = self.get_f64("health", "ewma_alpha")? {
+            h.ewma_alpha = v;
+        }
+        if let Some(v) = self.get_f64("health", "straggler_factor")? {
+            h.straggler_factor = v;
+        }
+        if let Some(v) = self.get_f64("health", "heartbeat_timeout_ms")? {
+            if !v.is_finite() || v <= 0.0 {
+                return Err(Error::Config(format!(
+                    "[health] heartbeat_timeout_ms = {v} must be > 0"
+                )));
+            }
+            h.heartbeat_timeout =
+                std::time::Duration::from_micros((v * 1e3) as u64);
+        }
+        if let Some(v) = self.get_usize("health", "suspect_strikes")? {
+            h.suspect_strikes = v as u32;
+        }
+        if let Some(v) = self.get_usize("health", "max_quarantined")? {
+            h.max_quarantined = v;
+        }
+        h.validate()?;
+        Ok(h)
+    }
+
     /// Build the observability-endpoint tunables (the `[metrics]`
     /// section); omitted section = endpoint off (the registry still
     /// accumulates — `vgpu stats` / `vgpu usage` serve it over IPC).
@@ -436,6 +552,8 @@ impl ConfigFile {
         daemon.migration = self.migration()?;
         daemon.pipeline = self.pipeline()?;
         daemon.spill = self.spill()?;
+        daemon.faults = self.faults()?;
+        daemon.health = self.health()?;
         let artifacts_dir = self
             .get("gvm", "artifacts_dir")
             .map(std::path::PathBuf::from)
@@ -646,6 +764,108 @@ policy = model-optimal
         ] {
             let c = ConfigFile::parse(bad).unwrap();
             assert!(c.spill().is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn faults_section_parses_and_rides_into_gvm() {
+        let c = ConfigFile::parse(
+            "[faults]\nenabled = true\nseed = 42\nstall_rate = 0.1\n\
+             stall_factor = 8\ndeath_rate = 0.01\nstraggler_rate = 0.2\n\
+             straggler_factor = 3\ncorrupt_rate = 0.05\n",
+        )
+        .unwrap();
+        let f = c.faults().unwrap();
+        assert!(f.enabled);
+        assert_eq!(f.seed, 42);
+        assert!((f.stall_rate - 0.1).abs() < 1e-12);
+        assert!((f.stall_factor - 8.0).abs() < 1e-12);
+        assert!((f.death_rate - 0.01).abs() < 1e-12);
+        assert!((f.straggler_rate - 0.2).abs() < 1e-12);
+        assert!((f.straggler_factor - 3.0).abs() < 1e-12);
+        assert!((f.corrupt_rate - 0.05).abs() < 1e-12);
+        let g = c.gvm().unwrap();
+        assert!(g.daemon.faults.enabled);
+        assert_eq!(g.daemon.faults.seed, 42);
+    }
+
+    #[test]
+    fn faults_section_defaults_to_off() {
+        let c = ConfigFile::parse("").unwrap();
+        let f = c.faults().unwrap();
+        assert!(!f.enabled);
+        assert_eq!(f.stall_rate, 0.0);
+        assert_eq!(f.death_rate, 0.0);
+        assert!(!c.gvm().unwrap().daemon.faults.enabled);
+    }
+
+    #[test]
+    fn bad_faults_sections_rejected() {
+        for bad in [
+            "[faults]\nenabled = maybe\n",
+            "[faults]\nseed = lots\n",
+            "[faults]\nstall_rate = 1.5\n",
+            "[faults]\nstall_rate = -0.1\n",
+            "[faults]\nstall_factor = 0.5\n",
+            "[faults]\ndeath_rate = 2\n",
+            "[faults]\nstraggler_factor = 0\n",
+            "[faults]\ncorrupt_rate = nan\n",
+        ] {
+            let c = ConfigFile::parse(bad).unwrap();
+            assert!(c.faults().is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn health_section_parses_and_rides_into_gvm() {
+        let c = ConfigFile::parse(
+            "[health]\nenabled = true\nremediate = false\n\
+             ewma_alpha = 0.5\nstraggler_factor = 6\n\
+             heartbeat_timeout_ms = 250\nsuspect_strikes = 2\n\
+             max_quarantined = 3\n",
+        )
+        .unwrap();
+        let h = c.health().unwrap();
+        assert!(h.enabled);
+        assert!(!h.remediate);
+        assert!((h.ewma_alpha - 0.5).abs() < 1e-12);
+        assert!((h.straggler_factor - 6.0).abs() < 1e-12);
+        assert_eq!(
+            h.heartbeat_timeout,
+            std::time::Duration::from_millis(250)
+        );
+        assert_eq!(h.suspect_strikes, 2);
+        assert_eq!(h.max_quarantined, 3);
+        let g = c.gvm().unwrap();
+        assert!(g.daemon.health.enabled);
+        assert!(!g.daemon.health.remediate);
+    }
+
+    #[test]
+    fn health_section_defaults_to_off() {
+        let c = ConfigFile::parse("").unwrap();
+        let h = c.health().unwrap();
+        assert!(!h.enabled);
+        assert!(h.remediate);
+        assert!(h.heartbeat_timeout > std::time::Duration::ZERO);
+        assert!(!c.gvm().unwrap().daemon.health.enabled);
+    }
+
+    #[test]
+    fn bad_health_sections_rejected() {
+        for bad in [
+            "[health]\nenabled = maybe\n",
+            "[health]\nremediate = maybe\n",
+            "[health]\newma_alpha = 0\n",
+            "[health]\newma_alpha = 1.5\n",
+            "[health]\nstraggler_factor = 0.5\n",
+            "[health]\nheartbeat_timeout_ms = 0\n",
+            "[health]\nheartbeat_timeout_ms = -5\n",
+            "[health]\nsuspect_strikes = 0\n",
+            "[health]\nmax_quarantined = lots\n",
+        ] {
+            let c = ConfigFile::parse(bad).unwrap();
+            assert!(c.health().is_err(), "{bad:?} should be rejected");
         }
     }
 

@@ -92,29 +92,46 @@
 //! estimates, and tenant attribution is a pool invariant.  Placement and
 //! migrations are observable through `ClientMsg::DevInfo` /
 //! `ClientMsg::Stats`.
+//!
+//! The fault plane ([`super::faults`], the `[faults]` config section)
+//! injects deterministic, seeded faults at the executor workers —
+//! sticky device stalls, executor death (reports stop but the lane's
+//! in-flight counter still drains), per-job straggler tails, corrupted
+//! completions — and the health engine ([`super::health`], the
+//! `[health]` section) watches the SAME completion stream for latency
+//! strikes and missed heartbeat deadlines.  Remediation quarantines
+//! the sick device ([`DeviceState::Quarantined`]: placement and
+//! migration targets skip it), evacuates its VGPUs through the
+//! drain-free rebind path, and fails over unfinished epoch jobs from
+//! their saved inputs with exactly-once accounting; `ClientMsg::Health`
+//! serves the live per-device view over the same registry counters.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::devices::{DeviceId, DevicePool, PoolConfig};
+use super::devices::{DeviceId, DevicePool, DeviceState, PoolConfig};
 use super::exec::{
     Completion, ExecutorPool, MigrationConfig, Rebalancer, Submission,
 };
+use super::faults::{FaultConfig, FaultPlan};
+use super::health::{HealthConfig, HealthEngine, HealthMetrics};
 use super::plan::Job;
 use super::qos::{QueueMetrics, WeightedDeficitQueue, DEFAULT_TENANT};
 use super::scheduler::{plan_batch, Policy};
 use super::spill::{SpillConfig, SpillMetrics, SpillStore};
 use super::vgpu::{ClientId, Residency, VgpuState, VgpuTable};
-use crate::ipc::wire::{DeviceEntry, TenantStatsEntry, UsageEntry};
+use crate::ipc::wire::{
+    DeviceEntry, HealthEntry, TenantStatsEntry, UsageEntry,
+};
 use crate::ipc::{ClientMsg, ServerMsg};
 use crate::log;
 use crate::metrics::registry::{
     Counter, CounterF, Gauge, GaugeF, Histogram, Registry,
 };
 use crate::metrics::UsageLedger;
-use crate::runtime::ExecHandle;
+use crate::runtime::{ExecHandle, TensorValue};
 use crate::workloads::Suite;
 use crate::{Error, Result};
 
@@ -188,6 +205,15 @@ struct PendingJob {
     tenant: String,
     est_ms: f64,
     dev: DeviceId,
+    /// The submitted artifact name — what a failover resubmits.
+    artifact: String,
+    /// Failover copy of the job's inputs.  Populated only when
+    /// `[health]` remediation is on (submission *moves* the real
+    /// inputs, so re-running an unfinished job off a quarantined
+    /// device needs this clone); `None` after one failover — a job
+    /// fails over at most once, so a second sick device fails it
+    /// explicitly instead of bouncing forever.
+    inputs: Option<Vec<TensorValue>>,
 }
 
 /// One in-flight flush epoch (keyed by `flush_seq` in the daemon's
@@ -222,6 +248,10 @@ pub struct DaemonConfig {
     pub pipeline: PipelineConfig,
     /// Host-memory spill tunables (`[spill]` config section).
     pub spill: SpillConfig,
+    /// Deterministic fault injection (`[faults]` config section).
+    pub faults: FaultConfig,
+    /// Health detection + self-healing (`[health]` config section).
+    pub health: HealthConfig,
 }
 
 impl Default for DaemonConfig {
@@ -236,6 +266,8 @@ impl Default for DaemonConfig {
             migration: MigrationConfig::default(),
             pipeline: PipelineConfig::default(),
             spill: SpillConfig::default(),
+            faults: FaultConfig::default(),
+            health: HealthConfig::default(),
         }
     }
 }
@@ -286,6 +318,13 @@ pub struct Daemon {
     /// Service-counter publisher cloned into each flush's
     /// weighted-deficit queue.
     qos_metrics: QueueMetrics,
+    /// Health engine: completion-latency EWMAs, straggler strikes, and
+    /// missed-completion deadlines per device — fed by the *same*
+    /// submission/completion events as the pool accounting.
+    health: HealthEngine,
+    /// Health counters in the shared registry (strikes, quarantines,
+    /// failovers, resubmissions, quarantined-device gauge).
+    health_metrics: HealthMetrics,
 }
 
 /// The daemon's handles into the shared metrics [`Registry`] — named
@@ -496,12 +535,27 @@ impl Daemon {
     ) -> Self {
         let artifact_names = handles[0].names().unwrap_or_default();
         let registry = Arc::new(Registry::new());
-        let mut executors =
-            ExecutorPool::new(handles).expect("pool construction is non-empty");
+        // The fault plan rides into the executor workers: each worker
+        // consults it after executing a job (stall/straggle delay,
+        // corrupt -> failure, die -> dropped report).  Disabled config
+        // means no plan at all — zero cost on the healthy path.
+        let faults = if cfg.faults.enabled {
+            Some(Arc::new(
+                FaultPlan::new(cfg.faults, pool.len())
+                    .expect("invalid [faults] config (validate via config::file)"),
+            ))
+        } else {
+            None
+        };
+        let mut executors = ExecutorPool::with_faults(handles, faults)
+            .expect("pool construction is non-empty");
         executors.attach_metrics(&registry);
         let rebalancer = Rebalancer::new(cfg.migration.clone());
         let mut spill = SpillStore::new(cfg.spill.clone());
         spill.set_metrics(SpillMetrics::new(&registry));
+        let health = HealthEngine::new(cfg.health.clone(), pool.len())
+            .expect("invalid [health] config (validate via config::file)");
+        let health_metrics = HealthMetrics::new(&registry);
         let metrics = NodeMetrics::new(registry.clone(), pool.len());
         let qos_metrics = QueueMetrics::new(registry);
         Self {
@@ -522,6 +576,8 @@ impl Daemon {
             metrics,
             ledger: UsageLedger::new(),
             qos_metrics,
+            health,
+            health_metrics,
         }
     }
 
@@ -601,6 +657,7 @@ impl Daemon {
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
             self.expire_wedged_epochs();
+            self.health_tick();
             self.maybe_start_flush();
             self.publish_gauges();
             // Shutdown: the last client is gone and every epoch settled.
@@ -633,6 +690,9 @@ impl Daemon {
             d.busy_ms.store(s.busy_ms);
         }
         self.executors.publish_inflight();
+        self.health_metrics
+            .quarantined
+            .set(self.pool.quarantined_count() as u64);
     }
 
     /// How long the event loop may block: the barrier window (if one is
@@ -644,6 +704,13 @@ impl Daemon {
         }
         if let Some(f) = self.inflight.values().next() {
             d = d.min(COMPLETION_TIMEOUT.saturating_sub(f.started.elapsed()));
+        }
+        // The health engine's earliest missed-completion deadline: the
+        // loop must wake to notice a device that stopped reporting.
+        if self.health.cfg().enabled {
+            if let Some(t) = self.health.next_deadline() {
+                d = d.min(t.saturating_duration_since(Instant::now()));
+            }
         }
         d
     }
@@ -1346,6 +1413,7 @@ impl Daemon {
                         queued_ms: s.queued_ms,
                         jobs_done: s.jobs_done,
                         busy_ms: s.busy_ms,
+                        state: s.state.as_u8(),
                     })
                     .collect();
                 let self_device = self
@@ -1356,6 +1424,33 @@ impl Daemon {
                 cmd.reply
                     .send(ServerMsg::Devices {
                         self_device,
+                        devices,
+                    })
+                    .map_err(|_| Error::Ipc("client gone".into()))?;
+            }
+            ClientMsg::Health => {
+                // A view over the health engine + the registry counters
+                // the remediation sites bump — same handles the
+                // `/metrics` exposition reads, never a parallel set.
+                let devices = (0..self.pool.len())
+                    .map(|i| {
+                        let v = self.health.view(i);
+                        HealthEntry {
+                            device: i as u32,
+                            state: self.pool.state(DeviceId(i)).as_u8(),
+                            ewma_ms: v.ewma_ms,
+                            strikes: v.strikes,
+                            outstanding: v.outstanding,
+                        }
+                    })
+                    .collect();
+                cmd.reply
+                    .send(ServerMsg::Health {
+                        enabled: self.health.cfg().enabled,
+                        remediate: self.health.cfg().remediate,
+                        quarantines: self.health_metrics.quarantines.get(),
+                        failovers: self.health_metrics.failovers.get(),
+                        resubmitted: self.health_metrics.resubmitted.get(),
                         devices,
                     })
                     .map_err(|_| Error::Ipc("client gone".into()))?;
@@ -1467,6 +1562,9 @@ impl Daemon {
                 continue;
             }
             let d = self.pool.device(DeviceId(i));
+            if d.state == DeviceState::Quarantined {
+                continue; // never migrate work onto a sick device
+            }
             if d.mem_free() < seg_bytes {
                 continue;
             }
@@ -1677,6 +1775,20 @@ impl Daemon {
     /// attribution were already settled when the entry was removed, so
     /// applying it again would double-account.
     fn on_completion(&mut self, c: Completion) {
+        // Feed the health engine before any staleness check: the event
+        // physically arrived from this device's lane, so it retires the
+        // oldest outstanding deadline and updates the latency EWMA even
+        // when the epoch entry is already gone.  Failures carry no
+        // measured latency — 0 never strikes.
+        if self.health.cfg().enabled {
+            let latency = match &c.outcome {
+                Ok((_, gpu_ms)) => *gpu_ms,
+                Err(_) => 0.0,
+            };
+            if self.health.note_completion(c.device.0, latency) {
+                self.health_metrics.strikes.inc();
+            }
+        }
         let Some(flush) = self.inflight.get_mut(&c.seq) else {
             log::warn!(
                 "discarding stale completion for client {} (flush {} \
@@ -1687,7 +1799,14 @@ impl Daemon {
             );
             return;
         };
-        let Some(i) = flush.jobs.iter().position(|j| j.client == c.client)
+        // Match on client AND device: after a failover the epoch holds
+        // the *resubmitted* job (dev = the new device), so the sick
+        // lane's late original completion must not settle it — only the
+        // failover lane's event may, and the straggler is discarded.
+        let Some(i) = flush
+            .jobs
+            .iter()
+            .position(|j| j.client == c.client && j.dev == c.device)
         else {
             log::warn!(
                 "discarding stale completion for departed client {} \
@@ -1866,6 +1985,289 @@ impl Daemon {
         self.wake_flush_waiters();
     }
 
+    /// Per-turn health pass: escalate devices past their
+    /// missed-completion deadlines or straggler-strike thresholds, and
+    /// surface Suspect/recovered transitions where placement reads
+    /// them.  Detection consumes the same submission/completion events
+    /// as the pool accounting — never a parallel counter set.
+    fn health_tick(&mut self) {
+        if !self.health.cfg().enabled {
+            return;
+        }
+        let now = Instant::now();
+        for dev in self.health.overdue_devices(now) {
+            self.remediate(
+                DeviceId(dev),
+                true,
+                "missed its completion deadline",
+            );
+        }
+        for i in 0..self.pool.len() {
+            let d = DeviceId(i);
+            if self.pool.state(d) == DeviceState::Quarantined {
+                continue;
+            }
+            if self.health.wants_quarantine(i) {
+                self.remediate(d, false, "straggled past the strike budget");
+            } else if self.health.is_suspect(i) {
+                if self.pool.state(d) == DeviceState::Healthy {
+                    self.pool.set_state(d, DeviceState::Suspect);
+                    log::warn!(
+                        "device {i} marked suspect \
+                         (completion-latency strikes)"
+                    );
+                }
+            } else if self.pool.state(d) == DeviceState::Suspect {
+                // Healthy completions decayed the strikes back under
+                // the threshold: the device recovered.
+                self.pool.set_state(d, DeviceState::Healthy);
+                log::info!("device {i} recovered (strikes decayed)");
+            }
+        }
+    }
+
+    /// Remediate one sick device.  `overdue` distinguishes a silent
+    /// lane (completions stopped arriving — parked clients *must* be
+    /// unwedged) from a striking one (completions arrive, slowly).
+    ///
+    /// With remediation off, or no healthy device left to absorb the
+    /// work, or the quarantine cap reached: mark the device Suspect
+    /// and — only for a silent lane — fail its in-flight jobs
+    /// explicitly, so every accepted job still terminates exactly
+    /// once.  Otherwise: quarantine (placement and migration targets
+    /// skip the device), evacuate its VGPUs via the drain-free rebind
+    /// path, and fail over its in-flight jobs — each pulled out of its
+    /// epoch entry exactly once and either resubmitted from its saved
+    /// inputs on the new binding (same epoch, so `WaitFlush` settles
+    /// with correct counts) or failed through the single failure path.
+    fn remediate(&mut self, dev: DeviceId, overdue: bool, why: &str) {
+        if self.pool.state(dev) == DeviceState::Quarantined {
+            // A client whose evacuation was refused (no healthy device
+            // had room) keeps submitting to its quarantined binding; if
+            // that lane is silent, its jobs must still terminate.
+            if overdue {
+                self.fail_device_inflight(dev, why);
+            }
+            return;
+        }
+        let cfg = self.health.cfg().clone();
+        if !cfg.remediate
+            || self.pool.serving_count() <= 1
+            || self.pool.quarantined_count() >= cfg.max_quarantined
+        {
+            if self.pool.state(dev) == DeviceState::Healthy {
+                self.pool.set_state(dev, DeviceState::Suspect);
+                log::warn!(
+                    "device {} {why}; remediation unavailable — marked \
+                     suspect",
+                    dev.0
+                );
+            }
+            if overdue {
+                self.fail_device_inflight(dev, why);
+            }
+            return;
+        }
+        self.pool.set_state(dev, DeviceState::Quarantined);
+        self.health_metrics.quarantines.inc();
+        log::warn!("quarantining device {} ({why})", dev.0);
+        let victims = self.take_device_inflight(dev);
+        self.evacuate_clients(dev);
+        let mut resubmitted = 0u64;
+        for (epoch, j) in victims {
+            let target = self
+                .pool
+                .placement(j.client)
+                .filter(|t| self.pool.state(*t) != DeviceState::Quarantined);
+            match (j.inputs, target) {
+                (Some(inputs), Some(to)) => {
+                    // The in-flight estimate retires on the sick device
+                    // and re-queues on the target; the resubmission
+                    // rejoins its ORIGINAL epoch — removed exactly
+                    // once, by the failover lane's completion (the sick
+                    // lane's late original is discarded on the device
+                    // mismatch).
+                    self.pool.retire_queued_as(dev, &j.tenant, j.est_ms);
+                    self.pool.note_queued_as(to, &j.tenant, j.est_ms);
+                    let sub = Submission {
+                        seq: epoch,
+                        client: j.client,
+                        tenant: j.tenant.clone(),
+                        est_ms: j.est_ms,
+                        artifact: j.artifact.clone(),
+                        inputs,
+                    };
+                    match self.executors.submit(to, sub) {
+                        Ok(()) => {
+                            self.health
+                                .note_submitted(to.0, Instant::now());
+                            self.health_metrics.resubmitted.inc();
+                            resubmitted += 1;
+                            self.inflight
+                                .get_mut(&epoch)
+                                .expect("victim's epoch entry is retained")
+                                .jobs
+                                .push(PendingJob {
+                                    client: j.client,
+                                    tenant: j.tenant,
+                                    est_ms: j.est_ms,
+                                    dev: to,
+                                    artifact: j.artifact,
+                                    inputs: None, // one failover max
+                                });
+                        }
+                        Err(e) => self.fail_job(
+                            to,
+                            j.client,
+                            &j.tenant,
+                            j.est_ms,
+                            format!("failover resubmit: {e}"),
+                        ),
+                    }
+                }
+                _ => self.fail_job(
+                    dev,
+                    j.client,
+                    &j.tenant,
+                    j.est_ms,
+                    format!("device {} {why}; no failover possible", dev.0),
+                ),
+            }
+        }
+        if resubmitted > 0 {
+            self.health_metrics.failovers.inc();
+            log::info!(
+                "failed over {resubmitted} job(s) off device {}",
+                dev.0
+            );
+        }
+        self.health.clear_device(dev.0);
+        self.sweep_settled_epochs();
+        self.wake_stp_waiters();
+        self.wake_flush_waiters();
+    }
+
+    /// Rebind every VGPU off a quarantined device *without* draining
+    /// its executor lane (the lane may be dead — that is why we are
+    /// here).  Per-client isolation: one failed rebind never blocks
+    /// the rest; a client nothing can host stays bound and its next
+    /// job fails through the normal placement error.
+    fn evacuate_clients(&mut self, dev: DeviceId) {
+        for client in self.pool.clients_on(dev) {
+            let (name, seg, est) = {
+                let Ok(v) = self.table.get(client) else {
+                    continue;
+                };
+                // Same rules as migration: only a queued (not yet
+                // submitted) job's estimate moves with the binding; a
+                // spilled segment lives host-side, zero bytes move.
+                let est = match &v.state {
+                    VgpuState::Queued { workload, .. } => {
+                        self.job_est_ms(workload)
+                    }
+                    _ => 0.0,
+                };
+                let seg = match v.residency {
+                    Residency::Spilled => 0,
+                    Residency::Resident => v.seg_bytes,
+                };
+                (v.name.clone(), seg, est)
+            };
+            let to = match self.coolest_other_device(dev, seg) {
+                Ok(t) => t,
+                Err(e) => {
+                    log::warn!(
+                        "cannot evacuate client {client} off device {}: {e}",
+                        dev.0
+                    );
+                    continue;
+                }
+            };
+            if let Err(e) =
+                self.pool.note_migrated(client, &name, to, seg, est)
+            {
+                log::warn!("evacuating client {client}: {e}");
+                continue;
+            }
+            let tenant = self.tenant_of(client);
+            self.metrics.tenant(&tenant).migrations.inc();
+            self.ledger.charge_migration(&tenant);
+            log::info!(
+                "evacuated client {client} ({name:?}): device {} -> {} \
+                 ({seg} B segment)",
+                dev.0,
+                to.0
+            );
+        }
+    }
+
+    /// Pull every in-flight job recorded on `dev` out of its epoch
+    /// entry — each removed exactly once; the sick lane's eventual
+    /// completion is then discarded as stale.  Empty epoch entries are
+    /// retained so a failover can rejoin its original epoch; callers
+    /// sweep truly-settled epochs afterwards.
+    fn take_device_inflight(
+        &mut self,
+        dev: DeviceId,
+    ) -> Vec<(u64, PendingJob)> {
+        let mut out = Vec::new();
+        let epochs: Vec<u64> = self.inflight.keys().copied().collect();
+        for e in epochs {
+            let f = self.inflight.get_mut(&e).expect("key just listed");
+            let mut i = 0;
+            while i < f.jobs.len() {
+                if f.jobs[i].dev == dev {
+                    out.push((e, f.jobs.remove(i)));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Exactly-once termination for a sick device that cannot be
+    /// quarantined: every in-flight job recorded on it fails through
+    /// the single failure path, and the device's health deadlines are
+    /// cleared so the same overdue jobs never re-fire.
+    fn fail_device_inflight(&mut self, dev: DeviceId, why: &str) {
+        let victims = self.take_device_inflight(dev);
+        // Clear even with no victims: outstanding deadlines may belong
+        // to entries already settled elsewhere (RLS mid-flight), and
+        // leaving them would re-trip the overdue check every turn.
+        self.health.clear_device(dev.0);
+        if victims.is_empty() {
+            return;
+        }
+        for (_, j) in victims {
+            self.fail_job(
+                dev,
+                j.client,
+                &j.tenant,
+                j.est_ms,
+                format!("device {} unhealthy: {why}", dev.0),
+            );
+        }
+        self.sweep_settled_epochs();
+        self.wake_stp_waiters();
+        self.wake_flush_waiters();
+    }
+
+    /// Remove epochs whose last pending job was pulled by remediation.
+    /// (Completion-path settling observes the latency histogram; these
+    /// administrative settles do not — no real settle happened.)
+    fn sweep_settled_epochs(&mut self) {
+        let settled: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, f)| f.jobs.is_empty())
+            .map(|(e, _)| *e)
+            .collect();
+        for e in settled {
+            self.inflight.remove(&e);
+        }
+    }
+
     /// Plan one device's batch and hand its computes, in plan order, to
     /// that device's executor queue.  Jobs whose inputs cannot be staged
     /// fail inline; everything submitted is recorded in `pending` (the
@@ -1990,16 +2392,27 @@ impl Daemon {
         self.sync_seg_mem(*client, before, after);
         match staged {
             Ok(inputs) => {
+                // Failover copy: submission *moves* the inputs into the
+                // worker, so re-running this job off a quarantined
+                // device later needs a clone now.  Only paid when
+                // remediation is on.
+                let saved = (self.health.cfg().enabled
+                    && self.health.cfg().remediate)
+                    .then(|| inputs.clone());
                 let sub = Submission {
                     seq: self.flush_seq,
                     client: *client,
                     tenant: tenant.clone(),
                     est_ms,
-                    artifact,
+                    artifact: artifact.clone(),
                     inputs,
                 };
                 match self.executors.submit(dev, sub) {
                     Ok(()) => {
+                        if self.health.cfg().enabled {
+                            self.health
+                                .note_submitted(dev.0, Instant::now());
+                        }
                         if let Err(e) = self.table.mark_running(*client) {
                             // Unreachable (the client was Queued a
                             // moment ago); completion application
@@ -2018,6 +2431,8 @@ impl Daemon {
                             tenant,
                             est_ms,
                             dev,
+                            artifact,
+                            inputs: saved,
                         });
                     }
                     Err(e) => {

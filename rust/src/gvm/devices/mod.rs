@@ -31,4 +31,6 @@ pub mod placement;
 pub mod pool;
 
 pub use placement::PlacementPolicy;
-pub use pool::{DeviceId, DevicePool, DeviceStatus, PoolConfig, PooledDevice};
+pub use pool::{
+    DeviceId, DevicePool, DeviceState, DeviceStatus, PoolConfig, PooledDevice,
+};

@@ -18,7 +18,7 @@
 
 use std::fmt;
 
-use super::pool::{DeviceId, PooledDevice};
+use super::pool::{DeviceId, DeviceState, PooledDevice};
 use crate::gvm::qos::QosConfig;
 use crate::{Error, Result};
 
@@ -119,16 +119,27 @@ impl PickCtx<'_> {
     }
 }
 
-/// Least-loaded selection: (queued_ms, clients, id) ascending.
+/// Least-loaded selection: (queued_ms, clients, id) ascending over
+/// serving (non-quarantined) devices.  The caller guarantees at least
+/// one serving device exists.
 fn least_loaded(devices: &[PooledDevice]) -> DeviceId {
-    let mut best = 0usize;
+    let mut best: Option<usize> = None;
     for (i, d) in devices.iter().enumerate() {
-        let b = &devices[best];
-        if (d.queued_ms, d.clients) < (b.queued_ms, b.clients) {
-            best = i;
+        if d.state == DeviceState::Quarantined {
+            continue;
+        }
+        let better = match best {
+            Some(b) => {
+                (d.queued_ms, d.clients)
+                    < (devices[b].queued_ms, devices[b].clients)
+            }
+            None => true,
+        };
+        if better {
+            best = Some(i);
         }
     }
-    DeviceId(best)
+    DeviceId(best.expect("pick() rejects all-quarantined pools"))
 }
 
 /// A device's queued work with every tenant's contribution normalized by
@@ -151,16 +162,32 @@ pub(super) fn pick(
     if devices.is_empty() {
         return Err(Error::gvm("placement over an empty device pool"));
     }
+    // Quarantined devices are invisible to every policy (the health
+    // engine's fence); a fully-fenced pool is a hard error rather than
+    // a placement onto a device known to be sick.
+    if devices
+        .iter()
+        .all(|d| d.state == DeviceState::Quarantined)
+    {
+        return Err(Error::gvm("every device in the pool is quarantined"));
+    }
     match policy {
         PlacementPolicy::RoundRobin => {
-            let id = DeviceId(*ctx.rr_cursor % devices.len());
-            *ctx.rr_cursor = (*ctx.rr_cursor + 1) % devices.len();
-            Ok(id)
+            loop {
+                let id = DeviceId(*ctx.rr_cursor % devices.len());
+                *ctx.rr_cursor = (*ctx.rr_cursor + 1) % devices.len();
+                if devices[id.0].state != DeviceState::Quarantined {
+                    return Ok(id);
+                }
+            }
         }
         PlacementPolicy::LeastLoaded => Ok(least_loaded(devices)),
         PlacementPolicy::MemoryAware => {
             let mut best: Option<(u64, usize)> = None; // (free, id)
             for (i, d) in devices.iter().enumerate() {
+                if d.state == DeviceState::Quarantined {
+                    continue;
+                }
                 let free = ctx.effective_free(i, d);
                 if free >= ctx.mem_demand
                     && best.map(|(bf, _)| free > bf).unwrap_or(true)
@@ -188,7 +215,12 @@ pub(super) fn pick(
             }
         }
         PlacementPolicy::Affinity => match ctx.sticky_prev {
-            Some(id) if id.0 < devices.len() => Ok(id),
+            Some(id)
+                if id.0 < devices.len()
+                    && devices[id.0].state != DeviceState::Quarantined =>
+            {
+                Ok(id)
+            }
             _ => Ok(least_loaded(devices)),
         },
         PlacementPolicy::WeightedLeastLoaded => {
@@ -196,6 +228,9 @@ pub(super) fn pick(
             // can hold the declared segment.
             let mut best: Option<(f64, usize, usize)> = None;
             for (i, d) in devices.iter().enumerate() {
+                if d.state == DeviceState::Quarantined {
+                    continue;
+                }
                 if ctx.mem_demand > 0
                     && ctx.effective_free(i, d) < ctx.mem_demand
                 {
@@ -474,6 +509,63 @@ mod tests {
             )
             .unwrap_err();
             assert!(err.to_string().contains("headroom"), "{err}");
+        }
+    }
+
+    #[test]
+    fn every_policy_skips_quarantined_devices() {
+        let mut d = devs(3);
+        d[0].state = DeviceState::Quarantined;
+        d[2].state = DeviceState::Quarantined;
+        let qos = QosConfig::default();
+        // Round-robin wraps past the fenced devices, always landing on 1.
+        let mut cur = 0;
+        for _ in 0..4 {
+            let id =
+                pick_plain(PlacementPolicy::RoundRobin, &d, &mut cur, None, 0)
+                    .unwrap();
+            assert_eq!(id, DeviceId(1));
+        }
+        // Device 1 is the busiest but the only serving one.
+        d[1].queued_ms = 500.0;
+        d[1].tenant_queued_ms.insert("t".into(), 500.0);
+        for policy in [
+            PlacementPolicy::LeastLoaded,
+            PlacementPolicy::MemoryAware,
+            PlacementPolicy::WeightedLeastLoaded,
+        ] {
+            let mut cur = 0;
+            let id = pick_with(policy, &d, &mut cur, None, 0, &qos).unwrap();
+            assert_eq!(id, DeviceId(1), "{policy}");
+        }
+        // A sticky binding onto a quarantined device falls back.
+        let mut cur = 0;
+        let id = pick_plain(
+            PlacementPolicy::Affinity,
+            &d,
+            &mut cur,
+            Some(DeviceId(0)),
+            0,
+        )
+        .unwrap();
+        assert_eq!(id, DeviceId(1));
+        // Suspect devices still serve.
+        d[1].state = DeviceState::Suspect;
+        let id =
+            pick_plain(PlacementPolicy::LeastLoaded, &d, &mut cur, None, 0)
+                .unwrap();
+        assert_eq!(id, DeviceId(1));
+    }
+
+    #[test]
+    fn fully_quarantined_pool_is_an_error() {
+        let mut d = devs(2);
+        d[0].state = DeviceState::Quarantined;
+        d[1].state = DeviceState::Quarantined;
+        for p in PlacementPolicy::ALL {
+            let mut cur = 0;
+            let err = pick_plain(p, &d, &mut cur, None, 0).unwrap_err();
+            assert!(err.to_string().contains("quarantined"), "{p}: {err}");
         }
     }
 

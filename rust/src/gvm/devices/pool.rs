@@ -24,6 +24,51 @@ use crate::{Error, Result};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct DeviceId(pub usize);
 
+/// Health state of a pooled device, driven by [`crate::gvm::health`]:
+/// `Suspect` devices keep serving but are flagged in `DevInfo`;
+/// `Quarantined` devices are skipped by every placement policy and
+/// rejected as migration targets until an operator restarts the daemon.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DeviceState {
+    /// Serving normally.
+    #[default]
+    Healthy,
+    /// Accumulating straggler/stall strikes; still serving.
+    Suspect,
+    /// Fenced off: placement skips it, migrations refuse it.
+    Quarantined,
+}
+
+impl DeviceState {
+    /// Wire encoding (`DeviceEntry.state`).
+    pub fn as_u8(self) -> u8 {
+        match self {
+            DeviceState::Healthy => 0,
+            DeviceState::Suspect => 1,
+            DeviceState::Quarantined => 2,
+        }
+    }
+
+    /// Decode the wire byte.
+    pub fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            0 => Some(DeviceState::Healthy),
+            1 => Some(DeviceState::Suspect),
+            2 => Some(DeviceState::Quarantined),
+            _ => None,
+        }
+    }
+
+    /// Human-readable name (CLI tables).
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceState::Healthy => "healthy",
+            DeviceState::Suspect => "suspect",
+            DeviceState::Quarantined => "quarantined",
+        }
+    }
+}
+
 /// Pool construction parameters — the `[devices]` config-file section
 /// (plus the `[qos]` tenant share table).
 #[derive(Debug, Clone)]
@@ -99,6 +144,8 @@ pub struct PooledDevice {
     pub jobs_done: u64,
     /// Cumulative execution time attributed to this device (ms).
     pub busy_ms: f64,
+    /// Health state (placement skips `Quarantined` devices).
+    pub state: DeviceState,
 }
 
 impl PooledDevice {
@@ -112,6 +159,7 @@ impl PooledDevice {
             mem_used: 0,
             jobs_done: 0,
             busy_ms: 0.0,
+            state: DeviceState::Healthy,
         }
     }
 
@@ -147,6 +195,8 @@ pub struct DeviceStatus {
     pub jobs_done: u64,
     /// Cumulative execution time here (ms).
     pub busy_ms: f64,
+    /// Health state.
+    pub state: DeviceState,
 }
 
 /// The node's device pool.
@@ -237,6 +287,43 @@ impl DevicePool {
     /// Current binding of a client, if any.
     pub fn placement(&self, client: u64) -> Option<DeviceId> {
         self.bound.get(&client).copied()
+    }
+
+    /// A device's health state.
+    pub fn state(&self, id: DeviceId) -> DeviceState {
+        self.devices[id.0].state
+    }
+
+    /// Set a device's health state (the health engine's quarantine /
+    /// suspect transitions; see [`crate::gvm::health`]).
+    pub fn set_state(&mut self, id: DeviceId, state: DeviceState) {
+        self.devices[id.0].state = state;
+    }
+
+    /// Devices currently quarantined.
+    pub fn quarantined_count(&self) -> usize {
+        self.devices
+            .iter()
+            .filter(|d| d.state == DeviceState::Quarantined)
+            .count()
+    }
+
+    /// Devices NOT quarantined (suspects still serve).
+    pub fn serving_count(&self) -> usize {
+        self.devices.len() - self.quarantined_count()
+    }
+
+    /// Client ids currently bound to a device, ascending (the worklist
+    /// an evacuation walks — deterministic order for replayable chaos).
+    pub fn clients_on(&self, id: DeviceId) -> Vec<u64> {
+        let mut out: Vec<u64> = self
+            .bound
+            .iter()
+            .filter(|(_, d)| **d == id)
+            .map(|(c, _)| *c)
+            .collect();
+        out.sort_unstable();
+        out
     }
 
     /// The tenant a live client was placed under, if any.
@@ -489,6 +576,12 @@ impl DevicePool {
                 to.0
             )));
         }
+        if self.devices[to.0].state == DeviceState::Quarantined {
+            return Err(Error::gvm(format!(
+                "migration target device {} is quarantined",
+                to.0
+            )));
+        }
         // The capacity invariant MemoryAware/WeightedLeastLoaded enforce
         // at placement must survive migration: never overcommit the
         // target's segment memory.
@@ -549,6 +642,7 @@ impl DevicePool {
                 queued_ms: d.queued_ms,
                 jobs_done: d.jobs_done,
                 busy_ms: d.busy_ms,
+                state: d.state,
             })
             .collect()
     }
@@ -818,6 +912,50 @@ mod tests {
         p.release(1).unwrap();
         // A re-registering rank follows the migration, not the old home.
         assert_eq!(p.place(2, "rank0", 0).unwrap(), to);
+    }
+
+    #[test]
+    fn quarantine_state_tracks_and_blocks_migration_targets() {
+        let mut p = pool(2, PlacementPolicy::RoundRobin);
+        assert_eq!(p.state(DeviceId(0)), DeviceState::Healthy);
+        assert_eq!(p.quarantined_count(), 0);
+        assert_eq!(p.serving_count(), 2);
+        let from = p.place(1, "r0", 0).unwrap();
+        let to = DeviceId(1 - from.0);
+        p.set_state(to, DeviceState::Quarantined);
+        assert_eq!(p.quarantined_count(), 1);
+        assert_eq!(p.serving_count(), 1);
+        let err = p.note_migrated(1, "r0", to, 0, 0.0).unwrap_err();
+        assert!(err.to_string().contains("quarantined"), "{err}");
+        assert_eq!(p.placement(1), Some(from), "binding untouched");
+        // Status snapshots carry the state end-to-end.
+        let st = p.status();
+        assert_eq!(st[to.0].state, DeviceState::Quarantined);
+        assert_eq!(st[from.0].state, DeviceState::Healthy);
+    }
+
+    #[test]
+    fn clients_on_lists_bindings_in_order() {
+        let mut p = pool(2, PlacementPolicy::RoundRobin);
+        let a = p.place(5, "a", 0).unwrap();
+        let _ = p.place(3, "b", 0).unwrap();
+        let c = p.place(9, "c", 0).unwrap();
+        assert_eq!(c, a, "round-robin wraps");
+        assert_eq!(p.clients_on(a), vec![5, 9]);
+        p.release(5).unwrap();
+        assert_eq!(p.clients_on(a), vec![9]);
+    }
+
+    #[test]
+    fn device_state_wire_bytes_roundtrip() {
+        for s in [
+            DeviceState::Healthy,
+            DeviceState::Suspect,
+            DeviceState::Quarantined,
+        ] {
+            assert_eq!(DeviceState::from_u8(s.as_u8()), Some(s));
+        }
+        assert_eq!(DeviceState::from_u8(3), None);
     }
 
     #[test]

@@ -35,6 +35,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::devices::{DeviceId, DevicePool};
+use super::faults::{FaultAction, FaultPlan};
 use super::qos::DEFAULT_TENANT;
 use super::vgpu::ClientId;
 use crate::metrics::registry::{Counter, Gauge, Registry};
@@ -112,6 +113,20 @@ pub struct ExecutorPool {
 impl ExecutorPool {
     /// Spawn one worker per handle.  Errors on an empty handle list.
     pub fn new(handles: Vec<ExecHandle>) -> Result<Self> {
+        Self::with_faults(handles, None)
+    }
+
+    /// [`ExecutorPool::new`] with a shared fault-injection plan: each
+    /// worker consults the plan after executing a job and may delay its
+    /// completion (stall/straggler), replace it with a failure
+    /// (corrupt), or drop it entirely (executor death — the in-flight
+    /// counter still decrements, so [`ExecutorPool::drain`] never
+    /// wedges on a dead lane; only the *report* goes missing, exactly
+    /// like a worker that stopped talking).
+    pub fn with_faults(
+        handles: Vec<ExecHandle>,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Result<Self> {
         if handles.is_empty() {
             return Err(Error::gvm("executor pool needs at least one device"));
         }
@@ -122,17 +137,39 @@ impl ExecutorPool {
             let inflight = Arc::new(AtomicUsize::new(0));
             let worker_inflight = inflight.clone();
             let worker_tx = completion_tx.clone();
+            let plan = faults.clone();
             let device = DeviceId(i);
             let join = std::thread::Builder::new()
                 .name(format!("vgpu-exec-{i}"))
                 .spawn(move || {
                     while let Ok(sub) = rx.recv() {
                         let t0 = Instant::now();
-                        let outcome = exec
-                            .execute(&sub.artifact, sub.inputs)
-                            .map(|outs| {
+                        let result = exec.execute(&sub.artifact, sub.inputs);
+                        let action = plan
+                            .as_ref()
+                            .map(|p| p.decide(device.0))
+                            .unwrap_or(FaultAction::None);
+                        if let FaultAction::Stall { factor }
+                        | FaultAction::Straggle { factor } = action
+                        {
+                            let extra =
+                                t0.elapsed().mul_f64((factor - 1.0).max(0.0));
+                            std::thread::sleep(extra);
+                        }
+                        let outcome = match action {
+                            FaultAction::Corrupt => Err(Error::gvm(format!(
+                                "injected fault: corrupted completion \
+                                 on device {}",
+                                device.0
+                            ))),
+                            _ => result.map(|outs| {
                                 (outs, t0.elapsed().as_secs_f64() * 1e3)
-                            });
+                            }),
+                        };
+                        worker_inflight.fetch_sub(1, Ordering::SeqCst);
+                        if matches!(action, FaultAction::Die) {
+                            continue; // dead lane: ran, never reports
+                        }
                         let done = Completion {
                             seq: sub.seq,
                             device,
@@ -141,7 +178,6 @@ impl ExecutorPool {
                             est_ms: sub.est_ms,
                             outcome,
                         };
-                        worker_inflight.fetch_sub(1, Ordering::SeqCst);
                         if worker_tx.send(done).is_err() {
                             break; // pool gone; nobody to report to
                         }
@@ -684,6 +720,83 @@ mod tests {
             ..MigrationConfig::default()
         });
         assert!(off.plan(&pool, &[(1, 100.0, 0)]).is_empty());
+    }
+
+    fn scripted_plan(
+        n_devices: usize,
+        script: &[(usize, u64, FaultAction)],
+    ) -> Arc<FaultPlan> {
+        let mut plan =
+            FaultPlan::new(crate::gvm::faults::FaultConfig::default(), n_devices)
+                .unwrap();
+        for &(dev, idx, action) in script {
+            plan.script(dev, idx, action);
+        }
+        Arc::new(plan)
+    }
+
+    #[test]
+    fn injected_corruption_fails_exactly_that_job() {
+        let plan = scripted_plan(1, &[(0, 1, FaultAction::Corrupt)]);
+        let pool =
+            ExecutorPool::with_faults(vec![sleepy_handle(0)], Some(plan.clone()))
+                .unwrap();
+        for i in 0..3u64 {
+            pool.submit(DeviceId(0), sub(i)).unwrap();
+        }
+        for want in 0..3u64 {
+            let c = pool.recv_completion(Duration::from_secs(5)).unwrap();
+            assert_eq!(c.client, want);
+            if want == 1 {
+                let err = c.outcome.unwrap_err().to_string();
+                assert!(err.contains("injected"), "{err}");
+            } else {
+                assert!(c.outcome.is_ok(), "job {want} should survive");
+            }
+        }
+        assert_eq!(plan.corrupted_jobs(), 1);
+    }
+
+    #[test]
+    fn executor_death_drops_reports_but_never_wedges_drain() {
+        let plan = scripted_plan(2, &[(0, 0, FaultAction::Die)]);
+        let pool = ExecutorPool::with_faults(
+            vec![sleepy_handle(0), sleepy_handle(0)],
+            Some(plan.clone()),
+        )
+        .unwrap();
+        pool.submit(DeviceId(0), sub(1)).unwrap();
+        pool.submit(DeviceId(0), sub(2)).unwrap(); // sticky: also dropped
+        pool.submit(DeviceId(1), sub(3)).unwrap();
+        // The dead lane still retires its in-flight counter.
+        pool.drain(DeviceId(0), Duration::from_secs(5)).unwrap();
+        pool.drain(DeviceId(1), Duration::from_secs(5)).unwrap();
+        // Only the healthy device's completion ever arrives.
+        let c = pool.recv_completion(Duration::from_secs(5)).unwrap();
+        assert_eq!(c.client, 3);
+        assert_eq!(c.device, DeviceId(1));
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(pool.try_recv_completion().unwrap().is_none());
+        assert_eq!(plan.dropped_completions(), 2);
+    }
+
+    #[test]
+    fn stragglers_stretch_the_reported_latency() {
+        let plan =
+            scripted_plan(1, &[(0, 0, FaultAction::Straggle { factor: 5.0 })]);
+        let pool =
+            ExecutorPool::with_faults(vec![sleepy_handle(20)], Some(plan))
+                .unwrap();
+        let t0 = Instant::now();
+        pool.submit(DeviceId(0), sub(1)).unwrap();
+        let c = pool.recv_completion(Duration::from_secs(5)).unwrap();
+        let (_, gpu_ms) = c.outcome.unwrap();
+        assert!(
+            t0.elapsed() >= Duration::from_millis(60),
+            "factor 5 on a 20ms job should take >= 100ms, took {:?}",
+            t0.elapsed()
+        );
+        assert!(gpu_ms >= 60.0, "reported latency includes the tail: {gpu_ms}");
     }
 
     #[test]

@@ -1,0 +1,391 @@
+//! Deterministic fault injection for the device-executor plane.
+//!
+//! A [`FaultPlan`] decides, per (device, job) pair, whether that job's
+//! completion is delayed (device **stall** — sticky, every later job on
+//! the device stalls too), silently dropped (executor **death** —
+//! sticky, the worker "stops reporting"), delayed once (**straggler**
+//! tail), or reported as failed (**corrupt** completion).  Decisions
+//! are pure functions of the `[faults]` seed and the per-device job
+//! index, so a chaos run replays bit-for-bit; the testkit can also
+//! [`FaultPlan::script`] exact `(device, job) -> action` schedules
+//! before the plan is shared with the workers.
+//!
+//! The same [`FaultConfig::roll`] drives the closed-form
+//! [`super::sim_backend::simulate_pool_chaos`] model, so the sweep in
+//! `vgpu exp chaos` and the live executor wiring inject from one
+//! distribution.  Detection and remediation live in [`super::health`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use crate::util::rng::SplitMix64;
+use crate::{Error, Result};
+
+/// What the injector does to one job's completion.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// No fault: the completion flows untouched.
+    None,
+    /// Device stall: the completion is delayed `factor`× the job's
+    /// execution time.  Sticky — the device stays stalled.
+    Stall {
+        /// Latency multiplier (>= 1).
+        factor: f64,
+    },
+    /// Executor death: the completion is silently dropped.  Sticky —
+    /// every later job on the device is dropped too.
+    Die,
+    /// Straggler: this one job's completion is delayed `factor`×.
+    Straggle {
+        /// Latency multiplier (>= 1).
+        factor: f64,
+    },
+    /// Corrupted completion: the job reports failure instead of data.
+    Corrupt,
+}
+
+/// The `[faults]` config section: per-job injection probabilities and
+/// latency factors.  Defaults are all-zero rates with injection off —
+/// a production daemon never pays for this plane unless asked to.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Master switch; `false` means [`FaultConfig::roll`] never fires.
+    pub enabled: bool,
+    /// Seed for the per-(device, job) decision hash.
+    pub seed: u64,
+    /// Per-job probability that the device enters a sticky stall.
+    pub stall_rate: f64,
+    /// Latency multiplier applied to every job on a stalled device.
+    pub stall_factor: f64,
+    /// Per-job probability that the device's executor dies (sticky).
+    pub death_rate: f64,
+    /// Per-job probability of a one-off straggler tail.
+    pub straggler_rate: f64,
+    /// Latency multiplier for straggler jobs.
+    pub straggler_factor: f64,
+    /// Per-job probability of a corrupted (failed) completion.
+    pub corrupt_rate: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            seed: 0x0FA17,
+            stall_rate: 0.0,
+            stall_factor: 10.0,
+            death_rate: 0.0,
+            straggler_rate: 0.0,
+            straggler_factor: 4.0,
+            corrupt_rate: 0.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Reject rates outside `[0, 1]` and factors below 1 (or non-finite
+    /// values) with a config-style error.
+    pub fn validate(&self) -> Result<()> {
+        for (key, v) in [
+            ("stall_rate", self.stall_rate),
+            ("death_rate", self.death_rate),
+            ("straggler_rate", self.straggler_rate),
+            ("corrupt_rate", self.corrupt_rate),
+        ] {
+            if !v.is_finite() || !(0.0..=1.0).contains(&v) {
+                return Err(Error::Config(format!(
+                    "[faults] {key} = {v} must be in [0, 1]"
+                )));
+            }
+        }
+        for (key, v) in [
+            ("stall_factor", self.stall_factor),
+            ("straggler_factor", self.straggler_factor),
+        ] {
+            if !v.is_finite() || v < 1.0 {
+                return Err(Error::Config(format!(
+                    "[faults] {key} = {v} must be >= 1"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Pure fault decision for job number `job_idx` on `device` —
+    /// depends only on the seed, so the executor plan and the
+    /// `simulate_pool_chaos` model draw from one distribution.
+    /// Stickiness (stall/death persistence) is the caller's state.
+    pub fn roll(&self, device: usize, job_idx: u64) -> FaultAction {
+        if !self.enabled {
+            return FaultAction::None;
+        }
+        let mut r = SplitMix64::new(self.seed ^ mix(device as u64, job_idx));
+        // Fixed draw order keeps each kind's marginal rate independent
+        // of the others being zero or not.
+        if r.chance(self.stall_rate) {
+            return FaultAction::Stall {
+                factor: self.stall_factor,
+            };
+        }
+        if r.chance(self.death_rate) {
+            return FaultAction::Die;
+        }
+        if r.chance(self.corrupt_rate) {
+            return FaultAction::Corrupt;
+        }
+        if r.chance(self.straggler_rate) {
+            return FaultAction::Straggle {
+                factor: self.straggler_factor,
+            };
+        }
+        FaultAction::None
+    }
+}
+
+/// Avalanche a (device, job) pair into one seed perturbation.
+fn mix(device: u64, job_idx: u64) -> u64 {
+    device
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(job_idx.wrapping_mul(0xBF58_476D_1CE4_E5B9))
+}
+
+/// Shared fault schedule consulted by every [`super::exec`] worker:
+/// the seeded [`FaultConfig`] distribution plus exact scripted
+/// overrides, with sticky per-device stall/death state.
+#[derive(Debug)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    /// Exact `(device, job_idx) -> action` overrides from the testkit.
+    scripted: HashMap<(usize, u64), FaultAction>,
+    /// Per-device monotone job index (the worker is serial per device,
+    /// so this numbers jobs in execution order).
+    next_idx: Vec<AtomicU64>,
+    stalled: Vec<AtomicBool>,
+    dead: Vec<AtomicBool>,
+    /// Injected-fault tallies: [stalled jobs, dropped, stragglers,
+    /// corrupted].
+    injected: [AtomicU64; 4],
+}
+
+impl FaultPlan {
+    /// New plan over `n_devices` executor lanes.
+    pub fn new(cfg: FaultConfig, n_devices: usize) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Self {
+            cfg,
+            scripted: HashMap::new(),
+            next_idx: (0..n_devices).map(|_| AtomicU64::new(0)).collect(),
+            stalled: (0..n_devices).map(|_| AtomicBool::new(false)).collect(),
+            dead: (0..n_devices).map(|_| AtomicBool::new(false)).collect(),
+            injected: Default::default(),
+        })
+    }
+
+    /// Script an exact action for the `job_idx`-th job executed on
+    /// `device` (overrides the seeded roll for that one job).  Call
+    /// before sharing the plan with the executor pool.
+    pub fn script(&mut self, device: usize, job_idx: u64, action: FaultAction) {
+        self.scripted.insert((device, job_idx), action);
+    }
+
+    /// Number of executor lanes the plan covers.
+    pub fn devices(&self) -> usize {
+        self.next_idx.len()
+    }
+
+    /// Decide the fault action for the next job on `device`, advancing
+    /// that device's job index and sticky state.
+    pub fn decide(&self, device: usize) -> FaultAction {
+        if device >= self.next_idx.len() {
+            return FaultAction::None;
+        }
+        let idx = self.next_idx[device].fetch_add(1, Ordering::SeqCst);
+        // Sticky death first: a dead worker never reports again.
+        if self.dead[device].load(Ordering::SeqCst) {
+            self.injected[1].fetch_add(1, Ordering::Relaxed);
+            return FaultAction::Die;
+        }
+        let mut action = self
+            .scripted
+            .get(&(device, idx))
+            .copied()
+            .unwrap_or_else(|| self.cfg.roll(device, idx));
+        // A stalled device delays every job that would otherwise pass.
+        if self.stalled[device].load(Ordering::SeqCst)
+            && matches!(action, FaultAction::None | FaultAction::Straggle { .. })
+        {
+            action = FaultAction::Stall {
+                factor: self.cfg.stall_factor,
+            };
+        }
+        match action {
+            FaultAction::None => {}
+            FaultAction::Stall { .. } => {
+                self.stalled[device].store(true, Ordering::SeqCst);
+                self.injected[0].fetch_add(1, Ordering::Relaxed);
+            }
+            FaultAction::Die => {
+                self.dead[device].store(true, Ordering::SeqCst);
+                self.injected[1].fetch_add(1, Ordering::Relaxed);
+            }
+            FaultAction::Straggle { .. } => {
+                self.injected[2].fetch_add(1, Ordering::Relaxed);
+            }
+            FaultAction::Corrupt => {
+                self.injected[3].fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        action
+    }
+
+    /// Jobs delayed by a device stall so far.
+    pub fn stalled_jobs(&self) -> u64 {
+        self.injected[0].load(Ordering::Relaxed)
+    }
+
+    /// Completions silently dropped so far.
+    pub fn dropped_completions(&self) -> u64 {
+        self.injected[1].load(Ordering::Relaxed)
+    }
+
+    /// One-off straggler jobs so far.
+    pub fn straggler_jobs(&self) -> u64 {
+        self.injected[2].load(Ordering::Relaxed)
+    }
+
+    /// Corrupted (failed) completions so far.
+    pub fn corrupted_jobs(&self) -> u64 {
+        self.injected[3].load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chaotic() -> FaultConfig {
+        FaultConfig {
+            enabled: true,
+            seed: 0xC0FFEE,
+            stall_rate: 0.05,
+            death_rate: 0.05,
+            straggler_rate: 0.1,
+            corrupt_rate: 0.1,
+            ..FaultConfig::default()
+        }
+    }
+
+    #[test]
+    fn disabled_config_never_fires() {
+        let cfg = FaultConfig {
+            stall_rate: 1.0,
+            death_rate: 1.0,
+            ..FaultConfig::default()
+        };
+        let plan = FaultPlan::new(cfg, 2).unwrap();
+        for _ in 0..100 {
+            assert_eq!(plan.decide(0), FaultAction::None);
+        }
+        assert_eq!(plan.stalled_jobs() + plan.dropped_completions(), 0);
+    }
+
+    #[test]
+    fn same_seed_replays_identically() {
+        let a = FaultPlan::new(chaotic(), 4).unwrap();
+        let b = FaultPlan::new(chaotic(), 4).unwrap();
+        for dev in 0..4 {
+            for _ in 0..200 {
+                assert_eq!(a.decide(dev), b.decide(dev));
+            }
+        }
+    }
+
+    #[test]
+    fn devices_draw_distinct_streams() {
+        let cfg = FaultConfig {
+            enabled: true,
+            straggler_rate: 0.5,
+            ..FaultConfig::default()
+        };
+        let plan = FaultPlan::new(cfg, 2).unwrap();
+        let seq: Vec<Vec<FaultAction>> = (0..2)
+            .map(|d| (0..64).map(|_| plan.decide(d)).collect())
+            .collect();
+        assert_ne!(seq[0], seq[1], "device streams should decorrelate");
+    }
+
+    #[test]
+    fn death_is_sticky() {
+        let mut plan = FaultPlan::new(FaultConfig::default(), 2).unwrap();
+        plan.script(0, 3, FaultAction::Die);
+        for idx in 0..3 {
+            assert_eq!(plan.decide(0), FaultAction::None, "job {idx}");
+        }
+        for _ in 3..10 {
+            assert_eq!(plan.decide(0), FaultAction::Die);
+        }
+        // The other device is untouched.
+        assert_eq!(plan.decide(1), FaultAction::None);
+        assert_eq!(plan.dropped_completions(), 7);
+    }
+
+    #[test]
+    fn stall_is_sticky_but_lets_corruption_through() {
+        let mut plan = FaultPlan::new(FaultConfig::default(), 1).unwrap();
+        plan.script(0, 0, FaultAction::Stall { factor: 10.0 });
+        plan.script(0, 2, FaultAction::Corrupt);
+        assert_eq!(plan.decide(0), FaultAction::Stall { factor: 10.0 });
+        assert_eq!(plan.decide(0), FaultAction::Stall { factor: 10.0 });
+        assert_eq!(plan.decide(0), FaultAction::Corrupt);
+        assert_eq!(plan.decide(0), FaultAction::Stall { factor: 10.0 });
+        assert_eq!(plan.stalled_jobs(), 3);
+        assert_eq!(plan.corrupted_jobs(), 1);
+    }
+
+    #[test]
+    fn scripted_schedule_hits_exact_jobs() {
+        let mut plan = FaultPlan::new(FaultConfig::default(), 1).unwrap();
+        plan.script(0, 1, FaultAction::Straggle { factor: 4.0 });
+        assert_eq!(plan.decide(0), FaultAction::None);
+        assert_eq!(plan.decide(0), FaultAction::Straggle { factor: 4.0 });
+        assert_eq!(plan.decide(0), FaultAction::None);
+        assert_eq!(plan.straggler_jobs(), 1);
+    }
+
+    #[test]
+    fn roll_rates_land_near_nominal() {
+        let cfg = FaultConfig {
+            enabled: true,
+            corrupt_rate: 0.2,
+            ..FaultConfig::default()
+        };
+        let n = 10_000u64;
+        let hits = (0..n)
+            .filter(|i| cfg.roll(0, *i) == FaultAction::Corrupt)
+            .count() as f64;
+        let rate = hits / n as f64;
+        assert!((rate - 0.2).abs() < 0.02, "corrupt rate {rate}");
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        for (patch, _) in [
+            (FaultConfig { stall_rate: -0.1, ..chaotic() }, "neg rate"),
+            (FaultConfig { death_rate: 1.5, ..chaotic() }, "rate > 1"),
+            (FaultConfig { corrupt_rate: f64::NAN, ..chaotic() }, "nan"),
+            (FaultConfig { stall_factor: 0.5, ..chaotic() }, "factor < 1"),
+            (
+                FaultConfig { straggler_factor: f64::INFINITY, ..chaotic() },
+                "inf factor",
+            ),
+        ] {
+            assert!(FaultPlan::new(patch, 1).is_err(), "{patch:?}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_device_is_inert() {
+        let plan = FaultPlan::new(chaotic(), 1).unwrap();
+        assert_eq!(plan.decide(7), FaultAction::None);
+    }
+}

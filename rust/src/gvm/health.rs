@@ -1,0 +1,465 @@
+//! Health engine: straggler/stall detection and self-healing state.
+//!
+//! The engine lives inside the daemon event loop and consumes the SAME
+//! [`super::exec::Completion`] stream the accounting paths read — it is
+//! a *view* over completion latencies, never a parallel counter set.
+//! Per device it keeps a completion-latency EWMA, a straggler strike
+//! count, and the FIFO of outstanding submission times (each executor
+//! worker is serial, so completions retire submissions in order).
+//!
+//! Detection (`[health]` thresholds):
+//! * **straggler strike** — a completion slower than
+//!   `straggler_factor` × the device's latency EWMA; healthy
+//!   completions decay strikes, so isolated tails are forgiven.
+//! * **suspect** — `suspect_strikes` consecutive-ish strikes; surfaced
+//!   in `DevInfo` but the device keeps serving.
+//! * **quarantine candidate** — 2×`suspect_strikes` strikes, or the
+//!   oldest outstanding submission missing its `heartbeat_timeout_ms`
+//!   deadline (a stalled or dead executor stops reporting entirely —
+//!   EWMAs can't see that, deadlines can).
+//!
+//! Remediation is the daemon's job ([`super::daemon`]): quarantine the
+//! device in the pool (placement skips it), evacuate its VGPUs via the
+//! migration rebind path, and fail over unfinished epoch jobs with
+//! exactly-once accounting.  [`HealthMetrics`] publishes the engine's
+//! counters through the shared [`crate::metrics::Registry`], so
+//! `vgpu health`, `vgpu stats`, and a Prometheus scrape can never
+//! disagree.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::metrics::registry::{Counter, Gauge, Registry};
+use crate::{Error, Result};
+
+/// The `[health]` config section: detection thresholds + remediation
+/// switches.  Defaults keep the whole plane off (zero daemon overhead).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthConfig {
+    /// Master switch for detection (and the per-turn health tick).
+    pub enabled: bool,
+    /// Remediate automatically (quarantine + evacuate + fail over);
+    /// `false` = detect-and-report only (devices reach `Suspect`).
+    pub remediate: bool,
+    /// EWMA smoothing factor in `(0, 1]` (higher = more reactive).
+    pub ewma_alpha: f64,
+    /// A completion slower than this multiple of the EWMA is a strike.
+    pub straggler_factor: f64,
+    /// Oldest-outstanding-completion deadline; missing it makes the
+    /// device an immediate quarantine candidate.
+    pub heartbeat_timeout: Duration,
+    /// Strikes to turn `Suspect`; 2× this quarantines.
+    pub suspect_strikes: u32,
+    /// Cap on concurrently quarantined devices (the last serving
+    /// device is never quarantined regardless).
+    pub max_quarantined: usize,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            remediate: true,
+            ewma_alpha: 0.2,
+            straggler_factor: 4.0,
+            heartbeat_timeout: Duration::from_millis(2000),
+            suspect_strikes: 3,
+            max_quarantined: 1,
+        }
+    }
+}
+
+impl HealthConfig {
+    /// Reject out-of-range thresholds with a config-style error.
+    pub fn validate(&self) -> Result<()> {
+        if !self.ewma_alpha.is_finite()
+            || self.ewma_alpha <= 0.0
+            || self.ewma_alpha > 1.0
+        {
+            return Err(Error::Config(format!(
+                "[health] ewma_alpha = {} must be in (0, 1]",
+                self.ewma_alpha
+            )));
+        }
+        if !self.straggler_factor.is_finite() || self.straggler_factor < 1.0 {
+            return Err(Error::Config(format!(
+                "[health] straggler_factor = {} must be >= 1",
+                self.straggler_factor
+            )));
+        }
+        if self.heartbeat_timeout.is_zero() {
+            return Err(Error::Config(
+                "[health] heartbeat_timeout_ms must be > 0".into(),
+            ));
+        }
+        if self.suspect_strikes == 0 {
+            return Err(Error::Config(
+                "[health] suspect_strikes must be >= 1".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Per-device detection state.
+#[derive(Debug, Default)]
+struct DeviceHealth {
+    /// Completion-latency EWMA (ms); `None` until the first sample.
+    ewma_ms: Option<f64>,
+    /// Straggler strikes (healthy completions decay them).
+    strikes: u32,
+    /// Submission times of jobs whose completion is still outstanding,
+    /// oldest first (per-device executors are serial FIFO lanes).
+    outstanding: VecDeque<Instant>,
+}
+
+/// One device's health view for `vgpu health` / the wire reply.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceHealthView {
+    /// Completion-latency EWMA (ms); 0 until the first sample.
+    pub ewma_ms: f64,
+    /// Current straggler strikes.
+    pub strikes: u32,
+    /// Jobs submitted but not yet completed.
+    pub outstanding: u32,
+}
+
+/// The detection engine: per-device EWMAs, strikes, and heartbeat
+/// deadlines over the daemon's completion event stream.
+#[derive(Debug)]
+pub struct HealthEngine {
+    cfg: HealthConfig,
+    devices: Vec<DeviceHealth>,
+}
+
+impl HealthEngine {
+    /// New engine over `n_devices` executor lanes.
+    pub fn new(cfg: HealthConfig, n_devices: usize) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Self {
+            cfg,
+            devices: (0..n_devices).map(|_| DeviceHealth::default()).collect(),
+        })
+    }
+
+    /// The thresholds this engine runs under.
+    pub fn cfg(&self) -> &HealthConfig {
+        &self.cfg
+    }
+
+    /// Record a job submission to `dev` at `now` (starts its heartbeat
+    /// deadline).
+    pub fn note_submitted(&mut self, dev: usize, now: Instant) {
+        if let Some(d) = self.devices.get_mut(dev) {
+            d.outstanding.push_back(now);
+        }
+    }
+
+    /// Record a completion from `dev` with the given latency.  Retires
+    /// the oldest outstanding deadline, folds the latency into the
+    /// EWMA, and returns `true` when the completion was a straggler
+    /// strike.
+    pub fn note_completion(&mut self, dev: usize, latency_ms: f64) -> bool {
+        let Some(d) = self.devices.get_mut(dev) else {
+            return false;
+        };
+        // A completion can race a quarantine that already cleared the
+        // queue — popping an empty FIFO must be inert.
+        d.outstanding.pop_front();
+        let latency = latency_ms.max(0.0);
+        let strike = match d.ewma_ms {
+            // Compare against the pre-update EWMA so one slow job
+            // cannot hide inside the average it just inflated.  A floor
+            // keeps microsecond-scale mock latencies from striking on
+            // scheduler noise.
+            Some(ewma) => latency > (self.cfg.straggler_factor * ewma).max(1.0),
+            None => false,
+        };
+        let a = self.cfg.ewma_alpha;
+        d.ewma_ms = Some(match d.ewma_ms {
+            Some(ewma) => (1.0 - a) * ewma + a * latency,
+            None => latency,
+        });
+        if strike {
+            d.strikes += 1;
+        } else {
+            d.strikes = d.strikes.saturating_sub(1);
+        }
+        strike
+    }
+
+    /// Devices whose oldest outstanding completion has missed the
+    /// heartbeat deadline at `now`.
+    pub fn overdue_devices(&self, now: Instant) -> Vec<usize> {
+        self.devices
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| {
+                d.outstanding
+                    .front()
+                    .is_some_and(|t| now.duration_since(*t) >= self.cfg.heartbeat_timeout)
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// `Suspect` threshold reached (surfaced in `DevInfo`, still
+    /// serving).
+    pub fn is_suspect(&self, dev: usize) -> bool {
+        self.strikes(dev) >= self.cfg.suspect_strikes
+    }
+
+    /// Quarantine threshold reached by strikes alone (heartbeat misses
+    /// are checked separately via [`HealthEngine::overdue_devices`]).
+    pub fn wants_quarantine(&self, dev: usize) -> bool {
+        self.strikes(dev) >= 2 * self.cfg.suspect_strikes
+    }
+
+    /// Current strike count for a device.
+    pub fn strikes(&self, dev: usize) -> u32 {
+        self.devices.get(dev).map_or(0, |d| d.strikes)
+    }
+
+    /// The earliest heartbeat deadline across devices with outstanding
+    /// work — the event loop folds this into its select timeout so a
+    /// stalled device is detected promptly, not at the next event.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.devices
+            .iter()
+            .filter_map(|d| d.outstanding.front())
+            .min()
+            .map(|t| *t + self.cfg.heartbeat_timeout)
+    }
+
+    /// Drop a device's outstanding deadlines and strikes — called when
+    /// it is quarantined (its unfinished jobs are failed over or failed;
+    /// either way no further completion is expected from this lane).
+    pub fn clear_device(&mut self, dev: usize) {
+        if let Some(d) = self.devices.get_mut(dev) {
+            d.outstanding.clear();
+            d.strikes = 0;
+        }
+    }
+
+    /// A device's health view (EWMA, strikes, outstanding count).
+    pub fn view(&self, dev: usize) -> DeviceHealthView {
+        let d = &self.devices[dev];
+        DeviceHealthView {
+            ewma_ms: d.ewma_ms.unwrap_or(0.0),
+            strikes: d.strikes,
+            outstanding: d.outstanding.len() as u32,
+        }
+    }
+
+    /// Lanes tracked.
+    pub fn devices(&self) -> usize {
+        self.devices.len()
+    }
+}
+
+/// Health counters published through the shared registry (the same
+/// series `vgpu health` and a `/metrics` scrape read).
+#[derive(Debug, Clone)]
+pub struct HealthMetrics {
+    /// Straggler strikes recorded.
+    pub strikes: Counter,
+    /// Devices quarantined.
+    pub quarantines: Counter,
+    /// Epochs that had unfinished jobs failed over.
+    pub failovers: Counter,
+    /// Jobs resubmitted to a healthy device by failover.
+    pub resubmitted: Counter,
+    /// Devices currently quarantined.
+    pub quarantined: Gauge,
+}
+
+impl HealthMetrics {
+    /// Register (or re-resolve) the health series on a registry.
+    pub fn new(registry: &Registry) -> Self {
+        Self {
+            strikes: registry.counter(
+                "vgpu_health_strikes_total",
+                "Straggler strikes recorded by the health engine",
+            ),
+            quarantines: registry.counter(
+                "vgpu_health_quarantines_total",
+                "Devices quarantined by the health engine",
+            ),
+            failovers: registry.counter(
+                "vgpu_health_failovers_total",
+                "Epochs with unfinished jobs failed over off a \
+                 quarantined device",
+            ),
+            resubmitted: registry.counter(
+                "vgpu_health_resubmitted_jobs_total",
+                "Jobs resubmitted to a healthy device by epoch failover",
+            ),
+            quarantined: registry.gauge(
+                "vgpu_health_quarantined_devices",
+                "Devices currently quarantined",
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(n: usize) -> HealthEngine {
+        HealthEngine::new(
+            HealthConfig {
+                enabled: true,
+                ..HealthConfig::default()
+            },
+            n,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn ewma_converges_and_stragglers_strike() {
+        let mut e = engine(2);
+        for _ in 0..50 {
+            assert!(!e.note_completion(0, 10.0), "steady state: no strike");
+        }
+        let v = e.view(0);
+        assert!((v.ewma_ms - 10.0).abs() < 1e-6, "{v:?}");
+        // 4x the EWMA (default factor) is the boundary; 5x strikes.
+        assert!(e.note_completion(0, 50.0));
+        assert_eq!(e.strikes(0), 1);
+        assert_eq!(e.strikes(1), 0, "other device untouched");
+    }
+
+    #[test]
+    fn healthy_completions_decay_strikes() {
+        let mut e = engine(1);
+        for _ in 0..20 {
+            e.note_completion(0, 10.0);
+        }
+        assert!(e.note_completion(0, 100.0));
+        assert!(e.note_completion(0, 100.0));
+        assert!(e.strikes(0) >= 2);
+        // Strikes drain as the device behaves again (the EWMA recovers
+        // quickly at alpha 0.2 once healthy samples dominate).
+        for _ in 0..30 {
+            e.note_completion(0, 10.0);
+        }
+        assert_eq!(e.strikes(0), 0);
+        assert!(!e.is_suspect(0));
+    }
+
+    #[test]
+    fn suspect_and_quarantine_thresholds() {
+        let mut e = engine(1);
+        e.note_completion(0, 10.0); // establish the EWMA
+        let mut fed = 0;
+        while !e.is_suspect(0) {
+            // Keep each sample a strike relative to the running EWMA.
+            let v = e.view(0);
+            e.note_completion(0, v.ewma_ms * 10.0 + 10.0);
+            fed += 1;
+            assert!(fed < 100, "suspect threshold never reached");
+        }
+        assert!(!e.wants_quarantine(0), "suspect first, quarantine later");
+        while !e.wants_quarantine(0) {
+            let v = e.view(0);
+            e.note_completion(0, v.ewma_ms * 10.0 + 10.0);
+            fed += 1;
+            assert!(fed < 100, "quarantine threshold never reached");
+        }
+        assert_eq!(e.strikes(0), 2 * e.cfg().suspect_strikes);
+    }
+
+    #[test]
+    fn first_sample_never_strikes() {
+        let mut e = engine(1);
+        assert!(!e.note_completion(0, 1e9));
+    }
+
+    #[test]
+    fn heartbeat_deadline_detects_silent_devices() {
+        let cfg = HealthConfig {
+            enabled: true,
+            heartbeat_timeout: Duration::from_millis(50),
+            ..HealthConfig::default()
+        };
+        let mut e = HealthEngine::new(cfg, 2).unwrap();
+        let t0 = Instant::now();
+        e.note_submitted(0, t0);
+        e.note_submitted(1, t0);
+        assert!(e.overdue_devices(t0).is_empty());
+        assert_eq!(
+            e.next_deadline(),
+            Some(t0 + Duration::from_millis(50)),
+            "event loop wakes at the earliest deadline"
+        );
+        // Device 1 completes; device 0 stays silent past the deadline.
+        e.note_completion(1, 1.0);
+        let late = t0 + Duration::from_millis(60);
+        assert_eq!(e.overdue_devices(late), vec![0]);
+        // Quarantining clears the lane: no repeated detection.
+        e.clear_device(0);
+        assert!(e.overdue_devices(late).is_empty());
+        assert_eq!(e.next_deadline(), None);
+        assert_eq!(e.view(0).outstanding, 0);
+    }
+
+    #[test]
+    fn outstanding_fifo_retires_oldest_first() {
+        let mut e = engine(1);
+        let t0 = Instant::now();
+        e.note_submitted(0, t0);
+        e.note_submitted(0, t0 + Duration::from_millis(10));
+        assert_eq!(e.view(0).outstanding, 2);
+        e.note_completion(0, 1.0);
+        assert_eq!(e.view(0).outstanding, 1);
+        // Popping beyond the queue (completion racing a clear) is inert.
+        e.note_completion(0, 1.0);
+        e.note_completion(0, 1.0);
+        assert_eq!(e.view(0).outstanding, 0);
+    }
+
+    #[test]
+    fn out_of_range_devices_are_inert() {
+        let mut e = engine(1);
+        e.note_submitted(9, Instant::now());
+        assert!(!e.note_completion(9, 1.0));
+        assert_eq!(e.strikes(9), 0);
+        e.clear_device(9); // no panic
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        let ok = HealthConfig::default();
+        for bad in [
+            HealthConfig { ewma_alpha: 0.0, ..ok.clone() },
+            HealthConfig { ewma_alpha: 1.5, ..ok.clone() },
+            HealthConfig { ewma_alpha: f64::NAN, ..ok.clone() },
+            HealthConfig { straggler_factor: 0.5, ..ok.clone() },
+            HealthConfig {
+                heartbeat_timeout: Duration::ZERO,
+                ..ok.clone()
+            },
+            HealthConfig { suspect_strikes: 0, ..ok.clone() },
+        ] {
+            assert!(HealthEngine::new(bad.clone(), 1).is_err(), "{bad:?}");
+        }
+        assert!(HealthEngine::new(ok, 1).is_ok());
+    }
+
+    #[test]
+    fn metrics_publish_through_the_registry() {
+        let reg = Registry::new();
+        let m = HealthMetrics::new(&reg);
+        m.strikes.add(3);
+        m.quarantines.inc();
+        m.quarantined.set(1);
+        let text = reg.render_prometheus();
+        assert!(text.contains("vgpu_health_strikes_total 3"), "{text}");
+        assert!(text.contains("vgpu_health_quarantines_total 1"), "{text}");
+        assert!(text.contains("vgpu_health_quarantined_devices 1"), "{text}");
+        // Re-resolving returns handles over the same series.
+        assert_eq!(HealthMetrics::new(&reg).strikes.get(), 3);
+    }
+}

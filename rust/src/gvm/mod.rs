@@ -27,11 +27,19 @@
 //! device-memory oversubscription the [`spill`] tier keeps sharing
 //! alive: cold idle segments are evicted to a host-side store instead
 //! of failing placement, and re-staged ahead of their owner's next
-//! execute step (the `[spill]` config section).
+//! execute step (the `[spill]` config section).  The [`faults`] plane
+//! injects deterministic, seeded device failures (stalls, executor
+//! death, stragglers, corrupted completions; the `[faults]` section)
+//! and the [`health`] engine detects them from the same completion
+//! stream the metrics read — quarantining sick devices, evacuating
+//! their VGPUs, and failing over in-flight work with exactly-once
+//! accounting (the `[health]` section).
 
 pub mod daemon;
 pub mod devices;
 pub mod exec;
+pub mod faults;
+pub mod health;
 pub mod plan;
 pub mod qos;
 pub mod scheduler;
@@ -40,17 +48,20 @@ pub mod spill;
 pub mod vgpu;
 
 pub use daemon::{Command, Daemon, DaemonConfig, PipelineConfig};
-pub use devices::{DevicePool, PlacementPolicy, PoolConfig};
+pub use devices::{DevicePool, DeviceState, PlacementPolicy, PoolConfig};
 pub use exec::{
     ExecutorPool, MigrationConfig, MigrationPlan, Rebalancer, Submission,
 };
+pub use faults::{FaultAction, FaultConfig, FaultPlan};
+pub use health::{DeviceHealthView, HealthConfig, HealthEngine, HealthMetrics};
 pub use plan::{CtxMode, Job, Plan, PlanOp};
 pub use qos::{QosConfig, QueueMetrics, TenantShare, WeightedDeficitQueue};
 pub use scheduler::{plan_batch, Policy, StyleRule};
 pub use sim_backend::{
-    simulate, simulate_pool, simulate_pool_pipelined, simulate_pool_qos,
-    simulate_pool_spill, simulate_spmd, BatchTiming, PipelineTiming,
-    PoolTiming, QosPoolTiming, SpillTiming, TenantTiming,
+    simulate, simulate_pool, simulate_pool_chaos, simulate_pool_pipelined,
+    simulate_pool_qos, simulate_pool_spill, simulate_spmd, BatchTiming,
+    ChaosTiming, PipelineTiming, PoolTiming, QosPoolTiming, SpillTiming,
+    TenantTiming,
 };
 pub use spill::{SpillConfig, SpillMetrics, SpillStore};
 

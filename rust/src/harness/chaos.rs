@@ -1,0 +1,245 @@
+//! Extension experiment for the fault plane (`vgpu exp chaos`): a
+//! fault-rate sweep over
+//! [`crate::gvm::sim_backend::simulate_pool_chaos`] — device-stall and
+//! executor-death rates × remediation on/off — reporting jobs
+//! completed, jobs lost, SLO adherence, quarantines, and failovers.
+//! Each row aggregates several seeds so the on-vs-off gap reflects the
+//! distribution, not one lucky draw.
+
+use super::ExpOutput;
+use crate::config::DeviceConfig;
+use crate::gvm::devices::PlacementPolicy;
+use crate::gvm::faults::FaultConfig;
+use crate::gvm::health::HealthConfig;
+use crate::gvm::sim_backend::simulate_pool_chaos;
+use crate::util::table::{f3, Table};
+use crate::workloads::Suite;
+use crate::Result;
+
+/// Per-job fault rates swept (applied as stall rate and, scaled down,
+/// as death rate).
+const RATE_SWEEP: [f64; 4] = [0.0, 0.05, 0.10, 0.20];
+
+/// SPMD clients sharing the pool.
+const CLIENTS: usize = 8;
+
+/// Devices in the pool.
+const DEVICES: usize = 2;
+
+/// Rounds each client executes.
+const CYCLES: usize = 32;
+
+/// Seeds aggregated per row.
+const SEEDS: std::ops::RangeInclusive<u64> = 1..=8;
+
+fn sweep_faults(seed: u64, stall_rate: f64, death_rate: f64) -> FaultConfig {
+    FaultConfig {
+        enabled: true,
+        seed,
+        stall_rate,
+        death_rate,
+        ..FaultConfig::default()
+    }
+}
+
+fn sweep_health(remediate: bool) -> HealthConfig {
+    HealthConfig {
+        enabled: true,
+        remediate,
+        ..HealthConfig::default()
+    }
+}
+
+/// The `chaos` experiment: ES over a 2×C2070 pool, 8 SPMD clients, a
+/// per-job fault-rate sweep (sticky stalls plus a smaller share of
+/// executor deaths), remediation off vs on.  Off runs the faults to the
+/// horizon and loses the tail; on quarantines sick lanes, migrates
+/// their clients, and fails swallowed jobs over — the completed-jobs
+/// gap is the experiment's headline.
+pub fn chaos_sweep() -> Result<ExpOutput> {
+    let suite = Suite::paper_defaults();
+    let w = suite.get("electrostatics").unwrap();
+    let specs = vec![DeviceConfig::tesla_c2070(); DEVICES];
+    let mut table = Table::new(&[
+        "fault_rate",
+        "remediate",
+        "jobs_total",
+        "completed",
+        "failed",
+        "lost",
+        "stalls",
+        "deaths",
+        "quarantines",
+        "failovers",
+        "completion_rate",
+        "slo_held",
+    ]);
+    let mut notes = Vec::new();
+    // Acceptance cell: completed jobs at the 10% stall rate, off vs on.
+    let mut accept: Option<(usize, usize)> = None;
+
+    for &rate in &RATE_SWEEP {
+        let mut off_completed = None;
+        for remediate in [false, true] {
+            let health = sweep_health(remediate);
+            let mut total = 0usize;
+            let mut completed = 0usize;
+            let mut failed = 0usize;
+            let mut lost = 0usize;
+            let mut stalls = 0usize;
+            let mut deaths = 0usize;
+            let mut quarantines = 0usize;
+            let mut failovers = 0usize;
+            let mut slo_sum = 0.0f64;
+            let mut seeds = 0usize;
+            for seed in SEEDS {
+                let t = simulate_pool_chaos(
+                    w,
+                    CLIENTS,
+                    &specs,
+                    PlacementPolicy::LeastLoaded,
+                    CYCLES,
+                    &sweep_faults(seed, rate, rate / 10.0),
+                    &health,
+                )?;
+                total += t.jobs_total;
+                completed += t.jobs_completed;
+                failed += t.jobs_failed;
+                lost += t.jobs_lost;
+                stalls += t.stalls;
+                deaths += t.deaths;
+                quarantines += t.quarantines;
+                failovers += t.failovers;
+                slo_sum += t.slo_held;
+                seeds += 1;
+            }
+            if (rate - 0.10).abs() < 1e-9 {
+                if !remediate {
+                    off_completed = Some(completed);
+                } else if let Some(off) = off_completed {
+                    accept = Some((off, completed));
+                }
+            }
+            table.row(vec![
+                format!("{:.0}%", rate * 100.0),
+                if remediate { "on" } else { "off" }.to_string(),
+                total.to_string(),
+                completed.to_string(),
+                failed.to_string(),
+                lost.to_string(),
+                stalls.to_string(),
+                deaths.to_string(),
+                quarantines.to_string(),
+                failovers.to_string(),
+                f3(completed as f64 / total.max(1) as f64),
+                f3(slo_sum / seeds.max(1) as f64),
+            ]);
+        }
+    }
+
+    // Emitted only when the criterion actually holds, so the CLI test
+    // that greps for the phrase fails on regression instead of passing
+    // vacuously.
+    if let Some((off, on)) = accept {
+        if on > off {
+            notes.push(format!(
+                "10% device-stall rate: remediation on completes {on} \
+                 jobs vs {off} with remediation off, aggregated over \
+                 {} seeds (acceptance bar: strictly more completions \
+                 with the health plane live)",
+                SEEDS.count()
+            ));
+        } else {
+            notes.push(format!(
+                "ACCEPTANCE NOT MET at 10% stall: remediation on {on} \
+                 jobs vs off {off}"
+            ));
+        }
+    }
+    notes.push(
+        "remediation off runs every fault to the horizon: a sticky \
+         stalled lane burns the time budget at the stall factor and a \
+         dead lane silently swallows its queue, so the completed-job \
+         count collapses as the fault rate grows.  Remediation on \
+         strikes sick lanes from the same completion stream the \
+         metrics read, quarantines them (never the last serving \
+         device), migrates their VGPUs, and re-runs swallowed jobs on \
+         the failover target — every attempted job still terminates \
+         exactly once in completed/failed/lost"
+            .into(),
+    );
+    Ok(ExpOutput {
+        id: "chaos".into(),
+        title: "Fault plane: fault rate x remediation, jobs completed \
+                vs lost vs SLO"
+            .into(),
+        table,
+        notes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_table_covers_the_sweep() {
+        let out = chaos_sweep().unwrap();
+        // 4 fault rates x remediation off/on.
+        assert_eq!(out.table.len(), 8);
+    }
+
+    #[test]
+    fn acceptance_note_present_and_remediation_wins_at_10pct() {
+        let out = chaos_sweep().unwrap();
+        assert!(
+            out.notes.iter().any(|n| n.contains("acceptance bar")),
+            "{:?}",
+            out.notes
+        );
+        let suite = Suite::paper_defaults();
+        let w = suite.get("electrostatics").unwrap();
+        let specs = vec![DeviceConfig::tesla_c2070(); DEVICES];
+        let run = |remediate: bool| -> usize {
+            SEEDS
+                .map(|seed| {
+                    simulate_pool_chaos(
+                        w,
+                        CLIENTS,
+                        &specs,
+                        PlacementPolicy::LeastLoaded,
+                        CYCLES,
+                        &sweep_faults(seed, 0.10, 0.01),
+                        &sweep_health(remediate),
+                    )
+                    .unwrap()
+                    .jobs_completed
+                })
+                .sum()
+        };
+        let off = run(false);
+        let on = run(true);
+        assert!(on > off, "on {on} vs off {off}");
+    }
+
+    #[test]
+    fn faultless_row_completes_everything_both_ways() {
+        let suite = Suite::paper_defaults();
+        let w = suite.get("electrostatics").unwrap();
+        let specs = vec![DeviceConfig::tesla_c2070(); DEVICES];
+        for remediate in [false, true] {
+            let t = simulate_pool_chaos(
+                w,
+                CLIENTS,
+                &specs,
+                PlacementPolicy::LeastLoaded,
+                CYCLES,
+                &sweep_faults(1, 0.0, 0.0),
+                &sweep_health(remediate),
+            )
+            .unwrap();
+            assert_eq!(t.jobs_completed, t.jobs_total, "{t:?}");
+            assert_eq!(t.quarantines, 0);
+        }
+    }
+}

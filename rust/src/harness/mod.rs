@@ -30,11 +30,13 @@
 //! | qos     | per-tenant QoS: weights x policies, achieved shares |
 //! | pipeline | async flush pipeline: depth x devices x batch, overlap gain |
 //! | spill   | host-memory spill: oversubscription x policy, thrash vs errors |
+//! | chaos   | fault plane: fault rate x remediation, completed vs lost |
 //! | ext-multigpu | extension: multi-GPU node scaling |
 //! | ext-cluster | extension: cluster weak scaling (Fig. 11) |
 //! | ext-fig18-socket | extension: Fig. 18 over the socket transport |
 
 pub mod ablations;
+pub mod chaos;
 pub mod devices;
 pub mod figures;
 pub mod pipeline;
@@ -106,6 +108,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "qos",
     "pipeline",
     "spill",
+    "chaos",
     "ext-multigpu",
     "ext-cluster",
     "ext-fig18-socket",
@@ -138,6 +141,7 @@ pub fn run(id: &str) -> Result<ExpOutput> {
         "qos" => qos::qos_sweep(),
         "pipeline" => pipeline::pipeline_sweep(),
         "spill" => spill::spill_sweep(),
+        "chaos" => chaos::chaos_sweep(),
         "ext-multigpu" => ablations::multi_gpu_scaling(),
         "ext-cluster" => ablations::cluster_scaling(),
         "ext-fig18-socket" => figures::overhead_socket_figure(),

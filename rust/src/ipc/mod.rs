@@ -18,4 +18,7 @@ pub mod transport;
 pub mod wire;
 
 pub use transport::{Framed, Transport};
-pub use wire::{ClientMsg, DeviceEntry, ServerMsg, TenantStatsEntry, UsageEntry};
+pub use wire::{
+    ClientMsg, DeviceEntry, HealthEntry, ServerMsg, TenantStatsEntry,
+    UsageEntry,
+};

@@ -83,6 +83,10 @@ pub enum ClientMsg {
     /// Query the per-tenant metering ledger (observability extension;
     /// see [`crate::metrics::ledger`]).
     Usage,
+    /// Query the health plane: per-device latency EWMAs, straggler
+    /// strikes, outstanding completions, and the remediation counters
+    /// (fault-plane extension; see [`crate::gvm::health`]).
+    Health,
 }
 
 /// Per-tenant counter row carried by [`ServerMsg::Stats`] — fed by the
@@ -140,6 +144,24 @@ pub struct DeviceEntry {
     pub jobs_done: u64,
     /// Cumulative execution time attributed to this device (ms).
     pub busy_ms: f64,
+    /// Health state byte: 0 = healthy, 1 = suspect, 2 = quarantined
+    /// (see [`crate::gvm::devices::DeviceState`]).
+    pub state: u8,
+}
+
+/// Per-device health row carried by [`ServerMsg::Health`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthEntry {
+    /// Device index within the node's pool.
+    pub device: u32,
+    /// Health state byte: 0 = healthy, 1 = suspect, 2 = quarantined.
+    pub state: u8,
+    /// Completion-latency EWMA (ms); 0 until the first sample.
+    pub ewma_ms: f64,
+    /// Current straggler strikes.
+    pub strikes: u32,
+    /// Jobs submitted but not yet completed.
+    pub outstanding: u32,
 }
 
 /// GVM -> client responses.
@@ -229,6 +251,21 @@ pub enum ServerMsg {
         /// One row per tenant that has been charged since launch.
         records: Vec<UsageEntry>,
     },
+    /// Health-plane snapshot (Health response).
+    Health {
+        /// `[health]` detection is on.
+        enabled: bool,
+        /// Automatic remediation (quarantine/evacuate/fail over) is on.
+        remediate: bool,
+        /// Devices quarantined since launch.
+        quarantines: u64,
+        /// Quarantines that failed over at least one in-flight job.
+        failovers: u64,
+        /// In-flight jobs resubmitted onto a healthy device.
+        resubmitted: u64,
+        /// Per-device health, by device id.
+        devices: Vec<HealthEntry>,
+    },
 }
 
 fn put_str(s: &str, out: &mut Vec<u8>) {
@@ -290,6 +327,7 @@ impl ClientMsg {
                 out.extend_from_slice(&epoch.to_le_bytes());
             }
             ClientMsg::Usage => out.push(11),
+            ClientMsg::Health => out.push(12),
         }
         out
     }
@@ -339,6 +377,7 @@ impl ClientMsg {
                 epoch: read_u64(buf, &mut pos)?,
             },
             11 => ClientMsg::Usage,
+            12 => ClientMsg::Health,
             t => return Err(Error::Ipc(format!("bad client tag {t}"))),
         };
         Ok(msg)
@@ -417,6 +456,7 @@ impl ServerMsg {
                     out.extend_from_slice(&d.queued_ms.to_le_bytes());
                     out.extend_from_slice(&d.jobs_done.to_le_bytes());
                     out.extend_from_slice(&d.busy_ms.to_le_bytes());
+                    out.push(d.state);
                 }
             }
             ServerMsg::Migrated { moved, device } => {
@@ -441,6 +481,29 @@ impl ServerMsg {
                     out.extend_from_slice(&r.bytes_spilled.to_le_bytes());
                     out.extend_from_slice(&r.migrations.to_le_bytes());
                     out.extend_from_slice(&r.flushes.to_le_bytes());
+                }
+            }
+            ServerMsg::Health {
+                enabled,
+                remediate,
+                quarantines,
+                failovers,
+                resubmitted,
+                devices,
+            } => {
+                out.push(10);
+                out.push(u8::from(*enabled));
+                out.push(u8::from(*remediate));
+                out.extend_from_slice(&quarantines.to_le_bytes());
+                out.extend_from_slice(&failovers.to_le_bytes());
+                out.extend_from_slice(&resubmitted.to_le_bytes());
+                out.extend_from_slice(&(devices.len() as u32).to_le_bytes());
+                for d in devices {
+                    out.extend_from_slice(&d.device.to_le_bytes());
+                    out.push(d.state);
+                    out.extend_from_slice(&d.ewma_ms.to_le_bytes());
+                    out.extend_from_slice(&d.strikes.to_le_bytes());
+                    out.extend_from_slice(&d.outstanding.to_le_bytes());
                 }
             }
         }
@@ -532,6 +595,7 @@ impl ServerMsg {
                         queued_ms: f64::from_le_bytes(read_arr::<8>(buf, &mut pos)?),
                         jobs_done: read_u64(buf, &mut pos)?,
                         busy_ms: f64::from_le_bytes(read_arr::<8>(buf, &mut pos)?),
+                        state: read_arr::<1>(buf, &mut pos)?[0],
                     });
                 }
                 ServerMsg::Devices {
@@ -570,6 +634,55 @@ impl ServerMsg {
                     });
                 }
                 ServerMsg::Usage { records }
+            }
+            10 => {
+                let bool_byte =
+                    |buf: &[u8], pos: &mut usize| -> Result<bool> {
+                        match read_arr::<1>(buf, pos)?[0] {
+                            0 => Ok(false),
+                            1 => Ok(true),
+                            b => Err(Error::Ipc(format!(
+                                "bad health bool byte {b}"
+                            ))),
+                        }
+                    };
+                let enabled = bool_byte(buf, &mut pos)?;
+                let remediate = bool_byte(buf, &mut pos)?;
+                let quarantines = read_u64(buf, &mut pos)?;
+                let failovers = read_u64(buf, &mut pos)?;
+                let resubmitted = read_u64(buf, &mut pos)?;
+                let n = u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
+                if n > 4096 {
+                    return Err(Error::Ipc(format!(
+                        "implausible health device count {n}"
+                    )));
+                }
+                let mut devices = Vec::with_capacity(n as usize);
+                for _ in 0..n {
+                    devices.push(HealthEntry {
+                        device: u32::from_le_bytes(read_arr::<4>(
+                            buf, &mut pos,
+                        )?),
+                        state: read_arr::<1>(buf, &mut pos)?[0],
+                        ewma_ms: f64::from_le_bytes(read_arr::<8>(
+                            buf, &mut pos,
+                        )?),
+                        strikes: u32::from_le_bytes(read_arr::<4>(
+                            buf, &mut pos,
+                        )?),
+                        outstanding: u32::from_le_bytes(read_arr::<4>(
+                            buf, &mut pos,
+                        )?),
+                    });
+                }
+                ServerMsg::Health {
+                    enabled,
+                    remediate,
+                    quarantines,
+                    failovers,
+                    resubmitted,
+                    devices,
+                }
             }
             t => return Err(Error::Ipc(format!("bad server tag {t}"))),
         };
@@ -623,6 +736,7 @@ mod tests {
         roundtrip_c(ClientMsg::Flh { wait: true });
         roundtrip_c(ClientMsg::WaitFlush { epoch: 42 });
         roundtrip_c(ClientMsg::Usage);
+        roundtrip_c(ClientMsg::Health);
     }
 
     #[test]
@@ -703,6 +817,7 @@ mod tests {
                     queued_ms: 12.5,
                     jobs_done: 7,
                     busy_ms: 88.25,
+                    state: 0,
                 },
                 DeviceEntry {
                     id: 1,
@@ -711,6 +826,7 @@ mod tests {
                     queued_ms: 0.0,
                     jobs_done: 0,
                     busy_ms: 0.0,
+                    state: 2,
                 },
             ],
         });
@@ -775,6 +891,115 @@ mod tests {
         let mut buf = vec![9u8];
         buf.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(ServerMsg::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn health_roundtrips() {
+        roundtrip_s(ServerMsg::Health {
+            enabled: false,
+            remediate: false,
+            quarantines: 0,
+            failovers: 0,
+            resubmitted: 0,
+            devices: vec![],
+        });
+        roundtrip_s(ServerMsg::Health {
+            enabled: true,
+            remediate: true,
+            quarantines: 3,
+            failovers: 2,
+            resubmitted: 11,
+            devices: vec![
+                HealthEntry {
+                    device: 0,
+                    state: 0,
+                    ewma_ms: 1.75,
+                    strikes: 0,
+                    outstanding: 4,
+                },
+                HealthEntry {
+                    device: 1,
+                    state: 2,
+                    ewma_ms: 240.5,
+                    strikes: 6,
+                    outstanding: 0,
+                },
+            ],
+        });
+        // Boundary values survive bit-for-bit.
+        roundtrip_s(ServerMsg::Health {
+            enabled: true,
+            remediate: false,
+            quarantines: u64::MAX,
+            failovers: u64::MAX,
+            resubmitted: u64::MAX,
+            devices: vec![HealthEntry {
+                device: u32::MAX,
+                state: u8::MAX,
+                ewma_ms: f64::MAX,
+                strikes: u32::MAX,
+                outstanding: u32::MAX,
+            }],
+        });
+    }
+
+    #[test]
+    fn health_rejects_bad_bool_and_counts() {
+        // Bad `enabled` byte.
+        assert!(ServerMsg::decode(&[10, 7]).is_err());
+        // Bad `remediate` byte.
+        assert!(ServerMsg::decode(&[10, 1, 9]).is_err());
+        // Implausible device count.
+        let mut buf = vec![10u8, 1, 1];
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(ServerMsg::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn truncated_frames_error_instead_of_panicking() {
+        // Every prefix of a valid encoding must decode to a typed
+        // error, never a panic or a silent short read.
+        let msgs = [
+            ServerMsg::Health {
+                enabled: true,
+                remediate: true,
+                quarantines: 1,
+                failovers: 1,
+                resubmitted: 2,
+                devices: vec![HealthEntry {
+                    device: 0,
+                    state: 1,
+                    ewma_ms: 3.5,
+                    strikes: 2,
+                    outstanding: 1,
+                }],
+            },
+            ServerMsg::Devices {
+                self_device: 0,
+                devices: vec![DeviceEntry {
+                    id: 0,
+                    clients: 1,
+                    mem_used: 64,
+                    queued_ms: 1.0,
+                    jobs_done: 2,
+                    busy_ms: 3.0,
+                    state: 1,
+                }],
+            },
+        ];
+        for m in msgs {
+            let full = m.encode();
+            for cut in 0..full.len() {
+                assert!(
+                    ServerMsg::decode(&full[..cut]).is_err(),
+                    "{cut}-byte prefix must not decode"
+                );
+            }
+            assert_eq!(ServerMsg::decode(&full).unwrap(), m);
+        }
     }
 
     #[test]

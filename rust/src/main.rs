@@ -57,6 +57,7 @@ fn dispatch(cmd: Cmd) -> Result<()> {
         } => cmd_migrate(&socket, &name, target),
         Cmd::Stats { socket, json } => cmd_stats(&socket, json),
         Cmd::Usage { socket } => cmd_usage(&socket),
+        Cmd::Health { socket } => cmd_health(&socket),
     }
 }
 
@@ -265,6 +266,55 @@ fn cmd_usage(socket: &str) -> Result<()> {
         }
         ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
         other => Err(Error::Ipc(format!("expected Usage, got {other:?}"))),
+    }
+}
+
+/// Admin verb: render a served GVM's health plane (the wire `Health`
+/// message): per-device state, completion-latency EWMAs, strikes,
+/// outstanding submissions, and the remediation counters.  Talks the
+/// raw wire protocol — no REQ handshake, so it never occupies a VGPU
+/// slot.
+fn cmd_health(socket: &str) -> Result<()> {
+    use vgpu::gvm::DeviceState;
+    use vgpu::ipc::transport::{Transport, UnixTransport};
+    use vgpu::ipc::{ClientMsg, ServerMsg};
+    let mut t = UnixTransport::connect(socket)?;
+    match t.call(ClientMsg::Health)? {
+        ServerMsg::Health {
+            enabled,
+            remediate,
+            quarantines,
+            failovers,
+            resubmitted,
+            devices,
+        } => {
+            println!("health plane ({socket}):");
+            println!(
+                "  detection {} / remediation {}",
+                if enabled { "on" } else { "off" },
+                if remediate { "on" } else { "off" }
+            );
+            println!(
+                "  quarantines {quarantines}, failovers {failovers}, \
+                 jobs resubmitted {resubmitted}"
+            );
+            println!(
+                "  {:>6} {:12} {:>10} {:>8} {:>12}",
+                "device", "state", "ewma_ms", "strikes", "outstanding"
+            );
+            for d in &devices {
+                let state = DeviceState::from_u8(d.state)
+                    .map(|s| s.name())
+                    .unwrap_or("?");
+                println!(
+                    "  {:>6} {:12} {:>10.2} {:>8} {:>12}",
+                    d.device, state, d.ewma_ms, d.strikes, d.outstanding
+                );
+            }
+            Ok(())
+        }
+        ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
+        other => Err(Error::Ipc(format!("expected Health, got {other:?}"))),
     }
 }
 

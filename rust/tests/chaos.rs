@@ -1,0 +1,473 @@
+//! Deterministic chaos property suite for the fault plane (ISSUE
+//! satellite): randomized SND/STR/FLH/STP/RLS/migrate interleavings
+//! against the *real* event-driven daemon with injected faults and the
+//! health plane live.
+//!
+//! 4 fault kinds (sticky device stall, sticky executor death,
+//! stragglers, corrupted completions) × pipeline depths 1 and 2 ×
+//! 125 randomized rounds each = **1000 interleaving rounds**, asserting
+//!
+//! * after **every event**: `mem_used <= capacity` on every device;
+//! * after **every settled round**: `Σ device mem_used + spilled_bytes
+//!   == Σ live clients' declared segments` (conservation survives
+//!   quarantine and health-driven evacuation);
+//! * every accepted job terminates **exactly once**: at the end of a
+//!   run `jobs_ok + jobs_failed == accepted STRs` — a job swallowed by
+//!   a dead lane must be failed over or failed (never lost), and a
+//!   failed-over job must not be double-counted when the sick lane's
+//!   late original completion straggles in.
+//!
+//! Reproduce failures with `VGPU_PROP_SEED=<seed> cargo test --test
+//! chaos`.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use vgpu::config::DeviceConfig;
+use vgpu::gvm::devices::{DeviceState, PlacementPolicy, PoolConfig};
+use vgpu::gvm::faults::FaultConfig;
+use vgpu::gvm::health::HealthConfig;
+use vgpu::gvm::spill::SpillConfig;
+use vgpu::gvm::{Command, Daemon, DaemonConfig, PipelineConfig};
+use vgpu::ipc::{ClientMsg, ServerMsg};
+use vgpu::runtime::{ExecHandle, TensorValue};
+use vgpu::util::rng::SplitMix64;
+
+/// Tiny per-device memory so a handful of tensors oversubscribes it.
+const DEV_MEM: u64 = 256;
+
+/// Rounds per (fault kind, depth) cell; 4 kinds × 2 depths × 125 =
+/// the ISSUE's 1k interleaving rounds.
+const ROUNDS: usize = 125;
+
+fn tiny_spec() -> DeviceConfig {
+    let mut spec = DeviceConfig::tesla_c2070();
+    spec.mem_bytes = DEV_MEM;
+    spec
+}
+
+fn call(tx: &mpsc::Sender<Command>, client: u64, msg: ClientMsg) -> ServerMsg {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Command {
+        client,
+        msg,
+        reply: rtx,
+    })
+    .unwrap();
+    rrx.recv().unwrap()
+}
+
+fn register(tx: &mpsc::Sender<Command>, name: &str) -> u64 {
+    match call(
+        tx,
+        0,
+        ClientMsg::Req {
+            name: name.into(),
+            tenant: String::new(),
+        },
+    ) {
+        ServerMsg::Queued { ticket } => ticket,
+        other => panic!("bad REQ reply {other:?}"),
+    }
+}
+
+/// `n` f32 elements = `4n` bytes.
+fn t(n: usize) -> TensorValue {
+    TensorValue::F32(vec![n], vec![0.0; n])
+}
+
+/// Sticky ×3 device stall on ~5% of jobs.
+fn stall_faults(seed: u64) -> FaultConfig {
+    FaultConfig {
+        enabled: true,
+        seed,
+        stall_rate: 0.05,
+        stall_factor: 3.0,
+        ..FaultConfig::default()
+    }
+}
+
+/// Sticky, silent executor death on ~1% of jobs: the lane keeps
+/// draining but its completion reports vanish.
+fn death_faults(seed: u64) -> FaultConfig {
+    FaultConfig {
+        enabled: true,
+        seed,
+        death_rate: 0.01,
+        ..FaultConfig::default()
+    }
+}
+
+/// Non-sticky ×3 stragglers on ~10% of jobs.
+fn straggle_faults(seed: u64) -> FaultConfig {
+    FaultConfig {
+        enabled: true,
+        seed,
+        straggler_rate: 0.10,
+        straggler_factor: 3.0,
+        ..FaultConfig::default()
+    }
+}
+
+/// ~10% of completions arrive corrupted (failed).
+fn corrupt_faults(seed: u64) -> FaultConfig {
+    FaultConfig {
+        enabled: true,
+        seed,
+        corrupt_rate: 0.10,
+        ..FaultConfig::default()
+    }
+}
+
+/// Daemon over 2 tiny devices with spill, the given fault plan, and
+/// the health plane fully live (detect + remediate).  The heartbeat
+/// timeout is short so a silent lane resolves in test time — jobs on
+/// the mock executor complete in microseconds, so 25 ms cannot
+/// false-positive a healthy lane.
+fn chaos_daemon(depth: usize, faults: FaultConfig) -> mpsc::Sender<Command> {
+    let cfg = DaemonConfig {
+        barrier: Some(1),
+        barrier_timeout: Duration::from_secs(5),
+        pool: PoolConfig::homogeneous(
+            2,
+            tiny_spec(),
+            PlacementPolicy::RoundRobin,
+        ),
+        pipeline: PipelineConfig {
+            max_in_flight_flushes: depth,
+        },
+        spill: SpillConfig {
+            enabled: true,
+            host_budget_bytes: 1 << 20,
+            watermark: 1.0,
+        },
+        faults,
+        health: HealthConfig {
+            enabled: true,
+            remediate: true,
+            heartbeat_timeout: Duration::from_millis(25),
+            ..HealthConfig::default()
+        },
+        ..DaemonConfig::default()
+    };
+    let exec = ExecHandle::mock(vec!["w".into()], |_, inputs| Ok(inputs));
+    let daemon = Daemon::with_handles(cfg, vec![exec.clone(), exec]).unwrap();
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+    tx
+}
+
+/// Every device at or under capacity — checked after *every* event.
+fn assert_capacity(tx: &mpsc::Sender<Command>, probe: u64, ctx: &str) {
+    match call(tx, probe, ClientMsg::DevInfo) {
+        ServerMsg::Devices { devices, .. } => {
+            for d in &devices {
+                assert!(
+                    d.mem_used <= DEV_MEM,
+                    "{ctx}: device {} over capacity: {} > {DEV_MEM}",
+                    d.id,
+                    d.mem_used
+                );
+                assert!(
+                    DeviceState::from_u8(d.state).is_some(),
+                    "{ctx}: device {} reports bogus state {}",
+                    d.id,
+                    d.state
+                );
+            }
+        }
+        other => panic!("{ctx}: {other:?}"),
+    }
+}
+
+/// Conservation at a quiescent point: device totals + host store ==
+/// the mirror's live staged bytes — quarantine and evacuation must
+/// move segments, never leak or mint them.
+fn assert_conservation(
+    tx: &mpsc::Sender<Command>,
+    probe: u64,
+    mirror: &HashMap<u64, HashMap<u32, u64>>,
+    ctx: &str,
+) {
+    let expected: u64 = mirror
+        .values()
+        .map(|slots| slots.values().sum::<u64>())
+        .sum();
+    let spilled = match call(tx, probe, ClientMsg::Stats) {
+        ServerMsg::Stats { spilled_bytes, .. } => spilled_bytes,
+        other => panic!("{ctx}: {other:?}"),
+    };
+    let on_devices: u64 = match call(tx, probe, ClientMsg::DevInfo) {
+        ServerMsg::Devices { devices, .. } => {
+            devices.iter().map(|d| d.mem_used).sum()
+        }
+        other => panic!("{ctx}: {other:?}"),
+    };
+    assert_eq!(
+        on_devices + spilled,
+        expected,
+        "{ctx}: conservation broken (devices {on_devices} + spilled \
+         {spilled} != live segments {expected})"
+    );
+}
+
+/// Exactly-once ledger at the end of a run: every STR the daemon
+/// accepted settled as exactly one of ok/failed.  `<` here means a job
+/// was silently lost (swallowed by a dead lane, dropped by
+/// quarantine); `>` means double accounting (a failed-over job settled
+/// twice, once per lane).
+fn assert_exactly_once(tx: &mpsc::Sender<Command>, probe: u64, accepted: u64) {
+    match call(tx, probe, ClientMsg::Stats) {
+        ServerMsg::Stats {
+            jobs_ok,
+            jobs_failed,
+            ..
+        } => {
+            assert_eq!(
+                jobs_ok + jobs_failed,
+                accepted,
+                "exactly-once broken: {jobs_ok} ok + {jobs_failed} \
+                 failed != {accepted} accepted"
+            );
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+/// The health surface stays coherent under chaos: the wire reply
+/// carries one entry per device with a decodable state byte, and the
+/// counters are self-consistent.
+fn assert_health_surface(tx: &mpsc::Sender<Command>, probe: u64) {
+    match call(tx, probe, ClientMsg::Health) {
+        ServerMsg::Health {
+            enabled,
+            remediate,
+            quarantines,
+            failovers,
+            resubmitted,
+            devices,
+        } => {
+            assert!(enabled && remediate, "health plane was configured on");
+            assert_eq!(devices.len(), 2);
+            for d in &devices {
+                assert!(
+                    DeviceState::from_u8(d.state).is_some(),
+                    "device {} bogus state {}",
+                    d.device,
+                    d.state
+                );
+            }
+            assert!(
+                failovers <= quarantines,
+                "a failover implies its quarantine ({failovers} > \
+                 {quarantines})"
+            );
+            assert!(
+                resubmitted == 0 || failovers > 0,
+                "resubmissions without a failover ({resubmitted})"
+            );
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+/// Randomized SND/STR/FLH/STP/RLS/migrate interleavings against the
+/// real daemon at one pipeline depth with one fault kind injected.
+/// Invariants checked after every event (capacity), every round
+/// (conservation), and at the end of the run (exactly-once ledger +
+/// health surface).
+fn run_chaos_interleavings(
+    depth: usize,
+    rounds: usize,
+    faults: FaultConfig,
+    seed: u64,
+) {
+    let tx = chaos_daemon(depth, faults);
+    let mut rng = SplitMix64::new(seed);
+    let mut next_name = 0u64;
+    let mut clients: Vec<u64> = (0..4)
+        .map(|_| {
+            next_name += 1;
+            register(&tx, &format!("c{next_name}"))
+        })
+        .collect();
+    // Mirror of every live client's staged-but-unconsumed bytes.
+    let mut mirror: HashMap<u64, HashMap<u32, u64>> =
+        clients.iter().map(|&c| (c, HashMap::new())).collect();
+    // STRs the daemon accepted (replied Queued).
+    let mut accepted = 0u64;
+
+    for round in 0..rounds {
+        let ctx = format!("depth {depth}, round {round}");
+        let probe = clients[0];
+
+        // Occasionally churn the population: RLS one client, REQ a
+        // replacement (exercises release off sick/quarantined lanes).
+        // All of last round's jobs settled at its STPs, so a released
+        // client never has work in flight and the ledger stays exact.
+        if rng.chance(0.15) && clients.len() > 2 {
+            let i = rng.below(clients.len());
+            let gone = clients.swap_remove(i);
+            assert!(matches!(call(&tx, gone, ClientMsg::Rls), ServerMsg::Ack));
+            mirror.remove(&gone);
+            assert_capacity(&tx, clients[0], &ctx);
+            next_name += 1;
+            let fresh = register(&tx, &format!("c{next_name}"));
+            clients.push(fresh);
+            mirror.insert(fresh, HashMap::new());
+        }
+        let probe = if mirror.contains_key(&probe) {
+            probe
+        } else {
+            clients[0]
+        };
+
+        // Stage: a random subset SNDs 1-2 random-size tensors (4..=128
+        // bytes each; a client's segment never exceeds one device).
+        let mut strs: Vec<u64> = Vec::new();
+        for &c in &clients {
+            if !rng.chance(0.8) {
+                continue;
+            }
+            for slot in 0..(1 + rng.below(2) as u32) {
+                let elems = 1 + rng.below(32);
+                match call(
+                    &tx,
+                    c,
+                    ClientMsg::Snd {
+                        slot,
+                        tensor: t(elems),
+                    },
+                ) {
+                    ServerMsg::Ack => {
+                        mirror
+                            .get_mut(&c)
+                            .unwrap()
+                            .insert(slot, 4 * elems as u64);
+                    }
+                    ServerMsg::Err { msg } => {
+                        panic!("{ctx}: SND rejected: {msg}")
+                    }
+                    other => panic!("{ctx}: {other:?}"),
+                }
+                assert_capacity(&tx, probe, &ctx);
+            }
+            // Most stagers run this round; the rest carry their
+            // segment (resident or spilled) into the next one.
+            if rng.chance(0.8) {
+                strs.push(c);
+            }
+        }
+
+        // Start in random order; occasionally migrate someone or push
+        // an explicit flush between STRs.
+        for i in (1..strs.len()).rev() {
+            strs.swap(i, rng.below(i + 1));
+        }
+        for &c in &strs {
+            match call(
+                &tx,
+                c,
+                ClientMsg::Str {
+                    workload: "w".into(),
+                },
+            ) {
+                ServerMsg::Queued { .. } => accepted += 1,
+                other => panic!("{ctx}: STR: {other:?}"),
+            }
+            assert_capacity(&tx, probe, &ctx);
+            if rng.chance(0.2) {
+                let target = if rng.chance(0.5) {
+                    u32::MAX
+                } else {
+                    rng.below(2) as u32
+                };
+                // Best-effort: a refused migration (bad target, full
+                // target, quarantined target) is fine, accounting must
+                // hold either way.
+                let _ = call(
+                    &tx,
+                    c,
+                    ClientMsg::Migrate {
+                        name: String::new(),
+                        target,
+                    },
+                );
+                assert_capacity(&tx, probe, &ctx);
+            }
+            if rng.chance(0.2) {
+                assert!(matches!(
+                    call(&tx, c, ClientMsg::Flh { wait: true }),
+                    ServerMsg::Ack
+                ));
+                assert_capacity(&tx, probe, &ctx);
+            }
+        }
+
+        // Collect in random order; Done consumed the inputs, Err
+        // (corrupted completion, failed-over job's refused resubmit,
+        // dead-lane fail path) recycled them — the segment is empty
+        // either way, and STP *returning at all* is itself the
+        // liveness half of the invariant: a swallowed job must be
+        // failed over or failed, never left pending.
+        for i in (1..strs.len()).rev() {
+            strs.swap(i, rng.below(i + 1));
+        }
+        for &c in &strs {
+            match call(&tx, c, ClientMsg::Stp) {
+                ServerMsg::Done { .. } | ServerMsg::Err { .. } => {
+                    mirror.get_mut(&c).unwrap().clear();
+                }
+                other => panic!("{ctx}: STP: {other:?}"),
+            }
+            assert_capacity(&tx, probe, &ctx);
+        }
+
+        // Quiescent: every started job settled — conservation must be
+        // exact even after quarantine moved segments around.
+        assert_conservation(&tx, probe, &mirror, &ctx);
+    }
+    assert_exactly_once(&tx, clients[0], accepted);
+    assert_health_surface(&tx, clients[0]);
+}
+
+#[test]
+fn chaos_device_stall_depth_one() {
+    run_chaos_interleavings(1, ROUNDS, stall_faults(11), 0xC0FFEE ^ 0x11);
+}
+
+#[test]
+fn chaos_device_stall_depth_two() {
+    run_chaos_interleavings(2, ROUNDS, stall_faults(12), 0xC0FFEE ^ 0x12);
+}
+
+#[test]
+fn chaos_executor_death_depth_one() {
+    run_chaos_interleavings(1, ROUNDS, death_faults(21), 0xC0FFEE ^ 0x21);
+}
+
+#[test]
+fn chaos_executor_death_depth_two() {
+    run_chaos_interleavings(2, ROUNDS, death_faults(22), 0xC0FFEE ^ 0x22);
+}
+
+#[test]
+fn chaos_straggler_depth_one() {
+    run_chaos_interleavings(1, ROUNDS, straggle_faults(31), 0xC0FFEE ^ 0x31);
+}
+
+#[test]
+fn chaos_straggler_depth_two() {
+    run_chaos_interleavings(2, ROUNDS, straggle_faults(32), 0xC0FFEE ^ 0x32);
+}
+
+#[test]
+fn chaos_corrupted_completion_depth_one() {
+    run_chaos_interleavings(1, ROUNDS, corrupt_faults(41), 0xC0FFEE ^ 0x41);
+}
+
+#[test]
+fn chaos_corrupted_completion_depth_two() {
+    run_chaos_interleavings(2, ROUNDS, corrupt_faults(42), 0xC0FFEE ^ 0x42);
+}

@@ -379,6 +379,105 @@ fn epoch_interleaving_never_double_accounts() {
     }
 }
 
+/// Failover regression (ISSUE satellite): a `Completion::Failed` that
+/// lands during a migration drain retires its queue estimate exactly
+/// once — on the source device, where the job ran (a Running job's
+/// estimate does not move with the rebind) — and the rebind neither
+/// re-retires it (negative load) nor leaks it onto the target
+/// (phantom load).
+#[test]
+fn failed_completion_during_migration_drain_retires_estimate_once() {
+    let exec = ExecHandle::mock(
+        vec!["fail".into(), "double".into()],
+        |name, inputs| {
+            if name == "fail" {
+                std::thread::sleep(Duration::from_millis(60));
+                return Err(Error::Runtime("injected failure".into()));
+            }
+            Ok(vec![inputs[0].clone()])
+        },
+    );
+    let cfg = DaemonConfig {
+        barrier: Some(1),
+        barrier_timeout: Duration::from_millis(50),
+        pool: PoolConfig::homogeneous(
+            2,
+            DeviceConfig::tesla_c2070(),
+            PlacementPolicy::RoundRobin,
+        ),
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::with_handles(cfg, vec![exec.clone(), exec]).unwrap();
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+
+    // Round-robin: a lands on device 0.
+    let a = register_as(&tx, "a", "gold");
+    call(&tx, a, ClientMsg::Snd { slot: 0, tensor: t4() });
+    assert!(matches!(
+        call(&tx, a, ClientMsg::Str { workload: "fail".into() }),
+        ServerMsg::Queued { .. }
+    ));
+    // Migrate while the doomed job executes: the rebind's drain waits
+    // the job out, so its Completion::Failed is sitting on the event
+    // channel when the binding moves to device 1.
+    match call(
+        &tx,
+        a,
+        ClientMsg::Migrate {
+            name: String::new(),
+            target: 1,
+        },
+    ) {
+        ServerMsg::Migrated { moved, device } => {
+            assert_eq!((moved, device), (1, 1));
+        }
+        other => panic!("{other:?}"),
+    }
+    // The failure is observed exactly once, on the rebound VGPU.
+    assert!(matches!(call(&tx, a, ClientMsg::Stp), ServerMsg::Err { .. }));
+    match call(&tx, a, ClientMsg::DevInfo) {
+        ServerMsg::Devices { devices, .. } => {
+            for d in &devices {
+                assert!(
+                    d.queued_ms.abs() < 1e-9,
+                    "estimate retired exactly once: {devices:?}"
+                );
+                assert_eq!(d.jobs_done, 0, "failed job counted as done");
+            }
+            assert_eq!(devices[0].clients, 0, "binding left the source");
+            assert_eq!(devices[1].clients, 1, "binding reached the target");
+        }
+        other => panic!("{other:?}"),
+    }
+    match call(&tx, a, ClientMsg::Stats) {
+        ServerMsg::Stats {
+            jobs_ok,
+            jobs_failed,
+            in_flight_flushes,
+            queued_completions,
+            ..
+        } => {
+            assert_eq!(jobs_ok, 0);
+            assert_eq!(jobs_failed, 1, "the drained failure settled once");
+            assert_eq!(in_flight_flushes, 0, "epoch not settled");
+            assert_eq!(queued_completions, 0);
+        }
+        other => panic!("{other:?}"),
+    }
+    // The rebound VGPU is fully usable on the target device.
+    call(&tx, a, ClientMsg::Snd { slot: 0, tensor: t4() });
+    call(&tx, a, ClientMsg::Str { workload: "double".into() });
+    assert!(matches!(call(&tx, a, ClientMsg::Stp), ServerMsg::Done { .. }));
+    match call(&tx, a, ClientMsg::DevInfo) {
+        ServerMsg::Devices { devices, .. } => {
+            assert_eq!(devices[1].jobs_done, 1, "{devices:?}");
+            assert_eq!(devices[0].jobs_done, 0, "{devices:?}");
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
 /// Per-tenant counters (ISSUE satellite): the Stats wire message carries
 /// a tenant section fed by completion events.
 #[test]

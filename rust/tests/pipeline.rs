@@ -8,7 +8,8 @@ use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use vgpu::config::DeviceConfig;
-use vgpu::gvm::devices::{PlacementPolicy, PoolConfig};
+use vgpu::gvm::devices::{DeviceState, PlacementPolicy, PoolConfig};
+use vgpu::gvm::health::HealthConfig;
 use vgpu::gvm::qos::QosConfig;
 use vgpu::gvm::spill::SpillConfig;
 use vgpu::gvm::{Command, Daemon, DaemonConfig, PipelineConfig};
@@ -591,6 +592,168 @@ fn staging_client_self_spills_when_nothing_is_evictable() {
     let (spilled, _, _, failed) = spill_gauges(&tx, a);
     assert_eq!(spilled, 0, "everything consumed after settle");
     assert_eq!(failed, 0, "oversubscription never failed a job");
+}
+
+/// Failover regression (ISSUE satellite): an epoch failed over from a
+/// quarantined device re-runs ONLY its unfinished jobs, and the parked
+/// `WaitFlush` unblocks when the failover settles it — with exact
+/// per-tenant counts.  Device 0's lane hangs (from the health engine's
+/// view: submitted, silent past the heartbeat deadline); device 1's
+/// job in the same epoch finishes normally.  The health plane must
+/// quarantine device 0, resubmit the hung job from its saved inputs on
+/// device 1, and settle the epoch exactly once — the finished job is
+/// never re-run, the late original completion is discarded on the
+/// device mismatch.
+#[test]
+fn quarantined_epoch_fails_over_only_unfinished_jobs() {
+    // Lane 0 wedges on "hang" (far past the heartbeat deadline); lane 1
+    // executes everything — including the failed-over "hang" — at once.
+    let wls = vec!["hang".to_string(), "ok".to_string()];
+    let hung = ExecHandle::mock(wls.clone(), |name, inputs| {
+        if name == "hang" {
+            std::thread::sleep(Duration::from_secs(3));
+        }
+        Ok(inputs)
+    });
+    let healthy = ExecHandle::mock(wls, |_, inputs| Ok(inputs));
+    let cfg = DaemonConfig {
+        // Barrier of 8 never fills on its own — FLH cuts the epoch, so
+        // both jobs ride ONE flush and one WaitFlush ticket names it.
+        barrier: Some(8),
+        barrier_timeout: Duration::from_secs(5),
+        pool: PoolConfig::homogeneous(
+            2,
+            DeviceConfig::tesla_c2070(),
+            PlacementPolicy::RoundRobin,
+        ),
+        pipeline: PipelineConfig {
+            max_in_flight_flushes: 2,
+        },
+        health: HealthConfig {
+            enabled: true,
+            remediate: true,
+            heartbeat_timeout: Duration::from_millis(50),
+            ..HealthConfig::default()
+        },
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::with_handles(cfg, vec![hung, healthy]).unwrap();
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+
+    // Round-robin: a (gold) lands on the doomed device 0, b (bronze)
+    // on the healthy device 1.
+    let a = match call(
+        &tx,
+        0,
+        ClientMsg::Req {
+            name: "a".into(),
+            tenant: "gold".into(),
+        },
+    ) {
+        ServerMsg::Queued { ticket } => ticket,
+        other => panic!("{other:?}"),
+    };
+    let b = match call(
+        &tx,
+        0,
+        ClientMsg::Req {
+            name: "b".into(),
+            tenant: "bronze".into(),
+        },
+    ) {
+        ServerMsg::Queued { ticket } => ticket,
+        other => panic!("{other:?}"),
+    };
+    call(&tx, a, ClientMsg::Snd { slot: 0, tensor: t4() });
+    call(&tx, b, ClientMsg::Snd { slot: 0, tensor: t4() });
+    assert!(matches!(
+        call(&tx, a, ClientMsg::Str { workload: "hang".into() }),
+        ServerMsg::Queued { .. }
+    ));
+    assert!(matches!(
+        call(&tx, b, ClientMsg::Str { workload: "ok".into() }),
+        ServerMsg::Queued { .. }
+    ));
+    let epoch = match call(&tx, b, ClientMsg::Flh { wait: false }) {
+        ServerMsg::FlushTicket { epoch, jobs } => {
+            assert_eq!(jobs, 2, "both jobs ride one epoch");
+            epoch
+        }
+        other => panic!("{other:?}"),
+    };
+    // Parked until the epoch settles — which REQUIRES the failover:
+    // b's job finishes in microseconds, a's never reports on lane 0.
+    let t0 = Instant::now();
+    assert!(matches!(
+        call(&tx, b, ClientMsg::WaitFlush { epoch }),
+        ServerMsg::Ack
+    ));
+    assert!(
+        t0.elapsed() < Duration::from_secs(3),
+        "WaitFlush must settle via failover, not the wedged lane"
+    );
+    // The failed-over job SUCCEEDED on the new lane.
+    assert!(matches!(call(&tx, a, ClientMsg::Stp), ServerMsg::Done { .. }));
+    assert!(matches!(call(&tx, b, ClientMsg::Stp), ServerMsg::Done { .. }));
+
+    match call(&tx, a, ClientMsg::Stats) {
+        ServerMsg::Stats {
+            jobs_ok,
+            jobs_failed,
+            in_flight_flushes,
+            tenants,
+            ..
+        } => {
+            // Only the unfinished job re-ran: a finished-job re-run
+            // would read 3 ok (bronze 2); a failed failover 1 ok +
+            // 1 failed.
+            assert_eq!(jobs_ok, 2, "{tenants:?}");
+            assert_eq!(jobs_failed, 0);
+            assert_eq!(in_flight_flushes, 0, "epoch settled exactly once");
+            let gold = tenants.iter().find(|t| t.tenant == "gold").unwrap();
+            let bronze =
+                tenants.iter().find(|t| t.tenant == "bronze").unwrap();
+            assert_eq!((gold.jobs_ok, gold.jobs_failed), (1, 0));
+            assert_eq!((bronze.jobs_ok, bronze.jobs_failed), (1, 0));
+        }
+        other => panic!("{other:?}"),
+    }
+    match call(&tx, a, ClientMsg::DevInfo) {
+        ServerMsg::Devices { devices, .. } => {
+            assert_eq!(
+                DeviceState::from_u8(devices[0].state),
+                Some(DeviceState::Quarantined),
+                "{devices:?}"
+            );
+            assert_eq!(devices[0].clients, 0, "evacuated");
+            assert_eq!(devices[1].clients, 2, "both VGPUs on the survivor");
+            assert_eq!(devices[0].jobs_done, 0);
+            assert_eq!(devices[1].jobs_done, 2, "b's job + a's failover");
+            for d in &devices {
+                assert!(
+                    d.queued_ms.abs() < 1e-9,
+                    "failover moved the estimate exactly once: {devices:?}"
+                );
+            }
+        }
+        other => panic!("{other:?}"),
+    }
+    match call(&tx, a, ClientMsg::Health) {
+        ServerMsg::Health {
+            quarantines,
+            failovers,
+            resubmitted,
+            devices,
+            ..
+        } => {
+            assert_eq!(quarantines, 1);
+            assert_eq!(failovers, 1);
+            assert_eq!(resubmitted, 1, "exactly the unfinished job moved");
+            assert_eq!(devices[0].state, DeviceState::Quarantined.as_u8());
+        }
+        other => panic!("{other:?}"),
+    }
 }
 
 /// Depth 1 defers a second epoch until the first settles — the
