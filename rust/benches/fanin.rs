@@ -1,0 +1,316 @@
+//! Client fan-in bench: the mux reactor (one thread for every
+//! connection) vs the legacy thread-per-connection adapter, and the
+//! shared-memory data plane vs inline frames, at 100–10k simultaneous
+//! unix-socket clients over a mock-handle daemon.
+//!
+//! Per cell: every client registers (REQ), runs `CYCLES`
+//! SND→STR→STP→RCV cycles against instant echo devices, and releases.
+//! Reported: mean REQ round-trip (ns/REQ), p99 STR round-trip (ms),
+//! and mean full-cycle time.  Client sockets are all held open at once
+//! (that is the fan-in), but are driven from a bounded worker pool so
+//! the *bench* process stays at O(workers) threads — any O(N) thread
+//! growth measured is the server adapter's.
+//!
+//! Results land in `BENCH_fanin.json` (override the path with
+//! `VGPU_BENCH_FANIN_JSON`; override the client sweep with
+//! `VGPU_BENCH_FANIN_CLIENTS=100,1000`).  Cells that exceed the
+//! environment (fd limits, thread limits) record null rows rather
+//! than failing the bench.
+
+mod bench_common;
+use bench_common::{bench, section};
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use vgpu::api::VgpuClient;
+use vgpu::config::DeviceConfig;
+use vgpu::gvm::devices::{PlacementPolicy, PoolConfig};
+use vgpu::gvm::qos::QosConfig;
+use vgpu::gvm::{serve_unix_threads_parts, Command, Daemon, DaemonConfig};
+use vgpu::ipc::{IpcConfig, MuxOptions, MuxServer};
+use vgpu::runtime::{ExecHandle, TensorValue};
+
+/// SND→STR→STP→RCV cycles per client.
+const CYCLES: usize = 2;
+
+/// Elements per staged tensor (1 KiB of f32s — payload cost is the
+/// shm-vs-inline axis, not the point of the REQ/STR numbers).
+const TENSOR_ELEMS: usize = 256;
+
+/// Driver threads the bench process uses regardless of client count.
+const WORKERS: usize = 64;
+
+fn echo_handle() -> ExecHandle {
+    ExecHandle::mock(vec!["echo".into()], |_, inputs| Ok(inputs))
+}
+
+/// Mock daemon sized for the largest cell.
+fn spawn_daemon(
+    max_clients: usize,
+) -> (mpsc::Sender<Command>, std::sync::Arc<vgpu::metrics::Registry>) {
+    let cfg = DaemonConfig {
+        barrier: Some(1),
+        max_clients,
+        pool: PoolConfig::homogeneous(
+            2,
+            DeviceConfig::tesla_c2070(),
+            PlacementPolicy::RoundRobin,
+        ),
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::with_handles(cfg, vec![echo_handle(), echo_handle()])
+        .expect("daemon");
+    let registry = daemon.registry();
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+    (tx, registry)
+}
+
+/// Per-cell measurements from one worker's share of the clients.
+#[derive(Default)]
+struct WorkerStats {
+    req_ns: Vec<f64>,
+    str_ms: Vec<f64>,
+    cycle_ns: Vec<f64>,
+}
+
+/// Register, cycle, and release this worker's clients. All sockets stay
+/// open until the end of the call — the server really holds
+/// `clients` simultaneous connections across the pool.
+fn drive_clients(
+    socket: &std::path::Path,
+    tag: &str,
+    count: usize,
+    shm: bool,
+) -> Result<WorkerStats, String> {
+    let mut stats = WorkerStats::default();
+    let mut handles = Vec::with_capacity(count);
+    for i in 0..count {
+        let t0 = Instant::now();
+        let mut c =
+            VgpuClient::connect_unix_as(socket, &format!("{tag}-{i}"), "")
+                .map_err(|e| format!("connect: {e}"))?;
+        stats.req_ns.push(t0.elapsed().as_nanos() as f64);
+        if shm && !c.negotiate_shm(1 << 20).map_err(|e| e.to_string())? {
+            return Err("shm negotiation rejected".into());
+        }
+        handles.push(c);
+    }
+    let t = TensorValue::F32(vec![TENSOR_ELEMS], vec![1.0; TENSOR_ELEMS]);
+    for c in &mut handles {
+        let t0 = Instant::now();
+        for _ in 0..CYCLES {
+            c.snd(0, t.clone()).map_err(|e| format!("snd: {e}"))?;
+            let ts = Instant::now();
+            c.str_("echo").map_err(|e| format!("str: {e}"))?;
+            stats.str_ms.push(ts.elapsed().as_secs_f64() * 1e3);
+            c.stp().map_err(|e| format!("stp: {e}"))?;
+            c.rcv(0).map_err(|e| format!("rcv: {e}"))?;
+        }
+        stats
+            .cycle_ns
+            .push(t0.elapsed().as_nanos() as f64 / CYCLES as f64);
+    }
+    for mut c in handles {
+        c.rls().map_err(|e| format!("rls: {e}"))?;
+    }
+    Ok(stats)
+}
+
+fn p99(mut v: Vec<f64>) -> f64 {
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[((v.len() - 1) as f64 * 0.99) as usize]
+}
+
+fn mean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        f64::NAN
+    } else {
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+}
+
+struct Row {
+    mode: &'static str,
+    plane: &'static str,
+    clients: usize,
+    ns_per_req: f64,
+    p99_str_ms: f64,
+    cycle_ns: f64,
+}
+
+/// One (mode, plane, clients) cell; errors become a NaN row.
+fn run_cell(
+    socket: &std::path::Path,
+    mode: &'static str,
+    plane: &'static str,
+    clients: usize,
+) -> Row {
+    let shm = plane == "shm";
+    let workers = WORKERS.min(clients);
+    let per = clients / workers;
+    let extra = clients % workers;
+    let results: Vec<_> = (0..workers)
+        .map(|w| {
+            let socket = socket.to_path_buf();
+            let tag = format!("{mode}-{plane}-w{w}");
+            let count = per + usize::from(w < extra);
+            std::thread::Builder::new()
+                .name("fanin-driver".into())
+                .spawn(move || drive_clients(&socket, &tag, count, shm))
+                .map_err(|e| format!("spawn driver: {e}"))
+        })
+        .collect();
+    let mut req_ns = Vec::new();
+    let mut str_ms = Vec::new();
+    let mut cycle_ns = Vec::new();
+    let mut failed = false;
+    for r in results {
+        match r.and_then(|h| {
+            h.join().map_err(|_| "driver panicked".to_string())?
+        }) {
+            Ok(s) => {
+                req_ns.extend(s.req_ns);
+                str_ms.extend(s.str_ms);
+                cycle_ns.extend(s.cycle_ns);
+            }
+            Err(e) => {
+                eprintln!("[{mode}/{plane}/{clients}: {e} — null row]");
+                failed = true;
+            }
+        }
+    }
+    let (ns_per_req, p99_str_ms, cyc) = if failed {
+        (f64::NAN, f64::NAN, f64::NAN)
+    } else {
+        (mean(&req_ns), p99(str_ms), mean(&cycle_ns))
+    };
+    println!(
+        "{:40} {:>12.0} ns/REQ {:>10.3} p99 STR ms {:>14.0} ns/cycle",
+        format!("{mode}_{plane}_{clients}cl"),
+        ns_per_req,
+        p99_str_ms,
+        cyc
+    );
+    Row {
+        mode,
+        plane,
+        clients,
+        ns_per_req,
+        p99_str_ms,
+        cycle_ns: cyc,
+    }
+}
+
+fn fmt_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.1}")
+    } else {
+        "null".into()
+    }
+}
+
+fn client_sweep() -> Vec<usize> {
+    match std::env::var("VGPU_BENCH_FANIN_CLIENTS") {
+        Ok(s) => s
+            .split(',')
+            .filter_map(|p| p.trim().parse().ok())
+            .collect(),
+        Err(_) => vec![100, 1000, 10000],
+    }
+}
+
+fn main() {
+    let sweep = client_sweep();
+    let max = sweep.iter().copied().max().unwrap_or(0) + WORKERS;
+    let ipc = IpcConfig {
+        max_connections: max + 16,
+        backpressure: 1 << 20,
+        ..IpcConfig::default()
+    };
+    let mut rows: Vec<Row> = Vec::new();
+
+    for mode in ["mux", "threads"] {
+        section(&format!(
+            "fan-in over {mode}: {CYCLES} cycles/client, \
+             {} B tensors, {WORKERS} driver threads",
+            TENSOR_ELEMS * 4
+        ));
+        let (tx, registry) = spawn_daemon(max + 16);
+        let socket = std::env::temp_dir().join(format!(
+            "vgpu-bench-fanin-{mode}-{}.sock",
+            std::process::id()
+        ));
+        let mut _mux = None;
+        if mode == "mux" {
+            _mux = Some(
+                MuxServer::spawn(
+                    &socket,
+                    tx.clone(),
+                    MuxOptions::from_config(
+                        &ipc,
+                        QosConfig::default(),
+                        Some(registry.clone()),
+                    ),
+                )
+                .expect("mux spawn"),
+            );
+        } else {
+            let sock2 = socket.clone();
+            let ipc2 = ipc.clone();
+            std::thread::spawn(move || {
+                let _ = serve_unix_threads_parts(&sock2, tx, &ipc2, &registry);
+            });
+        }
+        for _ in 0..200 {
+            if socket.exists() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        for plane in ["inline", "shm"] {
+            for &clients in &sweep {
+                rows.push(run_cell(&socket, mode, plane, clients));
+            }
+        }
+        // Connection churn: one REQ + RLS per op on an otherwise idle
+        // adapter (the per-connection setup/teardown floor).
+        let _ = bench(&format!("req_rls_churn_{mode}"), || {
+            let mut c = VgpuClient::connect_unix_as(&socket, "churn", "")
+                .expect("churn connect");
+            c.rls().expect("churn rls");
+        });
+        let _ = std::fs::remove_file(&socket);
+    }
+
+    let path = std::env::var("VGPU_BENCH_FANIN_JSON")
+        .unwrap_or_else(|_| "BENCH_fanin.json".into());
+    let mut json = String::from(
+        "{\n  \"bench\": \"fanin\",\n  \"cycles_per_client\": 2,\n  \
+         \"tensor_bytes\": 1024,\n  \"driver_threads\": 64,\n  \
+         \"rows\": [\n",
+    );
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"plane\": \"{}\", \"clients\": {}, \
+             \"ns_per_req\": {}, \"p99_str_ms\": {}, \"ns_per_cycle\": {}}}{}\n",
+            r.mode,
+            r.plane,
+            r.clients,
+            fmt_num(r.ns_per_req),
+            fmt_num(r.p99_str_ms),
+            fmt_num(r.cycle_ns),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("\n[recorded {path}]"),
+        Err(e) => eprintln!("\n[could not write {path}: {e}]"),
+    }
+}

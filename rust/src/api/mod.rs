@@ -21,7 +21,17 @@
 //! the caller can stage the next cycle while devices execute this one,
 //! and [`VgpuClient::wait_flush`] redeems the ticket once every epoch up
 //! to it has settled.
+//!
+//! Socket clients can additionally negotiate a **shared-memory data
+//! plane** ([`VgpuClient::negotiate_shm`], mirroring the paper's POSIX
+//! shm segments): `SND` payloads are then written into a per-client
+//! ring and the socket carries only `(offset, len, generation)`
+//! descriptors; `RCV` reads outputs back the same way.  Everything
+//! falls back to inline frames transparently — same bytes either way.
 
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 
 use crate::gvm::Command;
@@ -137,10 +147,62 @@ enum Conn {
     Socket(Box<dyn Transport>),
 }
 
+/// Client side of a negotiated shared-memory data plane: a ring file
+/// pair created by the client, sized at negotiation, and unlinked as
+/// soon as the daemon holds its own descriptors (the fds keep the
+/// memory alive; nothing is left behind on crash).
+struct ShmSession {
+    /// Client→daemon payload ring (`SND` bytes land here).
+    input: File,
+    /// Daemon→client payload ring (`RCV` bytes come back here).
+    output: File,
+    /// Negotiated capacity per direction, bytes.
+    bytes: u64,
+    /// Monotone generation stamped on each outbound descriptor.
+    gen: u64,
+    /// Bump-allocator head into `input`.
+    head: u64,
+}
+
+impl ShmSession {
+    /// Reserve `len` bytes in the input ring, 8-byte aligned, wrapping
+    /// to the start when the tail is too short.  `None` = payload
+    /// larger than the whole ring (caller falls back to an inline
+    /// frame).  Reuse is safe because the protocol is call/reply: the
+    /// daemon consumed the previous descriptor before the next SND is
+    /// issued.
+    fn alloc(&mut self, len: u64) -> Option<u64> {
+        if len > self.bytes {
+            return None;
+        }
+        let aligned = (self.head + 7) & !7;
+        let offset = if aligned.checked_add(len)? <= self.bytes {
+            aligned
+        } else {
+            0
+        };
+        self.head = offset + len;
+        Some(offset)
+    }
+}
+
+/// Directory for shm ring files: the tmpfs at `/dev/shm` when present
+/// (actual shared memory), the temp dir otherwise.
+fn shm_dir() -> std::path::PathBuf {
+    let dev = std::path::Path::new("/dev/shm");
+    if dev.is_dir() {
+        dev.to_path_buf()
+    } else {
+        std::env::temp_dir()
+    }
+}
+
 /// A client handle to one VGPU.
 pub struct VgpuClient {
     conn: Conn,
     released: bool,
+    /// Negotiated shared-memory data plane (socket clients only).
+    shm: Option<ShmSession>,
 }
 
 impl VgpuClient {
@@ -148,6 +210,7 @@ impl VgpuClient {
         Self {
             conn: Conn::InProc { id, tx },
             released: false,
+            shm: None,
         }
     }
 
@@ -181,6 +244,7 @@ impl VgpuClient {
         Ok(Self {
             conn: Conn::Socket(Box::new(t)),
             released: false,
+            shm: None,
         })
     }
 
@@ -191,7 +255,7 @@ impl VgpuClient {
                 tx.send(Command {
                     client: *id,
                     msg,
-                    reply: reply_tx,
+                    reply: reply_tx.into(),
                 })
                 .map_err(|_| Error::Ipc("GVM daemon is down".into()))?;
                 reply_rx
@@ -210,9 +274,107 @@ impl VgpuClient {
         }
     }
 
+    /// Negotiate a shared-memory data plane of `bytes` per direction.
+    ///
+    /// Returns `Ok(true)` when the daemon accepted the ring: subsequent
+    /// [`snd`](Self::snd)/[`rcv`](Self::rcv) calls carry payloads
+    /// through shared memory and only descriptors over the socket.
+    /// `Ok(false)` means shared memory is unavailable (in-process
+    /// connection, or the daemon rejected the size) and inline frames
+    /// keep being used — the client works identically either way.
+    pub fn negotiate_shm(&mut self, bytes: u64) -> Result<bool> {
+        if !matches!(self.conn, Conn::Socket(_)) {
+            // In-process channels are already zero-copy.
+            return Ok(false);
+        }
+        if bytes == 0 {
+            return Err(Error::Protocol(
+                "shm ring must be at least one byte".into(),
+            ));
+        }
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let base = shm_dir()
+            .join(format!("vgpu-shm-{}-{n}", std::process::id()));
+        let path = base.to_string_lossy().into_owned();
+        let out_path = format!("{path}.out");
+        let create = |p: &str| -> Result<File> {
+            let f = std::fs::OpenOptions::new()
+                .read(true)
+                .write(true)
+                .create_new(true)
+                .open(p)?;
+            f.set_len(bytes)?;
+            Ok(f)
+        };
+        let input = create(&path)?;
+        let output = match create(&out_path) {
+            Ok(f) => f,
+            Err(e) => {
+                let _ = std::fs::remove_file(&path);
+                return Err(e);
+            }
+        };
+        let reply = self.call(ClientMsg::ShmOpen {
+            path: path.clone(),
+            bytes,
+        });
+        // Whatever the daemon said, the names are no longer needed:
+        // open fds (ours, and the daemon's on success) keep the memory
+        // alive, and unlinking now means nothing survives a crash.
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&out_path);
+        match reply? {
+            ServerMsg::ShmOk { max_bytes } => {
+                self.shm = Some(ShmSession {
+                    input,
+                    output,
+                    bytes: max_bytes.min(bytes),
+                    gen: 0,
+                    head: 0,
+                });
+                Ok(true)
+            }
+            ServerMsg::Err { .. } => Ok(false),
+            other => {
+                Err(Error::Ipc(format!("bad ShmOpen reply: {other:?}")))
+            }
+        }
+    }
+
+    /// Whether a shared-memory data plane is active on this handle.
+    pub fn shm_active(&self) -> bool {
+        self.shm.is_some()
+    }
+
     /// `SND()`: stage one input tensor into segment `slot`.
+    ///
+    /// With a negotiated shm ring the payload is written into shared
+    /// memory and the socket carries a `(offset, len, generation)`
+    /// descriptor; payloads larger than the ring fall back to an
+    /// inline frame.
     pub fn snd(&mut self, slot: u32, tensor: TensorValue) -> Result<()> {
-        self.expect_ack(ClientMsg::Snd { slot, tensor })
+        let msg = match self.shm.as_mut() {
+            Some(shm) => {
+                let mut enc = Vec::new();
+                tensor.encode(&mut enc);
+                match shm.alloc(enc.len() as u64) {
+                    Some(offset) => {
+                        shm.input.write_all_at(&enc, offset)?;
+                        shm.gen += 1;
+                        ClientMsg::SndShm {
+                            slot,
+                            offset,
+                            len: enc.len() as u64,
+                            generation: shm.gen,
+                        }
+                    }
+                    None => ClientMsg::Snd { slot, tensor },
+                }
+            }
+            None => ClientMsg::Snd { slot, tensor },
+        };
+        self.expect_ack(msg)
     }
 
     /// `STR()`: start execution of `workload`; returns the queue ticket.
@@ -240,9 +402,44 @@ impl VgpuClient {
     }
 
     /// `RCV()`: fetch output tensor `slot`.
+    ///
+    /// With a negotiated shm ring the daemon writes the output into
+    /// the ring and replies with a descriptor (falling back to an
+    /// inline frame when the output doesn't fit).
     pub fn rcv(&mut self, slot: u32) -> Result<TensorValue> {
-        match self.call(ClientMsg::Rcv { slot })? {
+        let msg = if self.shm.is_some() {
+            ClientMsg::RcvShm { slot }
+        } else {
+            ClientMsg::Rcv { slot }
+        };
+        match self.call(msg)? {
             ServerMsg::Data { tensor } => Ok(tensor),
+            ServerMsg::DataShm {
+                offset,
+                len,
+                generation: _,
+            } => {
+                let shm = self.shm.as_mut().ok_or_else(|| {
+                    Error::Protocol(
+                        "DataShm reply without a negotiated ring".into(),
+                    )
+                })?;
+                let in_bounds = offset
+                    .checked_add(len)
+                    .map(|end| end <= shm.bytes)
+                    .unwrap_or(false);
+                if !in_bounds {
+                    return Err(Error::Protocol(format!(
+                        "DataShm descriptor [{offset}, +{len}) outside \
+                         the {} B ring",
+                        shm.bytes
+                    )));
+                }
+                let mut buf = vec![0u8; len as usize];
+                shm.output.read_exact_at(&mut buf, offset)?;
+                let mut pos = 0;
+                TensorValue::decode(&buf, &mut pos)
+            }
             ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
             other => Err(Error::Ipc(format!("expected Data, got {other:?}"))),
         }

@@ -27,7 +27,14 @@
 //! [qos]
 //! tenants = gold:3, silver:1  # tenant:weight share list
 //! rate_limit = silver:4       # tenant:max-queued-jobs caps (optional)
+//! conn_limit = silver:16      # tenant:max-connections caps (optional)
 //! default_weight = 1.0        # weight for unlisted tenants
+//!
+//! [ipc]
+//! mode = mux                  # mux (one reactor thread) | threads
+//! max_connections = 1024      # global socket-connection cap
+//! backpressure = 1024         # in-flight command cap before REQ rejects
+//! shm_ring_bytes = 16777216   # max negotiable shm ring (16 MiB; 0 = off)
 //!
 //! [migration]
 //! enabled = true              # automatic rebalancing (default off)
@@ -87,6 +94,7 @@ use crate::gvm::health::HealthConfig;
 use crate::gvm::qos::{parse_share_list, QosConfig};
 use crate::gvm::spill::SpillConfig;
 use crate::gvm::{DaemonConfig, GvmConfig, PipelineConfig, StyleRule};
+use crate::ipc::mux::{IpcConfig, IpcMode};
 use crate::metrics::MetricsConfig;
 use crate::{Error, Result};
 
@@ -295,7 +303,58 @@ impl ConfigFile {
                 q.set_rate_limit(&tenant, cap as u32)?;
             }
         }
+        if let Some(v) = self.get("qos", "conn_limit") {
+            for (tenant, cap) in parse_share_list(v)? {
+                if cap.fract() != 0.0 || cap < 0.0 || cap > u32::MAX as f64 {
+                    return Err(Error::Config(format!(
+                        "[qos] conn_limit for {tenant}: {cap} is not a \
+                         whole connection count"
+                    )));
+                }
+                q.set_conn_limit(&tenant, cap as u32)?;
+            }
+        }
         Ok(q)
+    }
+
+    /// Build the socket-transport tunables (the `[ipc]` section);
+    /// omitted section = the mux reactor with its default caps.
+    pub fn ipc(&self) -> Result<IpcConfig> {
+        let mut i = IpcConfig::default();
+        if let Some(v) = self.get("ipc", "mode") {
+            i.mode = match v.to_lowercase().as_str() {
+                "mux" => IpcMode::Mux,
+                "threads" => IpcMode::Threads,
+                other => {
+                    return Err(Error::Config(format!(
+                        "[ipc] mode = {other:?} (want mux|threads)"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = self.get_usize("ipc", "max_connections")? {
+            if v == 0 {
+                return Err(Error::Config(
+                    "[ipc] max_connections must be >= 1".into(),
+                ));
+            }
+            i.max_connections = v;
+        }
+        if let Some(v) = self.get_usize("ipc", "backpressure")? {
+            if v == 0 {
+                return Err(Error::Config(
+                    "[ipc] backpressure must be >= 1 \
+                     (one command in flight)"
+                        .into(),
+                ));
+            }
+            i.backpressure = v;
+        }
+        if let Some(v) = self.get_usize("ipc", "shm_ring_bytes")? {
+            // 0 is allowed: it disables shm negotiation entirely.
+            i.shm_ring_bytes = v as u64;
+        }
+        Ok(i)
     }
 
     /// Build the live-migration tunables (the `[migration]` section);
@@ -554,6 +613,7 @@ impl ConfigFile {
         daemon.spill = self.spill()?;
         daemon.faults = self.faults()?;
         daemon.health = self.health()?;
+        daemon.ipc = self.ipc()?;
         let artifacts_dir = self
             .get("gvm", "artifacts_dir")
             .map(std::path::PathBuf::from)
@@ -623,7 +683,7 @@ policy = model-optimal
     fn qos_section_parses_weights_and_limits() {
         let c = ConfigFile::parse(
             "[qos]\ntenants = gold:3, silver:1\nrate_limit = silver:4\n\
-             default_weight = 0.5\n",
+             conn_limit = silver:16\ndefault_weight = 0.5\n",
         )
         .unwrap();
         let q = c.qos().unwrap();
@@ -632,6 +692,8 @@ policy = model-optimal
         assert_eq!(q.weight("unlisted"), 0.5);
         assert_eq!(q.rate_limit("silver"), Some(4));
         assert_eq!(q.rate_limit("gold"), None);
+        assert_eq!(q.conn_limit("silver"), Some(16));
+        assert_eq!(q.conn_limit("gold"), None);
         // The share table rides into the pool (and thus the daemon).
         let pool = c.devices().unwrap();
         assert_eq!(pool.qos.weight("gold"), 3.0);
@@ -655,6 +717,8 @@ policy = model-optimal
             "[qos]\ntenants = gold=3\n",
             "[qos]\nrate_limit = gold:0\n",
             "[qos]\nrate_limit = gold:2.5\n",
+            "[qos]\nconn_limit = gold:0\n",
+            "[qos]\nconn_limit = gold:1.5\n",
             "[qos]\ndefault_weight = 0\n",
         ] {
             let c = ConfigFile::parse(bad).unwrap();
@@ -900,6 +964,49 @@ policy = model-optimal
         ] {
             let c = ConfigFile::parse(bad).unwrap();
             assert!(c.metrics().is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn ipc_section_parses_and_rides_into_gvm() {
+        let c = ConfigFile::parse(
+            "[ipc]\nmode = threads\nmax_connections = 256\n\
+             backpressure = 64\nshm_ring_bytes = 1048576\n",
+        )
+        .unwrap();
+        let i = c.ipc().unwrap();
+        assert_eq!(i.mode, IpcMode::Threads);
+        assert_eq!(i.max_connections, 256);
+        assert_eq!(i.backpressure, 64);
+        assert_eq!(i.shm_ring_bytes, 1 << 20);
+        let g = c.gvm().unwrap();
+        assert_eq!(g.daemon.ipc.mode, IpcMode::Threads);
+        assert_eq!(g.daemon.ipc.max_connections, 256);
+    }
+
+    #[test]
+    fn ipc_section_defaults_to_mux() {
+        let c = ConfigFile::parse("").unwrap();
+        let i = c.ipc().unwrap();
+        assert_eq!(i, IpcConfig::default());
+        assert_eq!(i.mode, IpcMode::Mux);
+        assert!(i.max_connections >= 1);
+        assert!(i.backpressure >= 1);
+        assert!(i.shm_ring_bytes > 0);
+        assert_eq!(c.gvm().unwrap().daemon.ipc.mode, IpcMode::Mux);
+    }
+
+    #[test]
+    fn bad_ipc_sections_rejected() {
+        for bad in [
+            "[ipc]\nmode = carrier-pigeon\n",
+            "[ipc]\nmax_connections = 0\n",
+            "[ipc]\nmax_connections = lots\n",
+            "[ipc]\nbackpressure = 0\n",
+            "[ipc]\nshm_ring_bytes = -1\n",
+        ] {
+            let c = ConfigFile::parse(bad).unwrap();
+            assert!(c.ipc().is_err(), "{bad:?} should be rejected");
         }
     }
 

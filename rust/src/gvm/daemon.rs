@@ -106,7 +106,9 @@
 //! their saved inputs with exactly-once accounting; `ClientMsg::Health`
 //! serves the live per-device view over the same registry counters.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::fs::File;
+use std::os::unix::fs::FileExt;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -122,6 +124,7 @@ use super::qos::{QueueMetrics, WeightedDeficitQueue, DEFAULT_TENANT};
 use super::scheduler::{plan_batch, Policy};
 use super::spill::{SpillConfig, SpillMetrics, SpillStore};
 use super::vgpu::{ClientId, Residency, VgpuState, VgpuTable};
+use crate::ipc::mux::{IpcConfig, MuxWaker};
 use crate::ipc::wire::{
     DeviceEntry, HealthEntry, TenantStatsEntry, UsageEntry,
 };
@@ -159,6 +162,50 @@ const FLUSH_LATENCY_BUCKETS_MS: [f64; 14] = [
     2500.0, 5000.0, 10000.0,
 ];
 
+/// Where a command's reply goes.  In-process clients and the legacy
+/// thread-per-connection adapter block on a dedicated channel per call
+/// ([`ReplySink::Channel`]); the mux reactor receives every reply on
+/// one shared channel tagged with the connection id and is woken via
+/// its self-pipe ([`ReplySink::Mux`]).
+#[derive(Clone)]
+pub enum ReplySink {
+    /// One dedicated reply channel per call (in-process / threaded).
+    Channel(mpsc::Sender<ServerMsg>),
+    /// Shared reply stream into the mux reactor.
+    Mux {
+        /// Reactor connection id the reply belongs to.
+        conn: u64,
+        /// The reactor's reply channel.
+        tx: mpsc::Sender<(u64, ServerMsg)>,
+        /// Nudges the reactor's poll loop after the send.
+        wake: MuxWaker,
+    },
+}
+
+impl ReplySink {
+    /// Deliver one reply.  On failure the undeliverable message comes
+    /// back so callers can log or drop it deliberately.
+    pub fn send(
+        &self,
+        msg: ServerMsg,
+    ) -> std::result::Result<(), ServerMsg> {
+        match self {
+            ReplySink::Channel(tx) => tx.send(msg).map_err(|e| e.0),
+            ReplySink::Mux { conn, tx, wake } => {
+                tx.send((*conn, msg)).map_err(|e| e.0 .1)?;
+                wake.wake();
+                Ok(())
+            }
+        }
+    }
+}
+
+impl From<mpsc::Sender<ServerMsg>> for ReplySink {
+    fn from(tx: mpsc::Sender<ServerMsg>) -> Self {
+        ReplySink::Channel(tx)
+    }
+}
+
 /// A client command routed to the daemon.
 pub struct Command {
     /// Sender's id (0 = unregistered; must be a `Req`).
@@ -166,7 +213,7 @@ pub struct Command {
     /// The message.
     pub msg: ClientMsg,
     /// Where the reply goes.
-    pub reply: mpsc::Sender<ServerMsg>,
+    pub reply: ReplySink,
 }
 
 /// One event of the daemon's select loop: a client command, an executor
@@ -252,6 +299,9 @@ pub struct DaemonConfig {
     pub faults: FaultConfig,
     /// Health detection + self-healing (`[health]` config section).
     pub health: HealthConfig,
+    /// Socket transport mode, admission limits, and shm data-plane
+    /// ring cap (`[ipc]` config section).
+    pub ipc: IpcConfig,
 }
 
 impl Default for DaemonConfig {
@@ -268,6 +318,7 @@ impl Default for DaemonConfig {
             spill: SpillConfig::default(),
             faults: FaultConfig::default(),
             health: HealthConfig::default(),
+            ipc: IpcConfig::default(),
         }
     }
 }
@@ -289,7 +340,7 @@ pub struct Daemon {
     /// execute step (see [`super::spill`]).
     spill: SpillStore,
     /// Clients blocked in STP waiting for their result.
-    waiters: Vec<(ClientId, mpsc::Sender<ServerMsg>)>,
+    waiters: Vec<(ClientId, ReplySink)>,
     /// When the oldest queued-but-unflushed job arrived.
     barrier_open_since: Option<Instant>,
     /// Cached artifact names (avoids a device-thread round-trip per STR).
@@ -307,7 +358,10 @@ pub struct Daemon {
     flush_requested: bool,
     /// Clients parked in `WaitFlush`/synchronous `FLH`, each waiting for
     /// every epoch up to its recorded one to settle.
-    flush_waiters: Vec<(u64, mpsc::Sender<ServerMsg>)>,
+    flush_waiters: Vec<(u64, ReplySink)>,
+    /// Per-client shared-memory data-plane rings (negotiated via
+    /// `ShmOpen`; torn down on `RLS`).
+    shm: HashMap<ClientId, ShmRing>,
     /// Registry-backed observability handles: every counter the daemon
     /// keeps lives in the shared [`Registry`], and `ClientMsg::Stats`
     /// is served as a view over these handles.
@@ -327,6 +381,29 @@ pub struct Daemon {
     health_metrics: HealthMetrics,
 }
 
+/// One client's negotiated shared-memory data plane.  The daemon holds
+/// open file descriptors to the client-created ring pair (the client
+/// unlinks the paths right after the handshake, so the fds are the
+/// only thing keeping the memory alive — no stale files to clean up):
+/// `input` carries SND payloads client→daemon, `output` carries RCV
+/// payloads daemon→client.  Descriptors on the socket are validated
+/// against `bytes` and the monotone generation counters before any
+/// read — a confused or malicious client can never make the daemon
+/// read outside its own ring.
+struct ShmRing {
+    /// Client→daemon payload ring (opened read-only).
+    input: File,
+    /// Daemon→client payload ring.
+    output: File,
+    /// Negotiated ring capacity, bytes (applies to each direction).
+    bytes: u64,
+    /// Highest SND generation consumed — descriptors must arrive with
+    /// strictly increasing generations (catches replays/races).
+    last_gen: u64,
+    /// Generation stamped on the next outbound `DataShm`.
+    out_gen: u64,
+}
+
 /// The daemon's handles into the shared metrics [`Registry`] — named
 /// node-level counters plus lazily-registered per-tenant and per-device
 /// series.  Monotone counters are bumped at the event sites; sampled
@@ -342,6 +419,11 @@ struct NodeMetrics {
     clients: Gauge,
     in_flight_flushes: Gauge,
     queued_completions: Gauge,
+    /// Payload bytes moved through the shared-memory data plane (both
+    /// directions) — bytes that never traversed the socket.
+    shm_bytes: Counter,
+    /// Shared-memory rings currently negotiated.
+    shm_rings: Gauge,
     flush_latency_ms: Histogram,
     devices: Vec<DeviceHandles>,
     /// Per-tenant handles, capped like the wire rows (BTreeMap:
@@ -454,6 +536,14 @@ impl NodeMetrics {
             queued_completions: registry.gauge(
                 "vgpu_pipeline_queued_completions",
                 "Submitted jobs awaiting their completion event",
+            ),
+            shm_bytes: registry.counter(
+                "vgpu_ipc_shm_bytes_total",
+                "Payload bytes moved via the shared-memory data plane",
+            ),
+            shm_rings: registry.gauge(
+                "vgpu_ipc_shm_rings",
+                "Clients with a negotiated shared-memory ring",
             ),
             flush_latency_ms: registry.histogram(
                 "vgpu_flush_latency_ms",
@@ -573,6 +663,7 @@ impl Daemon {
             inflight: BTreeMap::new(),
             flush_requested: false,
             flush_waiters: Vec::new(),
+            shm: HashMap::new(),
             metrics,
             ledger: UsageLedger::new(),
             qos_metrics,
@@ -679,6 +770,7 @@ impl Daemon {
         self.metrics
             .queued_completions
             .set(self.running_clients() as u64);
+        self.metrics.shm_rings.set(self.shm.len() as u64);
         for s in self.pool.status() {
             let Some(d) = self.metrics.devices.get(s.id as usize) else {
                 continue;
@@ -1065,39 +1157,7 @@ impl Daemon {
                     .map_err(|_| Error::Ipc("client gone".into()))?;
             }
             ClientMsg::Snd { slot, tensor } => {
-                let before = self.table.get(cmd.client)?.seg_bytes;
-                // A SND after Done/Failed starts the client's next
-                // request cycle.  Input slots survive the recycle: a
-                // settled job's own inputs left the segment at
-                // submission (or were dropped at failure time — see
-                // `fail_job`), so whatever is staged now can only be
-                // next-cycle tensors pre-staged during execution (the
-                // pipeline overlap).
-                let settled = {
-                    let v = self.table.get(cmd.client)?;
-                    matches!(
-                        v.state,
-                        VgpuState::Done { .. } | VgpuState::Failed { .. }
-                    )
-                };
-                if settled {
-                    self.table.recycle_outputs(cmd.client)?;
-                }
-                let bytes = tensor.bytes() as u64;
-                let staged = self.table.stage(cmd.client, slot, tensor);
-                if staged.is_ok() {
-                    // Count only bytes that actually landed — a rejected
-                    // SND (budget, bad slot) must not inflate the stat
-                    // or the tenant's metered bill.
-                    self.metrics.bytes_staged.add(bytes);
-                    let tenant = self.tenant_of(cmd.client);
-                    self.ledger.charge_staged(&tenant, bytes);
-                }
-                // The recycle above may have freed bytes even if staging
-                // failed — resync unconditionally before surfacing.
-                let after = self.table.get(cmd.client)?.seg_bytes;
-                self.sync_seg_mem(cmd.client, before, after);
-                staged?;
+                self.stage_tensor(cmd.client, slot, tensor)?;
                 self.ack(&cmd.reply)?;
             }
             ClientMsg::Str { workload } => {
@@ -1253,6 +1313,9 @@ impl Daemon {
                     }
                     self.pool.release(cmd.client);
                 }
+                // The shm ring dies with the registration: drop the fds
+                // so the (already-unlinked) memory can be reclaimed.
+                self.shm.remove(&cmd.client);
                 released?;
                 self.ack(&cmd.reply)?;
             }
@@ -1455,11 +1518,167 @@ impl Daemon {
                     })
                     .map_err(|_| Error::Ipc("client gone".into()))?;
             }
+            ClientMsg::ShmOpen { path, bytes } => {
+                // Must already hold a VGPU: the ring is per-client
+                // data-plane state, torn down with the registration.
+                self.table.get(cmd.client)?;
+                let cap = self.cfg.ipc.shm_ring_bytes;
+                if bytes == 0 || bytes > cap {
+                    return Err(Error::protocol(format!(
+                        "ShmOpen ring of {bytes} B (allowed: 1..={cap})"
+                    )));
+                }
+                // The client created and sized both files; the daemon
+                // only ever reads the input ring, and writes the output
+                // ring.  Holding the fds keeps the memory alive after
+                // the client unlinks the paths.
+                let input = File::open(&path)?;
+                let output = std::fs::OpenOptions::new()
+                    .read(true)
+                    .write(true)
+                    .open(format!("{path}.out"))?;
+                self.shm.insert(
+                    cmd.client,
+                    ShmRing {
+                        input,
+                        output,
+                        bytes,
+                        last_gen: 0,
+                        out_gen: 0,
+                    },
+                );
+                cmd.reply
+                    .send(ServerMsg::ShmOk { max_bytes: bytes })
+                    .map_err(|_| Error::Ipc("client gone".into()))?;
+            }
+            ClientMsg::SndShm {
+                slot,
+                offset,
+                len,
+                generation,
+            } => {
+                let tensor =
+                    self.shm_read(cmd.client, offset, len, generation)?;
+                self.metrics.shm_bytes.add(len);
+                self.stage_tensor(cmd.client, slot, tensor)?;
+                self.ack(&cmd.reply)?;
+            }
+            ClientMsg::RcvShm { slot } => {
+                let tensor = self.table.fetch(cmd.client, slot)?;
+                let reply = match self.shm.get_mut(&cmd.client) {
+                    Some(ring) => {
+                        let mut enc = Vec::new();
+                        tensor.encode(&mut enc);
+                        if (enc.len() as u64) <= ring.bytes {
+                            ring.output.write_all_at(&enc, 0)?;
+                            ring.out_gen += 1;
+                            self.metrics.shm_bytes.add(enc.len() as u64);
+                            ServerMsg::DataShm {
+                                offset: 0,
+                                len: enc.len() as u64,
+                                generation: ring.out_gen,
+                            }
+                        } else {
+                            // Output larger than the negotiated ring:
+                            // fall back to an inline frame rather than
+                            // failing the fetch.
+                            ServerMsg::Data { tensor }
+                        }
+                    }
+                    None => ServerMsg::Data { tensor },
+                };
+                cmd.reply
+                    .send(reply)
+                    .map_err(|_| Error::Ipc("client gone".into()))?;
+            }
         }
         Ok(())
     }
 
-    fn ack(&self, reply: &mpsc::Sender<ServerMsg>) -> Result<()> {
+    /// Shared `SND` staging path, used by inline frames and by
+    /// shared-memory descriptors alike so the two planes cannot drift:
+    /// recycle a settled cycle, stage the tensor, meter accepted
+    /// bytes, and resync the device's segment accounting.
+    fn stage_tensor(
+        &mut self,
+        client: ClientId,
+        slot: u32,
+        tensor: TensorValue,
+    ) -> Result<()> {
+        let before = self.table.get(client)?.seg_bytes;
+        // A SND after Done/Failed starts the client's next request
+        // cycle.  Input slots survive the recycle: a settled job's own
+        // inputs left the segment at submission (or were dropped at
+        // failure time — see `fail_job`), so whatever is staged now
+        // can only be next-cycle tensors pre-staged during execution
+        // (the pipeline overlap).
+        let settled = {
+            let v = self.table.get(client)?;
+            matches!(
+                v.state,
+                VgpuState::Done { .. } | VgpuState::Failed { .. }
+            )
+        };
+        if settled {
+            self.table.recycle_outputs(client)?;
+        }
+        let bytes = tensor.bytes() as u64;
+        let staged = self.table.stage(client, slot, tensor);
+        if staged.is_ok() {
+            // Count only bytes that actually landed — a rejected SND
+            // (budget, bad slot) must not inflate the stat or the
+            // tenant's metered bill.
+            self.metrics.bytes_staged.add(bytes);
+            let tenant = self.tenant_of(client);
+            self.ledger.charge_staged(&tenant, bytes);
+        }
+        // The recycle above may have freed bytes even if staging
+        // failed — resync unconditionally before surfacing.
+        let after = self.table.get(client)?.seg_bytes;
+        self.sync_seg_mem(client, before, after);
+        staged
+    }
+
+    /// Validate one inbound shm descriptor and copy the payload out of
+    /// the client's input ring.  Every check precedes the read: ring
+    /// negotiated, generation strictly increasing (no replays), and
+    /// `[offset, offset+len)` inside the negotiated capacity.
+    fn shm_read(
+        &mut self,
+        client: ClientId,
+        offset: u64,
+        len: u64,
+        generation: u64,
+    ) -> Result<TensorValue> {
+        let ring = self.shm.get_mut(&client).ok_or_else(|| {
+            Error::protocol(
+                "SndShm without a negotiated ring (ShmOpen first)",
+            )
+        })?;
+        if generation <= ring.last_gen {
+            return Err(Error::protocol(format!(
+                "SndShm generation {generation} not past {}",
+                ring.last_gen
+            )));
+        }
+        let in_ring = offset
+            .checked_add(len)
+            .map(|end| end <= ring.bytes)
+            .unwrap_or(false);
+        if !in_ring {
+            return Err(Error::protocol(format!(
+                "SndShm descriptor [{offset}, +{len}) outside the {} B ring",
+                ring.bytes
+            )));
+        }
+        let mut buf = vec![0u8; len as usize];
+        ring.input.read_exact_at(&mut buf, offset)?;
+        ring.last_gen = generation;
+        let mut pos = 0usize;
+        TensorValue::decode(&buf, &mut pos)
+    }
+
+    fn ack(&self, reply: &ReplySink) -> Result<()> {
         reply
             .send(ServerMsg::Ack)
             .map_err(|_| Error::Ipc("client gone".into()))

@@ -70,8 +70,10 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::ipc::mux::{IpcConfig, IpcMode, MuxOptions, MuxServer};
 use crate::ipc::{ClientMsg, ServerMsg};
 use crate::log;
+use crate::metrics::registry::Registry;
 use crate::metrics::{MetricsConfig, MetricsServer};
 use crate::runtime::{DeviceThread, TensorValue};
 use crate::{Error, Result};
@@ -114,6 +116,15 @@ pub struct Gvm {
     /// The `/metrics` HTTP listener, when `[metrics]` enables it (held
     /// for the GVM's lifetime; Drop stops the listener thread).
     _metrics: Option<MetricsServer>,
+    /// Socket transport mode + admission limits (`[ipc]` section) —
+    /// consumed by [`serve_unix`].
+    ipc: IpcConfig,
+    /// Tenant share table: per-tenant connection caps ride into the
+    /// socket adapter's admission middleware.
+    qos: QosConfig,
+    /// The daemon's metrics registry, shared with the socket adapter
+    /// (active-connection gauge, admission-reject counters).
+    registry: Arc<Registry>,
 }
 
 impl Gvm {
@@ -151,7 +162,10 @@ impl Gvm {
             devices.push(device);
         }
         let (cmd_tx, cmd_rx) = mpsc::channel::<Command>();
+        let ipc = cfg.daemon.ipc.clone();
+        let qos = cfg.daemon.pool.qos.clone();
         let daemon = Daemon::with_handles(cfg.daemon.clone(), handles)?;
+        let registry = daemon.registry();
         // The registry outlives run() consuming the daemon: the HTTP
         // listener renders it from its own thread.
         let metrics = if cfg.metrics.enabled {
@@ -171,6 +185,9 @@ impl Gvm {
             daemon_join: Some(daemon_join),
             _connect_lock: Arc::new(Mutex::new(())),
             _metrics: metrics,
+            ipc,
+            qos,
+            registry,
         })
     }
 
@@ -197,7 +214,7 @@ impl Gvm {
                     name: name.to_string(),
                     tenant: tenant.to_string(),
                 },
-                reply: reply_tx,
+                reply: reply_tx.into(),
             })
             .map_err(|_| Error::Ipc("GVM daemon is down".into()))?;
         let id = match reply_rx
@@ -234,113 +251,207 @@ impl Drop for Gvm {
 }
 
 /// Serve the GVM over a unix socket so *real OS processes* can connect
-/// (the `spmd_node` example).  Blocks the calling thread; each accepted
-/// connection gets a forwarding thread.
+/// (the `spmd_node` example).  Blocks the calling thread.
+///
+/// `[ipc] mode` selects the adapter: `mux` (the default) multiplexes
+/// every connection onto one reactor thread
+/// ([`crate::ipc::mux::MuxServer`] — O(1) threads for 10k clients);
+/// `threads` keeps the legacy one-thread-per-connection adapter as an
+/// A/B baseline.  Both enforce `[ipc] max_connections` and surface
+/// rejections as typed [`ServerMsg::Err`] frames counted in the
+/// metrics registry.
 pub fn serve_unix(gvm: &Gvm, socket_path: &std::path::Path) -> Result<()> {
-    use crate::ipc::Framed;
+    match gvm.ipc.mode {
+        IpcMode::Mux => {
+            let opts = MuxOptions::from_config(
+                &gvm.ipc,
+                gvm.qos.clone(),
+                Some(gvm.registry.clone()),
+            );
+            MuxServer::spawn(socket_path, gvm.sender(), opts)?
+                .join_blocking()
+        }
+        IpcMode::Threads => serve_unix_threads(gvm, socket_path),
+    }
+}
+
+/// The legacy thread-per-connection adapter (`[ipc] mode = threads`):
+/// each accepted connection gets a blocking forwarding thread.  Kept
+/// for A/B comparison against the mux reactor (`benches/fanin.rs`).
+fn serve_unix_threads(
+    gvm: &Gvm,
+    socket_path: &std::path::Path,
+) -> Result<()> {
+    serve_unix_threads_parts(
+        socket_path,
+        gvm.sender(),
+        &gvm.ipc,
+        &gvm.registry,
+    )
+}
+
+/// [`serve_unix_threads`] on its raw parts, so the experiment harness,
+/// `benches/fanin.rs`, and the fan-in tests can A/B the adapter over a
+/// mock daemon ([`Daemon::with_handles`]) without a full [`Gvm`].
+/// Blocks the calling thread for the life of the listener.
+pub fn serve_unix_threads_parts(
+    socket_path: &std::path::Path,
+    cmd_tx: mpsc::Sender<Command>,
+    ipc: &IpcConfig,
+    registry: &Arc<Registry>,
+) -> Result<()> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
     let _ = std::fs::remove_file(socket_path);
     let listener = std::os::unix::net::UnixListener::bind(socket_path)?;
     log::info!("GVM listening on {}", socket_path.display());
+    let max_connections = ipc.max_connections;
+    let active = Arc::new(AtomicUsize::new(0));
+    let active_gauge = registry.gauge(
+        "vgpu_ipc_active_connections",
+        "Client connections currently held by the socket adapter",
+    );
+    let rejects = registry.counter_with(
+        "vgpu_ipc_admission_rejects_total",
+        "Connections/commands rejected by the admission middleware",
+        &[("reason", "max_connections")],
+    );
     for conn in listener.incoming() {
         let stream = conn?;
-        let cmd_tx = gvm.sender();
+        // Admission: over the connection cap, the client gets a typed
+        // error frame and the socket closes — never a silent drop and
+        // never an unbounded thread pile-up.
+        if active.load(Ordering::SeqCst) >= max_connections {
+            rejects.inc();
+            let err = ServerMsg::Err {
+                msg: format!("connection limit {max_connections} reached"),
+            };
+            let mut framed = crate::ipc::Framed::new(stream);
+            let _ = framed.send(&err.encode());
+            continue;
+        }
+        let cmd_tx = cmd_tx.clone();
+        let n = active.fetch_add(1, Ordering::SeqCst) + 1;
+        active_gauge.set(n as u64);
+        let active = active.clone();
+        let active_gauge = active_gauge.clone();
         std::thread::spawn(move || {
-            let mut framed = Framed::new(stream);
-            let mut client_id: u64 = 0;
-            loop {
-                let frame = match framed.recv() {
-                    Ok(Some(f)) => f,
-                    Ok(None) => break,
-                    Err(e) => {
-                        log::warn!("client read error: {e}");
-                        break;
-                    }
-                };
-                let msg = match ClientMsg::decode(&frame) {
-                    Ok(m) => m,
-                    Err(e) => {
-                        log::warn!("client frame decode error: {e}");
-                        break;
-                    }
-                };
-                let is_req = matches!(msg, ClientMsg::Req { .. });
-                let is_rls = matches!(msg, ClientMsg::Rls);
-                // One VGPU per connection: a second REQ would overwrite
-                // client_id and orphan (leak) the first registration at
-                // disconnect time — reject it at the adapter.
-                if is_req && client_id != 0 {
-                    let err = ServerMsg::Err {
-                        msg: "REQ on an already-registered connection \
-                              (RLS first)"
-                            .into(),
-                    };
-                    if framed.send(&err.encode()).is_err() {
-                        break;
-                    }
-                    continue;
-                }
-                let (reply_tx, reply_rx) = mpsc::channel();
-                if cmd_tx
-                    .send(Command {
-                        client: client_id,
-                        msg,
-                        reply: reply_tx,
-                    })
-                    .is_err()
-                {
-                    break;
-                }
-                let reply = match reply_rx.recv() {
-                    Ok(r) => r,
-                    Err(_) => break,
-                };
-                if is_req {
-                    // A successful REQ is surfaced to the client as Ack
-                    // (the id stays a server-side detail); a rejected
-                    // REQ (table full, placement failed) must forward
-                    // the error, not mask it as success.
-                    let out = match &reply {
-                        ServerMsg::Queued { ticket } => {
-                            client_id = *ticket;
-                            ServerMsg::Ack.encode()
-                        }
-                        _ => reply.encode(),
-                    };
-                    if framed.send(&out).is_err() {
-                        break;
-                    }
-                    continue;
-                }
-                // A client-initiated RLS that succeeded leaves nothing
-                // to clean up at disconnect time.
-                if is_rls && matches!(reply, ServerMsg::Ack) {
-                    client_id = 0;
-                }
-                if framed.send(&reply.encode()).is_err() {
-                    break;
-                }
-            }
-            // Disconnect cleanup: a client that vanished without `RLS`
-            // (crash, kill, dropped socket) must not leak its VGPU,
-            // its pool binding, or its queued-work estimate — release
-            // it on its behalf and wait for the daemon to finish so
-            // accounting is settled before the thread exits.
-            if client_id != 0 {
-                let (reply_tx, reply_rx) = mpsc::channel();
-                if cmd_tx
-                    .send(Command {
-                        client: client_id,
-                        msg: ClientMsg::Rls,
-                        reply: reply_tx,
-                    })
-                    .is_ok()
-                {
-                    let _ = reply_rx.recv();
-                }
-            }
+            threaded_conn_loop(stream, cmd_tx);
+            let n = active.fetch_sub(1, Ordering::SeqCst) - 1;
+            active_gauge.set(n as u64);
         });
     }
     Ok(())
+}
+
+/// One connection's blocking forward loop (threads mode): frame in,
+/// command to the daemon, reply frame out.
+fn threaded_conn_loop(
+    stream: std::os::unix::net::UnixStream,
+    cmd_tx: mpsc::Sender<Command>,
+) {
+    use crate::ipc::Framed;
+    let mut framed = Framed::new(stream);
+    let mut client_id: u64 = 0;
+    // Hot ingestion path: one reusable frame buffer for the life of
+    // the connection instead of an allocation per frame.
+    let mut frame = Vec::new();
+    loop {
+        match framed.recv_into(&mut frame) {
+            Ok(true) => {}
+            Ok(false) => break,
+            Err(e) => {
+                log::warn!("client read error: {e}");
+                break;
+            }
+        }
+        let msg = match ClientMsg::decode(&frame) {
+            Ok(m) => m,
+            Err(e) => {
+                // Tell the client *why* before closing — a silent
+                // drop is indistinguishable from a server crash.
+                log::warn!("client frame decode error: {e}");
+                let err = ServerMsg::Err {
+                    msg: format!("frame decode error: {e}"),
+                };
+                let _ = framed.send(&err.encode());
+                break;
+            }
+        };
+        let is_req = matches!(msg, ClientMsg::Req { .. });
+        let is_rls = matches!(msg, ClientMsg::Rls);
+        // One VGPU per connection: a second REQ would overwrite
+        // client_id and orphan (leak) the first registration at
+        // disconnect time — reject it at the adapter.
+        if is_req && client_id != 0 {
+            let err = ServerMsg::Err {
+                msg: "REQ on an already-registered connection \
+                      (RLS first)"
+                    .into(),
+            };
+            if framed.send(&err.encode()).is_err() {
+                break;
+            }
+            continue;
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if cmd_tx
+            .send(Command {
+                client: client_id,
+                msg,
+                reply: reply_tx.into(),
+            })
+            .is_err()
+        {
+            break;
+        }
+        let reply = match reply_rx.recv() {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        if is_req {
+            // A successful REQ is surfaced to the client as Ack
+            // (the id stays a server-side detail); a rejected
+            // REQ (table full, placement failed) must forward
+            // the error, not mask it as success.
+            let out = match &reply {
+                ServerMsg::Queued { ticket } => {
+                    client_id = *ticket;
+                    ServerMsg::Ack.encode()
+                }
+                _ => reply.encode(),
+            };
+            if framed.send(&out).is_err() {
+                break;
+            }
+            continue;
+        }
+        // A client-initiated RLS that succeeded leaves nothing
+        // to clean up at disconnect time.
+        if is_rls && matches!(reply, ServerMsg::Ack) {
+            client_id = 0;
+        }
+        if framed.send(&reply.encode()).is_err() {
+            break;
+        }
+    }
+    // Disconnect cleanup: a client that vanished without `RLS`
+    // (crash, kill, dropped socket) must not leak its VGPU,
+    // its pool binding, or its queued-work estimate — release
+    // it on its behalf and wait for the daemon to finish so
+    // accounting is settled before the thread exits.
+    if client_id != 0 {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if cmd_tx
+            .send(Command {
+                client: client_id,
+                msg: ClientMsg::Rls,
+                reply: reply_tx.into(),
+            })
+            .is_ok()
+        {
+            let _ = reply_rx.recv();
+        }
+    }
 }
 
 /// Convenience used throughout the harness and examples: run one

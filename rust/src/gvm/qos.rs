@@ -66,6 +66,12 @@ pub struct TenantShare {
     /// (`None` = unlimited).  Exceeding it fails `STR` with a typed
     /// [`Error::Gvm`] throttle.
     pub rate_limit: Option<u32>,
+    /// Max simultaneous socket connections the tenant may hold open
+    /// (`None` = unlimited).  Enforced by the transport admission
+    /// middleware at `REQ` time: over the cap, the connection gets a
+    /// typed [`crate::ipc::ServerMsg::Err`] and is closed — never a
+    /// silent stall.
+    pub conn_limit: Option<u32>,
 }
 
 impl Default for TenantShare {
@@ -73,6 +79,7 @@ impl Default for TenantShare {
         Self {
             weight: 1.0,
             rate_limit: None,
+            conn_limit: None,
         }
     }
 }
@@ -126,6 +133,19 @@ impl QosConfig {
         Ok(())
     }
 
+    /// Set (or update) a tenant's simultaneous-connection cap (>= 1).
+    pub fn set_conn_limit(&mut self, tenant: &str, cap: u32) -> Result<()> {
+        if cap == 0 {
+            return Err(Error::Config(
+                "[qos] conn_limit must be >= 1 (omit the tenant for unlimited)"
+                    .into(),
+            ));
+        }
+        self.shares.entry(tenant.to_string()).or_default().conn_limit =
+            Some(cap);
+        Ok(())
+    }
+
     /// Set the weight used for tenants absent from the share table.
     pub fn set_default_weight(&mut self, weight: f64) -> Result<()> {
         self.default_weight = check_weight(weight)?;
@@ -147,6 +167,13 @@ impl QosConfig {
         self
     }
 
+    /// Builder-style [`QosConfig::set_conn_limit`]; panics on cap = 0.
+    pub fn with_conn_limit(mut self, tenant: &str, cap: u32) -> Self {
+        self.set_conn_limit(tenant, cap)
+            .expect("with_conn_limit: cap must be >= 1");
+        self
+    }
+
     /// A tenant's service weight (the default weight when unlisted).
     pub fn weight(&self, tenant: &str) -> f64 {
         self.shares
@@ -158,6 +185,11 @@ impl QosConfig {
     /// A tenant's queued-job cap, if any.
     pub fn rate_limit(&self, tenant: &str) -> Option<u32> {
         self.shares.get(tenant).and_then(|s| s.rate_limit)
+    }
+
+    /// A tenant's simultaneous-connection cap, if any.
+    pub fn conn_limit(&self, tenant: &str) -> Option<u32> {
+        self.shares.get(tenant).and_then(|s| s.conn_limit)
     }
 
     /// Configured tenants, in id order.
@@ -458,6 +490,18 @@ mod tests {
         assert!(q.set_default_weight(f64::INFINITY).is_err());
         assert!(q.set_rate_limit("a", 0).is_err());
         assert!(q.set_weight("a", 2.5).is_ok());
+    }
+
+    #[test]
+    fn conn_limits_default_and_override() {
+        let mut q = QosConfig::default().with_conn_limit("gold", 4);
+        assert_eq!(q.conn_limit("gold"), Some(4));
+        assert!(q.conn_limit("unlisted").is_none());
+        assert!(q.set_conn_limit("a", 0).is_err());
+        assert!(q.set_conn_limit("a", 1).is_ok());
+        assert_eq!(q.conn_limit("a"), Some(1));
+        // A conn_limit entry must not disturb the tenant's weight.
+        assert_eq!(q.weight("gold"), 1.0);
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Extension experiment for the socket transport (`vgpu exp fanin`):
+//! client fan-in at smoke scale over a mock-handle daemon, A/B-ing the
+//! mux reactor (`[ipc] mode = mux`, one thread for every connection)
+//! against the legacy thread-per-connection adapter, and the
+//! shared-memory data plane against inline frames.  `cargo bench
+//! --bench fanin` runs the same comparison at 100–10k clients.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::ExpOutput;
+use crate::api::VgpuClient;
+use crate::config::DeviceConfig;
+use crate::gvm::devices::{PlacementPolicy, PoolConfig};
+use crate::gvm::qos::QosConfig;
+use crate::gvm::{Command, Daemon, DaemonConfig};
+use crate::ipc::mux::{IpcConfig, MuxOptions, MuxServer};
+use crate::metrics::registry::Registry;
+use crate::runtime::{ExecHandle, TensorValue};
+use crate::util::table::{f2, Table};
+use crate::Result;
+
+/// Simultaneous clients per cell (smoke scale; the bench goes to 10k).
+const CLIENT_SWEEP: [usize; 3] = [8, 32, 64];
+
+/// SND→STR→STP→RCV cycles per client.
+const CYCLES: usize = 4;
+
+/// Elements in the staged tensor (4 KiB of f32s).
+const TENSOR_ELEMS: usize = 1024;
+
+/// A handle that echoes its inputs as outputs instantly, so every
+/// measured millisecond is transport + daemon, not device time.
+fn echo_handle() -> ExecHandle {
+    ExecHandle::mock(vec!["echo".into()], |_, inputs| Ok(inputs))
+}
+
+/// Mock daemon: two echo devices, `barrier = 1` (every STR flushes).
+fn spawn_daemon() -> Result<(mpsc::Sender<Command>, Arc<Registry>)> {
+    let cfg = DaemonConfig {
+        barrier: Some(1),
+        max_clients: 256,
+        pool: PoolConfig::homogeneous(
+            2,
+            DeviceConfig::tesla_c2070(),
+            PlacementPolicy::RoundRobin,
+        ),
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::with_handles(cfg, vec![echo_handle(), echo_handle()])?;
+    let registry = daemon.registry();
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+    Ok((tx, registry))
+}
+
+/// One client's full life: REQ, optional shm negotiation, `CYCLES`
+/// SND→STR→STP→RCV cycles, RLS.  Returns the cycling wall time in ms.
+fn client_cycles(
+    path: &std::path::Path,
+    name: &str,
+    shm: bool,
+) -> Result<f64> {
+    let mut c = VgpuClient::connect_unix_as(path, name, "")?;
+    if shm && !c.negotiate_shm(1 << 20)? {
+        return Err(crate::Error::Ipc(
+            "shm negotiation rejected by the daemon".into(),
+        ));
+    }
+    let t = TensorValue::F32(vec![TENSOR_ELEMS], vec![1.0; TENSOR_ELEMS]);
+    let sw = Instant::now();
+    for _ in 0..CYCLES {
+        c.snd(0, t.clone())?;
+        c.str_("echo")?;
+        c.stp()?;
+        let _ = c.rcv(0)?;
+    }
+    let ms = sw.elapsed().as_secs_f64() * 1e3;
+    c.rls()?;
+    Ok(ms)
+}
+
+/// Run `clients` concurrent client threads against `path`; returns
+/// (overall wall ms, mean per-client cycling ms).
+fn fan_in(
+    path: &std::path::Path,
+    tag: &str,
+    clients: usize,
+    shm: bool,
+) -> Result<(f64, f64)> {
+    let sw = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|i| {
+            let path = path.to_path_buf();
+            let name = format!("{tag}-{i}");
+            std::thread::spawn(move || client_cycles(&path, &name, shm))
+        })
+        .collect();
+    let mut sum = 0.0;
+    for h in handles {
+        sum += h
+            .join()
+            .map_err(|_| crate::Error::Ipc("client thread panicked".into()))??;
+    }
+    let wall = sw.elapsed().as_secs_f64() * 1e3;
+    Ok((wall, sum / clients as f64))
+}
+
+/// The `fanin` experiment: adapter mode × data plane × client count,
+/// over a unix socket to a mock daemon.
+pub fn fanin_sweep() -> Result<ExpOutput> {
+    let mut table = Table::new(&[
+        "mode",
+        "plane",
+        "clients",
+        "wall_ms",
+        "client_ms",
+        "cycles_per_s",
+    ]);
+    let mut notes = Vec::new();
+
+    for mode in ["mux", "threads"] {
+        let (tx, registry) = spawn_daemon()?;
+        let socket = std::env::temp_dir().join(format!(
+            "vgpu-fanin-{mode}-{}.sock",
+            std::process::id()
+        ));
+        let ipc = IpcConfig::default();
+        // `_server` holds the mux reactor alive for this mode's rows;
+        // the threads adapter blocks its own detached thread instead.
+        let mut _server = None;
+        match mode {
+            "mux" => {
+                _server = Some(MuxServer::spawn(
+                    &socket,
+                    tx.clone(),
+                    MuxOptions::from_config(
+                        &ipc,
+                        QosConfig::default(),
+                        Some(registry.clone()),
+                    ),
+                )?);
+            }
+            _ => {
+                let sock2 = socket.clone();
+                let tx2 = tx.clone();
+                let reg2 = registry.clone();
+                std::thread::spawn(move || {
+                    let _ = crate::gvm::serve_unix_threads_parts(
+                        &sock2, tx2, &ipc, &reg2,
+                    );
+                });
+            }
+        }
+        for _ in 0..200 {
+            if socket.exists() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+
+        for shm in [false, true] {
+            let plane = if shm { "shm" } else { "inline" };
+            for clients in CLIENT_SWEEP {
+                let (wall, client_ms) = fan_in(
+                    &socket,
+                    &format!("fanin-{mode}-{plane}"),
+                    clients,
+                    shm,
+                )?;
+                let cps = (clients * CYCLES) as f64 / (wall / 1e3);
+                table.row(vec![
+                    mode.to_string(),
+                    plane.to_string(),
+                    clients.to_string(),
+                    f2(wall),
+                    f2(client_ms),
+                    f2(cps),
+                ]);
+            }
+        }
+        let _ = std::fs::remove_file(&socket);
+    }
+
+    notes.push(format!(
+        "mux serves every connection from ONE reactor thread (O(1) in \
+         client count); threads spawns one forwarder per connection.  \
+         Each cell: N clients x {CYCLES} SND({} KiB)->STR->STP->RCV \
+         cycles against echo devices, so rows measure transport + \
+         daemon dispatch only",
+        TENSOR_ELEMS * 4 / 1024
+    ));
+    notes.push(
+        "plane = shm carries payloads through per-client shared-memory \
+         rings (the socket sees only descriptors); plane = inline is \
+         the frame-encoded fallback.  cargo bench --bench fanin runs \
+         the same grid at 100-10k clients and records BENCH_fanin.json"
+            .into(),
+    );
+    Ok(ExpOutput {
+        id: "fanin".into(),
+        title: "Client fan-in: mux reactor vs thread-per-connection, \
+                shm vs inline data plane"
+            .into(),
+        table,
+        notes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fanin_table_covers_the_grid() {
+        let out = fanin_sweep().unwrap();
+        // 2 modes x 2 planes x 3 client counts.
+        assert_eq!(out.table.len(), 12);
+        assert!(out.notes.iter().any(|n| n.contains("reactor")));
+    }
+}

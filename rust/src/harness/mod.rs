@@ -31,6 +31,7 @@
 //! | pipeline | async flush pipeline: depth x devices x batch, overlap gain |
 //! | spill   | host-memory spill: oversubscription x policy, thrash vs errors |
 //! | chaos   | fault plane: fault rate x remediation, completed vs lost |
+//! | fanin   | client fan-in: mux vs thread-per-conn, shm vs inline |
 //! | ext-multigpu | extension: multi-GPU node scaling |
 //! | ext-cluster | extension: cluster weak scaling (Fig. 11) |
 //! | ext-fig18-socket | extension: Fig. 18 over the socket transport |
@@ -38,6 +39,7 @@
 pub mod ablations;
 pub mod chaos;
 pub mod devices;
+pub mod fanin;
 pub mod figures;
 pub mod pipeline;
 pub mod qos;
@@ -109,6 +111,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "pipeline",
     "spill",
     "chaos",
+    "fanin",
     "ext-multigpu",
     "ext-cluster",
     "ext-fig18-socket",
@@ -142,6 +145,7 @@ pub fn run(id: &str) -> Result<ExpOutput> {
         "pipeline" => pipeline::pipeline_sweep(),
         "spill" => spill::spill_sweep(),
         "chaos" => chaos::chaos_sweep(),
+        "fanin" => fanin::fanin_sweep(),
         "ext-multigpu" => ablations::multi_gpu_scaling(),
         "ext-cluster" => ablations::cluster_scaling(),
         "ext-fig18-socket" => figures::overhead_socket_figure(),

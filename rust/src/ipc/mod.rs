@@ -7,16 +7,27 @@
 //! * [`transport`] — a unix-domain-socket transport for *real* separate
 //!   OS processes (the `spmd_node` example re-execs itself into N client
 //!   processes), and length-prefixed framing shared by both sides;
+//! * [`mux`] — the server side of that socket: an event-driven reactor
+//!   multiplexing every client connection onto one thread, with
+//!   admission middleware (connection caps, per-tenant caps,
+//!   backpressure) in front of the protocol handler;
 //! * in-process channels (used by [`crate::gvm::Gvm::connect`]) for
 //!   threads emulating processes — zero-copy, the lower bound on
 //!   virtualization-layer overhead.
 //!
+//! Bulk `SND`/output payloads can additionally ride a shared-memory
+//! data plane (`ShmOpen`/`SndShm`/`RcvShm`/`DataShm` in [`wire`]): the
+//! socket then carries only `(offset, len, generation)` descriptors,
+//! mirroring the paper's POSIX-shm data path.
+//!
 //! [`wire`] defines the message set, mirroring the paper's API verbs:
 //! `REQ`, `SND`, `STR`, `STP`, `RCV`, `RLS` (Fig. 13).
 
+pub mod mux;
 pub mod transport;
 pub mod wire;
 
+pub use mux::{IpcConfig, IpcMode, MuxOptions, MuxServer, MuxWaker};
 pub use transport::{Framed, Transport};
 pub use wire::{
     ClientMsg, DeviceEntry, HealthEntry, ServerMsg, TenantStatsEntry,

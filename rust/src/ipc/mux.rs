@@ -1,0 +1,978 @@
+//! Multiplexed event-driven socket transport for massive client fan-in.
+//!
+//! The original unix-socket adapter in [`crate::gvm::serve_unix`] spawned
+//! one forwarding OS thread per accepted connection and parked it in a
+//! blocking `recv` — fine for a rack of SPMD ranks, fatal for the
+//! ROADMAP's "millions of users": 10k clients meant 10k idle stacks and
+//! a thundering herd of wakeups.  This module replaces that with a
+//! readiness-polled reactor:
+//!
+//! * **One adapter thread** ([`MuxServer`], `vgpu-ipc-mux`) owns every
+//!   client socket.  A std-only `poll(2)` FFI shim ([`poll_fds`]) waits
+//!   on the listener, a self-pipe wake channel, and all connections at
+//!   once; frames are decoded incrementally from per-connection read
+//!   buffers, so thread count is O(1) in the number of clients.
+//! * **Admission middleware** sits in front of the protocol handler,
+//!   not woven through it: a global connection cap, per-tenant
+//!   connection caps from `[qos] conn_limit`, and backpressure when too
+//!   many commands are in flight toward the daemon.  Every rejection is
+//!   a typed [`ServerMsg::Err`] frame — never a silent drop or a stall
+//!   — and is counted in `vgpu_ipc_admission_rejects_total{reason}`.
+//! * **Replies flow back asynchronously**: each forwarded
+//!   [`Command`] carries a [`ReplySink::Mux`] tag naming the
+//!   connection; the daemon's send wakes the reactor via [`MuxWaker`]
+//!   (a byte on the self-pipe), and the reply frame is flushed on the
+//!   next writable edge.
+//!
+//! The legacy thread-per-connection adapter remains available via
+//! `[ipc] mode = threads` for A/B comparison (`benches/fanin.rs`
+//! measures exactly that).  Bulk payload movement is handled one layer
+//! up by the shared-memory data plane (`ShmOpen`/`SndShm`/`RcvShm` in
+//! [`crate::ipc::wire`]); the mux loop only ever carries descriptors
+//! and control frames.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::gvm::daemon::{Command, ReplySink};
+use crate::gvm::qos::{QosConfig, DEFAULT_TENANT};
+use crate::ipc::transport::MAX_FRAME;
+use crate::ipc::{ClientMsg, ServerMsg};
+use crate::metrics::registry::{Counter, Gauge, Registry};
+use crate::{Error, Result};
+
+// ---------------------------------------------------------------------------
+// poll(2) shim
+// ---------------------------------------------------------------------------
+
+/// One entry in a `poll(2)` set.  Layout-compatible with libc's
+/// `struct pollfd` on every Tier-1 unix target.
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PollFd {
+    /// File descriptor to watch.
+    pub fd: RawFd,
+    /// Requested events (`POLLIN` / `POLLOUT`).
+    pub events: i16,
+    /// Returned events, filled by the kernel.
+    pub revents: i16,
+}
+
+impl PollFd {
+    /// Watch `fd` for `events`.
+    pub(crate) fn new(fd: RawFd, events: i16) -> Self {
+        Self {
+            fd,
+            events,
+            revents: 0,
+        }
+    }
+}
+
+/// Readable without blocking.
+pub(crate) const POLLIN: i16 = 0x001;
+/// Writable without blocking.
+pub(crate) const POLLOUT: i16 = 0x004;
+/// Error condition (always reported, never requested).
+pub(crate) const POLLERR: i16 = 0x008;
+/// Peer hung up (always reported, never requested).
+pub(crate) const POLLHUP: i16 = 0x010;
+/// Invalid fd in the set (always reported, never requested).
+pub(crate) const POLLNVAL: i16 = 0x020;
+
+mod ffi {
+    use std::os::raw::{c_int, c_ulong};
+    extern "C" {
+        pub fn poll(
+            fds: *mut super::PollFd,
+            nfds: c_ulong,
+            timeout: c_int,
+        ) -> c_int;
+    }
+}
+
+/// Block until at least one descriptor is ready (or `timeout_ms`
+/// elapses; `-1` = forever).  Retries transparently on `EINTR`.
+/// Returns the number of entries with non-zero `revents`.
+pub(crate) fn poll_fds(
+    fds: &mut [PollFd],
+    timeout_ms: i32,
+) -> std::io::Result<usize> {
+    loop {
+        let rc = unsafe {
+            ffi::poll(
+                fds.as_mut_ptr(),
+                fds.len() as std::os::raw::c_ulong,
+                timeout_ms,
+            )
+        };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = std::io::Error::last_os_error();
+        if err.kind() != std::io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Waker
+// ---------------------------------------------------------------------------
+
+/// Wakes the mux reactor from another thread (the daemon's reply path)
+/// by writing a byte to a nonblocking self-pipe the reactor polls.
+/// Cheap to clone; wake-when-full is a no-op because a pending byte
+/// already guarantees the reactor will run.
+#[derive(Debug, Clone)]
+pub struct MuxWaker {
+    tx: Arc<UnixStream>,
+}
+
+impl MuxWaker {
+    /// Build a waker + the receiving end the reactor polls.
+    pub fn pair() -> Result<(MuxWaker, UnixStream)> {
+        let (tx, rx) = UnixStream::pair()?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        Ok((MuxWaker { tx: Arc::new(tx) }, rx))
+    }
+
+    /// Nudge the reactor.  Errors (pipe full, reactor gone) are
+    /// deliberately ignored: full means a wake is already pending,
+    /// gone means nobody is left to wake.
+    pub fn wake(&self) {
+        let _ = (&*self.tx).write(&[1u8]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Config
+// ---------------------------------------------------------------------------
+
+/// Which socket adapter `serve_unix` runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IpcMode {
+    /// Event-driven reactor: one thread for all connections (default).
+    Mux,
+    /// Legacy thread-per-connection adapter (A/B baseline).
+    Threads,
+}
+
+/// The `[ipc]` config section: transport mode, admission limits, and
+/// the shared-memory data-plane ring size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IpcConfig {
+    /// Adapter flavour (`mode = mux | threads`).
+    pub mode: IpcMode,
+    /// Global cap on simultaneous client connections; the N+1st gets a
+    /// typed [`ServerMsg::Err`] and is closed.
+    pub max_connections: usize,
+    /// Max commands in flight toward the daemon (sent, reply not yet
+    /// delivered) before new frames are rejected with a typed error
+    /// instead of being queued — the saturation valve for the event
+    /// channel.
+    pub backpressure: usize,
+    /// Largest shared-memory ring a client may negotiate with
+    /// `ShmOpen`, in bytes (also the default the client asks for).
+    pub shm_ring_bytes: u64,
+}
+
+impl Default for IpcConfig {
+    fn default() -> Self {
+        Self {
+            mode: IpcMode::Mux,
+            max_connections: 1024,
+            backpressure: 1024,
+            shm_ring_bytes: 16 << 20,
+        }
+    }
+}
+
+/// Everything [`MuxServer::spawn`] needs besides the socket path and
+/// the daemon's command channel.
+#[derive(Clone)]
+pub struct MuxOptions {
+    /// Global connection cap (see [`IpcConfig::max_connections`]).
+    pub max_connections: usize,
+    /// In-flight command cap (see [`IpcConfig::backpressure`]).
+    pub backpressure: usize,
+    /// Tenant share table — per-tenant `conn_limit` caps are enforced
+    /// at `REQ` admission.
+    pub qos: QosConfig,
+    /// Registry for `vgpu_ipc_*` gauges/counters; `None` publishes to
+    /// a private throwaway registry.
+    pub registry: Option<Arc<Registry>>,
+}
+
+impl MuxOptions {
+    /// Options from the `[ipc]` + `[qos]` config sections.
+    pub fn from_config(
+        ipc: &IpcConfig,
+        qos: QosConfig,
+        registry: Option<Arc<Registry>>,
+    ) -> Self {
+        Self {
+            max_connections: ipc.max_connections,
+            backpressure: ipc.backpressure,
+            qos,
+            registry,
+        }
+    }
+}
+
+impl Default for MuxOptions {
+    fn default() -> Self {
+        Self::from_config(&IpcConfig::default(), QosConfig::default(), None)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reactor internals
+// ---------------------------------------------------------------------------
+
+/// Frames a client may queue ahead of the daemon before the reactor
+/// stops polling its socket readable (per-connection backpressure:
+/// excess bytes stay in the kernel buffer, eventually blocking the
+/// client's own send — exactly the pushback we want).
+const INBOX_CAP: usize = 64;
+
+/// What kind of command a connection is waiting on — REQ and RLS
+/// replies mutate the adapter's registration state, so the reactor
+/// must remember which verb it forwarded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PendingKind {
+    Req,
+    Rls,
+    Other,
+}
+
+/// Per-connection reactor state.
+struct Conn {
+    stream: UnixStream,
+    /// Raw inbound bytes not yet framed.
+    rd: Vec<u8>,
+    /// Outbound bytes not yet written.
+    wr: Vec<u8>,
+    wr_pos: usize,
+    /// Daemon-side client id (0 = no VGPU registered).
+    client: u64,
+    /// Tenant counted against `conn_limit` (empty = not counted).
+    tenant: String,
+    /// Command forwarded to the daemon, reply not yet delivered.
+    pending: Option<PendingKind>,
+    /// Decoded frames awaiting their turn (one command in flight per
+    /// connection preserves the protocol's call/reply ordering).
+    inbox: VecDeque<ClientMsg>,
+    /// Flush `wr` then drop the connection.
+    closing: bool,
+    /// Remove this connection on the next sweep.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: UnixStream) -> Self {
+        Self {
+            stream,
+            rd: Vec::new(),
+            wr: Vec::new(),
+            wr_pos: 0,
+            client: 0,
+            tenant: String::new(),
+            pending: None,
+            inbox: VecDeque::new(),
+            closing: false,
+            dead: false,
+        }
+    }
+}
+
+/// Mux-plane instrument handles.
+struct MuxMetrics {
+    active: Gauge,
+    rej_max: Counter,
+    rej_tenant: Counter,
+    rej_backpressure: Counter,
+}
+
+impl MuxMetrics {
+    fn new(registry: &Registry) -> Self {
+        let rej = |reason: &str| {
+            registry.counter_with(
+                "vgpu_ipc_admission_rejects_total",
+                "Connections/commands rejected by the admission middleware",
+                &[("reason", reason)],
+            )
+        };
+        Self {
+            active: registry.gauge(
+                "vgpu_ipc_active_connections",
+                "Client connections currently held by the socket adapter",
+            ),
+            rej_max: rej("max_connections"),
+            rej_tenant: rej("tenant_cap"),
+            rej_backpressure: rej("backpressure"),
+        }
+    }
+}
+
+/// Append one length-prefixed server frame to an outbound buffer.
+fn push_frame(wr: &mut Vec<u8>, msg: &ServerMsg) {
+    let enc = msg.encode();
+    wr.extend_from_slice(&(enc.len() as u32).to_le_bytes());
+    wr.extend_from_slice(&enc);
+}
+
+fn dec_tenant(tenant_conns: &mut HashMap<String, u32>, tenant: &str) {
+    if tenant.is_empty() {
+        return;
+    }
+    if let Some(n) = tenant_conns.get_mut(tenant) {
+        *n = n.saturating_sub(1);
+        if *n == 0 {
+            tenant_conns.remove(tenant);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MuxServer
+// ---------------------------------------------------------------------------
+
+/// The event-driven socket adapter: binds a unix socket and serves
+/// every client from a single reactor thread.  Dropping it (or calling
+/// [`MuxServer::stop`]) shuts the reactor down.
+pub struct MuxServer {
+    handle: Option<JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+    waker: MuxWaker,
+}
+
+impl MuxServer {
+    /// Bind `path` and start the reactor thread.  Commands flow into
+    /// `cmd_tx` (the daemon's event channel); replies ride
+    /// [`ReplySink::Mux`] back to the reactor.
+    pub fn spawn(
+        path: &Path,
+        cmd_tx: mpsc::Sender<Command>,
+        opts: MuxOptions,
+    ) -> Result<MuxServer> {
+        let _ = std::fs::remove_file(path);
+        let listener = UnixListener::bind(path)?;
+        listener.set_nonblocking(true)?;
+        log::info!("GVM mux listening on {}", path.display());
+        let (waker, wake_rx) = MuxWaker::pair()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let thread_waker = waker.clone();
+        let thread_shutdown = shutdown.clone();
+        let handle = std::thread::Builder::new()
+            .name("vgpu-ipc-mux".into())
+            .spawn(move || {
+                if let Err(e) = mux_loop(
+                    listener,
+                    wake_rx,
+                    cmd_tx,
+                    opts,
+                    thread_waker,
+                    thread_shutdown,
+                ) {
+                    log::warn!("mux reactor exited with error: {e}");
+                }
+            })?;
+        Ok(MuxServer {
+            handle: Some(handle),
+            shutdown,
+            waker,
+        })
+    }
+
+    /// Ask the reactor to exit; returns immediately.
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.waker.wake();
+    }
+
+    /// Block until the reactor exits (daemon gone, fatal poll error,
+    /// or [`MuxServer::stop`] from another thread).
+    pub fn join_blocking(mut self) -> Result<()> {
+        if let Some(h) = self.handle.take() {
+            h.join()
+                .map_err(|_| Error::Ipc("mux reactor panicked".into()))?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for MuxServer {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            self.stop();
+            let _ = h.join();
+        }
+    }
+}
+
+/// The reactor body.  Single-threaded: every connection, buffer, and
+/// admission decision lives on this stack.
+fn mux_loop(
+    listener: UnixListener,
+    wake_rx: UnixStream,
+    cmd_tx: mpsc::Sender<Command>,
+    opts: MuxOptions,
+    waker: MuxWaker,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    let registry = opts
+        .registry
+        .clone()
+        .unwrap_or_else(|| Arc::new(Registry::new()));
+    let metrics = MuxMetrics::new(&registry);
+    let (reply_tx, reply_rx) = mpsc::channel::<(u64, ServerMsg)>();
+
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut tenant_conns: HashMap<String, u32> = HashMap::new();
+    let mut next_id: u64 = 1;
+    // Commands in flight toward the daemon (replies not yet seen).
+    let mut outstanding: usize = 0;
+    let mut fds: Vec<PollFd> = Vec::new();
+    let mut ids: Vec<u64> = Vec::new();
+    let mut scratch = [0u8; 16 * 1024];
+    // Daemon's command channel closed: flush what we can and exit.
+    let mut daemon_gone = false;
+
+    loop {
+        // --- build the poll set ---------------------------------------
+        fds.clear();
+        ids.clear();
+        fds.push(PollFd::new(wake_rx.as_raw_fd(), POLLIN));
+        ids.push(0);
+        fds.push(PollFd::new(listener.as_raw_fd(), POLLIN));
+        ids.push(0);
+        for (&id, c) in conns.iter() {
+            let mut ev = 0i16;
+            if !c.closing && !c.dead && c.inbox.len() < INBOX_CAP {
+                ev |= POLLIN;
+            }
+            if c.wr_pos < c.wr.len() {
+                ev |= POLLOUT;
+            }
+            fds.push(PollFd::new(c.stream.as_raw_fd(), ev));
+            ids.push(id);
+        }
+        poll_fds(&mut fds, 250)?;
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+
+        // --- drain the wake pipe --------------------------------------
+        if fds[0].revents != 0 {
+            loop {
+                match (&wake_rx).read(&mut scratch) {
+                    Ok(0) => break,
+                    Ok(_) => continue,
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock =>
+                    {
+                        break
+                    }
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::Interrupted =>
+                    {
+                        continue
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+
+        // --- deliver daemon replies -----------------------------------
+        while let Ok((id, msg)) = reply_rx.try_recv() {
+            outstanding = outstanding.saturating_sub(1);
+            let Some(conn) = conns.get_mut(&id) else {
+                // Reply for a connection that already vanished (e.g.
+                // the synthesized disconnect-RLS): accounting only.
+                continue;
+            };
+            match conn.pending.take() {
+                Some(PendingKind::Req) => match msg {
+                    ServerMsg::Queued { ticket } => {
+                        // The id stays a server-side detail; the
+                        // client sees a plain Ack.
+                        conn.client = ticket;
+                        push_frame(&mut conn.wr, &ServerMsg::Ack);
+                    }
+                    other => {
+                        dec_tenant(&mut tenant_conns, &conn.tenant);
+                        conn.tenant.clear();
+                        push_frame(&mut conn.wr, &other);
+                    }
+                },
+                Some(PendingKind::Rls) => {
+                    if matches!(msg, ServerMsg::Ack) {
+                        conn.client = 0;
+                        dec_tenant(&mut tenant_conns, &conn.tenant);
+                        conn.tenant.clear();
+                    }
+                    push_frame(&mut conn.wr, &msg);
+                }
+                Some(PendingKind::Other) | None => {
+                    push_frame(&mut conn.wr, &msg);
+                }
+            }
+        }
+
+        // --- accept new connections -----------------------------------
+        if fds[1].revents != 0 {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if conns.len() >= opts.max_connections {
+                            metrics.rej_max.inc();
+                            let mut frame = Vec::new();
+                            push_frame(
+                                &mut frame,
+                                &ServerMsg::Err {
+                                    msg: format!(
+                                        "connection limit {} reached",
+                                        opts.max_connections
+                                    ),
+                                },
+                            );
+                            // Best-effort typed rejection: the frame is
+                            // tiny, so a fresh socket buffer virtually
+                            // always takes it whole.
+                            let _ = stream.set_nonblocking(true);
+                            let _ = (&stream).write(&frame);
+                            continue;
+                        }
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        conns.insert(next_id, Conn::new(stream));
+                        next_id += 1;
+                    }
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock =>
+                    {
+                        break
+                    }
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::Interrupted =>
+                    {
+                        continue
+                    }
+                    Err(e) => {
+                        log::warn!("mux accept error: {e}");
+                        break;
+                    }
+                }
+            }
+        }
+
+        // --- read readable connections --------------------------------
+        for (i, pfd) in fds.iter().enumerate().skip(2) {
+            if pfd.revents == 0 {
+                continue;
+            }
+            let id = ids[i];
+            let Some(conn) = conns.get_mut(&id) else {
+                continue;
+            };
+            if pfd.revents & POLLNVAL != 0 {
+                conn.dead = true;
+                continue;
+            }
+            if pfd.revents & (POLLIN | POLLHUP | POLLERR) != 0
+                && !conn.closing
+                && !conn.dead
+            {
+                read_conn(conn, &mut scratch);
+            }
+        }
+
+        // --- pump decoded frames through admission --------------------
+        for (&id, conn) in conns.iter_mut() {
+            if daemon_gone {
+                break;
+            }
+            while conn.pending.is_none() && !conn.closing && !conn.dead {
+                let Some(msg) = conn.inbox.pop_front() else {
+                    break;
+                };
+                match admit(
+                    conn,
+                    &msg,
+                    &opts,
+                    &tenant_conns,
+                    outstanding,
+                    &metrics,
+                ) {
+                    Admission::Reject(err) => {
+                        push_frame(&mut conn.wr, &err);
+                        continue;
+                    }
+                    Admission::Forward => {}
+                }
+                let kind = match &msg {
+                    ClientMsg::Req { tenant, .. } => {
+                        let key = if tenant.is_empty() {
+                            DEFAULT_TENANT
+                        } else {
+                            tenant.as_str()
+                        };
+                        conn.tenant = key.to_string();
+                        *tenant_conns.entry(key.to_string()).or_insert(0) +=
+                            1;
+                        PendingKind::Req
+                    }
+                    ClientMsg::Rls => PendingKind::Rls,
+                    _ => PendingKind::Other,
+                };
+                let send = cmd_tx.send(Command {
+                    client: conn.client,
+                    msg,
+                    reply: ReplySink::Mux {
+                        conn: id,
+                        tx: reply_tx.clone(),
+                        wake: waker.clone(),
+                    },
+                });
+                if send.is_err() {
+                    daemon_gone = true;
+                    break;
+                }
+                outstanding += 1;
+                conn.pending = Some(kind);
+            }
+        }
+
+        // --- flush writes ---------------------------------------------
+        for conn in conns.values_mut() {
+            flush_conn(conn);
+        }
+
+        // --- sweep dead connections -----------------------------------
+        if conns.values().any(|c| c.dead) {
+            let dead: Vec<u64> = conns
+                .iter()
+                .filter(|(_, c)| c.dead)
+                .map(|(&id, _)| id)
+                .collect();
+            for id in dead {
+                let conn = match conns.remove(&id) {
+                    Some(c) => c,
+                    None => continue,
+                };
+                dec_tenant(&mut tenant_conns, &conn.tenant);
+                // A client that vanished without RLS must not leak its
+                // VGPU or pool binding: release on its behalf.  The
+                // reply lands on the removed id and is dropped by the
+                // accounting-only path above.
+                if conn.client != 0 && !daemon_gone {
+                    let sent = cmd_tx.send(Command {
+                        client: conn.client,
+                        msg: ClientMsg::Rls,
+                        reply: ReplySink::Mux {
+                            conn: id,
+                            tx: reply_tx.clone(),
+                            wake: waker.clone(),
+                        },
+                    });
+                    match sent {
+                        Ok(()) => outstanding += 1,
+                        Err(_) => daemon_gone = true,
+                    }
+                }
+            }
+        }
+        metrics.active.set(conns.len() as u64);
+
+        if daemon_gone {
+            break;
+        }
+    }
+
+    // Shutdown: release every still-registered client so the daemon's
+    // accounting settles even when clients never said RLS.
+    for (&id, conn) in conns.iter() {
+        if conn.client != 0 && !daemon_gone {
+            let _ = cmd_tx.send(Command {
+                client: conn.client,
+                msg: ClientMsg::Rls,
+                reply: ReplySink::Mux {
+                    conn: id,
+                    tx: reply_tx.clone(),
+                    wake: waker.clone(),
+                },
+            });
+        }
+    }
+    metrics.active.set(0);
+    Ok(())
+}
+
+/// Admission verdict for one inbound frame.
+enum Admission {
+    Forward,
+    Reject(ServerMsg),
+}
+
+/// The admission middleware: a pure decision layer in front of the
+/// protocol handler.  Rejections are typed errors and counted; nothing
+/// here blocks.
+fn admit(
+    conn: &Conn,
+    msg: &ClientMsg,
+    opts: &MuxOptions,
+    tenant_conns: &HashMap<String, u32>,
+    outstanding: usize,
+    metrics: &MuxMetrics,
+) -> Admission {
+    if let ClientMsg::Req { tenant, .. } = msg {
+        // One VGPU per connection: a second REQ would orphan the first
+        // registration at disconnect time.
+        if conn.client != 0 {
+            return Admission::Reject(ServerMsg::Err {
+                msg: "REQ on an already-registered connection (RLS first)"
+                    .into(),
+            });
+        }
+        let key = if tenant.is_empty() {
+            DEFAULT_TENANT
+        } else {
+            tenant.as_str()
+        };
+        if let Some(cap) = opts.qos.conn_limit(key) {
+            let held = tenant_conns.get(key).copied().unwrap_or(0);
+            if held >= cap {
+                metrics.rej_tenant.inc();
+                return Admission::Reject(ServerMsg::Err {
+                    msg: format!(
+                        "tenant {key:?} connection cap {cap} reached"
+                    ),
+                });
+            }
+        }
+    }
+    if outstanding >= opts.backpressure {
+        metrics.rej_backpressure.inc();
+        return Admission::Reject(ServerMsg::Err {
+            msg: format!(
+                "backpressure: {outstanding} commands in flight \
+                 (cap {})",
+                opts.backpressure
+            ),
+        });
+    }
+    Admission::Forward
+}
+
+/// Drain a readable socket into the connection's frame inbox.
+fn read_conn(conn: &mut Conn, scratch: &mut [u8]) {
+    loop {
+        match (&conn.stream).read(scratch) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => {
+                conn.rd.extend_from_slice(&scratch[..n]);
+                if conn.inbox.len() >= INBOX_CAP {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                continue
+            }
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+    parse_frames(conn);
+}
+
+/// Slice complete frames out of the raw read buffer.  A corrupt length
+/// or an undecodable frame gets a typed [`ServerMsg::Err`] *before*
+/// the connection closes — never a silent drop.
+fn parse_frames(conn: &mut Conn) {
+    let mut off = 0usize;
+    while !conn.closing {
+        let avail = conn.rd.len() - off;
+        if avail < 4 {
+            break;
+        }
+        let len = u32::from_le_bytes([
+            conn.rd[off],
+            conn.rd[off + 1],
+            conn.rd[off + 2],
+            conn.rd[off + 3],
+        ]);
+        if len > MAX_FRAME {
+            push_frame(
+                &mut conn.wr,
+                &ServerMsg::Err {
+                    msg: format!("corrupt frame length {len}"),
+                },
+            );
+            conn.closing = true;
+            break;
+        }
+        let len = len as usize;
+        if avail < 4 + len {
+            break;
+        }
+        match ClientMsg::decode(&conn.rd[off + 4..off + 4 + len]) {
+            Ok(m) => conn.inbox.push_back(m),
+            Err(e) => {
+                push_frame(
+                    &mut conn.wr,
+                    &ServerMsg::Err {
+                        msg: format!("frame decode error: {e}"),
+                    },
+                );
+                conn.closing = true;
+                break;
+            }
+        }
+        off += 4 + len;
+        if conn.inbox.len() >= INBOX_CAP {
+            break;
+        }
+    }
+    if off > 0 {
+        conn.rd.drain(..off);
+    }
+}
+
+/// Write as much pending output as the socket will take.  A fully
+/// flushed `closing` connection graduates to `dead`.
+fn flush_conn(conn: &mut Conn) {
+    while conn.wr_pos < conn.wr.len() {
+        match (&conn.stream).write(&conn.wr[conn.wr_pos..]) {
+            Ok(0) => {
+                conn.dead = true;
+                return;
+            }
+            Ok(n) => conn.wr_pos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                continue
+            }
+            Err(_) => {
+                conn.dead = true;
+                return;
+            }
+        }
+    }
+    conn.wr.clear();
+    conn.wr_pos = 0;
+    if conn.closing {
+        conn.dead = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poll_shim_sees_readable_socket() {
+        let (a, b) = UnixStream::pair().unwrap();
+        b.set_nonblocking(true).unwrap();
+        // Nothing readable yet: times out with zero ready fds.
+        let mut fds = [PollFd::new(b.as_raw_fd(), POLLIN)];
+        assert_eq!(poll_fds(&mut fds, 0).unwrap(), 0);
+        (&a).write_all(&[42]).unwrap();
+        let mut fds = [PollFd::new(b.as_raw_fd(), POLLIN)];
+        assert_eq!(poll_fds(&mut fds, 1000).unwrap(), 1);
+        assert!(fds[0].revents & POLLIN != 0);
+    }
+
+    #[test]
+    fn waker_wakes_and_drains() {
+        let (w, rx) = MuxWaker::pair().unwrap();
+        w.wake();
+        w.wake();
+        let mut fds = [PollFd::new(rx.as_raw_fd(), POLLIN)];
+        assert_eq!(poll_fds(&mut fds, 1000).unwrap(), 1);
+        let mut buf = [0u8; 16];
+        let n = (&rx).read(&mut buf).unwrap();
+        assert!(n >= 1);
+        // Drained: next poll times out.
+        let mut fds = [PollFd::new(rx.as_raw_fd(), POLLIN)];
+        assert_eq!(poll_fds(&mut fds, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn ipc_config_defaults() {
+        let c = IpcConfig::default();
+        assert_eq!(c.mode, IpcMode::Mux);
+        assert_eq!(c.max_connections, 1024);
+        assert_eq!(c.backpressure, 1024);
+        assert_eq!(c.shm_ring_bytes, 16 << 20);
+    }
+
+    #[test]
+    fn parse_frames_decodes_and_rejects() {
+        let (a, _b) = UnixStream::pair().unwrap();
+        let mut conn = Conn::new(a);
+        // Two complete frames + a partial tail.
+        let m1 = ClientMsg::Stats.encode();
+        let m2 = ClientMsg::Rcv { slot: 3 }.encode();
+        conn.rd
+            .extend_from_slice(&(m1.len() as u32).to_le_bytes());
+        conn.rd.extend_from_slice(&m1);
+        conn.rd
+            .extend_from_slice(&(m2.len() as u32).to_le_bytes());
+        conn.rd.extend_from_slice(&m2);
+        conn.rd.extend_from_slice(&[9, 0]); // partial length prefix
+        parse_frames(&mut conn);
+        assert_eq!(conn.inbox.len(), 2);
+        assert_eq!(conn.inbox[0], ClientMsg::Stats);
+        assert_eq!(conn.inbox[1], ClientMsg::Rcv { slot: 3 });
+        assert_eq!(conn.rd, vec![9, 0]);
+        assert!(!conn.closing);
+
+        // A garbage frame produces a typed Err and marks closing.
+        let (a, _b) = UnixStream::pair().unwrap();
+        let mut conn = Conn::new(a);
+        conn.rd.extend_from_slice(&2u32.to_le_bytes());
+        conn.rd.extend_from_slice(&[255, 255]);
+        parse_frames(&mut conn);
+        assert!(conn.closing);
+        assert!(!conn.wr.is_empty(), "Err frame must be queued");
+        let payload = &conn.wr[4..];
+        match ServerMsg::decode(payload).unwrap() {
+            ServerMsg::Err { msg } => {
+                assert!(msg.contains("decode error"), "{msg}")
+            }
+            other => panic!("expected Err, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupt_length_is_a_typed_error() {
+        let (a, _b) = UnixStream::pair().unwrap();
+        let mut conn = Conn::new(a);
+        conn.rd.extend_from_slice(&u32::MAX.to_le_bytes());
+        parse_frames(&mut conn);
+        assert!(conn.closing);
+        let payload = &conn.wr[4..];
+        match ServerMsg::decode(payload).unwrap() {
+            ServerMsg::Err { msg } => {
+                assert!(msg.contains("corrupt frame length"), "{msg}")
+            }
+            other => panic!("expected Err, got {other:?}"),
+        }
+    }
+}

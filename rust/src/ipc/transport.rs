@@ -41,11 +41,22 @@ impl<S: Read + Write> Framed<S> {
 
     /// Read one frame (blocking). `Ok(None)` on clean EOF.
     pub fn recv(&mut self) -> Result<Option<Vec<u8>>> {
+        let mut buf = Vec::new();
+        Ok(self.recv_into(&mut buf)?.then_some(buf))
+    }
+
+    /// Read one frame into a caller-owned buffer, reusing its
+    /// allocation across calls.  Returns `Ok(false)` on clean EOF
+    /// (buffer contents are then unspecified), `Ok(true)` when `buf`
+    /// holds exactly one frame payload.  Hot ingestion loops should
+    /// prefer this over [`Framed::recv`], which allocates a fresh
+    /// `Vec` per frame.
+    pub fn recv_into(&mut self, buf: &mut Vec<u8>) -> Result<bool> {
         let mut len_buf = [0u8; 4];
         match self.stream.read_exact(&mut len_buf) {
             Ok(()) => {}
             Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
-                return Ok(None);
+                return Ok(false);
             }
             Err(e) => return Err(e.into()),
         }
@@ -53,9 +64,10 @@ impl<S: Read + Write> Framed<S> {
         if len > MAX_FRAME {
             return Err(Error::Ipc(format!("corrupt frame length {len}")));
         }
-        let mut buf = vec![0u8; len as usize];
-        self.stream.read_exact(&mut buf)?;
-        Ok(Some(buf))
+        buf.clear();
+        buf.resize(len as usize, 0);
+        self.stream.read_exact(buf)?;
+        Ok(true)
     }
 
     /// Access the inner stream (e.g. to clone a unix socket).
@@ -116,6 +128,28 @@ mod tests {
         fa.send(b"").unwrap();
         assert_eq!(fb.recv().unwrap().unwrap(), b"hello");
         assert_eq!(fb.recv().unwrap().unwrap(), b"");
+    }
+
+    #[test]
+    fn recv_into_reuses_the_buffer() {
+        let (a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        let mut fa = Framed::new(a);
+        let mut fb = Framed::new(b);
+        fa.send(&[7u8; 256]).unwrap();
+        fa.send(b"tiny").unwrap();
+        fa.send(b"").unwrap();
+        let mut buf = Vec::new();
+        assert!(fb.recv_into(&mut buf).unwrap());
+        assert_eq!(buf, vec![7u8; 256]);
+        let cap = buf.capacity();
+        // Smaller frames ride in the same allocation.
+        assert!(fb.recv_into(&mut buf).unwrap());
+        assert_eq!(buf, b"tiny");
+        assert_eq!(buf.capacity(), cap);
+        assert!(fb.recv_into(&mut buf).unwrap());
+        assert!(buf.is_empty());
+        drop(fa);
+        assert!(!fb.recv_into(&mut buf).unwrap(), "clean EOF is false");
     }
 
     #[test]

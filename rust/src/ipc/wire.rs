@@ -87,6 +87,42 @@ pub enum ClientMsg {
     /// strikes, outstanding completions, and the remediation counters
     /// (fault-plane extension; see [`crate::gvm::health`]).
     Health,
+    /// Negotiate a shared-memory data plane for this client (the
+    /// descriptor extension of the massive-fan-in transport): the
+    /// client pre-creates and sizes two ring files — `path` (its input
+    /// ring, client-written) and `path.out` (its output ring,
+    /// daemon-written) — and the daemon opens both before replying
+    /// [`ServerMsg::ShmOk`].  Clients that skip this keep the inline
+    /// [`ClientMsg::Snd`]/[`ServerMsg::Data`] frames.
+    ShmOpen {
+        /// Filesystem path of the input ring (`/dev/shm` or tmp); the
+        /// output ring is `path` + `.out`.
+        path: String,
+        /// Ring capacity in bytes (each of the two rings; capped by
+        /// `[ipc] shm_ring_bytes` on the daemon side).
+        bytes: u64,
+    },
+    /// `SND()` via the negotiated shm ring: the control frame carries
+    /// only the `(offset, len, generation)` descriptor — the encoded
+    /// tensor bytes never traverse the socket.
+    SndShm {
+        /// Segment slot index.
+        slot: u32,
+        /// Byte offset of the encoded tensor in the input ring.
+        offset: u64,
+        /// Encoded length in bytes.
+        len: u64,
+        /// Client-monotonic descriptor generation (the daemon rejects
+        /// stale or replayed descriptors).
+        generation: u64,
+    },
+    /// `RCV()` requesting the output through the shm ring when it fits
+    /// (reply: [`ServerMsg::DataShm`]; inline [`ServerMsg::Data`] when
+    /// the encoded output exceeds the ring).
+    RcvShm {
+        /// Output slot index.
+        slot: u32,
+    },
 }
 
 /// Per-tenant counter row carried by [`ServerMsg::Stats`] — fed by the
@@ -266,6 +302,24 @@ pub enum ServerMsg {
         /// Per-device health, by device id.
         devices: Vec<HealthEntry>,
     },
+    /// Shared-memory negotiation accepted ([`ClientMsg::ShmOpen`]
+    /// reply): both ring files are open on the daemon side and the
+    /// client may unlink the paths (the fds keep the rings alive).
+    ShmOk {
+        /// Accepted ring capacity in bytes.
+        max_bytes: u64,
+    },
+    /// `RCV` response via the shm ring: the encoded output tensor was
+    /// written into the client's output ring at the descriptor — only
+    /// `(offset, len, generation)` traverses the socket.
+    DataShm {
+        /// Byte offset of the encoded tensor in the output ring.
+        offset: u64,
+        /// Encoded length in bytes.
+        len: u64,
+        /// Daemon-monotonic output generation.
+        generation: u64,
+    },
 }
 
 fn put_str(s: &str, out: &mut Vec<u8>) {
@@ -328,6 +382,27 @@ impl ClientMsg {
             }
             ClientMsg::Usage => out.push(11),
             ClientMsg::Health => out.push(12),
+            ClientMsg::ShmOpen { path, bytes } => {
+                out.push(13);
+                put_str(path, &mut out);
+                out.extend_from_slice(&bytes.to_le_bytes());
+            }
+            ClientMsg::SndShm {
+                slot,
+                offset,
+                len,
+                generation,
+            } => {
+                out.push(14);
+                out.extend_from_slice(&slot.to_le_bytes());
+                out.extend_from_slice(&offset.to_le_bytes());
+                out.extend_from_slice(&len.to_le_bytes());
+                out.extend_from_slice(&generation.to_le_bytes());
+            }
+            ClientMsg::RcvShm { slot } => {
+                out.push(15);
+                out.extend_from_slice(&slot.to_le_bytes());
+            }
         }
         out
     }
@@ -378,6 +453,19 @@ impl ClientMsg {
             },
             11 => ClientMsg::Usage,
             12 => ClientMsg::Health,
+            13 => ClientMsg::ShmOpen {
+                path: get_str(buf, &mut pos)?,
+                bytes: read_u64(buf, &mut pos)?,
+            },
+            14 => ClientMsg::SndShm {
+                slot: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
+                offset: read_u64(buf, &mut pos)?,
+                len: read_u64(buf, &mut pos)?,
+                generation: read_u64(buf, &mut pos)?,
+            },
+            15 => ClientMsg::RcvShm {
+                slot: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
+            },
             t => return Err(Error::Ipc(format!("bad client tag {t}"))),
         };
         Ok(msg)
@@ -505,6 +593,20 @@ impl ServerMsg {
                     out.extend_from_slice(&d.strikes.to_le_bytes());
                     out.extend_from_slice(&d.outstanding.to_le_bytes());
                 }
+            }
+            ServerMsg::ShmOk { max_bytes } => {
+                out.push(11);
+                out.extend_from_slice(&max_bytes.to_le_bytes());
+            }
+            ServerMsg::DataShm {
+                offset,
+                len,
+                generation,
+            } => {
+                out.push(12);
+                out.extend_from_slice(&offset.to_le_bytes());
+                out.extend_from_slice(&len.to_le_bytes());
+                out.extend_from_slice(&generation.to_le_bytes());
             }
         }
         out
@@ -684,6 +786,14 @@ impl ServerMsg {
                     devices,
                 }
             }
+            11 => ServerMsg::ShmOk {
+                max_bytes: read_u64(buf, &mut pos)?,
+            },
+            12 => ServerMsg::DataShm {
+                offset: read_u64(buf, &mut pos)?,
+                len: read_u64(buf, &mut pos)?,
+                generation: read_u64(buf, &mut pos)?,
+            },
             t => return Err(Error::Ipc(format!("bad server tag {t}"))),
         };
         Ok(msg)
@@ -737,6 +847,69 @@ mod tests {
         roundtrip_c(ClientMsg::WaitFlush { epoch: 42 });
         roundtrip_c(ClientMsg::Usage);
         roundtrip_c(ClientMsg::Health);
+    }
+
+    #[test]
+    fn shm_roundtrips() {
+        roundtrip_c(ClientMsg::ShmOpen {
+            path: "/dev/shm/vgpu-shm-1234-0".into(),
+            bytes: 16 << 20,
+        });
+        roundtrip_c(ClientMsg::ShmOpen {
+            path: String::new(),
+            bytes: 0,
+        });
+        roundtrip_c(ClientMsg::SndShm {
+            slot: 3,
+            offset: 4096,
+            len: 1 << 20,
+            generation: 7,
+        });
+        roundtrip_c(ClientMsg::SndShm {
+            slot: u32::MAX,
+            offset: u64::MAX,
+            len: u64::MAX,
+            generation: u64::MAX,
+        });
+        roundtrip_c(ClientMsg::RcvShm { slot: 0 });
+        roundtrip_c(ClientMsg::RcvShm { slot: u32::MAX });
+        roundtrip_s(ServerMsg::ShmOk {
+            max_bytes: 16 << 20,
+        });
+        roundtrip_s(ServerMsg::ShmOk {
+            max_bytes: u64::MAX,
+        });
+        roundtrip_s(ServerMsg::DataShm {
+            offset: 0,
+            len: 512,
+            generation: 1,
+        });
+        roundtrip_s(ServerMsg::DataShm {
+            offset: u64::MAX,
+            len: u64::MAX,
+            generation: u64::MAX,
+        });
+        // Every prefix of a valid shm encoding errors instead of
+        // panicking or silently short-reading.
+        let c = ClientMsg::SndShm {
+            slot: 1,
+            offset: 64,
+            len: 128,
+            generation: 2,
+        }
+        .encode();
+        for cut in 0..c.len() {
+            assert!(ClientMsg::decode(&c[..cut]).is_err());
+        }
+        let s = ServerMsg::DataShm {
+            offset: 64,
+            len: 128,
+            generation: 2,
+        }
+        .encode();
+        for cut in 0..s.len() {
+            assert!(ServerMsg::decode(&s[..cut]).is_err());
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -48,6 +48,11 @@ const MAX_REQUEST_BYTES: usize = 8 * 1024;
 /// Per-connection socket timeout (scrapers are fast; stalls are bugs).
 const IO_TIMEOUT: Duration = Duration::from_secs(2);
 
+/// Cap on concurrent scrape threads.  A scrape endpoint has one or two
+/// well-behaved clients; anything past this is a stuck scraper or a
+/// port scan, and gets an inline `503` instead of a thread.
+const MAX_SCRAPE_THREADS: usize = 8;
+
 /// A running `/metrics` listener; dropping it stops the accept loop.
 #[derive(Debug)]
 pub struct MetricsServer {
@@ -66,6 +71,7 @@ impl MetricsServer {
             .map_err(|e| Error::gvm(format!("metrics: local_addr: {e}")))?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let stop = shutdown.clone();
+        let active = Arc::new(AtomicUsize::new(0));
         let join = std::thread::Builder::new()
             .name("vgpu-metrics-http".into())
             .spawn(move || {
@@ -75,10 +81,27 @@ impl MetricsServer {
                     }
                     match stream {
                         Ok(s) => {
+                            // Bound the fan-out: past the cap, answer
+                            // 503 inline (with timeouts) rather than
+                            // spawning an unbounded thread per socket.
+                            if active.fetch_add(1, Ordering::SeqCst)
+                                >= MAX_SCRAPE_THREADS
+                            {
+                                active.fetch_sub(1, Ordering::SeqCst);
+                                reject_busy(s);
+                                continue;
+                            }
                             let reg = registry.clone();
-                            let _ = std::thread::Builder::new()
+                            let n = active.clone();
+                            let spawned = std::thread::Builder::new()
                                 .name("vgpu-metrics-conn".into())
-                                .spawn(move || handle_conn(s, &reg));
+                                .spawn(move || {
+                                    handle_conn(s, &reg);
+                                    n.fetch_sub(1, Ordering::SeqCst);
+                                });
+                            if spawned.is_err() {
+                                active.fetch_sub(1, Ordering::SeqCst);
+                            }
                         }
                         Err(e) => log::warn!("metrics: accept failed: {e}"),
                     }
@@ -109,6 +132,21 @@ impl Drop for MetricsServer {
             let _ = join.join();
         }
     }
+}
+
+/// Turn away a connection over the scrape-thread cap without blocking
+/// the accept loop: short timeouts, a one-line `503`, close.
+fn reject_busy(mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let body = "scrape concurrency limit reached\n";
+    let _ = write!(
+        stream,
+        "HTTP/1.1 503 Service Unavailable\r\nContent-Type: {CONTENT_TYPE}\r\n\
+         Content-Length: {}\r\nRetry-After: 1\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.flush();
 }
 
 /// Serve one connection: read the request head, answer, close.
@@ -184,6 +222,38 @@ mod tests {
         assert!(post.starts_with("HTTP/1.1 405"), "{post}");
 
         drop(srv); // must join the listener thread without hanging
+    }
+
+    #[test]
+    fn concurrent_scrapes_past_the_cap_get_503() {
+        let reg = Arc::new(Registry::new());
+        let srv = MetricsServer::start("127.0.0.1:0", reg).unwrap();
+        let addr = srv.local_addr();
+
+        // Fill every handler slot with an idle connection: each one is
+        // accepted (the loop is sequential, so all are counted before
+        // the next connect is served) and parks its thread inside the
+        // read timeout waiting for a request head we never send.
+        let idle: Vec<TcpStream> = (0..MAX_SCRAPE_THREADS)
+            .map(|_| TcpStream::connect(addr).unwrap())
+            .collect();
+
+        let busy = get(addr, "GET /metrics HTTP/1.1\r\n\r\n");
+        assert!(busy.starts_with("HTTP/1.1 503"), "{busy}");
+        assert!(busy.contains("Retry-After"), "{busy}");
+
+        // Hanging up frees the slots (handlers see EOF); the endpoint
+        // must recover without waiting out the full read timeout.
+        drop(idle);
+        let mut ok = String::new();
+        for _ in 0..50 {
+            ok = get(addr, "GET /metrics HTTP/1.1\r\n\r\n");
+            if ok.starts_with("HTTP/1.1 200") {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(ok.starts_with("HTTP/1.1 200"), "{ok}");
     }
 
     #[test]

@@ -55,7 +55,7 @@ fn call(tx: &mpsc::Sender<Command>, client: u64, msg: ClientMsg) -> ServerMsg {
     tx.send(Command {
         client,
         msg,
-        reply: rtx,
+        reply: rtx.into(),
     })
     .unwrap();
     rrx.recv().unwrap()
@@ -154,7 +154,7 @@ fn parked_stp_wakes_on_flush() {
     tx.send(Command {
         client: a,
         msg: ClientMsg::Stp,
-        reply: rtx,
+        reply: rtx.into(),
     })
     .unwrap();
     assert!(

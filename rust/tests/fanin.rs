@@ -1,0 +1,394 @@
+//! Fan-in integration tests for the multiplexed socket transport: 64
+//! simultaneous clients on one reactor thread, randomized mid-flush
+//! disconnects with conservation checks, typed + counted admission
+//! rejects, and shm-vs-inline output equivalence.
+
+use std::os::unix::net::UnixStream;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use vgpu::api::VgpuClient;
+use vgpu::config::DeviceConfig;
+use vgpu::gvm::devices::{PlacementPolicy, PoolConfig};
+use vgpu::gvm::qos::QosConfig;
+use vgpu::gvm::{Command, Daemon, DaemonConfig};
+use vgpu::ipc::{ClientMsg, Framed, MuxOptions, MuxServer, ServerMsg};
+use vgpu::metrics::Registry;
+use vgpu::runtime::{ExecHandle, TensorValue};
+
+fn echo_handle() -> ExecHandle {
+    ExecHandle::mock(vec!["echo".into()], |_, inputs| Ok(inputs))
+}
+
+/// Mock daemon: two instant echo devices, `barrier = 1`.
+fn spawn_daemon() -> (mpsc::Sender<Command>, Arc<Registry>) {
+    let cfg = DaemonConfig {
+        barrier: Some(1),
+        max_clients: 256,
+        pool: PoolConfig::homogeneous(
+            2,
+            DeviceConfig::tesla_c2070(),
+            PlacementPolicy::RoundRobin,
+        ),
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::with_handles(cfg, vec![echo_handle(), echo_handle()])
+        .expect("daemon");
+    let registry = daemon.registry();
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+    (tx, registry)
+}
+
+fn sock_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir()
+        .join(format!("vgpu-test-fanin-{tag}-{}.sock", std::process::id()))
+}
+
+fn wait_for(path: &std::path::Path) {
+    for _ in 0..200 {
+        if path.exists() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("socket {} never appeared", path.display());
+}
+
+/// OS threads in this process (0 when /proc isn't available).
+fn thread_count() -> usize {
+    std::fs::read_dir("/proc/self/task")
+        .map(|d| d.count())
+        .unwrap_or(0)
+}
+
+fn t(val: f32) -> TensorValue {
+    TensorValue::F32(vec![64], vec![val; 64])
+}
+
+/// Tiny deterministic LCG so "randomized" disconnects replay the same
+/// way every run.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+}
+
+#[test]
+fn mux_serves_64_clients_from_one_thread() {
+    let (tx, registry) = spawn_daemon();
+    let socket = sock_path("o1");
+    let _srv = MuxServer::spawn(
+        &socket,
+        tx,
+        MuxOptions::from_config(
+            &Default::default(),
+            QosConfig::default(),
+            Some(registry.clone()),
+        ),
+    )
+    .unwrap();
+    wait_for(&socket);
+
+    let baseline = thread_count();
+    let mut clients: Vec<VgpuClient> = (0..64)
+        .map(|i| {
+            VgpuClient::connect_unix_as(&socket, &format!("o1-{i}"), "")
+                .unwrap()
+        })
+        .collect();
+    // All 64 sockets are open and registered; with the mux adapter the
+    // process grew by ZERO server threads (the reactor predates the
+    // baseline).  Allow a little slack for unrelated runtime threads.
+    let during = thread_count();
+    if baseline > 0 {
+        assert!(
+            during <= baseline + 2,
+            "thread count grew {baseline} -> {during} for 64 connections"
+        );
+    }
+    let active = registry.gauge(
+        "vgpu_ipc_active_connections",
+        "Client connections currently held by the socket adapter",
+    );
+    assert_eq!(active.get(), 64);
+
+    // Liveness: every client completes a full cycle through the one
+    // reactor thread.
+    for c in &mut clients {
+        c.snd(0, t(1.5)).unwrap();
+        c.str_("echo").unwrap();
+        c.stp().unwrap();
+        let out = c.rcv(0).unwrap();
+        assert_eq!(out.bytes(), t(1.5).bytes());
+        c.rls().unwrap();
+    }
+    drop(clients);
+    for _ in 0..200 {
+        if active.get() == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(active.get(), 0, "connections leaked in the adapter");
+}
+
+#[test]
+fn randomized_mid_flush_disconnects_conserve_accounting() {
+    let (tx, registry) = spawn_daemon();
+    let socket = sock_path("chaos");
+    let _srv = MuxServer::spawn(
+        &socket,
+        tx,
+        MuxOptions::from_config(
+            &Default::default(),
+            QosConfig::default(),
+            Some(registry.clone()),
+        ),
+    )
+    .unwrap();
+    wait_for(&socket);
+
+    // 64 concurrent clients; roughly half hang up abruptly (stream
+    // dropped, no RLS) at a random point mid-cycle — after SND, after
+    // STR (job queued/in flight), or after STP — the rest finish
+    // cleanly.  Raw framed clients, because VgpuClient's Drop would
+    // politely RLS.
+    let workers: Vec<_> = (0..64u64)
+        .map(|i| {
+            let socket = socket.clone();
+            std::thread::spawn(move || {
+                let mut rng = Lcg(0x9E3779B97F4A7C15 ^ i);
+                let stream = UnixStream::connect(&socket).unwrap();
+                let mut f = Framed::new(stream);
+                let call = |f: &mut Framed<UnixStream>, msg: &ClientMsg| {
+                    f.send(&msg.encode()).unwrap();
+                    ServerMsg::decode(&f.recv().unwrap().unwrap()).unwrap()
+                };
+                let reply = call(
+                    &mut f,
+                    &ClientMsg::Req {
+                        name: format!("chaos-{i}"),
+                        tenant: String::new(),
+                    },
+                );
+                assert!(matches!(reply, ServerMsg::Ack), "{reply:?}");
+                for _ in 0..3 {
+                    let drop_at = rng.next() % 8; // 0..=3 abrupt, 4+ clean
+                    call(
+                        &mut f,
+                        &ClientMsg::Snd { slot: 0, tensor: t(2.0) },
+                    );
+                    if drop_at == 0 {
+                        return; // dropped right after SND (staged bytes)
+                    }
+                    let queued = call(
+                        &mut f,
+                        &ClientMsg::Str { workload: "echo".into() },
+                    );
+                    assert!(matches!(queued, ServerMsg::Queued { .. }));
+                    if drop_at == 1 {
+                        return; // dropped mid-flush (job in flight)
+                    }
+                    let done = call(&mut f, &ClientMsg::Stp);
+                    assert!(matches!(done, ServerMsg::Done { .. }));
+                    if drop_at == 2 {
+                        return; // dropped with outputs unfetched
+                    }
+                    call(&mut f, &ClientMsg::Rcv { slot: 0 });
+                    if drop_at == 3 {
+                        return;
+                    }
+                }
+                let reply = call(&mut f, &ClientMsg::Rls);
+                assert!(matches!(reply, ServerMsg::Ack), "{reply:?}");
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    // The reactor notices the dead sockets and synthesizes RLS for
+    // every abandoned registration; poll until the daemon converges.
+    let mut probe = VgpuClient::connect_unix_as(&socket, "probe", "")
+        .expect("probe connect");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = probe.stats().unwrap();
+        let dev = probe.devices().unwrap();
+        let leaked_mem: u64 =
+            dev.devices.iter().map(|d| d.mem_used).sum();
+        let placed: u32 = dev.devices.iter().map(|d| d.clients).sum();
+        // `probe` itself is the one legitimate registration left.
+        if stats.clients == 1 && placed <= 1 && leaked_mem == 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "accounting never converged: {} clients, {placed} placed, \
+             {leaked_mem} B leaked",
+            stats.clients
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    probe.rls().unwrap();
+}
+
+#[test]
+fn admission_rejects_are_typed_and_counted() {
+    let (tx, registry) = spawn_daemon();
+    let socket = sock_path("admit");
+    let mut qos = QosConfig::default();
+    qos.set_conn_limit("silver", 2).unwrap();
+    let _srv = MuxServer::spawn(
+        &socket,
+        tx,
+        MuxOptions {
+            max_connections: 4,
+            backpressure: 1 << 20,
+            qos,
+            registry: Some(registry.clone()),
+        },
+    )
+    .unwrap();
+    wait_for(&socket);
+
+    // Per-tenant cap: the third "silver" REQ gets a typed error while
+    // the global cap still has room.
+    let mut silver: Vec<VgpuClient> = (0..2)
+        .map(|i| {
+            VgpuClient::connect_unix_as(&socket, &format!("s{i}"), "silver")
+                .unwrap()
+        })
+        .collect();
+    let err = VgpuClient::connect_unix_as(&socket, "s2", "silver")
+        .expect_err("tenant cap should reject");
+    assert!(
+        err.to_string().contains("connection cap"),
+        "unexpected error: {err}"
+    );
+
+    // Global cap: fill the remaining slots, then the next connection
+    // is turned away with a typed error frame.
+    let mut others: Vec<VgpuClient> = (0..2)
+        .map(|i| {
+            VgpuClient::connect_unix_as(&socket, &format!("g{i}"), "")
+                .unwrap()
+        })
+        .collect();
+    let err = VgpuClient::connect_unix_as(&socket, "g2", "")
+        .expect_err("global cap should reject");
+    assert!(
+        err.to_string().contains("connection limit"),
+        "unexpected error: {err}"
+    );
+
+    // Both rejections are visible in the metrics registry.
+    let rej = |reason: &str| {
+        registry
+            .counter_with(
+                "vgpu_ipc_admission_rejects_total",
+                "Connections/commands rejected by the admission middleware",
+                &[("reason", reason)],
+            )
+            .get()
+    };
+    assert_eq!(rej("tenant_cap"), 1);
+    assert_eq!(rej("max_connections"), 1);
+
+    for c in silver.iter_mut().chain(others.iter_mut()) {
+        c.rls().unwrap();
+    }
+}
+
+#[test]
+fn shm_and_inline_outputs_match_byte_for_byte() {
+    let (tx, registry) = spawn_daemon();
+    let socket = sock_path("shm");
+    let _srv = MuxServer::spawn(
+        &socket,
+        tx,
+        MuxOptions::from_config(
+            &Default::default(),
+            QosConfig::default(),
+            Some(registry.clone()),
+        ),
+    )
+    .unwrap();
+    wait_for(&socket);
+
+    let input = TensorValue::F32(
+        vec![256],
+        (0..256).map(|i| i as f32 * 0.5 - 31.0).collect(),
+    );
+    let mut enc = Vec::new();
+    input.encode(&mut enc);
+
+    // Inline client.
+    let mut a = VgpuClient::connect_unix_as(&socket, "inline", "").unwrap();
+    assert!(!a.shm_active());
+    a.snd(0, input.clone()).unwrap();
+    a.str_("echo").unwrap();
+    a.stp().unwrap();
+    let out_inline = a.rcv(0).unwrap();
+    a.rls().unwrap();
+
+    // Shm client: payloads ride the ring, the socket carries
+    // descriptors only.
+    let mut b = VgpuClient::connect_unix_as(&socket, "shm", "").unwrap();
+    assert!(b.negotiate_shm(1 << 20).unwrap());
+    assert!(b.shm_active());
+    let shm_bytes = registry
+        .counter(
+            "vgpu_ipc_shm_bytes_total",
+            "Payload bytes moved via the shared-memory data plane",
+        )
+        .get();
+    b.snd(0, input.clone()).unwrap();
+    b.str_("echo").unwrap();
+    b.stp().unwrap();
+    let out_shm = b.rcv(0).unwrap();
+    let moved = registry
+        .counter(
+            "vgpu_ipc_shm_bytes_total",
+            "Payload bytes moved via the shared-memory data plane",
+        )
+        .get()
+        - shm_bytes;
+    // SND in + RCV out both crossed the ring, not the socket.
+    assert!(
+        moved >= 2 * enc.len() as u64,
+        "only {moved} B through the ring for a {} B payload",
+        enc.len()
+    );
+    b.rls().unwrap();
+
+    let (mut ea, mut eb) = (Vec::new(), Vec::new());
+    out_inline.encode(&mut ea);
+    out_shm.encode(&mut eb);
+    assert_eq!(ea, enc, "inline output differs from the staged input");
+    assert_eq!(ea, eb, "shm and inline outputs are not byte-identical");
+
+    // A payload larger than the ring falls back to an inline frame on
+    // the same connection.
+    let mut c = VgpuClient::connect_unix_as(&socket, "tiny-ring", "").unwrap();
+    assert!(c.negotiate_shm(128).unwrap());
+    let big = TensorValue::F32(vec![4096], vec![3.25; 4096]);
+    c.snd(0, big.clone()).unwrap();
+    c.str_("echo").unwrap();
+    c.stp().unwrap();
+    let out_big = c.rcv(0).unwrap();
+    let (mut eg, mut eo) = (Vec::new(), Vec::new());
+    big.encode(&mut eg);
+    out_big.encode(&mut eo);
+    assert_eq!(eg, eo, "ring-overflow fallback corrupted the payload");
+    c.rls().unwrap();
+}

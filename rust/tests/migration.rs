@@ -21,7 +21,7 @@ fn call(tx: &mpsc::Sender<Command>, client: u64, msg: ClientMsg) -> ServerMsg {
     tx.send(Command {
         client,
         msg,
-        reply: rtx,
+        reply: rtx.into(),
     })
     .unwrap();
     rrx.recv().unwrap()
