@@ -1,0 +1,346 @@
+//! Staging-plane bench: the content-addressed cache's hot paths in
+//! isolation (hash, intern/release on hit and miss, the zero-copy
+//! encoded-hit path), then the SPMD fan-in sweep from `vgpu exp
+//! staging` at bench scale — more ranks, 256 KiB tensors — comparing
+//! logical staged bytes against the deduplicated physical footprint
+//! with `[staging] dedup` on vs off at 100% payload reuse.
+//!
+//! Results land in `BENCH_staging.json` (override the path with
+//! `VGPU_BENCH_STAGING_JSON`; override the rank sweep with
+//! `VGPU_BENCH_STAGING_RANKS=8,64`).  Cells that fail record null rows
+//! rather than failing the bench.
+
+mod bench_common;
+use bench_common::{bench, section};
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use vgpu::config::DeviceConfig;
+use vgpu::gvm::devices::{PlacementPolicy, PoolConfig};
+use vgpu::gvm::staging::{hash_encoded, HashKind, SegLoc, StagingCache, StagingConfig};
+use vgpu::gvm::{Command, Daemon, DaemonConfig};
+use vgpu::ipc::{ClientMsg, ServerMsg};
+use vgpu::runtime::{ExecHandle, TensorValue};
+
+/// Elements per staged tensor (256 KiB of f32s — big enough that a
+/// saved memcpy is visible, small enough that 64 ranks fit a device).
+const TENSOR_ELEMS: usize = 65_536;
+
+/// STR→STP rounds per rank in the daemon sweep.
+const CYCLES: usize = 3;
+
+fn payload(fill: f32) -> TensorValue {
+    TensorValue::F32(vec![TENSOR_ELEMS], vec![fill; TENSOR_ELEMS])
+}
+
+/// Micro section: cache-only hot paths, no daemon.  Returns the ns/op
+/// tuple recorded in the JSON.
+fn micro() -> (f64, f64, f64, f64) {
+    section(&format!(
+        "staging cache micro: {} B tensors, hash + intern/release",
+        TENSOR_ELEMS * 4
+    ));
+    let t = payload(1.0);
+    let mut enc = Vec::new();
+    t.encode(&mut enc);
+
+    bench("hash_fnv_256k", || {
+        hash_encoded(HashKind::Fnv, std::hint::black_box(&enc))
+    });
+    bench("hash_xx_256k", || {
+        hash_encoded(HashKind::Xx, std::hint::black_box(&enc))
+    });
+
+    // Miss path, dedup off: every intern allocates + every release
+    // frees (the pre-PR behaviour for all staging).
+    let mut cache = StagingCache::new(StagingConfig::default());
+    let miss = bench("intern_tensor_miss_release (dedup off)", || {
+        let (staged, _, hit) =
+            cache.intern_tensor(t.clone(), SegLoc::Device(0));
+        assert!(!hit);
+        cache.release(&staged, SegLoc::Device(0)).unwrap();
+    });
+
+    // Hit path, dedup on: a keeper holder pins the entry, each op is
+    // hash + byte-compare + refcount bump (the clone is the staged
+    // tensor a client would hand over anyway).
+    let mut cache = StagingCache::new(StagingConfig {
+        dedup: true,
+        ..StagingConfig::default()
+    });
+    let (keeper, _, _) = cache.intern_tensor(t.clone(), SegLoc::Device(0));
+    let hit = bench("intern_tensor_hit_release (dedup on)", || {
+        let (staged, _, hit) =
+            cache.intern_tensor(t.clone(), SegLoc::Device(0));
+        assert!(hit);
+        cache.release(&staged, SegLoc::Device(0)).unwrap();
+    });
+
+    // Encoded hit path (the SndShm arena): bytes are compared in place
+    // against the live buffer and never decoded — no tensor copy at
+    // all.  Verified below via the copies_avoided counter (delta over
+    // the tensor-path hits above, which copy nothing to avoid).
+    let hits_before = cache.dedup_hits();
+    let enc_fnv = bench("intern_encoded_hit_release (fnv)", || {
+        let (staged, _, hit) = cache
+            .intern_encoded(std::hint::black_box(&enc), SegLoc::Device(0))
+            .unwrap();
+        assert!(hit);
+        cache.release(&staged, SegLoc::Device(0)).unwrap();
+    });
+    assert!(
+        cache.copies_avoided() > 0
+            && cache.copies_avoided() == cache.dedup_hits() - hits_before,
+        "every encoded hit must be zero-copy: {} avoided vs {} encoded hits",
+        cache.copies_avoided(),
+        cache.dedup_hits() - hits_before
+    );
+    cache.release(&keeper, SegLoc::Device(0)).unwrap();
+
+    let mut cache = StagingCache::new(StagingConfig {
+        dedup: true,
+        hash: HashKind::Xx,
+        ..StagingConfig::default()
+    });
+    let keeper = cache.intern_encoded(&enc, SegLoc::Device(0)).unwrap().0;
+    let enc_xx = bench("intern_encoded_hit_release (xx)", || {
+        let (staged, _, hit) = cache
+            .intern_encoded(std::hint::black_box(&enc), SegLoc::Device(0))
+            .unwrap();
+        assert!(hit);
+        cache.release(&staged, SegLoc::Device(0)).unwrap();
+    });
+    cache.release(&keeper, SegLoc::Device(0)).unwrap();
+
+    (miss, hit, enc_fnv, enc_xx)
+}
+
+fn call(
+    tx: &mpsc::Sender<Command>,
+    client: u64,
+    msg: ClientMsg,
+) -> Result<ServerMsg, String> {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Command {
+        client,
+        msg,
+        reply: rtx.into(),
+    })
+    .map_err(|_| "daemon hung up".to_string())?;
+    rrx.recv().map_err(|_| "daemon dropped a reply".to_string())
+}
+
+fn echo_handle() -> ExecHandle {
+    ExecHandle::mock(vec!["echo".into()], |_, inputs| Ok(inputs))
+}
+
+fn spawn_daemon(ranks: usize, dedup: bool) -> mpsc::Sender<Command> {
+    let cfg = DaemonConfig {
+        barrier: Some(1),
+        max_clients: ranks + 8,
+        pool: PoolConfig::homogeneous(
+            2,
+            DeviceConfig::tesla_c2070(),
+            PlacementPolicy::RoundRobin,
+        ),
+        staging: StagingConfig {
+            dedup,
+            ..StagingConfig::default()
+        },
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::with_handles(cfg, vec![echo_handle(), echo_handle()])
+        .expect("daemon");
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+    tx
+}
+
+struct Row {
+    ranks: usize,
+    dedup: &'static str,
+    logical_b: f64,
+    physical_b: f64,
+    dedup_hits: f64,
+    copies_avoided: f64,
+    wall_ms: f64,
+}
+
+/// One daemon cell at 100% payload reuse (every rank stages identical
+/// bytes — the SPMD broadcast-input pattern the paper's fan-in assumes).
+fn run_cell(ranks: usize, dedup: bool) -> Result<Row, String> {
+    let tx = spawn_daemon(ranks, dedup);
+    let mut ids = Vec::with_capacity(ranks);
+    for i in 0..ranks {
+        match call(
+            &tx,
+            0,
+            ClientMsg::Req {
+                name: format!("rank{i}"),
+                tenant: String::new(),
+            },
+        )? {
+            ServerMsg::Queued { ticket } => ids.push(ticket),
+            other => return Err(format!("REQ: {other:?}")),
+        }
+    }
+    for &id in &ids {
+        match call(&tx, id, ClientMsg::Snd { slot: 0, tensor: payload(1.0) })? {
+            ServerMsg::Ack => {}
+            other => return Err(format!("SND: {other:?}")),
+        }
+    }
+    let (logical, physical) = match call(&tx, ids[0], ClientMsg::Stats)? {
+        ServerMsg::Stats {
+            bytes_staged,
+            staging_physical_bytes,
+            ..
+        } => (bytes_staged, staging_physical_bytes),
+        other => return Err(format!("Stats: {other:?}")),
+    };
+    let sw = Instant::now();
+    for round in 0..CYCLES {
+        if round > 0 {
+            for &id in &ids {
+                match call(
+                    &tx,
+                    id,
+                    ClientMsg::Snd { slot: 0, tensor: payload(1.0) },
+                )? {
+                    ServerMsg::Ack => {}
+                    other => return Err(format!("SND: {other:?}")),
+                }
+            }
+        }
+        for &id in &ids {
+            match call(&tx, id, ClientMsg::Str { workload: "echo".into() })? {
+                ServerMsg::Queued { .. } => {}
+                other => return Err(format!("STR: {other:?}")),
+            }
+        }
+        for &id in &ids {
+            match call(&tx, id, ClientMsg::Stp)? {
+                ServerMsg::Done { .. } => {}
+                other => return Err(format!("STP: {other:?}")),
+            }
+        }
+    }
+    let wall_ms = sw.elapsed().as_secs_f64() * 1e3;
+    let (hits, copies) = match call(&tx, ids[0], ClientMsg::Stats)? {
+        ServerMsg::Stats {
+            staging_dedup_hits,
+            staging_copies_avoided,
+            ..
+        } => (staging_dedup_hits, staging_copies_avoided),
+        other => return Err(format!("Stats: {other:?}")),
+    };
+    for &id in &ids {
+        call(&tx, id, ClientMsg::Rls)?;
+    }
+    Ok(Row {
+        ranks,
+        dedup: if dedup { "on" } else { "off" },
+        logical_b: logical as f64,
+        physical_b: physical as f64,
+        dedup_hits: hits as f64,
+        copies_avoided: copies as f64,
+        wall_ms,
+    })
+}
+
+fn rank_sweep() -> Vec<usize> {
+    match std::env::var("VGPU_BENCH_STAGING_RANKS") {
+        Ok(s) => s
+            .split(',')
+            .filter_map(|p| p.trim().parse().ok())
+            .collect(),
+        Err(_) => vec![8, 32, 64],
+    }
+}
+
+fn fmt_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.1}")
+    } else {
+        "null".into()
+    }
+}
+
+fn main() {
+    let (miss, hit, enc_fnv, enc_xx) = micro();
+
+    let sweep = rank_sweep();
+    let mut rows: Vec<Row> = Vec::new();
+    for &ranks in &sweep {
+        section(&format!(
+            "daemon fan-in, {ranks} ranks x {CYCLES} rounds, 100% reuse, \
+             {} B tensors",
+            TENSOR_ELEMS * 4
+        ));
+        for dedup in [false, true] {
+            let row = match run_cell(ranks, dedup) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!(
+                        "[{ranks} ranks dedup={dedup}: {e} — null row]"
+                    );
+                    Row {
+                        ranks,
+                        dedup: if dedup { "on" } else { "off" },
+                        logical_b: f64::NAN,
+                        physical_b: f64::NAN,
+                        dedup_hits: f64::NAN,
+                        copies_avoided: f64::NAN,
+                        wall_ms: f64::NAN,
+                    }
+                }
+            };
+            println!(
+                "{:24} {:>14.0} logical B {:>14.0} physical B \
+                 {:>8.0} hits {:>10.3} wall ms",
+                format!("{}r_dedup_{}", row.ranks, row.dedup),
+                row.logical_b,
+                row.physical_b,
+                row.dedup_hits,
+                row.wall_ms
+            );
+            rows.push(row);
+        }
+    }
+
+    let path = std::env::var("VGPU_BENCH_STAGING_JSON")
+        .unwrap_or_else(|_| "BENCH_staging.json".into());
+    let mut json = format!(
+        "{{\n  \"bench\": \"staging\",\n  \"tensor_bytes\": {},\n  \
+         \"cycles\": {CYCLES},\n  \"micro_ns\": {{\n    \
+         \"intern_tensor_miss\": {},\n    \"intern_tensor_hit\": {},\n    \
+         \"intern_encoded_hit_fnv\": {},\n    \
+         \"intern_encoded_hit_xx\": {}\n  }},\n  \"rows\": [\n",
+        TENSOR_ELEMS * 4,
+        fmt_num(miss),
+        fmt_num(hit),
+        fmt_num(enc_fnv),
+        fmt_num(enc_xx)
+    );
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"ranks\": {}, \"dedup\": \"{}\", \"logical_b\": {}, \
+             \"physical_b\": {}, \"dedup_hits\": {}, \
+             \"copies_avoided\": {}, \"wall_ms\": {}}}{}\n",
+            r.ranks,
+            r.dedup,
+            fmt_num(r.logical_b),
+            fmt_num(r.physical_b),
+            fmt_num(r.dedup_hits),
+            fmt_num(r.copies_avoided),
+            fmt_num(r.wall_ms),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("\n[recorded {path}]"),
+        Err(e) => eprintln!("\n[could not write {path}: {e}]"),
+    }
+}

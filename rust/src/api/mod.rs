@@ -80,6 +80,14 @@ pub struct NodeStatsView {
     pub spill_events: u64,
     /// Spilled segments re-staged onto a device since launch.
     pub restage_events: u64,
+    /// Deduplicated bytes held by the node-wide staging cache
+    /// (*physical* footprint; `bytes_staged` stays *logical* — see the
+    /// `[staging]` config section).
+    pub staging_physical_bytes: u64,
+    /// Stages that matched an already-resident buffer by content.
+    pub staging_dedup_hits: u64,
+    /// Tensor-body copies avoided by the zero-copy staging paths.
+    pub staging_copies_avoided: u64,
     /// Per-tenant counters (completion-event fed), in tenant-id order.
     pub tenants: Vec<TenantStatsEntry>,
 }
@@ -476,6 +484,9 @@ impl VgpuClient {
                 spilled_bytes,
                 spill_events,
                 restage_events,
+                staging_physical_bytes,
+                staging_dedup_hits,
+                staging_copies_avoided,
                 tenants,
             } => Ok(NodeStatsView {
                 batches,
@@ -489,6 +500,9 @@ impl VgpuClient {
                 spilled_bytes,
                 spill_events,
                 restage_events,
+                staging_physical_bytes,
+                staging_dedup_hits,
+                staging_copies_avoided,
                 tenants,
             }),
             ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
@@ -531,6 +545,14 @@ impl VgpuClient {
             ServerMsg::Err { msg } => Err(Error::Protocol(msg)),
             other => Err(Error::Ipc(format!("expected Health, got {other:?}"))),
         }
+    }
+
+    /// Operator form of `vgpu health --clear <dev>`: re-admit a
+    /// quarantined device to placement without restarting the daemon
+    /// (its strike/EWMA state is reset).  `Ack` even when the device is
+    /// already healthy; unknown device indices are a protocol error.
+    pub fn health_clear(&mut self, device: u32) -> Result<()> {
+        self.expect_ack(ClientMsg::HealthClear { device })
     }
 
     /// `FLH()`, synchronous: flush the queued batch now (don't wait for

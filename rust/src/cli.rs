@@ -94,6 +94,9 @@ pub enum Cmd {
     Health {
         /// Socket of the served GVM.
         socket: String,
+        /// `--clear DEV`: re-admit a quarantined device to placement
+        /// (operator un-quarantine, no daemon restart).
+        clear: Option<u32>,
     },
     /// List workloads and artifacts.
     List,
@@ -345,12 +348,25 @@ pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Cmd> {
         }
         "health" => {
             let mut socket = None;
+            let mut clear = None;
             while let Some(flag) = args.pop_front() {
                 match flag.as_str() {
                     "--socket" => {
                         socket = Some(args.pop_front().ok_or_else(|| {
                             Error::Config("--socket needs a value".into())
                         })?)
+                    }
+                    "--clear" => {
+                        let v = args.pop_front().ok_or_else(|| {
+                            Error::Config(
+                                "--clear needs a device index".into(),
+                            )
+                        })?;
+                        clear = Some(v.parse().map_err(|e| {
+                            Error::Config(format!(
+                                "health: --clear {v:?}: {e}"
+                            ))
+                        })?);
                     }
                     f => {
                         return Err(Error::Config(format!(
@@ -363,6 +379,7 @@ pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Cmd> {
                 socket: socket.ok_or_else(|| {
                     Error::Config("health: --socket required".into())
                 })?,
+                clear,
             })
         }
         "list" => Ok(Cmd::List),
@@ -391,8 +408,11 @@ USAGE:
                                       (incl. async-pipeline gauges)
   vgpu usage --socket PATH            per-tenant metering ledger of a
                                       served GVM (device-ms, bytes, ...)
-  vgpu health --socket PATH           per-device health plane of a served
-                                      GVM (state, EWMAs, remediations)
+  vgpu health --socket PATH [--clear DEV]
+                                      per-device health plane of a served
+                                      GVM (state, EWMAs, remediations);
+                                      --clear re-admits a quarantined
+                                      device without a daemon restart
   vgpu list                           list workloads and artifacts
   vgpu profile                        show cost-calibration details
   vgpu help                           this text
@@ -400,8 +420,8 @@ USAGE:
 EXPERIMENTS: tab1 tab3 fig14 fig15 fig16 fig17 fig18 fig19 fig20 fig21
              fig22 fig23 fig24 ablation-style ablation-depcheck
              ablation-ctx ablation-barrier ablation-policy multi-gpu qos
-             multi-gpu-cluster pipeline spill chaos fanin ext-multigpu
-             ext-cluster ext-fig18-socket
+             multi-gpu-cluster pipeline spill chaos fanin staging
+             ext-multigpu ext-cluster ext-fig18-socket
 ";
 
 #[cfg(test)]
@@ -517,11 +537,21 @@ mod tests {
         assert_eq!(
             p("health --socket /tmp/v.sock").unwrap(),
             Cmd::Health {
-                socket: "/tmp/v.sock".into()
+                socket: "/tmp/v.sock".into(),
+                clear: None
+            }
+        );
+        assert_eq!(
+            p("health --socket /tmp/v.sock --clear 2").unwrap(),
+            Cmd::Health {
+                socket: "/tmp/v.sock".into(),
+                clear: Some(2)
             }
         );
         assert!(p("health").is_err(), "--socket required");
         assert!(p("health --bogus x").is_err());
+        assert!(p("health --socket /tmp/v.sock --clear").is_err());
+        assert!(p("health --socket /tmp/v.sock --clear two").is_err());
     }
 
     #[test]

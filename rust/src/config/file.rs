@@ -51,6 +51,11 @@
 //! host_budget_bytes = 34359738368  # cap on spilled bytes (32 GiB)
 //! watermark = 1.0             # device fill fraction that triggers spill
 //!
+//! [staging]
+//! dedup = on                  # content-addressed segment dedup (default off)
+//! arena_bytes = 16777216      # per-connection ring-drain arena cap (16 MiB)
+//! hash = fnv                  # content hash: fnv | xx
+//!
 //! [metrics]
 //! enabled = true              # Prometheus /metrics endpoint (default off)
 //! listen = 127.0.0.1:9187     # TCP listen address (:0 picks a port)
@@ -93,6 +98,7 @@ use crate::gvm::faults::FaultConfig;
 use crate::gvm::health::HealthConfig;
 use crate::gvm::qos::{parse_share_list, QosConfig};
 use crate::gvm::spill::SpillConfig;
+use crate::gvm::staging::{HashKind, StagingConfig};
 use crate::gvm::{DaemonConfig, GvmConfig, PipelineConfig, StyleRule};
 use crate::ipc::mux::{IpcConfig, IpcMode};
 use crate::metrics::MetricsConfig;
@@ -448,6 +454,36 @@ impl ConfigFile {
         Ok(s)
     }
 
+    /// Build the staging-plane tunables (the `[staging]` section);
+    /// omitted section = dedup off — every staged buffer unique, the
+    /// physical footprint equal to the logical one.
+    pub fn staging(&self) -> Result<StagingConfig> {
+        let mut s = StagingConfig::default();
+        if let Some(v) = self.get("staging", "dedup") {
+            s.dedup = match v.to_lowercase().as_str() {
+                "true" | "1" | "on" | "yes" => true,
+                "false" | "0" | "off" | "no" => false,
+                other => {
+                    return Err(Error::Config(format!(
+                        "[staging] dedup = {other:?} (want true|false)"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = self.get_usize("staging", "arena_bytes")? {
+            s.arena_bytes = v as u64;
+        }
+        if let Some(v) = self.get("staging", "hash") {
+            s.hash = HashKind::parse(v).ok_or_else(|| {
+                Error::Config(format!(
+                    "[staging] hash = {v:?} (want fnv|xx)"
+                ))
+            })?;
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
     /// Build the fault-injection tunables (the `[faults]` section);
     /// omitted section = injection off — the executor workers carry no
     /// fault plan at all.
@@ -611,6 +647,7 @@ impl ConfigFile {
         daemon.migration = self.migration()?;
         daemon.pipeline = self.pipeline()?;
         daemon.spill = self.spill()?;
+        daemon.staging = self.staging()?;
         daemon.faults = self.faults()?;
         daemon.health = self.health()?;
         daemon.ipc = self.ipc()?;
@@ -828,6 +865,45 @@ policy = model-optimal
         ] {
             let c = ConfigFile::parse(bad).unwrap();
             assert!(c.spill().is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn staging_section_parses_and_rides_into_gvm() {
+        let c = ConfigFile::parse(
+            "[staging]\ndedup = on\narena_bytes = 4096\nhash = xx\n",
+        )
+        .unwrap();
+        let s = c.staging().unwrap();
+        assert!(s.dedup);
+        assert_eq!(s.arena_bytes, 4096);
+        assert_eq!(s.hash, HashKind::Xx);
+        let g = c.gvm().unwrap();
+        assert!(g.daemon.staging.dedup);
+        assert_eq!(g.daemon.staging.arena_bytes, 4096);
+        assert_eq!(g.daemon.staging.hash, HashKind::Xx);
+    }
+
+    #[test]
+    fn staging_section_defaults_to_off() {
+        let c = ConfigFile::parse("").unwrap();
+        let s = c.staging().unwrap();
+        assert!(!s.dedup, "dedup must default off (physical == logical)");
+        assert!(s.arena_bytes > 0);
+        assert_eq!(s.hash, HashKind::Fnv);
+        assert!(!c.gvm().unwrap().daemon.staging.dedup);
+    }
+
+    #[test]
+    fn bad_staging_sections_rejected() {
+        for bad in [
+            "[staging]\ndedup = maybe\n",
+            "[staging]\narena_bytes = 0\n",
+            "[staging]\narena_bytes = lots\n",
+            "[staging]\nhash = md5\n",
+        ] {
+            let c = ConfigFile::parse(bad).unwrap();
+            assert!(c.staging().is_err(), "{bad:?} should be rejected");
         }
     }
 

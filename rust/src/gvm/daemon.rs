@@ -123,6 +123,9 @@ use super::plan::Job;
 use super::qos::{QueueMetrics, WeightedDeficitQueue, DEFAULT_TENANT};
 use super::scheduler::{plan_batch, Policy};
 use super::spill::{SpillConfig, SpillMetrics, SpillStore};
+use super::staging::{
+    SegLoc, Staged, StagingCache, StagingConfig, StagingMetrics,
+};
 use super::vgpu::{ClientId, Residency, VgpuState, VgpuTable};
 use crate::ipc::mux::{IpcConfig, MuxWaker};
 use crate::ipc::wire::{
@@ -257,10 +260,11 @@ struct PendingJob {
     /// Failover copy of the job's inputs.  Populated only when
     /// `[health]` remediation is on (submission *moves* the real
     /// inputs, so re-running an unfinished job off a quarantined
-    /// device needs this clone); `None` after one failover — a job
-    /// fails over at most once, so a second sick device fails it
-    /// explicitly instead of bouncing forever.
-    inputs: Option<Vec<TensorValue>>,
+    /// device needs this clone — an `Arc` refcount bump per tensor
+    /// since the staging rework, never a payload copy); `None` after
+    /// one failover — a job fails over at most once, so a second sick
+    /// device fails it explicitly instead of bouncing forever.
+    inputs: Option<Vec<Arc<TensorValue>>>,
 }
 
 /// One in-flight flush epoch (keyed by `flush_seq` in the daemon's
@@ -302,6 +306,9 @@ pub struct DaemonConfig {
     /// Socket transport mode, admission limits, and shm data-plane
     /// ring cap (`[ipc]` config section).
     pub ipc: IpcConfig,
+    /// Zero-copy / content-addressed staging plane (`[staging]`
+    /// config section).
+    pub staging: StagingConfig,
 }
 
 impl Default for DaemonConfig {
@@ -319,6 +326,7 @@ impl Default for DaemonConfig {
             faults: FaultConfig::default(),
             health: HealthConfig::default(),
             ipc: IpcConfig::default(),
+            staging: StagingConfig::default(),
         }
     }
 }
@@ -379,6 +387,11 @@ pub struct Daemon {
     /// Health counters in the shared registry (strikes, quarantines,
     /// failovers, resubmissions, quarantined-device gauge).
     health_metrics: HealthMetrics,
+    /// Node-wide content-addressed segment store: every staged buffer
+    /// lives here as a shared immutable `Arc`, refcounted per holder
+    /// location — logical `seg_bytes` stays per-VGPU in the table
+    /// while this cache tracks the deduped *physical* footprint.
+    staging: StagingCache,
 }
 
 /// One client's negotiated shared-memory data plane.  The daemon holds
@@ -402,6 +415,12 @@ struct ShmRing {
     last_gen: u64,
     /// Generation stamped on the next outbound `DataShm`.
     out_gen: u64,
+    /// Per-ring staging arena the input ring drains into: reused
+    /// across `SndShm`s so the drain is the single unavoidable move —
+    /// the bytes go ring -> arena -> content-addressed intern, with
+    /// no per-stage heap allocation.  Retained capacity is capped at
+    /// `[staging] arena_bytes`.
+    arena: Vec<u8>,
 }
 
 /// The daemon's handles into the shared metrics [`Registry`] — named
@@ -424,6 +443,10 @@ struct NodeMetrics {
     shm_bytes: Counter,
     /// Shared-memory rings currently negotiated.
     shm_rings: Gauge,
+    /// `SndShm` descriptors rejected before any ring read because
+    /// their generation was stale or replayed — the data-plane
+    /// counterpart of the reactor's admission-rejects counter.
+    shm_stale_generation: Counter,
     flush_latency_ms: Histogram,
     devices: Vec<DeviceHandles>,
     /// Per-tenant handles, capped like the wire rows (BTreeMap:
@@ -545,6 +568,11 @@ impl NodeMetrics {
                 "vgpu_ipc_shm_rings",
                 "Clients with a negotiated shared-memory ring",
             ),
+            shm_stale_generation: registry.counter_with(
+                "vgpu_ipc_shm_rejects_total",
+                "SndShm descriptors rejected before any ring read",
+                &[("reason", "stale_generation")],
+            ),
             flush_latency_ms: registry.histogram(
                 "vgpu_flush_latency_ms",
                 "Flush epoch submit-to-settle latency (ms)",
@@ -646,6 +674,8 @@ impl Daemon {
         let health = HealthEngine::new(cfg.health.clone(), pool.len())
             .expect("invalid [health] config (validate via config::file)");
         let health_metrics = HealthMetrics::new(&registry);
+        let mut staging = StagingCache::new(cfg.staging.clone());
+        staging.set_metrics(StagingMetrics::new(&registry));
         let metrics = NodeMetrics::new(registry.clone(), pool.len());
         let qos_metrics = QueueMetrics::new(registry);
         Self {
@@ -669,6 +699,7 @@ impl Daemon {
             qos_metrics,
             health,
             health_metrics,
+            staging,
         }
     }
 
@@ -840,6 +871,60 @@ impl Daemon {
             .any(|f| f.jobs.iter().any(|j| j.client == client))
     }
 
+    /// Where a client's staged buffers are charged in the staging
+    /// cache: the host spill tier when the client is spilled, else its
+    /// placement device (device 0 for the placeless edge case — same
+    /// fallback the flush grouping uses).
+    fn seg_loc(&self, client: ClientId) -> SegLoc {
+        let spilled = self
+            .table
+            .get(client)
+            .map(|v| v.residency == Residency::Spilled)
+            .unwrap_or(false);
+        if spilled {
+            SegLoc::Spilled
+        } else {
+            SegLoc::Device(
+                self.pool
+                    .placement(client)
+                    .map(|d| d.0 as u32)
+                    .unwrap_or(0),
+            )
+        }
+    }
+
+    /// Drop one staging-cache holder per buffer at `loc`.  Cache
+    /// bookkeeping errors are surfaced but never fail the data path —
+    /// the cache is an overlay on the table's byte-exact accounting.
+    fn release_staged(&mut self, held: &[Staged], loc: SegLoc) {
+        for s in held {
+            if let Err(e) = self.staging.release(s, loc) {
+                log::warn!("staging-cache release at {loc:?}: {e}");
+            }
+        }
+    }
+
+    /// Move every staged buffer a client still holds between charge
+    /// locations (spill, restage, migrate) — refcount moves, no bytes.
+    fn move_client_staged(
+        &mut self,
+        client: ClientId,
+        from: SegLoc,
+        to: SegLoc,
+    ) {
+        let held: Vec<Staged> = match self.table.get(client) {
+            Ok(v) => v.in_slots.iter().flatten().cloned().collect(),
+            Err(_) => return,
+        };
+        for s in &held {
+            if let Err(e) = self.staging.transition(s, from, to) {
+                log::warn!(
+                    "staging-cache transition for client {client}: {e}"
+                );
+            }
+        }
+    }
+
     /// Keep the per-device segment accounting — or, for a spilled
     /// client, the host spill store — in step with a client's
     /// `seg_bytes` transition.  With spill enabled, resident growth is
@@ -945,6 +1030,11 @@ impl Daemon {
                     return;
                 }
                 let _ = self.table.set_residency(client, Residency::Spilled);
+                self.move_client_staged(
+                    client,
+                    SegLoc::Device(dev.0 as u32),
+                    SegLoc::Spilled,
+                );
                 let tenant = self.tenant_of(client);
                 self.ledger.charge_spilled(&tenant, total);
                 log::info!(
@@ -990,6 +1080,11 @@ impl Daemon {
                         continue;
                     }
                     let _ = self.table.set_residency(c, Residency::Spilled);
+                    self.move_client_staged(
+                        c,
+                        SegLoc::Device(dev.0 as u32),
+                        SegLoc::Spilled,
+                    );
                     let tenant = self.tenant_of(c);
                     self.ledger.charge_spilled(&tenant, seg);
                     freed += seg;
@@ -1121,6 +1216,11 @@ impl Daemon {
             );
         }
         self.table.set_residency(client, Residency::Resident)?;
+        self.move_client_staged(
+            client,
+            SegLoc::Spilled,
+            SegLoc::Device(dev.0 as u32),
+        );
         log::info!(
             "re-staged client {client}'s {seg} B segment onto device {}",
             dev.0
@@ -1289,7 +1389,14 @@ impl Daemon {
                 // the client slot, segment bytes, or queued-work
                 // estimate on the device (they would bias placement
                 // forever — the mid-flight disconnect leak).
+                let loc = self.seg_loc(cmd.client);
                 let released = self.table.release(cmd.client);
+                // The departing client's staging-cache holders drop
+                // with it: shared buffers live on for their other
+                // holders, private ones die here.
+                if let Ok(held) = &released {
+                    self.release_staged(held, loc);
+                }
                 // A spilled client's bytes live in the host store, not
                 // on its device — drop them there; freeing the device
                 // too would double-free another client's residency.
@@ -1395,6 +1502,9 @@ impl Daemon {
                         spilled_bytes: self.spill.bytes(),
                         spill_events: self.spill.spill_events(),
                         restage_events: self.spill.restage_events(),
+                        staging_physical_bytes: self.staging.physical_bytes(),
+                        staging_dedup_hits: self.staging.dedup_hits(),
+                        staging_copies_avoided: self.staging.copies_avoided(),
                         tenants,
                     })
                     .map_err(|_| Error::Ipc("client gone".into()))?;
@@ -1518,6 +1628,32 @@ impl Daemon {
                     })
                     .map_err(|_| Error::Ipc("client gone".into()))?;
             }
+            ClientMsg::HealthClear { device } => {
+                // Operator un-quarantine: re-admit a repaired device
+                // into placement without a daemon restart.  The strike
+                // and deadline history is cleared too, so the old
+                // quarantine's evidence cannot instantly re-trip on
+                // the first post-repair completion.  Idempotent on a
+                // healthy device; unknown indices are a typed error.
+                let d = device as usize;
+                if d >= self.pool.len() {
+                    return Err(Error::protocol(format!(
+                        "HealthClear for unknown device {device} \
+                         (pool has {})",
+                        self.pool.len()
+                    )));
+                }
+                let dev = DeviceId(d);
+                if self.pool.state(dev) != DeviceState::Healthy {
+                    self.pool.set_state(dev, DeviceState::Healthy);
+                    self.health.clear_device(d);
+                    log::info!(
+                        "operator cleared device {d}: re-admitted to \
+                         placement"
+                    );
+                }
+                self.ack(&cmd.reply)?;
+            }
             ClientMsg::ShmOpen { path, bytes } => {
                 // Must already hold a VGPU: the ring is per-client
                 // data-plane state, torn down with the registration.
@@ -1537,14 +1673,24 @@ impl Daemon {
                     .read(true)
                     .write(true)
                     .open(format!("{path}.out"))?;
+                // Re-negotiation keeps the generation watermarks: a
+                // ring swap must not reopen the replay window, or a
+                // recorded descriptor from the old ring would pass the
+                // strictly-increasing check against a reset counter.
+                let (last_gen, out_gen) = self
+                    .shm
+                    .get(&cmd.client)
+                    .map(|r| (r.last_gen, r.out_gen))
+                    .unwrap_or((0, 0));
                 self.shm.insert(
                     cmd.client,
                     ShmRing {
                         input,
                         output,
                         bytes,
-                        last_gen: 0,
-                        out_gen: 0,
+                        last_gen,
+                        out_gen,
+                        arena: Vec::new(),
                     },
                 );
                 cmd.reply
@@ -1557,10 +1703,7 @@ impl Daemon {
                 len,
                 generation,
             } => {
-                let tensor =
-                    self.shm_read(cmd.client, offset, len, generation)?;
-                self.metrics.shm_bytes.add(len);
-                self.stage_tensor(cmd.client, slot, tensor)?;
+                self.stage_shm(cmd.client, slot, offset, len, generation)?;
                 self.ack(&cmd.reply)?;
             }
             ClientMsg::RcvShm { slot } => {
@@ -1595,67 +1738,54 @@ impl Daemon {
         Ok(())
     }
 
-    /// Shared `SND` staging path, used by inline frames and by
-    /// shared-memory descriptors alike so the two planes cannot drift:
-    /// recycle a settled cycle, stage the tensor, meter accepted
-    /// bytes, and resync the device's segment accounting.
+    /// Inline `SND` staging path: intern the decoded tensor into the
+    /// content-addressed cache (an `Arc` refcount bump on a dedup
+    /// hit), then run the shared staging tail.
     fn stage_tensor(
         &mut self,
         client: ClientId,
         slot: u32,
         tensor: TensorValue,
     ) -> Result<()> {
-        let before = self.table.get(client)?.seg_bytes;
-        // A SND after Done/Failed starts the client's next request
-        // cycle.  Input slots survive the recycle: a settled job's own
-        // inputs left the segment at submission (or were dropped at
-        // failure time — see `fail_job`), so whatever is staged now
-        // can only be next-cycle tensors pre-staged during execution
-        // (the pipeline overlap).
-        let settled = {
-            let v = self.table.get(client)?;
-            matches!(
-                v.state,
-                VgpuState::Done { .. } | VgpuState::Failed { .. }
-            )
-        };
-        if settled {
-            self.table.recycle_outputs(client)?;
-        }
-        let bytes = tensor.bytes() as u64;
-        let staged = self.table.stage(client, slot, tensor);
-        if staged.is_ok() {
-            // Count only bytes that actually landed — a rejected SND
-            // (budget, bad slot) must not inflate the stat or the
-            // tenant's metered bill.
-            self.metrics.bytes_staged.add(bytes);
-            let tenant = self.tenant_of(client);
-            self.ledger.charge_staged(&tenant, bytes);
-        }
-        // The recycle above may have freed bytes even if staging
-        // failed — resync unconditionally before surfacing.
-        let after = self.table.get(client)?.seg_bytes;
-        self.sync_seg_mem(client, before, after);
-        staged
+        // Validate the registration before interning so an early
+        // error cannot leak a cache holder.
+        self.table.get(client)?;
+        let loc = self.seg_loc(client);
+        let (staged, _, _) = self.staging.intern_tensor(tensor, loc);
+        self.stage_shared(client, slot, staged, loc)
     }
 
-    /// Validate one inbound shm descriptor and copy the payload out of
-    /// the client's input ring.  Every check precedes the read: ring
-    /// negotiated, generation strictly increasing (no replays), and
+    /// `SndShm` staging path: validate the descriptor, drain the ring
+    /// payload into the connection's staging arena (the single
+    /// unavoidable move), and intern the canonical encoding straight
+    /// from the arena — on a dedup hit the bytes are compared in
+    /// place against the live buffer and never decoded, so staging an
+    /// already-resident payload performs zero copies of the tensor
+    /// body.  Every check precedes the read: ring negotiated,
+    /// generation strictly increasing (a stale or replayed descriptor
+    /// is a typed, counted rejection — never a silent drop), and
     /// `[offset, offset+len)` inside the negotiated capacity.
-    fn shm_read(
+    fn stage_shm(
         &mut self,
         client: ClientId,
+        slot: u32,
         offset: u64,
         len: u64,
         generation: u64,
-    ) -> Result<TensorValue> {
-        let ring = self.shm.get_mut(&client).ok_or_else(|| {
+    ) -> Result<()> {
+        self.table.get(client)?;
+        let loc = self.seg_loc(client);
+        // Field-disjoint borrows: the staging cache compares/decodes
+        // the ring arena in place, so both must be live at the intern.
+        let shm = &mut self.shm;
+        let staging = &mut self.staging;
+        let ring = shm.get_mut(&client).ok_or_else(|| {
             Error::protocol(
                 "SndShm without a negotiated ring (ShmOpen first)",
             )
         })?;
         if generation <= ring.last_gen {
+            self.metrics.shm_stale_generation.inc();
             return Err(Error::protocol(format!(
                 "SndShm generation {generation} not past {}",
                 ring.last_gen
@@ -1671,11 +1801,87 @@ impl Daemon {
                 ring.bytes
             )));
         }
-        let mut buf = vec![0u8; len as usize];
-        ring.input.read_exact_at(&mut buf, offset)?;
+        let n = len as usize;
+        if ring.arena.len() < n {
+            ring.arena.resize(n, 0);
+        }
+        ring.input.read_exact_at(&mut ring.arena[..n], offset)?;
+        // The generation is consumed by the read, decodable or not —
+        // a malformed payload cannot be replayed either.
         ring.last_gen = generation;
-        let mut pos = 0usize;
-        TensorValue::decode(&buf, &mut pos)
+        let (staged, _, _) = staging.intern_encoded(&ring.arena[..n], loc)?;
+        // Cap the retained arena so one oversized payload does not
+        // pin ring-sized memory per client forever.
+        let cap = staging.config().arena_bytes as usize;
+        if ring.arena.capacity() > cap {
+            ring.arena.truncate(cap);
+            ring.arena.shrink_to(cap);
+        }
+        self.metrics.shm_bytes.add(len);
+        self.stage_shared(client, slot, staged, loc)
+    }
+
+    /// Shared staging tail, used by inline frames and shm descriptors
+    /// alike so the two planes cannot drift: recycle a settled cycle,
+    /// place the shared buffer in its slot, meter accepted *logical*
+    /// bytes (dedup never changes what the client staged), and resync
+    /// the device's segment accounting.  The cache holder added by the
+    /// intern is owned by the slot on success (a displaced occupant's
+    /// holder drops) and released on any failure — a rejected SND
+    /// leaks nothing.
+    fn stage_shared(
+        &mut self,
+        client: ClientId,
+        slot: u32,
+        staged: Staged,
+        loc: SegLoc,
+    ) -> Result<()> {
+        let bytes = staged.bytes();
+        // A SND after Done/Failed starts the client's next request
+        // cycle.  Input slots survive the recycle: a settled job's own
+        // inputs left the segment at submission (or were dropped at
+        // failure time — see `fail_job`), so whatever is staged now
+        // can only be next-cycle tensors pre-staged during execution
+        // (the pipeline overlap).
+        let (before, settled) = match self.table.get(client) {
+            Ok(v) => (
+                v.seg_bytes,
+                matches!(
+                    v.state,
+                    VgpuState::Done { .. } | VgpuState::Failed { .. }
+                ),
+            ),
+            Err(e) => {
+                self.release_staged(std::slice::from_ref(&staged), loc);
+                return Err(e);
+            }
+        };
+        if settled {
+            if let Err(e) = self.table.recycle_outputs(client) {
+                self.release_staged(std::slice::from_ref(&staged), loc);
+                return Err(e);
+            }
+        }
+        let outcome = self.table.stage(client, slot, staged.clone());
+        match &outcome {
+            Ok(displaced) => {
+                // Count only bytes that actually landed — a rejected
+                // SND (budget, bad slot) must not inflate the stat or
+                // the tenant's metered bill.
+                self.metrics.bytes_staged.add(bytes);
+                let tenant = self.tenant_of(client);
+                self.ledger.charge_staged(&tenant, bytes);
+                if let Some(old) = displaced {
+                    self.release_staged(std::slice::from_ref(old), loc);
+                }
+            }
+            Err(_) => {
+                self.release_staged(std::slice::from_ref(&staged), loc);
+            }
+        }
+        let after = self.table.get(client)?.seg_bytes;
+        self.sync_seg_mem(client, before, after);
+        outcome.map(|_| ())
     }
 
     fn ack(&self, reply: &ReplySink) -> Result<()> {
@@ -1716,7 +1922,7 @@ impl Daemon {
         let from = self.pool.placement(client).ok_or_else(|| {
             Error::gvm(format!("client {client} has no device placement"))
         })?;
-        let (name, seg, est) = {
+        let (name, seg, est, resident) = {
             let v = self.table.get(client)?;
             // Only a *queued* (not yet submitted) job's estimate moves
             // with the VGPU.  A Running job already executes on the
@@ -1731,11 +1937,9 @@ impl Daemon {
             // the source device: zero bytes move with the binding (the
             // re-stage step lands them on whatever device the client is
             // bound to by then).
-            let seg = match v.residency {
-                Residency::Spilled => 0,
-                Residency::Resident => v.seg_bytes,
-            };
-            (v.name.clone(), seg, est)
+            let resident = v.residency == Residency::Resident;
+            let seg = if resident { v.seg_bytes } else { 0 };
+            (v.name.clone(), seg, est, resident)
         };
         let to = match target {
             Some(d) => d,
@@ -1755,6 +1959,15 @@ impl Daemon {
         self.executors
             .drain(from, self.cfg.migration.drain_timeout)?;
         self.pool.note_migrated(client, &name, to, seg, est)?;
+        // A resident segment's cache holders follow the binding; a
+        // spilled client's stay charged to the host tier.
+        if resident {
+            self.move_client_staged(
+                client,
+                SegLoc::Device(from.0 as u32),
+                SegLoc::Device(to.0 as u32),
+            );
+        }
         let tenant = self.tenant_of(client);
         self.metrics.tenant(&tenant).migrations.inc();
         self.ledger.charge_migration(&tenant);
@@ -2373,7 +2586,7 @@ impl Daemon {
     /// job fails through the normal placement error.
     fn evacuate_clients(&mut self, dev: DeviceId) {
         for client in self.pool.clients_on(dev) {
-            let (name, seg, est) = {
+            let (name, seg, est, resident) = {
                 let Ok(v) = self.table.get(client) else {
                     continue;
                 };
@@ -2386,11 +2599,9 @@ impl Daemon {
                     }
                     _ => 0.0,
                 };
-                let seg = match v.residency {
-                    Residency::Spilled => 0,
-                    Residency::Resident => v.seg_bytes,
-                };
-                (v.name.clone(), seg, est)
+                let resident = v.residency == Residency::Resident;
+                let seg = if resident { v.seg_bytes } else { 0 };
+                (v.name.clone(), seg, est, resident)
             };
             let to = match self.coolest_other_device(dev, seg) {
                 Ok(t) => t,
@@ -2407,6 +2618,13 @@ impl Daemon {
             {
                 log::warn!("evacuating client {client}: {e}");
                 continue;
+            }
+            if resident {
+                self.move_client_staged(
+                    client,
+                    SegLoc::Device(dev.0 as u32),
+                    SegLoc::Device(to.0 as u32),
+                );
             }
             let tenant = self.tenant_of(client);
             self.metrics.tenant(&tenant).migrations.inc();
@@ -2509,7 +2727,7 @@ impl Daemon {
                         .in_slots
                         .iter()
                         .flatten()
-                        .map(|t| t.bytes())
+                        .map(|t| t.bytes() as usize)
                         .sum();
                     (
                         crate::model::StageTimes {
@@ -2523,7 +2741,7 @@ impl Daemon {
             };
             let v = self.table.get(*client)?;
             let in_bytes: u64 =
-                v.in_slots.iter().flatten().map(|t| t.bytes() as u64).sum();
+                v.in_slots.iter().flatten().map(|t| t.bytes()).sum();
             jobs.push(Job {
                 idx,
                 workload: workload.clone(),
@@ -2606,15 +2824,24 @@ impl Daemon {
             .map(str::to_string)
             .unwrap_or_else(|| workload.clone());
         let before = self.table.get(*client)?.seg_bytes;
+        let loc = self.seg_loc(*client);
         let staged = self.table.take_staged_inputs(*client);
         let after = self.table.get(*client)?.seg_bytes;
         self.sync_seg_mem(*client, before, after);
         match staged {
-            Ok(inputs) => {
+            Ok(staged) => {
+                // The launch consumed the segment: the cache holders
+                // drop here while the moved `Arc`s keep the payloads
+                // alive through execution — the copy-on-write handoff
+                // (the Arc moves, never the bytes).
+                self.release_staged(&staged, loc);
+                let inputs: Vec<Arc<TensorValue>> =
+                    staged.into_iter().map(|s| s.value).collect();
                 // Failover copy: submission *moves* the inputs into the
                 // worker, so re-running this job off a quarantined
-                // device later needs a clone now.  Only paid when
-                // remediation is on.
+                // device later needs a clone now — `Arc` refcount
+                // bumps since the staging rework, never payload
+                // copies.  Only paid when remediation is on.
                 let saved = (self.health.cfg().enabled
                     && self.health.cfg().remediate)
                     .then(|| inputs.clone());
@@ -2743,8 +2970,12 @@ impl Daemon {
         if pre_submit {
             let before =
                 self.table.get(client).map(|v| v.seg_bytes).unwrap_or(0);
-            if let Err(e) = self.table.recycle(client) {
-                log::warn!("failed-job recycle for client {client}: {e}");
+            let loc = self.seg_loc(client);
+            match self.table.recycle(client) {
+                Ok(dropped) => self.release_staged(&dropped, loc),
+                Err(e) => {
+                    log::warn!("failed-job recycle for client {client}: {e}")
+                }
             }
             let after =
                 self.table.get(client).map(|v| v.seg_bytes).unwrap_or(before);

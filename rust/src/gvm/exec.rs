@@ -57,8 +57,11 @@ pub struct Submission {
     pub est_ms: f64,
     /// Artifact to execute.
     pub artifact: String,
-    /// Staged inputs, moved out of the client's segment.
-    pub inputs: Vec<TensorValue>,
+    /// Staged inputs, moved out of the client's segment as shared
+    /// immutable buffers (refcount bumps, not copies — the staging
+    /// plane's copy-on-write handoff).  The worker unwraps each `Arc`
+    /// in place when it is the last holder and only then clones.
+    pub inputs: Vec<Arc<TensorValue>>,
 }
 
 /// A finished job, reported back over the completion channel.
@@ -144,7 +147,20 @@ impl ExecutorPool {
                 .spawn(move || {
                     while let Ok(sub) = rx.recv() {
                         let t0 = Instant::now();
-                        let result = exec.execute(&sub.artifact, sub.inputs);
+                        // Unwrap each shared buffer in place: when this
+                        // job is the only holder (no dedup sibling, no
+                        // failover copy) the Vec<f32> moves straight
+                        // through; a clone happens only for genuinely
+                        // shared payloads.
+                        let inputs: Vec<TensorValue> = sub
+                            .inputs
+                            .into_iter()
+                            .map(|a| {
+                                Arc::try_unwrap(a)
+                                    .unwrap_or_else(|a| (*a).clone())
+                            })
+                            .collect();
+                        let result = exec.execute(&sub.artifact, inputs);
                         let action = plan
                             .as_ref()
                             .map(|p| p.decide(device.0))

@@ -45,6 +45,7 @@ pub mod qos;
 pub mod scheduler;
 pub mod sim_backend;
 pub mod spill;
+pub mod staging;
 pub mod vgpu;
 
 pub use daemon::{Command, Daemon, DaemonConfig, PipelineConfig};
@@ -64,6 +65,9 @@ pub use sim_backend::{
     TenantTiming,
 };
 pub use spill::{SpillConfig, SpillMetrics, SpillStore};
+pub use staging::{
+    HashKind, SegLoc, Staged, StagingCache, StagingConfig, StagingMetrics,
+};
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -326,7 +330,7 @@ pub fn serve_unix_threads_parts(
                 msg: format!("connection limit {max_connections} reached"),
             };
             let mut framed = crate::ipc::Framed::new(stream);
-            let _ = framed.send(&err.encode());
+            let _ = framed.send_msg(&err);
             continue;
         }
         let cmd_tx = cmd_tx.clone();
@@ -373,7 +377,7 @@ fn threaded_conn_loop(
                 let err = ServerMsg::Err {
                     msg: format!("frame decode error: {e}"),
                 };
-                let _ = framed.send(&err.encode());
+                let _ = framed.send_msg(&err);
                 break;
             }
         };
@@ -388,7 +392,7 @@ fn threaded_conn_loop(
                       (RLS first)"
                     .into(),
             };
-            if framed.send(&err.encode()).is_err() {
+            if framed.send_msg(&err).is_err() {
                 break;
             }
             continue;
@@ -413,14 +417,14 @@ fn threaded_conn_loop(
             // (the id stays a server-side detail); a rejected
             // REQ (table full, placement failed) must forward
             // the error, not mask it as success.
-            let out = match &reply {
+            let out = match reply {
                 ServerMsg::Queued { ticket } => {
-                    client_id = *ticket;
-                    ServerMsg::Ack.encode()
+                    client_id = ticket;
+                    ServerMsg::Ack
                 }
-                _ => reply.encode(),
+                other => other,
             };
-            if framed.send(&out).is_err() {
+            if framed.send_msg(&out).is_err() {
                 break;
             }
             continue;
@@ -430,7 +434,7 @@ fn threaded_conn_loop(
         if is_rls && matches!(reply, ServerMsg::Ack) {
             client_id = 0;
         }
-        if framed.send(&reply.encode()).is_err() {
+        if framed.send_msg(&reply).is_err() {
             break;
         }
     }

@@ -1,0 +1,1143 @@
+//! The zero-copy, content-addressed staging plane.
+//!
+//! Under SPMD fan-in, N ranks stage *the same program and largely the
+//! same inputs* — yet historically every `SND`/`SndShm` payload became a
+//! private, deep-copied tensor inside its owner's segment, so N ranks
+//! paid N copies and N× device memory for identical bytes.  This module
+//! makes staging cheap twice over:
+//!
+//! 1. **Shared immutable buffers.**  Every staged tensor is an
+//!    [`Arc<TensorValue>`] wrapped in a [`Staged`] handle.  Moving a
+//!    segment slot into a flush job, saving a failover copy, or
+//!    re-staging after remediation is a refcount bump, never a byte
+//!    copy (copy-on-write: the buffer itself is immutable for life).
+//! 2. **Content-addressed dedup.**  The node-wide [`StagingCache`] keys
+//!    buffers by a 64-bit content hash (FNV-1a or XXH64, `[staging]
+//!    hash`) with a *full byte compare on every hit*, so a hash
+//!    collision can never alias two different payloads.  When rank *k*
+//!    stages bytes identical to rank *j*'s, it receives the same `Arc`
+//!    back and the physical footprint does not grow.
+//!
+//! Accounting therefore splits in two: **logical** bytes are what each
+//! VGPU's segment reports on the wire (`seg_bytes` — unchanged
+//! semantics), while **physical** bytes are what the deduped store
+//! actually occupies, charged per *(buffer, device)* — a buffer shared
+//! by four resident holders on one device is charged once; holders on a
+//! second device charge that device once more (a cross-device share
+//! needs a per-device copy on real hardware).  A buffer whose holders
+//! have all been spilled is charged to the host spill tier instead, and
+//! a restage by *any* holder restores it for all of them at once.  The
+//! [`StagingCache`] reports every charge move as a [`PhysEffects`] the
+//! daemon applies to the [`crate::gvm::devices::DevicePool`]; with
+//! `dedup = off` (the default) every buffer is unique, physical deltas
+//! equal logical deltas byte-for-byte, and the node behaves exactly as
+//! it did before this plane existed.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use crate::metrics::registry::{Counter, Gauge, Registry};
+use crate::runtime::TensorValue;
+use crate::{Error, Result};
+
+/// Content-hash function selector (`[staging] hash`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HashKind {
+    /// FNV-1a 64: tiny state, excellent for small payloads.
+    #[default]
+    Fnv,
+    /// XXH64: 32-byte stripes, faster on multi-KiB tensors.
+    Xx,
+}
+
+impl HashKind {
+    /// Parse a config spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_lowercase().as_str() {
+            "fnv" => Some(HashKind::Fnv),
+            "xx" | "xxh64" | "xxhash" => Some(HashKind::Xx),
+            _ => None,
+        }
+    }
+
+    /// Config spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            HashKind::Fnv => "fnv",
+            HashKind::Xx => "xx",
+        }
+    }
+}
+
+/// The `[staging]` config-file section.
+#[derive(Debug, Clone)]
+pub struct StagingConfig {
+    /// Content-addressed dedup of identical payloads (default off: every
+    /// buffer unique, physical == logical — the pre-staging behaviour).
+    pub dedup: bool,
+    /// Cap on the per-connection ring-drain arena a `SndShm` descriptor
+    /// is read into before hashing/decoding.  Larger payloads still
+    /// stage correctly; the arena just releases the excess capacity
+    /// afterwards instead of holding it for the connection's life.
+    pub arena_bytes: u64,
+    /// Content-hash function.
+    pub hash: HashKind,
+}
+
+impl Default for StagingConfig {
+    fn default() -> Self {
+        Self {
+            dedup: false,
+            arena_bytes: 4 << 20,
+            hash: HashKind::default(),
+        }
+    }
+}
+
+impl StagingConfig {
+    /// Reject nonsensical tunables with a typed config error.
+    pub fn validate(&self) -> Result<()> {
+        if self.arena_bytes == 0 {
+            return Err(Error::Config(
+                "[staging] arena_bytes must be >= 1".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- hashing
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+const XXP1: u64 = 0x9E3779B185EBCA87;
+const XXP2: u64 = 0xC2B2AE3D27D4EB4F;
+const XXP3: u64 = 0x165667B19E3779F9;
+const XXP4: u64 = 0x85EBCA77C2B2AE63;
+const XXP5: u64 = 0x27D4EB2F165667C5;
+
+/// Streaming XXH64 (seed 0), hand-rolled for the std-only crate.
+struct Xxh64 {
+    v: [u64; 4],
+    buf: [u8; 32],
+    buf_len: usize,
+    total: u64,
+}
+
+impl Xxh64 {
+    fn new() -> Self {
+        Self {
+            v: [
+                XXP1.wrapping_add(XXP2),
+                XXP2,
+                0,
+                0u64.wrapping_sub(XXP1),
+            ],
+            buf: [0u8; 32],
+            buf_len: 0,
+            total: 0,
+        }
+    }
+
+    #[inline]
+    fn round(acc: u64, lane: u64) -> u64 {
+        acc.wrapping_add(lane.wrapping_mul(XXP2))
+            .rotate_left(31)
+            .wrapping_mul(XXP1)
+    }
+
+    fn consume_stripe(&mut self, stripe: &[u8]) {
+        debug_assert_eq!(stripe.len(), 32);
+        for (i, lane) in stripe.chunks_exact(8).enumerate() {
+            let k = u64::from_le_bytes(lane.try_into().unwrap());
+            self.v[i] = Self::round(self.v[i], k);
+        }
+    }
+
+    fn update(&mut self, mut bytes: &[u8]) {
+        self.total += bytes.len() as u64;
+        if self.buf_len > 0 {
+            let take = bytes.len().min(32 - self.buf_len);
+            self.buf[self.buf_len..self.buf_len + take]
+                .copy_from_slice(&bytes[..take]);
+            self.buf_len += take;
+            bytes = &bytes[take..];
+            if self.buf_len < 32 {
+                return;
+            }
+            let stripe = self.buf;
+            self.consume_stripe(&stripe);
+            self.buf_len = 0;
+        }
+        let mut chunks = bytes.chunks_exact(32);
+        for stripe in &mut chunks {
+            self.consume_stripe(stripe);
+        }
+        let rem = chunks.remainder();
+        self.buf[..rem.len()].copy_from_slice(rem);
+        self.buf_len = rem.len();
+    }
+
+    fn finish(self) -> u64 {
+        let mut h = if self.total >= 32 {
+            let mut h = self.v[0]
+                .rotate_left(1)
+                .wrapping_add(self.v[1].rotate_left(7))
+                .wrapping_add(self.v[2].rotate_left(12))
+                .wrapping_add(self.v[3].rotate_left(18));
+            for v in self.v {
+                h = (h ^ Self::round(0, v))
+                    .wrapping_mul(XXP1)
+                    .wrapping_add(XXP4);
+            }
+            h
+        } else {
+            XXP5
+        };
+        h = h.wrapping_add(self.total);
+        let mut tail = &self.buf[..self.buf_len];
+        while tail.len() >= 8 {
+            let k = u64::from_le_bytes(tail[..8].try_into().unwrap());
+            h ^= Self::round(0, k);
+            h = h.rotate_left(27).wrapping_mul(XXP1).wrapping_add(XXP4);
+            tail = &tail[8..];
+        }
+        if tail.len() >= 4 {
+            let k = u32::from_le_bytes(tail[..4].try_into().unwrap()) as u64;
+            h ^= k.wrapping_mul(XXP1);
+            h = h.rotate_left(23).wrapping_mul(XXP2).wrapping_add(XXP3);
+            tail = &tail[4..];
+        }
+        for &b in tail {
+            h ^= (b as u64).wrapping_mul(XXP5);
+            h = h.rotate_left(11).wrapping_mul(XXP1);
+        }
+        h ^= h >> 33;
+        h = h.wrapping_mul(XXP2);
+        h ^= h >> 29;
+        h = h.wrapping_mul(XXP3);
+        h ^= h >> 32;
+        h
+    }
+}
+
+/// Incremental content hasher over byte chunks (the tensor's canonical
+/// wire encoding feeds through without materializing it).
+enum ChunkHasher {
+    Fnv(u64),
+    Xx(Box<Xxh64>),
+}
+
+impl ChunkHasher {
+    fn new(kind: HashKind) -> Self {
+        match kind {
+            HashKind::Fnv => ChunkHasher::Fnv(FNV_OFFSET),
+            HashKind::Xx => ChunkHasher::Xx(Box::new(Xxh64::new())),
+        }
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        match self {
+            ChunkHasher::Fnv(h) => {
+                for &b in bytes {
+                    *h ^= b as u64;
+                    *h = h.wrapping_mul(FNV_PRIME);
+                }
+            }
+            ChunkHasher::Xx(x) => x.update(bytes),
+        }
+    }
+
+    fn finish(self) -> u64 {
+        match self {
+            ChunkHasher::Fnv(h) => h,
+            ChunkHasher::Xx(x) => x.finish(),
+        }
+    }
+}
+
+/// Hash a raw canonical-encoding buffer (the `SndShm` arena path).
+pub fn hash_encoded(kind: HashKind, buf: &[u8]) -> u64 {
+    let mut h = ChunkHasher::new(kind);
+    h.update(buf);
+    h.finish()
+}
+
+/// Hash a tensor by streaming its canonical wire encoding — allocation
+/// free, and byte-identical to [`hash_encoded`] over
+/// [`TensorValue::encode`]'s output, so the inline `SND` path and the
+/// shm descriptor path land in the same cache bucket.
+pub fn hash_tensor(kind: HashKind, t: &TensorValue) -> u64 {
+    let mut h = ChunkHasher::new(kind);
+    t.for_each_encoded_chunk(&mut |chunk| h.update(chunk));
+    h.finish()
+}
+
+// ------------------------------------------------------------- the cache
+
+/// One staged buffer: a shared immutable tensor plus its content hash.
+///
+/// Cloning is a refcount bump.  The hash rides along so releases and
+/// residency transitions find the owning cache entry without rehashing.
+#[derive(Debug, Clone)]
+pub struct Staged {
+    /// The shared immutable payload.
+    pub value: Arc<TensorValue>,
+    /// Content hash under the cache's configured [`HashKind`].
+    pub hash: u64,
+}
+
+impl Staged {
+    /// Payload bytes (the logical segment charge for one holder).
+    pub fn bytes(&self) -> u64 {
+        self.value.bytes() as u64
+    }
+
+    /// A cache-less handle for unit tests and embedders that drive the
+    /// [`crate::gvm::vgpu::VgpuTable`] without a staging cache.
+    pub fn detached(value: TensorValue) -> Self {
+        Self {
+            value: Arc::new(value),
+            hash: 0,
+        }
+    }
+}
+
+/// Where one holder's segment bytes live — mirrors
+/// [`crate::gvm::vgpu::Residency`] plus the placement device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegLoc {
+    /// Holder's client is resident on this device.
+    Device(u32),
+    /// Holder's client has been evicted to the host spill tier.
+    Spilled,
+}
+
+/// Physical charge moves produced by one cache operation, for the
+/// daemon to apply to the device pool.  At most one device gains and
+/// one device loses a charge per operation; spill-tier charge moves are
+/// internal to the cache (the host store budgets logical bytes — see
+/// the module docs).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhysEffects {
+    /// A device newly charged `bytes` (first resident holder arrived).
+    pub dev_charged: Option<(u32, u64)>,
+    /// A device released of `bytes` (last resident holder left).
+    pub dev_freed: Option<(u32, u64)>,
+}
+
+/// Registry handles for the staging plane (`vgpu_staging_*` series).
+#[derive(Debug, Clone)]
+pub struct StagingMetrics {
+    /// `vgpu_staging_dedup_hits_total`.
+    pub dedup_hits: Counter,
+    /// `vgpu_staging_physical_bytes` (deduped live footprint).
+    pub physical_bytes: Gauge,
+    /// `vgpu_staging_copies_avoided_total`.
+    pub copies_avoided: Counter,
+    /// `vgpu_staging_entries` (unique live buffers).
+    pub entries: Gauge,
+}
+
+impl StagingMetrics {
+    /// Register the staging series.
+    pub fn new(registry: &Registry) -> Self {
+        Self {
+            dedup_hits: registry.counter(
+                "vgpu_staging_dedup_hits_total",
+                "Staged payloads resolved to an already-resident buffer",
+            ),
+            physical_bytes: registry.gauge(
+                "vgpu_staging_physical_bytes",
+                "Deduped physical bytes held by the staging cache",
+            ),
+            copies_avoided: registry.counter(
+                "vgpu_staging_copies_avoided_total",
+                "Tensor-body copies skipped by the zero-copy staging plane",
+            ),
+            entries: registry.gauge(
+                "vgpu_staging_entries",
+                "Unique live buffers in the staging cache",
+            ),
+        }
+    }
+}
+
+/// One unique buffer and the holders that reference it.
+#[derive(Debug)]
+struct Entry {
+    value: Arc<TensorValue>,
+    bytes: u64,
+    /// Resident holder count per device.
+    resident: BTreeMap<u32, usize>,
+    /// Holders whose owning client is spilled to the host tier.
+    spilled: usize,
+}
+
+impl Entry {
+    fn holders(&self) -> usize {
+        self.resident.values().sum::<usize>() + self.spilled
+    }
+}
+
+/// The node-wide content-addressed segment store.
+///
+/// Every staged buffer lives here exactly once per distinct content
+/// (with `dedup = on`; once per stage with `dedup = off`).  Holders are
+/// *(segment slot)* references counted per location; the physical
+/// charge follows the refcounts: a device is charged while it has at
+/// least one resident holder, the spill tier while a buffer has only
+/// spilled holders, and the buffer dies when its last holder leaves.
+#[derive(Debug)]
+pub struct StagingCache {
+    cfg: StagingConfig,
+    entries: HashMap<u64, Vec<Entry>>,
+    /// Total physical bytes charged (all devices + spill tier).
+    physical: u64,
+    /// Subset of `physical` charged to the host spill tier.
+    spill_backed: u64,
+    /// Dedup hits (mirrors `vgpu_staging_dedup_hits_total`; kept here
+    /// too so `ClientMsg::Stats` can serve it without registry access).
+    hits: u64,
+    /// Tensor-body copies avoided (mirrors
+    /// `vgpu_staging_copies_avoided_total`).
+    copies: u64,
+    metrics: Option<StagingMetrics>,
+}
+
+impl StagingCache {
+    /// Empty cache under a validated config.
+    pub fn new(cfg: StagingConfig) -> Self {
+        Self {
+            cfg,
+            entries: HashMap::new(),
+            physical: 0,
+            spill_backed: 0,
+            hits: 0,
+            copies: 0,
+            metrics: None,
+        }
+    }
+
+    /// Attach registry handles (publishes the gauges immediately).
+    pub fn set_metrics(&mut self, m: StagingMetrics) {
+        m.physical_bytes.set(self.physical);
+        m.entries.set(self.live_entries() as u64);
+        self.metrics = Some(m);
+    }
+
+    /// The configured tunables.
+    pub fn config(&self) -> &StagingConfig {
+        &self.cfg
+    }
+
+    /// Deduped physical bytes currently charged (devices + spill tier).
+    pub fn physical_bytes(&self) -> u64 {
+        self.physical
+    }
+
+    /// Physical bytes whose only holders are spilled clients.
+    pub fn spill_backed_bytes(&self) -> u64 {
+        self.spill_backed
+    }
+
+    /// Dedup hits since construction.
+    pub fn dedup_hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Tensor-body copies avoided since construction.
+    pub fn copies_avoided(&self) -> u64 {
+        self.copies
+    }
+
+    /// Unique live buffers.
+    pub fn live_entries(&self) -> usize {
+        self.entries.values().map(Vec::len).sum()
+    }
+
+    /// Physical bytes charged to one device (test/assertion surface).
+    pub fn device_bytes(&self, dev: u32) -> u64 {
+        self.entries
+            .values()
+            .flatten()
+            .filter(|e| e.resident.get(&dev).copied().unwrap_or(0) > 0)
+            .map(|e| e.bytes)
+            .sum()
+    }
+
+    /// Stage a decoded tensor (the inline `SND` path): dedup against
+    /// live buffers, add one holder at `loc`.  Returns the shared
+    /// handle, the physical charge move, and whether this was a hit.
+    pub fn intern_tensor(
+        &mut self,
+        t: TensorValue,
+        loc: SegLoc,
+    ) -> (Staged, PhysEffects, bool) {
+        let hash = hash_tensor(self.cfg.hash, &t);
+        if self.cfg.dedup {
+            let hit = self
+                .entries
+                .get(&hash)
+                .and_then(|v| v.iter().find(|e| e.value.bytes_eq(&t)))
+                .map(|e| e.value.clone());
+            if let Some(value) = hit {
+                let staged = Staged { value, hash };
+                let fx = self.add_holder(&staged, loc);
+                self.note_hit();
+                return (staged, fx, true);
+            }
+        }
+        let staged = self.insert_new(hash, Arc::new(t));
+        let fx = self.add_holder(&staged, loc);
+        (staged, fx, false)
+    }
+
+    /// Stage a canonical-encoding buffer (the `SndShm` arena path).  On
+    /// a dedup hit the bytes are compared *in place* against the live
+    /// buffer's encoding and never decoded — zero copies of the tensor
+    /// body.  A miss decodes once into the new shared buffer.
+    pub fn intern_encoded(
+        &mut self,
+        buf: &[u8],
+        loc: SegLoc,
+    ) -> Result<(Staged, PhysEffects, bool)> {
+        let hash = hash_encoded(self.cfg.hash, buf);
+        if self.cfg.dedup {
+            let hit = self
+                .entries
+                .get(&hash)
+                .and_then(|v| v.iter().find(|e| e.value.eq_encoded(buf)))
+                .map(|e| e.value.clone());
+            if let Some(value) = hit {
+                let staged = Staged { value, hash };
+                let fx = self.add_holder(&staged, loc);
+                self.note_hit();
+                self.copies += 1;
+                if let Some(m) = &self.metrics {
+                    m.copies_avoided.inc();
+                }
+                return Ok((staged, fx, true));
+            }
+        }
+        let mut pos = 0;
+        let t = TensorValue::decode(buf, &mut pos)?;
+        if pos != buf.len() {
+            return Err(Error::protocol(format!(
+                "SndShm payload has {} trailing bytes after the tensor",
+                buf.len() - pos
+            )));
+        }
+        let staged = self.insert_new(hash, Arc::new(t));
+        let fx = self.add_holder(&staged, loc);
+        Ok((staged, fx, false))
+    }
+
+    /// Add one holder for an already-staged buffer (recycle keeps, next
+    /// cycle re-SNDs the same handle, failover re-stage).
+    pub fn adopt(&mut self, staged: &Staged, loc: SegLoc) -> Result<PhysEffects> {
+        self.find(staged)?;
+        Ok(self.add_holder(staged, loc))
+    }
+
+    /// Drop one holder at `loc` (slot replaced, segment consumed by a
+    /// flush, recycle, RLS).  The buffer dies with its last holder.
+    pub fn release(
+        &mut self,
+        staged: &Staged,
+        loc: SegLoc,
+    ) -> Result<PhysEffects> {
+        let (slot_idx, entry_idx) = self.find(staged)?;
+        let chain = self.entries.get_mut(&slot_idx).unwrap();
+        let e = &mut chain[entry_idx];
+        let before = charge_of(e);
+        match loc {
+            SegLoc::Device(d) => {
+                let n = e.resident.get_mut(&d).ok_or_else(|| {
+                    Error::gvm(format!(
+                        "staging release: no resident holder on device {d}"
+                    ))
+                })?;
+                *n -= 1;
+                if *n == 0 {
+                    e.resident.remove(&d);
+                }
+            }
+            SegLoc::Spilled => {
+                if e.spilled == 0 {
+                    return Err(Error::gvm(
+                        "staging release: no spilled holder",
+                    ));
+                }
+                e.spilled -= 1;
+            }
+        }
+        let dead = e.holders() == 0;
+        let after = if dead { Charge::default() } else { charge_of(e) };
+        if dead {
+            chain.remove(entry_idx);
+            if chain.is_empty() {
+                self.entries.remove(&slot_idx);
+            }
+        }
+        Ok(self.apply_charge_move(before, after))
+    }
+
+    /// Move one holder between locations: spill (`Device -> Spilled`),
+    /// restage (`Spilled -> Device`), or migrate (`Device -> Device`).
+    pub fn transition(
+        &mut self,
+        staged: &Staged,
+        from: SegLoc,
+        to: SegLoc,
+    ) -> Result<PhysEffects> {
+        if from == to {
+            return Ok(PhysEffects::default());
+        }
+        let (slot_idx, entry_idx) = self.find(staged)?;
+        let chain = self.entries.get_mut(&slot_idx).unwrap();
+        let e = &mut chain[entry_idx];
+        let before = charge_of(e);
+        match from {
+            SegLoc::Device(d) => {
+                let n = e.resident.get_mut(&d).ok_or_else(|| {
+                    Error::gvm(format!(
+                        "staging transition: no resident holder on device {d}"
+                    ))
+                })?;
+                *n -= 1;
+                if *n == 0 {
+                    e.resident.remove(&d);
+                }
+            }
+            SegLoc::Spilled => {
+                if e.spilled == 0 {
+                    return Err(Error::gvm(
+                        "staging transition: no spilled holder",
+                    ));
+                }
+                e.spilled -= 1;
+            }
+        }
+        match to {
+            SegLoc::Device(d) => *e.resident.entry(d).or_insert(0) += 1,
+            SegLoc::Spilled => e.spilled += 1,
+        }
+        let after = charge_of(e);
+        Ok(self.apply_charge_move(before, after))
+    }
+
+    // -- internals --
+
+    fn insert_new(&mut self, hash: u64, value: Arc<TensorValue>) -> Staged {
+        let bytes = value.bytes() as u64;
+        self.entries.entry(hash).or_default().push(Entry {
+            value: value.clone(),
+            bytes,
+            resident: BTreeMap::new(),
+            spilled: 0,
+        });
+        Staged { value, hash }
+    }
+
+    fn add_holder(&mut self, staged: &Staged, loc: SegLoc) -> PhysEffects {
+        let (hash, idx) = self
+            .find(staged)
+            .expect("add_holder on a buffer the cache owns");
+        let e = &mut self.entries.get_mut(&hash).unwrap()[idx];
+        let before = charge_of(e);
+        match loc {
+            SegLoc::Device(d) => *e.resident.entry(d).or_insert(0) += 1,
+            SegLoc::Spilled => e.spilled += 1,
+        }
+        let after = charge_of(e);
+        self.apply_charge_move(before, after)
+    }
+
+    /// Locate the entry owning `staged` (hash bucket + pointer match —
+    /// two distinct buffers with equal bytes stay distinct with dedup
+    /// off).
+    fn find(&self, staged: &Staged) -> Result<(u64, usize)> {
+        self.entries
+            .get(&staged.hash)
+            .and_then(|chain| {
+                chain
+                    .iter()
+                    .position(|e| Arc::ptr_eq(&e.value, &staged.value))
+            })
+            .map(|i| (staged.hash, i))
+            .ok_or_else(|| {
+                Error::gvm(
+                    "staged buffer is not owned by the staging cache \
+                     (double release?)",
+                )
+            })
+    }
+
+    /// Translate one entry's charge transition into pool effects and
+    /// the cache's own physical/spill-backed gauges.  One op moves one
+    /// holder, so at most one device enters the charged set and one
+    /// leaves it.
+    fn apply_charge_move(&mut self, before: Charge, after: Charge) -> PhysEffects {
+        let mut fx = PhysEffects::default();
+        for d in &after.devices {
+            if !before.devices.contains(d) {
+                debug_assert!(fx.dev_charged.is_none());
+                fx.dev_charged = Some((*d, after.bytes));
+            }
+        }
+        for d in &before.devices {
+            if !after.devices.contains(d) {
+                debug_assert!(fx.dev_freed.is_none());
+                fx.dev_freed = Some((*d, before.bytes));
+            }
+        }
+        let phys_before = before.total();
+        let phys_after = after.total();
+        self.physical = self.physical - phys_before + phys_after;
+        self.spill_backed =
+            self.spill_backed - before.spill_bytes() + after.spill_bytes();
+        if let Some(m) = &self.metrics {
+            m.physical_bytes.set(self.physical);
+            m.entries.set(self.live_entries() as u64);
+        }
+        fx
+    }
+
+    fn note_hit(&mut self) {
+        self.hits += 1;
+        if let Some(m) = &self.metrics {
+            m.dedup_hits.inc();
+        }
+    }
+}
+
+/// Snapshot of one entry's charged locations.
+#[derive(Debug, Clone, Default, PartialEq)]
+struct Charge {
+    bytes: u64,
+    /// Devices holding at least one resident holder (each charged once).
+    devices: Vec<u32>,
+    /// Charged to the spill tier (only spilled holders remain).
+    spilled: bool,
+}
+
+impl Charge {
+    fn total(&self) -> u64 {
+        self.bytes * self.devices.len() as u64 + self.spill_bytes()
+    }
+
+    fn spill_bytes(&self) -> u64 {
+        if self.spilled {
+            self.bytes
+        } else {
+            0
+        }
+    }
+}
+
+fn charge_of(e: &Entry) -> Charge {
+    let devices: Vec<u32> = e
+        .resident
+        .iter()
+        .filter(|(_, &n)| n > 0)
+        .map(|(&d, _)| d)
+        .collect();
+    let total_resident: usize = e.resident.values().sum();
+    Charge {
+        bytes: e.bytes,
+        devices,
+        spilled: total_resident == 0 && e.spilled > 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(n: usize, fill: f32) -> TensorValue {
+        TensorValue::F32(vec![n], vec![fill; n])
+    }
+
+    fn cache(dedup: bool) -> StagingCache {
+        StagingCache::new(StagingConfig {
+            dedup,
+            ..StagingConfig::default()
+        })
+    }
+
+    const D0: SegLoc = SegLoc::Device(0);
+
+    #[test]
+    fn hashers_agree_across_tensor_and_encoded_paths() {
+        for kind in [HashKind::Fnv, HashKind::Xx] {
+            for tv in [
+                t(1, 0.5),
+                t(7, -3.25),
+                t(100, 1.0),
+                TensorValue::F64(vec![3, 3], vec![1.0; 9]),
+            ] {
+                let mut buf = Vec::new();
+                tv.encode(&mut buf);
+                assert_eq!(
+                    hash_tensor(kind, &tv),
+                    hash_encoded(kind, &buf),
+                    "{kind:?} must stream the canonical encoding"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn xxh64_matches_reference_vectors() {
+        // Published xxhash test vectors (seed 0).
+        assert_eq!(hash_encoded(HashKind::Xx, b""), 0xEF46DB3751D8E999);
+        assert_eq!(hash_encoded(HashKind::Xx, b"a"), 0xD24EC4F1A98C6E5B);
+        assert_eq!(hash_encoded(HashKind::Xx, b"abc"), 0x44BC2CF5AD770999);
+        // A >32-byte input exercises the stripe loop.
+        let long = b"xxhash 64-bit little-endian stripes exercise path!!";
+        // Chunked feeding must agree with one-shot feeding.
+        let mut h = Xxh64::new();
+        for c in long.chunks(7) {
+            h.update(c);
+        }
+        assert_eq!(h.finish(), hash_encoded(HashKind::Xx, long));
+    }
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        assert_eq!(hash_encoded(HashKind::Fnv, b""), 0xcbf29ce484222325);
+        assert_eq!(hash_encoded(HashKind::Fnv, b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(
+            hash_encoded(HashKind::Fnv, b"foobar"),
+            0x85944171f73967e8
+        );
+    }
+
+    #[test]
+    fn dedup_on_shares_identical_payloads() {
+        let mut c = cache(true);
+        let (a, fx_a, hit_a) = c.intern_tensor(t(8, 1.0), D0);
+        assert!(!hit_a);
+        assert_eq!(fx_a.dev_charged, Some((0, 32)));
+        let (b, fx_b, hit_b) = c.intern_tensor(t(8, 1.0), D0);
+        assert!(hit_b, "identical bytes must hit");
+        assert_eq!(fx_b, PhysEffects::default(), "no new physical charge");
+        assert!(Arc::ptr_eq(&a.value, &b.value), "same buffer shared");
+        assert_eq!(c.physical_bytes(), 32, "charged once");
+        assert_eq!(c.live_entries(), 1);
+        // Different bytes never alias.
+        let (_, fx_c, hit_c) = c.intern_tensor(t(8, 2.0), D0);
+        assert!(!hit_c);
+        assert_eq!(fx_c.dev_charged, Some((0, 32)));
+        assert_eq!(c.physical_bytes(), 64);
+    }
+
+    #[test]
+    fn dedup_off_keeps_buffers_private() {
+        let mut c = cache(false);
+        let (a, _, _) = c.intern_tensor(t(8, 1.0), D0);
+        let (b, _, hit) = c.intern_tensor(t(8, 1.0), D0);
+        assert!(!hit);
+        assert!(!Arc::ptr_eq(&a.value, &b.value));
+        assert_eq!(c.physical_bytes(), 64, "physical == logical");
+        assert_eq!(c.live_entries(), 2);
+        // Each buffer releases independently (ptr identity, not bytes).
+        assert_eq!(
+            c.release(&a, D0).unwrap().dev_freed,
+            Some((0, 32))
+        );
+        assert_eq!(c.physical_bytes(), 32);
+        assert_eq!(
+            c.release(&b, D0).unwrap().dev_freed,
+            Some((0, 32))
+        );
+        assert_eq!(c.physical_bytes(), 0);
+        assert_eq!(c.live_entries(), 0);
+    }
+
+    #[test]
+    fn encoded_hit_skips_the_decode() {
+        let mut c = cache(true);
+        let tv = t(16, 3.5);
+        let mut buf = Vec::new();
+        tv.encode(&mut buf);
+        let (a, _, hit) = c.intern_encoded(&buf, D0).unwrap();
+        assert!(!hit, "first stage decodes");
+        assert_eq!(*a.value, tv);
+        let (b, fx, hit) = c.intern_encoded(&buf, D0).unwrap();
+        assert!(hit, "second stage is a zero-copy hit");
+        assert!(Arc::ptr_eq(&a.value, &b.value));
+        assert_eq!(fx, PhysEffects::default());
+        // Inline path and shm path share the bucket.
+        let (d, _, hit) = c.intern_tensor(tv.clone(), D0);
+        assert!(hit, "inline SND of the same bytes hits the shm entry");
+        assert!(Arc::ptr_eq(&a.value, &d.value));
+    }
+
+    #[test]
+    fn encoded_trailing_garbage_rejected() {
+        let mut c = cache(true);
+        let mut buf = Vec::new();
+        t(4, 0.0).encode(&mut buf);
+        buf.push(0xFF);
+        assert!(c.intern_encoded(&buf, D0).is_err());
+    }
+
+    #[test]
+    fn spill_and_restage_move_the_charge_refcount_aware() {
+        let mut c = cache(true);
+        let (a, _, _) = c.intern_tensor(t(8, 1.0), D0);
+        let (b, _, _) = c.intern_tensor(t(8, 1.0), D0); // shared holder
+        // First holder spills: the buffer is still resident (b holds).
+        let fx = c.transition(&a, D0, SegLoc::Spilled).unwrap();
+        assert_eq!(fx, PhysEffects::default(), "resident holder remains");
+        assert_eq!(c.spill_backed_bytes(), 0);
+        // Last resident holder spills: charge moves device -> spill.
+        let fx = c.transition(&b, D0, SegLoc::Spilled).unwrap();
+        assert_eq!(fx.dev_freed, Some((0, 32)));
+        assert_eq!(c.spill_backed_bytes(), 32);
+        assert_eq!(c.physical_bytes(), 32, "still alive, host-backed");
+        // Any holder's restage restores the buffer for all of them.
+        let fx = c.transition(&a, SegLoc::Spilled, D0).unwrap();
+        assert_eq!(fx.dev_charged, Some((0, 32)));
+        assert_eq!(c.spill_backed_bytes(), 0);
+        // The second restage is free: already resident.
+        let fx = c.transition(&b, SegLoc::Spilled, D0).unwrap();
+        assert_eq!(fx, PhysEffects::default());
+        c.release(&a, D0).unwrap();
+        let fx = c.release(&b, D0).unwrap();
+        assert_eq!(fx.dev_freed, Some((0, 32)));
+        assert_eq!(c.physical_bytes(), 0);
+    }
+
+    #[test]
+    fn cross_device_sharing_charges_each_device_once() {
+        let mut c = cache(true);
+        let (a, fx, _) = c.intern_tensor(t(8, 1.0), SegLoc::Device(0));
+        assert_eq!(fx.dev_charged, Some((0, 32)));
+        let (b, fx, hit) = c.intern_tensor(t(8, 1.0), SegLoc::Device(1));
+        assert!(hit);
+        assert_eq!(
+            fx.dev_charged,
+            Some((1, 32)),
+            "a second device needs its own copy"
+        );
+        assert_eq!(c.physical_bytes(), 64);
+        assert_eq!(c.device_bytes(0), 32);
+        assert_eq!(c.device_bytes(1), 32);
+        // Migration of the device-1 holder onto device 0 frees dev 1
+        // and charges nothing (dev 0 already holds a copy).
+        let fx = c
+            .transition(&b, SegLoc::Device(1), SegLoc::Device(0))
+            .unwrap();
+        assert_eq!(fx.dev_freed, Some((1, 32)));
+        assert_eq!(fx.dev_charged, None);
+        assert_eq!(c.physical_bytes(), 32);
+        c.release(&a, D0).unwrap();
+        c.release(&b, D0).unwrap();
+        assert_eq!(c.physical_bytes(), 0);
+    }
+
+    #[test]
+    fn double_release_is_a_typed_error() {
+        let mut c = cache(true);
+        let (a, _, _) = c.intern_tensor(t(4, 1.0), D0);
+        c.release(&a, D0).unwrap();
+        let err = c.release(&a, D0).unwrap_err();
+        assert!(matches!(err, Error::Gvm(_)), "{err}");
+        // Releasing at the wrong location is also typed.
+        let (b, _, _) = c.intern_tensor(t(4, 2.0), D0);
+        assert!(c.release(&b, SegLoc::Spilled).is_err());
+        assert!(c.release(&b, SegLoc::Device(7)).is_err());
+    }
+
+    #[test]
+    fn adopt_counts_extra_holders() {
+        let mut c = cache(false); // even without dedup, adoption shares
+        let (a, _, _) = c.intern_tensor(t(8, 1.0), D0);
+        let fx = c.adopt(&a, D0).unwrap();
+        assert_eq!(fx, PhysEffects::default(), "device already charged");
+        assert_eq!(c.physical_bytes(), 32);
+        c.release(&a, D0).unwrap();
+        assert_eq!(c.physical_bytes(), 32, "one holder still lives");
+        c.release(&a, D0).unwrap();
+        assert_eq!(c.physical_bytes(), 0);
+        assert!(c.adopt(&a, D0).is_err(), "dead buffer can't be adopted");
+    }
+
+    #[test]
+    fn config_validation_and_hash_parsing() {
+        assert!(StagingConfig::default().validate().is_ok());
+        assert!(!StagingConfig::default().dedup, "dedup defaults off");
+        let bad = StagingConfig {
+            arena_bytes: 0,
+            ..StagingConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        assert_eq!(HashKind::parse("fnv"), Some(HashKind::Fnv));
+        assert_eq!(HashKind::parse("XX"), Some(HashKind::Xx));
+        assert_eq!(HashKind::parse("xxh64"), Some(HashKind::Xx));
+        assert_eq!(HashKind::parse("sha256"), None);
+        assert_eq!(HashKind::Fnv.name(), "fnv");
+    }
+
+    /// Deterministic xorshift64* — the same generator the spill/chaos
+    /// property suites use (no external RNG crates).
+    struct Rng(u64);
+    impl Rng {
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            self.0 = x;
+            x.wrapping_mul(0x2545F4914F6CDD1D)
+        }
+        fn below(&mut self, n: u64) -> u64 {
+            self.next() % n
+        }
+    }
+
+    /// Randomized stage/release/spill/restage against a brute-force
+    /// model: no leak, no double-free, no eviction of a held buffer.
+    #[test]
+    fn prop_refcounts_conserve_under_random_interleavings() {
+        for (seed, dedup) in
+            [(11u64, true), (12, true), (13, false), (14, false)]
+        {
+            let mut rng = Rng(seed);
+            let mut c = cache(dedup);
+            // Model: every live holder as (Staged, SegLoc).
+            let mut holders: Vec<(Staged, SegLoc)> = Vec::new();
+            for _ in 0..600 {
+                match rng.below(4) {
+                    0 => {
+                        // Stage one of 5 distinct payloads on 1 of 2 devs.
+                        let fill = rng.below(5) as f32;
+                        let dev = rng.below(2) as u32;
+                        let (s, _, _) =
+                            c.intern_tensor(t(16, fill), SegLoc::Device(dev));
+                        holders.push((s, SegLoc::Device(dev)));
+                    }
+                    1 => {
+                        if holders.is_empty() {
+                            continue;
+                        }
+                        let i = rng.below(holders.len() as u64) as usize;
+                        let (s, loc) = holders.swap_remove(i);
+                        c.release(&s, loc).unwrap();
+                    }
+                    2 => {
+                        // Spill one resident holder.
+                        let i = holders
+                            .iter()
+                            .position(|(_, l)| matches!(l, SegLoc::Device(_)));
+                        if let Some(i) = i {
+                            let from = holders[i].1;
+                            c.transition(&holders[i].0, from, SegLoc::Spilled)
+                                .unwrap();
+                            holders[i].1 = SegLoc::Spilled;
+                        }
+                    }
+                    _ => {
+                        // Restage one spilled holder.
+                        let i = holders
+                            .iter()
+                            .position(|(_, l)| *l == SegLoc::Spilled);
+                        if let Some(i) = i {
+                            let dev = rng.below(2) as u32;
+                            c.transition(
+                                &holders[i].0,
+                                SegLoc::Spilled,
+                                SegLoc::Device(dev),
+                            )
+                            .unwrap();
+                            holders[i].1 = SegLoc::Device(dev);
+                        }
+                    }
+                }
+                // Invariants after every primitive.
+                let mut model_phys = 0u64;
+                let mut model_spill = 0u64;
+                let mut seen: Vec<*const TensorValue> = Vec::new();
+                for (s, _) in &holders {
+                    let p = Arc::as_ptr(&s.value);
+                    if seen.contains(&p) {
+                        continue;
+                    }
+                    seen.push(p);
+                    let bytes = s.bytes();
+                    let mut devs: Vec<u32> = Vec::new();
+                    let mut any_resident = false;
+                    let mut any_spilled = false;
+                    for (o, loc) in &holders {
+                        if !Arc::ptr_eq(&o.value, &s.value) {
+                            continue;
+                        }
+                        match loc {
+                            SegLoc::Device(d) => {
+                                any_resident = true;
+                                if !devs.contains(d) {
+                                    devs.push(*d);
+                                }
+                            }
+                            SegLoc::Spilled => any_spilled = true,
+                        }
+                    }
+                    model_phys += bytes * devs.len() as u64;
+                    if any_spilled && !any_resident {
+                        model_phys += bytes;
+                        model_spill += bytes;
+                    }
+                }
+                assert_eq!(
+                    c.physical_bytes(),
+                    model_phys,
+                    "physical bytes diverged (seed {seed}, dedup {dedup})"
+                );
+                assert_eq!(
+                    c.spill_backed_bytes(),
+                    model_spill,
+                    "spill-backed bytes diverged (seed {seed})"
+                );
+                assert_eq!(
+                    c.live_entries() == 0,
+                    holders.is_empty(),
+                    "entries live exactly as long as their holders"
+                );
+                // Every live holder can still reach its buffer (no
+                // premature eviction): adopt+release round-trips.
+                if let Some((s, _)) = holders.first() {
+                    c.adopt(s, SegLoc::Device(0)).unwrap();
+                    c.release(s, SegLoc::Device(0)).unwrap();
+                }
+            }
+            // Drain everything: the cache must return to empty.
+            for (s, loc) in holders.drain(..) {
+                c.release(&s, loc).unwrap();
+            }
+            assert_eq!(c.physical_bytes(), 0, "leak (seed {seed})");
+            assert_eq!(c.spill_backed_bytes(), 0);
+            assert_eq!(c.live_entries(), 0);
+        }
+    }
+
+    #[test]
+    fn metrics_track_hits_and_physical_bytes() {
+        let registry = Registry::new();
+        let mut c = cache(true);
+        c.set_metrics(StagingMetrics::new(&registry));
+        let m = StagingMetrics::new(&registry); // idempotent handles
+        let (a, _, _) = c.intern_tensor(t(8, 1.0), D0);
+        let mut buf = Vec::new();
+        a.value.encode(&mut buf);
+        let (_, _, hit) = c.intern_encoded(&buf, D0).unwrap();
+        assert!(hit);
+        assert_eq!(m.dedup_hits.get(), 1);
+        assert_eq!(m.copies_avoided.get(), 1, "encoded hit skips decode");
+        assert_eq!(m.physical_bytes.get(), 32);
+        assert_eq!(m.entries.get(), 1);
+    }
+}

@@ -8,6 +8,7 @@
 
 use std::collections::HashMap;
 
+use crate::gvm::staging::Staged;
 use crate::runtime::TensorValue;
 use crate::{Error, Result};
 
@@ -82,8 +83,11 @@ pub enum VgpuState {
 pub struct Vgpu {
     /// Display name (rank label).
     pub name: String,
-    /// Input slots — the client's virtual shared memory segment.
-    pub in_slots: Vec<Option<TensorValue>>,
+    /// Input slots — the client's virtual shared memory segment.  Each
+    /// slot is a shared immutable buffer from the staging plane; moving
+    /// one into a job, a failover copy, or another slot is a refcount
+    /// bump, never a byte copy.
+    pub in_slots: Vec<Option<Staged>>,
     /// Output slots, filled after batch execution.
     pub out_slots: Vec<TensorValue>,
     /// Lifecycle state.
@@ -110,8 +114,9 @@ impl Vgpu {
         }
     }
 
-    /// Gather staged inputs in slot order; errors on gaps.
-    pub fn staged_inputs(&self) -> Result<Vec<TensorValue>> {
+    /// Gather staged inputs in slot order; errors on gaps.  Each clone
+    /// is an `Arc` refcount bump, not a payload copy.
+    pub fn staged_inputs(&self) -> Result<Vec<Staged>> {
         let mut out = Vec::with_capacity(self.in_slots.len());
         for (i, s) in self.in_slots.iter().enumerate() {
             match s {
@@ -128,11 +133,13 @@ impl Vgpu {
 }
 
 impl VgpuTable {
-    /// Move staged inputs out of a client's segment (zero-copy handoff
-    /// for execution — the segment is consumed by the launch, as the
-    /// paper's data-flow does; the next cycle re-SNDs).  Errors on gaps
-    /// without disturbing the slots.
-    pub fn take_staged_inputs(&mut self, id: ClientId) -> Result<Vec<TensorValue>> {
+    /// Move staged inputs out of a client's segment (copy-on-write
+    /// handoff for execution: the `Arc` moves, never the bytes — the
+    /// segment is consumed by the launch, as the paper's data-flow
+    /// does; the next cycle re-SNDs).  Errors on gaps without
+    /// disturbing the slots.  The caller (the daemon) releases the
+    /// matching staging-cache holders.
+    pub fn take_staged_inputs(&mut self, id: ClientId) -> Result<Vec<Staged>> {
         // Validate first so failures leave the segment intact.
         let v = self.get(id)?;
         for (i, s) in v.in_slots.iter().enumerate() {
@@ -143,11 +150,11 @@ impl VgpuTable {
             }
         }
         let freed: u64;
-        let out: Vec<TensorValue>;
+        let out: Vec<Staged>;
         {
             let v = self.get_mut(id)?;
             out = v.in_slots.drain(..).map(|t| t.unwrap()).collect();
-            freed = out.iter().map(|t| t.bytes() as u64).sum();
+            freed = out.iter().map(|t| t.bytes()).sum();
             v.seg_bytes = sub_checked(v.seg_bytes, freed, "segment")?;
         }
         self.mem_used = sub_checked(self.mem_used, freed, "node budget")?;
@@ -195,9 +202,17 @@ impl VgpuTable {
         Ok(id)
     }
 
-    /// SND: stage a tensor into an input slot.
-    pub fn stage(&mut self, id: ClientId, slot: u32, tensor: TensorValue) -> Result<()> {
-        let bytes = tensor.bytes() as u64;
+    /// SND: stage a shared buffer into an input slot.  Returns the
+    /// displaced buffer when the slot was already occupied, so the
+    /// caller can drop its staging-cache holder (logical `seg_bytes`
+    /// accounting here stays byte-exact either way).
+    pub fn stage(
+        &mut self,
+        id: ClientId,
+        slot: u32,
+        staged: Staged,
+    ) -> Result<Option<Staged>> {
+        let bytes = staged.bytes();
         if self.mem_used + bytes > self.mem_budget {
             return Err(Error::Resource(format!(
                 "segment budget exceeded: {} + {} > {}",
@@ -205,6 +220,7 @@ impl VgpuTable {
             )));
         }
         let mut freed: u64 = 0;
+        let mut replaced: Option<Staged> = None;
         {
             let v = self.get_mut(id)?;
             // Idle stages the current cycle; Running stages the *next*
@@ -223,15 +239,16 @@ impl VgpuTable {
                 v.in_slots.resize(slot + 1, None);
             }
             if let Some(old) = v.in_slots[slot].take() {
-                freed = old.bytes() as u64;
+                freed = old.bytes();
                 v.seg_bytes = sub_checked(v.seg_bytes, freed, "segment")?;
+                replaced = Some(old);
             }
-            v.in_slots[slot] = Some(tensor);
+            v.in_slots[slot] = Some(staged);
             v.seg_bytes += bytes;
         }
         self.mem_used = sub_checked(self.mem_used, freed, "node budget")?;
         self.mem_used += bytes;
-        Ok(())
+        Ok(replaced)
     }
 
     /// STR: mark the client's job queued; returns the ticket.
@@ -305,33 +322,33 @@ impl VgpuTable {
         }
     }
 
-    /// RLS: free the VGPU and its segments.
-    pub fn release(&mut self, id: ClientId) -> Result<()> {
-        let v = self
+    /// RLS: free the VGPU and its segments.  Returns the buffers the
+    /// segment still held so the caller drops their staging-cache
+    /// holders.
+    pub fn release(&mut self, id: ClientId) -> Result<Vec<Staged>> {
+        let mut v = self
             .vgpus
             .remove(&id)
             .ok_or_else(|| Error::protocol("RLS from unregistered client"))?;
         self.mem_used = sub_checked(self.mem_used, v.seg_bytes, "node budget")?;
-        Ok(())
+        Ok(v.in_slots.drain(..).flatten().collect())
     }
 
-    /// Reset a VGPU to Idle for its next request cycle (keeps segments).
-    pub fn recycle(&mut self, id: ClientId) -> Result<()> {
+    /// Reset a VGPU to Idle for its next request cycle.  Returns the
+    /// dropped input buffers for staging-cache holder release.
+    pub fn recycle(&mut self, id: ClientId) -> Result<Vec<Staged>> {
         let freed: u64;
+        let dropped: Vec<Staged>;
         {
             let v = self.get_mut(id)?;
-            freed = v
-                .in_slots
-                .drain(..)
-                .flatten()
-                .map(|t| t.bytes() as u64)
-                .sum();
+            dropped = v.in_slots.drain(..).flatten().collect();
+            freed = dropped.iter().map(|t| t.bytes()).sum();
             v.seg_bytes = sub_checked(v.seg_bytes, freed, "segment")?;
             v.out_slots.clear();
             v.state = VgpuState::Idle;
         }
         self.mem_used = sub_checked(self.mem_used, freed, "node budget")?;
-        Ok(())
+        Ok(dropped)
     }
 
     /// Reset a settled (Done/Failed) VGPU to Idle for its next cycle,
@@ -484,12 +501,17 @@ mod tests {
         TensorValue::F32(vec![n], vec![0.0; n])
     }
 
+    /// A cache-less staged buffer (the table never touches the cache).
+    fn st(n: usize) -> Staged {
+        Staged::detached(t(n))
+    }
+
     #[test]
     fn lifecycle_happy_path() {
         let mut tbl = VgpuTable::new(1 << 20, 8);
         let id = tbl.register("rank0").unwrap();
-        tbl.stage(id, 0, t(4)).unwrap();
-        tbl.stage(id, 1, t(4)).unwrap();
+        tbl.stage(id, 0, st(4)).unwrap();
+        tbl.stage(id, 1, st(4)).unwrap();
         let ticket = tbl.queue(id, "vecadd").unwrap();
         assert_eq!(ticket, 1);
         assert_eq!(tbl.queued_clients().len(), 1);
@@ -506,8 +528,8 @@ mod tests {
     fn memory_budget_enforced() {
         let mut tbl = VgpuTable::new(32, 8);
         let id = tbl.register("r").unwrap();
-        tbl.stage(id, 0, t(8)).unwrap(); // 32 bytes: fits exactly
-        let err = tbl.stage(id, 1, t(1)).unwrap_err();
+        tbl.stage(id, 0, st(8)).unwrap(); // 32 bytes: fits exactly
+        let err = tbl.stage(id, 1, st(1)).unwrap_err();
         assert!(matches!(err, Error::Resource(_)));
     }
 
@@ -515,8 +537,8 @@ mod tests {
     fn restaging_a_slot_releases_old_bytes() {
         let mut tbl = VgpuTable::new(64, 8);
         let id = tbl.register("r").unwrap();
-        tbl.stage(id, 0, t(8)).unwrap();
-        tbl.stage(id, 0, t(8)).unwrap(); // replace, not accumulate
+        tbl.stage(id, 0, st(8)).unwrap();
+        tbl.stage(id, 0, st(8)).unwrap(); // replace, not accumulate
         assert_eq!(tbl.mem_used(), 32);
     }
 
@@ -536,10 +558,10 @@ mod tests {
         let mut tbl = VgpuTable::new(1 << 20, 8);
         let id = tbl.register("r").unwrap();
         assert!(tbl.fetch(id, 0).is_err()); // RCV before STR
-        tbl.stage(id, 0, t(1)).unwrap();
+        tbl.stage(id, 0, st(1)).unwrap();
         tbl.queue(id, "w").unwrap();
         assert!(tbl.queue(id, "w").is_err()); // double STR
-        assert!(tbl.stage(id, 1, t(1)).is_err()); // SND while queued
+        assert!(tbl.stage(id, 1, st(1)).is_err()); // SND while queued
         assert!(tbl.fetch(99, 0).is_err()); // unknown client
     }
 
@@ -547,7 +569,7 @@ mod tests {
     fn staged_inputs_detects_gaps() {
         let mut tbl = VgpuTable::new(1 << 20, 8);
         let id = tbl.register("r").unwrap();
-        tbl.stage(id, 1, t(1)).unwrap(); // slot 0 missing
+        tbl.stage(id, 1, st(1)).unwrap(); // slot 0 missing
         assert!(tbl.get(id).unwrap().staged_inputs().is_err());
     }
 
@@ -555,7 +577,7 @@ mod tests {
     fn accounting_underflow_is_an_error_not_a_wrap() {
         let mut tbl = VgpuTable::new(1 << 20, 8);
         let id = tbl.register("r").unwrap();
-        tbl.stage(id, 0, t(4)).unwrap();
+        tbl.stage(id, 0, st(4)).unwrap();
         // Simulate corrupted accounting (a would-be double release).
         tbl.mem_used = 0;
         let err = tbl.recycle(id).unwrap_err();
@@ -567,7 +589,7 @@ mod tests {
     fn release_after_corruption_reports_gvm_error() {
         let mut tbl = VgpuTable::new(1 << 20, 8);
         let id = tbl.register("r").unwrap();
-        tbl.stage(id, 0, t(8)).unwrap();
+        tbl.stage(id, 0, st(8)).unwrap();
         tbl.mem_used = 4; // less than the segment's 32 B
         assert!(matches!(tbl.release(id).unwrap_err(), Error::Gvm(_)));
     }
@@ -578,9 +600,9 @@ mod tests {
         let a = tbl.register("a").unwrap();
         let b = tbl.register("b").unwrap();
         for _ in 0..3 {
-            tbl.stage(a, 0, t(8)).unwrap();
-            tbl.stage(a, 0, t(4)).unwrap(); // replace shrinks
-            tbl.stage(b, 1, t(16)).unwrap();
+            tbl.stage(a, 0, st(8)).unwrap();
+            tbl.stage(a, 0, st(4)).unwrap(); // replace shrinks
+            tbl.stage(b, 1, st(16)).unwrap();
             tbl.queue(a, "w").unwrap();
             let moved = tbl.take_staged_inputs(a).unwrap();
             assert_eq!(moved.len(), 1);
@@ -598,7 +620,7 @@ mod tests {
     fn running_state_allows_next_cycle_staging() {
         let mut tbl = VgpuTable::new(1 << 20, 8);
         let id = tbl.register("r").unwrap();
-        tbl.stage(id, 0, t(4)).unwrap();
+        tbl.stage(id, 0, st(4)).unwrap();
         tbl.queue(id, "w").unwrap();
         assert!(tbl.mark_running(99).is_err(), "unknown client");
         // Submission: inputs move out, Queued -> Running.
@@ -611,7 +633,7 @@ mod tests {
         ));
         assert!(tbl.mark_running(id).is_err(), "double submit");
         // Next-cycle staging overlaps execution; a second STR does not.
-        tbl.stage(id, 0, t(8)).unwrap();
+        tbl.stage(id, 0, st(8)).unwrap();
         assert!(tbl.queue(id, "w").is_err());
         // Completion keeps the pre-staged inputs through the recycle.
         tbl.complete(id, vec![t(2)], 1.0).unwrap();
@@ -641,9 +663,9 @@ mod tests {
         let a = tbl.register("a").unwrap();
         let b = tbl.register("b").unwrap();
         let c = tbl.register("c").unwrap();
-        tbl.stage(a, 0, t(4)).unwrap();
-        tbl.stage(b, 0, t(4)).unwrap();
-        tbl.stage(c, 0, t(4)).unwrap();
+        tbl.stage(a, 0, st(4)).unwrap();
+        tbl.stage(b, 0, st(4)).unwrap();
+        tbl.stage(c, 0, st(4)).unwrap();
         tbl.note_flush_epoch(a, 5).unwrap();
         tbl.note_flush_epoch(b, 2).unwrap();
         // c never flushed (epoch 0): the coldest candidate.
@@ -667,14 +689,14 @@ mod tests {
     fn queued_and_running_clients_are_never_spill_candidates() {
         let mut tbl = VgpuTable::new(1 << 20, 8);
         let a = tbl.register("a").unwrap();
-        tbl.stage(a, 0, t(4)).unwrap();
+        tbl.stage(a, 0, st(4)).unwrap();
         assert_eq!(tbl.spill_candidates().len(), 1, "idle is eligible");
         tbl.queue(a, "w").unwrap();
         assert!(tbl.spill_candidates().is_empty(), "queued is not");
         tbl.take_staged_inputs(a).unwrap();
         tbl.mark_running(a).unwrap();
         // Pre-stage next-cycle bytes mid-flight: still ineligible.
-        tbl.stage(a, 0, t(4)).unwrap();
+        tbl.stage(a, 0, st(4)).unwrap();
         assert!(tbl.spill_candidates().is_empty(), "running is not");
         tbl.complete(a, vec![t(2)], 1.0).unwrap();
         assert_eq!(tbl.spill_candidates().len(), 1, "done is eligible");

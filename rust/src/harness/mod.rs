@@ -32,6 +32,7 @@
 //! | spill   | host-memory spill: oversubscription x policy, thrash vs errors |
 //! | chaos   | fault plane: fault rate x remediation, completed vs lost |
 //! | fanin   | client fan-in: mux vs thread-per-conn, shm vs inline |
+//! | staging | staging plane: dedup on/off, logical vs physical bytes |
 //! | ext-multigpu | extension: multi-GPU node scaling |
 //! | ext-cluster | extension: cluster weak scaling (Fig. 11) |
 //! | ext-fig18-socket | extension: Fig. 18 over the socket transport |
@@ -44,6 +45,7 @@ pub mod figures;
 pub mod pipeline;
 pub mod qos;
 pub mod spill;
+pub mod staging;
 pub mod tables;
 
 use crate::util::table::Table;
@@ -112,6 +114,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "spill",
     "chaos",
     "fanin",
+    "staging",
     "ext-multigpu",
     "ext-cluster",
     "ext-fig18-socket",
@@ -146,6 +149,7 @@ pub fn run(id: &str) -> Result<ExpOutput> {
         "spill" => spill::spill_sweep(),
         "chaos" => chaos::chaos_sweep(),
         "fanin" => fanin::fanin_sweep(),
+        "staging" => staging::staging_sweep(),
         "ext-multigpu" => ablations::multi_gpu_scaling(),
         "ext-cluster" => ablations::cluster_scaling(),
         "ext-fig18-socket" => figures::overhead_socket_figure(),

@@ -1,0 +1,295 @@
+//! Extension experiment for the staging plane (`vgpu exp staging`):
+//! SPMD fan-in over an in-process daemon, sweeping rank count ×
+//! `[staging] dedup` on/off × payload reuse (every rank staging the
+//! *same* bytes vs rank-unique bytes), and reporting *logical* staged
+//! bytes against the cache's *physical* (deduplicated) footprint plus
+//! the makespan of the staged rounds.  `cargo bench --bench staging`
+//! runs the same comparison at bench scale and records
+//! `BENCH_staging.json`.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use super::ExpOutput;
+use crate::config::DeviceConfig;
+use crate::gvm::devices::{PlacementPolicy, PoolConfig};
+use crate::gvm::staging::StagingConfig;
+use crate::gvm::{Command, Daemon, DaemonConfig};
+use crate::ipc::{ClientMsg, ServerMsg};
+use crate::runtime::{ExecHandle, TensorValue};
+use crate::util::table::{f2, Table};
+use crate::{Error, Result};
+
+/// SPMD rank counts swept (the acceptance cell is 8 ranks).
+const RANK_SWEEP: [usize; 2] = [2, 8];
+
+/// Elements in each staged tensor (16 KiB of f32s).
+const TENSOR_ELEMS: usize = 4096;
+
+/// STR→STP rounds per rank after the staged snapshot.
+const CYCLES: usize = 3;
+
+fn call(tx: &mpsc::Sender<Command>, client: u64, msg: ClientMsg) -> Result<ServerMsg> {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Command {
+        client,
+        msg,
+        reply: rtx.into(),
+    })
+    .map_err(|_| Error::Ipc("staging daemon hung up".into()))?;
+    rrx.recv()
+        .map_err(|_| Error::Ipc("staging daemon dropped a reply".into()))
+}
+
+fn register(tx: &mpsc::Sender<Command>, name: &str) -> Result<u64> {
+    match call(
+        tx,
+        0,
+        ClientMsg::Req {
+            name: name.into(),
+            tenant: String::new(),
+        },
+    )? {
+        ServerMsg::Queued { ticket } => Ok(ticket),
+        other => Err(Error::Ipc(format!("bad REQ reply {other:?}"))),
+    }
+}
+
+/// Mock daemon: two echo devices, every STR flushes (`barrier = 1`).
+fn spawn_daemon(dedup: bool) -> Result<mpsc::Sender<Command>> {
+    let cfg = DaemonConfig {
+        barrier: Some(1),
+        max_clients: 64,
+        pool: PoolConfig::homogeneous(
+            2,
+            DeviceConfig::tesla_c2070(),
+            PlacementPolicy::RoundRobin,
+        ),
+        staging: StagingConfig {
+            dedup,
+            ..StagingConfig::default()
+        },
+        ..DaemonConfig::default()
+    };
+    let exec = ExecHandle::mock(vec!["echo".into()], |_, inputs| Ok(inputs));
+    let daemon = Daemon::with_handles(cfg, vec![exec.clone(), exec])?;
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+    Ok(tx)
+}
+
+/// The tensor rank `i` stages: with full reuse every rank submits
+/// identical bytes (the SPMD broadcast-input pattern); without, each
+/// payload is rank-unique so nothing can dedup.
+fn payload(i: usize, reuse: bool) -> TensorValue {
+    let fill = if reuse { 1.0 } else { 1.0 + i as f32 };
+    TensorValue::F32(vec![TENSOR_ELEMS], vec![fill; TENSOR_ELEMS])
+}
+
+/// One cell: register `ranks` clients, stage one payload each, snapshot
+/// the logical/physical gauges while everything is resident, then run
+/// `CYCLES` STR→STP rounds per rank (re-staging each round) and release.
+/// Returns (logical, physical, dedup_hits, copies_avoided, wall_ms).
+fn staging_cell(
+    ranks: usize,
+    dedup: bool,
+    reuse: bool,
+) -> Result<(u64, u64, u64, u64, f64)> {
+    let tx = spawn_daemon(dedup)?;
+    let ids: Vec<u64> = (0..ranks)
+        .map(|i| register(&tx, &format!("rank{i}")))
+        .collect::<Result<_>>()?;
+    for (i, &id) in ids.iter().enumerate() {
+        match call(&tx, id, ClientMsg::Snd { slot: 0, tensor: payload(i, reuse) })? {
+            ServerMsg::Ack => {}
+            other => return Err(Error::Ipc(format!("SND: {other:?}"))),
+        }
+    }
+    // Snapshot while all ranks' inputs are simultaneously resident:
+    // `bytes_staged` counts every logical SND, the physical gauge the
+    // deduplicated buffers actually held.
+    let (logical, physical) = match call(&tx, ids[0], ClientMsg::Stats)? {
+        ServerMsg::Stats {
+            bytes_staged,
+            staging_physical_bytes,
+            ..
+        } => (bytes_staged, staging_physical_bytes),
+        other => return Err(Error::Ipc(format!("Stats: {other:?}"))),
+    };
+    let sw = Instant::now();
+    for round in 0..CYCLES {
+        // Round 0 consumes the snapshot's tensors; later rounds
+        // re-stage every rank's payload *before* any flush so the
+        // overlap window dedup exploits exists each round.
+        if round > 0 {
+            for (i, &id) in ids.iter().enumerate() {
+                match call(&tx, id, ClientMsg::Snd { slot: 0, tensor: payload(i, reuse) })? {
+                    ServerMsg::Ack => {}
+                    other => return Err(Error::Ipc(format!("SND: {other:?}"))),
+                }
+            }
+        }
+        for &id in &ids {
+            match call(&tx, id, ClientMsg::Str { workload: "echo".into() })? {
+                ServerMsg::Queued { .. } => {}
+                other => return Err(Error::Ipc(format!("STR: {other:?}"))),
+            }
+        }
+        for &id in &ids {
+            match call(&tx, id, ClientMsg::Stp)? {
+                ServerMsg::Done { .. } => {}
+                other => return Err(Error::Ipc(format!("STP: {other:?}"))),
+            }
+        }
+    }
+    let wall = sw.elapsed().as_secs_f64() * 1e3;
+    let (hits, copies) = match call(&tx, ids[0], ClientMsg::Stats)? {
+        ServerMsg::Stats {
+            staging_dedup_hits,
+            staging_copies_avoided,
+            ..
+        } => (staging_dedup_hits, staging_copies_avoided),
+        other => return Err(Error::Ipc(format!("Stats: {other:?}"))),
+    };
+    for &id in &ids {
+        call(&tx, id, ClientMsg::Rls)?;
+    }
+    Ok((logical, physical, hits, copies, wall))
+}
+
+/// The `staging` experiment: ranks × dedup on/off × payload reuse, over
+/// the real event-driven daemon with echo devices.
+pub fn staging_sweep() -> Result<ExpOutput> {
+    let mut table = Table::new(&[
+        "ranks",
+        "dedup",
+        "reuse",
+        "logical_b",
+        "physical_b",
+        "phys_ratio",
+        "hits",
+        "copies_avoided",
+        "wall_ms",
+    ]);
+    let mut notes = Vec::new();
+    // Acceptance cell: 8 ranks, 100% reuse, off vs on.
+    let mut accept: Option<(u64, u64, f64)> = None;
+    let mut accept_on: Option<(u64, u64, f64)> = None;
+
+    for &ranks in &RANK_SWEEP {
+        for dedup in [false, true] {
+            for reuse in [false, true] {
+                let (logical, physical, hits, copies, wall) =
+                    staging_cell(ranks, dedup, reuse)?;
+                if ranks == 8 && reuse {
+                    if dedup {
+                        accept_on = Some((logical, physical, wall));
+                    } else {
+                        accept = Some((logical, physical, wall));
+                    }
+                }
+                let ratio = if physical > 0 {
+                    logical as f64 / physical as f64
+                } else {
+                    0.0
+                };
+                table.row(vec![
+                    ranks.to_string(),
+                    if dedup { "on" } else { "off" }.to_string(),
+                    if reuse { "100%" } else { "0%" }.to_string(),
+                    logical.to_string(),
+                    physical.to_string(),
+                    f2(ratio),
+                    hits.to_string(),
+                    copies.to_string(),
+                    f2(wall),
+                ]);
+            }
+        }
+    }
+
+    // The acceptance phrase is emitted only when the criterion holds, so
+    // the CI smoke that greps for it fails on regression instead of
+    // passing vacuously.  (Makespan is reported but not gated: at smoke
+    // scale the echo rounds are scheduler-noise dominated.)
+    if let (Some((off_l, off_p, off_w)), Some((on_l, on_p, on_w))) =
+        (accept, accept_on)
+    {
+        let ranks = 8u64;
+        if off_p == off_l && on_p * ranks <= on_l {
+            notes.push(format!(
+                "8 ranks, 100% reuse: dedup-on holds {on_p} physical B \
+                 for {on_l} logical B (~1/{ranks}) vs {off_p} physical B \
+                 for {off_l} logical B off (1:1); makespan {on_w:.2} ms \
+                 on vs {off_w:.2} ms off (acceptance bar: physical \
+                 <= logical/ranks with dedup on, == logical off)"
+            ));
+        } else {
+            notes.push(format!(
+                "ACCEPTANCE NOT MET at 8 ranks 100% reuse: on \
+                 {on_p}/{on_l} B, off {off_p}/{off_l} B"
+            ));
+        }
+    }
+    notes.push(
+        "logical_b counts every SND as staged by its rank (wire \
+         semantics unchanged); physical_b is the content-addressed \
+         cache's deduplicated live footprint at the staged snapshot.  \
+         With 100% reuse every rank stages identical bytes — the SPMD \
+         broadcast-input pattern — so dedup-on stores one buffer and \
+         serves the rest as refcount bumps (hits).  cargo bench --bench \
+         staging runs the same grid at bench scale and records \
+         BENCH_staging.json"
+            .into(),
+    );
+    Ok(ExpOutput {
+        id: "staging".into(),
+        title: "Staging plane: content-addressed dedup, logical vs \
+                physical staged bytes"
+            .into(),
+        table,
+        notes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staging_table_covers_the_grid() {
+        let out = staging_sweep().unwrap();
+        // 2 rank counts x dedup on/off x reuse 0/100%.
+        assert_eq!(out.table.len(), 8);
+        assert!(
+            out.notes.iter().any(|n| n.contains("acceptance bar")),
+            "{:?}",
+            out.notes
+        );
+    }
+
+    #[test]
+    fn dedup_collapses_physical_bytes_at_full_reuse() {
+        let (logical, physical, hits, _, _) =
+            staging_cell(8, true, true).unwrap();
+        assert_eq!(logical, 8 * (TENSOR_ELEMS as u64) * 4);
+        assert_eq!(physical, (TENSOR_ELEMS as u64) * 4, "1/8 of logical");
+        assert!(hits >= 7, "7 of 8 stages must hit the cache: {hits}");
+    }
+
+    #[test]
+    fn dedup_off_keeps_physical_equal_to_logical() {
+        let (logical, physical, hits, _, _) =
+            staging_cell(8, false, true).unwrap();
+        assert_eq!(physical, logical);
+        assert_eq!(hits, 0);
+    }
+
+    #[test]
+    fn unique_payloads_cannot_dedup() {
+        let (logical, physical, hits, _, _) =
+            staging_cell(4, true, false).unwrap();
+        assert_eq!(physical, logical);
+        assert_eq!(hits, 0);
+    }
+}

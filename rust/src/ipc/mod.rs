@@ -28,7 +28,7 @@ pub mod transport;
 pub mod wire;
 
 pub use mux::{IpcConfig, IpcMode, MuxOptions, MuxServer, MuxWaker};
-pub use transport::{Framed, Transport};
+pub use transport::{Framed, Transport, WireEncode};
 pub use wire::{
     ClientMsg, DeviceEntry, HealthEntry, ServerMsg, TenantStatsEntry,
     UsageEntry,

@@ -323,11 +323,16 @@ impl MuxMetrics {
     }
 }
 
-/// Append one length-prefixed server frame to an outbound buffer.
+/// Append one length-prefixed server frame to an outbound buffer:
+/// reserve the prefix, encode in place, backfill the length — no
+/// intermediate `Vec` per reply (send-side counterpart of the
+/// reactor's reused ingest buffer).
 fn push_frame(wr: &mut Vec<u8>, msg: &ServerMsg) {
-    let enc = msg.encode();
-    wr.extend_from_slice(&(enc.len() as u32).to_le_bytes());
-    wr.extend_from_slice(&enc);
+    let start = wr.len();
+    wr.extend_from_slice(&[0u8; 4]);
+    msg.encode_into(wr);
+    let len = ((wr.len() - start - 4) as u32).to_le_bytes();
+    wr[start..start + 4].copy_from_slice(&len);
 }
 
 fn dec_tenant(tenant_conns: &mut HashMap<String, u32>, tenant: &str) {

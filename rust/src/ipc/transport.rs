@@ -11,15 +11,67 @@ use crate::{Error, Result};
 /// Maximum frame size (guards against corrupt length prefixes).
 pub const MAX_FRAME: u32 = 1 << 30;
 
+/// Wire messages that can append their encoding to a caller-owned
+/// buffer — the allocation-free counterpart of `encode()`, implemented
+/// by [`crate::ipc::ClientMsg`] and [`crate::ipc::ServerMsg`].  Lets
+/// [`Framed::send_msg`] build `len:u32le` + payload in one reused
+/// scratch buffer instead of allocating a fresh `Vec` per message.
+pub trait WireEncode {
+    /// Append the encoded message to `out` (never clears it).
+    fn encode_into(&self, out: &mut Vec<u8>);
+}
+
+impl WireEncode for crate::ipc::ClientMsg {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        crate::ipc::ClientMsg::encode_into(self, out);
+    }
+}
+
+impl WireEncode for crate::ipc::ServerMsg {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        crate::ipc::ServerMsg::encode_into(self, out);
+    }
+}
+
 /// Length-prefixed framing over a byte stream.
 pub struct Framed<S> {
     stream: S,
+    /// Send-side scratch (`len:u32le` + payload), reused across
+    /// [`Framed::send_msg`] calls — the counterpart of the buffer a
+    /// caller threads through [`Framed::recv_into`].
+    out: Vec<u8>,
 }
 
 impl<S: Read + Write> Framed<S> {
     /// Wrap a stream.
     pub fn new(stream: S) -> Self {
-        Self { stream }
+        Self {
+            stream,
+            out: Vec::new(),
+        }
+    }
+
+    /// Encode and send one message through the reused scratch buffer:
+    /// no per-call allocation once the buffer has grown to the working
+    /// set's frame size.  Hot reply loops should prefer this over
+    /// `send(&msg.encode())`, which allocates a fresh `Vec` per frame.
+    pub fn send_msg(&mut self, msg: &impl WireEncode) -> Result<()> {
+        self.out.clear();
+        // Length prefix placeholder, backfilled once the payload size
+        // is known (single write_all keeps the frame one syscall).
+        self.out.extend_from_slice(&[0u8; 4]);
+        msg.encode_into(&mut self.out);
+        let payload = self.out.len() - 4;
+        if payload > MAX_FRAME as usize {
+            return Err(Error::Ipc(format!(
+                "frame too large: {payload} > {MAX_FRAME}"
+            )));
+        }
+        let len = (payload as u32).to_le_bytes();
+        self.out[..4].copy_from_slice(&len);
+        self.stream.write_all(&self.out)?;
+        self.stream.flush()?;
+        Ok(())
     }
 
     /// Write one frame.
@@ -88,6 +140,8 @@ pub trait Transport: Send {
 /// Unix-domain-socket client transport (real multi-process mode).
 pub struct UnixTransport {
     framed: Framed<std::os::unix::net::UnixStream>,
+    /// Reply scratch reused across `call`s (see [`Framed::recv_into`]).
+    buf: Vec<u8>,
 }
 
 impl UnixTransport {
@@ -96,6 +150,7 @@ impl UnixTransport {
         let stream = std::os::unix::net::UnixStream::connect(path)?;
         Ok(Self {
             framed: Framed::new(stream),
+            buf: Vec::new(),
         })
     }
 }
@@ -105,12 +160,11 @@ impl Transport for UnixTransport {
         &mut self,
         msg: crate::ipc::ClientMsg,
     ) -> Result<crate::ipc::ServerMsg> {
-        self.framed.send(&msg.encode())?;
-        let frame = self
-            .framed
-            .recv()?
-            .ok_or_else(|| Error::Ipc("GVM closed the connection".into()))?;
-        crate::ipc::ServerMsg::decode(&frame)
+        self.framed.send_msg(&msg)?;
+        if !self.framed.recv_into(&mut self.buf)? {
+            return Err(Error::Ipc("GVM closed the connection".into()));
+        }
+        crate::ipc::ServerMsg::decode(&self.buf)
     }
 }
 
@@ -150,6 +204,61 @@ mod tests {
         assert!(buf.is_empty());
         drop(fa);
         assert!(!fb.recv_into(&mut buf).unwrap(), "clean EOF is false");
+    }
+
+    #[test]
+    fn send_msg_reuses_the_encode_buffer() {
+        use crate::ipc::{ClientMsg, ServerMsg};
+        let (a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        let mut fa = Framed::new(a);
+        let mut fb = Framed::new(b);
+        // A large message grows the scratch once; smaller messages then
+        // ride in the same allocation.
+        let big = ClientMsg::Str {
+            workload: "w".repeat(512),
+        };
+        fa.send_msg(&big).unwrap();
+        let cap = fa.out.capacity();
+        for _ in 0..8 {
+            fa.send_msg(&ClientMsg::Stp).unwrap();
+            assert_eq!(fa.out.capacity(), cap, "scratch must not churn");
+        }
+        // Frames decode identically to the encode() path.
+        assert_eq!(
+            ClientMsg::decode(&fb.recv().unwrap().unwrap()).unwrap(),
+            big
+        );
+        for _ in 0..8 {
+            assert_eq!(
+                ClientMsg::decode(&fb.recv().unwrap().unwrap()).unwrap(),
+                ClientMsg::Stp
+            );
+        }
+        // Replies flow the same way.
+        fb.send_msg(&ServerMsg::Ack).unwrap();
+        assert_eq!(
+            ServerMsg::decode(&fa.recv().unwrap().unwrap()).unwrap(),
+            ServerMsg::Ack
+        );
+    }
+
+    #[test]
+    fn send_msg_rejects_oversized_payload() {
+        // An encoded message above MAX_FRAME must be rejected before any
+        // bytes reach the stream (mirrors oversized_frame_rejected_on_send).
+        struct Huge;
+        impl WireEncode for Huge {
+            fn encode_into(&self, out: &mut Vec<u8>) {
+                out.resize(out.len() + MAX_FRAME as usize + 1, 0);
+            }
+        }
+        let (a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        let mut fa = Framed::new(a);
+        let err = fa.send_msg(&Huge).unwrap_err();
+        assert!(err.to_string().contains("frame too large"), "{err}");
+        drop(fa);
+        let mut fb = Framed::new(b);
+        assert!(fb.recv().unwrap().is_none(), "no bytes must have leaked");
     }
 
     #[test]

@@ -123,6 +123,15 @@ pub enum ClientMsg {
         /// Output slot index.
         slot: u32,
     },
+    /// Operator request (`vgpu health --clear <dev>`): re-admit a
+    /// quarantined device to placement without restarting the daemon.
+    /// The health plane's strike/EWMA state for the device is reset so
+    /// a repaired part starts from a clean slate.  A no-op `Ack` when
+    /// the device is already healthy.
+    HealthClear {
+        /// Device index within the node's pool.
+        device: u32,
+    },
 }
 
 /// Per-tenant counter row carried by [`ServerMsg::Stats`] — fed by the
@@ -255,6 +264,16 @@ pub enum ServerMsg {
         spill_events: u64,
         /// Spilled segments re-staged onto a device since launch.
         restage_events: u64,
+        /// Deduplicated bytes held by the node-wide staging cache
+        /// (*physical* footprint; `bytes_staged` and per-VGPU
+        /// `seg_bytes` stay *logical* — see [`crate::gvm::staging`]).
+        staging_physical_bytes: u64,
+        /// Stages that matched an already-resident buffer by content.
+        staging_dedup_hits: u64,
+        /// Tensor-body copies avoided by the zero-copy staging paths
+        /// (dedup hits resolved in place plus `Arc` handoffs that
+        /// replaced deep clones).
+        staging_copies_avoided: u64,
         /// Per-tenant counters, in tenant-id order (completion-event
         /// fed; empty until a tenant registers).
         tenants: Vec<TenantStatsEntry>,
@@ -344,20 +363,28 @@ impl ClientMsg {
     /// Encode to bytes.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Encode by appending to `out` — the allocation-free form used by
+    /// the framed adapters to reuse one send buffer across calls (see
+    /// [`super::transport::Framed::send_msg`]).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
         match self {
             ClientMsg::Req { name, tenant } => {
                 out.push(0);
-                put_str(name, &mut out);
-                put_str(tenant, &mut out);
+                put_str(name, out);
+                put_str(tenant, out);
             }
             ClientMsg::Snd { slot, tensor } => {
                 out.push(1);
                 out.extend_from_slice(&slot.to_le_bytes());
-                tensor.encode(&mut out);
+                tensor.encode(out);
             }
             ClientMsg::Str { workload } => {
                 out.push(2);
-                put_str(workload, &mut out);
+                put_str(workload, out);
             }
             ClientMsg::Stp => out.push(3),
             ClientMsg::Rcv { slot } => {
@@ -369,7 +396,7 @@ impl ClientMsg {
             ClientMsg::DevInfo => out.push(7),
             ClientMsg::Migrate { name, target } => {
                 out.push(8);
-                put_str(name, &mut out);
+                put_str(name, out);
                 out.extend_from_slice(&target.to_le_bytes());
             }
             ClientMsg::Flh { wait } => {
@@ -384,7 +411,7 @@ impl ClientMsg {
             ClientMsg::Health => out.push(12),
             ClientMsg::ShmOpen { path, bytes } => {
                 out.push(13);
-                put_str(path, &mut out);
+                put_str(path, out);
                 out.extend_from_slice(&bytes.to_le_bytes());
             }
             ClientMsg::SndShm {
@@ -403,8 +430,11 @@ impl ClientMsg {
                 out.push(15);
                 out.extend_from_slice(&slot.to_le_bytes());
             }
+            ClientMsg::HealthClear { device } => {
+                out.push(16);
+                out.extend_from_slice(&device.to_le_bytes());
+            }
         }
-        out
     }
 
     /// Decode from bytes.
@@ -466,6 +496,9 @@ impl ClientMsg {
             15 => ClientMsg::RcvShm {
                 slot: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
             },
+            16 => ClientMsg::HealthClear {
+                device: u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?),
+            },
             t => return Err(Error::Ipc(format!("bad client tag {t}"))),
         };
         Ok(msg)
@@ -476,6 +509,14 @@ impl ServerMsg {
     /// Encode to bytes.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Encode by appending to `out` — the allocation-free form used by
+    /// the framed adapters to reuse one send buffer across calls (see
+    /// [`super::transport::Framed::send_msg`]).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
         match self {
             ServerMsg::Ack => out.push(0),
             ServerMsg::Queued { ticket } => {
@@ -489,11 +530,11 @@ impl ServerMsg {
             }
             ServerMsg::Data { tensor } => {
                 out.push(3);
-                tensor.encode(&mut out);
+                tensor.encode(out);
             }
             ServerMsg::Err { msg } => {
                 out.push(4);
-                put_str(msg, &mut out);
+                put_str(msg, out);
             }
             ServerMsg::Stats {
                 batches,
@@ -507,6 +548,9 @@ impl ServerMsg {
                 spilled_bytes,
                 spill_events,
                 restage_events,
+                staging_physical_bytes,
+                staging_dedup_hits,
+                staging_copies_avoided,
                 tenants,
             } => {
                 out.push(5);
@@ -521,9 +565,12 @@ impl ServerMsg {
                 out.extend_from_slice(&spilled_bytes.to_le_bytes());
                 out.extend_from_slice(&spill_events.to_le_bytes());
                 out.extend_from_slice(&restage_events.to_le_bytes());
+                out.extend_from_slice(&staging_physical_bytes.to_le_bytes());
+                out.extend_from_slice(&staging_dedup_hits.to_le_bytes());
+                out.extend_from_slice(&staging_copies_avoided.to_le_bytes());
                 out.extend_from_slice(&(tenants.len() as u32).to_le_bytes());
                 for t in tenants {
-                    put_str(&t.tenant, &mut out);
+                    put_str(&t.tenant, out);
                     out.extend_from_slice(&t.jobs_ok.to_le_bytes());
                     out.extend_from_slice(&t.jobs_failed.to_le_bytes());
                     out.extend_from_slice(&t.device_ms.to_le_bytes());
@@ -561,7 +608,7 @@ impl ServerMsg {
                 out.push(9);
                 out.extend_from_slice(&(records.len() as u32).to_le_bytes());
                 for r in records {
-                    put_str(&r.tenant, &mut out);
+                    put_str(&r.tenant, out);
                     out.extend_from_slice(&r.jobs_ok.to_le_bytes());
                     out.extend_from_slice(&r.jobs_failed.to_le_bytes());
                     out.extend_from_slice(&r.device_ms.to_le_bytes());
@@ -609,7 +656,6 @@ impl ServerMsg {
                 out.extend_from_slice(&generation.to_le_bytes());
             }
         }
-        out
     }
 
     /// Decode from bytes.
@@ -649,6 +695,9 @@ impl ServerMsg {
                 let spilled_bytes = read_u64(buf, &mut pos)?;
                 let spill_events = read_u64(buf, &mut pos)?;
                 let restage_events = read_u64(buf, &mut pos)?;
+                let staging_physical_bytes = read_u64(buf, &mut pos)?;
+                let staging_dedup_hits = read_u64(buf, &mut pos)?;
+                let staging_copies_avoided = read_u64(buf, &mut pos)?;
                 let n = u32::from_le_bytes(read_arr::<4>(buf, &mut pos)?);
                 if n > 4096 {
                     return Err(Error::Ipc(format!(
@@ -679,6 +728,9 @@ impl ServerMsg {
                     spilled_bytes,
                     spill_events,
                     restage_events,
+                    staging_physical_bytes,
+                    staging_dedup_hits,
+                    staging_copies_avoided,
                     tenants,
                 }
             }
@@ -847,6 +899,53 @@ mod tests {
         roundtrip_c(ClientMsg::WaitFlush { epoch: 42 });
         roundtrip_c(ClientMsg::Usage);
         roundtrip_c(ClientMsg::Health);
+        roundtrip_c(ClientMsg::HealthClear { device: 0 });
+        roundtrip_c(ClientMsg::HealthClear { device: u32::MAX });
+        // Truncated HealthClear errors instead of panicking.
+        let hc = ClientMsg::HealthClear { device: 3 }.encode();
+        for cut in 0..hc.len() {
+            assert!(ClientMsg::decode(&hc[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn encode_into_appends_and_matches_encode() {
+        // `encode_into` must append (never clear) so one scratch buffer
+        // can carry a length prefix before the payload.
+        let msgs = [
+            ClientMsg::Req {
+                name: "rank0".into(),
+                tenant: "gold".into(),
+            },
+            ClientMsg::SndShm {
+                slot: 2,
+                offset: 128,
+                len: 256,
+                generation: 9,
+            },
+            ClientMsg::HealthClear { device: 1 },
+        ];
+        for m in msgs {
+            let mut out = vec![0xAA, 0xBB];
+            m.encode_into(&mut out);
+            assert_eq!(&out[..2], &[0xAA, 0xBB]);
+            assert_eq!(&out[2..], &m.encode()[..]);
+        }
+        let replies = [
+            ServerMsg::Ack,
+            ServerMsg::Err { msg: "nope".into() },
+            ServerMsg::DataShm {
+                offset: 64,
+                len: 128,
+                generation: 3,
+            },
+        ];
+        for m in replies {
+            let mut out = vec![0xCC];
+            m.encode_into(&mut out);
+            assert_eq!(out[0], 0xCC);
+            assert_eq!(&out[1..], &m.encode()[..]);
+        }
     }
 
     #[test]
@@ -944,6 +1043,9 @@ mod tests {
             spilled_bytes: 0,
             spill_events: 0,
             restage_events: 0,
+            staging_physical_bytes: 0,
+            staging_dedup_hits: 0,
+            staging_copies_avoided: 0,
             tenants: vec![],
         });
         roundtrip_s(ServerMsg::Stats {
@@ -958,6 +1060,9 @@ mod tests {
             spilled_bytes: 3 << 30,
             spill_events: 17,
             restage_events: 12,
+            staging_physical_bytes: 1 << 27,
+            staging_dedup_hits: 700,
+            staging_copies_avoided: 1400,
             tenants: vec![
                 TenantStatsEntry {
                     tenant: "gold".into(),

@@ -57,7 +57,7 @@ fn dispatch(cmd: Cmd) -> Result<()> {
         } => cmd_migrate(&socket, &name, target),
         Cmd::Stats { socket, json } => cmd_stats(&socket, json),
         Cmd::Usage { socket } => cmd_usage(&socket),
-        Cmd::Health { socket } => cmd_health(&socket),
+        Cmd::Health { socket, clear } => cmd_health(&socket, clear),
     }
 }
 
@@ -84,6 +84,9 @@ fn cmd_stats(socket: &str, json: bool) -> Result<()> {
             spilled_bytes,
             spill_events,
             restage_events,
+            staging_physical_bytes,
+            staging_dedup_hits,
+            staging_copies_avoided,
             tenants,
         } => {
             let view = NodeStatsView {
@@ -98,6 +101,9 @@ fn cmd_stats(socket: &str, json: bool) -> Result<()> {
                 spilled_bytes,
                 spill_events,
                 restage_events,
+                staging_physical_bytes,
+                staging_dedup_hits,
+                staging_copies_avoided,
                 tenants,
             };
             if json {
@@ -116,6 +122,9 @@ fn cmd_stats(socket: &str, json: bool) -> Result<()> {
                 spilled_bytes,
                 spill_events,
                 restage_events,
+                staging_physical_bytes,
+                staging_dedup_hits,
+                staging_copies_avoided,
                 tenants,
             } = view;
             println!("node statistics ({socket}):");
@@ -131,6 +140,11 @@ fn cmd_stats(socket: &str, json: bool) -> Result<()> {
             println!(
                 "  spill                {spilled_bytes} B on host, \
                  {spill_events} spill(s), {restage_events} re-stage(s)"
+            );
+            println!(
+                "  staging              {staging_physical_bytes} B physical, \
+                 {staging_dedup_hits} dedup hit(s), \
+                 {staging_copies_avoided} copy(ies) avoided"
             );
             if !tenants.is_empty() {
                 println!(
@@ -179,6 +193,8 @@ fn stats_json(s: &vgpu::api::NodeStatsView) -> String {
          \"bytes_staged\":{},\"device_ms\":{},\"clients\":{},\
          \"in_flight_flushes\":{},\"queued_completions\":{},\
          \"spilled_bytes\":{},\"spill_events\":{},\"restage_events\":{},\
+         \"staging_physical_bytes\":{},\"staging_dedup_hits\":{},\
+         \"staging_copies_avoided\":{},\
          \"tenants\":[{}]}}",
         s.batches,
         s.jobs_ok,
@@ -191,6 +207,9 @@ fn stats_json(s: &vgpu::api::NodeStatsView) -> String {
         s.spilled_bytes,
         s.spill_events,
         s.restage_events,
+        s.staging_physical_bytes,
+        s.staging_dedup_hits,
+        s.staging_copies_avoided,
         tenants
     )
 }
@@ -274,11 +293,26 @@ fn cmd_usage(socket: &str) -> Result<()> {
 /// outstanding submissions, and the remediation counters.  Talks the
 /// raw wire protocol — no REQ handshake, so it never occupies a VGPU
 /// slot.
-fn cmd_health(socket: &str) -> Result<()> {
+fn cmd_health(socket: &str, clear: Option<u32>) -> Result<()> {
     use vgpu::gvm::DeviceState;
     use vgpu::ipc::transport::{Transport, UnixTransport};
     use vgpu::ipc::{ClientMsg, ServerMsg};
     let mut t = UnixTransport::connect(socket)?;
+    // `--clear DEV`: re-admit a quarantined device, then fall through
+    // to the snapshot so the operator sees the post-clear state.
+    if let Some(device) = clear {
+        match t.call(ClientMsg::HealthClear { device })? {
+            ServerMsg::Ack => {
+                println!("device {device} re-admitted to placement")
+            }
+            ServerMsg::Err { msg } => return Err(Error::Protocol(msg)),
+            other => {
+                return Err(Error::Ipc(format!(
+                    "expected Ack, got {other:?}"
+                )))
+            }
+        }
+    }
     match t.call(ClientMsg::Health)? {
         ServerMsg::Health {
             enabled,

@@ -120,6 +120,67 @@ impl TensorValue {
         }
     }
 
+    /// Visit the canonical wire encoding as byte chunks without
+    /// materializing it — the staging plane's content hashers stream
+    /// through this so the inline `SND` path and the shm arena path
+    /// produce identical hashes for identical tensors.  Chunk
+    /// boundaries are an implementation detail; only the concatenated
+    /// stream is specified (bit-identical to [`Self::encode`]).
+    pub fn for_each_encoded_chunk(&self, f: &mut dyn FnMut(&[u8])) {
+        let (tag, dims): (u8, &[usize]) = match self {
+            TensorValue::F32(d, _) => (0, d),
+            TensorValue::F64(d, _) => (1, d),
+        };
+        f(&[tag]);
+        f(&(dims.len() as u64).to_le_bytes());
+        for d in dims {
+            f(&(*d as u64).to_le_bytes());
+        }
+        f(&(self.elems() as u64).to_le_bytes());
+        match self {
+            TensorValue::F32(_, v) => payload_chunks(v, f),
+            TensorValue::F64(_, v) => payload_chunks(v, f),
+        }
+    }
+
+    /// Compare against a canonical encoding buffer without decoding it
+    /// — the shm dedup path's collision check.  True iff `buf` is
+    /// bit-identical to [`Self::encode`]'s output.
+    pub fn eq_encoded(&self, buf: &[u8]) -> bool {
+        let mut pos = 0usize;
+        let mut eq = true;
+        self.for_each_encoded_chunk(&mut |chunk| {
+            if !eq {
+                return;
+            }
+            match buf.get(pos..pos + chunk.len()) {
+                Some(s) if s == chunk => pos += chunk.len(),
+                _ => eq = false,
+            }
+        });
+        eq && pos == buf.len()
+    }
+
+    /// Bitwise equality over dtype, dims, and payload bit patterns.
+    /// Unlike the derived `PartialEq`, `NaN` compares equal to its own
+    /// bit pattern, so the content-addressed staging cache can neither
+    /// alias two distinct buffers nor split two identical ones.
+    pub fn bytes_eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (TensorValue::F32(d1, v1), TensorValue::F32(d2, v2)) => {
+                d1 == d2
+                    && v1.len() == v2.len()
+                    && v1.iter().zip(v2).all(|(a, b)| a.to_bits() == b.to_bits())
+            }
+            (TensorValue::F64(d1, v1), TensorValue::F64(d2, v2)) => {
+                d1 == d2
+                    && v1.len() == v2.len()
+                    && v1.iter().zip(v2).all(|(a, b)| a.to_bits() == b.to_bits())
+            }
+            _ => false,
+        }
+    }
+
     /// Deserialize from a byte buffer; advances `pos`.
     pub fn decode(buf: &[u8], pos: &mut usize) -> Result<Self> {
         let tag = *buf
@@ -179,6 +240,33 @@ fn extend_bulk<T: Copy>(out: &mut Vec<u8>, data: &[T]) {
             let mut b = unsafe { std::slice::from_raw_parts(p, sz) }.to_vec();
             b.reverse();
             out.extend_from_slice(&b);
+        }
+    }
+}
+
+/// Visit a float slice as little-endian payload bytes (one chunk on LE
+/// targets; per-element on big-endian, mirroring `extend_bulk`).
+fn payload_chunks<T: Copy>(data: &[T], f: &mut dyn FnMut(&[u8])) {
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: T is f32/f64 (POD); reinterpreting the slice as bytes
+        // is always valid, and LE layout == wire layout.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(
+                data.as_ptr() as *const u8,
+                std::mem::size_of_val(data),
+            )
+        };
+        f(bytes);
+    }
+    #[cfg(target_endian = "big")]
+    {
+        for x in data {
+            let p = x as *const T as *const u8;
+            let sz = std::mem::size_of::<T>();
+            let mut b = unsafe { std::slice::from_raw_parts(p, sz) }.to_vec();
+            b.reverse();
+            f(&b);
         }
     }
 }
@@ -298,6 +386,55 @@ mod tests {
             dims: vec![4],
         };
         assert!(t.to_literal(&badt).is_err());
+    }
+
+    #[test]
+    fn encoded_chunks_concatenate_to_encode_output() {
+        for t in [
+            TensorValue::F32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            TensorValue::F64(vec![], vec![]),
+            TensorValue::F64(vec![4], vec![1.5, -2.5, 0.0, 1e300]),
+        ] {
+            let mut expect = Vec::new();
+            t.encode(&mut expect);
+            let mut got = Vec::new();
+            t.for_each_encoded_chunk(&mut |c| got.extend_from_slice(c));
+            assert_eq!(got, expect);
+            assert!(t.eq_encoded(&expect));
+        }
+    }
+
+    #[test]
+    fn eq_encoded_rejects_mismatch_truncation_and_trailing() {
+        let t = TensorValue::F32(vec![2], vec![1.0, 2.0]);
+        let mut buf = Vec::new();
+        t.encode(&mut buf);
+        assert!(t.eq_encoded(&buf));
+        let mut other = buf.clone();
+        *other.last_mut().unwrap() ^= 1;
+        assert!(!t.eq_encoded(&other));
+        assert!(!t.eq_encoded(&buf[..buf.len() - 1]));
+        let mut long = buf.clone();
+        long.push(0);
+        assert!(!t.eq_encoded(&long));
+    }
+
+    #[test]
+    fn bytes_eq_is_bitwise_and_nan_safe() {
+        let a = TensorValue::F32(vec![2], vec![1.0, f32::NAN]);
+        let b = TensorValue::F32(vec![2], vec![1.0, f32::NAN]);
+        assert!(a.bytes_eq(&b), "NaN payloads with equal bits are equal");
+        assert_ne!(a, b, "derived PartialEq disagrees on NaN — why bytes_eq exists");
+        let c = TensorValue::F32(vec![1, 2], vec![1.0, f32::NAN]);
+        assert!(!a.bytes_eq(&c), "dims participate");
+        let d = TensorValue::F64(vec![2], vec![1.0, 2.0]);
+        assert!(!a.bytes_eq(&d), "dtype participates");
+        // -0.0 and 0.0 are PartialEq-equal but bitwise distinct: the
+        // cache must treat them as different content.
+        let z = TensorValue::F32(vec![1], vec![0.0]);
+        let nz = TensorValue::F32(vec![1], vec![-0.0]);
+        assert_eq!(z, nz);
+        assert!(!z.bytes_eq(&nz));
     }
 
     #[test]

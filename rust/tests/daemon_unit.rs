@@ -10,7 +10,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use vgpu::config::DeviceConfig;
-use vgpu::gvm::devices::{PlacementPolicy, PoolConfig};
+use vgpu::gvm::devices::{DeviceState, PlacementPolicy, PoolConfig};
+use vgpu::gvm::health::HealthConfig;
 use vgpu::gvm::qos::QosConfig;
 use vgpu::gvm::{Command, Daemon, DaemonConfig};
 use vgpu::ipc::{ClientMsg, ServerMsg};
@@ -509,4 +510,236 @@ fn failed_client_recycles_on_next_snd() {
     call(&tx, id, ClientMsg::Snd { slot: 0, tensor: t4() });
     call(&tx, id, ClientMsg::Str { workload: "double".into() });
     assert!(matches!(call(&tx, id, ClientMsg::Stp), ServerMsg::Done { .. }));
+}
+
+/// `vgpu health --clear` end to end (ISSUE satellite): quarantine a
+/// device through the health plane, then re-admit it with
+/// `ClientMsg::HealthClear` — the pool places fresh clients on it
+/// again.  Unknown device indices are a typed error, and clearing an
+/// already-healthy device is an idempotent no-op Ack.
+#[test]
+fn health_clear_re_admits_a_quarantined_device() {
+    // Lane 0 wedges on "hang" past the heartbeat deadline; lane 1
+    // (and, once cleared, lane 0 again) runs "ok" instantly.
+    let wls = vec!["hang".to_string(), "ok".to_string()];
+    let hung = ExecHandle::mock(wls.clone(), |name, inputs| {
+        if name == "hang" {
+            std::thread::sleep(Duration::from_millis(300));
+        }
+        Ok(inputs)
+    });
+    let healthy = ExecHandle::mock(wls, |_, inputs| Ok(inputs));
+    let cfg = DaemonConfig {
+        barrier: Some(2),
+        barrier_timeout: Duration::from_secs(5),
+        pool: PoolConfig::homogeneous(
+            2,
+            DeviceConfig::tesla_c2070(),
+            PlacementPolicy::RoundRobin,
+        ),
+        health: HealthConfig {
+            enabled: true,
+            remediate: true,
+            heartbeat_timeout: Duration::from_millis(50),
+            ..HealthConfig::default()
+        },
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::with_handles(cfg, vec![hung, healthy]).unwrap();
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+
+    // Round-robin: a lands on the doomed device 0, b on device 1.
+    let a = register(&tx, "a");
+    let b = register(&tx, "b");
+    for &c in &[a, b] {
+        call(&tx, c, ClientMsg::Snd { slot: 0, tensor: t4() });
+    }
+    assert!(matches!(
+        call(&tx, a, ClientMsg::Str { workload: "hang".into() }),
+        ServerMsg::Queued { .. }
+    ));
+    assert!(matches!(
+        call(&tx, b, ClientMsg::Str { workload: "ok".into() }),
+        ServerMsg::Queued { .. }
+    ));
+    // Both settle: b on its own lane, a via health-driven failover.
+    for &c in &[a, b] {
+        assert!(matches!(call(&tx, c, ClientMsg::Stp), ServerMsg::Done { .. }));
+    }
+    match call(&tx, a, ClientMsg::DevInfo) {
+        ServerMsg::Devices { devices, .. } => assert_eq!(
+            DeviceState::from_u8(devices[0].state),
+            Some(DeviceState::Quarantined),
+            "{devices:?}"
+        ),
+        other => panic!("{other:?}"),
+    }
+
+    // Out-of-range index: typed error, nothing cleared.
+    match call(&tx, a, ClientMsg::HealthClear { device: 7 }) {
+        ServerMsg::Err { msg } => {
+            assert!(msg.contains("unknown device"), "{msg}")
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // Operator re-admits device 0.
+    assert!(matches!(
+        call(&tx, a, ClientMsg::HealthClear { device: 0 }),
+        ServerMsg::Ack
+    ));
+    match call(&tx, a, ClientMsg::DevInfo) {
+        ServerMsg::Devices { devices, .. } => assert_eq!(
+            DeviceState::from_u8(devices[0].state),
+            Some(DeviceState::Healthy),
+            "{devices:?}"
+        ),
+        other => panic!("{other:?}"),
+    }
+
+    // Placement uses the cleared device again: two consecutive
+    // round-robin REQs must cover both healthy devices, so device 0
+    // gets at least one (a still-quarantined device would get none).
+    let c = register(&tx, "c");
+    let d = register(&tx, "d");
+    match call(&tx, a, ClientMsg::DevInfo) {
+        ServerMsg::Devices { devices, .. } => assert!(
+            devices[0].clients >= 1,
+            "cleared device must rejoin placement: {devices:?}"
+        ),
+        other => panic!("{other:?}"),
+    }
+    // And the re-admitted lane executes work.
+    for &x in &[c, d] {
+        call(&tx, x, ClientMsg::Snd { slot: 0, tensor: t4() });
+    }
+    for &x in &[c, d] {
+        assert!(matches!(
+            call(&tx, x, ClientMsg::Str { workload: "ok".into() }),
+            ServerMsg::Queued { .. }
+        ));
+    }
+    for &x in &[c, d] {
+        assert!(matches!(call(&tx, x, ClientMsg::Stp), ServerMsg::Done { .. }));
+    }
+
+    // Clearing an already-healthy device is an idempotent no-op.
+    assert!(matches!(
+        call(&tx, a, ClientMsg::HealthClear { device: 0 }),
+        ServerMsg::Ack
+    ));
+}
+
+/// Stale/duplicate `SndShm` generations are a *typed, counted*
+/// rejection — never a silent drop — and the replay watermark survives
+/// ring re-negotiation (ISSUE satellite).
+#[test]
+fn stale_shm_generation_is_typed_and_counted() {
+    let exec = ExecHandle::mock(vec!["echo".into()], |_, inputs| {
+        Ok(inputs)
+    });
+    let cfg = DaemonConfig {
+        barrier: Some(1),
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::new(cfg, exec);
+    let registry = daemon.registry();
+    let stale = registry.counter_with(
+        "vgpu_ipc_shm_rejects_total",
+        "SndShm descriptors rejected before any ring read",
+        &[("reason", "stale_generation")],
+    );
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+    let id = register(&tx, "a");
+
+    // Stand in for the client-created ring pair: the input file holds
+    // one canonically-encoded tensor at offset 0.
+    let mut enc = Vec::new();
+    t4().encode(&mut enc);
+    let path = std::env::temp_dir()
+        .join(format!("vgpu-test-stale-gen-{}.ring", std::process::id()))
+        .to_string_lossy()
+        .to_string();
+    std::fs::write(&path, &enc).unwrap();
+    std::fs::write(format!("{path}.out"), vec![0u8; 4096]).unwrap();
+    match call(
+        &tx,
+        id,
+        ClientMsg::ShmOpen {
+            path: path.clone(),
+            bytes: 4096,
+        },
+    ) {
+        ServerMsg::ShmOk { max_bytes } => assert_eq!(max_bytes, 4096),
+        other => panic!("{other:?}"),
+    }
+
+    let snd = |generation: u64| {
+        call(
+            &tx,
+            id,
+            ClientMsg::SndShm {
+                slot: 0,
+                offset: 0,
+                len: enc.len() as u64,
+                generation,
+            },
+        )
+    };
+    // First use of generation 1 is accepted.
+    assert!(matches!(snd(1), ServerMsg::Ack));
+    assert_eq!(stale.get(), 0);
+    // A replayed duplicate and a stale (zero) generation are each a
+    // typed error naming the watermark, and each counts.
+    for (gen, expect) in [(1, 1), (0, 2)] {
+        match snd(gen) {
+            ServerMsg::Err { msg } => {
+                assert!(msg.contains("not past 1"), "{msg}")
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(stale.get(), expect);
+    }
+    // Re-negotiating the ring must NOT reopen the replay window: the
+    // watermark survives, the old descriptor still bounces, and only
+    // a strictly newer generation passes.
+    match call(
+        &tx,
+        id,
+        ClientMsg::ShmOpen {
+            path: path.clone(),
+            bytes: 4096,
+        },
+    ) {
+        ServerMsg::ShmOk { .. } => {}
+        other => panic!("{other:?}"),
+    }
+    match snd(1) {
+        ServerMsg::Err { msg } => assert!(msg.contains("not past 1"), "{msg}"),
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(stale.get(), 3);
+    assert!(matches!(snd(2), ServerMsg::Ack));
+    assert_eq!(stale.get(), 3);
+
+    // The accepted descriptor really staged the payload: the cycle
+    // runs on it.
+    assert!(matches!(
+        call(&tx, id, ClientMsg::Str { workload: "echo".into() }),
+        ServerMsg::Queued { .. }
+    ));
+    match call(&tx, id, ClientMsg::Stp) {
+        ServerMsg::Done { n_outputs, .. } => assert_eq!(n_outputs, 1),
+        other => panic!("{other:?}"),
+    }
+    match call(&tx, id, ClientMsg::Rcv { slot: 0 }) {
+        ServerMsg::Data { tensor } => {
+            assert_eq!(tensor.as_f64_vec(), t4().as_f64_vec());
+        }
+        other => panic!("{other:?}"),
+    }
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.out"));
 }

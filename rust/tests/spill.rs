@@ -22,6 +22,7 @@ use std::time::Duration;
 use vgpu::config::DeviceConfig;
 use vgpu::gvm::devices::{DeviceId, DevicePool, PlacementPolicy, PoolConfig};
 use vgpu::gvm::spill::{SpillConfig, SpillStore};
+use vgpu::gvm::staging::StagingConfig;
 use vgpu::gvm::{Command, Daemon, DaemonConfig, PipelineConfig};
 use vgpu::ipc::{ClientMsg, ServerMsg};
 use vgpu::runtime::{ExecHandle, TensorValue};
@@ -68,6 +69,10 @@ fn t(n: usize) -> TensorValue {
 }
 
 fn spill_daemon(depth: usize) -> mpsc::Sender<Command> {
+    spill_daemon_with(depth, false)
+}
+
+fn spill_daemon_with(depth: usize, dedup: bool) -> mpsc::Sender<Command> {
     let cfg = DaemonConfig {
         barrier: Some(1),
         barrier_timeout: Duration::from_secs(5),
@@ -83,6 +88,10 @@ fn spill_daemon(depth: usize) -> mpsc::Sender<Command> {
             enabled: true,
             host_budget_bytes: 1 << 20,
             watermark: 1.0,
+        },
+        staging: StagingConfig {
+            dedup,
+            ..StagingConfig::default()
         },
         ..DaemonConfig::default()
     };
@@ -111,7 +120,9 @@ fn assert_capacity(tx: &mpsc::Sender<Command>, probe: u64, ctx: &str) {
 }
 
 /// Conservation at a quiescent point: device totals + host store ==
-/// the mirror's live staged bytes.
+/// the mirror's live staged bytes — and with dedup off (these daemons'
+/// config) the staging cache's *physical* footprint equals the same
+/// logical total, byte for byte.
 fn assert_conservation(
     tx: &mpsc::Sender<Command>,
     probe: u64,
@@ -122,8 +133,12 @@ fn assert_conservation(
         .values()
         .map(|slots| slots.values().sum::<u64>())
         .sum();
-    let spilled = match call(tx, probe, ClientMsg::Stats) {
-        ServerMsg::Stats { spilled_bytes, .. } => spilled_bytes,
+    let (spilled, physical) = match call(tx, probe, ClientMsg::Stats) {
+        ServerMsg::Stats {
+            spilled_bytes,
+            staging_physical_bytes,
+            ..
+        } => (spilled_bytes, staging_physical_bytes),
         other => panic!("{ctx}: {other:?}"),
     };
     let on_devices: u64 = match call(tx, probe, ClientMsg::DevInfo) {
@@ -137,6 +152,11 @@ fn assert_conservation(
         expected,
         "{ctx}: conservation broken (devices {on_devices} + spilled \
          {spilled} != live segments {expected})"
+    );
+    assert_eq!(
+        physical, expected,
+        "{ctx}: with dedup off the staging cache's physical bytes must \
+         equal the live logical segments"
     );
 }
 
@@ -350,6 +370,85 @@ fn oversubscribed_pool_completes_with_zero_placement_failures() {
             assert_eq!(jobs_ok, 16, "every oversubscribed job completed");
             assert_eq!(jobs_failed, 0, "zero placement/re-stage failures");
             assert_eq!(spilled_bytes, 0, "all consumed after settle");
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+/// Dedup is an overlay on the spill plane: with `[staging] dedup` on
+/// and four ranks staging *identical* full-device segments, the
+/// logical accounting (device totals + host store, what placement and
+/// the spill budget see) is exactly what it is with dedup off, while
+/// the cache holds ONE physical buffer behind all four — including the
+/// holders the spill tier moved off-device.
+#[test]
+fn dedup_collapses_physical_bytes_under_spill_pressure() {
+    let tx = spill_daemon_with(1, true);
+    let clients: Vec<u64> =
+        (0..4).map(|i| register(&tx, &format!("r{i}"))).collect();
+    for &c in &clients {
+        assert!(matches!(
+            call(
+                &tx,
+                c,
+                ClientMsg::Snd {
+                    slot: 0,
+                    tensor: t(64), // 256 B: a full device each
+                }
+            ),
+            ServerMsg::Ack
+        ));
+        assert_capacity(&tx, clients[0], "dedup+spill stage");
+    }
+    let (spilled, physical, hits) = match call(&tx, clients[0], ClientMsg::Stats)
+    {
+        ServerMsg::Stats {
+            spilled_bytes,
+            staging_physical_bytes,
+            staging_dedup_hits,
+            ..
+        } => (spilled_bytes, staging_physical_bytes, staging_dedup_hits),
+        other => panic!("{other:?}"),
+    };
+    let on_devices: u64 = match call(&tx, clients[0], ClientMsg::DevInfo) {
+        ServerMsg::Devices { devices, .. } => {
+            devices.iter().map(|d| d.mem_used).sum()
+        }
+        other => panic!("{other:?}"),
+    };
+    // Logical: 4 x 256 B live across devices + host store, unchanged
+    // by dedup.  Physical: one 256 B buffer behind all four holders.
+    assert_eq!(on_devices + spilled, 4 * 256, "logical accounting intact");
+    assert_eq!(physical, 256, "one shared buffer behind 4 ranks");
+    assert!(hits >= 3, "ranks 2..4 must hit the cache: {hits}");
+
+    // The shared inputs still flow through flush/re-stage/consume, and
+    // everything drains with the last holder.
+    for &c in &clients {
+        assert!(matches!(
+            call(&tx, c, ClientMsg::Str { workload: "w".into() }),
+            ServerMsg::Queued { .. }
+        ));
+    }
+    for &c in &clients {
+        match call(&tx, c, ClientMsg::Stp) {
+            ServerMsg::Done { .. } => {}
+            other => panic!("shared-input job must complete: {other:?}"),
+        }
+    }
+    match call(&tx, clients[0], ClientMsg::Stats) {
+        ServerMsg::Stats {
+            jobs_failed,
+            spilled_bytes,
+            staging_physical_bytes,
+            ..
+        } => {
+            assert_eq!(jobs_failed, 0);
+            assert_eq!(spilled_bytes, 0, "all consumed after settle");
+            assert_eq!(
+                staging_physical_bytes, 0,
+                "the shared buffer dies with its last holder"
+            );
         }
         other => panic!("{other:?}"),
     }
