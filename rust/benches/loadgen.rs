@@ -1,0 +1,172 @@
+//! Open-loop SLO bench: seeded trace replay against the real daemon
+//! over the mux socket at longer durations than the `vgpu exp slo`
+//! smoke — arrival shape × offered load × flush-pipeline depth, with
+//! pooled and per-tenant tail latency.
+//!
+//! Per cell: one fresh daemon (two timed device lanes, paper-scale
+//! service ratios compressed to a 2 ms mix mean), one seeded trace at
+//! the cell's offered load, a client fleet split across the tenant mix
+//! by share.  Reported: pooled p99 ms, worst per-tenant p99 ms,
+//! goodput (settled-OK jobs/s), and mean SLO attainment.
+//!
+//! Results land in `BENCH_loadgen.json` (override the path with
+//! `VGPU_BENCH_LOADGEN_JSON`; override the trace length with
+//! `VGPU_BENCH_LOADGEN_MS=2000`).  Cells that fail record null rows
+//! rather than failing the bench.
+
+mod bench_common;
+use bench_common::section;
+
+use vgpu::harness::loadgen::{run_loadgen, Arrival, LoadgenConfig};
+
+/// Offered-load fractions of the two-lane node's capacity.
+const LOADS: [f64; 3] = [0.5, 0.8, 0.95];
+
+/// Flush-pipeline depths (1 = the serialized pre-pipeline daemon).
+const DEPTHS: [usize; 2] = [1, 2];
+
+/// Arrival shapes swept.
+const ARRIVALS: [Arrival; 3] =
+    [Arrival::Poisson, Arrival::Bursty, Arrival::Diurnal];
+
+/// Node capacity matching the harness' scaled mixes: 2 serial lanes at
+/// a 2 ms mean service time.
+const CAPACITY_JPS: f64 = 1000.0;
+
+struct Row {
+    mix: &'static str,
+    arrival: &'static str,
+    load: f64,
+    depth: usize,
+    jobs: usize,
+    p99_ms: f64,
+    worst_tenant_p99_ms: f64,
+    goodput_jps: f64,
+    attain: f64,
+}
+
+fn duration_ms() -> u64 {
+    std::env::var("VGPU_BENCH_LOADGEN_MS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1000)
+}
+
+fn run_cell(
+    mix: &'static str,
+    arrival: Arrival,
+    load: f64,
+    depth: usize,
+) -> Row {
+    let cfg = LoadgenConfig {
+        arrival,
+        rate_hz: load * CAPACITY_JPS,
+        duration_ms: duration_ms(),
+        clients: 32,
+        mix: mix.into(),
+        ..LoadgenConfig::default()
+    };
+    let (jobs, p99, worst, goodput, attain) = match run_loadgen(&cfg, depth)
+    {
+        Ok(r) => {
+            let worst = r
+                .tenants
+                .iter()
+                .map(|t| t.p99_ms)
+                .fold(f64::NAN, f64::max);
+            let goodput: f64 =
+                r.tenants.iter().map(|t| t.goodput_jps).sum();
+            let attain = if r.tenants.is_empty() {
+                f64::NAN
+            } else {
+                r.tenants.iter().map(|t| t.attainment).sum::<f64>()
+                    / r.tenants.len() as f64
+            };
+            (r.total_jobs, r.all_p99_ms, worst, goodput, attain)
+        }
+        Err(e) => {
+            eprintln!(
+                "[{mix}/{}/{load}/{depth}: {e} — null row]",
+                arrival.name()
+            );
+            (0, f64::NAN, f64::NAN, f64::NAN, f64::NAN)
+        }
+    };
+    println!(
+        "{:40} {:>6} jobs {:>9.2} p99 ms {:>9.2} worst-tenant p99 \
+         {:>9.1} jobs/s {:>6.1}% SLO",
+        format!("{mix}_{}_l{load}_d{depth}", arrival.name()),
+        jobs,
+        p99,
+        worst,
+        goodput,
+        attain * 100.0
+    );
+    Row {
+        mix,
+        arrival: arrival.name(),
+        load,
+        depth,
+        jobs,
+        p99_ms: p99,
+        worst_tenant_p99_ms: worst,
+        goodput_jps: goodput,
+        attain,
+    }
+}
+
+fn fmt_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.2}")
+    } else {
+        "null".into()
+    }
+}
+
+fn main() {
+    let mut rows: Vec<Row> = Vec::new();
+    for mix in ["uniform", "finance"] {
+        section(&format!(
+            "open-loop SLO over mix {mix}: {} ms traces, 32 clients, \
+             2 timed lanes",
+            duration_ms()
+        ));
+        for arrival in ARRIVALS {
+            for load in LOADS {
+                for depth in DEPTHS {
+                    rows.push(run_cell(mix, arrival, load, depth));
+                }
+            }
+        }
+    }
+
+    let path = std::env::var("VGPU_BENCH_LOADGEN_JSON")
+        .unwrap_or_else(|_| "BENCH_loadgen.json".into());
+    let mut json = String::from(
+        "{\n  \"bench\": \"loadgen\",\n  \"capacity_jps\": 1000,\n  \
+         \"clients\": 32,\n  \"rows\": [\n",
+    );
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"mix\": \"{}\", \"arrival\": \"{}\", \"load\": {}, \
+             \"depth\": {}, \"jobs\": {}, \"p99_ms\": {}, \
+             \"worst_tenant_p99_ms\": {}, \"goodput_jps\": {}, \
+             \"slo_attainment\": {}}}{}\n",
+            r.mix,
+            r.arrival,
+            r.load,
+            r.depth,
+            r.jobs,
+            fmt_num(r.p99_ms),
+            fmt_num(r.worst_tenant_p99_ms),
+            fmt_num(r.goodput_jps),
+            fmt_num(r.attain),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("\n[recorded {path}]"),
+        Err(e) => eprintln!("\n[could not write {path}: {e}]"),
+    }
+}

@@ -420,7 +420,7 @@ USAGE:
 EXPERIMENTS: tab1 tab3 fig14 fig15 fig16 fig17 fig18 fig19 fig20 fig21
              fig22 fig23 fig24 ablation-style ablation-depcheck
              ablation-ctx ablation-barrier ablation-policy multi-gpu qos
-             multi-gpu-cluster pipeline spill chaos fanin staging
+             multi-gpu-cluster pipeline spill chaos fanin staging slo
              ext-multigpu ext-cluster ext-fig18-socket
 ";
 

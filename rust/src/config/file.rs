@@ -79,6 +79,15 @@
 //! suspect_strikes = 3         # strikes to Suspect (2x quarantines)
 //! max_quarantined = 1         # concurrent-quarantine cap
 //!
+//! [loadgen]
+//! arrival = poisson           # poisson | bursty | diurnal
+//! rate = 200.0                # aggregate offered arrival rate, jobs/s
+//! duration_ms = 400           # trace length
+//! seed = 42                   # same seed = same trace, job for job
+//! clients = 16                # concurrent connections (split by share)
+//! mix = uniform               # tenant mix: uniform | finance
+//! slo_ms = risk:15, md:40     # per-tenant SLO overrides (tenant:ms)
+//!
 //! [gvm]
 //! barrier = 8                 # omit for "all registered clients"
 //! barrier_timeout_ms = 50
@@ -100,6 +109,7 @@ use crate::gvm::qos::{parse_share_list, QosConfig};
 use crate::gvm::spill::SpillConfig;
 use crate::gvm::staging::{HashKind, StagingConfig};
 use crate::gvm::{DaemonConfig, GvmConfig, PipelineConfig, StyleRule};
+use crate::harness::loadgen::{Arrival, LoadgenConfig};
 use crate::ipc::mux::{IpcConfig, IpcMode};
 use crate::metrics::MetricsConfig;
 use crate::{Error, Result};
@@ -607,6 +617,44 @@ impl ConfigFile {
         Ok(m)
     }
 
+    /// Build the load-generator tunables (the `[loadgen]` section);
+    /// omitted section = the smoke-scale defaults `vgpu exp slo` runs
+    /// with.  `VGPU_SLO_CONFIG=<file>` points the sweep at a file
+    /// carrying this section.
+    pub fn loadgen(&self) -> Result<LoadgenConfig> {
+        let mut l = LoadgenConfig::default();
+        if let Some(v) = self.get("loadgen", "arrival") {
+            l.arrival = Arrival::parse(v).ok_or_else(|| {
+                Error::Config(format!(
+                    "[loadgen] arrival = {v:?} \
+                     (want poisson|bursty|diurnal)"
+                ))
+            })?;
+        }
+        if let Some(v) = self.get_f64("loadgen", "rate")? {
+            l.rate_hz = v;
+        }
+        if let Some(v) = self.get_usize("loadgen", "duration_ms")? {
+            l.duration_ms = v as u64;
+        }
+        if let Some(v) = self.get("loadgen", "seed") {
+            l.seed = v.parse().map_err(|e| {
+                Error::Config(format!("[loadgen] seed = {v:?}: {e}"))
+            })?;
+        }
+        if let Some(v) = self.get_usize("loadgen", "clients")? {
+            l.clients = v;
+        }
+        if let Some(v) = self.get("loadgen", "mix") {
+            l.mix = v.to_lowercase();
+        }
+        if let Some(v) = self.get("loadgen", "slo_ms") {
+            l.slo_ms = parse_share_list(v)?;
+        }
+        l.validate()?;
+        Ok(l)
+    }
+
     /// Build a node config (`[node]` + `[devices]` + `[device]`).
     pub fn node(&self) -> Result<NodeConfig> {
         let mut n = NodeConfig {
@@ -1021,6 +1069,50 @@ policy = model-optimal
         let g = c.gvm().unwrap();
         assert!(g.metrics.enabled);
         assert_eq!(g.metrics.listen, "0.0.0.0:9999");
+    }
+
+    #[test]
+    fn loadgen_section_parses() {
+        let c = ConfigFile::parse(
+            "[loadgen]\narrival = bursty\nrate = 800\nduration_ms = 250\n\
+             seed = 7\nclients = 32\nmix = finance\n\
+             slo_ms = risk:10, md:50\n",
+        )
+        .unwrap();
+        let l = c.loadgen().unwrap();
+        assert_eq!(l.arrival, Arrival::Bursty);
+        assert_eq!(l.rate_hz, 800.0);
+        assert_eq!(l.duration_ms, 250);
+        assert_eq!(l.seed, 7);
+        assert_eq!(l.clients, 32);
+        assert_eq!(l.mix, "finance");
+        assert_eq!(
+            l.slo_ms,
+            vec![("risk".to_string(), 10.0), ("md".to_string(), 50.0)]
+        );
+    }
+
+    #[test]
+    fn loadgen_section_defaults() {
+        let l = ConfigFile::parse("").unwrap().loadgen().unwrap();
+        assert_eq!(l.arrival, Arrival::Poisson);
+        assert_eq!(l.mix, "uniform");
+        assert!(l.rate_hz > 0.0 && l.duration_ms > 0 && l.clients > 0);
+    }
+
+    #[test]
+    fn bad_loadgen_sections_rejected() {
+        for bad in [
+            "[loadgen]\narrival = uniform-random\n",
+            "[loadgen]\nrate = -5\n",
+            "[loadgen]\nduration_ms = 0\n",
+            "[loadgen]\nclients = 0\n",
+            "[loadgen]\nmix = nope\n",
+            "[loadgen]\nslo_ms = risk:-1\n",
+        ] {
+            let c = ConfigFile::parse(bad).unwrap();
+            assert!(c.loadgen().is_err(), "{bad:?} should be rejected");
+        }
     }
 
     #[test]

@@ -146,6 +146,15 @@ use crate::{Error, Result};
 /// knob — normal executions complete in milliseconds to seconds).
 const COMPLETION_TIMEOUT: Duration = Duration::from_secs(3600);
 
+/// Floor on the event loop's blocking wait.  A computed deadline that is
+/// already in the past (health heartbeat on a lane that stays overdue,
+/// an expired barrier window racing its own flush) must not turn
+/// `recv_timeout` into a busy poll: with the floor, a quiescent daemon
+/// runs at most `1s / MIN_LOOP_TICK` turns per second instead of
+/// millions.  Events (commands, completions) still wake the loop
+/// immediately — the floor only paces pure timeout turns.
+const MIN_LOOP_TICK: Duration = Duration::from_millis(5);
+
 /// Cap on distinct per-tenant counter rows.  Tenant ids are
 /// client-supplied strings: without a bound a churn of unique ids would
 /// grow daemon memory forever and eventually overflow the Stats wire
@@ -155,6 +164,11 @@ const MAX_TENANT_STATS: usize = 1024;
 
 /// Aggregate row for tenants beyond [`MAX_TENANT_STATS`].
 const OTHER_TENANTS: &str = "(other)";
+
+/// Typed rejection for submissions after the executor engine is lost.
+const ENGINE_LOST_MSG: &str =
+    "executor engine lost (all device workers gone): flush/submit \
+     rejected; restart the daemon";
 
 /// Flush-epoch settle-latency histogram bounds (ms).  Fixed buckets so
 /// every daemon exports the same series shape: sub-millisecond mock
@@ -392,6 +406,11 @@ pub struct Daemon {
     /// location — logical `seg_bytes` stays per-VGPU in the table
     /// while this cache tracks the deduped *physical* footprint.
     staging: StagingCache,
+    /// Latched when the completion channel disconnects (every device
+    /// worker is gone).  A lost engine can never complete another job,
+    /// so `STR`/`FLH`/`WaitFlush` are rejected with a typed error from
+    /// then on instead of wedging the client forever.
+    engine_lost: bool,
 }
 
 /// One client's negotiated shared-memory data plane.  The daemon holds
@@ -700,6 +719,7 @@ impl Daemon {
             health,
             health_metrics,
             staging,
+            engine_lost: false,
         }
     }
 
@@ -763,18 +783,7 @@ impl Daemon {
         let mut cmds_closed = false;
         loop {
             match ev_rx.recv_timeout(self.next_deadline()) {
-                Ok(Event::Cmd(cmd)) => {
-                    let reply_tx = cmd.reply.clone();
-                    if let Err(e) = self.handle(cmd) {
-                        let _ =
-                            reply_tx.send(ServerMsg::Err { msg: e.to_string() });
-                    }
-                }
-                Ok(Event::Done(c)) => self.on_completion(c),
-                Ok(Event::CmdClosed) => cmds_closed = true,
-                Ok(Event::EngineLost) => self.fail_all_inflight(
-                    "executor engine lost (all device workers gone)",
-                ),
+                Ok(ev) => self.on_event(ev, &mut cmds_closed),
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
@@ -786,6 +795,45 @@ impl Daemon {
             if cmds_closed && self.inflight.is_empty() {
                 break;
             }
+        }
+    }
+
+    /// Apply one select-loop event.  Factored out of [`Daemon::run`] so
+    /// the event transitions (notably `EngineLost`) are directly
+    /// testable without standing up the pump threads.
+    fn on_event(&mut self, ev: Event, cmds_closed: &mut bool) {
+        match ev {
+            Event::Cmd(cmd) => {
+                let reply_tx = cmd.reply.clone();
+                if let Err(e) = self.handle(cmd) {
+                    let _ =
+                        reply_tx.send(ServerMsg::Err { msg: e.to_string() });
+                }
+            }
+            Event::Done(c) => self.on_completion(c),
+            Event::CmdClosed => *cmds_closed = true,
+            Event::EngineLost => self.on_engine_lost(),
+        }
+    }
+
+    /// The completion channel disconnected: every device worker is
+    /// gone, so no accepted job can ever complete again.  Fail the
+    /// in-flight epochs, settle every parked flush waiter with a typed
+    /// error, and latch [`Daemon::engine_lost`] so later `STR`/`FLH`/
+    /// `WaitFlush` are rejected instead of wedging forever.
+    fn on_engine_lost(&mut self) {
+        self.engine_lost = true;
+        self.fail_all_inflight(
+            "executor engine lost (all device workers gone)",
+        );
+        // Waiters whose epoch never started (a ticket naming
+        // `flush_seq + 1` while jobs were still queued) would otherwise
+        // park until the queue drains — which it never will, since the
+        // flush that would drain it can no longer run.
+        for (_, reply) in std::mem::take(&mut self.flush_waiters) {
+            let _ = reply.send(ServerMsg::Err {
+                msg: ENGINE_LOST_MSG.into(),
+            });
         }
     }
 
@@ -820,6 +868,15 @@ impl Daemon {
 
     /// How long the event loop may block: the barrier window (if one is
     /// open), the oldest in-flight epoch's wedge deadline, else "idle".
+    ///
+    /// Clamped to [`MIN_LOOP_TICK`]: a deadline already in the past
+    /// (e.g. a quarantined lane that stays overdue because nothing can
+    /// clear its heartbeat) would otherwise make `recv_timeout` return
+    /// `Timeout` immediately every turn — a hot spin burning a core.
+    /// Every per-turn pass (`health_tick`, `expire_wedged_epochs`,
+    /// `maybe_start_flush`) also runs after each *event*, so delaying a
+    /// pure timeout wakeup by the tick costs at most one tick of
+    /// remediation latency.
     fn next_deadline(&self) -> Duration {
         let mut d = Duration::from_secs(3600);
         if let Some(t0) = self.barrier_open_since {
@@ -835,7 +892,7 @@ impl Daemon {
                 d = d.min(t.saturating_duration_since(Instant::now()));
             }
         }
-        d
+        d.max(MIN_LOOP_TICK)
     }
 
     fn barrier_full(&self) -> bool {
@@ -1261,6 +1318,11 @@ impl Daemon {
                 self.ack(&cmd.reply)?;
             }
             ClientMsg::Str { workload } => {
+                // A lost engine can never run this job: reject now with
+                // a typed error instead of queueing work that wedges.
+                if self.engine_lost {
+                    return Err(Error::gvm(ENGINE_LOST_MSG));
+                }
                 // Validate eagerly so the client hears about a bad name
                 // at STR time, not at flush time.
                 if self.suite.get(&workload).is_none()
@@ -1530,6 +1592,11 @@ impl Daemon {
                     .map_err(|_| Error::Ipc("client gone".into()))?;
             }
             ClientMsg::Flh { wait } => {
+                // No executor will ever settle another epoch — a ticket
+                // issued now could only wedge its waiter forever.
+                if self.engine_lost {
+                    return Err(Error::gvm(ENGINE_LOST_MSG));
+                }
                 // Explicit flush: push the queued batch out now instead
                 // of waiting for the barrier.  The epoch the batch will
                 // run as is `flush_seq + 1` — the event loop starts it
@@ -1556,6 +1623,11 @@ impl Daemon {
                 }
             }
             ClientMsg::WaitFlush { epoch } => {
+                // Settle with the typed engine-lost error instead of
+                // parking on an epoch that can never settle.
+                if self.engine_lost {
+                    return Err(Error::gvm(ENGINE_LOST_MSG));
+                }
                 // Tickets only ever name epochs up to `flush_seq + 1`
                 // (the next flush to start); anything beyond is a
                 // made-up epoch that could park the reply forever on a
@@ -2074,6 +2146,11 @@ impl Daemon {
     /// another epoch.  At the depth cap the batch stays queued and the
     /// request is remembered; the next epoch settle re-runs this check.
     fn maybe_start_flush(&mut self) {
+        if self.engine_lost {
+            // Nothing can execute a new epoch; leave queued jobs where
+            // the typed `STR`/`FLH` rejections have already pointed.
+            return;
+        }
         let window_expired = self
             .barrier_open_since
             .map(|t0| t0.elapsed() >= self.cfg.barrier_timeout)
@@ -2984,5 +3061,183 @@ impl Daemon {
         if let Err(e) = self.table.fail(client, msg) {
             log::warn!("failure for vanished client {client}: {e}");
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceConfig;
+    use crate::gvm::devices::PlacementPolicy;
+
+    fn echo_handle() -> ExecHandle {
+        ExecHandle::mock(vec!["echo".into()], |_, inputs| Ok(inputs))
+    }
+
+    fn test_daemon(devices: usize, health: HealthConfig) -> Daemon {
+        let cfg = DaemonConfig {
+            barrier: Some(1),
+            health,
+            pool: PoolConfig::homogeneous(
+                devices,
+                DeviceConfig::tesla_c2070(),
+                PlacementPolicy::RoundRobin,
+            ),
+            ..DaemonConfig::default()
+        };
+        let handles = (0..devices).map(|_| echo_handle()).collect();
+        Daemon::with_handles(cfg, handles).expect("daemon")
+    }
+
+    /// Drive one command through `handle` on a dedicated reply channel.
+    fn call(
+        d: &mut Daemon,
+        client: ClientId,
+        msg: ClientMsg,
+    ) -> Result<mpsc::Receiver<ServerMsg>> {
+        let (tx, rx) = mpsc::channel();
+        d.handle(Command {
+            client,
+            msg,
+            reply: tx.into(),
+        })?;
+        Ok(rx)
+    }
+
+    /// Satellite bugfix: a health deadline already in the past (a
+    /// quarantined lane whose heartbeat nothing can clear) used to make
+    /// `next_deadline()` return zero, turning `recv_timeout` into a
+    /// busy poll.  The clamp must pace every pure-timeout turn at
+    /// `MIN_LOOP_TICK` even while the deadline stays overdue.
+    #[test]
+    fn overdue_quarantined_lane_waits_are_clamped_to_the_tick() {
+        let health = HealthConfig {
+            enabled: true,
+            ..HealthConfig::default()
+        };
+        let mut d = test_daemon(2, health);
+        let past = match Instant::now().checked_sub(Duration::from_secs(60)) {
+            Some(t) => t,
+            // Clock too young to back-date (fresh VM); nothing to test.
+            None => return,
+        };
+        d.health.note_submitted(0, past);
+        d.pool.set_state(DeviceId(0), DeviceState::Quarantined);
+        assert!(
+            d.health.next_deadline().is_some(),
+            "the back-dated submission must leave an outstanding deadline"
+        );
+        // Simulate the select loop's pure-timeout turns: every computed
+        // wait must be at least the tick, across repeated health passes
+        // that never manage to clear the overdue lane.
+        for turn in 0..50 {
+            let wait = d.next_deadline();
+            assert!(
+                wait >= MIN_LOOP_TICK,
+                "turn {turn}: wait {wait:?} under MIN_LOOP_TICK \
+                 ({MIN_LOOP_TICK:?}) — the loop would hot-spin"
+            );
+            d.health_tick();
+        }
+    }
+
+    /// Satellite bugfix: after `Event::EngineLost`, a parked
+    /// `WaitFlush` must settle with the typed error (pre-fix it hung
+    /// forever), and later `STR`/`FLH`/`WaitFlush` must be rejected
+    /// instead of queueing work no executor will ever run.
+    #[test]
+    fn engine_lost_settles_parked_waiters_and_rejects_new_work() {
+        let mut d = test_daemon(1, HealthConfig::default());
+
+        // Register, stage, queue one job, take a flush ticket.
+        let rx = call(
+            &mut d,
+            0,
+            ClientMsg::Req {
+                name: "w0".into(),
+                tenant: String::new(),
+            },
+        )
+        .expect("register");
+        let id = match rx.try_recv().expect("Queued reply") {
+            ServerMsg::Queued { ticket } => ticket,
+            other => panic!("unexpected register reply: {other:?}"),
+        };
+        call(
+            &mut d,
+            id,
+            ClientMsg::Snd {
+                slot: 0,
+                tensor: TensorValue::F32(vec![4], vec![0.0; 4]),
+            },
+        )
+        .expect("stage");
+        call(
+            &mut d,
+            id,
+            ClientMsg::Str {
+                workload: "echo".into(),
+            },
+        )
+        .expect("queue");
+        let rx = call(&mut d, id, ClientMsg::Flh { wait: false })
+            .expect("flush ticket");
+        let epoch = match rx.try_recv().expect("FlushTicket reply") {
+            ServerMsg::FlushTicket { epoch, jobs } => {
+                assert_eq!(jobs, 1);
+                epoch
+            }
+            other => panic!("unexpected flush reply: {other:?}"),
+        };
+
+        // Park a waiter on that epoch.  The batch is queued but never
+        // started (this test drives `handle` directly, not the event
+        // loop), so the waiter cannot settle yet.
+        let waiter = call(&mut d, id, ClientMsg::WaitFlush { epoch })
+            .expect("park waiter");
+        assert!(
+            matches!(waiter.try_recv(), Err(mpsc::TryRecvError::Empty)),
+            "waiter must be parked before the engine is lost"
+        );
+
+        // The completion channel disconnects: every device worker gone.
+        let mut cmds_closed = false;
+        d.on_event(Event::EngineLost, &mut cmds_closed);
+
+        // Pre-fix: the parked waiter hung forever.  Post-fix: it
+        // settles immediately with the typed error.
+        match waiter.try_recv() {
+            Ok(ServerMsg::Err { msg }) => {
+                assert!(
+                    msg.contains("engine lost"),
+                    "waiter error should name the lost engine: {msg}"
+                );
+            }
+            other => panic!("parked waiter did not settle: {other:?}"),
+        }
+
+        // Pre-fix: a fresh FLH was accepted and wedged forever.
+        // Post-fix: submit/flush/wait all reject with the typed error.
+        for msg in [
+            ClientMsg::Str {
+                workload: "echo".into(),
+            },
+            ClientMsg::Flh { wait: true },
+            ClientMsg::Flh { wait: false },
+            ClientMsg::WaitFlush { epoch },
+        ] {
+            let err = call(&mut d, id, msg)
+                .expect_err("post-loss submissions must be rejected");
+            assert!(
+                err.to_string().contains("engine lost"),
+                "rejection should name the lost engine: {err}"
+            );
+        }
+
+        // And the flush scheduler must not start a new epoch off the
+        // still-set `flush_requested` latch.
+        d.maybe_start_flush();
+        assert!(d.inflight.is_empty());
+        assert_eq!(d.flush_seq, 0);
     }
 }

@@ -1,0 +1,845 @@
+//! Open-loop trace-driven load generator + SLO harness (`vgpu exp slo`).
+//!
+//! Every other sweep in this harness is a closed-form simulation;
+//! production traffic is bursty and *open-loop* — arrivals do not slow
+//! down because the node is slow, which is exactly the regime where
+//! multi-tenant latency degrades.  This driver replays a seeded arrival
+//! trace against the **real daemon** over the **real IPC surface** (mux
+//! reactor + unix socket), with tenant mixes drawn from the seed kernel
+//! suite and per-tenant SLO targets, and reports p50/p95/p99 flush
+//! latency, goodput, and SLO attainment per tenant.
+//!
+//! Three arrival processes, all deterministic under a seed:
+//!
+//! * `poisson` — memoryless arrivals at a constant mean rate.
+//! * `bursty`  — on-off modulated Poisson (square-wave duty cycle, 2x
+//!   the mean rate while on), the "thundering herd" shape.
+//! * `diurnal` — mean rate ramps linearly 0.5x → 1.5x over the run,
+//!   a compressed day curve.
+//!
+//! Latency is measured **from the scheduled arrival**, not from the
+//! moment the client thread got around to submitting — so queueing
+//! delay behind a saturated node is charged to the node, as an
+//! open-loop generator must.  Defaults come from [`LoadgenConfig`];
+//! deployments override them through the `[loadgen]` config section
+//! (see `config::file`), and `VGPU_SLO_CONFIG=<file>` points the
+//! `vgpu exp slo` sweep at such a file.
+//!
+//! The same samples feed `vgpu_slo_*` metric families registered in
+//! the daemon's own registry — the exposition endpoint and this report
+//! read identical numbers, never a parallel counter set.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::ExpOutput;
+use crate::api::VgpuClient;
+use crate::config::DeviceConfig;
+use crate::gvm::devices::{PlacementPolicy, PoolConfig};
+use crate::gvm::qos::QosConfig;
+use crate::gvm::{Command, Daemon, DaemonConfig, PipelineConfig};
+use crate::ipc::mux::{IpcConfig, MuxOptions, MuxServer};
+use crate::runtime::{ExecHandle, TensorValue};
+use crate::util::rng::SplitMix64;
+use crate::util::table::{f2, Table};
+use crate::workloads::Suite;
+use crate::{Error, Result};
+
+/// Devices in the loadgen node (two timed lanes, round-robin).
+const DEVICES: usize = 2;
+
+/// Mix-weighted mean service time the paper-scale profiles are scaled
+/// to, ms.  Relative kernel weights are preserved; absolute times are
+/// compressed so a sweep cell finishes in well under a second.
+const TARGET_MEAN_MS: f64 = 2.0;
+
+/// `vgpu_slo_flush_latency_ms` bucket bounds (ms) — same shape as the
+/// daemon's flush-epoch histogram so the two families line up on a
+/// dashboard.
+const SLO_LATENCY_BUCKETS_MS: [f64; 14] = [
+    0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0,
+    2500.0, 5000.0, 10000.0,
+];
+
+/// Bursty on-off phase length, ms (50% duty cycle: 2x rate while on).
+const BURST_PHASE_MS: f64 = 40.0;
+
+/// Arrival process shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrival {
+    /// Constant-rate memoryless arrivals.
+    Poisson,
+    /// On-off modulated Poisson (square wave, 2x rate while on).
+    Bursty,
+    /// Linear 0.5x → 1.5x rate ramp over the run.
+    Diurnal,
+}
+
+impl Arrival {
+    /// Parse a `[loadgen] arrival` value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_lowercase().as_str() {
+            "poisson" => Some(Self::Poisson),
+            "bursty" => Some(Self::Bursty),
+            "diurnal" => Some(Self::Diurnal),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (config value and table cell).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Poisson => "poisson",
+            Self::Bursty => "bursty",
+            Self::Diurnal => "diurnal",
+        }
+    }
+}
+
+/// The `[loadgen]` config section (see `config::file` for the file
+/// syntax and `ConfigFile::loadgen` for parsing).
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Arrival process shape.
+    pub arrival: Arrival,
+    /// Aggregate mean offered arrival rate, jobs/s (all tenants).
+    pub rate_hz: f64,
+    /// Trace length, ms.
+    pub duration_ms: u64,
+    /// Schedule seed — same seed, same trace, job for job.
+    pub seed: u64,
+    /// Concurrent client connections (split across tenants by share).
+    pub clients: usize,
+    /// Tenant-mix name (see [`mix`]): `uniform` | `finance`.
+    pub mix: String,
+    /// Per-tenant SLO overrides, ms (tenants not listed keep the
+    /// mix's default target).
+    pub slo_ms: Vec<(String, f64)>,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            arrival: Arrival::Poisson,
+            rate_hz: 200.0,
+            duration_ms: 400,
+            seed: 42,
+            clients: 16,
+            mix: "uniform".into(),
+            slo_ms: Vec::new(),
+        }
+    }
+}
+
+impl LoadgenConfig {
+    /// Reject configs that cannot drive a run.
+    pub fn validate(&self) -> Result<()> {
+        if !self.rate_hz.is_finite() || self.rate_hz <= 0.0 {
+            return Err(Error::Config(format!(
+                "[loadgen] rate = {} must be a positive rate (jobs/s)",
+                self.rate_hz
+            )));
+        }
+        if self.duration_ms == 0 {
+            return Err(Error::Config(
+                "[loadgen] duration_ms must be > 0".into(),
+            ));
+        }
+        if self.clients == 0 {
+            return Err(Error::Config(
+                "[loadgen] clients must be >= 1".into(),
+            ));
+        }
+        mix(&self.mix)?;
+        for (tenant, slo) in &self.slo_ms {
+            if !slo.is_finite() || *slo <= 0.0 {
+                return Err(Error::Config(format!(
+                    "[loadgen] slo_ms: {tenant}:{slo} must be > 0"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One tenant of a mix: who, what they run, how much of the offered
+/// load is theirs, and their latency target.
+#[derive(Debug, Clone)]
+pub struct TenantSlice {
+    /// Tenant id (rides the wire and the metric labels).
+    pub tenant: &'static str,
+    /// Seed-suite workload this tenant submits.
+    pub workload: &'static str,
+    /// Fraction of the aggregate arrival rate (mix shares sum to 1).
+    pub share: f64,
+    /// Default flush-latency SLO target, ms.
+    pub slo_ms: f64,
+}
+
+/// A named tenant mix over the seed kernel suite.
+pub fn mix(name: &str) -> Result<Vec<TenantSlice>> {
+    let slices = match name {
+        // Three NPB tenants at equal shares — the paper's SPMD shape.
+        "uniform" => vec![
+            TenantSlice {
+                tenant: "npb-cg",
+                workload: "cg",
+                share: 1.0 / 3.0,
+                slo_ms: 25.0,
+            },
+            TenantSlice {
+                tenant: "npb-mg",
+                workload: "mg",
+                share: 1.0 / 3.0,
+                slo_ms: 25.0,
+            },
+            TenantSlice {
+                tenant: "npb-ep",
+                workload: "ep_m24",
+                share: 1.0 / 3.0,
+                slo_ms: 25.0,
+            },
+        ],
+        // A latency-sensitive pricing tenant dominating the load, with
+        // two heavier batch tenants underneath (the multi-tenant
+        // financial-risk shape from the related work).
+        "finance" => vec![
+            TenantSlice {
+                tenant: "risk",
+                workload: "black_scholes",
+                share: 0.6,
+                slo_ms: 15.0,
+            },
+            TenantSlice {
+                tenant: "md",
+                workload: "electrostatics",
+                share: 0.2,
+                slo_ms: 40.0,
+            },
+            TenantSlice {
+                tenant: "hpc",
+                workload: "cg",
+                share: 0.2,
+                slo_ms: 40.0,
+            },
+        ],
+        other => {
+            return Err(Error::Config(format!(
+                "[loadgen] mix = {other:?} (want uniform|finance)"
+            )))
+        }
+    };
+    Ok(slices)
+}
+
+/// Apply `[loadgen] slo_ms` overrides onto a mix's defaults.
+fn apply_slo_overrides(
+    slices: &mut [TenantSlice],
+    overrides: &[(String, f64)],
+) -> Result<()> {
+    for (tenant, slo) in overrides {
+        let Some(s) =
+            slices.iter_mut().find(|s| s.tenant == tenant.as_str())
+        else {
+            return Err(Error::Config(format!(
+                "[loadgen] slo_ms names unknown tenant {tenant:?} \
+                 for this mix"
+            )));
+        };
+        s.slo_ms = *slo;
+    }
+    Ok(())
+}
+
+/// Per-workload timed-mock service table: paper-scale stage totals
+/// scaled so the mix-weighted mean is [`TARGET_MEAN_MS`].  Relative
+/// kernel heaviness (ES ≫ BS, MG > CG) survives the compression.
+fn service_table(slices: &[TenantSlice]) -> Vec<(String, f64)> {
+    let suite = Suite::paper_defaults();
+    let paper_mean: f64 = slices
+        .iter()
+        .map(|s| {
+            s.share
+                * suite
+                    .get(s.workload)
+                    .expect("mix workload in the seed suite")
+                    .total_ms()
+        })
+        .sum();
+    let scale = TARGET_MEAN_MS / paper_mean;
+    slices
+        .iter()
+        .map(|s| {
+            let ms = suite
+                .get(s.workload)
+                .expect("mix workload in the seed suite")
+                .total_ms()
+                * scale;
+            (s.workload.to_string(), ms)
+        })
+        .collect()
+}
+
+/// A device handle that sleeps the workload's scaled service time and
+/// echoes its inputs — serial per device lane, exactly like a real
+/// device stream, so contention and queueing are real.
+fn timed_handle(services: &[(String, f64)]) -> ExecHandle {
+    let names: Vec<String> =
+        services.iter().map(|(n, _)| n.clone()).collect();
+    let table: Vec<(String, f64)> = services.to_vec();
+    ExecHandle::mock(names, move |name, inputs| {
+        if let Some((_, ms)) = table.iter().find(|(n, _)| n == name) {
+            std::thread::sleep(Duration::from_micros((ms * 1e3) as u64));
+        }
+        Ok(inputs)
+    })
+}
+
+/// One scheduled arrival of the trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrivalEvent {
+    /// Offset from trace start, ms.
+    pub at_ms: f64,
+    /// Which mix slice (tenant) the job belongs to.
+    pub slice: usize,
+}
+
+/// Generate the seeded arrival trace: thinning against a 2x-rate
+/// Poisson envelope, so every process shape shares one deterministic
+/// code path (and one seed → one trace, job for job).
+pub fn schedule(
+    cfg: &LoadgenConfig,
+    slices: &[TenantSlice],
+) -> Vec<ArrivalEvent> {
+    let mut rng = SplitMix64::new(cfg.seed);
+    let dur = cfg.duration_ms as f64;
+    let peak = cfg.rate_hz * 2.0;
+    let mut events = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        // Exponential inter-arrival at the envelope rate, ms.
+        let u = rng.next_f64();
+        t += -(1.0 - u).ln() * 1000.0 / peak;
+        if t >= dur {
+            break;
+        }
+        // Thin to the instantaneous rate of the requested process.
+        let rate = match cfg.arrival {
+            Arrival::Poisson => cfg.rate_hz,
+            Arrival::Bursty => {
+                let phase = (t / BURST_PHASE_MS) as u64;
+                if phase % 2 == 0 {
+                    cfg.rate_hz * 2.0
+                } else {
+                    0.0
+                }
+            }
+            Arrival::Diurnal => cfg.rate_hz * (0.5 + t / dur),
+        };
+        if !rng.chance(rate / peak) {
+            continue;
+        }
+        // Tenant by cumulative share.
+        let x = rng.next_f64();
+        let mut acc = 0.0;
+        let mut slice = slices.len() - 1;
+        for (i, s) in slices.iter().enumerate() {
+            acc += s.share;
+            if x < acc {
+                slice = i;
+                break;
+            }
+        }
+        events.push(ArrivalEvent { at_ms: t, slice });
+    }
+    events
+}
+
+/// Per-tenant results of one run.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    /// Tenant id.
+    pub tenant: String,
+    /// Jobs the trace scheduled for this tenant.
+    pub jobs: usize,
+    /// Jobs that settled OK (ticket redeemed, no error).
+    pub ok: usize,
+    /// Flush-latency percentiles from scheduled arrival, ms.
+    pub p50_ms: f64,
+    /// 95th percentile, ms.
+    pub p95_ms: f64,
+    /// 99th percentile, ms.
+    pub p99_ms: f64,
+    /// Settled-OK jobs per second of trace time.
+    pub goodput_jps: f64,
+    /// The tenant's SLO target, ms.
+    pub slo_ms: f64,
+    /// Fraction of jobs that settled OK within the SLO, [0, 1].
+    pub attainment: f64,
+}
+
+/// One full loadgen run's results.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    /// Per-tenant breakdowns, mix order.
+    pub tenants: Vec<TenantReport>,
+    /// All scheduled jobs across tenants.
+    pub total_jobs: usize,
+    /// p99 over every sample of the run (all tenants pooled), ms.
+    pub all_p99_ms: f64,
+    /// Trace wall time, ms (≈ duration + tail drain).
+    pub wall_ms: f64,
+}
+
+/// Nearest-rank percentile over an unsorted sample set.
+fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let rank = ((p / 100.0) * samples.len() as f64).ceil() as usize;
+    samples[rank.clamp(1, samples.len()) - 1]
+}
+
+/// Distinguishes concurrently-running cells' sockets (tests run in
+/// parallel under one pid).
+static SOCKET_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// Drive one seeded open-loop trace against a fresh daemon at the
+/// given flush-pipeline depth; returns the per-tenant SLO report.
+pub fn run_loadgen(
+    cfg: &LoadgenConfig,
+    depth: usize,
+) -> Result<LoadgenReport> {
+    cfg.validate()?;
+    let mut slices = mix(&cfg.mix)?;
+    apply_slo_overrides(&mut slices, &cfg.slo_ms)?;
+    let services = service_table(&slices);
+
+    // Fresh daemon: timed devices, depth-limited flush pipeline.
+    let dcfg = DaemonConfig {
+        barrier: Some(1),
+        max_clients: 4096,
+        pipeline: PipelineConfig {
+            max_in_flight_flushes: depth.max(1),
+        },
+        pool: PoolConfig::homogeneous(
+            DEVICES,
+            DeviceConfig::tesla_c2070(),
+            PlacementPolicy::RoundRobin,
+        ),
+        ..DaemonConfig::default()
+    };
+    let handles =
+        (0..DEVICES).map(|_| timed_handle(&services)).collect();
+    let daemon = Daemon::with_handles(dcfg, handles)?;
+    let registry = daemon.registry();
+    let (tx, rx) = mpsc::channel::<Command>();
+    std::thread::spawn(move || daemon.run(rx));
+
+    let socket = std::env::temp_dir().join(format!(
+        "vgpu-slo-{}-{}.sock",
+        std::process::id(),
+        SOCKET_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _server = MuxServer::spawn(
+        &socket,
+        tx,
+        MuxOptions::from_config(
+            &IpcConfig::default(),
+            QosConfig::default(),
+            Some(registry.clone()),
+        ),
+    )?;
+    for _ in 0..200 {
+        if socket.exists() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Partition clients across tenants by share (≥ 1 each), then the
+    // trace round-robin across each tenant's clients — every client
+    // replays a fixed, pre-assigned sub-trace (open loop: nobody
+    // re-plans because the node is slow).
+    let mut lanes: Vec<Vec<(usize, Vec<f64>)>> = Vec::new();
+    for (i, s) in slices.iter().enumerate() {
+        let n = ((cfg.clients as f64 * s.share).round() as usize).max(1);
+        lanes.push((0..n).map(|_| (i, Vec::new())).collect());
+    }
+    let events = schedule(cfg, &slices);
+    let mut rr = vec![0usize; slices.len()];
+    for ev in &events {
+        let lane = &mut lanes[ev.slice];
+        let k = rr[ev.slice] % lane.len();
+        lane[k].1.push(ev.at_ms);
+        rr[ev.slice] += 1;
+    }
+
+    // 30 ms connect lead so pacing starts from a connected fleet.
+    let start = Instant::now() + Duration::from_millis(30);
+    let sw = Instant::now();
+    let mut threads = Vec::new();
+    for (slice_lanes, s) in lanes.into_iter().zip(&slices) {
+        for (li, (slice_idx, arrivals)) in
+            slice_lanes.into_iter().enumerate()
+        {
+            let path = socket.clone();
+            let tenant = s.tenant.to_string();
+            let workload = s.workload;
+            let name = format!("slo-{}-{li}", s.tenant);
+            threads.push(std::thread::spawn(
+                move || -> Result<(usize, Vec<(f64, bool)>)> {
+                    let mut c = VgpuClient::connect_unix_as(
+                        &path, &name, &tenant,
+                    )?;
+                    let t = TensorValue::F32(vec![256], vec![1.0; 256]);
+                    let mut out = Vec::with_capacity(arrivals.len());
+                    for at_ms in arrivals {
+                        let due = start
+                            + Duration::from_micros((at_ms * 1e3) as u64);
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        let r = (|| -> Result<()> {
+                            c.snd(0, t.clone())?;
+                            c.str_(workload)?;
+                            let ticket = c.flush_async()?;
+                            c.wait_flush(ticket)?;
+                            Ok(())
+                        })();
+                        // Open-loop latency: charged from the
+                        // *scheduled* arrival, queueing included.
+                        let lat = due.elapsed().as_secs_f64() * 1e3;
+                        out.push((lat, r.is_ok()));
+                    }
+                    let _ = c.rls();
+                    Ok((slice_idx, out))
+                },
+            ));
+        }
+    }
+
+    // Collect, feed the vgpu_slo_* families, fold the report.
+    let mut per_slice: Vec<Vec<(f64, bool)>> =
+        vec![Vec::new(); slices.len()];
+    for th in threads {
+        let (slice_idx, samples) = th
+            .join()
+            .map_err(|_| Error::Ipc("loadgen client panicked".into()))??;
+        per_slice[slice_idx].extend(samples);
+    }
+    let wall_ms = sw.elapsed().as_secs_f64() * 1e3;
+    let _ = std::fs::remove_file(&socket);
+
+    let dur_s = cfg.duration_ms as f64 / 1e3;
+    let mut tenants = Vec::new();
+    let mut all: Vec<f64> = Vec::new();
+    for (s, samples) in slices.iter().zip(&per_slice) {
+        let hist = registry.histogram_with(
+            "vgpu_slo_flush_latency_ms",
+            "Open-loop flush latency from scheduled arrival (loadgen)",
+            &SLO_LATENCY_BUCKETS_MS,
+            &[("tenant", s.tenant)],
+        );
+        let jobs_ok = registry.counter_with(
+            "vgpu_slo_jobs_total",
+            "Loadgen jobs by settle outcome",
+            &[("tenant", s.tenant), ("outcome", "ok")],
+        );
+        let jobs_err = registry.counter_with(
+            "vgpu_slo_jobs_total",
+            "Loadgen jobs by settle outcome",
+            &[("tenant", s.tenant), ("outcome", "error")],
+        );
+        let within = registry.counter_with(
+            "vgpu_slo_within_slo_total",
+            "Loadgen jobs settled OK within the tenant's SLO",
+            &[("tenant", s.tenant)],
+        );
+        let mut lats = Vec::with_capacity(samples.len());
+        let (mut ok, mut hit) = (0usize, 0usize);
+        for &(lat, is_ok) in samples {
+            hist.observe(lat);
+            if is_ok {
+                ok += 1;
+                jobs_ok.inc();
+                if lat <= s.slo_ms {
+                    hit += 1;
+                    within.inc();
+                }
+            } else {
+                jobs_err.inc();
+            }
+            lats.push(lat);
+        }
+        all.extend_from_slice(&lats);
+        let jobs = samples.len();
+        tenants.push(TenantReport {
+            tenant: s.tenant.to_string(),
+            jobs,
+            ok,
+            p50_ms: percentile(&mut lats, 50.0),
+            p95_ms: percentile(&mut lats, 95.0),
+            p99_ms: percentile(&mut lats, 99.0),
+            goodput_jps: ok as f64 / dur_s,
+            slo_ms: s.slo_ms,
+            attainment: if jobs == 0 {
+                1.0
+            } else {
+                hit as f64 / jobs as f64
+            },
+        });
+    }
+    Ok(LoadgenReport {
+        total_jobs: events.len(),
+        all_p99_ms: percentile(&mut all, 99.0),
+        tenants,
+        wall_ms,
+    })
+}
+
+/// Offered-load fractions swept by `vgpu exp slo`.
+const LOAD_SWEEP: [f64; 2] = [0.5, 0.8];
+
+/// Flush-pipeline depths swept (1 = pre-pipeline serialized daemon).
+const DEPTH_SWEEP: [usize; 2] = [1, 2];
+
+/// Tenant mixes swept.
+const MIX_SWEEP: [&str; 2] = ["uniform", "finance"];
+
+/// Node service capacity under the scaled mixes, jobs/s: `DEVICES`
+/// serial lanes at [`TARGET_MEAN_MS`] mean service.
+fn capacity_jps() -> f64 {
+    DEVICES as f64 * 1000.0 / TARGET_MEAN_MS
+}
+
+/// The `slo` experiment: tenant mix × offered load × pipeline depth
+/// under seeded Poisson arrivals against the real daemon + mux socket.
+pub fn slo_sweep() -> Result<ExpOutput> {
+    // A deployment config can reshape the whole sweep: seed, duration,
+    // client fleet, arrival shape, SLO overrides.
+    let base = match std::env::var("VGPU_SLO_CONFIG") {
+        Ok(path) => {
+            crate::config::file::ConfigFile::load(&path)?.loadgen()?
+        }
+        Err(_) => LoadgenConfig::default(),
+    };
+    let mut table = Table::new(&[
+        "mix",
+        "arrival",
+        "load",
+        "depth",
+        "tenant",
+        "jobs",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "goodput_jps",
+        "slo_ms",
+        "attain_pct",
+    ]);
+    let mut notes = Vec::new();
+
+    // p99 at the highest offered load, keyed by (mix, depth) — the
+    // acceptance comparison below reads these.
+    let mut hot_p99: Vec<(String, usize, f64)> = Vec::new();
+    for mix_name in MIX_SWEEP {
+        for load in LOAD_SWEEP {
+            for depth in DEPTH_SWEEP {
+                let cfg = LoadgenConfig {
+                    rate_hz: load * capacity_jps(),
+                    mix: mix_name.into(),
+                    ..base.clone()
+                };
+                let report = run_loadgen(&cfg, depth)?;
+                for t in &report.tenants {
+                    table.row(vec![
+                        mix_name.to_string(),
+                        cfg.arrival.name().to_string(),
+                        f2(load),
+                        depth.to_string(),
+                        t.tenant.clone(),
+                        t.jobs.to_string(),
+                        f2(t.p50_ms),
+                        f2(t.p95_ms),
+                        f2(t.p99_ms),
+                        f2(t.goodput_jps),
+                        f2(t.slo_ms),
+                        f2(t.attainment * 100.0),
+                    ]);
+                }
+                if (load - 0.8).abs() < 1e-9 {
+                    hot_p99.push((
+                        mix_name.to_string(),
+                        depth,
+                        report.all_p99_ms,
+                    ));
+                }
+            }
+        }
+    }
+
+    // Acceptance: at 0.8 offered load, depth 2 must strictly beat
+    // depth 1 on pooled p99 for every mix.  CI greps the exact phrase
+    // "pipeline depth 2 improves p99" — a regression changes the text.
+    let mut pairs = Vec::new();
+    let mut holds = true;
+    for mix_name in MIX_SWEEP {
+        let d1 = hot_p99
+            .iter()
+            .find(|(m, d, _)| m == mix_name && *d == 1)
+            .map(|(_, _, p)| *p)
+            .unwrap_or(f64::NAN);
+        let d2 = hot_p99
+            .iter()
+            .find(|(m, d, _)| m == mix_name && *d == 2)
+            .map(|(_, _, p)| *p)
+            .unwrap_or(f64::NAN);
+        holds &= d2 < d1;
+        pairs.push(format!("{mix_name}: {} -> {} ms", f2(d1), f2(d2)));
+    }
+    if holds {
+        notes.push(format!(
+            "acceptance: pipeline depth 2 improves p99 over depth 1 at \
+             0.8 offered load ({})",
+            pairs.join("; ")
+        ));
+    } else {
+        notes.push(format!(
+            "REGRESSION: pipeline depth 2 did NOT improve p99 over \
+             depth 1 at 0.8 offered load ({})",
+            pairs.join("; ")
+        ));
+    }
+    notes.push(format!(
+        "open-loop trace replay against the real daemon over the mux \
+         socket: latency is charged from the *scheduled* arrival \
+         (queueing included), seed {} reproduces the trace job for \
+         job.  Service times are the paper-scale stage totals \
+         compressed to a {TARGET_MEAN_MS} ms mix mean across {DEVICES} \
+         serial device lanes; offered load is the fraction of that \
+         capacity.  [loadgen] in a config file named by \
+         VGPU_SLO_CONFIG reshapes the sweep; cargo bench --bench \
+         loadgen runs longer traces and records BENCH_loadgen.json",
+        base.seed
+    ));
+    Ok(ExpOutput {
+        id: "slo".into(),
+        title: "Open-loop SLO harness: tenant mix x offered load x \
+                pipeline depth, p50/p95/p99 + goodput + attainment"
+            .into(),
+        table,
+        notes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_are_seeded_and_shaped() {
+        let slices = mix("uniform").unwrap();
+        let cfg = LoadgenConfig {
+            rate_hz: 500.0,
+            duration_ms: 1000,
+            seed: 7,
+            ..LoadgenConfig::default()
+        };
+        let a = schedule(&cfg, &slices);
+        let b = schedule(&cfg, &slices);
+        assert_eq!(a, b, "same seed must replay the same trace");
+        // Mean rate within a generous tolerance of the request.
+        assert!(
+            (a.len() as f64) > 250.0 && (a.len() as f64) < 1000.0,
+            "poisson trace count {} wildly off 500/s x 1s",
+            a.len()
+        );
+        for shape in [Arrival::Bursty, Arrival::Diurnal] {
+            let cfg = LoadgenConfig {
+                arrival: shape,
+                ..cfg.clone()
+            };
+            let ev = schedule(&cfg, &slices);
+            assert!(!ev.is_empty());
+            assert!(ev
+                .iter()
+                .all(|e| e.at_ms < 1000.0 && e.slice < slices.len()));
+        }
+        // A different seed is a different trace.
+        let cfg2 = LoadgenConfig { seed: 8, ..cfg };
+        assert_ne!(a, schedule(&cfg2, &slices));
+    }
+
+    #[test]
+    fn bursty_off_phases_are_silent() {
+        let slices = mix("uniform").unwrap();
+        let cfg = LoadgenConfig {
+            arrival: Arrival::Bursty,
+            rate_hz: 400.0,
+            duration_ms: 400,
+            ..LoadgenConfig::default()
+        };
+        for ev in schedule(&cfg, &slices) {
+            let phase = (ev.at_ms / BURST_PHASE_MS) as u64;
+            assert_eq!(
+                phase % 2,
+                0,
+                "arrival at {} ms falls in an off phase",
+                ev.at_ms
+            );
+        }
+    }
+
+    #[test]
+    fn service_tables_keep_relative_weights() {
+        let slices = mix("finance").unwrap();
+        let t = service_table(&slices);
+        let get = |w: &str| {
+            t.iter().find(|(n, _)| n == w).map(|(_, ms)| *ms).unwrap()
+        };
+        // ES is the heavy batch kernel; BS the light pricing kernel.
+        assert!(get("electrostatics") > get("black_scholes") * 2.0);
+        let mean: f64 = slices
+            .iter()
+            .map(|s| s.share * get(s.workload))
+            .sum();
+        assert!((mean - TARGET_MEAN_MS).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unknown_mix_and_bad_overrides_are_rejected() {
+        assert!(mix("nope").is_err());
+        let cfg = LoadgenConfig {
+            slo_ms: vec![("ghost".into(), 5.0)],
+            ..LoadgenConfig::default()
+        };
+        let mut slices = mix(&cfg.mix).unwrap();
+        assert!(apply_slo_overrides(&mut slices, &cfg.slo_ms).is_err());
+    }
+
+    #[test]
+    fn loadgen_smoke_reports_every_tenant_and_every_job() {
+        let cfg = LoadgenConfig {
+            rate_hz: 150.0,
+            duration_ms: 150,
+            clients: 6,
+            ..LoadgenConfig::default()
+        };
+        let report = run_loadgen(&cfg, 2).expect("loadgen run");
+        assert_eq!(report.tenants.len(), 3);
+        let sampled: usize =
+            report.tenants.iter().map(|t| t.jobs).sum();
+        // Conservation: every scheduled job produced exactly one
+        // settled sample (ok or typed error) — nothing hung.
+        assert_eq!(sampled, report.total_jobs);
+        for t in &report.tenants {
+            assert!(t.ok <= t.jobs);
+            assert!((0.0..=1.0).contains(&t.attainment));
+            assert!(t.p50_ms <= t.p99_ms);
+        }
+    }
+}

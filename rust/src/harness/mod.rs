@@ -33,6 +33,7 @@
 //! | chaos   | fault plane: fault rate x remediation, completed vs lost |
 //! | fanin   | client fan-in: mux vs thread-per-conn, shm vs inline |
 //! | staging | staging plane: dedup on/off, logical vs physical bytes |
+//! | slo     | open-loop loadgen: mix x load x depth, p50/p95/p99 + SLOs |
 //! | ext-multigpu | extension: multi-GPU node scaling |
 //! | ext-cluster | extension: cluster weak scaling (Fig. 11) |
 //! | ext-fig18-socket | extension: Fig. 18 over the socket transport |
@@ -42,6 +43,7 @@ pub mod chaos;
 pub mod devices;
 pub mod fanin;
 pub mod figures;
+pub mod loadgen;
 pub mod pipeline;
 pub mod qos;
 pub mod spill;
@@ -115,6 +117,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "chaos",
     "fanin",
     "staging",
+    "slo",
     "ext-multigpu",
     "ext-cluster",
     "ext-fig18-socket",
@@ -150,6 +153,7 @@ pub fn run(id: &str) -> Result<ExpOutput> {
         "chaos" => chaos::chaos_sweep(),
         "fanin" => fanin::fanin_sweep(),
         "staging" => staging::staging_sweep(),
+        "slo" => loadgen::slo_sweep(),
         "ext-multigpu" => ablations::multi_gpu_scaling(),
         "ext-cluster" => ablations::cluster_scaling(),
         "ext-fig18-socket" => figures::overhead_socket_figure(),

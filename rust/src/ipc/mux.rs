@@ -40,6 +40,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::gvm::daemon::{Command, ReplySink};
 use crate::gvm::qos::{QosConfig, DEFAULT_TENANT};
@@ -550,11 +551,7 @@ fn mux_loop(
                                     ),
                                 },
                             );
-                            // Best-effort typed rejection: the frame is
-                            // tiny, so a fresh socket buffer virtually
-                            // always takes it whole.
-                            let _ = stream.set_nonblocking(true);
-                            let _ = (&stream).write(&frame);
+                            send_reject(&stream, &frame);
                             continue;
                         }
                         if stream.set_nonblocking(true).is_err() {
@@ -859,6 +856,47 @@ fn parse_frames(conn: &mut Conn) {
     }
 }
 
+/// How long the reactor will spend draining a pre-admission reject
+/// frame onto a socket it is about to drop.  The frame is a few dozen
+/// bytes, so one writable edge is almost always enough — the deadline
+/// only bounds a peer whose receive path has genuinely stalled.
+const REJECT_DRAIN: Duration = Duration::from_millis(100);
+
+/// Deliver a typed rejection frame on a connection that was never
+/// admitted, then half-close it.  A single best-effort `write` is not
+/// enough: under a full accept backlog the fresh socket's buffer can
+/// take a partial frame, and the client then sees a frame-decode error
+/// instead of the typed "connection limit reached".  Loop until the
+/// whole frame is out (waiting on writability up to [`REJECT_DRAIN`]),
+/// and `shutdown(Write)` so the peer reads the complete frame followed
+/// by a clean EOF rather than a reset racing the payload.
+fn send_reject(stream: &UnixStream, frame: &[u8]) {
+    let _ = stream.set_nonblocking(true);
+    let deadline = Instant::now() + REJECT_DRAIN;
+    let mut off = 0;
+    while off < frame.len() {
+        match (&stream).write(&frame[off..]) {
+            Ok(0) => break,
+            Ok(n) => off += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                let mut fds = [PollFd::new(stream.as_raw_fd(), POLLOUT)];
+                if poll_fds(&mut fds, (left.as_millis() as i32).max(1))
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+}
+
 /// Write as much pending output as the socket will take.  A fully
 /// flushed `closing` connection graduates to `dead`.
 fn flush_conn(conn: &mut Conn) {
@@ -960,6 +998,65 @@ mod tests {
         match ServerMsg::decode(payload).unwrap() {
             ServerMsg::Err { msg } => {
                 assert!(msg.contains("decode error"), "{msg}")
+            }
+            other => panic!("expected Err, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reject_frame_survives_a_full_socket_buffer() {
+        // Regression: the accept-path rejection used one best-effort
+        // `write`; with the socket buffer already full that delivered a
+        // truncated (or empty) frame.  `send_reject` must drain the
+        // whole frame even when the first write cannot take a byte.
+        let (a, b) = UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        let junk = [0u8; 4096];
+        let mut filled = 0usize;
+        loop {
+            match (&a).write(&junk) {
+                Ok(n) => filled += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    break
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => panic!("filling socket: {e}"),
+            }
+        }
+        // Slow reader: drains the junk plus whatever follows until EOF.
+        let reader = std::thread::spawn(move || {
+            let mut all = Vec::new();
+            let mut buf = [0u8; 4096];
+            loop {
+                match (&b).read(&mut buf) {
+                    Ok(0) => return all,
+                    Ok(n) => all.extend_from_slice(&buf[..n]),
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => panic!("reading: {e}"),
+                }
+            }
+        });
+        let mut frame = Vec::new();
+        push_frame(
+            &mut frame,
+            &ServerMsg::Err {
+                msg: "connection limit 4 reached".into(),
+            },
+        );
+        send_reject(&a, &frame);
+        let all = reader.join().unwrap();
+        let tail = &all[filled..];
+        assert_eq!(
+            tail.len(),
+            frame.len(),
+            "reject frame truncated: {} of {} bytes delivered",
+            tail.len(),
+            frame.len()
+        );
+        match ServerMsg::decode(&tail[4..]).unwrap() {
+            ServerMsg::Err { msg } => {
+                assert!(msg.contains("connection limit"), "{msg}")
             }
             other => panic!("expected Err, got {other:?}"),
         }

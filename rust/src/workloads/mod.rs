@@ -56,6 +56,14 @@ impl Workload {
     pub fn derived_class(&self) -> KernelClass {
         classify(self.stages)
     }
+
+    /// Total paper-scale service time for one instance, ms
+    /// (`T_data_in + T_comp + T_data_out`).  The load generator's trace
+    /// replay scales these totals down to a common mean so tenant mixes
+    /// keep the paper's *relative* kernel weights at smoke-test speed.
+    pub fn total_ms(&self) -> f64 {
+        self.stages.t_in + self.stages.t_comp + self.stages.t_out
+    }
 }
 
 /// PCIe 2.0 x16 pinned-memory bandwidth, bytes per ms (~6 GB/s).
@@ -342,6 +350,19 @@ mod tests {
     fn fig24_set_is_seven() {
         let s = Suite::paper_defaults();
         assert_eq!(s.fig24_set().len(), 7);
+    }
+
+    #[test]
+    fn total_ms_sums_the_stage_profile() {
+        let s = Suite::paper_defaults();
+        for w in s.all() {
+            let expect = w.stages.t_in + w.stages.t_comp + w.stages.t_out;
+            assert!(
+                (w.total_ms() - expect).abs() < 1e-9 && w.total_ms() > 0.0,
+                "{}: total_ms must sum the stage profile",
+                w.name
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,332 @@
+//! Open-loop churn integration suite driven by the loadgen trace
+//! engine: 32 clients under bursty seeded arrivals with randomized
+//! mid-epoch disconnects, asserting conservation (no leaked device or
+//! spill bytes), zero leaked tenant connection slots, and that every
+//! issued flush ticket settles; plus the typed over-limit reject under
+//! a full accept backlog.
+
+use std::os::unix::net::UnixStream;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use vgpu::api::VgpuClient;
+use vgpu::config::DeviceConfig;
+use vgpu::gvm::devices::{PlacementPolicy, PoolConfig};
+use vgpu::gvm::qos::QosConfig;
+use vgpu::gvm::{Command, Daemon, DaemonConfig, PipelineConfig};
+use vgpu::harness::loadgen::{mix, schedule, Arrival, LoadgenConfig};
+use vgpu::ipc::{ClientMsg, Framed, MuxOptions, MuxServer, ServerMsg};
+use vgpu::metrics::Registry;
+use vgpu::runtime::{ExecHandle, TensorValue};
+
+/// Churn fleet size (and the tenant's connection cap — the post-churn
+/// reconnect proves every slot came back).
+const FLEET: usize = 32;
+
+/// An executor that holds each job ~1 ms, so "mid-epoch" is a real
+/// window for a disconnect to land in.
+fn slow_echo_handle() -> ExecHandle {
+    ExecHandle::mock(vec!["echo".into()], |_, inputs| {
+        std::thread::sleep(Duration::from_millis(1));
+        Ok(inputs)
+    })
+}
+
+/// Daemon under test: two ~1 ms lanes, depth-2 flush pipeline, and a
+/// per-tenant connection cap exactly at the fleet size.
+fn spawn_daemon() -> (mpsc::Sender<Command>, Arc<Registry>, QosConfig) {
+    let cfg = DaemonConfig {
+        barrier: Some(1),
+        max_clients: 256,
+        pipeline: PipelineConfig {
+            max_in_flight_flushes: 2,
+        },
+        pool: PoolConfig::homogeneous(
+            2,
+            DeviceConfig::tesla_c2070(),
+            PlacementPolicy::RoundRobin,
+        ),
+        ..DaemonConfig::default()
+    };
+    let daemon =
+        Daemon::with_handles(cfg, vec![slow_echo_handle(), slow_echo_handle()])
+            .expect("daemon");
+    let registry = daemon.registry();
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || daemon.run(rx));
+    let mut qos = QosConfig::default();
+    qos.set_conn_limit("churn", FLEET as u32).unwrap();
+    (tx, registry, qos)
+}
+
+fn sock_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir()
+        .join(format!("vgpu-test-slo-{tag}-{}.sock", std::process::id()))
+}
+
+fn wait_for(path: &std::path::Path) {
+    for _ in 0..200 {
+        if path.exists() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("socket {} never appeared", path.display());
+}
+
+fn t(val: f32) -> TensorValue {
+    TensorValue::F32(vec![64], vec![val; 64])
+}
+
+/// Tiny deterministic LCG so "randomized" disconnects replay the same
+/// way every run.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+}
+
+#[test]
+fn bursty_churn_with_mid_epoch_disconnects_conserves_and_settles() {
+    let (tx, registry, qos) = spawn_daemon();
+    let socket = sock_path("churn");
+    let _srv = MuxServer::spawn(
+        &socket,
+        tx,
+        MuxOptions::from_config(
+            &Default::default(),
+            qos,
+            Some(registry.clone()),
+        ),
+    )
+    .unwrap();
+    wait_for(&socket);
+
+    // A seeded bursty trace from the loadgen engine, fanned round-robin
+    // across the fleet: each worker replays a fixed sub-trace of
+    // (arrival offset, suite workload) pairs.
+    let lcfg = LoadgenConfig {
+        arrival: Arrival::Bursty,
+        rate_hz: 600.0,
+        duration_ms: 300,
+        seed: 11,
+        clients: FLEET,
+        ..LoadgenConfig::default()
+    };
+    let slices = mix(&lcfg.mix).unwrap();
+    let events = schedule(&lcfg, &slices);
+    assert!(events.len() > FLEET, "trace too thin to exercise churn");
+    let mut per_worker: Vec<Vec<(f64, &'static str)>> =
+        (0..FLEET).map(|_| Vec::new()).collect();
+    for (i, ev) in events.iter().enumerate() {
+        per_worker[i % FLEET].push((ev.at_ms, slices[ev.slice].workload));
+    }
+
+    let start = Instant::now() + Duration::from_millis(50);
+    let workers: Vec<_> = per_worker
+        .into_iter()
+        .enumerate()
+        .map(|(i, trace)| {
+            let socket = socket.clone();
+            std::thread::spawn(move || {
+                if i % 2 == 0 {
+                    // Survivor: full API client.  Every flush ticket it
+                    // takes must settle — wait_flush returning (Ok or
+                    // typed Err, never a hang) IS the assertion; the
+                    // join below would wedge otherwise.
+                    let mut c = VgpuClient::connect_unix_as(
+                        &socket,
+                        &format!("churn-{i}"),
+                        "churn",
+                    )
+                    .unwrap();
+                    for (at_ms, wl) in trace {
+                        let due = start
+                            + Duration::from_micros((at_ms * 1e3) as u64);
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        c.snd(0, t(i as f32)).unwrap();
+                        c.str_(wl).unwrap();
+                        let ticket = c.flush_async().unwrap();
+                        c.wait_flush(ticket).unwrap();
+                    }
+                    c.rls().unwrap();
+                } else {
+                    // Churner: raw framed stream, dropped abruptly (no
+                    // RLS) at a seeded point mid-trace — right after an
+                    // STR, so its job is queued or mid-epoch when the
+                    // socket dies.
+                    let mut rng = Lcg(0xC0FFEE ^ i as u64);
+                    let stream = UnixStream::connect(&socket).unwrap();
+                    let mut f = Framed::new(stream);
+                    let call =
+                        |f: &mut Framed<UnixStream>, msg: &ClientMsg| {
+                            f.send(&msg.encode()).unwrap();
+                            ServerMsg::decode(&f.recv().unwrap().unwrap())
+                                .unwrap()
+                        };
+                    let reply = call(
+                        &mut f,
+                        &ClientMsg::Req {
+                            name: format!("churn-{i}"),
+                            tenant: "churn".into(),
+                        },
+                    );
+                    assert!(matches!(reply, ServerMsg::Ack), "{reply:?}");
+                    let drop_at = 1 + (rng.next() as usize % trace.len());
+                    for (k, (at_ms, wl)) in trace.into_iter().enumerate() {
+                        let due = start
+                            + Duration::from_micros((at_ms * 1e3) as u64);
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        call(
+                            &mut f,
+                            &ClientMsg::Snd {
+                                slot: 0,
+                                tensor: t(i as f32),
+                            },
+                        );
+                        let queued = call(
+                            &mut f,
+                            &ClientMsg::Str {
+                                workload: wl.to_string(),
+                            },
+                        );
+                        assert!(
+                            matches!(queued, ServerMsg::Queued { .. }),
+                            "{queued:?}"
+                        );
+                        call(&mut f, &ClientMsg::Flh { wait: false });
+                        if k + 1 >= drop_at {
+                            return; // mid-epoch abrupt disconnect
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    // Conservation: the reactor reaps the dead sockets, the daemon
+    // synthesizes releases, and the node converges to exactly the
+    // probe's registration with zero device/spill bytes live — every
+    // dropped client's segment came back, Σ device mem + spill store
+    // equals the (now empty) set of live segments.
+    let mut probe = VgpuClient::connect_unix_as(&socket, "probe", "")
+        .expect("probe connect");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = probe.stats().unwrap();
+        let dev = probe.devices().unwrap();
+        let leaked_mem: u64 = dev.devices.iter().map(|d| d.mem_used).sum();
+        let placed: u32 = dev.devices.iter().map(|d| d.clients).sum();
+        if stats.clients == 1
+            && placed <= 1
+            && leaked_mem == 0
+            && stats.spilled_bytes == 0
+        {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "accounting never converged: {} clients, {placed} placed, \
+             {leaked_mem} B device, {} B spilled",
+            stats.clients,
+            stats.spilled_bytes
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    probe.rls().unwrap();
+
+    // Zero leaked tenant connection slots: the churn tenant's cap is
+    // exactly the fleet size, so a full fresh fleet connects only if
+    // every abandoned slot was released.
+    let mut fresh: Vec<VgpuClient> = (0..FLEET)
+        .map(|i| {
+            VgpuClient::connect_unix_as(
+                &socket,
+                &format!("fresh-{i}"),
+                "churn",
+            )
+            .unwrap_or_else(|e| {
+                panic!("conn slot leaked: fresh-{i} rejected: {e}")
+            })
+        })
+        .collect();
+    for c in &mut fresh {
+        c.rls().unwrap();
+    }
+}
+
+#[test]
+fn overlimit_rejects_decode_cleanly_under_accept_backlog() {
+    let (tx, registry, _) = spawn_daemon();
+    let socket = sock_path("reject");
+    let _srv = MuxServer::spawn(
+        &socket,
+        tx,
+        MuxOptions {
+            max_connections: 4,
+            backpressure: 1 << 20,
+            qos: QosConfig::default(),
+            registry: Some(registry.clone()),
+        },
+    )
+    .unwrap();
+    wait_for(&socket);
+
+    // Fill the admission table.
+    let mut held: Vec<VgpuClient> = (0..4)
+        .map(|i| {
+            VgpuClient::connect_unix_as(&socket, &format!("h{i}"), "")
+                .unwrap()
+        })
+        .collect();
+
+    // Pile up a backlog of over-limit connections before reading a
+    // single byte back, then drain: every one of them must carry one
+    // complete, decodable typed Err frame (the pre-fix single
+    // best-effort write could truncate under pressure).
+    let streams: Vec<UnixStream> = (0..12)
+        .map(|_| UnixStream::connect(&socket).unwrap())
+        .collect();
+    for s in streams {
+        let mut f = Framed::new(s);
+        let frame = f
+            .recv()
+            .expect("reject frame must arrive intact")
+            .expect("reject frame must not be EOF-truncated");
+        match ServerMsg::decode(&frame).expect("reject frame must decode") {
+            ServerMsg::Err { msg } => assert!(
+                msg.contains("connection limit"),
+                "unexpected reject: {msg}"
+            ),
+            other => panic!("expected typed Err, got {other:?}"),
+        }
+    }
+    let rejected = registry
+        .counter_with(
+            "vgpu_ipc_admission_rejects_total",
+            "Connections/commands rejected by the admission middleware",
+            &[("reason", "max_connections")],
+        )
+        .get();
+    assert_eq!(rejected, 12);
+
+    for c in &mut held {
+        c.rls().unwrap();
+    }
+}

@@ -18,7 +18,7 @@ done
 # The source is flattened first so a call whose arguments are wrapped
 # across lines (rustfmt) still matches.
 keys=$(tr '\n' ' ' < rust/src/config/file.rs \
-    | grep -oE '\("(device|devices|qos|ipc|migration|pipeline|spill|staging|metrics|faults|health|node|gvm)", *"[a-z_0-9]+"\)' \
+    | grep -oE '\("(device|devices|qos|ipc|migration|pipeline|spill|staging|metrics|faults|health|node|gvm|loadgen)", *"[a-z_0-9]+"\)' \
     | sed -E 's/\("([a-z]+)", *"([a-z_0-9]+)"\)/\1.\2/' \
     | sort -u)
 
